@@ -1,0 +1,108 @@
+//! Figure 3 reproduction: steady-state execution time of the five
+//! trace-transform implementations across image sizes.
+//!
+//! Paper shapes this bench must reproduce (§7.3):
+//!  * CPU implementations scale ~linearly in pixel count; GPU
+//!    implementations scale *superlinearly at small sizes* because of the
+//!    constant configure+launch overhead;
+//!  * the dynamic-host CPU implementation trails the native CPU one by a
+//!    factor that grows with size (boxing + bounds checks);
+//!  * dynamic-host + manual GPU trails native + manual GPU by a margin
+//!    that shrinks as the image grows (13% small → 2% large in the paper);
+//!  * the fully automated implementation matches manual driver calls
+//!    (±few %): automation adds no steady-state overhead.
+//!
+//! Run: `cargo bench --bench fig3_tracetransform` (env: FIG3_SIZES,
+//! FIG3_ITERS, FIG3_ANGLES, FIG3_DEVICE=pjrt|emu).
+
+use hlgpu::bench_support::{fmt_time, measure, Settings, Table};
+use hlgpu::tracetransform::{
+    orientations, shepp_logan, CpuDynamic, CpuNative, DeviceChoice, GpuAuto, GpuDynamic,
+    GpuManual, TraceImpl,
+};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_sizes() -> Vec<usize> {
+    std::env::var("FIG3_SIZES")
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|_| vec![16, 32, 64, 128, 256])
+}
+
+fn main() {
+    let sizes = env_sizes();
+    let angles = env_usize("FIG3_ANGLES", 90);
+    let settings = Settings {
+        warmup_iters: env_usize("FIG3_WARMUP", 2),
+        sample_iters: env_usize("FIG3_ITERS", 7),
+    };
+    let device = match std::env::var("FIG3_DEVICE").as_deref() {
+        Ok("emu") | Ok("emulator") => DeviceChoice::Emulator,
+        _ => DeviceChoice::Pjrt,
+    };
+
+    println!("fig3: device={device:?} angles={angles} sizes={sizes:?} iters={}", settings.sample_iters);
+    let names = ["cpu-native", "cpu-dynamic", "gpu-manual", "gpu-dynamic", "gpu-auto"];
+    let mut table = Table::new(&["size", names[0], names[1], names[2], names[3], names[4]]);
+    let mut means: Vec<Vec<f64>> = Vec::new();
+    let mut max_unc: f64 = 0.0;
+
+    for &size in &sizes {
+        let img = shepp_logan(size);
+        let thetas = orientations(angles);
+        let mut row = vec![size.to_string()];
+        let mut mean_row = Vec::new();
+        for name in names {
+            let mut im: Box<dyn TraceImpl> = match name {
+                "cpu-native" => Box::new(CpuNative::new()),
+                "cpu-dynamic" => Box::new(CpuDynamic::new()),
+                "gpu-manual" => Box::new(GpuManual::on_device(device).unwrap()),
+                "gpu-dynamic" => Box::new(GpuDynamic::on_device(device).unwrap()),
+                "gpu-auto" => Box::new(GpuAuto::on_device(device).unwrap()),
+                _ => unreachable!(),
+            };
+            let summary = measure(settings, || im.features(&img, &thetas).unwrap());
+            max_unc = max_unc.max(summary.rel_uncertainty_pct());
+            mean_row.push(summary.mean);
+            row.push(fmt_time(summary.mean));
+        }
+        means.push(mean_row);
+        table.row(&row);
+    }
+
+    println!("\nFigure 3 — steady-state execution time per iteration");
+    println!("(relative uncertainty ≤ {max_unc:.2}%)");
+    println!("{}", table.render());
+
+    // shape assertions (soft: printed, not panicking, so partial artifact
+    // sets still produce the table)
+    let last = means.len() - 1;
+    let dyn_vs_native_small = means[0][1] / means[0][0];
+    let dyn_vs_native_large = means[last][1] / means[last][0];
+    println!("shape checks:");
+    println!(
+        "  cpu-dynamic / cpu-native: {dyn_vs_native_small:.2}x (small) -> {dyn_vs_native_large:.2}x (large)  [paper: gap grows with size]"
+    );
+    let gd_vs_gm_small = means[0][3] / means[0][2];
+    let gd_vs_gm_large = means[last][3] / means[last][2];
+    println!(
+        "  gpu-dynamic / gpu-manual: {gd_vs_gm_small:.2}x (small) -> {gd_vs_gm_large:.2}x (large)  [paper: 1.13x -> 1.02x]"
+    );
+    let auto_vs_manual = means[last][4] / means[last][2];
+    println!(
+        "  gpu-auto / gpu-manual (largest size): {auto_vs_manual:.3}x  [paper: ~1.015x]"
+    );
+    // GPU's constant overhead: time ratio across the size sweep is far
+    // below the pixel-count ratio at the small end (superlinear scaling)
+    if means.len() >= 2 {
+        let px_ratio = (sizes[1] * sizes[1]) as f64 / (sizes[0] * sizes[0]) as f64;
+        let gpu_ratio = means[1][4] / means[0][4];
+        let cpu_ratio = means[1][0] / means[0][0];
+        println!(
+            "  {}->{}: pixel x{px_ratio:.1}, cpu-native x{cpu_ratio:.2}, gpu-auto x{gpu_ratio:.2}  [paper: gpu sublinear at small sizes = constant overhead]",
+            sizes[0], sizes[1]
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! §6.2 ablation: the specialization (method) cache.
+//!
+//! "Each invocation ... [is] only executed once for every set of argument
+//! types. The resulting code is saved in a method cache, and reused in
+//! each subsequent invocation."
+//!
+//! Measures cold (first-call) vs warm (cached) launch cost per signature,
+//! sweeps the number of distinct signatures, and reports cache hit rates.
+//!
+//! Run: `cargo bench --bench specialization` (env: SP_ITERS).
+
+use hlgpu::bench_support::{fmt_time, measure, measure_once, Settings, Table};
+use hlgpu::coordinator::{arg, Launcher};
+use hlgpu::driver::LaunchConfig;
+use hlgpu::tensor::Tensor;
+use hlgpu::util::Prng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let settings = Settings {
+        warmup_iters: 2,
+        sample_iters: env_usize("SP_ITERS", 15),
+    };
+    // every vadd length that was AOT-lowered = one signature
+    let lengths = [12usize, 1024, 4096, 65536];
+
+    let mut launcher = Launcher::with_default_context().unwrap();
+    let mut rng = Prng::new(11);
+
+    let mut table = Table::new(&["signature", "cold (first call)", "warm (cached)", "speedup"]);
+    for &n in &lengths {
+        let a = Tensor::from_f32(&rng.f32_vec(n, 0.0, 1.0), &[n]);
+        let b = Tensor::from_f32(&rng.f32_vec(n, 0.0, 1.0), &[n]);
+        let mut c = Tensor::zeros_f32(&[n]);
+        let cfg = LaunchConfig::new(n as u32, 1u32);
+
+        let (cold, _) = measure_once(|| {
+            launcher
+                .launch("vadd", cfg, &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+                .unwrap();
+        });
+        let warm = measure(settings, || {
+            launcher
+                .launch("vadd", cfg, &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+                .unwrap();
+        });
+        table.row(&[
+            format!("f32[{n}]"),
+            fmt_time(cold),
+            fmt_time(warm.mean),
+            format!("{:.0}x", cold / warm.mean),
+        ]);
+    }
+
+    let stats = launcher.cache_stats();
+    let m = launcher.metrics();
+    println!("Specialization cache — cold vs warm per signature (§6.2 method cache)");
+    println!("{}", table.render());
+    println!(
+        "cache: {} entries, {} hits / {} misses; total specialize time {} ms over {} cold calls",
+        stats.entries,
+        stats.hits,
+        stats.misses,
+        m.specialize_ns / 1_000_000,
+        m.cold_specializations
+    );
+    assert_eq!(stats.entries, lengths.len());
+    assert_eq!(m.cold_specializations as usize, lengths.len());
+    println!("expected: cold pays module compile once per signature; warm launches are");
+    println!("orders of magnitude cheaper and allocation-free (the paper's zero-overhead claim).");
+}

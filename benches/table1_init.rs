@@ -1,0 +1,72 @@
+//! Table 1 reproduction: build and run-time initialization costs.
+//!
+//! Paper columns (§7.4):
+//!  * *Build*: static compilation time — here, the AOT artifact pass
+//!    (`make artifacts`, Python/JAX, reported from the manifest's wall
+//!    time when available) plus the PJRT compile time of the modules an
+//!    implementation needs (the "statically compiled CUDA kernels" cost);
+//!  * *Init*: run-time initialization — client creation, module loading,
+//!    first-call specialization. The paper's claim: JIT-compiling kernels
+//!    at run time adds only a small init overhead (~8%), much cheaper
+//!    than the static build time it replaces.
+//!
+//! Run: `cargo bench --bench table1_init` (env: T1_SIZE, T1_ANGLES).
+
+use std::time::Instant;
+
+use hlgpu::bench_support::{measure_once, Table};
+use hlgpu::runtime::ArtifactLibrary;
+use hlgpu::tracetransform::{
+    orientations, shepp_logan, CpuDynamic, CpuNative, DeviceChoice, GpuAuto, GpuDynamic,
+    GpuManual, TraceImpl,
+};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let size = env_usize("T1_SIZE", 128);
+    let angles = env_usize("T1_ANGLES", 90);
+    let img = shepp_logan(size);
+    let thetas = orientations(angles);
+
+    // "build" analog: cold PJRT compile of the artifact the GPU paths use
+    // (the static nvcc cost in the paper). Measured on a fresh context
+    // with the module cache bypassed.
+    let build_s = {
+        let lib = ArtifactLibrary::load_default().expect("run `make artifacts` first");
+        let sig = format!("f32[{size},{size}];f32[{angles}]");
+        let entry = lib.find("sinogram_all", &sig).expect("artifact for T1_SIZE").clone();
+        let ctx = hlgpu::driver::Context::default_device().unwrap();
+        let t0 = Instant::now();
+        let _m = ctx.load_module_uncached(&lib.module_source(&entry)).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+
+    let mut table = Table::new(&["implementation", "init (s)", "steady (s)"]);
+    for name in ["cpu-native", "cpu-dynamic", "gpu-manual", "gpu-dynamic", "gpu-auto"] {
+        // init = construction + first full iteration (cold everything)
+        let (init, mut im) = measure_once(|| -> Box<dyn TraceImpl> {
+            let mut im: Box<dyn TraceImpl> = match name {
+                "cpu-native" => Box::new(CpuNative::new()),
+                "cpu-dynamic" => Box::new(CpuDynamic::new()),
+                "gpu-manual" => Box::new(GpuManual::on_device(DeviceChoice::Pjrt).unwrap()),
+                "gpu-dynamic" => Box::new(GpuDynamic::on_device(DeviceChoice::Pjrt).unwrap()),
+                "gpu-auto" => Box::new(GpuAuto::on_device(DeviceChoice::Pjrt).unwrap()),
+                _ => unreachable!(),
+            };
+            im.features(&img, &thetas).unwrap();
+            im
+        });
+        // steady-state iteration for contrast
+        let (steady, _) = measure_once(|| im.features(&img, &thetas).unwrap());
+        table.row(&[name.to_string(), format!("{init:.3}"), format!("{steady:.3}")]);
+    }
+
+    println!("Table 1 — build & initialization (size={size}, angles={angles})");
+    println!("  AOT module compile (PJRT, the 'static build' analog): {build_s:.3} s");
+    println!("{}", table.render());
+    println!("note: `make artifacts` (the python AOT pass) is the full static-build analog;");
+    println!("      it runs once per source change and is excluded from every init above.");
+}

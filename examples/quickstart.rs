@@ -1,0 +1,64 @@
+//! Quickstart: the paper's Listing 3, line for line.
+//!
+//! ```julia
+//! @target ptx function vadd(a, b, c) ... end     # L1 Pallas kernel (AOT)
+//! dims = (3, 4)
+//! a = round(rand(Float32, dims) * 100)
+//! b = round(rand(Float32, dims) * 100)
+//! c = Array(Float32, dims)
+//! len = prod(dims)
+//! @cuda (len, 1) vadd(CuIn(a), CuIn(b), CuOut(c))
+//! @assert a+b == c
+//! ```
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use hlgpu::coordinator::{arg, Launcher};
+use hlgpu::cuda;
+use hlgpu::tensor::Tensor;
+use hlgpu::util::Prng;
+
+fn main() -> hlgpu::Result<()> {
+    // the kernel itself lives in python/compile/kernels/vadd.py (Pallas),
+    // AOT-lowered by `make artifacts`; the framework finds it by call
+    // signature, compiles it on first use, and caches the specialization.
+    let mut launcher = Launcher::with_default_context()?;
+
+    // create some data — dims = (3, 4), like the paper
+    let dims = [3usize, 4usize];
+    let len = dims[0] * dims[1];
+    let mut rng = Prng::new(7);
+    let a = Tensor::from_f32(
+        &rng.f32_vec(len, 0.0, 100.0).iter().map(|v| v.round()).collect::<Vec<_>>(),
+        &[len],
+    );
+    let b = Tensor::from_f32(
+        &rng.f32_vec(len, 0.0, 100.0).iter().map(|v| v.round()).collect::<Vec<_>>(),
+        &[len],
+    );
+    let mut c = Tensor::zeros_f32(&[len]);
+
+    // execute!  @cuda (len, 1) vadd(CuIn(a), CuIn(b), CuOut(c))
+    cuda!(launcher, (len, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))?;
+
+    // verify  @assert a+b == c
+    for i in 0..len {
+        assert_eq!(c.as_f32()[i], a.as_f32()[i] + b.as_f32()[i]);
+    }
+
+    // call again: the specialization cache makes this launch warm
+    cuda!(launcher, (len, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))?;
+    let stats = launcher.cache_stats();
+    assert_eq!(stats.misses, 1, "first call specializes");
+    assert_eq!(stats.hits, 1, "second call hits the method cache");
+
+    println!("quickstart OK: c[0..4] = {:?}", &c.as_f32()[..4]);
+    println!(
+        "specializations: {} cold ({} ms), cache: {} hit / {} miss",
+        launcher.metrics().cold_specializations,
+        launcher.metrics().specialize_ns / 1_000_000,
+        stats.hits,
+        stats.misses,
+    );
+    Ok(())
+}

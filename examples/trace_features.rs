@@ -1,0 +1,85 @@
+//! End-to-end driver: trace-transform feature extraction over a corpus of
+//! synthetic phantom images, through the full framework path (automation +
+//! specialization cache + transfer planning + PJRT execution of the
+//! JAX/Pallas AOT artifacts), cross-checked against the native CPU
+//! implementation and reported with throughput numbers.
+//!
+//! This is the repository's E2E validation workload (see EXPERIMENTS.md).
+//!
+//! Run with: `cargo run --release --example trace_features -- [size] [n_images]`
+
+use std::time::Instant;
+
+use hlgpu::stats::lognormal_fit;
+use hlgpu::tracetransform::{
+    orientations, random_phantom, CpuNative, DeviceChoice, GpuAuto, TraceImpl, FEATURE_COUNT,
+};
+
+fn main() -> hlgpu::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(128);
+    let n_images: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let angles = 90;
+
+    println!("corpus: {n_images} random phantoms, {size}x{size}, {angles} orientations");
+    let corpus: Vec<_> = (0..n_images as u64).map(|i| random_phantom(size, i)).collect();
+    let thetas = orientations(angles);
+
+    // full framework path
+    let mut auto = GpuAuto::on_device(DeviceChoice::Pjrt)?;
+    // native reference for cross-checking
+    let mut reference = CpuNative::new();
+
+    // warmup (specialization happens here, once for the whole corpus —
+    // every image has the same signature)
+    let _ = auto.features(&corpus[0], &thetas)?;
+
+    let mut per_image = Vec::with_capacity(n_images);
+    let mut feature_matrix = Vec::with_capacity(n_images);
+    let t_total = Instant::now();
+    for img in &corpus {
+        let t0 = Instant::now();
+        let feats = auto.features(img, &thetas)?;
+        per_image.push(t0.elapsed().as_secs_f64());
+        assert_eq!(feats.len(), FEATURE_COUNT);
+        feature_matrix.push(feats);
+    }
+    let total = t_total.elapsed().as_secs_f64();
+
+    // cross-check a sample of the corpus against the native implementation
+    let mut max_dev = 0.0f32;
+    for (i, img) in corpus.iter().enumerate().step_by(n_images.div_ceil(5).max(1)) {
+        let want = reference.features(img, &thetas)?;
+        for (a, b) in feature_matrix[i].iter().zip(&want) {
+            max_dev = max_dev.max((a - b).abs() / b.abs().max(1.0));
+        }
+    }
+    assert!(max_dev < 5e-3, "framework deviates from native: {max_dev}");
+
+    let summary = lognormal_fit(&per_image);
+    println!(
+        "per-image latency: {:.3} ms (log-normal mean, ±{:.2}%)",
+        summary.mean * 1e3,
+        summary.rel_uncertainty_pct()
+    );
+    println!(
+        "throughput: {:.1} images/s  ({} images in {:.2} s)",
+        n_images as f64 / total,
+        n_images,
+        total
+    );
+    println!(
+        "feature matrix: {n_images} x {FEATURE_COUNT}; max deviation vs cpu-native: {max_dev:.2e}"
+    );
+    let m = auto.launcher().metrics();
+    println!(
+        "launcher: {} launches, {} cold specializations ({} ms specialize time)",
+        m.launches,
+        m.cold_specializations,
+        m.specialize_ns / 1_000_000
+    );
+    // the whole corpus reused ONE specialization — the paper's central claim
+    assert_eq!(m.cold_specializations, 1);
+    println!("trace_features OK");
+    Ok(())
+}

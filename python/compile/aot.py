@@ -1,0 +1,195 @@
+"""AOT entry point: lower every L2 graph to HLO *text* + a manifest.
+
+This is the analog of the paper's Julia->PTX code generator, run once at
+build time (`make artifacts`). The rust coordinator plays the part of the
+CUDA driver: it loads the HLO text modules, compiles them on the PJRT CPU
+client and launches them — Python is never on the request path.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 rust crate links against) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import P_FUNCTIONALS
+from .kernels.tfunctionals import T_FUNCTIONALS
+
+MANIFEST_VERSION = 1
+
+#: Image sizes lowered by default; ``--full`` appends the paper-scale 512.
+#: The small sizes exist to expose the constant launch overhead that makes
+#: GPU implementations scale superlinearly at small inputs (Figure 3).
+DEFAULT_SIZES = (16, 32, 64, 128, 256)
+#: Orientation count for sinogram/full artifacts.
+DEFAULT_ANGLES = 90
+#: vadd vector lengths: the paper's 3x4 demo (12) plus tiled sizes.
+VADD_SIZES = (12, 1024, 4096, 65536)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side can uniformly unwrap with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(shape):
+    return {"dtype": "f32", "shape": list(shape)}
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, kernel, fn, in_specs, outputs, meta):
+        path = f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.entries.append(
+            {
+                "name": name,
+                "kernel": kernel,
+                "path": path,
+                "inputs": [_io(s.shape) for s in in_specs],
+                "outputs": [_io(s) for s in outputs],
+                "meta": meta,
+            }
+        )
+        print(f"  {name}: {len(text) / 1024:.1f} KiB")
+
+    def write_manifest(self):
+        manifest = {
+            "version": MANIFEST_VERSION,
+            "generated_by": "compile.aot",
+            "artifacts": self.entries,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.entries)} artifacts -> {self.out_dir}/manifest.json")
+
+
+def build_all(out_dir: str, full: bool) -> None:
+    sizes = DEFAULT_SIZES + ((512,) if full else ())
+    a = DEFAULT_ANGLES
+    em = Emitter(out_dir)
+
+    # --- running example -------------------------------------------------
+    for n in VADD_SIZES:
+        em.emit(
+            f"vadd_f32_{n}",
+            "vadd",
+            model.vadd_graph,
+            [_spec((n,)), _spec((n,))],
+            [(n,)],
+            {"n": n},
+        )
+
+    # --- staged kernels (the paper's separate CUDA kernels) --------------
+    for s in sizes:
+        em.emit(
+            f"rotate_f32_{s}",
+            "rotate",
+            model.rotate_graph,
+            [_spec((s, s)), _spec((), jnp.float32)],
+            [(s, s)],
+            {"size": s},
+        )
+    # NOTE: logical kernel names are per-functional (`sinogram_radon`, not
+    # `sinogram`): all T-variants share the same input signature, and the
+    # specialization lookup is (kernel, signature) -> artifact.
+    for t in T_FUNCTIONALS:
+        for s in (64, 128):
+            em.emit(
+                f"tfunc_{t}_f32_{s}",
+                f"tfunc_{t}",
+                functools.partial(model.tfunc_graph, name=t),
+                [_spec((s, s))],
+                [(s,)],
+                {"tfunc": t, "size": s},
+            )
+    for p in P_FUNCTIONALS:
+        em.emit(
+            f"pfunc_{p}_f32_{a}x64",
+            f"pfunc_{p}",
+            functools.partial(model.pfunc_graph, name=p),
+            [_spec((a, 64))],
+            [(a,)],
+            {"pfunc": p, "angles": a, "size": 64},
+        )
+
+    # --- the hot fused kernel (one per T-functional and size) ------------
+    for t in T_FUNCTIONALS:
+        for s in sizes:
+            em.emit(
+                f"sinogram_{t}_f32_{s}x{a}",
+                f"sinogram_{t}",
+                functools.partial(model.sinogram_graph, name=t),
+                [_spec((s, s)), _spec((a,))],
+                [(a, s)],
+                {"tfunc": t, "size": s, "angles": a},
+            )
+
+    # --- the optimized multi-functional hot kernel (one resampling pass
+    #     feeds all |T| functionals; the GPU implementations' default) ----
+    nt = len(T_FUNCTIONALS)
+    for s in sizes:
+        em.emit(
+            f"sinogram_all_f32_{s}x{a}",
+            "sinogram_all",
+            model.sinogram_all_graph,
+            [_spec((s, s)), _spec((a,))],
+            [(nt, a, s)],
+            {"size": s, "angles": a, "tfuncs": nt},
+        )
+
+    # --- fused full pipeline (L2 composition, single launch) -------------
+    n_feats = len(model.FEATURE_ORDER)
+    for s in sizes:
+        em.emit(
+            f"trace_full_f32_{s}x{a}",
+            "trace_full",
+            model.trace_full_graph,
+            [_spec((s, s)), _spec((a,))],
+            [(n_feats,)],
+            {"size": s, "angles": a, "features": n_feats},
+        )
+
+    em.write_manifest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also lower 512x512")
+    args = ap.parse_args()
+    build_all(args.out_dir, args.full)
+
+
+if __name__ == "__main__":
+    main()

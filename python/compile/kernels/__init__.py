@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+Every kernel is lowered with ``interpret=True`` (CPU-PJRT compatible) and
+has a pure-jnp oracle in :mod:`ref`.
+"""
+
+from .rotate import rotate
+from .sinogram import sinogram, sinogram_all
+from .tfunctionals import T_FUNCTIONALS, tfunctional
+from .vadd import vadd
+
+__all__ = ["vadd", "rotate", "tfunctional", "sinogram", "sinogram_all", "T_FUNCTIONALS"]

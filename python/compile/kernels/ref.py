@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for every Pallas kernel in this package.
+
+No Pallas here — plain jax.numpy, used by pytest/hypothesis to validate the
+kernels and by the rust test-suite (via AOT'd reference artifacts) to
+cross-check the native implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .tfunctionals import T_FUNCTIONALS, apply_t
+
+P_FUNCTIONALS = ("psum", "pmax", "pl1")
+F_FUNCTIONALS = ("fmean", "fmax")
+
+
+def vadd(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def rotate(img: jax.Array, theta: jax.Array) -> jax.Array:
+    """Bilinear rotation, zero fill — same convention as kernels.rotate."""
+    s = img.shape[0]
+    c = (s - 1) / 2.0
+    theta = jnp.asarray(theta, jnp.float32).reshape(())
+    rows = jnp.arange(s, dtype=jnp.float32)
+    dy = rows[:, None] - c
+    dx = rows[None, :] - c
+    ct = jnp.cos(theta)
+    st = jnp.sin(theta)
+    sx = ct * dx + st * dy + c
+    sy = -st * dx + ct * dy + c
+    y0 = jnp.floor(sy)
+    x0 = jnp.floor(sx)
+    fy = sy - y0
+    fx = sx - x0
+    y0i = y0.astype(jnp.int32)
+    x0i = x0.astype(jnp.int32)
+
+    def gather(yi, xi):
+        yc = jnp.clip(yi, 0, s - 1)
+        xc = jnp.clip(xi, 0, s - 1)
+        v = img[yc, xc]
+        ok = (yi >= 0) & (yi < s) & (xi >= 0) & (xi < s)
+        return jnp.where(ok, v, 0.0)
+
+    out = (
+        gather(y0i, x0i) * (1.0 - fy) * (1.0 - fx)
+        + gather(y0i, x0i + 1) * (1.0 - fy) * fx
+        + gather(y0i + 1, x0i) * fy * (1.0 - fx)
+        + gather(y0i + 1, x0i + 1) * fy * fx
+    )
+    return out.astype(img.dtype)
+
+
+def tfunctional(img: jax.Array, name: str) -> jax.Array:
+    return apply_t(img, name, axis=0)
+
+
+def sinogram(img: jax.Array, thetas: jax.Array, name: str) -> jax.Array:
+    def row(theta):
+        return tfunctional(rotate(img, theta), name)
+
+    return jax.vmap(row)(thetas)
+
+
+def sinogram_all(img: jax.Array, thetas: jax.Array) -> jax.Array:
+    """Stack of all T-functional sinograms, shape (|T|, A, S)."""
+    return jnp.stack([sinogram(img, thetas, t) for t in T_FUNCTIONALS])
+
+
+def apply_p(sino: jax.Array, name: str) -> jax.Array:
+    """Diametric (P-) functional: reduce each sinogram row (over offsets)
+    to a scalar -> circus function of the orientation, shape (A,)."""
+    if name == "psum":
+        return jnp.sum(sino, axis=1)
+    if name == "pmax":
+        return jnp.max(sino, axis=1)
+    if name == "pl1":
+        return jnp.sum(jnp.abs(sino), axis=1)
+    raise ValueError(f"unknown P-functional: {name}")
+
+
+def apply_f(circus: jax.Array, name: str) -> jax.Array:
+    """Circus (F-) functional: reduce the circus function to one scalar."""
+    if name == "fmean":
+        return jnp.mean(circus)
+    if name == "fmax":
+        return jnp.max(circus)
+    raise ValueError(f"unknown F-functional: {name}")
+
+
+def trace_features(img: jax.Array, thetas: jax.Array) -> jax.Array:
+    """Full trace-transform feature vector: |T| x |P| x |F| scalars, in
+    (t, p, f) lexicographic order over the tuples above."""
+    feats = []
+    for t in T_FUNCTIONALS:
+        sino = sinogram(img, thetas, t)
+        for p in P_FUNCTIONALS:
+            circus = apply_p(sino, p)
+            for f in F_FUNCTIONALS:
+                feats.append(apply_f(circus, f))
+    return jnp.stack(feats)

@@ -1,0 +1,86 @@
+"""L2: the trace-transform compute graph in JAX, calling the L1 kernels.
+
+The paper's application (§7.1) splits the trace transform into five or more
+kernels: per-orientation rotation+projection (the hot, shared-memory one),
+the simpler per-stage functionals, and host glue. We expose the same
+decomposition as individually-lowerable stage functions (the *manual* launch
+path launches each stage separately, like the paper's CUDA C kernels) plus
+one fused full-pipeline graph (the L2 composition the automation path can
+launch as a single module).
+
+Everything here is build-time Python: ``aot.py`` lowers these functions to
+HLO text once; the rust coordinator executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .kernels.ref import F_FUNCTIONALS, P_FUNCTIONALS
+from .kernels.tfunctionals import T_FUNCTIONALS
+
+__all__ = [
+    "vadd_graph",
+    "rotate_graph",
+    "tfunc_graph",
+    "sinogram_graph",
+    "pfunc_graph",
+    "trace_full_graph",
+    "FEATURE_ORDER",
+]
+
+#: (t, p, f) tuples in the exact order trace_full_graph emits features.
+FEATURE_ORDER = [
+    (t, p, f) for t in T_FUNCTIONALS for p in P_FUNCTIONALS for f in F_FUNCTIONALS
+]
+
+
+def vadd_graph(a, b):
+    """Stage: the paper's running example."""
+    return (kernels.vadd(a, b),)
+
+
+def rotate_graph(img, theta):
+    """Stage: bilinear rotation (Pallas kernel)."""
+    return (kernels.rotate(img, theta),)
+
+
+def tfunc_graph(img, name: str):
+    """Stage: one T-functional over a (rotated) image's columns."""
+    return (kernels.tfunctional(img, name),)
+
+
+def sinogram_graph(img, thetas, name: str):
+    """Stage: fused rotate+T-functional sinogram (the hot kernel)."""
+    return (kernels.sinogram(img, thetas, name),)
+
+
+def sinogram_all_graph(img, thetas):
+    """Stage: multi-functional sinogram — one resampling pass feeds all
+    |T| functionals (the optimized GPU-path kernel, see §Perf)."""
+    return (kernels.sinogram_all(img, thetas),)
+
+
+def pfunc_graph(sino, name: str):
+    """Stage: P-functional, sinogram rows -> circus function (A,)."""
+    return (ref.apply_p(sino, name),)
+
+
+def trace_full_graph(img, thetas):
+    """Fused full pipeline: image -> |T|x|P|x|F| feature vector.
+
+    The sinogram for each T-functional is computed once (Pallas kernel) and
+    shared by every (P, F) combination — no recomputation of the rotation
+    grid across functionals (see DESIGN.md §Perf, L2 target).
+    """
+    feats = []
+    for t in T_FUNCTIONALS:
+        sino = kernels.sinogram(img, thetas, t)
+        for p in P_FUNCTIONALS:
+            circus = ref.apply_p(sino, p)
+            for f in F_FUNCTIONALS:
+                feats.append(ref.apply_f(circus, f))
+    return (jnp.stack(feats),)

@@ -1,0 +1,88 @@
+"""AOT pipeline tests: lowering produces parseable HLO text and a
+well-formed manifest (the contract the rust runtime consumes)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.aot import Emitter, to_hlo_text, VADD_SIZES
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestToHloText:
+    def test_vadd_lowering_contains_entry_and_shapes(self):
+        lowered = jax.jit(model.vadd_graph).lower(
+            jax.ShapeDtypeStruct((32,), jnp.float32),
+            jax.ShapeDtypeStruct((32,), jnp.float32),
+        )
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "f32[32]" in text
+        # return_tuple=True: output is a tuple type
+        assert "(f32[32]" in text
+
+    def test_rotate_lowering_has_scalar_param(self):
+        lowered = jax.jit(model.rotate_graph).lower(
+            jax.ShapeDtypeStruct((8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        text = to_hlo_text(lowered)
+        assert "f32[8,8]" in text
+
+
+class TestEmitter:
+    def test_emit_writes_artifact_and_manifest(self, tmp_path):
+        em = Emitter(str(tmp_path))
+        em.emit(
+            "vadd_f32_8",
+            "vadd",
+            model.vadd_graph,
+            [jax.ShapeDtypeStruct((8,), jnp.float32)] * 2,
+            [(8,)],
+            {"n": 8},
+        )
+        em.write_manifest()
+        assert (tmp_path / "vadd_f32_8.hlo.txt").exists()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["version"] == 1
+        (entry,) = manifest["artifacts"]
+        assert entry["kernel"] == "vadd"
+        assert entry["inputs"] == [{"dtype": "f32", "shape": [8]}] * 2
+        assert entry["outputs"] == [{"dtype": "f32", "shape": [8]}]
+        assert entry["meta"] == {"n": 8}
+
+    def test_paper_demo_size_in_default_set(self):
+        # Listing 3 uses dims (3, 4) -> 12 elements
+        assert 12 in VADD_SIZES
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+class TestBuiltManifest:
+    def test_manifest_is_complete_and_consistent(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        manifest = json.loads(open(path).read())
+        arts = manifest["artifacts"]
+        names = [a["name"] for a in arts]
+        assert len(names) == len(set(names)), "artifact names must be unique"
+        # every referenced file exists
+        base = os.path.dirname(path)
+        for a in arts:
+            assert os.path.exists(os.path.join(base, a["path"])), a["path"]
+        # the kernels the rust implementations rely on are present
+        kernels = {a["kernel"] for a in arts}
+        for required in ["vadd", "sinogram_all", "trace_full", "rotate"]:
+            assert required in kernels, f"missing kernel family {required}"
+        # (kernel, input signature) is unique — the specialization key
+        sigs = [
+            (a["kernel"], json.dumps(a["inputs"]))
+            for a in arts
+        ]
+        assert len(sigs) == len(set(sigs)), "ambiguous specialization keys"

@@ -1,0 +1,185 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes; every comparison is assert_allclose
+against compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.tfunctionals import T_FUNCTIONALS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.uniform(k, shape, dtype, minval=-2.0, maxval=2.0)
+
+
+# ---------------------------------------------------------------- vadd --
+class TestVadd:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=5000),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_any_length(self, n, seed):
+        a, b = rand((n,), seed), rand((n,), seed + 1)
+        np.testing.assert_allclose(kernels.vadd(a, b), ref.vadd(a, b), rtol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.int32])
+    def test_dtypes(self, dtype):
+        a = jnp.arange(2048, dtype=dtype)
+        b = jnp.arange(2048, dtype=dtype)[::-1].copy()
+        np.testing.assert_allclose(kernels.vadd(a, b), ref.vadd(a, b))
+
+    def test_tiled_path_used_for_multiples_of_block(self):
+        n = 4096  # exercises the BLOCK-tiled grid
+        a, b = rand((n,)), rand((n,), 1)
+        np.testing.assert_allclose(kernels.vadd(a, b), a + b, rtol=1e-6)
+
+    def test_paper_demo_shape(self):
+        # Listing 3: dims = (3, 4) flattened -> 12 elements.
+        a, b = rand((12,)), rand((12,), 1)
+        np.testing.assert_allclose(kernels.vadd(a, b), a + b, rtol=1e-6)
+
+
+# -------------------------------------------------------------- rotate --
+class TestRotate:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        s=st.integers(min_value=4, max_value=48),
+        theta=st.floats(min_value=-7.0, max_value=7.0, allow_nan=False),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, s, theta, seed):
+        img = rand((s, s), seed)
+        got = kernels.rotate(img, theta)
+        want = ref.rotate(img, theta)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_angle_is_identity(self):
+        img = rand((32, 32))
+        np.testing.assert_allclose(kernels.rotate(img, 0.0), img, atol=1e-6)
+
+    def test_blocked_grid_path(self):
+        # 128 % ROW_BLOCK == 0 -> multi-program grid.
+        img = rand((128, 128))
+        np.testing.assert_allclose(
+            kernels.rotate(img, 0.3), ref.rotate(img, 0.3), rtol=1e-5, atol=1e-5
+        )
+
+    def test_full_turn_close_to_identity(self):
+        img = rand((24, 24))
+        got = kernels.rotate(img, 2.0 * np.pi)
+        np.testing.assert_allclose(got, img, atol=1e-3)
+
+    def test_rotation_preserves_mass_approximately(self):
+        # Content concentrated at the centre stays inside the frame.
+        s = 33
+        img = jnp.zeros((s, s)).at[12:21, 12:21].set(1.0)
+        got = kernels.rotate(img, 0.7)
+        assert abs(float(jnp.sum(got)) - float(jnp.sum(img))) < 1.0
+
+
+# --------------------------------------------------------------- tfunc --
+class TestTFunctionals:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        name=st.sampled_from(T_FUNCTIONALS),
+        h=st.integers(min_value=2, max_value=40),
+        w=st.integers(min_value=1, max_value=40),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, name, h, w, seed):
+        img = rand((h, w), seed)
+        np.testing.assert_allclose(
+            kernels.tfunctional(img, name),
+            ref.tfunctional(img, name),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    @pytest.mark.parametrize("name", T_FUNCTIONALS)
+    def test_blocked_grid_path(self, name):
+        img = rand((128, 128))
+        np.testing.assert_allclose(
+            kernels.tfunctional(img, name),
+            ref.tfunctional(img, name),
+            rtol=1e-5,
+            atol=1e-4,
+        )
+
+    def test_radon_is_column_sum(self):
+        img = rand((16, 16))
+        np.testing.assert_allclose(
+            kernels.tfunctional(img, "radon"), jnp.sum(img, axis=0), rtol=1e-5
+        )
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError):
+            kernels.tfunctional(rand((4, 4)), "nope")
+
+
+# ------------------------------------------------------------ sinogram --
+class TestSinogram:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        name=st.sampled_from(T_FUNCTIONALS),
+        s=st.integers(min_value=4, max_value=32),
+        a=st.integers(min_value=1, max_value=12),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, name, s, a, seed):
+        img = rand((s, s), seed)
+        thetas = jnp.linspace(0.0, np.pi, a, endpoint=False)
+        got = kernels.sinogram(img, thetas, name)
+        want = ref.sinogram(img, thetas, name)
+        assert got.shape == (a, s)
+        # f32 accumulation noise: t2 weights grow as (s/2)^2, so scale atol.
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * s)
+
+    def test_row_zero_is_unrotated_tfunc(self):
+        img = rand((24, 24))
+        got = kernels.sinogram(img, jnp.zeros((1,)), "radon")
+        np.testing.assert_allclose(got[0], jnp.sum(img, axis=0), rtol=1e-4, atol=1e-4)
+
+    def test_fused_equals_staged(self):
+        # sinogram == tfunc(rotate(img, theta)) row by row.
+        img = rand((16, 16))
+        thetas = jnp.array([0.1, 1.2, 2.9], jnp.float32)
+        fused = kernels.sinogram(img, thetas, "t1")
+        for i, th in enumerate(thetas):
+            staged = kernels.tfunctional(kernels.rotate(img, th), "t1")
+            np.testing.assert_allclose(fused[i], staged, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------- sinogram_all --
+class TestSinogramAll:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        s=st.integers(min_value=4, max_value=24),
+        a=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_stack(self, s, a, seed):
+        img = rand((s, s), seed)
+        thetas = jnp.linspace(0.0, np.pi, a, endpoint=False)
+        got = kernels.sinogram_all(img, thetas)
+        want = ref.sinogram_all(img, thetas)
+        assert got.shape == (len(T_FUNCTIONALS), a, s)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * s)
+
+    def test_planes_match_per_functional_kernels(self):
+        img = rand((20, 20), 5)
+        thetas = jnp.array([0.3, 1.7], jnp.float32)
+        fused = kernels.sinogram_all(img, thetas)
+        for ti, name in enumerate(T_FUNCTIONALS):
+            single = kernels.sinogram(img, thetas, name)
+            np.testing.assert_allclose(fused[ti], single, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,100 @@
+"""L2 graph tests: shapes, staged-vs-fused consistency, feature ordering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.ref import F_FUNCTIONALS, P_FUNCTIONALS
+from compile.kernels.tfunctionals import T_FUNCTIONALS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def thetas(a):
+    return jnp.linspace(0.0, np.pi, a, endpoint=False)
+
+
+class TestGraphShapes:
+    def test_vadd(self):
+        (out,) = model.vadd_graph(rand((100,)), rand((100,), 1))
+        assert out.shape == (100,)
+
+    def test_rotate(self):
+        (out,) = model.rotate_graph(rand((32, 32)), jnp.float32(0.4))
+        assert out.shape == (32, 32)
+
+    def test_sinogram(self):
+        (out,) = model.sinogram_graph(rand((32, 32)), thetas(7), name="radon")
+        assert out.shape == (7, 32)
+
+    def test_pfunc(self):
+        (out,) = model.pfunc_graph(rand((9, 32)), name="pmax")
+        assert out.shape == (9,)
+
+    def test_trace_full(self):
+        (out,) = model.trace_full_graph(rand((16, 16)), thetas(5))
+        assert out.shape == (len(model.FEATURE_ORDER),)
+
+
+class TestFeatureOrder:
+    def test_order_is_t_p_f_lexicographic(self):
+        assert model.FEATURE_ORDER[0] == (T_FUNCTIONALS[0], P_FUNCTIONALS[0], F_FUNCTIONALS[0])
+        assert len(model.FEATURE_ORDER) == len(T_FUNCTIONALS) * len(P_FUNCTIONALS) * len(F_FUNCTIONALS)
+        # last entry
+        assert model.FEATURE_ORDER[-1] == (T_FUNCTIONALS[-1], P_FUNCTIONALS[-1], F_FUNCTIONALS[-1])
+
+    def test_fused_matches_ref_pipeline(self):
+        img = rand((16, 16))
+        th = thetas(6)
+        (fused,) = model.trace_full_graph(img, th)
+        want = ref.trace_features(img, th)
+        np.testing.assert_allclose(fused, want, rtol=1e-4, atol=1e-4)
+
+    def test_fused_matches_staged_composition(self):
+        img = rand((16, 16), 3)
+        th = thetas(4)
+        (fused,) = model.trace_full_graph(img, th)
+        idx = 0
+        for t in T_FUNCTIONALS:
+            (sino,) = model.sinogram_graph(img, th, name=t)
+            for p in P_FUNCTIONALS:
+                (circus,) = model.pfunc_graph(sino, name=p)
+                for f in F_FUNCTIONALS:
+                    want = ref.apply_f(circus, f)
+                    np.testing.assert_allclose(fused[idx], want, rtol=1e-4, atol=1e-4)
+                    idx += 1
+
+
+class TestLowering:
+    """The graphs must lower to HLO text acceptable to xla_extension 0.5.1
+    (the version the rust `xla` crate links)."""
+
+    def test_vadd_lowers_to_hlo_text(self):
+        from compile.aot import to_hlo_text
+
+        lowered = jax.jit(model.vadd_graph).lower(
+            jax.ShapeDtypeStruct((64,), jnp.float32),
+            jax.ShapeDtypeStruct((64,), jnp.float32),
+        )
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text and "f32[64]" in text
+
+    def test_sinogram_lowers_to_hlo_text(self):
+        import functools
+
+        from compile.aot import to_hlo_text
+
+        fn = functools.partial(model.sinogram_graph, name="radon")
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            jax.ShapeDtypeStruct((5,), jnp.float32),
+        )
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text

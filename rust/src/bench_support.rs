@@ -1,0 +1,146 @@
+//! Shared benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, log-normal summaries per the paper's §7.2
+//! methodology, and table rendering helpers used by all `benches/` mains.
+
+use std::time::Instant;
+
+use crate::stats::{lognormal_fit, LogNormalSummary};
+
+/// Measurement settings.
+#[derive(Clone, Copy, Debug)]
+pub struct Settings {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings { warmup_iters: 3, sample_iters: 10 }
+    }
+}
+
+impl Settings {
+    /// Scale the iteration counts from CLI overrides.
+    pub fn from_cli(args: &crate::util::cli::Args) -> Self {
+        Settings {
+            warmup_iters: args.opt_usize("warmup", 3),
+            sample_iters: args.opt_usize("iters", 10),
+        }
+    }
+}
+
+/// Time `f` repeatedly: warmup discarded (the paper discards initial
+/// warm-up iterations), then `sample_iters` timed runs fitted log-normal.
+pub fn measure<R>(settings: Settings, mut f: impl FnMut() -> R) -> LogNormalSummary {
+    for _ in 0..settings.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(settings.sample_iters);
+    for _ in 0..settings.sample_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    lognormal_fit(&samples)
+}
+
+/// Time one single execution (init-time measurements, Table 1).
+pub fn measure_once<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Render a results table with fixed-width columns.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{:.1} µs", seconds * 1e6)
+    }
+}
+
+/// Format a summary as `mean ±unc%`.
+pub fn fmt_summary(s: &LogNormalSummary) -> String {
+    format!("{} ±{:.2}%", fmt_time(s.mean), s.rel_uncertainty_pct())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_mean() {
+        let s = measure(Settings { warmup_iters: 1, sample_iters: 5 }, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert!(s.mean > 0.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["impl", "time"]);
+        t.row(&["cpu".into(), "1.0 s".into()]);
+        t.row(&["gpu-auto".into(), "0.5 s".into()]);
+        let s = t.render();
+        assert!(s.contains("impl"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn time_formatting_units() {
+        assert!(fmt_time(2.5).ends_with(" s"));
+        assert!(fmt_time(0.0025).ends_with(" ms"));
+        assert!(fmt_time(0.0000025).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Argument wrappers: `CuIn` / `CuOut` / `CuInOut` (paper §6.3).
+//!
+//! By wrapping arguments, the developer tells the framework which
+//! transfers are actually needed; the specialization step turns this into
+//! a fixed transfer plan so the steady-state launch does no analysis work
+//! and moves no unnecessary bytes.
+
+use crate::tensor::Tensor;
+
+/// Transfer direction of one kernel argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgMode {
+    /// Uploaded before launch; never downloaded (`CuIn`).
+    In,
+    /// Allocated on device; downloaded after launch (`CuOut`).
+    Out,
+    /// Uploaded and downloaded (`CuInOut`).
+    InOut,
+    /// Direction unknown at the call site — the framework infers it at
+    /// specialization time (from the VTX kernel body's load/store
+    /// dataflow, or from the artifact's input/output split). This is the
+    /// paper's §9 future-work item, implemented.
+    Auto,
+}
+
+impl ArgMode {
+    pub fn uploads(self) -> bool {
+        matches!(self, ArgMode::In | ArgMode::InOut)
+    }
+
+    pub fn downloads(self) -> bool {
+        matches!(self, ArgMode::Out | ArgMode::InOut)
+    }
+
+    pub fn is_auto(self) -> bool {
+        matches!(self, ArgMode::Auto)
+    }
+}
+
+enum TensorRef<'a> {
+    Shared(&'a Tensor),
+    Mut(&'a mut Tensor),
+}
+
+/// One wrapped kernel argument.
+pub struct Arg<'a> {
+    mode: ArgMode,
+    tensor: TensorRef<'a>,
+}
+
+impl<'a> Arg<'a> {
+    pub fn mode(&self) -> ArgMode {
+        self.mode
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        match &self.tensor {
+            TensorRef::Shared(t) => t,
+            TensorRef::Mut(t) => t,
+        }
+    }
+
+    pub(crate) fn tensor_mut(&mut self) -> Option<&mut Tensor> {
+        match &mut self.tensor {
+            TensorRef::Shared(_) => None,
+            TensorRef::Mut(t) => Some(t),
+        }
+    }
+
+    /// Signature fragment of this argument (`f32[128,128]`).
+    pub fn signature(&self) -> String {
+        self.tensor().signature()
+    }
+}
+
+/// `CuIn(x)`: read-only input.
+pub fn cu_in(t: &Tensor) -> Arg<'_> {
+    Arg { mode: ArgMode::In, tensor: TensorRef::Shared(t) }
+}
+
+/// `CuOut(x)`: output container; contents before launch are ignored.
+pub fn cu_out(t: &mut Tensor) -> Arg<'_> {
+    Arg { mode: ArgMode::Out, tensor: TensorRef::Mut(t) }
+}
+
+/// `CuInOut(x)`: read-write.
+pub fn cu_inout(t: &mut Tensor) -> Arg<'_> {
+    Arg { mode: ArgMode::InOut, tensor: TensorRef::Mut(t) }
+}
+
+/// Unwrapped argument: direction inferred by the framework at
+/// specialization time (§9 future work, implemented). Requires `&mut`
+/// because the inference may classify it as an output.
+pub fn cu_auto(t: &mut Tensor) -> Arg<'_> {
+    Arg { mode: ArgMode::Auto, tensor: TensorRef::Mut(t) }
+}
+
+/// Call-site signature over all arguments — the specialization cache key
+/// (the analog of the Julia method-cache key: the tuple of argument
+/// types, §6.2). Includes modes: `in:f32[12];in:f32[12];out:f32[12]`.
+pub fn call_signature(args: &[Arg<'_>]) -> String {
+    let mut out = String::with_capacity(24 * args.len());
+    write_call_signature(&mut out, args);
+    out
+}
+
+/// Allocation-lean signature writer used on the warm launch path (§Perf
+/// iteration I3): one pre-sized String, no intermediate Vec/format calls.
+pub fn write_call_signature(out: &mut String, args: &[Arg<'_>]) {
+    use std::fmt::Write;
+    for (i, a) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(';');
+        }
+        out.push_str(match a.mode() {
+            ArgMode::In => "in:",
+            ArgMode::Out => "out:",
+            ArgMode::InOut => "inout:",
+            ArgMode::Auto => "auto:",
+        });
+        let t = a.tensor();
+        out.push_str(t.dtype().name());
+        out.push('[');
+        for (d, dim) in t.shape().iter().enumerate() {
+            if d > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{dim}");
+        }
+        out.push(']');
+    }
+}
+
+/// Input-only signature (what the artifact manifest keys on).
+pub fn input_signature(args: &[Arg<'_>]) -> String {
+    args.iter()
+        .filter(|a| a.mode().uploads())
+        .map(|a| a.signature())
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_transfer_flags() {
+        assert!(ArgMode::In.uploads() && !ArgMode::In.downloads());
+        assert!(!ArgMode::Out.uploads() && ArgMode::Out.downloads());
+        assert!(ArgMode::InOut.uploads() && ArgMode::InOut.downloads());
+    }
+
+    #[test]
+    fn signatures() {
+        let a = Tensor::from_f32(&[1.0; 12], &[12]);
+        let b = Tensor::from_f32(&[2.0; 12], &[12]);
+        let mut c = Tensor::zeros_f32(&[12]);
+        let args = [cu_in(&a), cu_in(&b), cu_out(&mut c)];
+        assert_eq!(call_signature(&args), "in:f32[12];in:f32[12];out:f32[12]");
+        assert_eq!(input_signature(&args), "f32[12];f32[12]");
+    }
+
+    #[test]
+    fn out_args_expose_mut_tensor() {
+        let mut c = Tensor::zeros_f32(&[2]);
+        let mut arg = cu_out(&mut c);
+        assert!(arg.tensor_mut().is_some());
+        let a = Tensor::zeros_f32(&[2]);
+        let mut arg = cu_in(&a);
+        assert!(arg.tensor_mut().is_none());
+    }
+}

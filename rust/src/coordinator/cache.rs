@@ -1,0 +1,133 @@
+//! The specialization cache — the paper's **method cache** (§6.1–6.2).
+//!
+//! "Each invocation of the @cuda macro and ensuing call to gen_launch are
+//! only executed once for every set of argument types. The resulting code
+//! is saved in a method cache, and reused in each subsequent invocation."
+//!
+//! Keys are `(kernel, call signature)`; values hold everything the warm
+//! path needs: the compiled function handle, the precomputed transfer
+//! plan, pre-allocated device scratch buffers and the launch
+//! configuration. Read-mostly: `RwLock` + `Arc` values so warm launches
+//! take only a shared lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Cache statistics (validated by the `specialization` bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+pub struct SpecializationCache<V> {
+    map: RwLock<HashMap<String, Arc<V>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<V> Default for SpecializationCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> SpecializationCache<V> {
+    pub fn new() -> Self {
+        SpecializationCache {
+            map: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Cache key format: `kernel⎮call_signature`.
+    pub fn key(kernel: &str, signature: &str) -> String {
+        format!("{kernel}\u{1}{signature}")
+    }
+
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        let found = self.map.read().unwrap().get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert (first writer wins under races — the paper's semantics:
+    /// recompilation of the same signature yields identical code).
+    pub fn insert(&self, key: String, value: V) -> Arc<V> {
+        let mut map = self.map.write().unwrap();
+        map.entry(key).or_insert_with(|| Arc::new(value)).clone()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.read().unwrap().len(),
+        }
+    }
+
+    pub fn clear(&self) {
+        self.map.write().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let c: SpecializationCache<u32> = SpecializationCache::new();
+        let k = SpecializationCache::<u32>::key("vadd", "in:f32[12]");
+        assert!(c.get(&k).is_none());
+        c.insert(k.clone(), 7);
+        assert_eq!(*c.get(&k).unwrap(), 7);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_signatures_distinct_entries() {
+        let c: SpecializationCache<u32> = SpecializationCache::new();
+        c.insert(SpecializationCache::<u32>::key("k", "f32[1]"), 1);
+        c.insert(SpecializationCache::<u32>::key("k", "f32[2]"), 2);
+        c.insert(SpecializationCache::<u32>::key("j", "f32[1]"), 3);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn first_writer_wins() {
+        let c: SpecializationCache<u32> = SpecializationCache::new();
+        let k = "x".to_string();
+        let a = c.insert(k.clone(), 1);
+        let b = c.insert(k, 2);
+        assert_eq!(*a, 1);
+        assert_eq!(*b, 1, "racing insert must not replace");
+    }
+
+    #[test]
+    fn clear_resets() {
+        let c: SpecializationCache<u32> = SpecializationCache::new();
+        c.insert("x".into(), 1);
+        let _ = c.get("x");
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 0);
+    }
+}

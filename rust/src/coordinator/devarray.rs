@@ -1,0 +1,147 @@
+//! `DeviceArray` — the `CuArray` analog of the *manual* API path
+//! (paper Listing 2): an RAII device buffer with typed upload/download.
+//! Used by the "+ CUDA" benchmark implementations that drive the driver
+//! API by hand, without the automation layer.
+
+use crate::driver::{Context, DevicePtr};
+use crate::error::{Error, Result};
+use crate::tensor::{Dtype, Tensor};
+
+/// A device-resident array tied to a context.
+pub struct DeviceArray {
+    ctx: Context,
+    ptr: DevicePtr,
+    dtype: Dtype,
+    shape: Vec<usize>,
+    freed: bool,
+}
+
+impl DeviceArray {
+    /// `CuArray(Float32, dims)`: allocate uninitialized.
+    pub fn alloc(ctx: &Context, dtype: Dtype, shape: &[usize]) -> Result<DeviceArray> {
+        let numel: usize = shape.iter().product();
+        let ptr = ctx.alloc(numel * dtype.size_of())?;
+        Ok(DeviceArray {
+            ctx: ctx.clone(),
+            ptr,
+            dtype,
+            shape: shape.to_vec(),
+            freed: false,
+        })
+    }
+
+    /// `CuArray(host)`: allocate + upload.
+    pub fn from_tensor(ctx: &Context, t: &Tensor) -> Result<DeviceArray> {
+        let arr = Self::alloc(ctx, t.dtype(), t.shape())?;
+        arr.upload(t)?;
+        Ok(arr)
+    }
+
+    pub fn ptr(&self) -> DevicePtr {
+        self.ptr
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.shape.iter().product::<usize>() * self.dtype.size_of()
+    }
+
+    pub fn upload(&self, t: &Tensor) -> Result<()> {
+        if t.shape() != self.shape.as_slice() || t.dtype() != self.dtype {
+            return Err(Error::Type(format!(
+                "upload shape mismatch: host {} vs device {:?}",
+                t.signature(),
+                self.shape
+            )));
+        }
+        self.ctx.upload(self.ptr, t.bytes())
+    }
+
+    /// `to_host(gpu_array)`.
+    pub fn download(&self) -> Result<Tensor> {
+        let mut t = match self.dtype {
+            Dtype::F32 => Tensor::zeros_f32(&self.shape),
+            other => {
+                return Err(Error::Type(format!(
+                    "download of {other:?} arrays not supported"
+                )))
+            }
+        };
+        self.ctx.download(self.ptr, t.bytes_mut())?;
+        Ok(t)
+    }
+
+    pub fn download_into(&self, t: &mut Tensor) -> Result<()> {
+        if t.shape() != self.shape.as_slice() || t.dtype() != self.dtype {
+            return Err(Error::Type("download shape mismatch".into()));
+        }
+        self.ctx.download(self.ptr, t.bytes_mut())
+    }
+
+    /// Explicit `free` (Listing 2 line 30). Otherwise freed on drop.
+    pub fn free(mut self) -> Result<()> {
+        self.freed = true;
+        self.ctx.free(self.ptr)
+    }
+}
+
+impl Drop for DeviceArray {
+    fn drop(&mut self) {
+        if !self.freed && self.ctx.is_alive() {
+            let _ = self.ctx.free(self.ptr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::device;
+
+    fn ctx() -> Context {
+        Context::create(&device::device(1).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let ctx = ctx();
+        let t = Tensor::from_f32(&[1.5, -2.5, 3.0], &[3]);
+        let d = DeviceArray::from_tensor(&ctx, &t).unwrap();
+        let back = d.download().unwrap();
+        assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let ctx = ctx();
+        let d = DeviceArray::alloc(&ctx, Dtype::F32, &[4]).unwrap();
+        let wrong = Tensor::zeros_f32(&[5]);
+        assert!(d.upload(&wrong).is_err());
+    }
+
+    #[test]
+    fn raii_frees_on_drop() {
+        let ctx = ctx();
+        {
+            let _d = DeviceArray::alloc(&ctx, Dtype::F32, &[64]).unwrap();
+            assert_eq!(ctx.memory().unwrap().live_buffers(), 1);
+        }
+        assert_eq!(ctx.memory().unwrap().live_buffers(), 0);
+    }
+
+    #[test]
+    fn explicit_free_prevents_double_free_on_drop() {
+        let ctx = ctx();
+        let d = DeviceArray::alloc(&ctx, Dtype::F32, &[8]).unwrap();
+        d.free().unwrap();
+        assert_eq!(ctx.memory().unwrap().live_buffers(), 0);
+        assert_eq!(ctx.mem_stats().unwrap().free_count, 1);
+    }
+}

@@ -1,0 +1,500 @@
+//! The launch automation layer — the `@cuda` macro + `gen_launch`
+//! generated function of the paper (§6), as a rust API.
+//!
+//! Cold path (first call per signature): resolve the kernel for the
+//! call's argument-type signature, load/compile the module, validate
+//! shapes, precompute the transfer plan, pre-allocate device buffers.
+//! Warm path (every subsequent call): copy `In`/`InOut` tensors into the
+//! pre-allocated buffers, launch, copy `Out`/`InOut` back. Nothing else —
+//! no lookups beyond one cache read, no allocation, no signature string
+//! rebuilt beyond the key (measured by `benches/launch_overhead.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::args::{input_signature, Arg, ArgMode};
+use crate::coordinator::cache::{CacheStats, SpecializationCache};
+use crate::coordinator::registry::{KernelRegistry, VtxSpec};
+use crate::driver::backend::TensorSpec;
+use crate::driver::{
+    BackendKind, Context, DevicePtr, KernelArg, LaunchConfig, MemoryPool,
+};
+use crate::error::{Error, Result};
+
+/// Per-argument entry in the precomputed transfer plan.
+#[derive(Clone, Copy, Debug)]
+struct PlanEntry {
+    mode: ArgMode,
+    byte_len: usize,
+    ptr: DevicePtr,
+}
+
+/// A cached specialization: everything the warm path needs.
+struct Specialized {
+    function: crate::driver::Function,
+    plan: Vec<PlanEntry>,
+    /// Launch-time argument vector template (pointers + trailing scalars).
+    kernel_args: Vec<KernelArg>,
+    /// Launch configuration override chosen at specialization time (VTX
+    /// providers pick their own grid; artifacts run whole-module).
+    config: Option<LaunchConfig>,
+    /// Pool the plan's buffers live in (freed on drop).
+    pool: Arc<MemoryPool>,
+}
+
+impl Drop for Specialized {
+    fn drop(&mut self) {
+        for e in &self.plan {
+            let _ = self.pool.free(e.ptr);
+        }
+    }
+}
+
+/// Aggregate metrics of a launcher (inspected by benches and tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaunchMetrics {
+    pub launches: u64,
+    pub cold_specializations: u64,
+    /// Total nanoseconds spent in cold specialization work.
+    pub specialize_ns: u64,
+}
+
+/// Transfer policy ablation switch (benches/transfer_policy.rs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferPolicy {
+    /// Respect `In`/`Out`/`InOut` wrappers (the paper's design).
+    Minimal,
+    /// Ignore wrappers: upload *and* download every argument (what naive
+    /// host code does without the wrappers, §6.3).
+    Naive,
+}
+
+/// The automation front-end: owns a context, a registry and the
+/// specialization cache.
+pub struct Launcher {
+    ctx: Context,
+    registry: KernelRegistry,
+    cache: SpecializationCache<Specialized>,
+    policy: TransferPolicy,
+    metrics: LaunchMetrics,
+}
+
+impl Launcher {
+    pub fn new(ctx: Context, registry: KernelRegistry) -> Self {
+        Launcher {
+            ctx,
+            registry,
+            cache: SpecializationCache::new(),
+            policy: TransferPolicy::Minimal,
+            metrics: LaunchMetrics::default(),
+        }
+    }
+
+    /// Launcher on device 0 (PJRT) with the default artifact library.
+    pub fn with_default_context() -> Result<Self> {
+        Ok(Launcher::new(
+            Context::default_device()?,
+            KernelRegistry::with_default_library()?,
+        ))
+    }
+
+    /// Launcher on the VTX emulator device with an empty registry —
+    /// register providers with [`Launcher::registry_mut`].
+    pub fn emulator() -> Result<Self> {
+        let dev = crate::driver::device(1)?;
+        Ok(Launcher::new(Context::create(&dev)?, KernelRegistry::new(None)))
+    }
+
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    pub fn registry_mut(&mut self) -> &mut KernelRegistry {
+        &mut self.registry
+    }
+
+    pub fn set_policy(&mut self, policy: TransferPolicy) {
+        self.policy = policy;
+        // Plans are policy-dependent; drop them.
+        self.cache.clear();
+    }
+
+    pub fn metrics(&self) -> LaunchMetrics {
+        self.metrics
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The `@cuda (grid, block) kernel(args...)` entry point. `cfg` is the
+    /// dimension pair from the call site; backends that fix their own
+    /// parallelism at specialization time (PJRT artifacts, VTX providers)
+    /// may override it.
+    pub fn launch(
+        &mut self,
+        kernel: &str,
+        cfg: LaunchConfig,
+        args: &mut [Arg<'_>],
+    ) -> Result<()> {
+        let effective_mode = |m: ArgMode| -> ArgMode {
+            match self.policy {
+                TransferPolicy::Minimal => m,
+                TransferPolicy::Naive => ArgMode::InOut,
+            }
+        };
+
+        // ---- phase 1+2, cached: macro expansion + generated function ----
+        // (key built with one pre-sized String — §Perf I3)
+        let mut key = String::with_capacity(kernel.len() + 1 + 24 * args.len());
+        key.push_str(kernel);
+        key.push('\u{1}');
+        crate::coordinator::args::write_call_signature(&mut key, args);
+        let spec = match self.cache.get(&key) {
+            Some(s) => s,
+            None => {
+                let t0 = Instant::now();
+                let s = self.specialize(kernel, args)?;
+                self.metrics.cold_specializations += 1;
+                self.metrics.specialize_ns += t0.elapsed().as_nanos() as u64;
+                self.cache.insert(key, s)
+            }
+        };
+
+        // ---- warm path: the code fragment ⟨c⟩ of Figure 2 ---------------
+        let mem = &spec.pool;
+        for (arg, entry) in args.iter().zip(&spec.plan) {
+            if effective_mode(entry.mode).uploads() {
+                mem.copy_h2d(entry.ptr, arg.tensor().bytes())?;
+            }
+        }
+        let launch_cfg = spec.config.unwrap_or(cfg);
+        spec.function
+            .launch(&launch_cfg, &spec.kernel_args, mem)?;
+        for (index, (arg, entry)) in args.iter_mut().zip(&spec.plan).enumerate() {
+            if effective_mode(entry.mode).downloads() {
+                match arg.tensor_mut() {
+                    Some(t) => mem.copy_d2h(entry.ptr, t.bytes_mut())?,
+                    None if self.policy == TransferPolicy::Naive => {
+                        // Naive mode downloads read-only arguments too —
+                        // into a discarded host buffer, modeling the wasted
+                        // transfer the In/Out wrappers avoid (§6.3).
+                        let mut scratch = vec![0u8; entry.byte_len];
+                        mem.copy_d2h(entry.ptr, &mut scratch)?;
+                    }
+                    None => {
+                        return Err(Error::BadArgument {
+                            kernel: kernel.to_string(),
+                            index,
+                            reason: "Out/InOut argument is not mutable".into(),
+                        })
+                    }
+                }
+            }
+        }
+        self.metrics.launches += 1;
+        Ok(())
+    }
+
+    /// Cold path: the `gen_launch` generated function (§6.2). Runs once
+    /// per (kernel, argument signature).
+    fn specialize(&self, kernel: &str, args: &[Arg<'_>]) -> Result<Specialized> {
+        enum Resolved {
+            Hlo(crate::driver::ModuleSource),
+            Vtx(VtxSpec),
+        }
+        let has_auto = args.iter().any(|a| a.mode().is_auto());
+        // Resolved transfer direction per argument; starts from the
+        // wrapper modes, overwritten for `Auto` arguments below.
+        let mut modes: Vec<ArgMode> = args.iter().map(|a| a.mode()).collect();
+        let source = match self.ctx.device().kind {
+            BackendKind::Pjrt if has_auto => {
+                // §9 automatic usage detection, artifact flavor: match the
+                // call positionally against inputs ++ outputs.
+                let sigs: Vec<String> = args.iter().map(|a| a.signature()).collect();
+                let (lib, entry, is_output) =
+                    self.registry.resolve_artifact_positional(kernel, &sigs)?;
+                for (m, out) in modes.iter_mut().zip(is_output) {
+                    if m.is_auto() {
+                        *m = if out { ArgMode::Out } else { ArgMode::In };
+                    }
+                }
+                Resolved::Hlo(lib.module_source(&entry))
+            }
+            BackendKind::Pjrt => {
+                let in_sig = input_signature(args);
+                let (lib, entry) = self.registry.resolve_artifact(kernel, &in_sig)?;
+                // Shape validation: outputs of the artifact must match the
+                // Out/InOut tensors of the call, in order.
+                let out_specs: Vec<TensorSpec> = args
+                    .iter()
+                    .filter(|a| a.mode().downloads())
+                    .map(|a| TensorSpec {
+                        dtype: a.tensor().dtype().name().to_string(),
+                        shape: a.tensor().shape().to_vec(),
+                    })
+                    .collect();
+                if out_specs.len() != entry.outputs.len() {
+                    return Err(Error::Specialize {
+                        kernel: kernel.to_string(),
+                        reason: format!(
+                            "call has {} output arguments, artifact `{}` produces {}",
+                            out_specs.len(),
+                            entry.name,
+                            entry.outputs.len()
+                        ),
+                    });
+                }
+                for (i, (got, want)) in out_specs.iter().zip(&entry.outputs).enumerate() {
+                    if got != want {
+                        return Err(Error::Specialize {
+                            kernel: kernel.to_string(),
+                            reason: format!(
+                                "output {i} is {}, artifact `{}` produces {}",
+                                got.signature(),
+                                entry.name,
+                                want.signature()
+                            ),
+                        });
+                    }
+                }
+                Resolved::Hlo(lib.module_source(&entry))
+            }
+            BackendKind::VtxEmulator => {
+                let specs: Vec<TensorSpec> = args
+                    .iter()
+                    .map(|a| TensorSpec {
+                        dtype: a.tensor().dtype().name().to_string(),
+                        shape: a.tensor().shape().to_vec(),
+                    })
+                    .collect();
+                let spec = self.registry.resolve_vtx(kernel, &specs)?;
+                if has_auto {
+                    // §9 automatic usage detection, emulator flavor: infer
+                    // from the generated kernel's load/store dataflow.
+                    use crate::emulator::isa::ParamUsage;
+                    let usage = spec.kernel.infer_param_usage();
+                    if usage.len() != modes.len() {
+                        return Err(Error::Specialize {
+                            kernel: kernel.to_string(),
+                            reason: format!(
+                                "kernel has {} pointer params, call has {} tensor args",
+                                usage.len(),
+                                modes.len()
+                            ),
+                        });
+                    }
+                    for (m, u) in modes.iter_mut().zip(usage) {
+                        if m.is_auto() {
+                            *m = match u {
+                                ParamUsage::ReadOnly => ArgMode::In,
+                                ParamUsage::WriteOnly => ArgMode::Out,
+                                ParamUsage::ReadWrite => ArgMode::InOut,
+                                // dead param: no transfers either way
+                                ParamUsage::Unused => ArgMode::In,
+                            };
+                        }
+                    }
+                }
+                Resolved::Vtx(spec)
+            }
+        };
+        if modes.iter().any(|m| m.is_auto()) {
+            return Err(Error::Specialize {
+                kernel: kernel.to_string(),
+                reason: "could not infer direction for all Auto arguments".into(),
+            });
+        }
+
+        let pool = self.ctx.memory_arc()?;
+        // Pre-allocate one device buffer per tensor argument; the plan
+        // carries the *resolved* modes (wrapper or inferred).
+        let mut plan = Vec::with_capacity(args.len());
+        for (arg, &mode) in args.iter().zip(&modes) {
+            let byte_len = arg.tensor().byte_len();
+            let ptr = pool.alloc(byte_len)?;
+            plan.push(PlanEntry { mode, byte_len, ptr });
+        }
+        // free plan buffers on any later error via Specialized::drop
+
+        match source {
+            Resolved::Hlo(src) => {
+                let module = self.ctx.load_module(&src)?;
+                let function = module.function("main")?;
+                // PJRT argument order: uploads (inputs) then downloads
+                // (outputs); InOut pointers appear in both lists.
+                let mut kernel_args = Vec::new();
+                for e in plan.iter().filter(|e| e.mode.uploads()) {
+                    kernel_args.push(KernelArg::Ptr(e.ptr));
+                }
+                for e in plan.iter().filter(|e| e.mode.downloads()) {
+                    kernel_args.push(KernelArg::Ptr(e.ptr));
+                }
+                Ok(Specialized { function, plan, kernel_args, config: None, pool })
+            }
+            Resolved::Vtx(VtxSpec { kernel: vk, scalars, config }) => {
+                let module = self
+                    .ctx
+                    .load_module_uncached(&crate::driver::ModuleSource::Vtx {
+                        kernels: vec![vk.clone()],
+                    })?;
+                let function = module.function(&vk.name)?;
+                // VTX argument order: one pointer per tensor argument (in
+                // call order), then the provider's scalars.
+                let mut kernel_args: Vec<KernelArg> =
+                    plan.iter().map(|e| KernelArg::Ptr(e.ptr)).collect();
+                kernel_args.extend(scalars);
+                Ok(Specialized {
+                    function,
+                    plan,
+                    kernel_args,
+                    config: Some(config),
+                    pool,
+                })
+            }
+        }
+    }
+}
+
+/// The `@cuda` macro analog: `cuda!(launcher, (grid, block), kernel(args...))`.
+///
+/// Mirrors the paper's Listing 3 call syntax:
+/// `@cuda (len, 1) vadd(CuIn(a), CuIn(b), CuOut(c))`.
+#[macro_export]
+macro_rules! cuda {
+    ($launcher:expr, ($grid:expr, $block:expr), $kernel:ident ( $($arg:expr),* $(,)? )) => {
+        $launcher.launch(
+            stringify!($kernel),
+            $crate::driver::LaunchConfig::new($grid as u32, $block as u32),
+            &mut [$($arg),*],
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arg;
+    use crate::emulator::kernels;
+    use crate::tensor::Tensor;
+
+    fn emulator_launcher_with_vadd() -> Launcher {
+        let mut l = Launcher::emulator().unwrap();
+        l.registry_mut().register_vtx("vadd", |specs| {
+            let n = specs[0].numel();
+            Ok(VtxSpec {
+                kernel: kernels::vadd()?,
+                scalars: vec![KernelArg::I32(n as i32)],
+                config: LaunchConfig::new(((n as u32) + 255) / 256, 256u32),
+            })
+        });
+        l
+    }
+
+    #[test]
+    fn automation_roundtrip_on_emulator() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1., 2., 3., 4.], &[4]);
+        let b = Tensor::from_f32(&[10., 20., 30., 40.], &[4]);
+        let mut c = Tensor::zeros_f32(&[4]);
+        cuda!(l, (1, 4), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        assert_eq!(c.as_f32(), &[11., 22., 33., 44.]);
+    }
+
+    #[test]
+    fn cache_hit_on_second_call_miss_on_new_signature() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 8], &[8]);
+        let b = Tensor::from_f32(&[2.0; 8], &[8]);
+        let mut c = Tensor::zeros_f32(&[8]);
+        cuda!(l, (1, 8), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        cuda!(l, (1, 8), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        let st = l.cache_stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits, 1);
+        assert_eq!(l.metrics().cold_specializations, 1);
+
+        // new length -> new specialization
+        let a2 = Tensor::from_f32(&[1.0; 16], &[16]);
+        let b2 = Tensor::from_f32(&[2.0; 16], &[16]);
+        let mut c2 = Tensor::zeros_f32(&[16]);
+        cuda!(l, (1, 16), vadd(arg::cu_in(&a2), arg::cu_in(&b2), arg::cu_out(&mut c2))).unwrap();
+        assert_eq!(l.metrics().cold_specializations, 2);
+        assert_eq!(c2.as_f32()[0], 3.0);
+    }
+
+    #[test]
+    fn minimal_policy_moves_fewer_bytes_than_naive() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 256], &[256]);
+        let b = Tensor::from_f32(&[2.0; 256], &[256]);
+        let mut c = Tensor::zeros_f32(&[256]);
+
+        cuda!(l, (1, 256), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        let minimal = l.context().mem_stats().unwrap();
+
+        l.set_policy(TransferPolicy::Naive);
+        l.context().memory().unwrap().reset_stats();
+        cuda!(l, (1, 256), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        let naive = l.context().mem_stats().unwrap();
+
+        // minimal: 2 uploads + 1 download; naive: 3 + 3
+        assert_eq!(minimal.h2d_count, 2);
+        assert_eq!(minimal.d2h_count, 1);
+        assert_eq!(naive.h2d_count, 3);
+        assert_eq!(naive.d2h_count, 3);
+        assert!(naive.h2d_bytes + naive.d2h_bytes > minimal.h2d_bytes + minimal.d2h_bytes);
+    }
+
+    #[test]
+    fn auto_arguments_inferred_from_vtx_dataflow() {
+        // §9 future work: no CuIn/CuOut wrappers at all — the framework
+        // derives the transfer plan from the kernel body.
+        let mut l = emulator_launcher_with_vadd();
+        let mut a = Tensor::from_f32(&[1.0; 64], &[64]);
+        let mut b = Tensor::from_f32(&[2.0; 64], &[64]);
+        let mut c = Tensor::zeros_f32(&[64]);
+        l.launch(
+            "vadd",
+            LaunchConfig::new(1u32, 64u32),
+            &mut [arg::cu_auto(&mut a), arg::cu_auto(&mut b), arg::cu_auto(&mut c)],
+        )
+        .unwrap();
+        assert!(c.as_f32().iter().all(|&v| v == 3.0));
+        // inference produced the minimal plan: 2 uploads, 1 download
+        let st = l.context().mem_stats().unwrap();
+        assert_eq!(st.h2d_count, 2, "a and b are read-only -> CuIn");
+        assert_eq!(st.d2h_count, 1, "c is write-only -> CuOut");
+        // inputs were not clobbered by a download
+        assert!(a.as_f32().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn infer_param_usage_detects_all_classes() {
+        use crate::emulator::isa::ParamUsage;
+        let k = kernels::vadd().unwrap();
+        assert_eq!(
+            k.infer_param_usage(),
+            vec![ParamUsage::ReadOnly, ParamUsage::ReadOnly, ParamUsage::WriteOnly]
+        );
+        let s = kernels::sinogram_all().unwrap();
+        assert_eq!(
+            s.infer_param_usage(),
+            vec![ParamUsage::ReadOnly, ParamUsage::ReadOnly, ParamUsage::WriteOnly]
+        );
+    }
+
+    #[test]
+    fn unregistered_kernel_fails_to_specialize() {
+        let mut l = Launcher::emulator().unwrap();
+        let a = Tensor::zeros_f32(&[4]);
+        let err = l
+            .launch(
+                "ghost",
+                LaunchConfig::new(1u32, 4u32),
+                &mut [arg::cu_in(&a)],
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Specialize { .. }), "{err}");
+    }
+}

@@ -1,0 +1,27 @@
+//! The coordinator: the paper's **high-level automation** layer (§6).
+//!
+//! * [`args`] — `CuIn`/`CuOut`/`CuInOut` wrappers (§6.3);
+//! * [`cache`] — the per-signature specialization cache (the Julia method
+//!   cache, §6.2);
+//! * [`registry`] — logical-kernel resolution: AOT artifacts for the PJRT
+//!   device, generated VTX kernels for the emulator device;
+//! * [`launch`] — [`Launcher`] + the [`crate::cuda!`] macro, the
+//!   `@cuda (grid, block) kernel(args...)` front-end;
+//! * [`devarray`] — `CuArray`-style manual API for the non-automated path.
+
+pub mod args;
+pub mod cache;
+pub mod devarray;
+pub mod launch;
+pub mod registry;
+
+pub use args::{call_signature, input_signature, Arg, ArgMode};
+pub use cache::{CacheStats, SpecializationCache};
+pub use devarray::DeviceArray;
+pub use launch::{LaunchMetrics, Launcher, TransferPolicy};
+pub use registry::{KernelRegistry, KernelSource, VtxSpec};
+
+/// Argument constructors, idiomatically imported as `coordinator::arg`.
+pub mod arg {
+    pub use super::args::{cu_auto, cu_in, cu_inout, cu_out};
+}

@@ -1,0 +1,166 @@
+//! Kernel registry: resolves a logical kernel name + call signature to
+//! loadable code for the active backend.
+//!
+//! PJRT devices resolve against the AOT artifact manifest (JAX played the
+//! role of the Julia→PTX code generator at build time); emulator devices
+//! resolve against registered VTX *providers* — closures that, given the
+//! concrete input shapes, author a specialized VTX kernel with the
+//! builder DSL (generation at first use, exactly the paper's
+//! generated-function flow).
+
+use std::collections::HashMap;
+
+use crate::driver::backend::TensorSpec;
+use crate::driver::launch::{KernelArg, LaunchConfig};
+use crate::emulator::isa::Kernel as VtxKernel;
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactEntry, ArtifactLibrary};
+
+/// A fully specialized VTX kernel ready to load & launch.
+pub struct VtxSpec {
+    pub kernel: VtxKernel,
+    /// Trailing scalar arguments appended after the tensor pointers.
+    pub scalars: Vec<KernelArg>,
+    /// Launch configuration chosen by the provider for these shapes.
+    pub config: LaunchConfig,
+}
+
+/// Resolved kernel code.
+pub enum KernelSource {
+    /// AOT HLO artifact (PJRT path).
+    Artifact(ArtifactEntry),
+    /// Generated VTX kernel (emulator path).
+    Vtx(VtxSpec),
+}
+
+type VtxProvider = Box<dyn Fn(&[TensorSpec]) -> Result<VtxSpec> + Send + Sync>;
+
+/// Registry of kernels available to the automation layer.
+pub struct KernelRegistry {
+    library: Option<ArtifactLibrary>,
+    vtx: HashMap<String, VtxProvider>,
+}
+
+impl KernelRegistry {
+    pub fn new(library: Option<ArtifactLibrary>) -> Self {
+        KernelRegistry { library, vtx: HashMap::new() }
+    }
+
+    /// Load the default artifact library from `artifacts/`.
+    pub fn with_default_library() -> Result<Self> {
+        Ok(Self::new(Some(ArtifactLibrary::load_default()?)))
+    }
+
+    pub fn library(&self) -> Option<&ArtifactLibrary> {
+        self.library.as_ref()
+    }
+
+    /// Register a VTX provider for `kernel` (emulator path).
+    pub fn register_vtx(
+        &mut self,
+        kernel: &str,
+        provider: impl Fn(&[TensorSpec]) -> Result<VtxSpec> + Send + Sync + 'static,
+    ) {
+        self.vtx.insert(kernel.to_string(), Box::new(provider));
+    }
+
+    pub fn has_vtx(&self, kernel: &str) -> bool {
+        self.vtx.contains_key(kernel)
+    }
+
+    /// Resolve for the PJRT path: match the manifest on the *input*
+    /// signature (uploads only, `;`-joined `dtype[dims]`).
+    pub fn resolve_artifact(
+        &self,
+        kernel: &str,
+        input_signature: &str,
+    ) -> Result<(&ArtifactLibrary, ArtifactEntry)> {
+        let lib = self.library.as_ref().ok_or_else(|| Error::Specialize {
+            kernel: kernel.to_string(),
+            reason: "no artifact library loaded (run `make artifacts`)".into(),
+        })?;
+        let entry = lib.find(kernel, input_signature)?.clone();
+        Ok((lib, entry))
+    }
+
+    /// Positional artifact resolution for calls with `Auto` arguments:
+    /// find the artifact of `kernel` whose `inputs ++ outputs` signature
+    /// sequence equals the call's argument signatures, and derive each
+    /// argument's transfer mode from which side it fell on (§9 automatic
+    /// argument-usage detection, PJRT flavor).
+    pub fn resolve_artifact_positional(
+        &self,
+        kernel: &str,
+        arg_sigs: &[String],
+    ) -> Result<(&ArtifactLibrary, ArtifactEntry, Vec<bool>)> {
+        let lib = self.library.as_ref().ok_or_else(|| Error::Specialize {
+            kernel: kernel.to_string(),
+            reason: "no artifact library loaded (run `make artifacts`)".into(),
+        })?;
+        'entry: for entry in lib.for_kernel(kernel) {
+            if entry.inputs.len() + entry.outputs.len() != arg_sigs.len() {
+                continue;
+            }
+            let mut is_output = Vec::with_capacity(arg_sigs.len());
+            for (i, sig) in arg_sigs.iter().enumerate() {
+                let (want, out) = if i < entry.inputs.len() {
+                    (&entry.inputs[i], false)
+                } else {
+                    (&entry.outputs[i - entry.inputs.len()], true)
+                };
+                if &want.signature() != sig {
+                    continue 'entry;
+                }
+                is_output.push(out);
+            }
+            return Ok((lib, entry.clone(), is_output));
+        }
+        Err(Error::NoArtifact {
+            kernel: kernel.to_string(),
+            signature: arg_sigs.join(";"),
+        })
+    }
+
+    /// Resolve for the emulator path: run the provider against the
+    /// concrete tensor shapes of the call.
+    pub fn resolve_vtx(&self, kernel: &str, specs: &[TensorSpec]) -> Result<VtxSpec> {
+        let provider = self.vtx.get(kernel).ok_or_else(|| Error::Specialize {
+            kernel: kernel.to_string(),
+            reason: "no VTX provider registered for the emulator backend".into(),
+        })?;
+        provider(specs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulator::kernels;
+
+    #[test]
+    fn vtx_provider_resolution() {
+        let mut reg = KernelRegistry::new(None);
+        reg.register_vtx("vadd", |specs| {
+            let n = specs[0].numel();
+            Ok(VtxSpec {
+                kernel: kernels::vadd()?,
+                scalars: vec![KernelArg::I32(n as i32)],
+                config: LaunchConfig::new(((n as u32) + 255) / 256, 256u32),
+            })
+        });
+        assert!(reg.has_vtx("vadd"));
+        let spec = reg
+            .resolve_vtx("vadd", &[TensorSpec::f32(&[100]), TensorSpec::f32(&[100])])
+            .unwrap();
+        assert_eq!(spec.kernel.name, "vadd");
+        assert_eq!(spec.scalars, vec![KernelArg::I32(100)]);
+        assert!(reg.resolve_vtx("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn missing_library_reports_make_artifacts() {
+        let reg = KernelRegistry::new(None);
+        let err = reg.resolve_artifact("vadd", "f32[12];f32[12]").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Backend abstraction: what a "device" must provide for the driver API.
+//!
+//! The paper ships two execution paths — real CUDA hardware and the GPU
+//! Ocelot emulator — behind the same driver API (§5). We mirror that with
+//! a [`Backend`] trait implemented by the PJRT runtime
+//! ([`crate::runtime::PjrtBackend`]) and by the VTX emulator
+//! ([`crate::emulator::VtxBackend`]).
+
+use std::sync::Arc;
+
+use crate::driver::launch::{KernelArg, LaunchConfig};
+use crate::driver::memory::MemoryPool;
+use crate::error::Result;
+
+/// Tensor I/O description used by module-level executables (the PJRT
+/// backend needs shapes to build literals from raw device buffers).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn f32(shape: &[usize]) -> Self {
+        TensorSpec { dtype: "f32".into(), shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        let elem = match self.dtype.as_str() {
+            "f64" => 8,
+            _ => 4,
+        };
+        self.numel() * elem
+    }
+
+    pub fn signature(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+/// Source code of a module, the `cuModuleLoad` payload analog.
+pub enum ModuleSource {
+    /// AOT HLO text (the PTX analog of this stack) plus its I/O contract.
+    HloText {
+        name: String,
+        text: String,
+        inputs: Vec<TensorSpec>,
+        outputs: Vec<TensorSpec>,
+    },
+    /// HLO text loaded lazily from a file path.
+    HloFile {
+        name: String,
+        path: std::path::PathBuf,
+        inputs: Vec<TensorSpec>,
+        outputs: Vec<TensorSpec>,
+    },
+    /// VTX virtual-ISA kernels (the emulator path).
+    Vtx { kernels: Vec<crate::emulator::isa::Kernel> },
+}
+
+impl ModuleSource {
+    pub fn name(&self) -> String {
+        match self {
+            ModuleSource::HloText { name, .. } | ModuleSource::HloFile { name, .. } => {
+                name.clone()
+            }
+            ModuleSource::Vtx { kernels } => kernels
+                .first()
+                .map(|k| k.name.clone())
+                .unwrap_or_else(|| "<empty>".into()),
+        }
+    }
+}
+
+/// A device execution backend.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Load (JIT-compile) a module. The expensive step — the driver caches
+    /// the result per context, and the coordinator per signature.
+    fn load_module(&self, source: &ModuleSource) -> Result<Arc<dyn LoadedModule>>;
+}
+
+/// A loaded module: a set of named functions.
+pub trait LoadedModule: Send + Sync {
+    /// Resolve a kernel handle (`cuModuleGetFunction`).
+    fn function(&self, name: &str) -> Result<Arc<dyn DeviceFunction>>;
+
+    /// Names of the kernels in this module.
+    fn function_names(&self) -> Vec<String>;
+}
+
+/// A launchable kernel (`CUfunction`).
+pub trait DeviceFunction: Send + Sync {
+    /// Execute with the given configuration. Device buffers are resolved
+    /// through `mem`. Synchronous from the caller's point of view; streams
+    /// provide asynchrony above this layer.
+    fn launch(&self, cfg: &LaunchConfig, args: &[KernelArg], mem: &MemoryPool) -> Result<()>;
+
+    /// Human-readable name, for error messages and profiling.
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let s = TensorSpec::f32(&[90, 128]);
+        assert_eq!(s.numel(), 11520);
+        assert_eq!(s.byte_len(), 46080);
+        assert_eq!(s.signature(), "f32[90,128]");
+        let d = TensorSpec { dtype: "f64".into(), shape: vec![4] };
+        assert_eq!(d.byte_len(), 32);
+    }
+
+    #[test]
+    fn scalar_spec_signature() {
+        let s = TensorSpec::f32(&[]);
+        assert_eq!(s.signature(), "f32[]");
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.byte_len(), 4);
+    }
+}

@@ -1,0 +1,223 @@
+//! Contexts (`cuCtxCreate` / `cuCtxDestroy`): own device memory, loaded
+//! modules and streams for one device.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::driver::backend::{Backend, ModuleSource};
+use crate::driver::device::Device;
+use crate::driver::memory::{DevicePtr, MemStats, MemoryPool};
+use crate::driver::module::Module;
+use crate::driver::stream::Stream;
+use crate::error::{Error, Result};
+
+struct ContextInner {
+    device: Device,
+    backend: Arc<dyn Backend>,
+    mem: Arc<MemoryPool>,
+    modules: Mutex<HashMap<String, Module>>,
+    destroyed: AtomicBool,
+}
+
+/// A driver context. Cheap to clone (shared handle); `destroy` poisons all
+/// clones, as with real driver contexts.
+#[derive(Clone)]
+pub struct Context {
+    inner: Arc<ContextInner>,
+}
+
+impl Context {
+    /// `cuCtxCreate` for a device ordinal.
+    pub fn create(device: &Device) -> Result<Context> {
+        let backend = device.backend()?;
+        Ok(Context {
+            inner: Arc::new(ContextInner {
+                device: device.clone(),
+                backend,
+                mem: Arc::new(MemoryPool::new(device.attributes.total_memory)),
+                modules: Mutex::new(HashMap::new()),
+                destroyed: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// Context on device 0 (the PJRT-backed simulated accelerator).
+    pub fn default_device() -> Result<Context> {
+        Context::create(&crate::driver::device::device(0)?)
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        if self.inner.destroyed.load(Ordering::Acquire) {
+            Err(Error::ContextDestroyed)
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.inner.device
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.backend.name()
+    }
+
+    /// The context's device memory pool.
+    pub fn memory(&self) -> Result<&MemoryPool> {
+        self.check_alive()?;
+        Ok(&self.inner.mem)
+    }
+
+    /// Shared handle to the pool for streams / long-lived launchers.
+    pub fn memory_arc(&self) -> Result<Arc<MemoryPool>> {
+        self.check_alive()?;
+        Ok(self.inner.mem.clone())
+    }
+
+    // ---- convenience memory API (the CUDA.jl-style wrappers) -----------
+
+    pub fn alloc(&self, bytes: usize) -> Result<DevicePtr> {
+        self.memory()?.alloc(bytes)
+    }
+
+    pub fn free(&self, ptr: DevicePtr) -> Result<()> {
+        self.memory()?.free(ptr)
+    }
+
+    pub fn upload(&self, ptr: DevicePtr, data: &[u8]) -> Result<()> {
+        self.memory()?.copy_h2d(ptr, data)
+    }
+
+    pub fn download(&self, ptr: DevicePtr, out: &mut [u8]) -> Result<()> {
+        self.memory()?.copy_d2h(ptr, out)
+    }
+
+    /// Allocate + upload in one call (`CuArray(host_array)` analog).
+    pub fn alloc_upload(&self, data: &[u8]) -> Result<DevicePtr> {
+        let ptr = self.alloc(data.len())?;
+        self.upload(ptr, data)?;
+        Ok(ptr)
+    }
+
+    pub fn mem_stats(&self) -> Result<MemStats> {
+        Ok(self.memory()?.stats())
+    }
+
+    // ---- modules ---------------------------------------------------------
+
+    /// `cuModuleLoad`: load (compile) a module, cached by module name so
+    /// repeated loads of the same artifact are free.
+    pub fn load_module(&self, source: &ModuleSource) -> Result<Module> {
+        self.check_alive()?;
+        let name = source.name();
+        {
+            let modules = self.inner.modules.lock().unwrap();
+            if let Some(m) = modules.get(&name) {
+                return Ok(m.clone());
+            }
+        }
+        let loaded = self.inner.backend.load_module(source)?;
+        let module = Module::new(name.clone(), loaded);
+        self.inner
+            .modules
+            .lock()
+            .unwrap()
+            .insert(name, module.clone());
+        Ok(module)
+    }
+
+    /// Load bypassing the cache (used by init-time benchmarks that must
+    /// measure a cold compile).
+    pub fn load_module_uncached(&self, source: &ModuleSource) -> Result<Module> {
+        self.check_alive()?;
+        let loaded = self.inner.backend.load_module(source)?;
+        Ok(Module::new(source.name(), loaded))
+    }
+
+    /// `cuModuleUnload`.
+    pub fn unload_module(&self, name: &str) -> Result<()> {
+        self.check_alive()?;
+        self.inner
+            .modules
+            .lock()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| Error::ModuleNotFound(name.to_string()))
+    }
+
+    pub fn loaded_modules(&self) -> Vec<String> {
+        self.inner
+            .modules
+            .lock()
+            .unwrap()
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    // ---- streams ----------------------------------------------------------
+
+    /// `cuStreamCreate`.
+    pub fn create_stream(&self) -> Result<Stream> {
+        self.check_alive()?;
+        Ok(Stream::new())
+    }
+
+    // ---- lifecycle ---------------------------------------------------------
+
+    /// `cuCtxDestroy`: further API calls on any clone fail.
+    pub fn destroy(&self) {
+        self.inner.destroyed.store(true, Ordering::Release);
+        self.inner.modules.lock().unwrap().clear();
+    }
+
+    pub fn is_alive(&self) -> bool {
+        !self.inner.destroyed.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::device;
+
+    fn emulator_ctx() -> Context {
+        // Device 1 (VTX emulator) needs no PJRT client — fast for tests.
+        Context::create(&device::device(1).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn memory_roundtrip_through_context() {
+        let ctx = emulator_ctx();
+        let ptr = ctx.alloc_upload(&[1, 2, 3, 4]).unwrap();
+        let mut out = [0u8; 4];
+        ctx.download(ptr, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3, 4]);
+        ctx.free(ptr).unwrap();
+        assert_eq!(ctx.mem_stats().unwrap().free_count, 1);
+    }
+
+    #[test]
+    fn destroy_poisons_all_clones() {
+        let ctx = emulator_ctx();
+        let clone = ctx.clone();
+        ctx.destroy();
+        assert!(!clone.is_alive());
+        assert!(matches!(clone.alloc(4), Err(Error::ContextDestroyed)));
+        assert!(matches!(
+            clone.create_stream().err().map(|e| e.to_string()),
+            Some(s) if s.contains("destroyed")
+        ));
+    }
+
+    #[test]
+    fn unload_unknown_module_errors() {
+        let ctx = emulator_ctx();
+        assert!(matches!(
+            ctx.unload_module("ghost"),
+            Err(Error::ModuleNotFound(_))
+        ));
+    }
+}

@@ -1,0 +1,119 @@
+//! Device enumeration (`cuDeviceGet` / `cuDeviceGetAttribute` analog).
+
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use crate::driver::backend::Backend;
+use crate::error::{Error, Result};
+
+/// Which execution backend a device maps to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT CPU client executing AOT HLO artifacts (the "real hardware"
+    /// path of this stack).
+    Pjrt,
+    /// VTX virtual-ISA interpreter (the GPU Ocelot emulator analog).
+    VtxEmulator,
+}
+
+/// Static device attributes (a subset of `CUdevice_attribute`).
+#[derive(Clone, Debug)]
+pub struct DeviceAttributes {
+    pub max_threads_per_block: u32,
+    pub max_shared_mem_per_block: usize,
+    pub warp_size: u32,
+    pub total_memory: usize,
+}
+
+impl Default for DeviceAttributes {
+    fn default() -> Self {
+        DeviceAttributes {
+            max_threads_per_block: 1024,
+            max_shared_mem_per_block: 48 << 10,
+            warp_size: 32,
+            total_memory: crate::driver::memory::DEFAULT_CAPACITY,
+        }
+    }
+}
+
+/// A visible accelerator device.
+#[derive(Clone)]
+pub struct Device {
+    pub ordinal: usize,
+    pub name: String,
+    pub kind: BackendKind,
+    pub attributes: DeviceAttributes,
+}
+
+impl std::fmt::Debug for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Device({}: {} [{:?}])", self.ordinal, self.name, self.kind)
+    }
+}
+
+static DEVICES: Lazy<Vec<Device>> = Lazy::new(|| {
+    vec![
+        Device {
+            ordinal: 0,
+            name: "PJRT CPU (simulated accelerator)".into(),
+            kind: BackendKind::Pjrt,
+            attributes: DeviceAttributes::default(),
+        },
+        Device {
+            ordinal: 1,
+            name: "VTX emulator (Ocelot analog)".into(),
+            kind: BackendKind::VtxEmulator,
+            attributes: DeviceAttributes::default(),
+        },
+    ]
+});
+
+/// `cuDeviceGetCount`.
+pub fn device_count() -> usize {
+    DEVICES.len()
+}
+
+/// `cuDeviceGet`.
+pub fn device(ordinal: usize) -> Result<Device> {
+    DEVICES
+        .get(ordinal)
+        .cloned()
+        .ok_or(Error::InvalidDevice(ordinal))
+}
+
+/// All visible devices.
+pub fn devices() -> Vec<Device> {
+    DEVICES.clone()
+}
+
+impl Device {
+    /// Instantiate the execution backend for this device. PJRT backends
+    /// share a process-global client (PJRT clients are heavyweight).
+    pub fn backend(&self) -> Result<Arc<dyn Backend>> {
+        match self.kind {
+            BackendKind::Pjrt => Ok(crate::runtime::PjrtBackend::global()?),
+            BackendKind::VtxEmulator => Ok(Arc::new(crate::emulator::VtxBackend::new())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumeration() {
+        assert_eq!(device_count(), 2);
+        assert_eq!(device(0).unwrap().kind, BackendKind::Pjrt);
+        assert_eq!(device(1).unwrap().kind, BackendKind::VtxEmulator);
+        assert!(matches!(device(9), Err(Error::InvalidDevice(9))));
+    }
+
+    #[test]
+    fn attributes_sane() {
+        let d = device(0).unwrap();
+        assert!(d.attributes.max_threads_per_block >= 256);
+        assert!(d.attributes.max_shared_mem_per_block >= 16 << 10);
+    }
+}

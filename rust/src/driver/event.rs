@@ -1,0 +1,111 @@
+//! Events (`cuEventRecord` / `cuEventSynchronize` / `cuEventElapsedTime`).
+//!
+//! Events are recorded into streams; synchronizing blocks until the
+//! stream's worker has reached the record point.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+#[derive(Default)]
+struct EventState {
+    recorded: Option<Instant>,
+}
+
+/// A timing/synchronization event.
+#[derive(Clone)]
+pub struct Event {
+    state: Arc<(Mutex<EventState>, Condvar)>,
+}
+
+impl Default for Event {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Event {
+    pub fn new() -> Self {
+        Event { state: Arc::new((Mutex::new(EventState::default()), Condvar::new())) }
+    }
+
+    /// Mark the event as reached *now*. Streams call this from their worker
+    /// thread; host code can call it directly for inline recording.
+    pub fn record_now(&self) {
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().recorded = Some(Instant::now());
+        cv.notify_all();
+    }
+
+    /// `cuEventQuery`: has the event been reached?
+    pub fn query(&self) -> bool {
+        self.state.0.lock().unwrap().recorded.is_some()
+    }
+
+    /// `cuEventSynchronize`: block until recorded.
+    pub fn synchronize(&self) {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        while st.recorded.is_none() {
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    fn instant(&self) -> Result<Instant> {
+        self.state
+            .0
+            .lock()
+            .unwrap()
+            .recorded
+            .ok_or(Error::EventNotRecorded)
+    }
+
+    /// `cuEventElapsedTime`: milliseconds between two recorded events.
+    pub fn elapsed_ms(start: &Event, end: &Event) -> Result<f64> {
+        let s = start.instant()?;
+        let e = end.instant()?;
+        Ok(e.saturating_duration_since(s).as_secs_f64() * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unrecorded_event_errors() {
+        let a = Event::new();
+        let b = Event::new();
+        assert!(!a.query());
+        assert!(matches!(
+            Event::elapsed_ms(&a, &b),
+            Err(Error::EventNotRecorded)
+        ));
+    }
+
+    #[test]
+    fn elapsed_between_records() {
+        let a = Event::new();
+        let b = Event::new();
+        a.record_now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        b.record_now();
+        let ms = Event::elapsed_ms(&a, &b).unwrap();
+        assert!(ms >= 4.0, "elapsed {ms} ms");
+        assert!(a.query() && b.query());
+    }
+
+    #[test]
+    fn synchronize_waits_for_cross_thread_record() {
+        let ev = Event::new();
+        let ev2 = ev.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            ev2.record_now();
+        });
+        ev.synchronize();
+        assert!(ev.query());
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,151 @@
+//! Launch configuration and kernel arguments (the `cuLaunchKernel` call
+//! surface).
+
+use crate::driver::memory::DevicePtr;
+use crate::error::{Error, Result};
+
+/// 3-component dimension (grid or block), the CUDA `dim3` analog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dim3 {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+}
+
+impl Dim3 {
+    pub fn count(&self) -> u64 {
+        self.x as u64 * self.y as u64 * self.z as u64
+    }
+}
+
+impl From<u32> for Dim3 {
+    fn from(x: u32) -> Self {
+        Dim3 { x, y: 1, z: 1 }
+    }
+}
+
+impl From<(u32, u32)> for Dim3 {
+    fn from((x, y): (u32, u32)) -> Self {
+        Dim3 { x, y, z: 1 }
+    }
+}
+
+impl From<(u32, u32, u32)> for Dim3 {
+    fn from((x, y, z): (u32, u32, u32)) -> Self {
+        Dim3 { x, y, z }
+    }
+}
+
+/// Kernel launch configuration: grid/block dimensions + dynamic shared
+/// memory, mirroring the triple-angle-bracket syntax parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LaunchConfig {
+    pub grid: Dim3,
+    pub block: Dim3,
+    pub shared_mem_bytes: usize,
+}
+
+impl LaunchConfig {
+    pub fn new(grid: impl Into<Dim3>, block: impl Into<Dim3>) -> Self {
+        LaunchConfig { grid: grid.into(), block: block.into(), shared_mem_bytes: 0 }
+    }
+
+    pub fn with_shared_mem(mut self, bytes: usize) -> Self {
+        self.shared_mem_bytes = bytes;
+        self
+    }
+
+    /// Validate against device limits (max threads per block etc.).
+    pub fn validate(&self, max_threads_per_block: u32, max_shared_mem: usize) -> Result<()> {
+        if self.grid.count() == 0 || self.block.count() == 0 {
+            return Err(Error::InvalidLaunch("zero-sized grid or block".into()));
+        }
+        if self.block.count() > max_threads_per_block as u64 {
+            return Err(Error::InvalidLaunch(format!(
+                "block has {} threads, device limit is {max_threads_per_block}",
+                self.block.count()
+            )));
+        }
+        if self.shared_mem_bytes > max_shared_mem {
+            return Err(Error::InvalidLaunch(format!(
+                "requested {} bytes of shared memory, device limit is {max_shared_mem}",
+                self.shared_mem_bytes
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One kernel argument, as passed to `cuLaunchKernel`'s argument array.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelArg {
+    /// Device buffer (pointer in the disjoint device address space).
+    Ptr(DevicePtr),
+    F32(f32),
+    I32(i32),
+    U32(u32),
+}
+
+impl KernelArg {
+    pub fn as_ptr(&self) -> Result<DevicePtr> {
+        match self {
+            KernelArg::Ptr(p) => Ok(*p),
+            other => Err(Error::InvalidLaunch(format!(
+                "expected device pointer argument, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            KernelArg::F32(v) => Ok(*v),
+            KernelArg::I32(v) => Ok(*v as f32),
+            KernelArg::U32(v) => Ok(*v as f32),
+            other => Err(Error::InvalidLaunch(format!(
+                "expected scalar argument, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            KernelArg::I32(v) => Ok(*v as i64),
+            KernelArg::U32(v) => Ok(*v as i64),
+            other => Err(Error::InvalidLaunch(format!(
+                "expected integer argument, got {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim3_conversions() {
+        assert_eq!(Dim3::from(8), Dim3 { x: 8, y: 1, z: 1 });
+        assert_eq!(Dim3::from((2, 3)).count(), 6);
+        assert_eq!(Dim3::from((2, 3, 4)).count(), 24);
+    }
+
+    #[test]
+    fn validate_rejects_zero_and_oversize() {
+        let cfg = LaunchConfig::new(0u32, 32u32);
+        assert!(cfg.validate(1024, 48 << 10).is_err());
+        let cfg = LaunchConfig::new(1u32, 2048u32);
+        assert!(cfg.validate(1024, 48 << 10).is_err());
+        let cfg = LaunchConfig::new(1u32, 128u32).with_shared_mem(1 << 20);
+        assert!(cfg.validate(1024, 48 << 10).is_err());
+        let cfg = LaunchConfig::new((4, 4), (16, 16));
+        assert!(cfg.validate(1024, 48 << 10).is_ok());
+    }
+
+    #[test]
+    fn arg_accessors() {
+        assert!(KernelArg::F32(1.5).as_f32().unwrap() == 1.5);
+        assert!(KernelArg::I32(-3).as_i64().unwrap() == -3);
+        assert!(KernelArg::F32(1.0).as_ptr().is_err());
+        assert!(KernelArg::Ptr(DevicePtr(4)).as_f32().is_err());
+    }
+}

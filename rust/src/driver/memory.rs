@@ -1,0 +1,401 @@
+//! Simulated device memory: a **disjoint address space** addressed by
+//! opaque handles, exactly the restriction the paper builds on (§4.1:
+//! "GPU and CPU memories are disjoint, pointers are not interchangeable").
+//!
+//! Buffers live in a pool owned by the context; host code can only move
+//! data across with explicit `copy_h2d` / `copy_d2h` calls, which are
+//! counted — the transfer-minimization claims of §6.3 are validated
+//! against these counters.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// Opaque device pointer (the `CUdeviceptr` analog). Never a host address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DevicePtr(pub u64);
+
+impl DevicePtr {
+    pub fn null() -> Self {
+        DevicePtr(0)
+    }
+    pub fn is_null(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// Running transfer / allocation statistics for a pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemStats {
+    pub alloc_count: u64,
+    pub free_count: u64,
+    pub h2d_count: u64,
+    pub d2h_count: u64,
+    pub d2d_count: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub d2d_bytes: u64,
+    pub current_bytes: usize,
+    pub peak_bytes: usize,
+}
+
+struct PoolInner {
+    buffers: HashMap<u64, Vec<u8>>,
+    stats: MemStats,
+}
+
+/// Device memory pool. One per context (the CUDA context owns allocations
+/// the same way). Thread-safe: streams copy concurrently.
+pub struct MemoryPool {
+    capacity: usize,
+    next: AtomicU64,
+    inner: Mutex<PoolInner>,
+}
+
+/// Default simulated device memory: 4 GiB (GTX-Titan-class with headroom).
+pub const DEFAULT_CAPACITY: usize = 4 << 30;
+
+impl MemoryPool {
+    pub fn new(capacity: usize) -> Self {
+        MemoryPool {
+            capacity,
+            next: AtomicU64::new(1),
+            inner: Mutex::new(PoolInner { buffers: HashMap::new(), stats: MemStats::default() }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// `cuMemAlloc`: allocate `bytes` of device memory.
+    pub fn alloc(&self, bytes: usize) -> Result<DevicePtr> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.stats.current_bytes + bytes > self.capacity {
+            return Err(Error::OutOfMemory {
+                requested: bytes,
+                available: self.capacity - inner.stats.current_bytes,
+            });
+        }
+        let handle = self.next.fetch_add(1, Ordering::Relaxed);
+        inner.buffers.insert(handle, vec![0u8; bytes]);
+        inner.stats.alloc_count += 1;
+        inner.stats.current_bytes += bytes;
+        inner.stats.peak_bytes = inner.stats.peak_bytes.max(inner.stats.current_bytes);
+        Ok(DevicePtr(handle))
+    }
+
+    /// `cuMemFree`. Double frees and unknown handles are errors (the
+    /// framework relies on this to catch lifetime bugs in transfer plans).
+    pub fn free(&self, ptr: DevicePtr) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.buffers.remove(&ptr.0) {
+            Some(buf) => {
+                inner.stats.free_count += 1;
+                inner.stats.current_bytes -= buf.len();
+                Ok(())
+            }
+            None => Err(Error::DoubleFree(ptr.0)),
+        }
+    }
+
+    pub fn size_of(&self, ptr: DevicePtr) -> Result<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buffers
+            .get(&ptr.0)
+            .map(|b| b.len())
+            .ok_or(Error::InvalidDevicePtr(ptr.0))
+    }
+
+    /// `cuMemcpyHtoD`.
+    pub fn copy_h2d(&self, dst: DevicePtr, src: &[u8]) -> Result<()> {
+        self.copy_h2d_at(dst, 0, src)
+    }
+
+    pub fn copy_h2d_at(&self, dst: DevicePtr, offset: usize, src: &[u8]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let buf = inner
+            .buffers
+            .get_mut(&dst.0)
+            .ok_or(Error::InvalidDevicePtr(dst.0))?;
+        if offset + src.len() > buf.len() {
+            return Err(Error::OutOfBounds {
+                ptr: dst.0,
+                off: offset,
+                len: src.len(),
+                size: buf.len(),
+            });
+        }
+        buf[offset..offset + src.len()].copy_from_slice(src);
+        inner.stats.h2d_count += 1;
+        inner.stats.h2d_bytes += src.len() as u64;
+        Ok(())
+    }
+
+    /// `cuMemcpyDtoH`.
+    pub fn copy_d2h(&self, src: DevicePtr, dst: &mut [u8]) -> Result<()> {
+        self.copy_d2h_at(src, 0, dst)
+    }
+
+    pub fn copy_d2h_at(&self, src: DevicePtr, offset: usize, dst: &mut [u8]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let buf = inner
+            .buffers
+            .get(&src.0)
+            .ok_or(Error::InvalidDevicePtr(src.0))?;
+        if offset + dst.len() > buf.len() {
+            return Err(Error::OutOfBounds {
+                ptr: src.0,
+                off: offset,
+                len: dst.len(),
+                size: buf.len(),
+            });
+        }
+        dst.copy_from_slice(&buf[offset..offset + dst.len()]);
+        inner.stats.d2h_count += 1;
+        inner.stats.d2h_bytes += dst.len() as u64;
+        Ok(())
+    }
+
+    /// `cuMemcpyDtoD`.
+    pub fn copy_d2d(&self, dst: DevicePtr, src: DevicePtr) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let data = inner
+            .buffers
+            .get(&src.0)
+            .ok_or(Error::InvalidDevicePtr(src.0))?
+            .clone();
+        let dbuf = inner
+            .buffers
+            .get_mut(&dst.0)
+            .ok_or(Error::InvalidDevicePtr(dst.0))?;
+        if data.len() != dbuf.len() {
+            return Err(Error::OutOfBounds {
+                ptr: dst.0,
+                off: 0,
+                len: data.len(),
+                size: dbuf.len(),
+            });
+        }
+        dbuf.copy_from_slice(&data);
+        inner.stats.d2d_count += 1;
+        inner.stats.d2d_bytes += data.len() as u64;
+        Ok(())
+    }
+
+    /// Read an entire device buffer into a fresh host vector (not counted
+    /// as a D2H *transfer*: used by backends, which access device memory
+    /// directly — the kernel-side view).
+    pub fn read_raw(&self, ptr: DevicePtr) -> Result<Vec<u8>> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buffers
+            .get(&ptr.0)
+            .cloned()
+            .ok_or(Error::InvalidDevicePtr(ptr.0))
+    }
+
+    /// Overwrite an entire device buffer (backend-side write; length must
+    /// match exactly).
+    pub fn write_raw(&self, ptr: DevicePtr, data: &[u8]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let buf = inner
+            .buffers
+            .get_mut(&ptr.0)
+            .ok_or(Error::InvalidDevicePtr(ptr.0))?;
+        if data.len() != buf.len() {
+            return Err(Error::OutOfBounds { ptr: ptr.0, off: 0, len: data.len(), size: buf.len() });
+        }
+        buf.copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Run `f` with a borrowed view of the buffer (zero-copy backend read;
+    /// avoids the clone of [`MemoryPool::read_raw`] on hot launch paths —
+    /// §Perf iteration I4).
+    pub fn with_raw<R>(&self, ptr: DevicePtr, f: impl FnOnce(&[u8]) -> R) -> Result<R> {
+        let inner = self.inner.lock().unwrap();
+        let buf = inner
+            .buffers
+            .get(&ptr.0)
+            .ok_or(Error::InvalidDevicePtr(ptr.0))?;
+        Ok(f(buf))
+    }
+
+    /// Run `f` with a mutable view of the buffer (zero-copy backend access;
+    /// used by the VTX interpreter for global memory).
+    pub fn with_raw_mut<R>(
+        &self,
+        ptr: DevicePtr,
+        f: impl FnOnce(&mut [u8]) -> R,
+    ) -> Result<R> {
+        let mut inner = self.inner.lock().unwrap();
+        let buf = inner
+            .buffers
+            .get_mut(&ptr.0)
+            .ok_or(Error::InvalidDevicePtr(ptr.0))?;
+        Ok(f(buf))
+    }
+
+    /// Take several buffers out of the pool, run `f`, and put them back.
+    /// Allows a kernel to access multiple buffers mutably without holding
+    /// the pool lock for the duration of the launch.
+    pub fn with_buffers<R>(
+        &self,
+        ptrs: &[DevicePtr],
+        f: impl FnOnce(&mut [Vec<u8>]) -> R,
+    ) -> Result<R> {
+        let mut taken = Vec::with_capacity(ptrs.len());
+        {
+            let mut inner = self.inner.lock().unwrap();
+            // Validate all first so we never partially remove.
+            for p in ptrs {
+                if !inner.buffers.contains_key(&p.0) {
+                    return Err(Error::InvalidDevicePtr(p.0));
+                }
+            }
+            // Duplicate pointers are not supported (aliasing) — error out.
+            for (i, p) in ptrs.iter().enumerate() {
+                if ptrs[..i].contains(p) {
+                    return Err(Error::InvalidLaunch(format!(
+                        "duplicate device pointer argument {:#x}",
+                        p.0
+                    )));
+                }
+            }
+            for p in ptrs {
+                taken.push(inner.buffers.remove(&p.0).unwrap());
+            }
+        }
+        let result = f(&mut taken);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for (p, buf) in ptrs.iter().zip(taken) {
+                inner.buffers.insert(p.0, buf);
+            }
+        }
+        Ok(result)
+    }
+
+    pub fn stats(&self) -> MemStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    pub fn reset_stats(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let live = inner.stats.current_bytes;
+        let peak = inner.stats.peak_bytes;
+        inner.stats = MemStats { current_bytes: live, peak_bytes: peak, ..MemStats::default() };
+    }
+
+    pub fn live_buffers(&self) -> usize {
+        self.inner.lock().unwrap().buffers.len()
+    }
+}
+
+impl Default for MemoryPool {
+    fn default() -> Self {
+        MemoryPool::new(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_copy_roundtrip() {
+        let pool = MemoryPool::default();
+        let ptr = pool.alloc(8).unwrap();
+        pool.copy_h2d(ptr, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let mut out = [0u8; 8];
+        pool.copy_d2h(ptr, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3, 4, 5, 6, 7, 8]);
+        let st = pool.stats();
+        assert_eq!((st.h2d_count, st.d2h_count), (1, 1));
+        assert_eq!((st.h2d_bytes, st.d2h_bytes), (8, 8));
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let pool = MemoryPool::default();
+        let ptr = pool.alloc(4).unwrap();
+        pool.free(ptr).unwrap();
+        assert!(matches!(pool.free(ptr), Err(Error::DoubleFree(_))));
+    }
+
+    #[test]
+    fn use_after_free_detected() {
+        let pool = MemoryPool::default();
+        let ptr = pool.alloc(4).unwrap();
+        pool.free(ptr).unwrap();
+        assert!(pool.copy_h2d(ptr, &[0; 4]).is_err());
+        let mut buf = [0u8; 4];
+        assert!(pool.copy_d2h(ptr, &mut buf).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_detected() {
+        let pool = MemoryPool::default();
+        let ptr = pool.alloc(4).unwrap();
+        assert!(matches!(
+            pool.copy_h2d(ptr, &[0; 8]),
+            Err(Error::OutOfBounds { .. })
+        ));
+    }
+
+    #[test]
+    fn oom_enforced() {
+        let pool = MemoryPool::new(16);
+        let _a = pool.alloc(12).unwrap();
+        assert!(matches!(pool.alloc(8), Err(Error::OutOfMemory { .. })));
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let pool = MemoryPool::new(100);
+        let a = pool.alloc(60).unwrap();
+        pool.free(a).unwrap();
+        let _b = pool.alloc(10).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.peak_bytes, 60);
+        assert_eq!(st.current_bytes, 10);
+    }
+
+    #[test]
+    fn with_buffers_rejects_duplicates() {
+        let pool = MemoryPool::default();
+        let a = pool.alloc(4).unwrap();
+        assert!(pool.with_buffers(&[a, a], |_| ()).is_err());
+        // buffer must still be live afterwards
+        assert_eq!(pool.size_of(a).unwrap(), 4);
+    }
+
+    #[test]
+    fn with_buffers_restores_on_completion() {
+        let pool = MemoryPool::default();
+        let a = pool.alloc(4).unwrap();
+        let b = pool.alloc(2).unwrap();
+        pool.with_buffers(&[a, b], |bufs| {
+            bufs[0][0] = 42;
+            bufs[1][1] = 7;
+        })
+        .unwrap();
+        assert_eq!(pool.read_raw(a).unwrap()[0], 42);
+        assert_eq!(pool.read_raw(b).unwrap()[1], 7);
+        assert_eq!(pool.live_buffers(), 2);
+    }
+
+    #[test]
+    fn d2d_copy() {
+        let pool = MemoryPool::default();
+        let a = pool.alloc(4).unwrap();
+        let b = pool.alloc(4).unwrap();
+        pool.copy_h2d(a, &[9, 9, 9, 9]).unwrap();
+        pool.copy_d2d(b, a).unwrap();
+        assert_eq!(pool.read_raw(b).unwrap(), vec![9, 9, 9, 9]);
+    }
+}

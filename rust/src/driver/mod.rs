@@ -1,0 +1,30 @@
+//! Simulated accelerator **driver API** — the CUDA driver API analog the
+//! rest of the framework is built on (paper §2.1, §5).
+//!
+//! The surface mirrors the driver-API lifecycle the paper describes:
+//! device enumeration → context creation → module loading (JIT of a
+//! virtual ISA) → function handles → memory management in a *disjoint*
+//! address space → stream-ordered launches with events.
+//!
+//! Two backends implement the execution side (as in the paper, where the
+//! same API drives both CUDA hardware and the GPU Ocelot emulator):
+//! [`crate::runtime::PjrtBackend`] (AOT HLO artifacts on the XLA/PJRT CPU
+//! client) and [`crate::emulator::VtxBackend`] (interpreted VTX kernels).
+
+pub mod backend;
+pub mod context;
+pub mod device;
+pub mod event;
+pub mod launch;
+pub mod memory;
+pub mod module;
+pub mod stream;
+
+pub use backend::{Backend, DeviceFunction, LoadedModule, ModuleSource, TensorSpec};
+pub use context::Context;
+pub use device::{device, device_count, devices, BackendKind, Device, DeviceAttributes};
+pub use event::Event;
+pub use launch::{Dim3, KernelArg, LaunchConfig};
+pub use memory::{DevicePtr, MemStats, MemoryPool};
+pub use module::{Function, Module};
+pub use stream::Stream;

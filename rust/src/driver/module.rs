@@ -1,0 +1,58 @@
+//! Modules and functions (`cuModuleLoad` / `cuModuleGetFunction`).
+
+use std::sync::Arc;
+
+use crate::driver::backend::{DeviceFunction, LoadedModule};
+use crate::driver::launch::{KernelArg, LaunchConfig};
+use crate::driver::memory::MemoryPool;
+use crate::error::Result;
+
+/// A loaded code module, holding one or more launchable kernels.
+#[derive(Clone)]
+pub struct Module {
+    name: String,
+    inner: Arc<dyn LoadedModule>,
+}
+
+impl Module {
+    pub(crate) fn new(name: String, inner: Arc<dyn LoadedModule>) -> Self {
+        Module { name, inner }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// `cuModuleGetFunction`.
+    pub fn function(&self, name: &str) -> Result<Function> {
+        Ok(Function { inner: self.inner.function(name)? })
+    }
+
+    pub fn function_names(&self) -> Vec<String> {
+        self.inner.function_names()
+    }
+}
+
+/// A launchable kernel handle (`CUfunction`).
+#[derive(Clone)]
+pub struct Function {
+    inner: Arc<dyn DeviceFunction>,
+}
+
+impl Function {
+    /// `cuLaunchKernel` — synchronous. Use [`crate::driver::Stream`] for
+    /// asynchronous launches.
+    pub fn launch(
+        &self,
+        cfg: &LaunchConfig,
+        args: &[KernelArg],
+        mem: &MemoryPool,
+    ) -> Result<()> {
+        self.inner.launch(cfg, args, mem)
+    }
+
+    pub fn name(&self) -> String {
+        self.inner.name()
+    }
+
+}

@@ -1,0 +1,228 @@
+//! [`crate::driver::Backend`] implementation for the VTX emulator:
+//! plugs interpreted kernels into the same driver API the PJRT backend
+//! serves, mirroring how GPU Ocelot slots in under the CUDA driver API.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::driver::backend::{Backend, DeviceFunction, LoadedModule, ModuleSource};
+use crate::driver::launch::{KernelArg, LaunchConfig};
+use crate::driver::memory::MemoryPool;
+use crate::emulator::interp::{execute, Launch, Limits, ScalarArg};
+use crate::emulator::isa::{Kernel, ParamKind};
+use crate::error::{Error, Result};
+
+/// The emulator backend. Stateless: each module owns its kernels.
+#[derive(Default)]
+pub struct VtxBackend;
+
+impl VtxBackend {
+    pub fn new() -> Self {
+        VtxBackend
+    }
+}
+
+impl Backend for VtxBackend {
+    fn name(&self) -> &'static str {
+        "vtx-emulator"
+    }
+
+    fn load_module(&self, source: &ModuleSource) -> Result<Arc<dyn LoadedModule>> {
+        match source {
+            ModuleSource::Vtx { kernels } => {
+                // Module-load-time validation = the JIT step.
+                let mut map = HashMap::new();
+                for k in kernels {
+                    k.validate().map_err(|reason| Error::VtxValidation {
+                        kernel: k.name.clone(),
+                        reason,
+                    })?;
+                    map.insert(k.name.clone(), Arc::new(k.clone()));
+                }
+                Ok(Arc::new(VtxModule { kernels: map }))
+            }
+            other => Err(Error::ModuleLoad {
+                backend: "vtx-emulator".into(),
+                reason: format!(
+                    "emulator can only load VTX modules, got `{}`",
+                    other.name()
+                ),
+            }),
+        }
+    }
+}
+
+pub struct VtxModule {
+    kernels: HashMap<String, Arc<Kernel>>,
+}
+
+impl LoadedModule for VtxModule {
+    fn function(&self, name: &str) -> Result<Arc<dyn DeviceFunction>> {
+        self.kernels
+            .get(name)
+            .map(|k| Arc::new(VtxFunction { kernel: k.clone() }) as Arc<dyn DeviceFunction>)
+            .ok_or_else(|| Error::FunctionNotFound(name.to_string()))
+    }
+
+    fn function_names(&self) -> Vec<String> {
+        self.kernels.keys().cloned().collect()
+    }
+}
+
+pub struct VtxFunction {
+    kernel: Arc<Kernel>,
+}
+
+impl DeviceFunction for VtxFunction {
+    /// Argument order must match the kernel's parameter declaration order:
+    /// `Ptr` args bind to `PtrF32` params, scalar args to scalar params.
+    fn launch(&self, cfg: &LaunchConfig, args: &[KernelArg], mem: &MemoryPool) -> Result<()> {
+        let k = &self.kernel;
+        if args.len() != k.params.len() {
+            return Err(Error::InvalidLaunch(format!(
+                "kernel `{}` takes {} arguments, got {}",
+                k.name,
+                k.params.len(),
+                args.len()
+            )));
+        }
+        let mut ptrs = Vec::new();
+        let mut scalars = Vec::new();
+        for (i, (param, arg)) in k.params.iter().zip(args).enumerate() {
+            match param {
+                ParamKind::PtrF32 => ptrs.push(arg.as_ptr().map_err(|_| {
+                    Error::BadArgument {
+                        kernel: k.name.clone(),
+                        index: i,
+                        reason: "expected device pointer".into(),
+                    }
+                })?),
+                ParamKind::F32 => scalars.push(ScalarArg::F32(arg.as_f32()?)),
+                ParamKind::I32 => scalars.push(ScalarArg::I32(arg.as_i64()? as i32)),
+            }
+        }
+        // Pull buffers out of the pool, reinterpret bytes as f32, run, put
+        // them back — the emulator's "device-side" view of global memory.
+        mem.with_buffers(&ptrs, |bufs| -> Result<()> {
+            let mut f32bufs: Vec<Vec<f32>> = bufs
+                .iter()
+                .map(|b| {
+                    b.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect()
+                })
+                .collect();
+            {
+                let views: Vec<&mut [f32]> =
+                    f32bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                execute(Launch {
+                    kernel: k,
+                    grid: (cfg.grid.x, cfg.grid.y),
+                    block: (cfg.block.x, cfg.block.y),
+                    buffers: views,
+                    scalars: scalars.clone(),
+                    limits: Limits::default(),
+                })?;
+            }
+            for (b, f) in bufs.iter_mut().zip(&f32bufs) {
+                for (chunk, v) in b.chunks_exact_mut(4).zip(f) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            Ok(())
+        })??;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        self.kernel.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::launch::LaunchConfig;
+    use crate::emulator::builder::KernelBuilder;
+
+    fn vadd_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("vadd");
+        let pa = b.ptr_param();
+        let pb = b.ptr_param();
+        let pc = b.ptr_param();
+        let tid = b.tid_x();
+        let bid = b.ctaid_x();
+        let bdim = b.ntid_x();
+        let base = b.imul(bid, bdim);
+        let gid = b.iadd(base, tid);
+        let x = b.ldg(pa, gid);
+        let y = b.ldg(pb, gid);
+        let s = b.fadd(x, y);
+        b.stg(pc, gid, s);
+        b.ret();
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn module_lifecycle_through_driver_traits() {
+        let backend = VtxBackend::new();
+        let module = backend
+            .load_module(&ModuleSource::Vtx { kernels: vec![vadd_kernel()] })
+            .unwrap();
+        assert_eq!(module.function_names(), vec!["vadd".to_string()]);
+        assert!(module.function("nope").is_err());
+
+        let f = module.function("vadd").unwrap();
+        let mem = MemoryPool::default();
+        let bytes = |v: &[f32]| -> Vec<u8> {
+            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+        };
+        let a = mem.alloc(16).unwrap();
+        mem.copy_h2d(a, &bytes(&[1., 2., 3., 4.])).unwrap();
+        let b = mem.alloc(16).unwrap();
+        mem.copy_h2d(b, &bytes(&[5., 5., 5., 5.])).unwrap();
+        let c = mem.alloc(16).unwrap();
+        f.launch(
+            &LaunchConfig::new(1u32, 4u32),
+            &[KernelArg::Ptr(a), KernelArg::Ptr(b), KernelArg::Ptr(c)],
+            &mem,
+        )
+        .unwrap();
+        let mut out = vec![0u8; 16];
+        mem.copy_d2h(c, &mut out).unwrap();
+        let vals: Vec<f32> = out
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(vals, vec![6., 7., 8., 9.]);
+    }
+
+    #[test]
+    fn wrong_arg_count_rejected() {
+        let backend = VtxBackend::new();
+        let module = backend
+            .load_module(&ModuleSource::Vtx { kernels: vec![vadd_kernel()] })
+            .unwrap();
+        let f = module.function("vadd").unwrap();
+        let mem = MemoryPool::default();
+        let err = f
+            .launch(&LaunchConfig::new(1u32, 1u32), &[], &mem)
+            .unwrap_err();
+        assert!(err.to_string().contains("takes 3 arguments"));
+    }
+
+    #[test]
+    fn hlo_source_rejected() {
+        let backend = VtxBackend::new();
+        let err = backend
+            .load_module(&ModuleSource::HloText {
+                name: "x".into(),
+                text: "".into(),
+                inputs: vec![],
+                outputs: vec![],
+            })
+            .err()
+            .expect("HLO source must be rejected by the emulator");
+        assert!(err.to_string().contains("VTX"));
+    }
+}

@@ -1,0 +1,425 @@
+//! Kernel-builder DSL: author VTX kernels from rust with typed register
+//! handles and symbolic labels — the "high-level kernel language" of the
+//! emulator path, playing the role Julia source plays for the PTX path.
+
+use crate::emulator::isa::{
+    CmpOp, FOp, IOp, Instr, Kernel, ParamKind, Pc, Reg, Special, UnFOp,
+};
+use crate::error::{Error, Result};
+
+/// Typed float-register handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct F(pub Reg);
+
+/// Typed integer-register handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct I(pub Reg);
+
+/// Symbolic label, resolved when the kernel is built.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Label(usize);
+
+pub struct KernelBuilder {
+    name: String,
+    params: Vec<ParamKind>,
+    nf: u16,
+    ni: u16,
+    shared_f32: usize,
+    code: Vec<Instr>,
+    /// label -> bound pc (None until bound)
+    labels: Vec<Option<Pc>>,
+    /// (instruction index, label) patch sites
+    patches: Vec<(usize, Label)>,
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str) -> Self {
+        KernelBuilder {
+            name: name.to_string(),
+            params: Vec::new(),
+            nf: 0,
+            ni: 0,
+            shared_f32: 0,
+            code: Vec::new(),
+            labels: Vec::new(),
+            patches: Vec::new(),
+        }
+    }
+
+    // ---- declarations ---------------------------------------------------
+
+    /// Declare a pointer parameter (device f32 buffer). Order matters.
+    pub fn ptr_param(&mut self) -> u8 {
+        self.params.push(ParamKind::PtrF32);
+        (self.params.len() - 1) as u8
+    }
+
+    pub fn f32_param(&mut self) -> u8 {
+        self.params.push(ParamKind::F32);
+        (self.params.len() - 1) as u8
+    }
+
+    pub fn i32_param(&mut self) -> u8 {
+        self.params.push(ParamKind::I32);
+        (self.params.len() - 1) as u8
+    }
+
+    pub fn shared(&mut self, f32_elems: usize) {
+        self.shared_f32 = f32_elems;
+    }
+
+    /// Allocate a fresh float register.
+    pub fn f(&mut self) -> F {
+        let r = self.nf;
+        self.nf += 1;
+        F(r)
+    }
+
+    /// Allocate a fresh integer register.
+    pub fn i(&mut self) -> I {
+        let r = self.ni;
+        self.ni += 1;
+        I(r)
+    }
+
+    // ---- immediates & moves ----------------------------------------------
+
+    pub fn constf(&mut self, v: f32) -> F {
+        let d = self.f();
+        self.code.push(Instr::ConstF(d.0, v));
+        d
+    }
+
+    pub fn consti(&mut self, v: i64) -> I {
+        let d = self.i();
+        self.code.push(Instr::ConstI(d.0, v));
+        d
+    }
+
+    pub fn movf(&mut self, dst: F, src: F) {
+        self.code.push(Instr::MovF(dst.0, src.0));
+    }
+
+    pub fn movi(&mut self, dst: I, src: I) {
+        self.code.push(Instr::MovI(dst.0, src.0));
+    }
+
+    pub fn setf(&mut self, dst: F, v: f32) {
+        self.code.push(Instr::ConstF(dst.0, v));
+    }
+
+    pub fn seti(&mut self, dst: I, v: i64) {
+        self.code.push(Instr::ConstI(dst.0, v));
+    }
+
+    // ---- arithmetic -------------------------------------------------------
+
+    fn binf(&mut self, op: FOp, a: F, b: F) -> F {
+        let d = self.f();
+        self.code.push(Instr::BinF(op, d.0, a.0, b.0));
+        d
+    }
+
+    pub fn fadd(&mut self, a: F, b: F) -> F {
+        self.binf(FOp::Add, a, b)
+    }
+    pub fn fsub(&mut self, a: F, b: F) -> F {
+        self.binf(FOp::Sub, a, b)
+    }
+    pub fn fmul(&mut self, a: F, b: F) -> F {
+        self.binf(FOp::Mul, a, b)
+    }
+    pub fn fdiv(&mut self, a: F, b: F) -> F {
+        self.binf(FOp::Div, a, b)
+    }
+    pub fn fmin(&mut self, a: F, b: F) -> F {
+        self.binf(FOp::Min, a, b)
+    }
+    pub fn fmax(&mut self, a: F, b: F) -> F {
+        self.binf(FOp::Max, a, b)
+    }
+
+    /// In-place accumulate: dst = dst + a.
+    pub fn fadd_to(&mut self, dst: F, a: F) {
+        self.code.push(Instr::BinF(FOp::Add, dst.0, dst.0, a.0));
+    }
+
+    pub fn fmax_to(&mut self, dst: F, a: F) {
+        self.code.push(Instr::BinF(FOp::Max, dst.0, dst.0, a.0));
+    }
+
+    fn bini(&mut self, op: IOp, a: I, b: I) -> I {
+        let d = self.i();
+        self.code.push(Instr::BinI(op, d.0, a.0, b.0));
+        d
+    }
+
+    pub fn iadd(&mut self, a: I, b: I) -> I {
+        self.bini(IOp::Add, a, b)
+    }
+    pub fn isub(&mut self, a: I, b: I) -> I {
+        self.bini(IOp::Sub, a, b)
+    }
+    pub fn imul(&mut self, a: I, b: I) -> I {
+        self.bini(IOp::Mul, a, b)
+    }
+    pub fn idiv(&mut self, a: I, b: I) -> I {
+        self.bini(IOp::Div, a, b)
+    }
+    pub fn irem(&mut self, a: I, b: I) -> I {
+        self.bini(IOp::Rem, a, b)
+    }
+
+    /// In-place integer add (loop counters).
+    pub fn iadd_to(&mut self, dst: I, a: I) {
+        self.code.push(Instr::BinI(IOp::Add, dst.0, dst.0, a.0));
+    }
+
+    fn unf(&mut self, op: UnFOp, a: F) -> F {
+        let d = self.f();
+        self.code.push(Instr::UnF(op, d.0, a.0));
+        d
+    }
+
+    pub fn fneg(&mut self, a: F) -> F {
+        self.unf(UnFOp::Neg, a)
+    }
+    pub fn fabs(&mut self, a: F) -> F {
+        self.unf(UnFOp::Abs, a)
+    }
+    pub fn fsqrt(&mut self, a: F) -> F {
+        self.unf(UnFOp::Sqrt, a)
+    }
+    pub fn fsin(&mut self, a: F) -> F {
+        self.unf(UnFOp::Sin, a)
+    }
+    pub fn fcos(&mut self, a: F) -> F {
+        self.unf(UnFOp::Cos, a)
+    }
+    pub fn ffloor(&mut self, a: F) -> F {
+        self.unf(UnFOp::Floor, a)
+    }
+
+    // ---- compare / select / convert ---------------------------------------
+
+    pub fn cmpf(&mut self, op: CmpOp, a: F, b: F) -> I {
+        let d = self.i();
+        self.code.push(Instr::CmpF(op, d.0, a.0, b.0));
+        d
+    }
+
+    pub fn cmpi(&mut self, op: CmpOp, a: I, b: I) -> I {
+        let d = self.i();
+        self.code.push(Instr::CmpI(op, d.0, a.0, b.0));
+        d
+    }
+
+    pub fn self_f(&mut self, pred: I, a: F, b: F) -> F {
+        let d = self.f();
+        self.code.push(Instr::SelF(d.0, pred.0, a.0, b.0));
+        d
+    }
+
+    pub fn cvt_f2i(&mut self, a: F) -> I {
+        let d = self.i();
+        self.code.push(Instr::CvtFI(d.0, a.0));
+        d
+    }
+
+    pub fn cvt_i2f(&mut self, a: I) -> F {
+        let d = self.f();
+        self.code.push(Instr::CvtIF(d.0, a.0));
+        d
+    }
+
+    // ---- special registers --------------------------------------------------
+
+    fn special(&mut self, s: Special) -> I {
+        let d = self.i();
+        self.code.push(Instr::Spec(d.0, s));
+        d
+    }
+
+    pub fn tid_x(&mut self) -> I {
+        self.special(Special::ThreadIdX)
+    }
+    pub fn tid_y(&mut self) -> I {
+        self.special(Special::ThreadIdY)
+    }
+    pub fn ctaid_x(&mut self) -> I {
+        self.special(Special::BlockIdX)
+    }
+    pub fn ctaid_y(&mut self) -> I {
+        self.special(Special::BlockIdY)
+    }
+    pub fn ntid_x(&mut self) -> I {
+        self.special(Special::BlockDimX)
+    }
+    pub fn ntid_y(&mut self) -> I {
+        self.special(Special::BlockDimY)
+    }
+    pub fn nctaid_x(&mut self) -> I {
+        self.special(Special::GridDimX)
+    }
+    pub fn nctaid_y(&mut self) -> I {
+        self.special(Special::GridDimY)
+    }
+
+    // ---- memory ---------------------------------------------------------------
+
+    pub fn ldg(&mut self, param: u8, idx: I) -> F {
+        let d = self.f();
+        self.code.push(Instr::LdG { dst: d.0, param, idx: idx.0 });
+        d
+    }
+
+    pub fn stg(&mut self, param: u8, idx: I, src: F) {
+        self.code.push(Instr::StG { param, idx: idx.0, src: src.0 });
+    }
+
+    pub fn lds(&mut self, idx: I) -> F {
+        let d = self.f();
+        self.code.push(Instr::LdS { dst: d.0, idx: idx.0 });
+        d
+    }
+
+    pub fn sts(&mut self, idx: I, src: F) {
+        self.code.push(Instr::StS { idx: idx.0, src: src.0 });
+    }
+
+    pub fn ld_param_f(&mut self, param: u8) -> F {
+        let d = self.f();
+        self.code.push(Instr::LdParamF(d.0, param));
+        d
+    }
+
+    pub fn ld_param_i(&mut self, param: u8) -> I {
+        let d = self.i();
+        self.code.push(Instr::LdParamI(d.0, param));
+        d
+    }
+
+    // ---- control flow ------------------------------------------------------------
+
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind a label to the *next* emitted instruction.
+    pub fn bind(&mut self, l: Label) {
+        self.labels[l.0] = Some(self.code.len() as Pc);
+    }
+
+    pub fn bar(&mut self) {
+        self.code.push(Instr::Bar);
+    }
+
+    pub fn bra(&mut self, l: Label) {
+        self.patches.push((self.code.len(), l));
+        self.code.push(Instr::Bra(0));
+    }
+
+    pub fn bra_if(&mut self, pred: I, l: Label) {
+        self.patches.push((self.code.len(), l));
+        self.code.push(Instr::BraIf(pred.0, 0));
+    }
+
+    pub fn bra_ifz(&mut self, pred: I, l: Label) {
+        self.patches.push((self.code.len(), l));
+        self.code.push(Instr::BraIfZ(pred.0, 0));
+    }
+
+    pub fn ret(&mut self) {
+        self.code.push(Instr::Ret);
+    }
+
+    // ---- finish ----------------------------------------------------------------------
+
+    /// Resolve labels and validate — errors mirror a PTX JIT rejection.
+    pub fn build(mut self) -> Result<Kernel> {
+        for (at, label) in self.patches.drain(..) {
+            let target = self.labels[label.0].ok_or_else(|| Error::VtxValidation {
+                kernel: self.name.clone(),
+                reason: format!("label {label:?} used but never bound"),
+            })?;
+            match &mut self.code[at] {
+                Instr::Bra(t) | Instr::BraIf(_, t) | Instr::BraIfZ(_, t) => *t = target,
+                other => {
+                    return Err(Error::VtxValidation {
+                        kernel: self.name.clone(),
+                        reason: format!("patch site {at} is not a branch: {other:?}"),
+                    })
+                }
+            }
+        }
+        let kernel = Kernel {
+            name: self.name.clone(),
+            params: self.params,
+            fregs: self.nf.max(1),
+            iregs: self.ni.max(1),
+            shared_f32: self.shared_f32,
+            code: self.code,
+        };
+        kernel.validate().map_err(|reason| Error::VtxValidation {
+            kernel: self.name,
+            reason,
+        })?;
+        Ok(kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_a_simple_loop_kernel() {
+        // for (i = 0; i < 4; i++) acc += 1.0; out[tid] = acc
+        let mut b = KernelBuilder::new("loop4");
+        let out = b.ptr_param();
+        let acc = b.constf(0.0);
+        let one = b.constf(1.0);
+        let i = b.consti(0);
+        let four = b.consti(4);
+        let inc = b.consti(1);
+        let top = b.label();
+        b.bind(top);
+        b.fadd_to(acc, one);
+        b.iadd_to(i, inc);
+        let more = b.cmpi(CmpOp::Lt, i, four);
+        b.bra_if(more, top);
+        let tid = b.tid_x();
+        b.stg(out, tid, acc);
+        b.ret();
+        let k = b.build().unwrap();
+        assert_eq!(k.params.len(), 1);
+        assert!(k.fregs >= 2 && k.iregs >= 4);
+    }
+
+    #[test]
+    fn unbound_label_rejected() {
+        let mut b = KernelBuilder::new("bad");
+        let l = b.label();
+        b.bra(l);
+        // never bound
+        let err = b.build().unwrap_err();
+        assert!(err.to_string().contains("never bound"), "{err}");
+    }
+
+    #[test]
+    fn forward_and_backward_branches_resolve() {
+        let mut b = KernelBuilder::new("fwd");
+        let skip = b.label();
+        let c = b.consti(1);
+        b.bra_if(c, skip);
+        b.constf(99.0); // skipped
+        b.bind(skip);
+        b.ret();
+        let k = b.build().unwrap();
+        match k.code[1] {
+            Instr::BraIf(_, t) => assert_eq!(t, 3),
+            ref other => panic!("expected BraIf, got {other:?}"),
+        }
+    }
+}

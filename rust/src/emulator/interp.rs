@@ -1,0 +1,579 @@
+//! The VTX interpreter: executes a kernel over a grid of thread blocks,
+//! with shared memory, barriers and full trap checking — the GPU Ocelot
+//! analog of this stack (paper §5: "developers can now use the GPU
+//! support without having any physical NVIDIA hardware").
+//!
+//! Execution model: blocks are independent (executed sequentially, which
+//! is a legal CUDA schedule); within a block, threads run co-operatively —
+//! each thread executes until it hits a barrier or exits, then the next
+//! thread runs. A barrier releases when every live thread has arrived;
+//! divergent barriers (some threads exited while others wait) trap, as on
+//! real hardware.
+
+use crate::emulator::isa::{CmpOp, FOp, IOp, Instr, Kernel, Special, UnFOp};
+use crate::error::{Error, Result};
+
+/// Per-launch resource limits.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Max instructions executed per thread (infinite-loop trap).
+    pub steps_per_thread: u64,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { steps_per_thread: 64_000_000 }
+    }
+}
+
+/// Scalar parameter values bound at launch (pointer params are bound via
+/// `buffers` instead).
+#[derive(Clone, Copy, Debug)]
+pub enum ScalarArg {
+    F32(f32),
+    I32(i32),
+}
+
+/// A grid launch of one kernel.
+pub struct Launch<'a> {
+    pub kernel: &'a Kernel,
+    pub grid: (u32, u32),
+    pub block: (u32, u32),
+    /// One f32 slice per `PtrF32` parameter, in parameter order.
+    pub buffers: Vec<&'a mut [f32]>,
+    /// One entry per scalar parameter, in parameter order.
+    pub scalars: Vec<ScalarArg>,
+    pub limits: Limits,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum ThreadState {
+    Running,
+    AtBarrier,
+    Done,
+}
+
+struct Thread {
+    pc: usize,
+    f: Vec<f32>,
+    i: Vec<i64>,
+    state: ThreadState,
+    steps: u64,
+}
+
+/// Mapping from parameter index to its binding slot.
+enum Binding {
+    Ptr(usize),
+    Scalar(ScalarArg),
+}
+
+pub fn execute(launch: Launch<'_>) -> Result<()> {
+    let k = launch.kernel;
+    // Bind parameters.
+    let mut bindings = Vec::with_capacity(k.params.len());
+    let mut nptr = 0usize;
+    let mut nscalar = 0usize;
+    for p in &k.params {
+        match p {
+            crate::emulator::isa::ParamKind::PtrF32 => {
+                if nptr >= launch.buffers.len() {
+                    return Err(Error::InvalidLaunch(format!(
+                        "kernel `{}` needs {} buffers, got {}",
+                        k.name,
+                        k.ptr_param_count(),
+                        launch.buffers.len()
+                    )));
+                }
+                bindings.push(Binding::Ptr(nptr));
+                nptr += 1;
+            }
+            _ => {
+                let s = launch.scalars.get(nscalar).copied().ok_or_else(|| {
+                    Error::InvalidLaunch(format!(
+                        "kernel `{}` missing scalar argument {nscalar}",
+                        k.name
+                    ))
+                })?;
+                bindings.push(Binding::Scalar(s));
+                nscalar += 1;
+            }
+        }
+    }
+    if nptr != launch.buffers.len() {
+        return Err(Error::InvalidLaunch(format!(
+            "kernel `{}` takes {nptr} buffers, got {}",
+            k.name,
+            launch.buffers.len()
+        )));
+    }
+
+    let mut buffers = launch.buffers;
+    let (gx, gy) = launch.grid;
+    let (bx, by) = launch.block;
+    let threads_per_block = (bx * by) as usize;
+
+    let trap = |block: (u32, u32), thread: (u32, u32), reason: String| Error::VtxTrap {
+        kernel: k.name.clone(),
+        block: (block.0, block.1, 0),
+        thread: (thread.0, thread.1, 0),
+        reason,
+    };
+
+    for by_i in 0..gy {
+        for bx_i in 0..gx {
+            let block_id = (bx_i, by_i);
+            let mut shared = vec![0f32; k.shared_f32];
+            let mut threads: Vec<Thread> = (0..threads_per_block)
+                .map(|_| Thread {
+                    pc: 0,
+                    f: vec![0f32; k.fregs as usize],
+                    i: vec![0i64; k.iregs as usize],
+                    state: ThreadState::Running,
+                    steps: 0,
+                })
+                .collect();
+
+            loop {
+                let mut progressed = false;
+                for t_lin in 0..threads_per_block {
+                    if threads[t_lin].state != ThreadState::Running {
+                        continue;
+                    }
+                    progressed = true;
+                    let tx = (t_lin as u32) % bx;
+                    let ty = (t_lin as u32) / bx;
+                    let th = &mut threads[t_lin];
+                    // Run this thread until barrier/exit/trap.
+                    loop {
+                        if th.steps >= launch.limits.steps_per_thread {
+                            return Err(trap(
+                                block_id,
+                                (tx, ty),
+                                format!(
+                                    "step budget exhausted ({} instructions)",
+                                    launch.limits.steps_per_thread
+                                ),
+                            ));
+                        }
+                        th.steps += 1;
+                        let ins = k.code[th.pc];
+                        th.pc += 1;
+                        match ins {
+                            Instr::ConstF(d, v) => th.f[d as usize] = v,
+                            Instr::ConstI(d, v) => th.i[d as usize] = v,
+                            Instr::MovF(d, s) => th.f[d as usize] = th.f[s as usize],
+                            Instr::MovI(d, s) => th.i[d as usize] = th.i[s as usize],
+                            Instr::BinF(op, d, a, b) => {
+                                let (x, y) = (th.f[a as usize], th.f[b as usize]);
+                                th.f[d as usize] = match op {
+                                    FOp::Add => x + y,
+                                    FOp::Sub => x - y,
+                                    FOp::Mul => x * y,
+                                    FOp::Div => x / y,
+                                    FOp::Min => x.min(y),
+                                    FOp::Max => x.max(y),
+                                };
+                            }
+                            Instr::BinI(op, d, a, b) => {
+                                let (x, y) = (th.i[a as usize], th.i[b as usize]);
+                                th.i[d as usize] = match op {
+                                    IOp::Add => x.wrapping_add(y),
+                                    IOp::Sub => x.wrapping_sub(y),
+                                    IOp::Mul => x.wrapping_mul(y),
+                                    IOp::Div => {
+                                        if y == 0 {
+                                            return Err(trap(
+                                                block_id,
+                                                (tx, ty),
+                                                "integer division by zero".into(),
+                                            ));
+                                        }
+                                        x / y
+                                    }
+                                    IOp::Rem => {
+                                        if y == 0 {
+                                            return Err(trap(
+                                                block_id,
+                                                (tx, ty),
+                                                "integer remainder by zero".into(),
+                                            ));
+                                        }
+                                        x % y
+                                    }
+                                };
+                            }
+                            Instr::UnF(op, d, a) => {
+                                let x = th.f[a as usize];
+                                th.f[d as usize] = match op {
+                                    UnFOp::Neg => -x,
+                                    UnFOp::Abs => x.abs(),
+                                    UnFOp::Sqrt => x.sqrt(),
+                                    UnFOp::Sin => x.sin(),
+                                    UnFOp::Cos => x.cos(),
+                                    UnFOp::Floor => x.floor(),
+                                };
+                            }
+                            Instr::CmpF(op, d, a, b) => {
+                                let (x, y) = (th.f[a as usize], th.f[b as usize]);
+                                th.i[d as usize] = cmpf(op, x, y) as i64;
+                            }
+                            Instr::CmpI(op, d, a, b) => {
+                                let (x, y) = (th.i[a as usize], th.i[b as usize]);
+                                th.i[d as usize] = cmpi(op, x, y) as i64;
+                            }
+                            Instr::SelF(d, p, a, b) => {
+                                th.f[d as usize] = if th.i[p as usize] != 0 {
+                                    th.f[a as usize]
+                                } else {
+                                    th.f[b as usize]
+                                };
+                            }
+                            Instr::CvtFI(d, s) => th.i[d as usize] = th.f[s as usize] as i64,
+                            Instr::CvtIF(d, s) => th.f[d as usize] = th.i[s as usize] as f32,
+                            Instr::Spec(d, s) => {
+                                th.i[d as usize] = match s {
+                                    Special::ThreadIdX => tx as i64,
+                                    Special::ThreadIdY => ty as i64,
+                                    Special::BlockIdX => bx_i as i64,
+                                    Special::BlockIdY => by_i as i64,
+                                    Special::BlockDimX => bx as i64,
+                                    Special::BlockDimY => by as i64,
+                                    Special::GridDimX => gx as i64,
+                                    Special::GridDimY => gy as i64,
+                                };
+                            }
+                            Instr::LdG { dst, param, idx } => {
+                                let slot = match &bindings[param as usize] {
+                                    Binding::Ptr(s) => *s,
+                                    _ => unreachable!("validated"),
+                                };
+                                let i = th.i[idx as usize];
+                                let buf = &buffers[slot];
+                                if i < 0 || i as usize >= buf.len() {
+                                    return Err(trap(
+                                        block_id,
+                                        (tx, ty),
+                                        format!(
+                                            "global load OOB: index {i} in buffer of {} elements (param {param})",
+                                            buf.len()
+                                        ),
+                                    ));
+                                }
+                                th.f[dst as usize] = buf[i as usize];
+                            }
+                            Instr::StG { param, idx, src } => {
+                                let slot = match &bindings[param as usize] {
+                                    Binding::Ptr(s) => *s,
+                                    _ => unreachable!("validated"),
+                                };
+                                let i = th.i[idx as usize];
+                                let v = th.f[src as usize];
+                                let buf = &mut buffers[slot];
+                                if i < 0 || i as usize >= buf.len() {
+                                    return Err(trap(
+                                        block_id,
+                                        (tx, ty),
+                                        format!(
+                                            "global store OOB: index {i} in buffer of {} elements (param {param})",
+                                            buf.len()
+                                        ),
+                                    ));
+                                }
+                                buf[i as usize] = v;
+                            }
+                            Instr::LdS { dst, idx } => {
+                                let i = th.i[idx as usize];
+                                if i < 0 || i as usize >= shared.len() {
+                                    return Err(trap(
+                                        block_id,
+                                        (tx, ty),
+                                        format!(
+                                            "shared load OOB: index {i} of {}",
+                                            shared.len()
+                                        ),
+                                    ));
+                                }
+                                th.f[dst as usize] = shared[i as usize];
+                            }
+                            Instr::StS { idx, src } => {
+                                let i = th.i[idx as usize];
+                                if i < 0 || i as usize >= shared.len() {
+                                    return Err(trap(
+                                        block_id,
+                                        (tx, ty),
+                                        format!(
+                                            "shared store OOB: index {i} of {}",
+                                            shared.len()
+                                        ),
+                                    ));
+                                }
+                                shared[i as usize] = th.f[src as usize];
+                            }
+                            Instr::LdParamF(d, p) => {
+                                th.f[d as usize] = match &bindings[p as usize] {
+                                    Binding::Scalar(ScalarArg::F32(v)) => *v,
+                                    Binding::Scalar(ScalarArg::I32(v)) => *v as f32,
+                                    _ => unreachable!("validated"),
+                                };
+                            }
+                            Instr::LdParamI(d, p) => {
+                                th.i[d as usize] = match &bindings[p as usize] {
+                                    Binding::Scalar(ScalarArg::I32(v)) => *v as i64,
+                                    Binding::Scalar(ScalarArg::F32(v)) => *v as i64,
+                                    _ => unreachable!("validated"),
+                                };
+                            }
+                            Instr::Bar => {
+                                th.state = ThreadState::AtBarrier;
+                                break;
+                            }
+                            Instr::Bra(t) => th.pc = t as usize,
+                            Instr::BraIf(p, t) => {
+                                if th.i[p as usize] != 0 {
+                                    th.pc = t as usize;
+                                }
+                            }
+                            Instr::BraIfZ(p, t) => {
+                                if th.i[p as usize] == 0 {
+                                    th.pc = t as usize;
+                                }
+                            }
+                            Instr::Ret => {
+                                th.state = ThreadState::Done;
+                                break;
+                            }
+                        }
+                    }
+                }
+
+                // Barrier resolution.
+                let any_running = threads.iter().any(|t| t.state == ThreadState::Running);
+                if any_running {
+                    continue;
+                }
+                let at_barrier = threads
+                    .iter()
+                    .filter(|t| t.state == ThreadState::AtBarrier)
+                    .count();
+                if at_barrier == 0 {
+                    break; // all done
+                }
+                let done = threads.iter().filter(|t| t.state == ThreadState::Done).count();
+                if done > 0 {
+                    return Err(trap(
+                        block_id,
+                        (0, 0),
+                        format!(
+                            "barrier divergence: {at_barrier} threads waiting, {done} exited"
+                        ),
+                    ));
+                }
+                for t in &mut threads {
+                    t.state = ThreadState::Running;
+                }
+                if !progressed {
+                    return Err(trap(block_id, (0, 0), "scheduler made no progress".into()));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmpf(op: CmpOp, x: f32, y: f32) -> bool {
+    match op {
+        CmpOp::Lt => x < y,
+        CmpOp::Le => x <= y,
+        CmpOp::Gt => x > y,
+        CmpOp::Ge => x >= y,
+        CmpOp::Eq => x == y,
+        CmpOp::Ne => x != y,
+    }
+}
+
+fn cmpi(op: CmpOp, x: i64, y: i64) -> bool {
+    match op {
+        CmpOp::Lt => x < y,
+        CmpOp::Le => x <= y,
+        CmpOp::Gt => x > y,
+        CmpOp::Ge => x >= y,
+        CmpOp::Eq => x == y,
+        CmpOp::Ne => x != y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulator::builder::KernelBuilder;
+    use crate::emulator::isa::CmpOp;
+
+    fn run(k: &Kernel, grid: (u32, u32), block: (u32, u32), bufs: Vec<&mut [f32]>) -> Result<()> {
+        execute(Launch {
+            kernel: k,
+            grid,
+            block,
+            buffers: bufs,
+            scalars: vec![],
+            limits: Limits::default(),
+        })
+    }
+
+    /// out[global_tid] = a[global_tid] + b[global_tid]
+    fn vadd_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("vadd");
+        let pa = b.ptr_param();
+        let pb = b.ptr_param();
+        let pc = b.ptr_param();
+        let tid = b.tid_x();
+        let bid = b.ctaid_x();
+        let bdim = b.ntid_x();
+        let base = b.imul(bid, bdim);
+        let gid = b.iadd(base, tid);
+        let x = b.ldg(pa, gid);
+        let y = b.ldg(pb, gid);
+        let s = b.fadd(x, y);
+        b.stg(pc, gid, s);
+        b.ret();
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn vadd_runs() {
+        let k = vadd_kernel();
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut bb = vec![10.0f32, 20.0, 30.0, 40.0];
+        let mut c = vec![0.0f32; 4];
+        run(&k, (2, 1), (2, 1), vec![&mut a, &mut bb, &mut c]).unwrap();
+        assert_eq!(c, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn oob_load_traps() {
+        let k = vadd_kernel();
+        let mut a = vec![1.0f32; 2]; // too small for 4 threads
+        let mut bb = vec![1.0f32; 4];
+        let mut c = vec![0.0f32; 4];
+        let err = run(&k, (2, 1), (2, 1), vec![&mut a, &mut bb, &mut c]).unwrap_err();
+        assert!(matches!(err, Error::VtxTrap { .. }), "{err}");
+        assert!(err.to_string().contains("OOB"));
+    }
+
+    #[test]
+    fn shared_memory_tree_reduction() {
+        // Classic CUDA reduction: shared[tid] = in[tid]; stride halving
+        // with barriers; out[block] = shared[0].
+        let n = 8u32;
+        let mut b = KernelBuilder::new("reduce");
+        let pin = b.ptr_param();
+        let pout = b.ptr_param();
+        b.shared(n as usize);
+        let tid = b.tid_x();
+        let v = b.ldg(pin, tid);
+        b.sts(tid, v);
+        b.bar();
+        // stride loop: s = n/2; while s >= 1 { if tid < s shared[tid]+=shared[tid+s]; bar; s/=2 }
+        let s = b.consti((n / 2) as i64);
+        let one = b.consti(1);
+        let two = b.consti(2);
+        let zero = b.consti(0);
+        let top = b.label();
+        let skip = b.label();
+        let done = b.label();
+        b.bind(top);
+        let cont = b.cmpi(CmpOp::Ge, s, one);
+        b.bra_ifz(cont, done);
+        let active = b.cmpi(CmpOp::Lt, tid, s);
+        b.bra_ifz(active, skip);
+        let lhs = b.lds(tid);
+        let oidx = b.iadd(tid, s);
+        let rhs = b.lds(oidx);
+        let sum = b.fadd(lhs, rhs);
+        b.sts(tid, sum);
+        b.bind(skip);
+        b.bar();
+        let half = b.idiv(s, two);
+        b.movi(s, half);
+        b.bra(top);
+        b.bind(done);
+        let is0 = b.cmpi(CmpOp::Eq, tid, zero);
+        let out_end = b.label();
+        b.bra_ifz(is0, out_end);
+        let total = b.lds(tid);
+        let bid = b.ctaid_x();
+        b.stg(pout, bid, total);
+        b.bind(out_end);
+        b.ret();
+        let k = b.build().unwrap();
+
+        let mut input: Vec<f32> = (1..=n).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 1];
+        run(&k, (1, 1), (n, 1), vec![&mut input, &mut out]).unwrap();
+        assert_eq!(out[0], 36.0); // 1+..+8
+    }
+
+    #[test]
+    fn infinite_loop_hits_step_budget() {
+        let mut b = KernelBuilder::new("spin");
+        let top = b.label();
+        b.bind(top);
+        b.bra(top);
+        let k = b.build().unwrap();
+        let err = execute(Launch {
+            kernel: &k,
+            grid: (1, 1),
+            block: (1, 1),
+            buffers: vec![],
+            scalars: vec![],
+            limits: Limits { steps_per_thread: 1000 },
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("step budget"), "{err}");
+    }
+
+    #[test]
+    fn barrier_divergence_traps() {
+        // threads with tid==0 exit before the barrier -> divergence
+        let mut b = KernelBuilder::new("diverge");
+        let tid = b.tid_x();
+        let zero = b.consti(0);
+        let is0 = b.cmpi(CmpOp::Eq, tid, zero);
+        let out = b.label();
+        b.bra_if(is0, out);
+        b.bar();
+        b.bind(out);
+        b.ret();
+        let k = b.build().unwrap();
+        let err = run(&k, (1, 1), (2, 1), vec![]).unwrap_err();
+        assert!(err.to_string().contains("barrier divergence"), "{err}");
+    }
+
+    #[test]
+    fn scalar_params_bound() {
+        // out[tid] = scale * tid + offset
+        let mut b = KernelBuilder::new("affine");
+        let pout = b.ptr_param();
+        let pscale = b.f32_param();
+        let poff = b.f32_param();
+        let tid = b.tid_x();
+        let tf = b.cvt_i2f(tid);
+        let scale = b.ld_param_f(pscale);
+        let off = b.ld_param_f(poff);
+        let prod = b.fmul(scale, tf);
+        let v = b.fadd(prod, off);
+        b.stg(pout, tid, v);
+        b.ret();
+        let k = b.build().unwrap();
+        let mut out = vec![0.0f32; 4];
+        execute(Launch {
+            kernel: &k,
+            grid: (1, 1),
+            block: (4, 1),
+            buffers: vec![&mut out],
+            scalars: vec![ScalarArg::F32(2.0), ScalarArg::F32(1.0)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        assert_eq!(out, vec![1.0, 3.0, 5.0, 7.0]);
+    }
+}

@@ -1,0 +1,347 @@
+//! VTX: a tiny PTX-like **virtual ISA** with a grid/block/thread execution
+//! model — the code format the emulator backend interprets.
+//!
+//! The paper's framework emits PTX, a virtual ISA JIT-translated by the
+//! driver; its emulator path (GPU Ocelot) interprets PTX on the host.
+//! VTX plays the same role here: kernels are authored with the
+//! [`crate::emulator::builder::KernelBuilder`] DSL, validated at module
+//! load (the "JIT" step), and interpreted with full bounds/trap checking.
+//!
+//! Design points (deliberately PTX-like):
+//! * register machine with separate float (f32) and integer (i64) files;
+//! * special registers for thread/block indices and dimensions;
+//! * global memory accessed **only** through pointer parameters + element
+//!   index (the disjoint-address-space restriction made structural);
+//! * static shared memory per block, with `Bar` barriers;
+//! * structured traps: OOB access, barrier divergence, step-budget
+//!   exhaustion.
+
+/// Register index into the float or integer file (instruction decides).
+pub type Reg = u16;
+
+/// Branch target: index into the kernel's instruction vector (resolved by
+/// the builder from symbolic labels).
+pub type Pc = u32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnFOp {
+    Neg,
+    Abs,
+    Sqrt,
+    Sin,
+    Cos,
+    Floor,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Special (read-only) registers, the `%tid`/`%ctaid`/`%ntid` analogs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Special {
+    ThreadIdX,
+    ThreadIdY,
+    BlockIdX,
+    BlockIdY,
+    BlockDimX,
+    BlockDimY,
+    GridDimX,
+    GridDimY,
+}
+
+/// Kernel parameter kinds. Pointers are *opaque*: device buffers bound at
+/// launch, addressed by f32 element index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Device buffer of f32 elements.
+    PtrF32,
+    /// Scalar f32.
+    F32,
+    /// Scalar i32 (widened to i64 in the register file).
+    I32,
+}
+
+/// One VTX instruction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Instr {
+    /// fdst = imm
+    ConstF(Reg, f32),
+    /// idst = imm
+    ConstI(Reg, i64),
+    MovF(Reg, Reg),
+    MovI(Reg, Reg),
+    /// fdst = op(fa, fb)
+    BinF(FOp, Reg, Reg, Reg),
+    /// idst = op(ia, ib)
+    BinI(IOp, Reg, Reg, Reg),
+    /// fdst = op(fa)
+    UnF(UnFOp, Reg, Reg),
+    /// idst = cmp(fa, fb) as 0/1
+    CmpF(CmpOp, Reg, Reg, Reg),
+    /// idst = cmp(ia, ib) as 0/1
+    CmpI(CmpOp, Reg, Reg, Reg),
+    /// fdst = ipred != 0 ? fa : fb
+    SelF(Reg, Reg, Reg, Reg),
+    /// idst = trunc(fa)
+    CvtFI(Reg, Reg),
+    /// fdst = (f32) ia
+    CvtIF(Reg, Reg),
+    /// idst = special register
+    Spec(Reg, Special),
+    /// fdst = param[p][iidx]   (global load, bounds-checked)
+    LdG { dst: Reg, param: u8, idx: Reg },
+    /// param[p][iidx] = fsrc   (global store, bounds-checked)
+    StG { param: u8, idx: Reg, src: Reg },
+    /// fdst = shared[iidx]
+    LdS { dst: Reg, idx: Reg },
+    /// shared[iidx] = fsrc
+    StS { idx: Reg, src: Reg },
+    /// fdst = scalar param p (must be ParamKind::F32)
+    LdParamF(Reg, u8),
+    /// idst = scalar param p (must be ParamKind::I32)
+    LdParamI(Reg, u8),
+    /// Block-wide barrier.
+    Bar,
+    /// Unconditional branch.
+    Bra(Pc),
+    /// Branch if ipred != 0.
+    BraIf(Reg, Pc),
+    /// Branch if ipred == 0.
+    BraIfZ(Reg, Pc),
+    /// Thread exit.
+    Ret,
+}
+
+/// A VTX kernel: code + static resource declaration.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<ParamKind>,
+    /// Number of float registers per thread.
+    pub fregs: u16,
+    /// Number of integer registers per thread.
+    pub iregs: u16,
+    /// Static shared memory, in f32 elements per block.
+    pub shared_f32: usize,
+    pub code: Vec<Instr>,
+}
+
+impl Kernel {
+    /// Static validation — the module-load-time "JIT" check. Every
+    /// register index, param index, and branch target must be in range,
+    /// and the kernel must end in `Ret` on all paths (approximated: last
+    /// instruction must be `Ret` and every branch target valid).
+    pub fn validate(&self) -> Result<(), String> {
+        let nf = self.fregs as u32;
+        let ni = self.iregs as u32;
+        let np = self.params.len();
+        let len = self.code.len() as u32;
+        if self.code.is_empty() {
+            return Err("empty kernel body".into());
+        }
+        if !matches!(self.code.last(), Some(Instr::Ret) | Some(Instr::Bra(_))) {
+            return Err("kernel must end with Ret or Bra".into());
+        }
+        let chk_f = |r: Reg| -> Result<(), String> {
+            if (r as u32) < nf {
+                Ok(())
+            } else {
+                Err(format!("float register {r} out of range (fregs={nf})"))
+            }
+        };
+        let chk_i = |r: Reg| -> Result<(), String> {
+            if (r as u32) < ni {
+                Ok(())
+            } else {
+                Err(format!("int register {r} out of range (iregs={ni})"))
+            }
+        };
+        let chk_p = |p: u8, want: ParamKind| -> Result<(), String> {
+            match self.params.get(p as usize) {
+                None => Err(format!("param {p} out of range ({np} params)")),
+                Some(k) if *k == want => Ok(()),
+                Some(k) => Err(format!("param {p} is {k:?}, instruction needs {want:?}")),
+            }
+        };
+        let chk_pc = |t: Pc| -> Result<(), String> {
+            if t < len {
+                Ok(())
+            } else {
+                Err(format!("branch target {t} out of range ({len} instructions)"))
+            }
+        };
+        for (pc, ins) in self.code.iter().enumerate() {
+            let r: Result<(), String> = (|| {
+                match *ins {
+                    Instr::ConstF(d, _) => chk_f(d),
+                    Instr::ConstI(d, _) => chk_i(d),
+                    Instr::MovF(d, s) => chk_f(d).and(chk_f(s)),
+                    Instr::MovI(d, s) => chk_i(d).and(chk_i(s)),
+                    Instr::BinF(_, d, a, b) => chk_f(d).and(chk_f(a)).and(chk_f(b)),
+                    Instr::BinI(_, d, a, b) => chk_i(d).and(chk_i(a)).and(chk_i(b)),
+                    Instr::UnF(_, d, a) => chk_f(d).and(chk_f(a)),
+                    Instr::CmpF(_, d, a, b) => chk_i(d).and(chk_f(a)).and(chk_f(b)),
+                    Instr::CmpI(_, d, a, b) => chk_i(d).and(chk_i(a)).and(chk_i(b)),
+                    Instr::SelF(d, p, a, b) => chk_f(d).and(chk_i(p)).and(chk_f(a)).and(chk_f(b)),
+                    Instr::CvtFI(d, s) => chk_i(d).and(chk_f(s)),
+                    Instr::CvtIF(d, s) => chk_f(d).and(chk_i(s)),
+                    Instr::Spec(d, _) => chk_i(d),
+                    Instr::LdG { dst, param, idx } => {
+                        chk_f(dst).and(chk_p(param, ParamKind::PtrF32)).and(chk_i(idx))
+                    }
+                    Instr::StG { param, idx, src } => {
+                        chk_p(param, ParamKind::PtrF32).and(chk_i(idx)).and(chk_f(src))
+                    }
+                    Instr::LdS { dst, idx } => chk_f(dst).and(chk_i(idx)),
+                    Instr::StS { idx, src } => chk_i(idx).and(chk_f(src)),
+                    Instr::LdParamF(d, p) => chk_f(d).and(chk_p(p, ParamKind::F32)),
+                    Instr::LdParamI(d, p) => chk_i(d).and(chk_p(p, ParamKind::I32)),
+                    Instr::Bar | Instr::Ret => Ok(()),
+                    Instr::Bra(t) => chk_pc(t),
+                    Instr::BraIf(p, t) | Instr::BraIfZ(p, t) => chk_i(p).and(chk_pc(t)),
+                }
+            })();
+            r.map_err(|e| format!("instruction {pc}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Number of pointer parameters (device buffers bound at launch).
+    pub fn ptr_param_count(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|k| matches!(k, ParamKind::PtrF32))
+            .count()
+    }
+
+    /// Dataflow analysis of pointer-parameter usage: which buffers the
+    /// kernel only reads, only writes, or both. This powers the automatic
+    /// argument-usage detection the paper lists as future work (§9) —
+    /// the `CuIn`/`CuOut` wrappers become optional on the emulator path
+    /// because the transfer plan can be derived from the kernel body.
+    ///
+    /// Returns one entry per *pointer* parameter, in declaration order.
+    pub fn infer_param_usage(&self) -> Vec<ParamUsage> {
+        let mut usage = vec![(false, false); self.params.len()]; // (read, written)
+        for ins in &self.code {
+            match *ins {
+                Instr::LdG { param, .. } => usage[param as usize].0 = true,
+                Instr::StG { param, .. } => usage[param as usize].1 = true,
+                _ => {}
+            }
+        }
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| matches!(k, ParamKind::PtrF32))
+            .map(|(i, _)| match usage[i] {
+                (true, true) => ParamUsage::ReadWrite,
+                (true, false) => ParamUsage::ReadOnly,
+                (false, true) => ParamUsage::WriteOnly,
+                (false, false) => ParamUsage::Unused,
+            })
+            .collect()
+    }
+}
+
+/// Result of [`Kernel::infer_param_usage`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamUsage {
+    /// Only `LdG` — an input; upload, never download (`CuIn`).
+    ReadOnly,
+    /// Only `StG` — an output container (`CuOut`).
+    WriteOnly,
+    /// Both — `CuInOut`.
+    ReadWrite,
+    /// Never touched (dead parameter).
+    Unused,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> Kernel {
+        Kernel {
+            name: "nop".into(),
+            params: vec![],
+            fregs: 1,
+            iregs: 1,
+            shared_f32: 0,
+            code: vec![Instr::Ret],
+        }
+    }
+
+    #[test]
+    fn minimal_valid() {
+        assert!(minimal().validate().is_ok());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let mut k = minimal();
+        k.code.clear();
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn register_bounds_checked() {
+        let mut k = minimal();
+        k.code = vec![Instr::ConstF(5, 1.0), Instr::Ret];
+        let err = k.validate().unwrap_err();
+        assert!(err.contains("float register 5"), "{err}");
+    }
+
+    #[test]
+    fn param_kind_checked() {
+        let mut k = minimal();
+        k.params = vec![ParamKind::F32];
+        k.code = vec![
+            Instr::ConstI(0, 0),
+            Instr::LdG { dst: 0, param: 0, idx: 0 },
+            Instr::Ret,
+        ];
+        let err = k.validate().unwrap_err();
+        assert!(err.contains("PtrF32"), "{err}");
+    }
+
+    #[test]
+    fn branch_targets_checked() {
+        let mut k = minimal();
+        k.code = vec![Instr::Bra(7)];
+        assert!(k.validate().unwrap_err().contains("branch target"));
+    }
+
+    #[test]
+    fn must_end_in_ret_or_bra() {
+        let mut k = minimal();
+        k.code = vec![Instr::ConstF(0, 1.0)];
+        assert!(k.validate().unwrap_err().contains("end with Ret"));
+    }
+}

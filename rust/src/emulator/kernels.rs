@@ -1,0 +1,683 @@
+//! VTX kernel library: the trace-transform kernels authored in the
+//! builder DSL — the emulator-path counterparts of the Pallas kernels in
+//! `python/compile/kernels/`.
+//!
+//! These mirror the CUDA reference structure: one thread per output
+//! element, one block per orientation/column, shared-memory tree
+//! reductions with barriers where the CUDA version used them.
+
+use crate::emulator::builder::{KernelBuilder, F, I};
+use crate::emulator::isa::{CmpOp, Kernel};
+use crate::error::Result;
+
+/// Supported T-functionals, mirroring `python/compile/kernels/tfunctionals.py`.
+pub const T_FUNCTIONALS: [&str; 4] = ["radon", "t1", "t2", "tmax"];
+
+/// `vadd(a, b, c, n)`: c[i] = a[i] + b[i] with a tail guard — the paper's
+/// Listing 1 translated to VTX.
+pub fn vadd() -> Result<Kernel> {
+    let mut b = KernelBuilder::new("vadd");
+    let pa = b.ptr_param();
+    let pb = b.ptr_param();
+    let pc = b.ptr_param();
+    let pn = b.i32_param();
+    let tid = b.tid_x();
+    let bid = b.ctaid_x();
+    let bdim = b.ntid_x();
+    let base = b.imul(bid, bdim);
+    let gid = b.iadd(base, tid);
+    let n = b.ld_param_i(pn);
+    let in_range = b.cmpi(CmpOp::Lt, gid, n);
+    let out = b.label();
+    b.bra_ifz(in_range, out);
+    let x = b.ldg(pa, gid);
+    let y = b.ldg(pb, gid);
+    let s = b.fadd(x, y);
+    b.stg(pc, gid, s);
+    b.bind(out);
+    b.ret();
+    b.build()
+}
+
+/// Emit a zero-filled bilinear sample of `img` (size `s_i` x `s_i`, row
+/// major) at float coordinates (`sy`, `sx`). Returns the sample register.
+fn emit_bilinear(
+    b: &mut KernelBuilder,
+    pimg: u8,
+    s_i: I,
+    sy: F,
+    sx: F,
+) -> F {
+    let zero_i = b.consti(0);
+    let one_i = b.consti(1);
+
+    let y0f = b.ffloor(sy);
+    let x0f = b.ffloor(sx);
+    let fy = b.fsub(sy, y0f);
+    let fx = b.fsub(sx, x0f);
+    let y0 = b.cvt_f2i(y0f);
+    let x0 = b.cvt_f2i(x0f);
+    let y1 = b.iadd(y0, one_i);
+    let x1 = b.iadd(x0, one_i);
+
+    // gather(yi, xi): returns 0 outside [0, s)².
+    let gather = |b: &mut KernelBuilder, yi: I, xi: I| -> F {
+        let out = b.constf(0.0);
+        let oky0 = b.cmpi(CmpOp::Ge, yi, zero_i);
+        let oky1 = b.cmpi(CmpOp::Lt, yi, s_i);
+        let okx0 = b.cmpi(CmpOp::Ge, xi, zero_i);
+        let okx1 = b.cmpi(CmpOp::Lt, xi, s_i);
+        let a = b.imul(oky0, oky1);
+        let c = b.imul(okx0, okx1);
+        let ok = b.imul(a, c);
+        let skip = b.label();
+        b.bra_ifz(ok, skip);
+        let row = b.imul(yi, s_i);
+        let idx = b.iadd(row, xi);
+        let v = b.ldg(pimg, idx);
+        b.movf(out, v);
+        b.bind(skip);
+        out
+    };
+
+    let v00 = gather(b, y0, x0);
+    let v01 = gather(b, y0, x1);
+    let v10 = gather(b, y1, x0);
+    let v11 = gather(b, y1, x1);
+
+    let one_f = b.constf(1.0);
+    let ify = b.fsub(one_f, fy);
+    let ifx = b.fsub(one_f, fx);
+    let w00 = b.fmul(ify, ifx);
+    let w01 = b.fmul(ify, fx);
+    let w10 = b.fmul(fy, ifx);
+    let w11 = b.fmul(fy, fx);
+    let t00 = b.fmul(v00, w00);
+    let t01 = b.fmul(v01, w01);
+    let t10 = b.fmul(v10, w10);
+    let t11 = b.fmul(v11, w11);
+    let s0 = b.fadd(t00, t01);
+    let s1 = b.fadd(t10, t11);
+    b.fadd(s0, s1)
+}
+
+/// `rotate(img, out, theta, s)`: bilinear rotation, zero fill. Grid:
+/// one block per output row, one thread per output column (the CUDA
+/// one-thread-per-pixel scheme). Shares the rotation convention with
+/// `python/compile/kernels/rotate.py` and the native rust implementation.
+pub fn rotate_bilinear() -> Result<Kernel> {
+    let mut b = KernelBuilder::new("rotate");
+    let pimg = b.ptr_param();
+    let pout = b.ptr_param();
+    let ptheta = b.f32_param();
+    let ps = b.i32_param();
+
+    let s_i = b.ld_param_i(ps);
+    let col = b.tid_x();
+    let row = b.ctaid_x();
+    // guards for launches rounded up to block multiples
+    let col_ok = b.cmpi(CmpOp::Lt, col, s_i);
+    let row_ok = b.cmpi(CmpOp::Lt, row, s_i);
+    let both = b.imul(col_ok, row_ok);
+    let end = b.label();
+    b.bra_ifz(both, end);
+
+    let theta = b.ld_param_f(ptheta);
+    let ct = b.fcos(theta);
+    let st = b.fsin(theta);
+    let s_f = b.cvt_i2f(s_i);
+    let one_f = b.constf(1.0);
+    let half = b.constf(0.5);
+    let sm1 = b.fsub(s_f, one_f);
+    let c = b.fmul(sm1, half);
+
+    let colf = b.cvt_i2f(col);
+    let rowf = b.cvt_i2f(row);
+    let dx = b.fsub(colf, c);
+    let dy = b.fsub(rowf, c);
+    // sx = ct*dx + st*dy + c ; sy = -st*dx + ct*dy + c
+    let a0 = b.fmul(ct, dx);
+    let a1 = b.fmul(st, dy);
+    let a01 = b.fadd(a0, a1);
+    let sx = b.fadd(a01, c);
+    let b0 = b.fmul(st, dx);
+    let b0n = b.fneg(b0);
+    let b1 = b.fmul(ct, dy);
+    let b01 = b.fadd(b0n, b1);
+    let sy = b.fadd(b01, c);
+
+    let v = emit_bilinear(&mut b, pimg, s_i, sy, sx);
+    let rowbase = b.imul(row, s_i);
+    let oidx = b.iadd(rowbase, col);
+    b.stg(pout, oidx, v);
+    b.bind(end);
+    b.ret();
+    b.build()
+}
+
+/// `sinogram_<tf>(img, angles, out, s)`: the fused hot kernel. Grid: one
+/// block per orientation; threads: one per column. Each thread marches
+/// down the rows of the (virtually) rotated image, bilinearly sampling
+/// and reducing with the T-functional — the rotated image never
+/// materializes (the CUDA version's shared-memory trick, done in
+/// registers here).
+pub fn sinogram(tfunc: &str) -> Result<Kernel> {
+    assert!(T_FUNCTIONALS.contains(&tfunc), "unknown tfunc {tfunc}");
+    let mut b = KernelBuilder::new(&format!("sinogram_{tfunc}"));
+    let pimg = b.ptr_param();
+    let pangles = b.ptr_param();
+    let pout = b.ptr_param();
+    let ps = b.i32_param();
+
+    let s_i = b.ld_param_i(ps);
+    let col = b.tid_x();
+    let aidx = b.ctaid_x();
+    let col_ok = b.cmpi(CmpOp::Lt, col, s_i);
+    let end = b.label();
+    b.bra_ifz(col_ok, end);
+
+    let theta = b.ldg(pangles, aidx);
+    let ct = b.fcos(theta);
+    let st = b.fsin(theta);
+    let s_f = b.cvt_i2f(s_i);
+    let one_f = b.constf(1.0);
+    let half = b.constf(0.5);
+    let sm1 = b.fsub(s_f, one_f);
+    let c = b.fmul(sm1, half);
+    let colf = b.cvt_i2f(col);
+    let dx = b.fsub(colf, c);
+    // Row-independent terms: sx = (ct*dx + c) + st*dy ; sy = (c - st*dx) + ct*dy
+    let sx_base0 = b.fmul(ct, dx);
+    let sx_base = b.fadd(sx_base0, c);
+    let sy_sub = b.fmul(st, dx);
+    let sy_base = b.fsub(c, sy_sub);
+
+    // accumulator: 0 for sums, first sample handled via -inf for max
+    let acc = b.constf(if tfunc == "tmax" { f32::NEG_INFINITY } else { 0.0 });
+    let r = b.consti(0);
+    let one_i = b.consti(1);
+    let top = b.label();
+    b.bind(top);
+    let rf = b.cvt_i2f(r);
+    let dy = b.fsub(rf, c);
+    let sx_t = b.fmul(st, dy);
+    let sx = b.fadd(sx_base, sx_t);
+    let sy_t = b.fmul(ct, dy);
+    let sy = b.fadd(sy_base, sy_t);
+    let v = emit_bilinear(&mut b, pimg, s_i, sy, sx);
+    match tfunc {
+        "radon" => b.fadd_to(acc, v),
+        "t1" => {
+            let w = b.fabs(dy);
+            let wv = b.fmul(w, v);
+            b.fadd_to(acc, wv);
+        }
+        "t2" => {
+            let w = b.fmul(dy, dy);
+            let wv = b.fmul(w, v);
+            b.fadd_to(acc, wv);
+        }
+        "tmax" => b.fmax_to(acc, v),
+        _ => unreachable!(),
+    }
+    b.iadd_to(r, one_i);
+    let more = b.cmpi(CmpOp::Lt, r, s_i);
+    b.bra_if(more, top);
+
+    let out_row = b.imul(aidx, s_i);
+    let oidx = b.iadd(out_row, col);
+    b.stg(pout, oidx, acc);
+    b.bind(end);
+    b.ret();
+    b.build()
+}
+
+/// `sinogram_all(img, angles, out, s)`: the optimized multi-functional
+/// variant — ONE marching pass over the rotated samples accumulates all
+/// four T-functionals (resampling dominates, so this is ~4x cheaper than
+/// four per-functional launches). Output layout: `out[t][angle][col]`,
+/// t ordered as [`T_FUNCTIONALS`]. Grid: one block per orientation;
+/// threads: one per column.
+pub fn sinogram_all() -> Result<Kernel> {
+    let mut b = KernelBuilder::new("sinogram_all");
+    let pimg = b.ptr_param();
+    let pangles = b.ptr_param();
+    let pout = b.ptr_param();
+    let ps = b.i32_param();
+
+    let s_i = b.ld_param_i(ps);
+    let col = b.tid_x();
+    let aidx = b.ctaid_x();
+    let n_angles = b.nctaid_x();
+    let col_ok = b.cmpi(CmpOp::Lt, col, s_i);
+    let end = b.label();
+    b.bra_ifz(col_ok, end);
+
+    let theta = b.ldg(pangles, aidx);
+    let ct = b.fcos(theta);
+    let st = b.fsin(theta);
+    let s_f = b.cvt_i2f(s_i);
+    let one_f = b.constf(1.0);
+    let half = b.constf(0.5);
+    let sm1 = b.fsub(s_f, one_f);
+    let c = b.fmul(sm1, half);
+    let colf = b.cvt_i2f(col);
+    let dx = b.fsub(colf, c);
+    let sx_base0 = b.fmul(ct, dx);
+    let sx_base = b.fadd(sx_base0, c);
+    let sy_sub = b.fmul(st, dx);
+    let sy_base = b.fsub(c, sy_sub);
+
+    let acc_radon = b.constf(0.0);
+    let acc_t1 = b.constf(0.0);
+    let acc_t2 = b.constf(0.0);
+    let acc_max = b.constf(f32::NEG_INFINITY);
+    let r = b.consti(0);
+    let one_i = b.consti(1);
+    let top = b.label();
+    b.bind(top);
+    let rf = b.cvt_i2f(r);
+    let dy = b.fsub(rf, c);
+    let sx_t = b.fmul(st, dy);
+    let sx = b.fadd(sx_base, sx_t);
+    let sy_t = b.fmul(ct, dy);
+    let sy = b.fadd(sy_base, sy_t);
+    let v = emit_bilinear(&mut b, pimg, s_i, sy, sx);
+    b.fadd_to(acc_radon, v);
+    let w1 = b.fabs(dy);
+    let wv1 = b.fmul(w1, v);
+    b.fadd_to(acc_t1, wv1);
+    let w2 = b.fmul(dy, dy);
+    let wv2 = b.fmul(w2, v);
+    b.fadd_to(acc_t2, wv2);
+    b.fmax_to(acc_max, v);
+    b.iadd_to(r, one_i);
+    let more = b.cmpi(CmpOp::Lt, r, s_i);
+    b.bra_if(more, top);
+
+    // out[t*a*s + aidx*s + col], t in declaration order
+    let row_base = b.imul(aidx, s_i);
+    let base0 = b.iadd(row_base, col);
+    let plane = b.imul(n_angles, s_i);
+    let mut idx = base0;
+    for acc in [acc_radon, acc_t1, acc_t2, acc_max] {
+        b.stg(pout, idx, acc);
+        idx = b.iadd(idx, plane);
+    }
+    b.bind(end);
+    b.ret();
+    b.build()
+}
+
+/// `tfunc_<tf>(img, out, h, w)`: standalone column T-functional with a
+/// shared-memory tree reduction — one block per column, `block_h` threads
+/// per block (must be a power of two >= h; extra threads contribute the
+/// identity). Exercises the barrier path like the CUDA original.
+pub fn tfunc_column(tfunc: &str, block_h: usize) -> Result<Kernel> {
+    assert!(T_FUNCTIONALS.contains(&tfunc), "unknown tfunc {tfunc}");
+    assert!(block_h.is_power_of_two(), "block_h must be a power of two");
+    let mut b = KernelBuilder::new(&format!("tfunc_{tfunc}"));
+    let pimg = b.ptr_param();
+    let pout = b.ptr_param();
+    let ph = b.i32_param();
+    let pw = b.i32_param();
+    b.shared(block_h);
+
+    let h = b.ld_param_i(ph);
+    let w = b.ld_param_i(pw);
+    let tid = b.tid_x();
+    let colb = b.ctaid_x();
+
+    // identity: 0 for sums, -inf for max
+    let ident = b.constf(if tfunc == "tmax" { f32::NEG_INFINITY } else { 0.0 });
+    let val = b.f();
+    b.movf(val, ident);
+
+    // threads with tid < h load img[tid*w + col] and weight it
+    let in_h = b.cmpi(CmpOp::Lt, tid, h);
+    let col_ok = b.cmpi(CmpOp::Lt, colb, w);
+    let live = b.imul(in_h, col_ok);
+    let skip_load = b.label();
+    b.bra_ifz(live, skip_load);
+    let rowbase = b.imul(tid, w);
+    let idx = b.iadd(rowbase, colb);
+    let x = b.ldg(pimg, idx);
+    match tfunc {
+        "radon" | "tmax" => b.movf(val, x),
+        "t1" | "t2" => {
+            let hf = b.cvt_i2f(h);
+            let one_f = b.constf(1.0);
+            let half = b.constf(0.5);
+            let hm1 = b.fsub(hf, one_f);
+            let c = b.fmul(hm1, half);
+            let tf = b.cvt_i2f(tid);
+            let dy = b.fsub(tf, c);
+            let wgt = if tfunc == "t1" { b.fabs(dy) } else { b.fmul(dy, dy) };
+            let wx = b.fmul(wgt, x);
+            b.movf(val, wx);
+        }
+        _ => unreachable!(),
+    }
+    b.bind(skip_load);
+    b.sts(tid, val);
+    b.bar();
+
+    // tree reduction over block_h (power of two)
+    let s = b.consti((block_h / 2) as i64);
+    let one_i = b.consti(1);
+    let two_i = b.consti(2);
+    let zero_i = b.consti(0);
+    let top = b.label();
+    let skip = b.label();
+    let done = b.label();
+    b.bind(top);
+    let cont = b.cmpi(CmpOp::Ge, s, one_i);
+    b.bra_ifz(cont, done);
+    let active = b.cmpi(CmpOp::Lt, tid, s);
+    b.bra_ifz(active, skip);
+    let lhs = b.lds(tid);
+    let oidx = b.iadd(tid, s);
+    let rhs = b.lds(oidx);
+    let red = if tfunc == "tmax" { b.fmax(lhs, rhs) } else { b.fadd(lhs, rhs) };
+    b.sts(tid, red);
+    b.bind(skip);
+    b.bar();
+    let halved = b.idiv(s, two_i);
+    b.movi(s, halved);
+    b.bra(top);
+    b.bind(done);
+
+    let is0 = b.cmpi(CmpOp::Eq, tid, zero_i);
+    let write_ok = b.imul(is0, col_ok);
+    let out_end = b.label();
+    b.bra_ifz(write_ok, out_end);
+    let total = b.lds(tid);
+    b.stg(pout, colb, total);
+    b.bind(out_end);
+    b.ret();
+    b.build()
+}
+
+/// All kernels needed by the emulator trace-transform path for image size
+/// `s` (rounded block height for the column reduction).
+pub fn trace_module(s: usize) -> Result<Vec<Kernel>> {
+    let block_h = s.next_power_of_two();
+    let mut kernels = vec![vadd()?, rotate_bilinear()?, sinogram_all()?];
+    for t in T_FUNCTIONALS {
+        kernels.push(sinogram(t)?);
+        kernels.push(tfunc_column(t, block_h)?);
+    }
+    Ok(kernels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulator::interp::{execute, Launch, Limits, ScalarArg};
+
+    fn run(
+        k: &Kernel,
+        grid: u32,
+        block: u32,
+        bufs: Vec<&mut [f32]>,
+        scalars: Vec<ScalarArg>,
+    ) {
+        execute(Launch {
+            kernel: k,
+            grid: (grid, 1),
+            block: (block, 1),
+            buffers: bufs,
+            scalars,
+            limits: Limits::default(),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn vadd_with_tail_guard() {
+        let k = vadd().unwrap();
+        let n = 5usize;
+        let mut a = vec![1.0f32; 8];
+        let mut b = vec![2.0f32; 8];
+        let mut c = vec![0.0f32; 8];
+        // 2 blocks x 4 threads = 8 threads, only 5 write
+        run(&k, 2, 4, vec![&mut a[..n], &mut b[..n], &mut c], vec![ScalarArg::I32(n as i32)]);
+        assert_eq!(&c[..5], &[3.0; 5]);
+        assert_eq!(&c[5..], &[0.0; 3]);
+    }
+
+    /// Native reference rotation, same convention as the kernels.
+    fn rotate_ref(img: &[f32], s: usize, theta: f32) -> Vec<f32> {
+        let c = (s as f32 - 1.0) / 2.0;
+        let (st, ct) = theta.sin_cos();
+        let mut out = vec![0.0f32; s * s];
+        for y in 0..s {
+            for x in 0..s {
+                let dx = x as f32 - c;
+                let dy = y as f32 - c;
+                let sx = ct * dx + st * dy + c;
+                let sy = -st * dx + ct * dy + c;
+                let y0 = sy.floor();
+                let x0 = sx.floor();
+                let (fy, fx) = (sy - y0, sx - x0);
+                let gather = |yi: i64, xi: i64| -> f32 {
+                    if yi >= 0 && (yi as usize) < s && xi >= 0 && (xi as usize) < s {
+                        img[yi as usize * s + xi as usize]
+                    } else {
+                        0.0
+                    }
+                };
+                let (y0, x0) = (y0 as i64, x0 as i64);
+                out[y * s + x] = gather(y0, x0) * (1.0 - fy) * (1.0 - fx)
+                    + gather(y0, x0 + 1) * (1.0 - fy) * fx
+                    + gather(y0 + 1, x0) * fy * (1.0 - fx)
+                    + gather(y0 + 1, x0 + 1) * fy * fx;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rotate_matches_native_reference() {
+        let s = 12usize;
+        let k = rotate_bilinear().unwrap();
+        let mut img: Vec<f32> = (0..s * s).map(|i| ((i * 37) % 101) as f32 * 0.1).collect();
+        let want = rotate_ref(&img, s, 0.6);
+        let mut out = vec![0.0f32; s * s];
+        run(
+            &k,
+            s as u32,
+            s as u32,
+            vec![&mut img, &mut out],
+            vec![ScalarArg::F32(0.6), ScalarArg::I32(s as i32)],
+        );
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn rotate_zero_angle_is_identity() {
+        let s = 8usize;
+        let k = rotate_bilinear().unwrap();
+        let mut img: Vec<f32> = (0..s * s).map(|i| i as f32).collect();
+        let orig = img.clone();
+        let mut out = vec![0.0f32; s * s];
+        run(
+            &k,
+            s as u32,
+            s as u32,
+            vec![&mut img, &mut out],
+            vec![ScalarArg::F32(0.0), ScalarArg::I32(s as i32)],
+        );
+        assert_eq!(out, orig);
+    }
+
+    #[test]
+    fn sinogram_zero_angle_matches_column_functional() {
+        let s = 10usize;
+        let mut img: Vec<f32> = (0..s * s).map(|i| ((i * 13) % 17) as f32).collect();
+        for tf in T_FUNCTIONALS {
+            let k = sinogram(tf).unwrap();
+            let mut angles = vec![0.0f32];
+            let mut out = vec![0.0f32; s];
+            run(
+                &k,
+                1,
+                s as u32,
+                vec![&mut img, &mut angles, &mut out],
+                vec![ScalarArg::I32(s as i32)],
+            );
+            // expected: T-functional straight down the columns
+            let c = (s as f32 - 1.0) / 2.0;
+            for col in 0..s {
+                let expected = match tf {
+                    "radon" => (0..s).map(|r| img[r * s + col]).sum::<f32>(),
+                    "t1" => (0..s).map(|r| (r as f32 - c).abs() * img[r * s + col]).sum(),
+                    "t2" => (0..s)
+                        .map(|r| (r as f32 - c) * (r as f32 - c) * img[r * s + col])
+                        .sum(),
+                    "tmax" => (0..s).map(|r| img[r * s + col]).fold(f32::MIN, f32::max),
+                    _ => unreachable!(),
+                };
+                assert!(
+                    (out[col] - expected).abs() < 1e-3,
+                    "{tf} col {col}: {} vs {expected}",
+                    out[col]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tfunc_column_tree_reduction_matches() {
+        let (h, w) = (10usize, 6usize);
+        let block_h = h.next_power_of_two();
+        let mut img: Vec<f32> = (0..h * w).map(|i| ((i * 7) % 23) as f32 * 0.5).collect();
+        let c = (h as f32 - 1.0) / 2.0;
+        for tf in T_FUNCTIONALS {
+            let k = tfunc_column(tf, block_h).unwrap();
+            let mut out = vec![0.0f32; w];
+            run(
+                &k,
+                w as u32,
+                block_h as u32,
+                vec![&mut img, &mut out],
+                vec![ScalarArg::I32(h as i32), ScalarArg::I32(w as i32)],
+            );
+            for col in 0..w {
+                let expected = match tf {
+                    "radon" => (0..h).map(|r| img[r * w + col]).sum::<f32>(),
+                    "t1" => (0..h).map(|r| (r as f32 - c).abs() * img[r * w + col]).sum(),
+                    "t2" => (0..h)
+                        .map(|r| (r as f32 - c) * (r as f32 - c) * img[r * w + col])
+                        .sum(),
+                    "tmax" => (0..h).map(|r| img[r * w + col]).fold(f32::MIN, f32::max),
+                    _ => unreachable!(),
+                };
+                assert!(
+                    (out[col] - expected).abs() < 1e-3,
+                    "{tf} col {col}: {} vs {expected}",
+                    out[col]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_dimensional_grid_transpose() {
+        // out[x*h + y] = in[y*w + x], one thread per element, 2-D blocks
+        // over a 2-D grid — exercises the y-dimension special registers.
+        use crate::emulator::builder::KernelBuilder;
+        let (h, w) = (10usize, 6usize);
+        let mut b = KernelBuilder::new("transpose");
+        let pin = b.ptr_param();
+        let pout = b.ptr_param();
+        let ph = b.i32_param();
+        let pw = b.i32_param();
+        let hh = b.ld_param_i(ph);
+        let ww = b.ld_param_i(pw);
+        let tx = b.tid_x();
+        let ty = b.tid_y();
+        let bx = b.ctaid_x();
+        let by = b.ctaid_y();
+        let bdx = b.ntid_x();
+        let bdy = b.ntid_y();
+        let gx0 = b.imul(bx, bdx);
+        let gx = b.iadd(gx0, tx); // column
+        let gy0 = b.imul(by, bdy);
+        let gy = b.iadd(gy0, ty); // row
+        let okx = b.cmpi(CmpOp::Lt, gx, ww);
+        let oky = b.cmpi(CmpOp::Lt, gy, hh);
+        let ok = b.imul(okx, oky);
+        let end = b.label();
+        b.bra_ifz(ok, end);
+        let in_row = b.imul(gy, ww);
+        let in_idx = b.iadd(in_row, gx);
+        let v = b.ldg(pin, in_idx);
+        let out_row = b.imul(gx, hh);
+        let out_idx = b.iadd(out_row, gy);
+        b.stg(pout, out_idx, v);
+        b.bind(end);
+        b.ret();
+        let k = b.build().unwrap();
+
+        let mut input: Vec<f32> = (0..h * w).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; h * w];
+        execute(Launch {
+            kernel: &k,
+            grid: (2, 3), // 2x3 blocks of 4x4 threads covers 6x10
+            block: (4, 4),
+            buffers: vec![&mut input, &mut out],
+            scalars: vec![ScalarArg::I32(h as i32), ScalarArg::I32(w as i32)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        for y in 0..h {
+            for x in 0..w {
+                assert_eq!(out[x * h + y], input[y * w + x], "({y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_module_builds_all() {
+        let ks = trace_module(64).unwrap();
+        assert_eq!(ks.len(), 3 + 2 * T_FUNCTIONALS.len());
+        for k in &ks {
+            assert!(k.validate().is_ok(), "{} invalid", k.name);
+        }
+    }
+
+    #[test]
+    fn sinogram_all_matches_per_functional_kernels() {
+        let s = 10usize;
+        let a = 4usize;
+        let mut img: Vec<f32> = (0..s * s).map(|i| ((i * 13) % 17) as f32 * 0.3).collect();
+        let mut angles: Vec<f32> = (0..a).map(|i| i as f32 * 0.7).collect();
+        let k_all = sinogram_all().unwrap();
+        let mut fused = vec![0.0f32; T_FUNCTIONALS.len() * a * s];
+        run(
+            &k_all,
+            a as u32,
+            s as u32,
+            vec![&mut img, &mut angles, &mut fused],
+            vec![ScalarArg::I32(s as i32)],
+        );
+        for (ti, tf) in T_FUNCTIONALS.iter().enumerate() {
+            let k = sinogram(tf).unwrap();
+            let mut single = vec![0.0f32; a * s];
+            run(
+                &k,
+                a as u32,
+                s as u32,
+                vec![&mut img, &mut angles, &mut single],
+                vec![ScalarArg::I32(s as i32)],
+            );
+            let plane = &fused[ti * a * s..(ti + 1) * a * s];
+            for (i, (f, g)) in plane.iter().zip(&single).enumerate() {
+                assert!((f - g).abs() < 1e-4, "{tf} elem {i}: {f} vs {g}");
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! VTX emulator: the GPU Ocelot analog (paper §5) — a PTX-like virtual
+//! ISA, a rust kernel-builder DSL, and an interpreter with the full
+//! grid/block/thread model, shared memory and barriers. Lets the entire
+//! framework run with no PJRT/XLA dependency, e.g. on CI or for
+//! cross-backend differential testing.
+
+pub mod backend_impl;
+pub mod builder;
+pub mod interp;
+pub mod isa;
+pub mod kernels;
+
+pub use backend_impl::VtxBackend;
+pub use builder::KernelBuilder;
+pub use interp::{execute, Launch, Limits, ScalarArg};
+pub use isa::{Instr, Kernel, ParamKind};

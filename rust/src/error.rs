@@ -1,0 +1,145 @@
+//! Unified error type across driver, runtime, emulator and coordinator.
+//!
+//! Mirrors the paper's layering: driver-level failures (the `CUresult`
+//! analog), backend compilation failures (PTX/HLO), and automation-level
+//! failures (signature mismatch, unsupported argument types — the analog of
+//! Julia's "would box" compilation abort, §4.1).
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    // ---- driver-level (CUresult analog) --------------------------------
+    #[error("invalid device ordinal {0}")]
+    InvalidDevice(usize),
+    #[error("context was destroyed")]
+    ContextDestroyed,
+    #[error("invalid device pointer {0:#x}")]
+    InvalidDevicePtr(u64),
+    #[error("device memory access out of bounds: {off}+{len} > {size} (buffer {ptr:#x})")]
+    OutOfBounds { ptr: u64, off: usize, len: usize, size: usize },
+    #[error("device out of memory: requested {requested} bytes, {available} available")]
+    OutOfMemory { requested: usize, available: usize },
+    #[error("double free of device pointer {0:#x}")]
+    DoubleFree(u64),
+    #[error("module not found: {0}")]
+    ModuleNotFound(String),
+    #[error("function not found in module: {0}")]
+    FunctionNotFound(String),
+    #[error("invalid launch configuration: {0}")]
+    InvalidLaunch(String),
+    #[error("stream error: {0}")]
+    Stream(String),
+    #[error("event not recorded")]
+    EventNotRecorded,
+
+    // ---- backend / compilation (nvcc / LLVM-PTX analog) ----------------
+    #[error("artifact not found for kernel `{kernel}` with signature {signature}")]
+    NoArtifact { kernel: String, signature: String },
+    #[error("artifact manifest error: {0}")]
+    Manifest(String),
+    #[error("backend `{backend}` failed to load module: {reason}")]
+    ModuleLoad { backend: String, reason: String },
+    #[error("XLA/PJRT error: {0}")]
+    Xla(String),
+    #[error("VTX validation error in kernel `{kernel}`: {reason}")]
+    VtxValidation { kernel: String, reason: String },
+    #[error("VTX trap in kernel `{kernel}` (block {block:?}, thread {thread:?}): {reason}")]
+    VtxTrap { kernel: String, block: (u32, u32, u32), thread: (u32, u32, u32), reason: String },
+
+    // ---- automation-level (the "@cuda would box" analog) ---------------
+    #[error("cannot specialize `{kernel}`: {reason}")]
+    Specialize { kernel: String, reason: String },
+    #[error("argument {index} of `{kernel}`: {reason}")]
+    BadArgument { kernel: String, index: usize, reason: String },
+    #[error("type error: {0}")]
+    Type(String),
+
+    // ---- host-language layer -------------------------------------------
+    #[error("hostlang: {0}")]
+    HostLang(String),
+
+    // ---- misc ------------------------------------------------------------
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("JSON parse error: {0}")]
+    Json(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Other(s)
+    }
+}
+
+impl Error {
+    /// Driver-style status name (the `CUresult` enum analog), used by the
+    /// CLI and tests to assert on error categories without string matching.
+    pub fn status(&self) -> &'static str {
+        use Error::*;
+        match self {
+            InvalidDevice(_) => "ERROR_INVALID_DEVICE",
+            ContextDestroyed => "ERROR_CONTEXT_DESTROYED",
+            InvalidDevicePtr(_) => "ERROR_INVALID_VALUE",
+            OutOfBounds { .. } => "ERROR_ILLEGAL_ADDRESS",
+            OutOfMemory { .. } => "ERROR_OUT_OF_MEMORY",
+            DoubleFree(_) => "ERROR_INVALID_VALUE",
+            ModuleNotFound(_) => "ERROR_INVALID_IMAGE",
+            FunctionNotFound(_) => "ERROR_NOT_FOUND",
+            InvalidLaunch(_) => "ERROR_INVALID_VALUE",
+            Stream(_) => "ERROR_LAUNCH_FAILED",
+            EventNotRecorded => "ERROR_NOT_READY",
+            NoArtifact { .. } => "ERROR_NO_BINARY_FOR_GPU",
+            Manifest(_) => "ERROR_INVALID_IMAGE",
+            ModuleLoad { .. } => "ERROR_INVALID_IMAGE",
+            Xla(_) => "ERROR_LAUNCH_FAILED",
+            VtxValidation { .. } => "ERROR_INVALID_IMAGE",
+            VtxTrap { .. } => "ERROR_LAUNCH_FAILED",
+            Specialize { .. } => "ERROR_INVALID_IMAGE",
+            BadArgument { .. } => "ERROR_INVALID_VALUE",
+            Type(_) => "ERROR_INVALID_VALUE",
+            HostLang(_) => "ERROR_UNKNOWN",
+            Io(_) => "ERROR_FILE_NOT_FOUND",
+            Json(_) => "ERROR_INVALID_IMAGE",
+            Other(_) => "ERROR_UNKNOWN",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_names_are_cuda_like() {
+        assert_eq!(Error::InvalidDevice(3).status(), "ERROR_INVALID_DEVICE");
+        assert_eq!(
+            Error::OutOfMemory { requested: 10, available: 5 }.status(),
+            "ERROR_OUT_OF_MEMORY"
+        );
+    }
+
+    #[test]
+    fn xla_errors_convert() {
+        let e: Error = Error::Xla("boom".into());
+        assert_eq!(e.status(), "ERROR_LAUNCH_FAILED");
+    }
+
+    #[test]
+    fn display_includes_details() {
+        let e = Error::OutOfBounds { ptr: 0x10, off: 4, len: 8, size: 8 };
+        let s = e.to_string();
+        assert!(s.contains("4+8 > 8"));
+    }
+}

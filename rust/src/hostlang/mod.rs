@@ -1,0 +1,17 @@
+//! `hostlang`: a dynamic, boxed, bounds-checked array layer that plays
+//! the role of the high-level host language (Julia) in the evaluation.
+//!
+//! The paper's Figure 3 shows the Julia CPU implementation trailing C++
+//! because of "unnecessary checks on integer conversions and array
+//! bounds" and boxed values. This layer reproduces those costs *by
+//! construction*: every value is a tagged enum (the box), every element
+//! access bounds-checks and converts (f64 storage, like a dynamically
+//! typed numeric tower), arrays are 1-indexed (Julia convention), and all
+//! dispatch is dynamic.
+//!
+//! The "Julia"-analog benchmark implementations are written against this
+//! API; the "C++"-analog ones use plain `f32` slices.
+
+pub mod value;
+
+pub use value::{DynArray, Value};

@@ -1,0 +1,273 @@
+//! Boxed dynamic values and checked arrays.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+
+/// A boxed dynamic value — the heap-allocated "box" the paper's §4.1
+/// works so hard to avoid on the GPU. Numeric storage is f64, so every
+/// f32 kernel interaction incurs a conversion (the §7.3 "argument
+/// conversion" overhead).
+#[derive(Clone, Debug)]
+pub enum Value {
+    Nothing,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Array(DynArray),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Nothing => "Nothing",
+            Value::Bool(_) => "Bool",
+            Value::Int(_) => "Int64",
+            Value::Float(_) => "Float64",
+            Value::Str(_) => "String",
+            Value::Array(_) => "Array{Float64}",
+        }
+    }
+
+    /// Dynamic numeric conversion with checking (Julia's `convert`).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            Value::Bool(b) => Ok(if *b { 1.0 } else { 0.0 }),
+            other => Err(Error::HostLang(format!(
+                "cannot convert {} to Float64",
+                other.type_name()
+            ))),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Float(f) => {
+                // InexactError semantics: only exact conversions allowed.
+                if f.fract() == 0.0 {
+                    Ok(*f as i64)
+                } else {
+                    Err(Error::HostLang(format!("InexactError: Int64({f})")))
+                }
+            }
+            other => Err(Error::HostLang(format!(
+                "cannot convert {} to Int64",
+                other.type_name()
+            ))),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&DynArray> {
+        match self {
+            Value::Array(a) => Ok(a),
+            other => Err(Error::HostLang(format!(
+                "expected Array, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    /// Dynamic binary `+` with type dispatch.
+    pub fn add(&self, other: &Value) -> Result<Value> {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => Ok(Value::Int(a + b)),
+            (Value::Array(a), Value::Array(b)) => Ok(Value::Array(a.zip_with(b, |x, y| x + y)?)),
+            _ => Ok(Value::Float(self.as_float()? + other.as_float()?)),
+        }
+    }
+
+    pub fn mul(&self, other: &Value) -> Result<Value> {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => Ok(Value::Int(a * b)),
+            (Value::Array(a), Value::Array(b)) => Ok(Value::Array(a.zip_with(b, |x, y| x * y)?)),
+            _ => Ok(Value::Float(self.as_float()? * other.as_float()?)),
+        }
+    }
+}
+
+/// A dynamically typed, shape-checked, **1-indexed** array (row major,
+/// boxed f64 elements, shared via refcount like Julia bindings).
+#[derive(Clone, Debug)]
+pub struct DynArray {
+    inner: Rc<RefCell<ArrInner>>,
+}
+
+#[derive(Debug)]
+struct ArrInner {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl DynArray {
+    pub fn zeros(shape: &[usize]) -> DynArray {
+        let n: usize = shape.iter().product();
+        DynArray {
+            inner: Rc::new(RefCell::new(ArrInner { shape: shape.to_vec(), data: vec![0.0; n] })),
+        }
+    }
+
+    pub fn from_vec(data: Vec<f64>, shape: &[usize]) -> Result<DynArray> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::HostLang(format!(
+                "DimensionMismatch: {} elements for shape {shape:?}",
+                data.len()
+            )));
+        }
+        Ok(DynArray {
+            inner: Rc::new(RefCell::new(ArrInner { shape: shape.to_vec(), data })),
+        })
+    }
+
+    pub fn from_f32(data: &[f32], shape: &[usize]) -> Result<DynArray> {
+        Self::from_vec(data.iter().map(|&x| x as f64).collect(), shape)
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        self.inner.borrow().shape.clone()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.inner.borrow().data.len()
+    }
+
+    fn offset(&self, idx: &[usize]) -> Result<usize> {
+        let inner = self.inner.borrow();
+        if idx.len() != inner.shape.len() {
+            return Err(Error::HostLang(format!(
+                "BoundsError: {}-d index into {}-d array",
+                idx.len(),
+                inner.shape.len()
+            )));
+        }
+        // 1-indexed, row-major linearization with per-dimension checks.
+        let mut off = 0usize;
+        for (d, (&i, &s)) in idx.iter().zip(&inner.shape).enumerate() {
+            if i < 1 || i > s {
+                return Err(Error::HostLang(format!(
+                    "BoundsError: index {i} out of 1:{s} in dimension {}",
+                    d + 1
+                )));
+            }
+            off = off * s + (i - 1);
+        }
+        Ok(off)
+    }
+
+    /// Bounds-checked 1-indexed element read, boxed result.
+    pub fn get(&self, idx: &[usize]) -> Result<Value> {
+        let off = self.offset(idx)?;
+        Ok(Value::Float(self.inner.borrow().data[off]))
+    }
+
+    /// Bounds-checked 1-indexed element write with dynamic conversion.
+    pub fn set(&self, idx: &[usize], v: &Value) -> Result<()> {
+        let off = self.offset(idx)?;
+        let f = v.as_float()?;
+        self.inner.borrow_mut().data[off] = f;
+        Ok(())
+    }
+
+    /// Fast-ish raw accessors used by the framework boundary (upload /
+    /// download) — still one conversion per element.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.inner.borrow().data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn fill_from_f32(&self, src: &[f32]) -> Result<()> {
+        let mut inner = self.inner.borrow_mut();
+        if src.len() != inner.data.len() {
+            return Err(Error::HostLang("DimensionMismatch in fill".into()));
+        }
+        for (d, s) in inner.data.iter_mut().zip(src) {
+            *d = *s as f64;
+        }
+        Ok(())
+    }
+
+    pub fn zip_with(&self, other: &DynArray, f: impl Fn(f64, f64) -> f64) -> Result<DynArray> {
+        let a = self.inner.borrow();
+        let b = other.inner.borrow();
+        if a.shape != b.shape {
+            return Err(Error::HostLang(format!(
+                "DimensionMismatch: {:?} vs {:?}",
+                a.shape, b.shape
+            )));
+        }
+        let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+        Ok(DynArray {
+            inner: Rc::new(RefCell::new(ArrInner { shape: a.shape.clone(), data })),
+        })
+    }
+
+    /// Dynamic reduction over all elements.
+    pub fn reduce(&self, init: f64, f: impl Fn(f64, f64) -> f64) -> f64 {
+        self.inner.borrow().data.iter().fold(init, |acc, &x| f(acc, x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_indexed_access() {
+        let a = DynArray::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(a.get(&[1, 1]).unwrap().as_float().unwrap(), 1.0);
+        assert_eq!(a.get(&[2, 2]).unwrap().as_float().unwrap(), 4.0);
+        // 0 is out of bounds in a 1-indexed world
+        assert!(a.get(&[0, 1]).is_err());
+        assert!(a.get(&[3, 1]).is_err());
+    }
+
+    #[test]
+    fn bounds_error_messages_name_dimension() {
+        let a = DynArray::zeros(&[3, 5]);
+        let err = a.get(&[2, 6]).unwrap_err().to_string();
+        assert!(err.contains("1:5") && err.contains("dimension 2"), "{err}");
+    }
+
+    #[test]
+    fn dynamic_dispatch_add() {
+        let a = Value::Int(3);
+        let b = Value::Float(1.5);
+        assert_eq!(a.add(&b).unwrap().as_float().unwrap(), 4.5);
+        let arr1 = Value::Array(DynArray::from_vec(vec![1.0, 2.0], &[2]).unwrap());
+        let arr2 = Value::Array(DynArray::from_vec(vec![10.0, 20.0], &[2]).unwrap());
+        let sum = arr1.add(&arr2).unwrap();
+        assert_eq!(sum.as_array().unwrap().to_f32_vec(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn inexact_int_conversion_errors() {
+        assert!(Value::Float(1.5).as_int().is_err());
+        assert_eq!(Value::Float(2.0).as_int().unwrap(), 2);
+    }
+
+    #[test]
+    fn type_errors_are_dynamic() {
+        let s = Value::Str("hi".into());
+        let err = s.as_float().unwrap_err().to_string();
+        assert!(err.contains("String"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_in_zip() {
+        let a = DynArray::zeros(&[2, 2]);
+        let b = DynArray::zeros(&[4]);
+        assert!(a.zip_with(&b, |x, y| x + y).is_err());
+    }
+
+    #[test]
+    fn shared_binding_semantics() {
+        let a = DynArray::zeros(&[2]);
+        let b = a.clone(); // Julia-style binding, not a copy
+        a.set(&[1], &Value::Float(9.0)).unwrap();
+        assert_eq!(b.get(&[1]).unwrap().as_float().unwrap(), 9.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! # hlgpu — high-level accelerator programming, the Besard-2016 way
+//!
+//! Reproduction of *"High-level GPU programming in Julia"* (Besard,
+//! Verstraete, De Sutter, 2016) as a rust + JAX + Pallas three-layer
+//! stack. The paper's contribution — writing kernels in the high-level
+//! language and having the framework specialize, compile, and launch them
+//! with zero steady-state overhead — lives here in the host layer:
+//!
+//! * [`driver`] — a simulated accelerator **driver API** (the CUDA driver
+//!   API analog): devices, contexts, modules, functions, handle-based
+//!   disjoint device memory, streams and events.
+//! * [`runtime`] — the **PJRT backend**: loads AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` (JAX + Pallas) and executes them
+//!   on the `xla` crate's CPU client.
+//! * [`emulator`] — the **VTX backend** (GPU Ocelot analog): a tiny
+//!   PTX-like virtual ISA with a grid/block/thread model, shared memory
+//!   and barriers, interpreted on the host so the whole stack runs with no
+//!   PJRT dependency at all.
+//! * [`coordinator`] — the **`@cuda` automation layer**: kernel registry,
+//!   per-signature specialization cache (the paper's method cache),
+//!   `In`/`Out`/`InOut` argument wrappers driving a minimal transfer plan,
+//!   and the [`cuda!`] launch macro.
+//! * [`hostlang`] — a dynamic, boxed, bounds-checked array layer playing
+//!   the role of the high-level host language in the evaluation.
+//! * [`tracetransform`] — the paper's case study (§7): the trace transform
+//!   with T/P/F functional stacks and the five benchmark implementations.
+//! * [`stats`], [`bench_support`], [`sloc`], [`util`] — measurement
+//!   methodology (log-normal fits, §7.2), bench harness, LoC counting for
+//!   Table 2, and offline-built utility substrates (JSON, PRNG, CLI).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hlgpu::coordinator::{Launcher, arg};
+//! use hlgpu::cuda;
+//! use hlgpu::tensor::Tensor;
+//!
+//! let mut launcher = Launcher::with_default_context().unwrap();
+//! let a = Tensor::from_f32(&[1., 2., 3.], &[3]);
+//! let b = Tensor::from_f32(&[4., 5., 6.], &[3]);
+//! let mut c = Tensor::zeros_f32(&[3]);
+//! // the paper's Listing 3: @cuda (len, 1) vadd(CuIn(a), CuIn(b), CuOut(c))
+//! cuda!(launcher, (3, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+//! assert_eq!(c.as_f32(), &[5., 7., 9.]);
+//! ```
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod driver;
+pub mod emulator;
+pub mod error;
+pub mod hostlang;
+pub mod runtime;
+pub mod sloc;
+pub mod stats;
+pub mod tensor;
+pub mod tracetransform;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Repository root discovery: walks up from the current exe / cwd until a
+/// directory containing `artifacts/manifest.json` (or `Cargo.toml`) is found.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("artifacts").join("manifest.json").exists()
+            || dir.join("Cargo.toml").exists()
+        {
+            return dir;
+        }
+        if !dir.pop() {
+            return ".".into();
+        }
+    }
+}
+
+/// Path to the AOT artifact directory (`$HLGPU_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HLGPU_ARTIFACTS") {
+        return p.into();
+    }
+    repo_root().join("artifacts")
+}

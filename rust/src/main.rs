@@ -1,0 +1,300 @@
+//! `hlgpu` CLI — the launcher binary for the framework: device info,
+//! smoke tests, the end-to-end trace-transform driver, and the paper's
+//! experiments (Figure 3, Table 1, Table 2).
+//!
+//! ```text
+//! hlgpu info                         # devices, artifacts, platform
+//! hlgpu vadd [--n 4096] [--device pjrt|emu]
+//! hlgpu trace --impl cpu-native --size 128 [--angles 90] [--iters 5]
+//! hlgpu fig3  [--sizes 64,128,256] [--iters 5] [--emulator]
+//! hlgpu table1 [--size 128]
+//! hlgpu table2
+//! hlgpu selftest                     # cross-check all implementations
+//! ```
+
+use hlgpu::bench_support::{fmt_summary, fmt_time, measure, Settings, Table};
+use hlgpu::coordinator::arg;
+use hlgpu::cuda;
+use hlgpu::error::Result;
+use hlgpu::tensor::Tensor;
+use hlgpu::tracetransform::{
+    impls, orientations, shepp_logan, CpuDynamic, CpuNative, DeviceChoice, GpuAuto, GpuDynamic,
+    GpuManual, TraceImpl,
+};
+use hlgpu::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error [{}]: {e}", e.status());
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(),
+        Some("vadd") => vadd(args),
+        Some("trace") => trace(args),
+        Some("fig3") => fig3(args),
+        Some("table1") => table1(args),
+        Some("table2") => table2(),
+        Some("selftest") => selftest(args),
+        _ => {
+            println!("{}", HELP.trim());
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"
+hlgpu — high-level accelerator programming framework (Besard'16 reproduction)
+
+subcommands:
+  info       devices, artifact library, platform
+  vadd       run the paper's Listing-3 vadd example through @cuda automation
+  trace      run one trace-transform implementation
+  fig3       Figure 3: steady-state time of 5 implementations vs image size
+  table1     Table 1: build / initialization times
+  table2     Table 2: lines of code per implementation
+  selftest   cross-check features across implementations and backends
+common options:
+  --device pjrt|emu   --sizes 64,128   --angles 90   --iters N   --warmup N
+"#;
+
+fn device_choice(args: &Args) -> DeviceChoice {
+    match args.opt("device") {
+        Some("emu") | Some("emulator") | Some("vtx") => DeviceChoice::Emulator,
+        _ => DeviceChoice::Pjrt,
+    }
+}
+
+fn info() -> Result<()> {
+    println!("devices:");
+    for d in hlgpu::driver::devices() {
+        println!(
+            "  [{}] {} (max {} threads/block, {} KiB shared)",
+            d.ordinal,
+            d.name,
+            d.attributes.max_threads_per_block,
+            d.attributes.max_shared_mem_per_block >> 10
+        );
+    }
+    match hlgpu::runtime::pjrt::platform_name() {
+        Ok(p) => println!("PJRT platform: {p}"),
+        Err(e) => println!("PJRT platform: unavailable ({e})"),
+    }
+    match hlgpu::runtime::ArtifactLibrary::load_default() {
+        Ok(lib) => {
+            println!("artifact library: {} entries at {}", lib.len(), lib.dir().display());
+            let mut kernels: Vec<&str> =
+                lib.entries().iter().map(|e| e.kernel.as_str()).collect();
+            kernels.sort_unstable();
+            kernels.dedup();
+            println!("  kernels: {}", kernels.join(", "));
+        }
+        Err(e) => println!("artifact library: {e}"),
+    }
+    Ok(())
+}
+
+/// The paper's Listing 3, end to end.
+fn vadd(args: &Args) -> Result<()> {
+    let n = args.opt_usize("n", 4096);
+    let device = device_choice(args);
+    let mut launcher = match device {
+        DeviceChoice::Pjrt => hlgpu::coordinator::Launcher::with_default_context()?,
+        DeviceChoice::Emulator => {
+            let mut l = hlgpu::coordinator::Launcher::emulator()?;
+            impls::register_trace_providers(l.registry_mut());
+            l
+        }
+    };
+    let mut rng = hlgpu::util::Prng::new(42);
+    let a = Tensor::from_f32(&rng.f32_vec(n, 0.0, 100.0), &[n]);
+    let b = Tensor::from_f32(&rng.f32_vec(n, 0.0, 100.0), &[n]);
+    let mut c = Tensor::zeros_f32(&[n]);
+    // @cuda (len, 1) vadd(CuIn(a), CuIn(b), CuOut(c))
+    cuda!(launcher, (n, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))?;
+    // verify: @assert a+b == c
+    for i in 0..n {
+        let want = a.as_f32()[i] + b.as_f32()[i];
+        assert!((c.as_f32()[i] - want).abs() < 1e-4, "mismatch at {i}");
+    }
+    println!(
+        "vadd OK: n={n} device={device:?} cold_specializations={} (cache {:?})",
+        launcher.metrics().cold_specializations,
+        launcher.cache_stats()
+    );
+    Ok(())
+}
+
+fn make_impl(name: &str, device: DeviceChoice) -> Result<Box<dyn TraceImpl>> {
+    Ok(match name {
+        "cpu-native" => Box::new(CpuNative::new()),
+        "cpu-dynamic" => Box::new(CpuDynamic::new()),
+        "gpu-manual" => Box::new(GpuManual::on_device(device)?),
+        "gpu-dynamic" => Box::new(GpuDynamic::on_device(device)?),
+        "gpu-auto" => Box::new(GpuAuto::on_device(device)?),
+        "gpu-auto-fused" => Box::new(GpuAuto::fused()?),
+        other => {
+            return Err(hlgpu::Error::Other(format!(
+                "unknown implementation `{other}` (try cpu-native, cpu-dynamic, gpu-manual, gpu-dynamic, gpu-auto, gpu-auto-fused)"
+            )))
+        }
+    })
+}
+
+fn trace(args: &Args) -> Result<()> {
+    let name = args.opt("impl").unwrap_or("gpu-auto").to_string();
+    let size = args.opt_usize("size", 128);
+    let angles = args.opt_usize("angles", 90);
+    let device = device_choice(args);
+    let img = shepp_logan(size);
+    let thetas = orientations(angles);
+    let mut im = make_impl(&name, device)?;
+    let settings = Settings::from_cli(args);
+    let mut last = Vec::new();
+    let summary = measure(settings, || {
+        last = im.features(&img, &thetas).unwrap();
+    });
+    println!(
+        "{name} size={size} angles={angles}: {} ({} features, first={:.4})",
+        fmt_summary(&summary),
+        last.len(),
+        last.first().copied().unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+/// Figure 3: steady-state execution times, 5 implementations x sizes.
+fn fig3(args: &Args) -> Result<()> {
+    let sizes = args.opt_usize_list("sizes", &[64, 128, 256]);
+    let angles = args.opt_usize("angles", 90);
+    let device =
+        if args.flag("emulator") { DeviceChoice::Emulator } else { DeviceChoice::Pjrt };
+    let settings = Settings::from_cli(args);
+    let impl_names =
+        ["cpu-native", "cpu-dynamic", "gpu-manual", "gpu-dynamic", "gpu-auto"];
+
+    let mut table = Table::new(
+        &["size", "cpu-native", "cpu-dynamic", "gpu-manual", "gpu-dynamic", "gpu-auto"],
+    );
+    let mut max_unc: f64 = 0.0;
+    for &size in &sizes {
+        let img = shepp_logan(size);
+        let thetas = orientations(angles);
+        let mut row = vec![size.to_string()];
+        for name in impl_names {
+            let mut im = make_impl(name, device)?;
+            let summary = measure(settings, || im.features(&img, &thetas).unwrap());
+            max_unc = max_unc.max(summary.rel_uncertainty_pct());
+            row.push(fmt_time(summary.mean));
+        }
+        table.row(&row);
+    }
+    println!("Figure 3 — steady-state execution time per iteration");
+    println!(
+        "(device={device:?}, angles={angles}, {} samples, relative uncertainty ≤ {max_unc:.2}%)",
+        settings.sample_iters
+    );
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Table 1: "build" (artifact AOT cost, measured as PJRT compile of the
+/// needed modules) and "init" (first-call cost: client + module load +
+/// first specialization) per implementation.
+fn table1(args: &Args) -> Result<()> {
+    let size = args.opt_usize("size", 128);
+    let angles = args.opt_usize("angles", 90);
+    let img = shepp_logan(size);
+    let thetas = orientations(angles);
+
+    let mut table = Table::new(&["implementation", "init (s)"]);
+    for name in ["cpu-native", "cpu-dynamic", "gpu-manual", "gpu-dynamic", "gpu-auto"] {
+        let (init, feats) = hlgpu::bench_support::measure_once(|| -> Result<Vec<f32>> {
+            let mut im = make_impl(name, DeviceChoice::Pjrt)?;
+            im.features(&img, &thetas)
+        });
+        let feats = feats?;
+        assert!(!feats.is_empty());
+        table.row(&[name.to_string(), format!("{init:.3}")]);
+    }
+    println!("Table 1 — initialization time to first result (size={size}, angles={angles})");
+    println!("{}", table.render());
+    println!("note: the AOT 'build' column is `make artifacts` wall time (python, build-time only).");
+    Ok(())
+}
+
+/// Table 2: lines of code per implementation (program + core algorithm).
+fn table2() -> Result<()> {
+    let root = hlgpu::repo_root();
+    let rows: &[(&str, &[&str])] = &[
+        ("cpu-native", &["rust/src/tracetransform/impls/cpu_native.rs"]),
+        ("cpu-dynamic", &["rust/src/tracetransform/impls/cpu_dynamic.rs"]),
+        ("gpu-manual", &["rust/src/tracetransform/impls/gpu_manual.rs"]),
+        ("gpu-dynamic", &["rust/src/tracetransform/impls/gpu_dynamic.rs"]),
+        ("gpu-auto", &["rust/src/tracetransform/impls/gpu_auto.rs"]),
+        (
+            "kernels (pallas L1)",
+            &[
+                "python/compile/kernels/rotate.py",
+                "python/compile/kernels/tfunctionals.py",
+                "python/compile/kernels/sinogram.py",
+            ],
+        ),
+        ("kernels (VTX)", &["rust/src/emulator/kernels.rs"]),
+    ];
+    let mut table = Table::new(&["implementation", "program", "core algorithm"]);
+    for (name, files) in rows {
+        let paths: Vec<_> = files.iter().map(|f| root.join(f)).collect();
+        let c = hlgpu::sloc::count_files(&paths)?;
+        table.row(&[name.to_string(), c.total.to_string(), c.core.to_string()]);
+    }
+    println!("Table 2 — lines of code (non-blank, non-comment; core = SLOC:core regions)");
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Cross-check all implementations produce the same features.
+fn selftest(args: &Args) -> Result<()> {
+    let size = args.opt_usize("size", 32);
+    let angles = args.opt_usize("angles", 16);
+    let img = shepp_logan(size);
+    let thetas = orientations(angles);
+    let reference = CpuNative::new().features(&img, &thetas)?;
+    println!("reference: cpu-native, {} features", reference.len());
+
+    let mut checked = 0;
+    let mut check = |name: &str, feats: Result<Vec<f32>>| match feats {
+        Ok(f) => {
+            let max_rel = f
+                .iter()
+                .zip(&reference)
+                .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+                .fold(0.0f32, f32::max);
+            println!("  {name:<24} max relative deviation {max_rel:.2e}");
+            assert!(max_rel < 5e-3, "{name} deviates too much");
+            checked += 1;
+        }
+        Err(e) => println!("  {name:<24} SKIPPED ({e})"),
+    };
+
+    check("cpu-dynamic", CpuDynamic::new().features(&img, &thetas));
+    for device in [DeviceChoice::Pjrt, DeviceChoice::Emulator] {
+        for name in ["gpu-manual", "gpu-dynamic", "gpu-auto"] {
+            let tag = format!("{name}@{device:?}");
+            match make_impl(name, device) {
+                Ok(mut im) => check(&tag, im.features(&img, &thetas)),
+                Err(e) => println!("  {tag:<24} SKIPPED ({e})"),
+            }
+        }
+    }
+    println!("selftest OK: {checked} implementations agree");
+    Ok(())
+}

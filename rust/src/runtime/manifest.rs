@@ -1,0 +1,289 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (the build-time code generator) and the rust request path.
+//!
+//! The manifest plays the role of the paper's method cache *key space*:
+//! each artifact is one kernel already specialized for a concrete argument
+//! signature by the JAX AOT pass; the coordinator matches call signatures
+//! against these entries (§6.2).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::driver::backend::TensorSpec;
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// One AOT-lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Unique artifact name, e.g. `sinogram_radon_f32_128x90`.
+    pub name: String,
+    /// Logical kernel name, e.g. `sinogram` — what `@cuda` calls.
+    pub kernel: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (tfunc name, size, angles, ...).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactEntry {
+    /// Signature string of the inputs, the specialization cache key format:
+    /// `f32[128,128];f32[90]`.
+    pub fn input_signature(&self) -> String {
+        self.inputs
+            .iter()
+            .map(|s| s.signature())
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Loaded artifact library: manifest + directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactLibrary {
+    dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::Manifest("inputs/outputs must be arrays".into()))?;
+    arr.iter()
+        .map(|io| {
+            let dtype = io
+                .req("dtype")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("dtype must be a string".into()))?
+                .to_string();
+            let shape = io
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("shape must be an array".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::Manifest("shape dims must be integers".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { dtype, shape })
+        })
+        .collect()
+}
+
+fn meta_to_strings(j: Option<&Json>) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    if let Some(Json::Obj(m)) = j {
+        for (k, v) in m {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => format!("{other:?}"),
+            };
+            out.insert(k.clone(), s);
+        }
+    }
+    out
+}
+
+impl ArtifactLibrary {
+    /// Load `manifest.json` from a directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactLibrary> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        Self::from_json(&text, dir)
+    }
+
+    /// Load from the default repository artifact directory.
+    pub fn load_default() -> Result<ArtifactLibrary> {
+        Self::load(crate::artifacts_dir())
+    }
+
+    pub fn from_json(text: &str, dir: PathBuf) -> Result<ArtifactLibrary> {
+        let j = Json::parse(text)?;
+        let version = j
+            .req("version")?
+            .as_usize()
+            .ok_or_else(|| Error::Manifest("version must be an integer".into()))?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported manifest version {version}")));
+        }
+        let arts = j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("artifacts must be an array".into()))?;
+        let entries = arts
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    name: a
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| Error::Manifest("name must be a string".into()))?
+                        .to_string(),
+                    kernel: a
+                        .req("kernel")?
+                        .as_str()
+                        .ok_or_else(|| Error::Manifest("kernel must be a string".into()))?
+                        .to_string(),
+                    path: a
+                        .req("path")?
+                        .as_str()
+                        .ok_or_else(|| Error::Manifest("path must be a string".into()))?
+                        .to_string(),
+                    inputs: parse_specs(a.req("inputs")?)?,
+                    outputs: parse_specs(a.req("outputs")?)?,
+                    meta: meta_to_strings(a.get("meta")),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactLibrary { dir, entries })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Find an artifact by its unique name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find the artifact for `kernel` matching an input signature — the
+    /// specialization lookup (§6.2). The signature is a `;`-joined list of
+    /// `dtype[dims]` strings.
+    pub fn find(&self, kernel: &str, input_signature: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kernel == kernel && e.input_signature() == input_signature)
+            .ok_or_else(|| Error::NoArtifact {
+                kernel: kernel.to_string(),
+                signature: input_signature.to_string(),
+            })
+    }
+
+    /// All artifacts implementing a logical kernel.
+    pub fn for_kernel(&self, kernel: &str) -> Vec<&ArtifactEntry> {
+        self.entries.iter().filter(|e| e.kernel == kernel).collect()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.path)
+    }
+
+    /// Build the driver [`crate::driver::ModuleSource`] for an entry.
+    pub fn module_source(&self, entry: &ArtifactEntry) -> crate::driver::ModuleSource {
+        crate::driver::ModuleSource::HloFile {
+            name: entry.name.clone(),
+            path: self.artifact_path(entry),
+            inputs: entry.inputs.clone(),
+            outputs: entry.outputs.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "generated_by": "test",
+      "artifacts": [
+        {"name": "vadd_f32_12", "kernel": "vadd", "path": "vadd_f32_12.hlo.txt",
+         "inputs": [{"dtype": "f32", "shape": [12]}, {"dtype": "f32", "shape": [12]}],
+         "outputs": [{"dtype": "f32", "shape": [12]}],
+         "meta": {"n": 12}},
+        {"name": "sino_radon_64", "kernel": "sinogram", "path": "s.hlo.txt",
+         "inputs": [{"dtype": "f32", "shape": [64, 64]}, {"dtype": "f32", "shape": [90]}],
+         "outputs": [{"dtype": "f32", "shape": [90, 64]}],
+         "meta": {"tfunc": "radon", "size": 64}}
+      ]
+    }"#;
+
+    fn lib() -> ArtifactLibrary {
+        ArtifactLibrary::from_json(SAMPLE, PathBuf::from("/tmp/arts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let l = lib();
+        assert_eq!(l.len(), 2);
+        let e = l.by_name("vadd_f32_12").unwrap();
+        assert_eq!(e.kernel, "vadd");
+        assert_eq!(e.input_signature(), "f32[12];f32[12]");
+        assert_eq!(e.meta_usize("n"), Some(12));
+    }
+
+    #[test]
+    fn signature_lookup() {
+        let l = lib();
+        let e = l.find("sinogram", "f32[64,64];f32[90]").unwrap();
+        assert_eq!(e.name, "sino_radon_64");
+        assert_eq!(e.meta_str("tfunc"), Some("radon"));
+        // mismatch -> NoArtifact
+        let err = l.find("sinogram", "f32[65,65];f32[90]").unwrap_err();
+        assert!(matches!(err, Error::NoArtifact { .. }));
+        assert_eq!(err.status(), "ERROR_NO_BINARY_FOR_GPU");
+    }
+
+    #[test]
+    fn kernel_filter_and_paths() {
+        let l = lib();
+        assert_eq!(l.for_kernel("vadd").len(), 1);
+        let e = l.by_name("sino_radon_64").unwrap();
+        assert_eq!(
+            l.artifact_path(e),
+            PathBuf::from("/tmp/arts").join("s.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(ArtifactLibrary::from_json(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "artifacts": [{"name": "x"}]}"#;
+        let err = ArtifactLibrary::from_json(bad, PathBuf::from(".")).unwrap_err();
+        assert!(err.to_string().contains("kernel"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper and the AOT artifact library.
+//!
+//! `load_hlo`-style flow (see /opt/xla-example): HLO text →
+//! `HloModuleProto` → `XlaComputation` → `PjRtClient::compile` →
+//! `execute`. Wrapped behind the [`crate::driver`] backend traits so the
+//! coordinator is backend-agnostic.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactEntry, ArtifactLibrary};
+pub use pjrt::PjrtBackend;

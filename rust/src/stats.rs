@@ -1,0 +1,168 @@
+//! Measurement methodology from the paper (§7.2): performance numbers are
+//! the mean of a fitted **log-normal** distribution, with precision
+//! reported as the **relative uncertainty** derived from the standard
+//! deviation of the log-samples. The paper cites Ciemiewicz'01 and
+//! Mashey'04 for this; relative uncertainties below 2% are considered
+//! careful measurements (Taylor'97).
+
+/// Summary of a set of positive timing samples under a log-normal model.
+#[derive(Clone, Copy, Debug)]
+pub struct LogNormalSummary {
+    /// Number of samples.
+    pub n: usize,
+    /// Mean of ln(samples).
+    pub mu: f64,
+    /// Standard deviation of ln(samples) (unbiased).
+    pub sigma: f64,
+    /// Mean of the fitted log-normal: exp(mu + sigma^2/2).
+    pub mean: f64,
+    /// Relative uncertainty of the mean (fraction, not %):
+    /// sigma / sqrt(n) in log-space, which for small values equals the
+    /// relative error of the fitted mean.
+    pub rel_uncertainty: f64,
+}
+
+/// Fit a log-normal to positive samples. Panics on empty input; samples
+/// that are zero or negative are clamped to the smallest positive sample
+/// (timer resolution artifacts).
+pub fn lognormal_fit(samples: &[f64]) -> LogNormalSummary {
+    assert!(!samples.is_empty(), "lognormal_fit: empty sample set");
+    let floor = samples
+        .iter()
+        .copied()
+        .filter(|&x| x > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    let floor = if floor.is_finite() { floor } else { 1e-12 };
+    let logs: Vec<f64> = samples
+        .iter()
+        .map(|&x| if x > 0.0 { x } else { floor })
+        .map(f64::ln)
+        .collect();
+    let n = logs.len();
+    let mu = logs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        logs.iter().map(|l| (l - mu) * (l - mu)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let sigma = var.sqrt();
+    LogNormalSummary {
+        n,
+        mu,
+        sigma,
+        mean: (mu + var / 2.0).exp(),
+        rel_uncertainty: if n > 0 { sigma / (n as f64).sqrt() } else { 0.0 },
+    }
+}
+
+impl LogNormalSummary {
+    /// Relative uncertainty in percent (the unit the paper's captions use).
+    pub fn rel_uncertainty_pct(&self) -> f64 {
+        self.rel_uncertainty * 100.0
+    }
+
+    /// True when the measurement meets the paper's "careful measurement"
+    /// bar of < 2% relative uncertainty.
+    pub fn is_careful(&self) -> bool {
+        self.rel_uncertainty_pct() < 2.0
+    }
+}
+
+/// Simple arithmetic summary, used for cross-checking and for quantities
+/// that are not timing-like.
+#[derive(Clone, Copy, Debug)]
+pub struct BasicSummary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+pub fn basic_summary(samples: &[f64]) -> BasicSummary {
+    assert!(!samples.is_empty());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    BasicSummary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn constant_samples_zero_uncertainty() {
+        let s = lognormal_fit(&[2.0, 2.0, 2.0, 2.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.rel_uncertainty, 0.0);
+        assert!(s.is_careful());
+    }
+
+    #[test]
+    fn recovers_lognormal_parameters() {
+        // Generate log-normal samples with mu=ln(10), sigma=0.05.
+        let mut p = Prng::new(5);
+        let mu = 10.0f64.ln();
+        let sigma = 0.05;
+        let samples: Vec<f64> = (0..4000)
+            .map(|_| {
+                // Box-Muller from two uniforms.
+                let u1 = p.next_f64().max(1e-12);
+                let u2 = p.next_f64();
+                let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+                (mu + sigma * z).exp()
+            })
+            .collect();
+        let s = lognormal_fit(&samples);
+        assert!((s.mu - mu).abs() < 0.01, "mu {} vs {}", s.mu, mu);
+        assert!((s.sigma - sigma).abs() < 0.01);
+        // mean = exp(mu + sigma^2/2) ~ 10.0125
+        assert!((s.mean - 10.0).abs() < 0.2);
+        assert!(s.is_careful());
+    }
+
+    #[test]
+    fn zero_samples_clamped_not_panicking() {
+        let s = lognormal_fit(&[0.0, 1.0, 1.0]);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn basic_summary_median() {
+        let s = basic_summary(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        let s2 = basic_summary(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s2.median, 2.5);
+    }
+
+    #[test]
+    fn uncertainty_shrinks_with_samples() {
+        let mut p = Prng::new(17);
+        let few: Vec<f64> = (0..10).map(|_| 1.0 + 0.1 * p.next_f64()).collect();
+        let many: Vec<f64> = (0..1000).map(|_| 1.0 + 0.1 * p.next_f64()).collect();
+        assert!(lognormal_fit(&many).rel_uncertainty < lognormal_fit(&few).rel_uncertainty);
+    }
+}

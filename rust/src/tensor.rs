@@ -1,0 +1,180 @@
+//! Host-side tensors: the values the automation layer inspects to build a
+//! call signature (the analog of Julia argument types driving `gen_launch`
+//! specialization, paper §6.2).
+
+use crate::error::{Error, Result};
+
+/// Element type of a [`Tensor`]. The artifact signature format uses the
+/// same short names as the manifest (`f32`, `f64`, `i32`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+    I32,
+}
+
+impl Dtype {
+    pub fn size_of(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+            Dtype::I32 => "i32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f64" => Ok(Dtype::F64),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Type(format!("unknown dtype `{other}`"))),
+        }
+    }
+}
+
+/// A dense host tensor (row-major). Storage is raw bytes so buffers can be
+/// copied to device memory without reinterpretation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dtype: Dtype,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(dtype: Dtype, shape: &[usize], data: Vec<u8>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel * dtype.size_of() {
+            return Err(Error::Type(format!(
+                "tensor data length {} does not match {:?} x {}",
+                data.len(),
+                shape,
+                dtype.name()
+            )));
+        }
+        Ok(Tensor { dtype, shape: shape.to_vec(), data })
+    }
+
+    pub fn from_f32(values: &[f32], shape: &[usize]) -> Self {
+        let numel: usize = shape.iter().product();
+        assert_eq!(values.len(), numel, "from_f32: shape/product mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        let numel: usize = shape.iter().product();
+        Tensor { dtype: Dtype::F32, shape: shape.to_vec(), data: vec![0u8; numel * 4] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::from_f32(&[v], &[])
+    }
+
+    /// Lossy conversion from boxed f64 values (the hostlang layer) —
+    /// models the paper's "copying and converting Julia datatypes before
+    /// upload" overhead (§7.3).
+    pub fn from_f64_as_f32(values: &[f64], shape: &[usize]) -> Self {
+        let v32: Vec<f32> = values.iter().map(|&v| v as f32).collect();
+        Tensor::from_f32(&v32, shape)
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// View as f32 slice; panics if dtype is not F32 (programming error).
+    pub fn as_f32(&self) -> &[f32] {
+        assert_eq!(self.dtype, Dtype::F32);
+        // Safety: data is always allocated in dtype.size_of() multiples and
+        // Vec<u8> from to_le_bytes of f32 is layout-compatible on LE hosts.
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.numel())
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, Dtype::F32);
+        let n = self.numel();
+        unsafe { std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, n) }
+    }
+
+    pub fn to_vec_f32(&self) -> Vec<f32> {
+        self.as_f32().to_vec()
+    }
+
+    /// Signature fragment, e.g. `f32[90,128]` — the unit of specialization.
+    pub fn signature(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("{}[{}]", self.dtype.name(), dims.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(&[1.0, -2.5, 3.25], &[3]);
+        assert_eq!(t.as_f32(), &[1.0, -2.5, 3.25]);
+        assert_eq!(t.byte_len(), 12);
+        assert_eq!(t.signature(), "f32[3]");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(Dtype::F32, &[4], vec![0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn scalar_signature() {
+        assert_eq!(Tensor::scalar_f32(2.0).signature(), "f32[]");
+        assert_eq!(Tensor::scalar_f32(2.0).numel(), 1);
+    }
+
+    #[test]
+    fn f64_conversion_narrows() {
+        let t = Tensor::from_f64_as_f32(&[1.5, 2.5], &[2]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.as_f32(), &[1.5f32, 2.5f32]);
+    }
+
+    #[test]
+    fn mutation_through_view() {
+        let mut t = Tensor::zeros_f32(&[2, 2]);
+        t.as_f32_mut()[3] = 7.0;
+        assert_eq!(t.as_f32(), &[0.0, 0.0, 0.0, 7.0]);
+        assert_eq!(t.signature(), "f32[2,2]");
+    }
+}

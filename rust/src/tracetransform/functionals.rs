@@ -1,0 +1,239 @@
+//! The T/P/F functional stack of the trace transform (Kadyrov & Petrou;
+//! paper §7.1).
+//!
+//! * **T-functionals** map each line (column of the rotated image) to a
+//!   scalar → one sinogram row per orientation.
+//! * **P-functionals** (diametric) reduce each sinogram row over the
+//!   offset axis → the circus function of the orientation.
+//! * **F-functionals** (circus) reduce the circus function to a single
+//!   scalar → one feature per (T, P, F) triple.
+//!
+//! Names and formulas match `python/compile/kernels/tfunctionals.py` and
+//! `ref.py` exactly, so features cross-check across all five
+//! implementations and both backends.
+
+/// T-functionals over a line f(r), with c = (n-1)/2 the line centre.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TFunctional {
+    /// Σ f(r) — the Radon transform.
+    Radon,
+    /// Σ |r − c|·f(r).
+    T1,
+    /// Σ (r − c)²·f(r).
+    T2,
+    /// max f(r).
+    TMax,
+}
+
+/// P-functionals over a sinogram row g(p).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PFunctional {
+    /// Σ g(p).
+    Sum,
+    /// max g(p).
+    Max,
+    /// Σ |g(p)|.
+    L1,
+}
+
+/// F-functionals over the circus function h(θ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FFunctional {
+    /// mean h.
+    Mean,
+    /// max h.
+    Max,
+}
+
+pub const T_SET: [TFunctional; 4] =
+    [TFunctional::Radon, TFunctional::T1, TFunctional::T2, TFunctional::TMax];
+pub const P_SET: [PFunctional; 3] = [PFunctional::Sum, PFunctional::Max, PFunctional::L1];
+pub const F_SET: [FFunctional; 2] = [FFunctional::Mean, FFunctional::Max];
+
+/// Total number of features produced by the full stack.
+pub const FEATURE_COUNT: usize = T_SET.len() * P_SET.len() * F_SET.len();
+
+impl TFunctional {
+    /// Manifest/kernel name (shared with the Python side).
+    pub fn name(self) -> &'static str {
+        match self {
+            TFunctional::Radon => "radon",
+            TFunctional::T1 => "t1",
+            TFunctional::T2 => "t2",
+            TFunctional::TMax => "tmax",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<TFunctional> {
+        T_SET.iter().copied().find(|t| t.name() == name)
+    }
+
+    /// Apply to a strided column: elements `col[i*stride]`, `n` of them.
+    #[inline]
+    pub fn apply_strided(self, col: &[f32], n: usize, stride: usize) -> f32 {
+        let c = (n as f32 - 1.0) / 2.0;
+        match self {
+            TFunctional::Radon => {
+                let mut acc = 0.0;
+                for i in 0..n {
+                    acc += col[i * stride];
+                }
+                acc
+            }
+            TFunctional::T1 => {
+                let mut acc = 0.0;
+                for i in 0..n {
+                    acc += (i as f32 - c).abs() * col[i * stride];
+                }
+                acc
+            }
+            TFunctional::T2 => {
+                let mut acc = 0.0;
+                for i in 0..n {
+                    let d = i as f32 - c;
+                    acc += d * d * col[i * stride];
+                }
+                acc
+            }
+            TFunctional::TMax => {
+                let mut acc = f32::NEG_INFINITY;
+                for i in 0..n {
+                    acc = acc.max(col[i * stride]);
+                }
+                acc
+            }
+        }
+    }
+}
+
+impl PFunctional {
+    pub fn name(self) -> &'static str {
+        match self {
+            PFunctional::Sum => "psum",
+            PFunctional::Max => "pmax",
+            PFunctional::L1 => "pl1",
+        }
+    }
+
+    pub fn apply(self, row: &[f32]) -> f32 {
+        match self {
+            PFunctional::Sum => row.iter().sum(),
+            PFunctional::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+            PFunctional::L1 => row.iter().map(|v| v.abs()).sum(),
+        }
+    }
+}
+
+impl FFunctional {
+    pub fn name(self) -> &'static str {
+        match self {
+            FFunctional::Mean => "fmean",
+            FFunctional::Max => "fmax",
+        }
+    }
+
+    pub fn apply(self, circus: &[f32]) -> f32 {
+        match self {
+            FFunctional::Mean => circus.iter().sum::<f32>() / circus.len() as f32,
+            FFunctional::Max => circus.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+        }
+    }
+}
+
+/// Feature index order: (t, p, f) lexicographic over the sets above —
+/// identical to `python/compile/model.py::FEATURE_ORDER`.
+pub fn feature_order() -> Vec<(TFunctional, PFunctional, FFunctional)> {
+    let mut order = Vec::with_capacity(FEATURE_COUNT);
+    for t in T_SET {
+        for p in P_SET {
+            for f in F_SET {
+                order.push((t, p, f));
+            }
+        }
+    }
+    order
+}
+
+/// Reduce a sinogram (`angles` rows × `width` offsets, row-major) with
+/// every (P, F) pair, in order. Returns `P_SET.len() * F_SET.len()`
+/// features for the given T's sinogram.
+pub fn reduce_sinogram(sino: &[f32], angles: usize, width: usize) -> Vec<f32> {
+    assert_eq!(sino.len(), angles * width);
+    let mut out = Vec::with_capacity(P_SET.len() * F_SET.len());
+    for p in P_SET {
+        let circus: Vec<f32> = (0..angles)
+            .map(|a| p.apply(&sino[a * width..(a + 1) * width]))
+            .collect();
+        for f in F_SET {
+            out.push(f.apply(&circus));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn radon_is_plain_sum() {
+        let col = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(TFunctional::Radon.apply_strided(&col, 4, 1), 10.0);
+    }
+
+    #[test]
+    fn t1_t2_weights_centered() {
+        // n=3 -> c=1 -> weights |{-1,0,1}| = {1,0,1} and squares {1,0,1}
+        let col = [2.0, 100.0, 4.0];
+        assert_eq!(TFunctional::T1.apply_strided(&col, 3, 1), 6.0);
+        assert_eq!(TFunctional::T2.apply_strided(&col, 3, 1), 6.0);
+    }
+
+    #[test]
+    fn tmax_handles_negatives() {
+        let col = [-5.0, -2.0, -9.0];
+        assert_eq!(TFunctional::TMax.apply_strided(&col, 3, 1), -2.0);
+    }
+
+    #[test]
+    fn strided_access_reads_columns() {
+        // 2x3 row-major matrix; column 1 = [2, 5]
+        let m = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(TFunctional::Radon.apply_strided(&m[1..], 2, 3), 7.0);
+    }
+
+    #[test]
+    fn p_functionals() {
+        let row = [1.0, -2.0, 3.0];
+        assert_eq!(PFunctional::Sum.apply(&row), 2.0);
+        assert_eq!(PFunctional::Max.apply(&row), 3.0);
+        assert_eq!(PFunctional::L1.apply(&row), 6.0);
+    }
+
+    #[test]
+    fn f_functionals() {
+        let h = [1.0, 2.0, 3.0, 6.0];
+        assert_eq!(FFunctional::Mean.apply(&h), 3.0);
+        assert_eq!(FFunctional::Max.apply(&h), 6.0);
+    }
+
+    #[test]
+    fn feature_order_matches_python_convention() {
+        let order = feature_order();
+        assert_eq!(order.len(), FEATURE_COUNT);
+        assert_eq!(order[0], (TFunctional::Radon, PFunctional::Sum, FFunctional::Mean));
+        assert_eq!(order[1], (TFunctional::Radon, PFunctional::Sum, FFunctional::Max));
+        assert_eq!(
+            order[FEATURE_COUNT - 1],
+            (TFunctional::TMax, PFunctional::L1, FFunctional::Max)
+        );
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for t in T_SET {
+            assert_eq!(TFunctional::from_name(t.name()), Some(t));
+        }
+        assert_eq!(TFunctional::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,295 @@
+//! Images: storage, synthetic phantom generation and PGM I/O.
+//!
+//! The paper's benchmark inputs are grayscale images of varying sizes
+//! (§7.3 sweeps the input size). We generate Shepp-Logan-style ellipse
+//! phantoms deterministically so every implementation sees identical
+//! pixels, and support binary PGM (P5) for external images.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use crate::util::Prng;
+
+/// A square grayscale image, f32 pixels in [0, 1], row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    size: usize,
+    data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(size: usize, data: Vec<f32>) -> Result<Image> {
+        if data.len() != size * size {
+            return Err(Error::Type(format!(
+                "image data length {} != {size}x{size}",
+                data.len()
+            )));
+        }
+        Ok(Image { size, data })
+    }
+
+    pub fn zeros(size: usize) -> Image {
+        Image { size, data: vec![0.0; size * size] }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn pixels(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn pixels_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn get(&self, row: usize, col: usize) -> f32 {
+        self.data[row * self.size + col]
+    }
+
+    pub fn set(&mut self, row: usize, col: usize, v: f32) {
+        self.data[row * self.size + col] = v;
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_f32(&self.data, &[self.size, self.size])
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Result<Image> {
+        let shape = t.shape();
+        if shape.len() != 2 || shape[0] != shape[1] {
+            return Err(Error::Type(format!(
+                "expected square 2-d tensor, got {}",
+                t.signature()
+            )));
+        }
+        Image::new(shape[0], t.as_f32().to_vec())
+    }
+
+    /// Mean pixel intensity (used by sanity checks).
+    pub fn mean(&self) -> f32 {
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    // ---- PGM (P5) I/O ----------------------------------------------------
+
+    pub fn write_pgm(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "P5\n{} {}\n255\n", self.size, self.size)?;
+        let bytes: Vec<u8> = self
+            .data
+            .iter()
+            .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+            .collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn read_pgm(path: impl AsRef<Path>) -> Result<Image> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        Self::parse_pgm(&bytes)
+    }
+
+    pub fn parse_pgm(bytes: &[u8]) -> Result<Image> {
+        let bad = |m: &str| Error::Other(format!("PGM parse error: {m}"));
+        // header: magic, width, height, maxval — whitespace/comment separated
+        let mut pos = 0usize;
+        let mut token = |bytes: &[u8]| -> Result<String> {
+            // skip whitespace and comments
+            loop {
+                while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+                    pos += 1;
+                }
+                if pos < bytes.len() && bytes[pos] == b'#' {
+                    while pos < bytes.len() && bytes[pos] != b'\n' {
+                        pos += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            let start = pos;
+            while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if start == pos {
+                return Err(bad("unexpected EOF in header"));
+            }
+            Ok(String::from_utf8_lossy(&bytes[start..pos]).into_owned())
+        };
+        if token(bytes)? != "P5" {
+            return Err(bad("not a binary PGM (P5)"));
+        }
+        let w: usize = token(bytes)?.parse().map_err(|_| bad("bad width"))?;
+        let h: usize = token(bytes)?.parse().map_err(|_| bad("bad height"))?;
+        let maxval: usize = token(bytes)?.parse().map_err(|_| bad("bad maxval"))?;
+        if w != h {
+            return Err(bad("only square images supported"));
+        }
+        if maxval == 0 || maxval > 255 {
+            return Err(bad("unsupported maxval"));
+        }
+        pos += 1; // single whitespace after maxval
+        let need = w * h;
+        if bytes.len() < pos + need {
+            return Err(bad("truncated pixel data"));
+        }
+        let data: Vec<f32> = bytes[pos..pos + need]
+            .iter()
+            .map(|&b| b as f32 / maxval as f32)
+            .collect();
+        Image::new(w, data)
+    }
+}
+
+/// One ellipse of a phantom: center (fractions of the image), semi-axes,
+/// rotation and additive intensity.
+#[derive(Clone, Copy, Debug)]
+pub struct Ellipse {
+    pub cx: f32,
+    pub cy: f32,
+    pub a: f32,
+    pub b: f32,
+    pub angle: f32,
+    pub intensity: f32,
+}
+
+/// Render ellipses into an image (additive, clamped at the end).
+pub fn render_phantom(size: usize, ellipses: &[Ellipse]) -> Image {
+    let mut img = Image::zeros(size);
+    let s = size as f32;
+    for row in 0..size {
+        for col in 0..size {
+            let x = (col as f32 + 0.5) / s - 0.5;
+            let y = (row as f32 + 0.5) / s - 0.5;
+            let mut v = 0.0f32;
+            for e in ellipses {
+                let dx = x - e.cx;
+                let dy = y - e.cy;
+                let (sa, ca) = e.angle.sin_cos();
+                let u = ca * dx + sa * dy;
+                let w = -sa * dx + ca * dy;
+                if (u / e.a) * (u / e.a) + (w / e.b) * (w / e.b) <= 1.0 {
+                    v += e.intensity;
+                }
+            }
+            img.set(row, col, v.clamp(0.0, 1.0));
+        }
+    }
+    img
+}
+
+/// The standard head-phantom-like test image used by the benchmarks.
+pub fn shepp_logan(size: usize) -> Image {
+    render_phantom(
+        size,
+        &[
+            Ellipse { cx: 0.0, cy: 0.0, a: 0.345, b: 0.46, angle: 0.0, intensity: 0.8 },
+            Ellipse { cx: 0.0, cy: -0.0092, a: 0.331, b: 0.437, angle: 0.0, intensity: -0.3 },
+            Ellipse { cx: 0.11, cy: 0.0, a: 0.055, b: 0.155, angle: -0.31, intensity: -0.2 },
+            Ellipse { cx: -0.11, cy: 0.0, a: 0.08, b: 0.205, angle: 0.31, intensity: -0.2 },
+            Ellipse { cx: 0.0, cy: 0.175, a: 0.105, b: 0.125, angle: 0.0, intensity: 0.15 },
+            Ellipse { cx: 0.0, cy: 0.05, a: 0.023, b: 0.023, angle: 0.0, intensity: 0.15 },
+            Ellipse { cx: 0.0, cy: -0.053, a: 0.023, b: 0.023, angle: 0.0, intensity: 0.15 },
+            Ellipse { cx: -0.04, cy: -0.303, a: 0.029, b: 0.011, angle: 0.0, intensity: 0.15 },
+            Ellipse { cx: 0.03, cy: -0.303, a: 0.011, b: 0.011, angle: 0.0, intensity: 0.15 },
+            Ellipse { cx: 0.03, cy: 0.303, a: 0.011, b: 0.023, angle: 0.0, intensity: 0.15 },
+        ],
+    )
+}
+
+/// A deterministic random phantom (corpus generation for the E2E driver).
+pub fn random_phantom(size: usize, seed: u64) -> Image {
+    let mut rng = Prng::new(seed);
+    let n = rng.usize_in(3, 7);
+    let ellipses: Vec<Ellipse> = (0..n)
+        .map(|_| Ellipse {
+            cx: rng.f32_in(-0.25, 0.25),
+            cy: rng.f32_in(-0.25, 0.25),
+            a: rng.f32_in(0.04, 0.3),
+            b: rng.f32_in(0.04, 0.3),
+            angle: rng.f32_in(0.0, std::f32::consts::PI),
+            intensity: rng.f32_in(0.1, 0.5),
+        })
+        .collect();
+    render_phantom(size, &ellipses)
+}
+
+/// Orientation set: `n` angles uniform over [0, π).
+pub fn orientations(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| i as f32 * std::f32::consts::PI / n as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phantom_deterministic_and_bounded() {
+        let a = shepp_logan(64);
+        let b = shepp_logan(64);
+        assert_eq!(a, b);
+        assert!(a.pixels().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(a.mean() > 0.05, "phantom should have content: {}", a.mean());
+    }
+
+    #[test]
+    fn random_phantoms_differ_by_seed() {
+        let a = random_phantom(32, 1);
+        let b = random_phantom(32, 2);
+        assert_ne!(a, b);
+        assert_eq!(a, random_phantom(32, 1));
+    }
+
+    #[test]
+    fn pgm_roundtrip() {
+        let img = shepp_logan(32);
+        let dir = std::env::temp_dir().join("hlgpu_test_pgm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("phantom.pgm");
+        img.write_pgm(&path).unwrap();
+        let back = Image::read_pgm(&path).unwrap();
+        assert_eq!(back.size(), 32);
+        // 8-bit quantization: within 1/255
+        for (a, b) in img.pixels().iter().zip(back.pixels()) {
+            assert!((a - b).abs() <= 1.0 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn pgm_parses_comments() {
+        let mut bytes = b"P5\n# a comment\n2 2\n255\n".to_vec();
+        bytes.extend_from_slice(&[0, 128, 255, 64]);
+        let img = Image::parse_pgm(&bytes).unwrap();
+        assert_eq!(img.size(), 2);
+        assert!((img.get(0, 1) - 128.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pgm_rejects_truncated() {
+        let bytes = b"P5\n4 4\n255\n\x00\x01".to_vec();
+        assert!(Image::parse_pgm(&bytes).is_err());
+    }
+
+    #[test]
+    fn orientations_cover_half_turn() {
+        let o = orientations(90);
+        assert_eq!(o.len(), 90);
+        assert_eq!(o[0], 0.0);
+        assert!(o[89] < std::f32::consts::PI);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let img = shepp_logan(16);
+        let t = img.to_tensor();
+        assert_eq!(t.shape(), &[16, 16]);
+        assert_eq!(Image::from_tensor(&t).unwrap(), img);
+    }
+}

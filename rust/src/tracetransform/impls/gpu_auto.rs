@@ -1,0 +1,159 @@
+//! Implementation 5 — "Julia (CPU + GPU)": the full framework. Kernels
+//! are launched through the automation layer (`Launcher`, the `@cuda`
+//! analog): arguments wrapped `CuIn`/`CuOut`, specialization cached per
+//! signature, transfers minimized, module management invisible — the host
+//! code shrinks to the paper's Listing 3.
+
+use crate::coordinator::{arg, KernelRegistry, Launcher};
+use crate::driver::{Context, LaunchConfig};
+use crate::error::Result;
+use crate::tensor::Tensor;
+use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
+use crate::tracetransform::image::Image;
+use crate::tracetransform::impls::{register_trace_providers, DeviceChoice, TraceImpl};
+
+/// Which kernel structure the automated path launches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoMode {
+    /// One fused `sinogram_all` launch per image (the optimized default).
+    SinogramAll,
+    /// One launch per T-functional (the paper's original 5-kernel
+    /// structure; §Perf "before" configuration).
+    PerFunctional,
+    /// One `trace_full` launch: the whole pipeline, P/F included, on
+    /// device (L2 composition; PJRT artifacts only).
+    TraceFull,
+}
+
+pub struct GpuAuto {
+    launcher: Launcher,
+    mode: AutoMode,
+}
+
+impl GpuAuto {
+    pub fn new() -> Result<GpuAuto> {
+        Self::on_device(DeviceChoice::Pjrt)
+    }
+
+    pub fn on_device(device: DeviceChoice) -> Result<GpuAuto> {
+        let launcher = match device {
+            DeviceChoice::Pjrt => Launcher::with_default_context()?,
+            DeviceChoice::Emulator => {
+                let mut l = Launcher::emulator()?;
+                register_trace_providers(l.registry_mut());
+                l
+            }
+        };
+        Ok(GpuAuto { launcher, mode: AutoMode::SinogramAll })
+    }
+
+    pub fn with_mode(mut self, mode: AutoMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Single-launch variant using the AOT fused full-pipeline graph.
+    pub fn fused() -> Result<GpuAuto> {
+        let ctx = Context::default_device()?;
+        let registry = KernelRegistry::with_default_library()?;
+        Ok(GpuAuto { launcher: Launcher::new(ctx, registry), mode: AutoMode::TraceFull })
+    }
+
+    pub fn launcher(&self) -> &Launcher {
+        &self.launcher
+    }
+
+    pub fn launcher_mut(&mut self) -> &mut Launcher {
+        &mut self.launcher
+    }
+}
+
+impl TraceImpl for GpuAuto {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            AutoMode::SinogramAll => "gpu-auto",
+            AutoMode::PerFunctional => "gpu-auto-staged",
+            AutoMode::TraceFull => "gpu-auto-fused",
+        }
+    }
+
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+        // SLOC:core-begin
+        let s = img.size();
+        let a = thetas.len();
+        let nt = T_SET.len();
+        let img_t = img.to_tensor();
+        let angles_t = Tensor::from_f32(thetas, &[a]);
+
+        match self.mode {
+            AutoMode::TraceFull => {
+                // one launch of the L2-fused pipeline
+                let mut out =
+                    Tensor::zeros_f32(&[crate::tracetransform::functionals::FEATURE_COUNT]);
+                self.launcher.launch(
+                    "trace_full",
+                    LaunchConfig::new(a as u32, s as u32),
+                    &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut out)],
+                )?;
+                Ok(out.to_vec_f32())
+            }
+            AutoMode::SinogramAll => {
+                // @cuda (a, s) sinogram_all(CuIn(img), CuIn(angles), CuOut(sinos))
+                let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
+                self.launcher.launch(
+                    "sinogram_all",
+                    LaunchConfig::new(a as u32, s as u32),
+                    &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut sinos)],
+                )?;
+                let all = sinos.as_f32();
+                let mut feats = Vec::with_capacity(nt * 6);
+                for ti in 0..nt {
+                    feats.extend(reduce_sinogram(&all[ti * a * s..(ti + 1) * a * s], a, s));
+                }
+                Ok(feats)
+            }
+            AutoMode::PerFunctional => {
+                // the paper's structure: one kernel per T-functional,
+                // @cuda (a, s) sinogram_t(CuIn(img), CuIn(angles), CuOut(sino))
+                let mut feats = Vec::with_capacity(nt * 6);
+                let mut sino = Tensor::zeros_f32(&[a, s]);
+                for t in T_SET {
+                    self.launcher.launch(
+                        &format!("sinogram_{}", t.name()),
+                        LaunchConfig::new(a as u32, s as u32),
+                        &mut [
+                            arg::cu_in(&img_t),
+                            arg::cu_in(&angles_t),
+                            arg::cu_out(&mut sino),
+                        ],
+                    )?;
+                    feats.extend(reduce_sinogram(sino.as_f32(), a, s));
+                }
+                Ok(feats)
+            }
+        }
+        // SLOC:core-end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracetransform::functionals::FEATURE_COUNT;
+    use crate::tracetransform::image::{orientations, shepp_logan};
+
+    #[test]
+    fn emulator_auto_runs_and_caches() {
+        let img = shepp_logan(12);
+        let thetas = orientations(5);
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let f1 = m.features(&img, &thetas).unwrap();
+        assert_eq!(f1.len(), FEATURE_COUNT);
+        let cold = m.launcher().metrics().cold_specializations;
+        assert_eq!(cold, 1); // one fused sinogram_all specialization
+        // second call: fully warm
+        let f2 = m.features(&img, &thetas).unwrap();
+        assert_eq!(f1, f2);
+        assert_eq!(m.launcher().metrics().cold_specializations, cold);
+    }
+}

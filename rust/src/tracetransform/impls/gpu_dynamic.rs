@@ -1,0 +1,172 @@
+//! Implementation 4 — "Julia (CPU) + CUDA (GPU)": dynamic `hostlang` host
+//! code, manual driver API, precompiled kernels. The host data lives in
+//! boxed f64 arrays, so every launch pays the "copying and converting
+//! Julia datatypes before they are uploaded" cost the paper measures
+//! (§7.3), and the between-kernel glue (P/F stacks) runs dynamically.
+
+use std::collections::HashMap;
+
+use crate::driver::{Context, Function, KernelArg, LaunchConfig, ModuleSource};
+use crate::error::Result;
+use crate::hostlang::DynArray;
+use crate::runtime::ArtifactLibrary;
+use crate::tensor::Tensor;
+use crate::tracetransform::functionals::{FFunctional, PFunctional, F_SET, P_SET, T_SET};
+use crate::tracetransform::image::Image;
+use crate::tracetransform::impls::{DeviceChoice, TraceImpl};
+
+pub struct GpuDynamic {
+    ctx: Context,
+    device: DeviceChoice,
+    library: Option<ArtifactLibrary>,
+    functions: HashMap<(&'static str, usize, usize), Function>,
+}
+
+type DynFeats = Vec<f32>;
+
+impl GpuDynamic {
+    pub fn new() -> Result<GpuDynamic> {
+        Self::on_device(DeviceChoice::Pjrt)
+    }
+
+    pub fn on_device(device: DeviceChoice) -> Result<GpuDynamic> {
+        let ctx = Context::create(&crate::driver::device(device.ordinal())?)?;
+        let library = match device {
+            DeviceChoice::Pjrt => Some(ArtifactLibrary::load_default()?),
+            DeviceChoice::Emulator => None,
+        };
+        Ok(GpuDynamic { ctx, device, library, functions: HashMap::new() })
+    }
+
+    fn function(&mut self, s: usize, a: usize) -> Result<Function> {
+        let key = ("sinogram_all", s, a);
+        if let Some(f) = self.functions.get(&key) {
+            return Ok(f.clone());
+        }
+        let f = match self.device {
+            DeviceChoice::Pjrt => {
+                let lib = self.library.as_ref().expect("library loaded for pjrt");
+                let sig = format!("f32[{s},{s}];f32[{a}]");
+                let entry = lib.find("sinogram_all", &sig)?.clone();
+                let module = self.ctx.load_module(&lib.module_source(&entry))?;
+                module.function("main")?
+            }
+            DeviceChoice::Emulator => {
+                let module = self.ctx.load_module(&ModuleSource::Vtx {
+                    kernels: vec![crate::emulator::kernels::sinogram_all()?],
+                })?;
+                module.function("sinogram_all")?
+            }
+        };
+        self.functions.insert(key, f.clone());
+        Ok(f)
+    }
+}
+
+impl TraceImpl for GpuDynamic {
+    fn name(&self) -> &'static str {
+        "gpu-dynamic"
+    }
+
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+        // SLOC:core-begin
+        let s = img.size();
+        let a = thetas.len();
+
+        // host world: boxed f64 arrays (the dynamic language's natural type)
+        let dimg = DynArray::from_f32(img.pixels(), &[s, s])?;
+        let dangles =
+            DynArray::from_vec(thetas.iter().map(|&t| t as f64).collect(), &[a])?;
+
+        // per-launch conversion: f64 boxes -> f32 tensors (the overhead
+        // the paper attributes to argument conversion)
+        let img_t = Tensor::from_f64_as_f32(
+            &dimg.to_f32_vec().iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &[s, s],
+        );
+        let angles_t = Tensor::from_f64_as_f32(
+            &dangles.to_f32_vec().iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &[a],
+        );
+
+        let nt = T_SET.len();
+        let ga = self.ctx.alloc(img_t.byte_len())?;
+        let gb = self.ctx.alloc(angles_t.byte_len())?;
+        let gc = self.ctx.alloc(nt * a * s * 4)?;
+        self.ctx.upload(ga, img_t.bytes())?;
+        self.ctx.upload(gb, angles_t.bytes())?;
+
+        // one fused launch computes every T-functional's sinogram
+        let f = self.function(s, a)?;
+        let args = match self.device {
+            DeviceChoice::Pjrt => {
+                vec![KernelArg::Ptr(ga), KernelArg::Ptr(gb), KernelArg::Ptr(gc)]
+            }
+            DeviceChoice::Emulator => vec![
+                KernelArg::Ptr(ga),
+                KernelArg::Ptr(gb),
+                KernelArg::Ptr(gc),
+                KernelArg::I32(s as i32),
+            ],
+        };
+        f.launch(&LaunchConfig::new(a as u32, s as u32), &args, self.ctx.memory()?)?;
+        let mut sinos_host = Tensor::zeros_f32(&[nt, a, s]);
+        self.ctx.download(gc, sinos_host.bytes_mut())?;
+
+        let mut feats: DynFeats = Vec::with_capacity(nt * 6);
+        for ti in 0..nt {
+            // back into the boxed world before the dynamic P/F stacks
+            let sino = DynArray::zeros(&[a, s]);
+            sino.fill_from_f32(&sinos_host.as_f32()[ti * a * s..(ti + 1) * a * s])?;
+            for p in P_SET {
+                let mut circus = Vec::with_capacity(a);
+                for ai in 1..=a {
+                    let mut acc = match p {
+                        PFunctional::Max => f64::NEG_INFINITY,
+                        _ => 0.0,
+                    };
+                    for x in 1..=s {
+                        let v = sino.get(&[ai, x])?.as_float()?;
+                        match p {
+                            PFunctional::Sum => acc += v,
+                            PFunctional::Max => acc = acc.max(v),
+                            PFunctional::L1 => acc += v.abs(),
+                        }
+                    }
+                    circus.push(acc);
+                }
+                for f in F_SET {
+                    let v = match f {
+                        FFunctional::Mean => circus.iter().sum::<f64>() / a as f64,
+                        FFunctional::Max => {
+                            circus.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+                        }
+                    };
+                    feats.push(v as f32);
+                }
+            }
+        }
+
+        self.ctx.free(ga)?;
+        self.ctx.free(gb)?;
+        self.ctx.free(gc)?;
+        // SLOC:core-end
+        Ok(feats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracetransform::functionals::FEATURE_COUNT;
+    use crate::tracetransform::image::{orientations, shepp_logan};
+
+    #[test]
+    fn emulator_dynamic_produces_features() {
+        let img = shepp_logan(12);
+        let mut m = GpuDynamic::on_device(DeviceChoice::Emulator).unwrap();
+        let feats = m.features(&img, &orientations(5)).unwrap();
+        assert_eq!(feats.len(), FEATURE_COUNT);
+        assert!(feats.iter().all(|f| f.is_finite()));
+    }
+}

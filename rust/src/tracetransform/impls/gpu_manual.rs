@@ -1,0 +1,227 @@
+//! Implementation 2 — "C++ (CPU) + CUDA (GPU)": native host code driving
+//! the **manual** driver API (the paper's Listing 2 flow): load module,
+//! get function, alloc, upload, launch, download, free. No automation
+//! layer; module handles are cached by hand exactly like the CUDA C
+//! version keeps its `CUmodule` globals.
+
+use std::collections::HashMap;
+
+use crate::driver::{Context, Function, KernelArg, LaunchConfig, ModuleSource};
+use crate::error::Result;
+use crate::runtime::ArtifactLibrary;
+use crate::tensor::Tensor;
+use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
+use crate::tracetransform::image::Image;
+use crate::tracetransform::impls::{DeviceChoice, TraceImpl};
+
+pub struct GpuManual {
+    ctx: Context,
+    device: DeviceChoice,
+    library: Option<ArtifactLibrary>,
+    /// Hand-managed function cache: (kernel, size, angles) -> handle.
+    functions: HashMap<(String, usize, usize), Function>,
+    /// Per-functional kernels instead of the fused `sinogram_all`
+    /// (ablation; the paper's original 5-kernel structure).
+    staged: bool,
+}
+
+impl GpuManual {
+    pub fn new() -> Result<GpuManual> {
+        Self::on_device(DeviceChoice::Pjrt)
+    }
+
+    pub fn on_device(device: DeviceChoice) -> Result<GpuManual> {
+        let ctx = Context::create(&crate::driver::device(device.ordinal())?)?;
+        let library = match device {
+            DeviceChoice::Pjrt => Some(ArtifactLibrary::load_default()?),
+            DeviceChoice::Emulator => None,
+        };
+        Ok(GpuManual { ctx, device, library, functions: HashMap::new(), staged: false })
+    }
+
+    /// Use one kernel per T-functional (4 launches) instead of the fused
+    /// multi-functional kernel — the §Perf "before" configuration.
+    pub fn staged(mut self) -> Self {
+        self.staged = true;
+        self
+    }
+
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    fn function(&mut self, kernel: &str, s: usize, a: usize) -> Result<Function> {
+        let key = (kernel.to_string(), s, a);
+        if let Some(f) = self.functions.get(&key) {
+            return Ok(f.clone());
+        }
+        let f = match self.device {
+            DeviceChoice::Pjrt => {
+                let lib = self.library.as_ref().expect("library loaded for pjrt");
+                let sig = format!("f32[{s},{s}];f32[{a}]");
+                let entry = lib.find(kernel, &sig)?.clone();
+                let module = self.ctx.load_module(&lib.module_source(&entry))?;
+                module.function("main")?
+            }
+            DeviceChoice::Emulator => {
+                let vk = if kernel == "sinogram_all" {
+                    crate::emulator::kernels::sinogram_all()?
+                } else {
+                    let tname = kernel.strip_prefix("sinogram_").unwrap_or(kernel);
+                    crate::emulator::kernels::sinogram(tname)?
+                };
+                let module = self
+                    .ctx
+                    .load_module(&ModuleSource::Vtx { kernels: vec![vk] })?;
+                module.function(kernel)?
+            }
+        };
+        self.functions.insert(key, f.clone());
+        Ok(f)
+    }
+}
+
+impl TraceImpl for GpuManual {
+    fn name(&self) -> &'static str {
+        "gpu-manual"
+    }
+
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+        // SLOC:core-begin
+        let s = img.size();
+        let a = thetas.len();
+        let nt = T_SET.len();
+
+        // manual memory management, Listing 2 style
+        let img_t = img.to_tensor();
+        let angles_t = Tensor::from_f32(thetas, &[a]);
+        let ga = self.ctx.alloc(img_t.byte_len())?;
+        let gb = self.ctx.alloc(angles_t.byte_len())?;
+        let out_elems = if self.staged { a * s } else { nt * a * s };
+        let gc = self.ctx.alloc(out_elems * 4)?;
+        self.ctx.upload(ga, img_t.bytes())?;
+        self.ctx.upload(gb, angles_t.bytes())?;
+
+        let scalar_args = |device: DeviceChoice| -> Vec<KernelArg> {
+            let mut v = vec![KernelArg::Ptr(ga), KernelArg::Ptr(gb), KernelArg::Ptr(gc)];
+            if device == DeviceChoice::Emulator {
+                v.push(KernelArg::I32(s as i32));
+            }
+            v
+        };
+
+        let mut feats = Vec::with_capacity(nt * 6);
+        if self.staged {
+            // original structure: one kernel launch per T-functional
+            let mut sino = Tensor::zeros_f32(&[a, s]);
+            for t in T_SET {
+                let f = self.function(&format!("sinogram_{}", t.name()), s, a)?;
+                f.launch(
+                    &LaunchConfig::new(a as u32, s as u32),
+                    &scalar_args(self.device),
+                    self.ctx.memory()?,
+                )?;
+                self.ctx.download(gc, sino.bytes_mut())?;
+                feats.extend(reduce_sinogram(sino.as_f32(), a, s));
+            }
+        } else {
+            // optimized: one fused launch computes all |T| sinograms
+            let f = self.function("sinogram_all", s, a)?;
+            f.launch(
+                &LaunchConfig::new(a as u32, s as u32),
+                &scalar_args(self.device),
+                self.ctx.memory()?,
+            )?;
+            let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
+            self.ctx.download(gc, sinos.bytes_mut())?;
+            let all = sinos.as_f32();
+            for ti in 0..nt {
+                feats.extend(reduce_sinogram(&all[ti * a * s..(ti + 1) * a * s], a, s));
+            }
+        }
+
+        // clean-up device memory (Listing 2 lines 29–32)
+        self.ctx.free(ga)?;
+        self.ctx.free(gb)?;
+        self.ctx.free(gc)?;
+        // SLOC:core-end
+        Ok(feats)
+    }
+}
+
+impl GpuManual {
+    /// Diagnostic: how many modules this host code had to manage by hand.
+    pub fn loaded_function_count(&self) -> usize {
+        self.functions.len()
+    }
+
+    /// Validate artifact availability for a size before benchmarking.
+    pub fn supports_size(&self, s: usize, a: usize) -> bool {
+        match self.device {
+            DeviceChoice::Emulator => true,
+            DeviceChoice::Pjrt => {
+                let sig = format!("f32[{s},{s}];f32[{a}]");
+                self.library
+                    .as_ref()
+                    .map(|l| {
+                        if self.staged {
+                            T_SET.iter().all(|t| {
+                                l.find(&format!("sinogram_{}", t.name()), &sig).is_ok()
+                            })
+                        } else {
+                            l.find("sinogram_all", &sig).is_ok()
+                        }
+                    })
+                    .unwrap_or(false)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use crate::tracetransform::image::{orientations, shepp_logan};
+
+    #[test]
+    fn emulator_manual_runs_and_caches_functions() {
+        let img = shepp_logan(12);
+        let thetas = orientations(6);
+        let mut m = GpuManual::on_device(DeviceChoice::Emulator).unwrap();
+        let f1 = m.features(&img, &thetas).unwrap();
+        assert_eq!(m.loaded_function_count(), 1); // fused kernel
+        let f2 = m.features(&img, &thetas).unwrap();
+        assert_eq!(f1, f2);
+        // device memory fully released after each call
+        assert_eq!(m.context().memory().unwrap().live_buffers(), 0);
+    }
+
+    #[test]
+    fn staged_and_fused_agree() {
+        let img = shepp_logan(12);
+        let thetas = orientations(6);
+        let mut fused = GpuManual::on_device(DeviceChoice::Emulator).unwrap();
+        let mut staged = GpuManual::on_device(DeviceChoice::Emulator).unwrap().staged();
+        let a = fused.features(&img, &thetas).unwrap();
+        let b = staged.features(&img, &thetas).unwrap();
+        assert_eq!(staged.loaded_function_count(), T_SET.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-3 * x.abs().max(1.0), "feature {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        // 17x17 was never lowered; PJRT path must say NoArtifact
+        if let Ok(mut m) = GpuManual::on_device(DeviceChoice::Pjrt) {
+            assert!(!m.supports_size(17, 6));
+            let img = shepp_logan(17);
+            let err = m.features(&img, &orientations(6)).unwrap_err();
+            assert!(
+                matches!(err, Error::NoArtifact { .. }),
+                "expected NoArtifact, got {err}"
+            );
+        }
+    }
+}

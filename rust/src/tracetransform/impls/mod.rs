@@ -1,0 +1,174 @@
+//! The five benchmark implementations of the trace transform (Tables 1–2,
+//! Figure 3). Mapping to the paper's rows:
+//!
+//! | Paper | Here |
+//! |---|---|
+//! | C++ (CPU) | [`CpuNative`] — plain `f32` slices, fused sampling |
+//! | C++ (CPU) + CUDA (GPU) | [`GpuManual`] — native host, manual driver API, AOT kernels |
+//! | Julia (CPU) | [`CpuDynamic`] — boxed, bounds-checked `hostlang` arrays |
+//! | Julia (CPU) + CUDA (GPU) | [`GpuDynamic`] — `hostlang` host code, manual driver API |
+//! | Julia (CPU + GPU) | [`GpuAuto`] — full `@cuda` automation + specialization cache |
+//!
+//! All five produce the identical feature vector (order: (T, P, F)
+//! lexicographic — `functionals::feature_order`), cross-checked in
+//! `rust/tests/cross_check.rs`.
+
+pub mod cpu_dynamic;
+pub mod cpu_native;
+pub mod gpu_auto;
+pub mod gpu_dynamic;
+pub mod gpu_manual;
+
+pub use cpu_dynamic::CpuDynamic;
+pub use cpu_native::CpuNative;
+pub use gpu_auto::{AutoMode, GpuAuto};
+pub use gpu_dynamic::GpuDynamic;
+pub use gpu_manual::GpuManual;
+
+use crate::error::Result;
+use crate::tracetransform::image::Image;
+
+/// A trace-transform implementation under benchmark.
+pub trait TraceImpl {
+    /// Short name used in tables (matches the paper's row labels).
+    fn name(&self) -> &'static str;
+
+    /// Extract the full (T, P, F) feature vector.
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Which device the GPU implementations run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceChoice {
+    /// PJRT CPU client running AOT JAX/Pallas artifacts (device 0).
+    Pjrt,
+    /// VTX emulator (device 1) — no artifacts required.
+    Emulator,
+}
+
+impl DeviceChoice {
+    pub fn ordinal(self) -> usize {
+        match self {
+            DeviceChoice::Pjrt => 0,
+            DeviceChoice::Emulator => 1,
+        }
+    }
+}
+
+/// Register the VTX providers for every `sinogram_<t>` logical kernel, so
+/// the automation layer can serve the emulator device (the Ocelot path).
+pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistry) {
+    use crate::coordinator::VtxSpec;
+    use crate::driver::{KernelArg, LaunchConfig};
+    use crate::error::Error;
+
+    for t in crate::tracetransform::functionals::T_SET {
+        let name = format!("sinogram_{}", t.name());
+        let tname = t.name();
+        registry.register_vtx(&name, move |specs| {
+            // specs: [img f32[s,s], angles f32[a], out f32[a,s]]
+            if specs.len() != 3 || specs[0].shape.len() != 2 {
+                return Err(Error::Specialize {
+                    kernel: format!("sinogram_{tname}"),
+                    reason: format!("unexpected argument shapes: {specs:?}"),
+                });
+            }
+            let s = specs[0].shape[0];
+            let a = specs[1].shape[0];
+            Ok(VtxSpec {
+                kernel: crate::emulator::kernels::sinogram(tname)?,
+                scalars: vec![KernelArg::I32(s as i32)],
+                config: LaunchConfig::new(a as u32, s as u32),
+            })
+        });
+    }
+    // the optimized fused variant: one pass, all four functionals
+    registry.register_vtx("sinogram_all", |specs| {
+        if specs.len() != 3 || specs[0].shape.len() != 2 {
+            return Err(Error::Specialize {
+                kernel: "sinogram_all".into(),
+                reason: format!("unexpected argument shapes: {specs:?}"),
+            });
+        }
+        let s = specs[0].shape[0];
+        let a = specs[1].shape[0];
+        Ok(VtxSpec {
+            kernel: crate::emulator::kernels::sinogram_all()?,
+            scalars: vec![KernelArg::I32(s as i32)],
+            config: LaunchConfig::new(a as u32, s as u32),
+        })
+    });
+    // the running example, for completeness
+    registry.register_vtx("vadd", |specs| {
+        let n = specs[0].numel();
+        Ok(VtxSpec {
+            kernel: crate::emulator::kernels::vadd()?,
+            scalars: vec![KernelArg::I32(n as i32)],
+            config: LaunchConfig::new(((n as u32) + 255) / 256, 256u32),
+        })
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracetransform::functionals::FEATURE_COUNT;
+    use crate::tracetransform::image::{orientations, shepp_logan};
+
+    #[test]
+    fn cpu_native_and_dynamic_agree() {
+        let img = shepp_logan(24);
+        let thetas = orientations(12);
+        let mut native = CpuNative::new();
+        let mut dynamic = CpuDynamic::new();
+        let a = native.features(&img, &thetas).unwrap();
+        let b = dynamic.features(&img, &thetas).unwrap();
+        assert_eq!(a.len(), FEATURE_COUNT);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let tol = 1e-3 * x.abs().max(1.0);
+            assert!((x - y).abs() < tol, "feature {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn emulator_auto_agrees_with_cpu_native() {
+        let img = shepp_logan(16);
+        let thetas = orientations(8);
+        let mut native = CpuNative::new();
+        let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let a = native.features(&img, &thetas).unwrap();
+        let b = auto.features(&img, &thetas).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let tol = 2e-3 * x.abs().max(1.0);
+            assert!((x - y).abs() < tol, "feature {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn emulator_manual_agrees_with_cpu_native() {
+        let img = shepp_logan(16);
+        let thetas = orientations(8);
+        let mut native = CpuNative::new();
+        let mut manual = GpuManual::on_device(DeviceChoice::Emulator).unwrap();
+        let a = native.features(&img, &thetas).unwrap();
+        let b = manual.features(&img, &thetas).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let tol = 2e-3 * x.abs().max(1.0);
+            assert!((x - y).abs() < tol, "feature {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn emulator_dynamic_agrees_with_cpu_native() {
+        let img = shepp_logan(16);
+        let thetas = orientations(8);
+        let mut native = CpuNative::new();
+        let mut dynamic = GpuDynamic::on_device(DeviceChoice::Emulator).unwrap();
+        let a = native.features(&img, &thetas).unwrap();
+        let b = dynamic.features(&img, &thetas).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let tol = 2e-3 * x.abs().max(1.0);
+            assert!((x - y).abs() < tol, "feature {i}: {x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's case study (§7): the **trace transform** — image
+//! descriptors from projections along straight lines at many orientations
+//! (Kadyrov & Petrou 2001), with T/P/F functional stacks and the five
+//! benchmark implementations of Tables 1–2 / Figure 3.
+
+pub mod functionals;
+pub mod image;
+pub mod impls;
+pub mod rotate;
+
+pub use functionals::{
+    feature_order, FFunctional, PFunctional, TFunctional, FEATURE_COUNT, F_SET, P_SET, T_SET,
+};
+pub use image::{orientations, random_phantom, shepp_logan, Image};
+pub use impls::{
+    AutoMode, CpuDynamic, CpuNative, DeviceChoice, GpuAuto, GpuDynamic, GpuManual, TraceImpl,
+};

@@ -1,0 +1,163 @@
+//! Native bilinear rotation and the fused rotate+project sinogram step.
+//!
+//! The rotation convention is shared **exactly** with
+//! `python/compile/kernels/rotate.py` and the VTX `rotate` kernel:
+//!
+//! ```text
+//! c = (S-1)/2;  dx = x - c;  dy = y - c
+//! sx =  cosθ·dx + sinθ·dy + c
+//! sy = −sinθ·dx + cosθ·dy + c
+//! out[y, x] = bilinear(img, sy, sx)   (zero outside)
+//! ```
+
+use crate::tracetransform::functionals::TFunctional;
+use crate::tracetransform::image::Image;
+
+/// Bilinear sample with zero fill.
+#[inline]
+pub fn sample_bilinear(img: &[f32], s: usize, sy: f32, sx: f32) -> f32 {
+    let y0f = sy.floor();
+    let x0f = sx.floor();
+    let fy = sy - y0f;
+    let fx = sx - x0f;
+    let y0 = y0f as i64;
+    let x0 = x0f as i64;
+    #[inline]
+    fn gather(img: &[f32], s: usize, yi: i64, xi: i64) -> f32 {
+        if yi >= 0 && (yi as usize) < s && xi >= 0 && (xi as usize) < s {
+            img[yi as usize * s + xi as usize]
+        } else {
+            0.0
+        }
+    }
+    gather(img, s, y0, x0) * (1.0 - fy) * (1.0 - fx)
+        + gather(img, s, y0, x0 + 1) * (1.0 - fy) * fx
+        + gather(img, s, y0 + 1, x0) * fy * (1.0 - fx)
+        + gather(img, s, y0 + 1, x0 + 1) * fy * fx
+}
+
+/// Rotate an image by `theta` radians (materializes the rotated image).
+pub fn rotate(img: &Image, theta: f32) -> Image {
+    let s = img.size();
+    let c = (s as f32 - 1.0) / 2.0;
+    let (st, ct) = theta.sin_cos();
+    let src = img.pixels();
+    let mut out = Image::zeros(s);
+    let dst = out.pixels_mut();
+    for y in 0..s {
+        let dy = y as f32 - c;
+        for x in 0..s {
+            let dx = x as f32 - c;
+            let sx = ct * dx + st * dy + c;
+            let sy = -st * dx + ct * dy + c;
+            dst[y * s + x] = sample_bilinear(src, s, sy, sx);
+        }
+    }
+    out
+}
+
+/// One sinogram row: T-functional of the virtually rotated image, per
+/// column — fused, never materializing the rotation (the optimized native
+/// path; mirrors the Pallas `sinogram` kernel and the VTX version).
+pub fn sinogram_row(img: &Image, theta: f32, t: TFunctional, out_row: &mut [f32]) {
+    let s = img.size();
+    debug_assert_eq!(out_row.len(), s);
+    let c = (s as f32 - 1.0) / 2.0;
+    let (st, ct) = theta.sin_cos();
+    let src = img.pixels();
+    for (col, out) in out_row.iter_mut().enumerate() {
+        let dx = col as f32 - c;
+        let sx_base = ct * dx + c;
+        let sy_base = c - st * dx;
+        let mut acc = match t {
+            TFunctional::TMax => f32::NEG_INFINITY,
+            _ => 0.0,
+        };
+        for r in 0..s {
+            let dy = r as f32 - c;
+            let sx = sx_base + st * dy;
+            let sy = sy_base + ct * dy;
+            let v = sample_bilinear(src, s, sy, sx);
+            match t {
+                TFunctional::Radon => acc += v,
+                TFunctional::T1 => acc += dy.abs() * v,
+                TFunctional::T2 => acc += dy * dy * v,
+                TFunctional::TMax => acc = acc.max(v),
+            }
+        }
+        *out = acc;
+    }
+}
+
+/// Full sinogram: `thetas.len()` rows × `size` offsets, row-major.
+pub fn sinogram(img: &Image, thetas: &[f32], t: TFunctional) -> Vec<f32> {
+    let s = img.size();
+    let mut out = vec![0.0f32; thetas.len() * s];
+    for (a, &theta) in thetas.iter().enumerate() {
+        sinogram_row(img, theta, t, &mut out[a * s..(a + 1) * s]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracetransform::image::shepp_logan;
+
+    #[test]
+    fn zero_rotation_is_identity() {
+        let img = shepp_logan(24);
+        let r = rotate(&img, 0.0);
+        for (a, b) in img.pixels().iter().zip(r.pixels()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quarter_turn_four_times_is_near_identity() {
+        let img = shepp_logan(33);
+        let mut r = img.clone();
+        for _ in 0..4 {
+            r = rotate(&r, std::f32::consts::FRAC_PI_2);
+        }
+        // center region should be close (edges lose mass)
+        let s = img.size();
+        for y in s / 4..3 * s / 4 {
+            for x in s / 4..3 * s / 4 {
+                assert!(
+                    (img.get(y, x) - r.get(y, x)).abs() < 0.05,
+                    "pixel ({y},{x})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sinogram_matches_staged() {
+        let img = shepp_logan(32);
+        let thetas = [0.0f32, 0.4, 1.1, 2.7];
+        for t in crate::tracetransform::functionals::T_SET {
+            let fused = sinogram(&img, &thetas, t);
+            for (a, &theta) in thetas.iter().enumerate() {
+                let rot = rotate(&img, theta);
+                for col in 0..32 {
+                    let staged = t.apply_strided(&rot.pixels()[col..], 32, 32);
+                    let f = fused[a * 32 + col];
+                    assert!(
+                        (f - staged).abs() < 1e-3,
+                        "{t:?} angle {a} col {col}: {f} vs {staged}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radon_preserves_total_mass_at_zero_angle() {
+        let img = shepp_logan(32);
+        let sino = sinogram(&img, &[0.0], TFunctional::Radon);
+        let total: f32 = sino.iter().sum();
+        let mass: f32 = img.pixels().iter().sum();
+        assert!((total - mass).abs() / mass < 1e-4);
+    }
+}

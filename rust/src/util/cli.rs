@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (no clap offline): positional subcommand +
+//! `--flag`, `--key value` / `--key=value` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: `prog SUBCOMMAND [positional...] [--opts]`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 64,128,256`.
+    pub fn opt_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.opt(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["fig3", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig3"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["run", "--sizes=64,128", "--iters", "10", "--verbose"]);
+        assert_eq!(a.opt("sizes"), Some("64,128"));
+        assert_eq!(a.opt_usize("iters", 1), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = parse(&["x", "--sizes", "64, 128 ,256"]);
+        assert_eq!(a.opt_usize_list("sizes", &[1]), vec![64, 128, 256]);
+        assert_eq!(a.opt_usize_list("other", &[32]), vec![32]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--sizes", "8"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_usize("sizes", 0), 8);
+    }
+}

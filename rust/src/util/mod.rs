@@ -1,0 +1,11 @@
+//! Utility substrates built in-repo because the image builds offline
+//! (no serde/clap/rand available): a JSON parser for the artifact
+//! manifest, a deterministic PRNG for workload generation and property
+//! tests, and a tiny CLI argument parser.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+
+pub use json::Json;
+pub use prng::Prng;

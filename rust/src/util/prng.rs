@@ -1,0 +1,124 @@
+//! Deterministic PRNG (xoshiro256**) for workload generation and the
+//! in-repo property-test harness. No external `rand` crate offline; this
+//! is small, fast and reproducible across runs — what the benchmarks need.
+
+/// xoshiro256** by Blackman & Vigna (public domain reference algorithm).
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Seed via splitmix64 so any u64 (including 0) yields a good state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Prng { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f64() as f32
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive). Panics if lo > hi.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as usize
+    }
+
+    /// Vector of uniform f32 values in [lo, hi).
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick a random element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = {
+            let mut p = Prng::new(42);
+            (0..8).map(|_| p.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut p = Prng::new(42);
+            (0..8).map(|_| p.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<u64> = {
+            let mut p = Prng::new(43);
+            (0..8).map(|_| p.next_u64()).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut p = Prng::new(7);
+        for _ in 0..1000 {
+            let v = p.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn usize_in_bounds_inclusive() {
+        let mut p = Prng::new(9);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = p.usize_in(3, 6);
+            assert!((3..=6).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 6;
+        }
+        assert!(seen_lo && seen_hi, "range endpoints should be reachable");
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut p = Prng::new(1234);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| p.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} too far from 0.5");
+    }
+}

@@ -1,0 +1,343 @@
+//! Integration tests across the driver, runtime, emulator and coordinator
+//! layers — the full module→function→launch lifecycle on both backends,
+//! plus artifact-manifest round trips against the real `artifacts/` dir.
+//!
+//! PJRT-dependent tests skip gracefully when `make artifacts` has not run.
+
+use hlgpu::coordinator::{arg, Launcher, TransferPolicy};
+use hlgpu::cuda;
+use hlgpu::driver::{Context, Event, KernelArg, LaunchConfig, ModuleSource};
+use hlgpu::emulator::kernels;
+use hlgpu::runtime::ArtifactLibrary;
+use hlgpu::tensor::Tensor;
+use hlgpu::tracetransform::{impls, orientations, shepp_logan, DeviceChoice};
+
+fn have_artifacts() -> bool {
+    ArtifactLibrary::load_default().is_ok()
+}
+
+// ---------------------------------------------------------------- driver --
+
+#[test]
+fn driver_full_lifecycle_on_emulator() {
+    let dev = hlgpu::driver::device(1).unwrap();
+    let ctx = Context::create(&dev).unwrap();
+    let module = ctx
+        .load_module(&ModuleSource::Vtx { kernels: vec![kernels::vadd().unwrap()] })
+        .unwrap();
+    let f = module.function("vadd").unwrap();
+
+    let n = 1000usize;
+    let bytes = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+    let a = ctx.alloc_upload(&bytes(&vec![1.5f32; n])).unwrap();
+    let b = ctx.alloc_upload(&bytes(&vec![2.5f32; n])).unwrap();
+    let c = ctx.alloc(n * 4).unwrap();
+    f.launch(
+        &LaunchConfig::new(((n + 255) / 256) as u32, 256u32),
+        &[
+            KernelArg::Ptr(a),
+            KernelArg::Ptr(b),
+            KernelArg::Ptr(c),
+            KernelArg::I32(n as i32),
+        ],
+        ctx.memory().unwrap(),
+    )
+    .unwrap();
+    let mut out = vec![0u8; n * 4];
+    ctx.download(c, &mut out).unwrap();
+    assert!(out
+        .chunks_exact(4)
+        .map(|ch| f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]))
+        .all(|v| v == 4.0));
+
+    // module cache: same source name returns the cached module
+    let again = ctx
+        .load_module(&ModuleSource::Vtx { kernels: vec![kernels::vadd().unwrap()] })
+        .unwrap();
+    assert_eq!(again.name(), module.name());
+    assert_eq!(ctx.loaded_modules().len(), 1);
+}
+
+#[test]
+fn streams_order_launches_and_events_time_them() {
+    let dev = hlgpu::driver::device(1).unwrap();
+    let ctx = Context::create(&dev).unwrap();
+    let module = ctx
+        .load_module(&ModuleSource::Vtx { kernels: vec![kernels::vadd().unwrap()] })
+        .unwrap();
+    let f = module.function("vadd").unwrap();
+    let stream = ctx.create_stream().unwrap();
+
+    let n = 64usize;
+    let ones = vec![1.0f32; n];
+    let bytes: Vec<u8> = ones.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let a = ctx.alloc_upload(&bytes).unwrap();
+    let b = ctx.alloc_upload(&bytes).unwrap();
+    let c = ctx.alloc(n * 4).unwrap();
+
+    let begin = Event::new();
+    let end = Event::new();
+    begin.record_now();
+    // chain k launches: c = a+b, then a = c+b, ... on one stream
+    let mem = ctx.memory_arc().unwrap();
+    for i in 0..8 {
+        let f = f.clone();
+        let mem = mem.clone();
+        let (x, y, z) = if i % 2 == 0 { (a, b, c) } else { (c, b, a) };
+        stream
+            .enqueue(move || {
+                f.launch(
+                    &LaunchConfig::new(1u32, n as u32),
+                    &[
+                        KernelArg::Ptr(x),
+                        KernelArg::Ptr(y),
+                        KernelArg::Ptr(z),
+                        KernelArg::I32(n as i32),
+                    ],
+                    &mem,
+                )
+            })
+            .unwrap();
+    }
+    stream.record_event(&end).unwrap();
+    stream.synchronize().unwrap();
+    assert!(Event::elapsed_ms(&begin, &end).unwrap() >= 0.0);
+
+    // after 8 chained adds starting from (1,1): a = 1+8*1 = 9
+    let mut out = vec![0u8; n * 4];
+    ctx.download(a, &mut out).unwrap();
+    let v = f32::from_le_bytes([out[0], out[1], out[2], out[3]]);
+    assert_eq!(v, 9.0);
+}
+
+// ---------------------------------------------------------------- runtime --
+
+#[test]
+fn manifest_round_trip_on_real_artifacts() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let lib = ArtifactLibrary::load_default().unwrap();
+    assert!(lib.len() >= 30, "expected a full artifact set, got {}", lib.len());
+    // every artifact file exists and parses at least as non-empty text
+    for e in lib.entries() {
+        let path = lib.artifact_path(e);
+        let meta = std::fs::metadata(&path).unwrap_or_else(|_| panic!("missing {path:?}"));
+        assert!(meta.len() > 100, "{path:?} suspiciously small");
+        assert!(!e.inputs.is_empty());
+        assert!(!e.outputs.is_empty());
+    }
+    // signature lookups for the kernels the implementations rely on
+    for s in [16usize, 32, 64, 128, 256] {
+        let sig = format!("f32[{s},{s}];f32[90]");
+        assert!(lib.find("sinogram_all", &sig).is_ok(), "missing sinogram_all {s}");
+    }
+}
+
+#[test]
+fn pjrt_artifact_executes_with_correct_numerics() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let lib = ArtifactLibrary::load_default().unwrap();
+    let ctx = Context::default_device().unwrap();
+    let entry = lib.find("vadd", "f32[12];f32[12]").unwrap();
+    let module = ctx.load_module(&lib.module_source(entry)).unwrap();
+    let f = module.function("main").unwrap();
+
+    let a: Vec<f32> = (0..12).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..12).map(|i| (i * 10) as f32).collect();
+    let bytes = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+    let ga = ctx.alloc_upload(&bytes(&a)).unwrap();
+    let gb = ctx.alloc_upload(&bytes(&b)).unwrap();
+    let gc = ctx.alloc(12 * 4).unwrap();
+    f.launch(
+        &LaunchConfig::new(12u32, 1u32),
+        &[KernelArg::Ptr(ga), KernelArg::Ptr(gb), KernelArg::Ptr(gc)],
+        ctx.memory().unwrap(),
+    )
+    .unwrap();
+    let mut out = vec![0u8; 48];
+    ctx.download(gc, &mut out).unwrap();
+    let got: Vec<f32> = out
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    assert_eq!(got, want);
+}
+
+// ------------------------------------------------------------ coordinator --
+
+#[test]
+fn automation_full_path_on_pjrt() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut launcher = Launcher::with_default_context().unwrap();
+    let n = 1024usize;
+    let a = Tensor::from_f32(&vec![2.0; n], &[n]);
+    let b = Tensor::from_f32(&vec![3.0; n], &[n]);
+    let mut c = Tensor::zeros_f32(&[n]);
+    for _ in 0..3 {
+        cuda!(launcher, (n, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+            .unwrap();
+    }
+    assert!(c.as_f32().iter().all(|&v| v == 5.0));
+    let stats = launcher.cache_stats();
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.hits, 2);
+}
+
+#[test]
+fn transfer_counters_match_plan_on_pjrt() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut launcher = Launcher::with_default_context().unwrap();
+    let n = 1024usize;
+    let a = Tensor::from_f32(&vec![1.0; n], &[n]);
+    let b = Tensor::from_f32(&vec![1.0; n], &[n]);
+    let mut c = Tensor::zeros_f32(&[n]);
+    // warm up
+    cuda!(launcher, (n, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+        .unwrap();
+    launcher.context().memory().unwrap().reset_stats();
+    cuda!(launcher, (n, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+        .unwrap();
+    let st = launcher.context().mem_stats().unwrap();
+    assert_eq!(st.h2d_count, 2, "two CuIn uploads");
+    assert_eq!(st.d2h_count, 1, "one CuOut download");
+    assert_eq!(st.alloc_count, 0, "warm launch allocates nothing");
+
+    // naive policy moves more
+    launcher.set_policy(TransferPolicy::Naive);
+    launcher.context().memory().unwrap().reset_stats();
+    cuda!(launcher, (n, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+        .unwrap();
+    let st = launcher.context().mem_stats().unwrap();
+    assert_eq!(st.h2d_count, 3);
+    assert_eq!(st.d2h_count, 3);
+}
+
+#[test]
+fn cross_backend_same_call_agrees() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let size = 32usize;
+    let angles = 90usize;
+    let img = shepp_logan(size).to_tensor();
+    let thetas = orientations(angles);
+    let ang = Tensor::from_f32(&thetas, &[angles]);
+    let cfg = LaunchConfig::new(angles as u32, size as u32);
+
+    let mut on_pjrt = Tensor::zeros_f32(&[4, angles, size]);
+    let mut launcher = Launcher::with_default_context().unwrap();
+    launcher
+        .launch(
+            "sinogram_all",
+            cfg,
+            &mut [arg::cu_in(&img), arg::cu_in(&ang), arg::cu_out(&mut on_pjrt)],
+        )
+        .unwrap();
+
+    let mut on_emu = Tensor::zeros_f32(&[4, angles, size]);
+    let mut launcher = Launcher::emulator().unwrap();
+    impls::register_trace_providers(launcher.registry_mut());
+    launcher
+        .launch(
+            "sinogram_all",
+            cfg,
+            &mut [arg::cu_in(&img), arg::cu_in(&ang), arg::cu_out(&mut on_emu)],
+        )
+        .unwrap();
+
+    for (i, (x, y)) in on_pjrt.as_f32().iter().zip(on_emu.as_f32()).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-2 * x.abs().max(1.0),
+            "element {i}: pjrt {x} vs emu {y}"
+        );
+    }
+}
+
+#[test]
+fn auto_arguments_inferred_from_artifact_split_on_pjrt() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // No wrappers: the framework matches the call positionally against
+    // the artifact's inputs ++ outputs and derives the transfer plan.
+    let mut launcher = Launcher::with_default_context().unwrap();
+    let n = 1024usize;
+    let mut a = Tensor::from_f32(&vec![4.0; n], &[n]);
+    let mut b = Tensor::from_f32(&vec![5.0; n], &[n]);
+    let mut c = Tensor::zeros_f32(&[n]);
+    launcher
+        .launch(
+            "vadd",
+            LaunchConfig::new(n as u32, 1u32),
+            &mut [arg::cu_auto(&mut a), arg::cu_auto(&mut b), arg::cu_auto(&mut c)],
+        )
+        .unwrap();
+    assert!(c.as_f32().iter().all(|&v| v == 9.0));
+    launcher.context().memory().unwrap().reset_stats();
+    launcher
+        .launch(
+            "vadd",
+            LaunchConfig::new(n as u32, 1u32),
+            &mut [arg::cu_auto(&mut a), arg::cu_auto(&mut b), arg::cu_auto(&mut c)],
+        )
+        .unwrap();
+    let st = launcher.context().mem_stats().unwrap();
+    assert_eq!((st.h2d_count, st.d2h_count), (2, 1), "inferred minimal plan");
+}
+
+#[test]
+fn wrong_output_shape_fails_specialization() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut launcher = Launcher::with_default_context().unwrap();
+    let n = 1024usize;
+    let a = Tensor::from_f32(&vec![1.0; n], &[n]);
+    let b = Tensor::from_f32(&vec![1.0; n], &[n]);
+    let mut c = Tensor::zeros_f32(&[n + 1]); // wrong!
+    let err = launcher
+        .launch(
+            "vadd",
+            LaunchConfig::new(n as u32, 1u32),
+            &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)],
+        )
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("output") || msg.contains("f32[1025]"), "{msg}");
+}
+
+// ------------------------------------------------------------- e2e sanity --
+
+#[test]
+fn trace_pipeline_e2e_small() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use hlgpu::tracetransform::{CpuNative, GpuAuto, TraceImpl};
+    let img = shepp_logan(16);
+    let thetas = orientations(90);
+    let want = CpuNative::new().features(&img, &thetas).unwrap();
+    let got = GpuAuto::on_device(DeviceChoice::Pjrt)
+        .unwrap()
+        .features(&img, &thetas)
+        .unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 2e-3 * w.abs().max(1.0), "feature {i}: {g} vs {w}");
+    }
+}

@@ -1,0 +1,320 @@
+//! Property-based tests (in-repo harness — no proptest crate offline):
+//! randomized inputs from the deterministic `Prng`, with the failing seed
+//! printed on assertion failure so cases replay exactly.
+//!
+//! Invariants covered:
+//!  * memory pool: alloc/free/copy sequences never corrupt unrelated
+//!    buffers; stats stay consistent; OOM respects capacity;
+//!  * VTX interpreter: generated vadd/affine programs match scalar rust
+//!    evaluation for arbitrary sizes and launch geometries;
+//!  * coordinator: for random shapes, the specialization cache key is
+//!    injective on (shape, mode) and launches through the automation layer
+//!    equal direct emulator execution;
+//!  * trace functionals: linearity of the linear T/P functionals,
+//!    rotation invariants of the sinogram;
+//!  * stats: log-normal fit bounds (mean between min and max, etc.);
+//!  * JSON parser: round-trips machine-generated manifests of random
+//!    shape.
+
+use hlgpu::coordinator::{arg, Launcher, VtxSpec};
+use hlgpu::driver::{KernelArg, LaunchConfig, MemoryPool};
+use hlgpu::emulator::kernels;
+use hlgpu::tensor::Tensor;
+use hlgpu::util::{Json, Prng};
+
+const CASES: usize = 40;
+
+// --------------------------------------------------------------- memory --
+
+#[test]
+fn prop_memory_pool_isolation_under_random_ops() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(seed);
+        let pool = MemoryPool::new(1 << 20);
+        // allocate a set of buffers with known sentinel patterns
+        let n = rng.usize_in(2, 12);
+        let mut live: Vec<(hlgpu::driver::DevicePtr, u8, usize)> = Vec::new();
+        for i in 0..n {
+            let len = rng.usize_in(1, 4096);
+            let ptr = pool.alloc(len).unwrap();
+            let tag = (i + 1) as u8;
+            pool.copy_h2d(ptr, &vec![tag; len]).unwrap();
+            live.push((ptr, tag, len));
+        }
+        // random interleaving of frees, writes and reads
+        for _ in 0..30 {
+            match rng.usize_in(0, 2) {
+                0 if !live.is_empty() => {
+                    let idx = rng.usize_in(0, live.len() - 1);
+                    let (ptr, _, _) = live.remove(idx);
+                    pool.free(ptr).unwrap();
+                }
+                1 if !live.is_empty() => {
+                    let idx = rng.usize_in(0, live.len() - 1);
+                    let (ptr, tag, len) = live[idx];
+                    // overwrite with the same tag (content must stay stable)
+                    pool.copy_h2d(ptr, &vec![tag; len]).unwrap();
+                }
+                _ => {}
+            }
+            // every live buffer still holds its own tag — no cross-talk
+            for &(ptr, tag, len) in &live {
+                let mut out = vec![0u8; len];
+                pool.copy_d2h(ptr, &mut out).unwrap();
+                assert!(
+                    out.iter().all(|&b| b == tag),
+                    "seed {seed}: buffer {ptr:?} corrupted"
+                );
+            }
+        }
+        let st = pool.stats();
+        assert_eq!(st.alloc_count as usize, n, "seed {seed}");
+        assert_eq!(pool.live_buffers(), live.len(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_memory_capacity_never_exceeded() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(1000 + seed);
+        let cap = rng.usize_in(1024, 1 << 16);
+        let pool = MemoryPool::new(cap);
+        let mut live = Vec::new();
+        for _ in 0..64 {
+            let len = rng.usize_in(1, cap / 2);
+            match pool.alloc(len) {
+                Ok(p) => live.push(p),
+                Err(e) => {
+                    assert_eq!(e.status(), "ERROR_OUT_OF_MEMORY", "seed {seed}");
+                }
+            }
+            if rng.bool() {
+                if let Some(p) = live.pop() {
+                    pool.free(p).unwrap();
+                }
+            }
+            assert!(pool.stats().current_bytes <= cap, "seed {seed}");
+            assert!(pool.stats().peak_bytes <= cap, "seed {seed}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- emulator --
+
+#[test]
+fn prop_vtx_vadd_matches_scalar_for_any_geometry() {
+    let k = kernels::vadd().unwrap();
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(2000 + seed);
+        let n = rng.usize_in(1, 3000);
+        let block = *rng.choose(&[1u32, 7, 32, 128, 256]);
+        let grid = (n as u32).div_ceil(block);
+        let mut a = rng.f32_vec(n, -10.0, 10.0);
+        let mut b = rng.f32_vec(n, -10.0, 10.0);
+        let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let mut c = vec![0.0f32; n];
+        hlgpu::emulator::execute(hlgpu::emulator::Launch {
+            kernel: &k,
+            grid: (grid, 1),
+            block: (block, 1),
+            buffers: vec![&mut a, &mut b, &mut c],
+            scalars: vec![hlgpu::emulator::ScalarArg::I32(n as i32)],
+            limits: hlgpu::emulator::Limits::default(),
+        })
+        .unwrap();
+        assert_eq!(c, want, "seed {seed} n {n} block {block}");
+    }
+}
+
+#[test]
+fn prop_vtx_reduction_matches_for_power_of_two_blocks() {
+    for seed in 0..16u64 {
+        let mut rng = Prng::new(3000 + seed);
+        let h = rng.usize_in(2, 60);
+        let w = rng.usize_in(1, 20);
+        let block_h = h.next_power_of_two();
+        let k = kernels::tfunc_column("radon", block_h).unwrap();
+        let mut img = rng.f32_vec(h * w, -5.0, 5.0);
+        let mut out = vec![0.0f32; w];
+        hlgpu::emulator::execute(hlgpu::emulator::Launch {
+            kernel: &k,
+            grid: (w as u32, 1),
+            block: (block_h as u32, 1),
+            buffers: vec![&mut img, &mut out],
+            scalars: vec![
+                hlgpu::emulator::ScalarArg::I32(h as i32),
+                hlgpu::emulator::ScalarArg::I32(w as i32),
+            ],
+            limits: hlgpu::emulator::Limits::default(),
+        })
+        .unwrap();
+        for col in 0..w {
+            let want: f32 = (0..h).map(|r| img[r * w + col]).sum();
+            assert!(
+                (out[col] - want).abs() < 1e-3,
+                "seed {seed} col {col}: {} vs {want}",
+                out[col]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------- coordinator --
+
+#[test]
+fn prop_automation_equals_direct_emulator_execution() {
+    for seed in 0..20u64 {
+        let mut rng = Prng::new(4000 + seed);
+        let n = rng.usize_in(1, 2000);
+        let mut launcher = Launcher::emulator().unwrap();
+        launcher.registry_mut().register_vtx("vadd", |specs| {
+            let n = specs[0].numel();
+            Ok(VtxSpec {
+                kernel: kernels::vadd()?,
+                scalars: vec![KernelArg::I32(n as i32)],
+                config: LaunchConfig::new((n as u32).div_ceil(256), 256u32),
+            })
+        });
+        let a = Tensor::from_f32(&rng.f32_vec(n, -1.0, 1.0), &[n]);
+        let b = Tensor::from_f32(&rng.f32_vec(n, -1.0, 1.0), &[n]);
+        let mut c = Tensor::zeros_f32(&[n]);
+        launcher
+            .launch(
+                "vadd",
+                LaunchConfig::new(1u32, 1u32),
+                &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)],
+            )
+            .unwrap();
+        for i in 0..n {
+            let want = a.as_f32()[i] + b.as_f32()[i];
+            assert!((c.as_f32()[i] - want).abs() < 1e-6, "seed {seed} i {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_cache_keys_injective_on_shape_and_mode() {
+    use hlgpu::coordinator::{call_signature, SpecializationCache};
+    use std::collections::HashSet;
+    let mut rng = Prng::new(5000);
+    let mut seen = HashSet::new();
+    let mut shapes = Vec::new();
+    for _ in 0..60 {
+        let rank = rng.usize_in(1, 3);
+        let shape: Vec<usize> = (0..rank).map(|_| rng.usize_in(1, 9)).collect();
+        shapes.push(shape);
+    }
+    shapes.sort();
+    shapes.dedup();
+    for shape in &shapes {
+        let t = Tensor::zeros_f32(shape);
+        let mut o = Tensor::zeros_f32(shape);
+        let sig_in = call_signature(&[arg::cu_in(&t)]);
+        let sig_out = call_signature(&[arg::cu_out(&mut o)]);
+        assert_ne!(sig_in, sig_out, "mode must be part of the key");
+        let k1 = SpecializationCache::<u8>::key("k", &sig_in);
+        let k2 = SpecializationCache::<u8>::key("k", &sig_out);
+        assert!(seen.insert(k1), "duplicate key for {shape:?} (in)");
+        assert!(seen.insert(k2), "duplicate key for {shape:?} (out)");
+    }
+}
+
+// ------------------------------------------------------------ functionals --
+
+#[test]
+fn prop_linear_tfunctionals_are_linear() {
+    use hlgpu::tracetransform::TFunctional;
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(6000 + seed);
+        let n = rng.usize_in(2, 64);
+        let a = rng.f32_vec(n, -3.0, 3.0);
+        let b = rng.f32_vec(n, -3.0, 3.0);
+        let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        for t in [TFunctional::Radon, TFunctional::T1, TFunctional::T2] {
+            let fa = t.apply_strided(&a, n, 1);
+            let fb = t.apply_strided(&b, n, 1);
+            let fs = t.apply_strided(&sum, n, 1);
+            let scale = fa.abs().max(fb.abs()).max(1.0);
+            assert!(
+                (fs - (fa + fb)).abs() < 1e-3 * scale,
+                "seed {seed} {t:?}: {fs} vs {}",
+                fa + fb
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sinogram_rotation_shift() {
+    // rotating the *angle set* by delta equals rotating the image by
+    // -delta (approximately, up to interpolation error) for the radon
+    // functional on smooth content
+    use hlgpu::tracetransform::{rotate, TFunctional};
+    for seed in 0..6u64 {
+        let img = hlgpu::tracetransform::random_phantom(48, seed);
+        let delta = 0.35f32;
+        let base = rotate::sinogram(&img, &[0.8 + delta], TFunctional::Radon);
+        let rotated_img = rotate::rotate(&img, delta);
+        let shifted = rotate::sinogram(&rotated_img, &[0.8], TFunctional::Radon);
+        // compare interior (edges clip mass)
+        let s = img.size();
+        let mut diff = 0.0f32;
+        let mut norm = 0.0f32;
+        for c in s / 4..3 * s / 4 {
+            diff += (base[c] - shifted[c]).abs();
+            norm += base[c].abs().max(1e-3);
+        }
+        assert!(diff / norm < 0.08, "seed {seed}: relative diff {}", diff / norm);
+    }
+}
+
+// ----------------------------------------------------------------- stats --
+
+#[test]
+fn prop_lognormal_mean_within_sample_range() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(7000 + seed);
+        let n = rng.usize_in(2, 200);
+        let samples: Vec<f64> = (0..n).map(|_| 0.5 + rng.next_f64() * 10.0).collect();
+        let s = hlgpu::stats::lognormal_fit(&samples);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().cloned().fold(0.0f64, f64::max);
+        // log-normal mean >= geometric mean; stays within [min, max*e^sigma]
+        assert!(s.mean >= min * 0.999, "seed {seed}");
+        assert!(s.mean <= max * (s.sigma * s.sigma / 2.0).exp() + 1e-9, "seed {seed}");
+        assert!(s.rel_uncertainty >= 0.0);
+    }
+}
+
+// ------------------------------------------------------------------ JSON --
+
+#[test]
+fn prop_json_parses_generated_manifests() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(8000 + seed);
+        let n = rng.usize_in(1, 10);
+        let mut doc = String::from("{\"version\": 1, \"artifacts\": [");
+        for i in 0..n {
+            if i > 0 {
+                doc.push(',');
+            }
+            let rank = rng.usize_in(1, 4);
+            let dims: Vec<String> =
+                (0..rank).map(|_| rng.usize_in(1, 512).to_string()).collect();
+            doc.push_str(&format!(
+                "{{\"name\": \"k{i}\", \"kernel\": \"k\", \"path\": \"k{i}.hlo.txt\", \
+                 \"inputs\": [{{\"dtype\": \"f32\", \"shape\": [{dims}]}}], \
+                 \"outputs\": [{{\"dtype\": \"f32\", \"shape\": [{dims}]}}], \
+                 \"meta\": {{\"n\": {i}, \"f\": {f}}}}}",
+                dims = dims.join(","),
+                f = rng.next_f64()
+            ));
+        }
+        doc.push_str("]}");
+        let j = Json::parse(&doc).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{doc}"));
+        assert_eq!(j.get("artifacts").unwrap().as_arr().unwrap().len(), n);
+        // and the real manifest loader accepts it
+        let lib = hlgpu::runtime::ArtifactLibrary::from_json(&doc, "/tmp".into()).unwrap();
+        assert_eq!(lib.len(), n);
+    }
+}
