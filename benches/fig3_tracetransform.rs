@@ -76,6 +76,23 @@ fn main() {
     println!("(relative uncertainty ≤ {max_unc:.2}%)");
     println!("{}", table.render());
 
+    // On the emulator device, report what the parallel block scheduler
+    // did for the automated path at the largest size.
+    if device == DeviceChoice::Emulator {
+        let size = *sizes.last().unwrap();
+        let img = shepp_logan(size);
+        let thetas = orientations(angles);
+        let mut auto = GpuAuto::on_device(device).unwrap();
+        auto.features(&img, &thetas).unwrap();
+        let m = auto.launcher().metrics();
+        println!(
+            "VTX scheduler (gpu-auto, size {size}): {} blocks over {} workers, {:.0}% worker utilization",
+            m.blocks_executed,
+            m.peak_workers,
+            m.worker_utilization() * 100.0
+        );
+    }
+
     // shape assertions (soft: printed, not panicking, so partial artifact
     // sets still produce the table)
     let last = means.len() - 1;

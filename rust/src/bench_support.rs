@@ -114,6 +114,15 @@ pub fn fmt_summary(s: &LogNormalSummary) -> String {
     format!("{} ±{:.2}%", fmt_time(s.mean), s.rel_uncertainty_pct())
 }
 
+/// Format a speedup of `base` over `other` as `N.NNx` (used by the
+/// scheduler benches: sequential time / parallel time).
+pub fn fmt_speedup(base_seconds: f64, other_seconds: f64) -> String {
+    if other_seconds <= 0.0 {
+        return "inf".into();
+    }
+    format!("{:.2}x", base_seconds / other_seconds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +151,11 @@ mod tests {
         assert!(fmt_time(2.5).ends_with(" s"));
         assert!(fmt_time(0.0025).ends_with(" ms"));
         assert!(fmt_time(0.0000025).ends_with(" µs"));
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(4.0, 2.0), "2.00x");
+        assert_eq!(fmt_speedup(1.0, 0.0), "inf");
     }
 }

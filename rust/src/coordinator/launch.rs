@@ -57,6 +57,28 @@ pub struct LaunchMetrics {
     pub cold_specializations: u64,
     /// Total nanoseconds spent in cold specialization work.
     pub specialize_ns: u64,
+    /// Thread blocks executed by the VTX emulator's block scheduler
+    /// (PJRT launches execute whole modules and report zero).
+    pub blocks_executed: u64,
+    /// Launches whose grid was dispatched across more than one worker.
+    pub parallel_launches: u64,
+    /// Sum of per-worker busy time inside the execution engine, ns.
+    pub worker_busy_ns: u64,
+    /// Wall-clock time inside the execution engine, ns.
+    pub exec_wall_ns: u64,
+    /// Widest worker schedule observed.
+    pub peak_workers: usize,
+}
+
+impl LaunchMetrics {
+    /// Fraction of the worker pool's capacity spent executing blocks,
+    /// aggregated over every launch (1.0 = perfectly parallel).
+    pub fn worker_utilization(&self) -> f64 {
+        if self.exec_wall_ns == 0 || self.peak_workers == 0 {
+            return 0.0;
+        }
+        self.worker_busy_ns as f64 / (self.exec_wall_ns as f64 * self.peak_workers as f64)
+    }
 }
 
 /// Transfer policy ablation switch (benches/transfer_policy.rs).
@@ -169,8 +191,16 @@ impl Launcher {
             }
         }
         let launch_cfg = spec.config.unwrap_or(cfg);
-        spec.function
-            .launch(&launch_cfg, &spec.kernel_args, mem)?;
+        let report = spec
+            .function
+            .launch_report(&launch_cfg, &spec.kernel_args, mem)?;
+        self.metrics.blocks_executed += report.blocks;
+        self.metrics.worker_busy_ns += report.busy_ns;
+        self.metrics.exec_wall_ns += report.wall_ns;
+        self.metrics.peak_workers = self.metrics.peak_workers.max(report.workers);
+        if report.workers > 1 {
+            self.metrics.parallel_launches += 1;
+        }
         for (index, (arg, entry)) in args.iter_mut().zip(&spec.plan).enumerate() {
             if effective_mode(entry.mode).downloads() {
                 match arg.tensor_mut() {
@@ -482,6 +512,23 @@ mod tests {
             s.infer_param_usage(),
             vec![ParamUsage::ReadOnly, ParamUsage::ReadOnly, ParamUsage::WriteOnly]
         );
+    }
+
+    #[test]
+    fn metrics_track_emulator_block_scheduler() {
+        let mut l = emulator_launcher_with_vadd();
+        let n = 1024usize;
+        let a = Tensor::from_f32(&vec![1.0; n], &[n]);
+        let b = Tensor::from_f32(&vec![2.0; n], &[n]);
+        let mut c = Tensor::zeros_f32(&[n]);
+        cuda!(l, (1, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        // provider picks grid = ceil(n/256) = 4 blocks
+        let m = l.metrics();
+        assert_eq!(m.blocks_executed, 4);
+        assert!(m.peak_workers >= 1);
+        assert!(m.exec_wall_ns > 0);
+        cuda!(l, (1, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        assert_eq!(l.metrics().blocks_executed, 8, "blocks accumulate per launch");
     }
 
     #[test]

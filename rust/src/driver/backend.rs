@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use crate::driver::launch::{KernelArg, LaunchConfig};
+use crate::driver::launch::{KernelArg, LaunchConfig, LaunchReport};
 use crate::driver::memory::MemoryPool;
 use crate::error::Result;
 
@@ -99,8 +99,24 @@ pub trait LoadedModule: Send + Sync {
 pub trait DeviceFunction: Send + Sync {
     /// Execute with the given configuration. Device buffers are resolved
     /// through `mem`. Synchronous from the caller's point of view; streams
-    /// provide asynchrony above this layer.
+    /// provide asynchrony above this layer. Backends may execute the
+    /// grid's blocks concurrently on an internal worker pool (the VTX
+    /// emulator does) — block independence is part of the programming
+    /// model, exactly as on real hardware.
     fn launch(&self, cfg: &LaunchConfig, args: &[KernelArg], mem: &MemoryPool) -> Result<()>;
+
+    /// Like [`DeviceFunction::launch`], additionally reporting execution
+    /// statistics. Backends without instrumentation fall back to a launch
+    /// plus a zeroed report.
+    fn launch_report(
+        &self,
+        cfg: &LaunchConfig,
+        args: &[KernelArg],
+        mem: &MemoryPool,
+    ) -> Result<LaunchReport> {
+        self.launch(cfg, args, mem)?;
+        Ok(LaunchReport::default())
+    }
 
     /// Human-readable name, for error messages and profiling.
     fn name(&self) -> String;

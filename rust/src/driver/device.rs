@@ -1,8 +1,6 @@
 //! Device enumeration (`cuDeviceGet` / `cuDeviceGetAttribute` analog).
 
-use std::sync::Arc;
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, OnceLock};
 
 use crate::driver::backend::Backend;
 use crate::error::{Error, Result};
@@ -52,31 +50,35 @@ impl std::fmt::Debug for Device {
     }
 }
 
-static DEVICES: Lazy<Vec<Device>> = Lazy::new(|| {
-    vec![
-        Device {
-            ordinal: 0,
-            name: "PJRT CPU (simulated accelerator)".into(),
-            kind: BackendKind::Pjrt,
-            attributes: DeviceAttributes::default(),
-        },
-        Device {
-            ordinal: 1,
-            name: "VTX emulator (Ocelot analog)".into(),
-            kind: BackendKind::VtxEmulator,
-            attributes: DeviceAttributes::default(),
-        },
-    ]
-});
+static DEVICES: OnceLock<Vec<Device>> = OnceLock::new();
+
+fn device_table() -> &'static [Device] {
+    DEVICES.get_or_init(|| {
+        vec![
+            Device {
+                ordinal: 0,
+                name: "PJRT CPU (simulated accelerator)".into(),
+                kind: BackendKind::Pjrt,
+                attributes: DeviceAttributes::default(),
+            },
+            Device {
+                ordinal: 1,
+                name: "VTX emulator (Ocelot analog)".into(),
+                kind: BackendKind::VtxEmulator,
+                attributes: DeviceAttributes::default(),
+            },
+        ]
+    })
+}
 
 /// `cuDeviceGetCount`.
 pub fn device_count() -> usize {
-    DEVICES.len()
+    device_table().len()
 }
 
 /// `cuDeviceGet`.
 pub fn device(ordinal: usize) -> Result<Device> {
-    DEVICES
+    device_table()
         .get(ordinal)
         .cloned()
         .ok_or(Error::InvalidDevice(ordinal))
@@ -84,7 +86,7 @@ pub fn device(ordinal: usize) -> Result<Device> {
 
 /// All visible devices.
 pub fn devices() -> Vec<Device> {
-    DEVICES.clone()
+    device_table().to_vec()
 }
 
 impl Device {

@@ -76,6 +76,33 @@ impl LaunchConfig {
     }
 }
 
+/// Execution statistics of one kernel launch, reported by backends that
+/// track them (the VTX emulator's block scheduler; PJRT launches report
+/// zeros). Consumed by `coordinator::LaunchMetrics` and the benches.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LaunchReport {
+    /// Thread blocks executed.
+    pub blocks: u64,
+    /// Worker threads the schedule dispatched blocks across (1 for the
+    /// sequential schedule).
+    pub workers: usize,
+    /// Sum of per-worker busy time, in nanoseconds.
+    pub busy_ns: u64,
+    /// Wall-clock time of the grid execution, in nanoseconds.
+    pub wall_ns: u64,
+}
+
+impl LaunchReport {
+    /// Fraction of the worker pool's wall-clock capacity spent executing
+    /// blocks (1.0 = every worker busy the whole launch).
+    pub fn utilization(&self) -> f64 {
+        if self.wall_ns == 0 || self.workers == 0 {
+            return 0.0;
+        }
+        self.busy_ns as f64 / (self.wall_ns as f64 * self.workers as f64)
+    }
+}
+
 /// One kernel argument, as passed to `cuLaunchKernel`'s argument array.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum KernelArg {

@@ -24,7 +24,7 @@ pub use backend::{Backend, DeviceFunction, LoadedModule, ModuleSource, TensorSpe
 pub use context::Context;
 pub use device::{device, device_count, devices, BackendKind, Device, DeviceAttributes};
 pub use event::Event;
-pub use launch::{Dim3, KernelArg, LaunchConfig};
+pub use launch::{Dim3, KernelArg, LaunchConfig, LaunchReport};
 pub use memory::{DevicePtr, MemStats, MemoryPool};
 pub use module::{Function, Module};
 pub use stream::Stream;

@@ -51,6 +51,17 @@ impl Function {
         self.inner.launch(cfg, args, mem)
     }
 
+    /// Launch and report execution statistics (blocks executed, worker
+    /// utilization) for backends that track them.
+    pub fn launch_report(
+        &self,
+        cfg: &LaunchConfig,
+        args: &[KernelArg],
+        mem: &MemoryPool,
+    ) -> Result<crate::driver::launch::LaunchReport> {
+        self.inner.launch_report(cfg, args, mem)
+    }
+
     pub fn name(&self) -> String {
         self.inner.name()
     }

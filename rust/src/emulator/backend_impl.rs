@@ -1,15 +1,23 @@
 //! [`crate::driver::Backend`] implementation for the VTX emulator:
 //! plugs interpreted kernels into the same driver API the PJRT backend
 //! serves, mirroring how GPU Ocelot slots in under the CUDA driver API.
+//!
+//! Each [`VtxFunction`] carries a one-entry **decoded-kernel cache**
+//! keyed by the launch's scalar arguments: the coordinator loads one
+//! function handle per `Specialized` entry (whose scalars are fixed per
+//! signature), so warm `cuda!` launches reuse the pre-decoded,
+//! register-resolved instruction stream and pay no binding work at all.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::driver::backend::{Backend, DeviceFunction, LoadedModule, ModuleSource};
-use crate::driver::launch::{KernelArg, LaunchConfig};
+use crate::driver::launch::{KernelArg, LaunchConfig, LaunchReport};
 use crate::driver::memory::MemoryPool;
-use crate::emulator::interp::{execute, Launch, Limits, ScalarArg};
+use crate::emulator::decode::{decode, DecodedKernel};
+use crate::emulator::interp::{execute_decoded, Limits, ScalarArg};
 use crate::emulator::isa::{Kernel, ParamKind};
+use crate::emulator::sched::default_workers;
 use crate::error::{Error, Result};
 
 /// The emulator backend. Stateless: each module owns its kernels.
@@ -60,7 +68,12 @@ impl LoadedModule for VtxModule {
     fn function(&self, name: &str) -> Result<Arc<dyn DeviceFunction>> {
         self.kernels
             .get(name)
-            .map(|k| Arc::new(VtxFunction { kernel: k.clone() }) as Arc<dyn DeviceFunction>)
+            .map(|k| {
+                Arc::new(VtxFunction {
+                    kernel: k.clone(),
+                    decoded: Mutex::new(None),
+                }) as Arc<dyn DeviceFunction>
+            })
             .ok_or_else(|| Error::FunctionNotFound(name.to_string()))
     }
 
@@ -71,12 +84,52 @@ impl LoadedModule for VtxModule {
 
 pub struct VtxFunction {
     kernel: Arc<Kernel>,
+    /// One-entry decode cache: (scalar binding, decoded form). The
+    /// coordinator's warm path always hits it (fixed scalars per
+    /// specialization); manual driver users hit it as long as their
+    /// scalar arguments are stable.
+    decoded: Mutex<Option<(Vec<ScalarArg>, Arc<DecodedKernel>)>>,
+}
+
+/// Bitwise scalar-binding equality: the cache must distinguish -0.0
+/// from 0.0 (different constants baked into the decoded stream) and
+/// must hit on NaN == NaN (plain `==` would re-decode forever).
+fn scalars_bitwise_eq(a: &[ScalarArg], b: &[ScalarArg]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| match (x, y) {
+            (ScalarArg::F32(p), ScalarArg::F32(q)) => p.to_bits() == q.to_bits(),
+            (ScalarArg::I32(p), ScalarArg::I32(q)) => p == q,
+            _ => false,
+        })
+}
+
+impl VtxFunction {
+    fn decoded_for(&self, scalars: &[ScalarArg]) -> Result<Arc<DecodedKernel>> {
+        let mut cache = self.decoded.lock().unwrap();
+        if let Some((cached_scalars, d)) = cache.as_ref() {
+            if scalars_bitwise_eq(cached_scalars, scalars) {
+                return Ok(d.clone());
+            }
+        }
+        let d = Arc::new(decode(&self.kernel, scalars)?);
+        *cache = Some((scalars.to_vec(), d.clone()));
+        Ok(d)
+    }
 }
 
 impl DeviceFunction for VtxFunction {
     /// Argument order must match the kernel's parameter declaration order:
     /// `Ptr` args bind to `PtrF32` params, scalar args to scalar params.
     fn launch(&self, cfg: &LaunchConfig, args: &[KernelArg], mem: &MemoryPool) -> Result<()> {
+        self.launch_report(cfg, args, mem).map(|_| ())
+    }
+
+    fn launch_report(
+        &self,
+        cfg: &LaunchConfig,
+        args: &[KernelArg],
+        mem: &MemoryPool,
+    ) -> Result<LaunchReport> {
         let k = &self.kernel;
         if args.len() != k.params.len() {
             return Err(Error::InvalidLaunch(format!(
@@ -101,9 +154,12 @@ impl DeviceFunction for VtxFunction {
                 ParamKind::I32 => scalars.push(ScalarArg::I32(arg.as_i64()? as i32)),
             }
         }
+        let decoded = self.decoded_for(&scalars)?;
         // Pull buffers out of the pool, reinterpret bytes as f32, run, put
         // them back — the emulator's "device-side" view of global memory.
-        mem.with_buffers(&ptrs, |bufs| -> Result<()> {
+        // On a trap the write-back is skipped, so device memory is
+        // unchanged regardless of the schedule.
+        let report = mem.with_buffers(&ptrs, |bufs| -> Result<LaunchReport> {
             let mut f32bufs: Vec<Vec<f32>> = bufs
                 .iter()
                 .map(|b| {
@@ -112,26 +168,26 @@ impl DeviceFunction for VtxFunction {
                         .collect()
                 })
                 .collect();
-            {
+            let report = {
                 let views: Vec<&mut [f32]> =
                     f32bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
-                execute(Launch {
-                    kernel: k,
-                    grid: (cfg.grid.x, cfg.grid.y),
-                    block: (cfg.block.x, cfg.block.y),
-                    buffers: views,
-                    scalars: scalars.clone(),
-                    limits: Limits::default(),
-                })?;
-            }
+                execute_decoded(
+                    &decoded,
+                    (cfg.grid.x, cfg.grid.y),
+                    (cfg.block.x, cfg.block.y),
+                    views,
+                    &Limits::default(),
+                    default_workers(),
+                )?
+            };
             for (b, f) in bufs.iter_mut().zip(&f32bufs) {
                 for (chunk, v) in b.chunks_exact_mut(4).zip(f) {
                     chunk.copy_from_slice(&v.to_le_bytes());
                 }
             }
-            Ok(())
+            Ok(report)
         })??;
-        Ok(())
+        Ok(report)
     }
 
     fn name(&self) -> String {
@@ -195,6 +251,33 @@ mod tests {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         assert_eq!(vals, vec![6., 7., 8., 9.]);
+    }
+
+    #[test]
+    fn launch_report_counts_blocks() {
+        let backend = VtxBackend::new();
+        let module = backend
+            .load_module(&ModuleSource::Vtx { kernels: vec![vadd_kernel()] })
+            .unwrap();
+        let f = module.function("vadd").unwrap();
+        let mem = MemoryPool::default();
+        let n = 256usize;
+        let bytes = vec![0u8; n * 4];
+        let a = mem.alloc(n * 4).unwrap();
+        mem.copy_h2d(a, &bytes).unwrap();
+        let b = mem.alloc(n * 4).unwrap();
+        mem.copy_h2d(b, &bytes).unwrap();
+        let c = mem.alloc(n * 4).unwrap();
+        let report = f
+            .launch_report(
+                &LaunchConfig::new((n / 32) as u32, 32u32),
+                &[KernelArg::Ptr(a), KernelArg::Ptr(b), KernelArg::Ptr(c)],
+                &mem,
+            )
+            .unwrap();
+        assert_eq!(report.blocks, (n / 32) as u64);
+        assert!(report.workers >= 1);
+        assert!(report.wall_ns > 0);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Launch-time pre-decoding of VTX kernels: the instruction stream is
+//! rewritten **once** per (kernel, scalar arguments) into a
+//! register-resolved form the interpreter can execute with zero binding
+//! lookups on the hot path:
+//!
+//! * `LdParamF` / `LdParamI` become `ConstF` / `ConstI` with the bound
+//!   scalar value baked in;
+//! * `LdG` / `StG` parameter indices are remapped to dense **buffer
+//!   slots** (the position among the pointer parameters), so global
+//!   accesses index the launch's buffer vector directly.
+//!
+//! The decoded form is cached by [`crate::emulator::VtxFunction`]
+//! alongside the coordinator's `Specialized` entry (the coordinator's
+//! scalars are fixed per signature), so warm `cuda!` launches skip the
+//! decode entirely — the emulator-side analog of the paper's "no
+//! steady-state overhead" claim.
+
+use crate::emulator::interp::ScalarArg;
+use crate::emulator::isa::{Instr, Kernel, ParamKind};
+use crate::error::{Error, Result};
+
+/// A kernel with all parameter references resolved for one scalar
+/// binding. Safe to share across worker threads (plain data).
+#[derive(Clone, Debug)]
+pub struct DecodedKernel {
+    pub name: String,
+    /// Float registers per thread.
+    pub fregs: u16,
+    /// Integer registers per thread.
+    pub iregs: u16,
+    /// Static shared memory, in f32 elements per block.
+    pub shared_f32: usize,
+    /// Number of global buffers the launch must bind (one per `PtrF32`
+    /// parameter, in declaration order).
+    pub nbufs: usize,
+    /// Rewritten instruction stream: `LdG`/`StG` carry buffer slots in
+    /// their `param` field, `LdParam*` no longer occur.
+    pub code: Vec<Instr>,
+}
+
+/// Resolve `kernel` against the launch's scalar arguments. The kernel must
+/// already have passed [`Kernel::validate`] (module load does this); this
+/// step only checks the scalar binding.
+pub fn decode(kernel: &Kernel, scalars: &[ScalarArg]) -> Result<DecodedKernel> {
+    // Map parameter index -> buffer slot or bound scalar.
+    #[derive(Clone, Copy)]
+    enum Bound {
+        Slot(u8),
+        Scalar(ScalarArg),
+    }
+    let mut bound = Vec::with_capacity(kernel.params.len());
+    let mut nbufs = 0usize;
+    let mut nscalar = 0usize;
+    for p in &kernel.params {
+        match p {
+            ParamKind::PtrF32 => {
+                bound.push(Bound::Slot(nbufs as u8));
+                nbufs += 1;
+            }
+            _ => {
+                let s = scalars.get(nscalar).copied().ok_or_else(|| {
+                    Error::InvalidLaunch(format!(
+                        "kernel `{}` missing scalar argument {nscalar}",
+                        kernel.name
+                    ))
+                })?;
+                bound.push(Bound::Scalar(s));
+                nscalar += 1;
+            }
+        }
+    }
+    if nscalar != scalars.len() {
+        return Err(Error::InvalidLaunch(format!(
+            "kernel `{}` takes {nscalar} scalar arguments, got {}",
+            kernel.name,
+            scalars.len()
+        )));
+    }
+
+    let code = kernel
+        .code
+        .iter()
+        .map(|ins| match *ins {
+            Instr::LdG { dst, param, idx } => match bound[param as usize] {
+                Bound::Slot(slot) => Instr::LdG { dst, param: slot, idx },
+                Bound::Scalar(_) => unreachable!("validated: LdG param is PtrF32"),
+            },
+            Instr::StG { param, idx, src } => match bound[param as usize] {
+                Bound::Slot(slot) => Instr::StG { param: slot, idx, src },
+                Bound::Scalar(_) => unreachable!("validated: StG param is PtrF32"),
+            },
+            Instr::LdParamF(d, p) => {
+                let v = match bound[p as usize] {
+                    Bound::Scalar(ScalarArg::F32(v)) => v,
+                    Bound::Scalar(ScalarArg::I32(v)) => v as f32,
+                    Bound::Slot(_) => unreachable!("validated: LdParamF param is scalar"),
+                };
+                Instr::ConstF(d, v)
+            }
+            Instr::LdParamI(d, p) => {
+                let v = match bound[p as usize] {
+                    Bound::Scalar(ScalarArg::I32(v)) => v as i64,
+                    Bound::Scalar(ScalarArg::F32(v)) => v as i64,
+                    Bound::Slot(_) => unreachable!("validated: LdParamI param is scalar"),
+                };
+                Instr::ConstI(d, v)
+            }
+            other => other,
+        })
+        .collect();
+
+    Ok(DecodedKernel {
+        name: kernel.name.clone(),
+        fregs: kernel.fregs,
+        iregs: kernel.iregs,
+        shared_f32: kernel.shared_f32,
+        nbufs,
+        code,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulator::builder::KernelBuilder;
+
+    fn affine_kernel() -> Kernel {
+        // out[tid] = scale * tid + offset; params: ptr, f32, i32
+        let mut b = KernelBuilder::new("affine");
+        let pout = b.ptr_param();
+        let pscale = b.f32_param();
+        let pn = b.i32_param();
+        let tid = b.tid_x();
+        let tf = b.cvt_i2f(tid);
+        let scale = b.ld_param_f(pscale);
+        let n = b.ld_param_i(pn);
+        let nf = b.cvt_i2f(n);
+        let prod = b.fmul(scale, tf);
+        let v = b.fadd(prod, nf);
+        b.stg(pout, tid, v);
+        b.ret();
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn scalars_baked_and_slots_remapped() {
+        let k = affine_kernel();
+        let d = decode(&k, &[ScalarArg::F32(2.5), ScalarArg::I32(7)]).unwrap();
+        assert_eq!(d.nbufs, 1);
+        assert!(d.code.iter().any(|i| matches!(i, Instr::ConstF(_, v) if *v == 2.5)));
+        assert!(d.code.iter().any(|i| matches!(i, Instr::ConstI(_, 7))));
+        assert!(!d
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::LdParamF(..) | Instr::LdParamI(..))));
+        // the single StG references buffer slot 0, not param index 0
+        assert!(d
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::StG { param: 0, .. })));
+    }
+
+    #[test]
+    fn missing_scalar_rejected() {
+        let k = affine_kernel();
+        let err = decode(&k, &[ScalarArg::F32(1.0)]).unwrap_err();
+        assert!(err.to_string().contains("missing scalar argument"), "{err}");
+    }
+
+    #[test]
+    fn extra_scalars_rejected() {
+        let k = affine_kernel();
+        let err = decode(
+            &k,
+            &[ScalarArg::F32(1.0), ScalarArg::I32(1), ScalarArg::I32(2)],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("scalar arguments"), "{err}");
+    }
+}

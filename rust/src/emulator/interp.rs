@@ -3,14 +3,45 @@
 //! analog of this stack (paper §5: "developers can now use the GPU
 //! support without having any physical NVIDIA hardware").
 //!
-//! Execution model: blocks are independent (executed sequentially, which
-//! is a legal CUDA schedule); within a block, threads run co-operatively —
-//! each thread executes until it hits a barrier or exits, then the next
-//! thread runs. A barrier releases when every live thread has arrived;
-//! divergent barriers (some threads exited while others wait) trap, as on
-//! real hardware.
+//! Execution model: blocks are **independent** (the CUDA contract) and
+//! are dispatched across the fixed worker-thread pool of
+//! [`crate::emulator::sched`] — each worker claims the next unclaimed
+//! block, interprets it to completion with its own private shared memory
+//! and register files, and moves on. Global memory is shared across
+//! blocks through per-element atomic cells, so cross-block races behave
+//! like (relaxed) hardware races instead of undefined behavior. A
+//! single-worker schedule (`HLGPU_WORKERS=1`, or
+//! [`crate::emulator::sched::set_default_workers`]) degenerates to the
+//! classic sequential block loop, which is also used automatically for
+//! single-block grids. For **race-free kernels** (blocks that do not
+//! communicate through global memory — the only kernels with defined
+//! results on real hardware either) schedules of any width produce
+//! identical results and identical trap coordinates: on a trap, the
+//! scheduler stops claiming new blocks, drains the in-flight ones, and
+//! reports the trap of the **lowest** block index — exactly what the
+//! sequential schedule reports. Kernels that race across blocks get
+//! hardware-like unordered behavior, under which observed values (and
+//! therefore traps derived from them) may differ from the sequential
+//! interleaving.
+//!
+//! Within a block, threads run co-operatively — each thread executes
+//! until it hits a barrier or exits, then the next thread runs. A barrier
+//! releases when every live thread has arrived; divergent barriers (some
+//! threads exited while others wait) trap, as on real hardware.
+//!
+//! Before any block runs, the instruction stream is pre-decoded once per
+//! (kernel, scalar binding) by [`crate::emulator::decode`]: scalar
+//! parameters become immediates and pointer parameters become dense
+//! buffer slots, so the interpreter hot loop performs no binding lookups.
 
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::driver::launch::LaunchReport;
+use crate::emulator::decode::{decode, DecodedKernel};
 use crate::emulator::isa::{CmpOp, FOp, IOp, Instr, Kernel, Special, UnFOp};
+use crate::emulator::sched::{default_workers, ArriveGuard, Latch, WorkerPool};
 use crate::error::{Error, Result};
 
 /// Per-launch resource limits.
@@ -28,7 +59,7 @@ impl Default for Limits {
 
 /// Scalar parameter values bound at launch (pointer params are bound via
 /// `buffers` instead).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ScalarArg {
     F32(f32),
     I32(i32),
@@ -46,6 +77,114 @@ pub struct Launch<'a> {
     pub limits: Limits,
 }
 
+/// Execute a launch with the default schedule width
+/// ([`crate::emulator::sched::default_workers`]).
+pub fn execute(launch: Launch<'_>) -> Result<()> {
+    execute_with(launch, default_workers()).map(|_| ())
+}
+
+/// Execute a launch with an explicit schedule width. `workers <= 1` (or a
+/// single-block grid) runs the sequential schedule; larger widths
+/// dispatch blocks across the global worker pool.
+pub fn execute_with(launch: Launch<'_>, workers: usize) -> Result<LaunchReport> {
+    let decoded = Arc::new(decode(launch.kernel, &launch.scalars)?);
+    execute_decoded(
+        &decoded,
+        launch.grid,
+        launch.block,
+        launch.buffers,
+        &launch.limits,
+        workers,
+    )
+}
+
+/// Execute a pre-decoded kernel (the cached warm path: the coordinator's
+/// `Specialized` entry holds the decoded form and skips `decode`).
+pub fn execute_decoded(
+    kernel: &Arc<DecodedKernel>,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buffers: Vec<&mut [f32]>,
+    limits: &Limits,
+    workers: usize,
+) -> Result<LaunchReport> {
+    if buffers.len() != kernel.nbufs {
+        return Err(Error::InvalidLaunch(format!(
+            "kernel `{}` takes {} buffers, got {}",
+            kernel.name,
+            kernel.nbufs,
+            buffers.len()
+        )));
+    }
+    let nblocks = grid.0 as u64 * grid.1 as u64;
+    if workers > 1 && nblocks > 1 {
+        run_parallel(kernel, grid, block, buffers, limits, workers)
+    } else {
+        run_sequential(kernel, grid, block, buffers, limits)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Global memory views
+// ------------------------------------------------------------------------
+
+/// Global-memory access used by the block interpreter. Monomorphized per
+/// schedule: plain slices for the sequential path, shared atomic cells
+/// for the parallel path.
+trait GlobalMem {
+    fn len(&self, slot: usize) -> usize;
+    fn load(&self, slot: usize, idx: usize) -> f32;
+    fn store(&mut self, slot: usize, idx: usize, v: f32);
+}
+
+/// Sequential view: the launch's slices, accessed directly.
+struct SliceMem<'a> {
+    bufs: Vec<&'a mut [f32]>,
+}
+
+impl GlobalMem for SliceMem<'_> {
+    #[inline]
+    fn len(&self, slot: usize) -> usize {
+        self.bufs[slot].len()
+    }
+    #[inline]
+    fn load(&self, slot: usize, idx: usize) -> f32 {
+        self.bufs[slot][idx]
+    }
+    #[inline]
+    fn store(&mut self, slot: usize, idx: usize, v: f32) {
+        self.bufs[slot][idx] = v;
+    }
+}
+
+/// Parallel view: per-block scoped handle onto the launch's shared
+/// buffers. f32 values live as `AtomicU32` bit patterns with relaxed
+/// ordering — block independence means race-free kernels see exactly the
+/// sequential results, and racy kernels get hardware-like (defined,
+/// unordered) behavior rather than UB.
+struct AtomicMem<'a> {
+    bufs: &'a [Vec<AtomicU32>],
+}
+
+impl GlobalMem for AtomicMem<'_> {
+    #[inline]
+    fn len(&self, slot: usize) -> usize {
+        self.bufs[slot].len()
+    }
+    #[inline]
+    fn load(&self, slot: usize, idx: usize) -> f32 {
+        f32::from_bits(self.bufs[slot][idx].load(Ordering::Relaxed))
+    }
+    #[inline]
+    fn store(&mut self, slot: usize, idx: usize, v: f32) {
+        self.bufs[slot][idx].store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+// ------------------------------------------------------------------------
+// Block interpreter (shared by both schedules)
+// ------------------------------------------------------------------------
+
 #[derive(Clone, Copy, PartialEq)]
 enum ThreadState {
     Running,
@@ -61,323 +200,407 @@ struct Thread {
     steps: u64,
 }
 
-/// Mapping from parameter index to its binding slot.
-enum Binding {
-    Ptr(usize),
-    Scalar(ScalarArg),
-}
-
-pub fn execute(launch: Launch<'_>) -> Result<()> {
-    let k = launch.kernel;
-    // Bind parameters.
-    let mut bindings = Vec::with_capacity(k.params.len());
-    let mut nptr = 0usize;
-    let mut nscalar = 0usize;
-    for p in &k.params {
-        match p {
-            crate::emulator::isa::ParamKind::PtrF32 => {
-                if nptr >= launch.buffers.len() {
-                    return Err(Error::InvalidLaunch(format!(
-                        "kernel `{}` needs {} buffers, got {}",
-                        k.name,
-                        k.ptr_param_count(),
-                        launch.buffers.len()
-                    )));
-                }
-                bindings.push(Binding::Ptr(nptr));
-                nptr += 1;
-            }
-            _ => {
-                let s = launch.scalars.get(nscalar).copied().ok_or_else(|| {
-                    Error::InvalidLaunch(format!(
-                        "kernel `{}` missing scalar argument {nscalar}",
-                        k.name
-                    ))
-                })?;
-                bindings.push(Binding::Scalar(s));
-                nscalar += 1;
-            }
-        }
-    }
-    if nptr != launch.buffers.len() {
-        return Err(Error::InvalidLaunch(format!(
-            "kernel `{}` takes {nptr} buffers, got {}",
-            k.name,
-            launch.buffers.len()
-        )));
-    }
-
-    let mut buffers = launch.buffers;
-    let (gx, gy) = launch.grid;
-    let (bx, by) = launch.block;
+/// Interpret one thread block to completion (or trap). Identical for the
+/// sequential and parallel schedules, so traps surface with identical
+/// coordinates and reasons under both.
+fn run_block<M: GlobalMem>(
+    k: &DecodedKernel,
+    grid: (u32, u32),
+    block: (u32, u32),
+    block_id: (u32, u32),
+    mem: &mut M,
+    limits: &Limits,
+) -> Result<()> {
+    let (gx, gy) = grid;
+    let (bx, by) = block;
+    let (bx_i, by_i) = block_id;
     let threads_per_block = (bx * by) as usize;
 
-    let trap = |block: (u32, u32), thread: (u32, u32), reason: String| Error::VtxTrap {
+    let trap = |thread: (u32, u32), reason: String| Error::VtxTrap {
         kernel: k.name.clone(),
-        block: (block.0, block.1, 0),
+        block: (bx_i, by_i, 0),
         thread: (thread.0, thread.1, 0),
         reason,
     };
 
-    for by_i in 0..gy {
-        for bx_i in 0..gx {
-            let block_id = (bx_i, by_i);
-            let mut shared = vec![0f32; k.shared_f32];
-            let mut threads: Vec<Thread> = (0..threads_per_block)
-                .map(|_| Thread {
-                    pc: 0,
-                    f: vec![0f32; k.fregs as usize],
-                    i: vec![0i64; k.iregs as usize],
-                    state: ThreadState::Running,
-                    steps: 0,
-                })
-                .collect();
+    let mut shared = vec![0f32; k.shared_f32];
+    let mut threads: Vec<Thread> = (0..threads_per_block)
+        .map(|_| Thread {
+            pc: 0,
+            f: vec![0f32; k.fregs as usize],
+            i: vec![0i64; k.iregs as usize],
+            state: ThreadState::Running,
+            steps: 0,
+        })
+        .collect();
 
+    loop {
+        let mut progressed = false;
+        for t_lin in 0..threads_per_block {
+            if threads[t_lin].state != ThreadState::Running {
+                continue;
+            }
+            progressed = true;
+            let tx = (t_lin as u32) % bx;
+            let ty = (t_lin as u32) / bx;
+            let th = &mut threads[t_lin];
+            // Run this thread until barrier/exit/trap.
             loop {
-                let mut progressed = false;
-                for t_lin in 0..threads_per_block {
-                    if threads[t_lin].state != ThreadState::Running {
-                        continue;
-                    }
-                    progressed = true;
-                    let tx = (t_lin as u32) % bx;
-                    let ty = (t_lin as u32) / bx;
-                    let th = &mut threads[t_lin];
-                    // Run this thread until barrier/exit/trap.
-                    loop {
-                        if th.steps >= launch.limits.steps_per_thread {
-                            return Err(trap(
-                                block_id,
-                                (tx, ty),
-                                format!(
-                                    "step budget exhausted ({} instructions)",
-                                    launch.limits.steps_per_thread
-                                ),
-                            ));
-                        }
-                        th.steps += 1;
-                        let ins = k.code[th.pc];
-                        th.pc += 1;
-                        match ins {
-                            Instr::ConstF(d, v) => th.f[d as usize] = v,
-                            Instr::ConstI(d, v) => th.i[d as usize] = v,
-                            Instr::MovF(d, s) => th.f[d as usize] = th.f[s as usize],
-                            Instr::MovI(d, s) => th.i[d as usize] = th.i[s as usize],
-                            Instr::BinF(op, d, a, b) => {
-                                let (x, y) = (th.f[a as usize], th.f[b as usize]);
-                                th.f[d as usize] = match op {
-                                    FOp::Add => x + y,
-                                    FOp::Sub => x - y,
-                                    FOp::Mul => x * y,
-                                    FOp::Div => x / y,
-                                    FOp::Min => x.min(y),
-                                    FOp::Max => x.max(y),
-                                };
-                            }
-                            Instr::BinI(op, d, a, b) => {
-                                let (x, y) = (th.i[a as usize], th.i[b as usize]);
-                                th.i[d as usize] = match op {
-                                    IOp::Add => x.wrapping_add(y),
-                                    IOp::Sub => x.wrapping_sub(y),
-                                    IOp::Mul => x.wrapping_mul(y),
-                                    IOp::Div => {
-                                        if y == 0 {
-                                            return Err(trap(
-                                                block_id,
-                                                (tx, ty),
-                                                "integer division by zero".into(),
-                                            ));
-                                        }
-                                        x / y
-                                    }
-                                    IOp::Rem => {
-                                        if y == 0 {
-                                            return Err(trap(
-                                                block_id,
-                                                (tx, ty),
-                                                "integer remainder by zero".into(),
-                                            ));
-                                        }
-                                        x % y
-                                    }
-                                };
-                            }
-                            Instr::UnF(op, d, a) => {
-                                let x = th.f[a as usize];
-                                th.f[d as usize] = match op {
-                                    UnFOp::Neg => -x,
-                                    UnFOp::Abs => x.abs(),
-                                    UnFOp::Sqrt => x.sqrt(),
-                                    UnFOp::Sin => x.sin(),
-                                    UnFOp::Cos => x.cos(),
-                                    UnFOp::Floor => x.floor(),
-                                };
-                            }
-                            Instr::CmpF(op, d, a, b) => {
-                                let (x, y) = (th.f[a as usize], th.f[b as usize]);
-                                th.i[d as usize] = cmpf(op, x, y) as i64;
-                            }
-                            Instr::CmpI(op, d, a, b) => {
-                                let (x, y) = (th.i[a as usize], th.i[b as usize]);
-                                th.i[d as usize] = cmpi(op, x, y) as i64;
-                            }
-                            Instr::SelF(d, p, a, b) => {
-                                th.f[d as usize] = if th.i[p as usize] != 0 {
-                                    th.f[a as usize]
-                                } else {
-                                    th.f[b as usize]
-                                };
-                            }
-                            Instr::CvtFI(d, s) => th.i[d as usize] = th.f[s as usize] as i64,
-                            Instr::CvtIF(d, s) => th.f[d as usize] = th.i[s as usize] as f32,
-                            Instr::Spec(d, s) => {
-                                th.i[d as usize] = match s {
-                                    Special::ThreadIdX => tx as i64,
-                                    Special::ThreadIdY => ty as i64,
-                                    Special::BlockIdX => bx_i as i64,
-                                    Special::BlockIdY => by_i as i64,
-                                    Special::BlockDimX => bx as i64,
-                                    Special::BlockDimY => by as i64,
-                                    Special::GridDimX => gx as i64,
-                                    Special::GridDimY => gy as i64,
-                                };
-                            }
-                            Instr::LdG { dst, param, idx } => {
-                                let slot = match &bindings[param as usize] {
-                                    Binding::Ptr(s) => *s,
-                                    _ => unreachable!("validated"),
-                                };
-                                let i = th.i[idx as usize];
-                                let buf = &buffers[slot];
-                                if i < 0 || i as usize >= buf.len() {
-                                    return Err(trap(
-                                        block_id,
-                                        (tx, ty),
-                                        format!(
-                                            "global load OOB: index {i} in buffer of {} elements (param {param})",
-                                            buf.len()
-                                        ),
-                                    ));
-                                }
-                                th.f[dst as usize] = buf[i as usize];
-                            }
-                            Instr::StG { param, idx, src } => {
-                                let slot = match &bindings[param as usize] {
-                                    Binding::Ptr(s) => *s,
-                                    _ => unreachable!("validated"),
-                                };
-                                let i = th.i[idx as usize];
-                                let v = th.f[src as usize];
-                                let buf = &mut buffers[slot];
-                                if i < 0 || i as usize >= buf.len() {
-                                    return Err(trap(
-                                        block_id,
-                                        (tx, ty),
-                                        format!(
-                                            "global store OOB: index {i} in buffer of {} elements (param {param})",
-                                            buf.len()
-                                        ),
-                                    ));
-                                }
-                                buf[i as usize] = v;
-                            }
-                            Instr::LdS { dst, idx } => {
-                                let i = th.i[idx as usize];
-                                if i < 0 || i as usize >= shared.len() {
-                                    return Err(trap(
-                                        block_id,
-                                        (tx, ty),
-                                        format!(
-                                            "shared load OOB: index {i} of {}",
-                                            shared.len()
-                                        ),
-                                    ));
-                                }
-                                th.f[dst as usize] = shared[i as usize];
-                            }
-                            Instr::StS { idx, src } => {
-                                let i = th.i[idx as usize];
-                                if i < 0 || i as usize >= shared.len() {
-                                    return Err(trap(
-                                        block_id,
-                                        (tx, ty),
-                                        format!(
-                                            "shared store OOB: index {i} of {}",
-                                            shared.len()
-                                        ),
-                                    ));
-                                }
-                                shared[i as usize] = th.f[src as usize];
-                            }
-                            Instr::LdParamF(d, p) => {
-                                th.f[d as usize] = match &bindings[p as usize] {
-                                    Binding::Scalar(ScalarArg::F32(v)) => *v,
-                                    Binding::Scalar(ScalarArg::I32(v)) => *v as f32,
-                                    _ => unreachable!("validated"),
-                                };
-                            }
-                            Instr::LdParamI(d, p) => {
-                                th.i[d as usize] = match &bindings[p as usize] {
-                                    Binding::Scalar(ScalarArg::I32(v)) => *v as i64,
-                                    Binding::Scalar(ScalarArg::F32(v)) => *v as i64,
-                                    _ => unreachable!("validated"),
-                                };
-                            }
-                            Instr::Bar => {
-                                th.state = ThreadState::AtBarrier;
-                                break;
-                            }
-                            Instr::Bra(t) => th.pc = t as usize,
-                            Instr::BraIf(p, t) => {
-                                if th.i[p as usize] != 0 {
-                                    th.pc = t as usize;
-                                }
-                            }
-                            Instr::BraIfZ(p, t) => {
-                                if th.i[p as usize] == 0 {
-                                    th.pc = t as usize;
-                                }
-                            }
-                            Instr::Ret => {
-                                th.state = ThreadState::Done;
-                                break;
-                            }
-                        }
-                    }
-                }
-
-                // Barrier resolution.
-                let any_running = threads.iter().any(|t| t.state == ThreadState::Running);
-                if any_running {
-                    continue;
-                }
-                let at_barrier = threads
-                    .iter()
-                    .filter(|t| t.state == ThreadState::AtBarrier)
-                    .count();
-                if at_barrier == 0 {
-                    break; // all done
-                }
-                let done = threads.iter().filter(|t| t.state == ThreadState::Done).count();
-                if done > 0 {
+                if th.steps >= limits.steps_per_thread {
                     return Err(trap(
-                        block_id,
-                        (0, 0),
+                        (tx, ty),
                         format!(
-                            "barrier divergence: {at_barrier} threads waiting, {done} exited"
+                            "step budget exhausted ({} instructions)",
+                            limits.steps_per_thread
                         ),
                     ));
                 }
-                for t in &mut threads {
-                    t.state = ThreadState::Running;
-                }
-                if !progressed {
-                    return Err(trap(block_id, (0, 0), "scheduler made no progress".into()));
+                th.steps += 1;
+                let ins = k.code[th.pc];
+                th.pc += 1;
+                match ins {
+                    Instr::ConstF(d, v) => th.f[d as usize] = v,
+                    Instr::ConstI(d, v) => th.i[d as usize] = v,
+                    Instr::MovF(d, s) => th.f[d as usize] = th.f[s as usize],
+                    Instr::MovI(d, s) => th.i[d as usize] = th.i[s as usize],
+                    Instr::BinF(op, d, a, b) => {
+                        let (x, y) = (th.f[a as usize], th.f[b as usize]);
+                        th.f[d as usize] = match op {
+                            FOp::Add => x + y,
+                            FOp::Sub => x - y,
+                            FOp::Mul => x * y,
+                            FOp::Div => x / y,
+                            FOp::Min => x.min(y),
+                            FOp::Max => x.max(y),
+                        };
+                    }
+                    Instr::BinI(op, d, a, b) => {
+                        let (x, y) = (th.i[a as usize], th.i[b as usize]);
+                        th.i[d as usize] = match op {
+                            IOp::Add => x.wrapping_add(y),
+                            IOp::Sub => x.wrapping_sub(y),
+                            IOp::Mul => x.wrapping_mul(y),
+                            IOp::Div => {
+                                if y == 0 {
+                                    return Err(trap(
+                                        (tx, ty),
+                                        "integer division by zero".into(),
+                                    ));
+                                }
+                                x / y
+                            }
+                            IOp::Rem => {
+                                if y == 0 {
+                                    return Err(trap(
+                                        (tx, ty),
+                                        "integer remainder by zero".into(),
+                                    ));
+                                }
+                                x % y
+                            }
+                        };
+                    }
+                    Instr::UnF(op, d, a) => {
+                        let x = th.f[a as usize];
+                        th.f[d as usize] = match op {
+                            UnFOp::Neg => -x,
+                            UnFOp::Abs => x.abs(),
+                            UnFOp::Sqrt => x.sqrt(),
+                            UnFOp::Sin => x.sin(),
+                            UnFOp::Cos => x.cos(),
+                            UnFOp::Floor => x.floor(),
+                        };
+                    }
+                    Instr::CmpF(op, d, a, b) => {
+                        let (x, y) = (th.f[a as usize], th.f[b as usize]);
+                        th.i[d as usize] = cmpf(op, x, y) as i64;
+                    }
+                    Instr::CmpI(op, d, a, b) => {
+                        let (x, y) = (th.i[a as usize], th.i[b as usize]);
+                        th.i[d as usize] = cmpi(op, x, y) as i64;
+                    }
+                    Instr::SelF(d, p, a, b) => {
+                        th.f[d as usize] = if th.i[p as usize] != 0 {
+                            th.f[a as usize]
+                        } else {
+                            th.f[b as usize]
+                        };
+                    }
+                    Instr::CvtFI(d, s) => th.i[d as usize] = th.f[s as usize] as i64,
+                    Instr::CvtIF(d, s) => th.f[d as usize] = th.i[s as usize] as f32,
+                    Instr::Spec(d, s) => {
+                        th.i[d as usize] = match s {
+                            Special::ThreadIdX => tx as i64,
+                            Special::ThreadIdY => ty as i64,
+                            Special::BlockIdX => bx_i as i64,
+                            Special::BlockIdY => by_i as i64,
+                            Special::BlockDimX => bx as i64,
+                            Special::BlockDimY => by as i64,
+                            Special::GridDimX => gx as i64,
+                            Special::GridDimY => gy as i64,
+                        };
+                    }
+                    Instr::LdG { dst, param, idx } => {
+                        // `param` is a buffer slot after pre-decoding.
+                        let slot = param as usize;
+                        let i = th.i[idx as usize];
+                        let len = mem.len(slot);
+                        if i < 0 || i as usize >= len {
+                            return Err(trap(
+                                (tx, ty),
+                                format!(
+                                    "global load OOB: index {i} in buffer of {len} elements (buffer {slot})"
+                                ),
+                            ));
+                        }
+                        th.f[dst as usize] = mem.load(slot, i as usize);
+                    }
+                    Instr::StG { param, idx, src } => {
+                        let slot = param as usize;
+                        let i = th.i[idx as usize];
+                        let v = th.f[src as usize];
+                        let len = mem.len(slot);
+                        if i < 0 || i as usize >= len {
+                            return Err(trap(
+                                (tx, ty),
+                                format!(
+                                    "global store OOB: index {i} in buffer of {len} elements (buffer {slot})"
+                                ),
+                            ));
+                        }
+                        mem.store(slot, i as usize, v);
+                    }
+                    Instr::LdS { dst, idx } => {
+                        let i = th.i[idx as usize];
+                        if i < 0 || i as usize >= shared.len() {
+                            return Err(trap(
+                                (tx, ty),
+                                format!("shared load OOB: index {i} of {}", shared.len()),
+                            ));
+                        }
+                        th.f[dst as usize] = shared[i as usize];
+                    }
+                    Instr::StS { idx, src } => {
+                        let i = th.i[idx as usize];
+                        if i < 0 || i as usize >= shared.len() {
+                            return Err(trap(
+                                (tx, ty),
+                                format!("shared store OOB: index {i} of {}", shared.len()),
+                            ));
+                        }
+                        shared[i as usize] = th.f[src as usize];
+                    }
+                    Instr::LdParamF(..) | Instr::LdParamI(..) => {
+                        unreachable!("scalar params resolved by pre-decode")
+                    }
+                    Instr::Bar => {
+                        th.state = ThreadState::AtBarrier;
+                        break;
+                    }
+                    Instr::Bra(t) => th.pc = t as usize,
+                    Instr::BraIf(p, t) => {
+                        if th.i[p as usize] != 0 {
+                            th.pc = t as usize;
+                        }
+                    }
+                    Instr::BraIfZ(p, t) => {
+                        if th.i[p as usize] == 0 {
+                            th.pc = t as usize;
+                        }
+                    }
+                    Instr::Ret => {
+                        th.state = ThreadState::Done;
+                        break;
+                    }
                 }
             }
         }
+
+        // Barrier resolution.
+        let any_running = threads.iter().any(|t| t.state == ThreadState::Running);
+        if any_running {
+            continue;
+        }
+        let at_barrier = threads
+            .iter()
+            .filter(|t| t.state == ThreadState::AtBarrier)
+            .count();
+        if at_barrier == 0 {
+            return Ok(()); // all done
+        }
+        let done = threads.iter().filter(|t| t.state == ThreadState::Done).count();
+        if done > 0 {
+            return Err(trap(
+                (0, 0),
+                format!("barrier divergence: {at_barrier} threads waiting, {done} exited"),
+            ));
+        }
+        for t in &mut threads {
+            t.state = ThreadState::Running;
+        }
+        if !progressed {
+            return Err(trap((0, 0), "scheduler made no progress".into()));
+        }
     }
-    Ok(())
+}
+
+// ------------------------------------------------------------------------
+// Schedules
+// ------------------------------------------------------------------------
+
+/// Sequential schedule: blocks in linear order on the calling thread —
+/// the reference schedule the parallel one must be indistinguishable
+/// from (modulo wall time).
+fn run_sequential(
+    k: &DecodedKernel,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buffers: Vec<&mut [f32]>,
+    limits: &Limits,
+) -> Result<LaunchReport> {
+    let t0 = Instant::now();
+    let (gx, gy) = grid;
+    let mut mem = SliceMem { bufs: buffers };
+    for by_i in 0..gy {
+        for bx_i in 0..gx {
+            run_block(k, grid, block, (bx_i, by_i), &mut mem, limits)?;
+        }
+    }
+    let wall = t0.elapsed().as_nanos() as u64;
+    Ok(LaunchReport {
+        blocks: gx as u64 * gy as u64,
+        workers: 1,
+        busy_ns: wall,
+        wall_ns: wall,
+    })
+}
+
+/// Shared state of one parallel launch.
+struct ParShared {
+    kernel: Arc<DecodedKernel>,
+    bufs: Vec<Vec<AtomicU32>>,
+    grid: (u32, u32),
+    block: (u32, u32),
+    limits: Limits,
+    /// Next unclaimed linear block index. Claimed strictly in order, so
+    /// when a trap cancels the launch every block below the trapping one
+    /// has already been claimed — guaranteeing the minimum-index trap is
+    /// the same one the sequential schedule would report.
+    next: AtomicU64,
+    cancel: AtomicBool,
+    traps: Mutex<Vec<(u64, Error)>>,
+    busy_ns: AtomicU64,
+    latch: Latch,
+}
+
+impl ParShared {
+    fn worker(&self) {
+        let _arrive = ArriveGuard(&self.latch);
+        let t0 = Instant::now();
+        let gx = self.grid.0 as u64;
+        let nblocks = gx * self.grid.1 as u64;
+        let mut mem = AtomicMem { bufs: &self.bufs };
+        loop {
+            if self.cancel.load(Ordering::Relaxed) {
+                break;
+            }
+            let lin = self.next.fetch_add(1, Ordering::Relaxed);
+            if lin >= nblocks {
+                break;
+            }
+            let block_id = ((lin % gx) as u32, (lin / gx) as u32);
+            if let Err(e) = run_block(
+                &self.kernel,
+                self.grid,
+                self.block,
+                block_id,
+                &mut mem,
+                &self.limits,
+            ) {
+                self.traps.lock().unwrap().push((lin, e));
+                self.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        self.busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Parallel schedule: blocks claimed in order off a shared counter by up
+/// to `workers` jobs on the global pool. On success the atomic buffers
+/// are written back to the launch's slices; on a trap the buffers are
+/// left untouched (as the backend discards them — trap-visible state
+/// matches the sequential schedule at the driver level).
+///
+/// The copy into owned `AtomicU32` cells (and back) keeps every job
+/// `'static`-safe without unsafe lifetime erasure; it is O(buffer)
+/// serial work, acceptable because the interpreter's per-element cost
+/// dwarfs a memcpy for every kernel in the repo. Revisit with an
+/// in-place atomic view if a memory-bound workload ever appears.
+fn run_parallel(
+    kernel: &Arc<DecodedKernel>,
+    grid: (u32, u32),
+    block: (u32, u32),
+    mut buffers: Vec<&mut [f32]>,
+    limits: &Limits,
+    workers: usize,
+) -> Result<LaunchReport> {
+    let nblocks = grid.0 as u64 * grid.1 as u64;
+    let pool = WorkerPool::global();
+    // Clamp to the pool: submitting more jobs than threads cannot add
+    // concurrency, and the report must state the width that actually ran.
+    let njobs = workers.min(nblocks as usize).min(pool.size()).max(1);
+    let t0 = Instant::now();
+
+    let shared = Arc::new(ParShared {
+        kernel: kernel.clone(),
+        bufs: buffers
+            .iter()
+            .map(|b| b.iter().map(|v| AtomicU32::new(v.to_bits())).collect())
+            .collect(),
+        grid,
+        block,
+        limits: *limits,
+        next: AtomicU64::new(0),
+        cancel: AtomicBool::new(false),
+        traps: Mutex::new(Vec::new()),
+        busy_ns: AtomicU64::new(0),
+        latch: Latch::new(njobs),
+    });
+
+    for _ in 0..njobs {
+        let st = shared.clone();
+        pool.submit(Box::new(move || st.worker()));
+    }
+    let panicked = shared.latch.wait();
+    if panicked {
+        return Err(Error::Other(
+            "VTX worker thread panicked during block execution".into(),
+        ));
+    }
+
+    {
+        let mut traps = shared.traps.lock().unwrap();
+        if !traps.is_empty() {
+            traps.sort_by_key(|(lin, _)| *lin);
+            return Err(traps.remove(0).1);
+        }
+    }
+
+    // Success: publish the device-visible state back into the launch's
+    // buffers.
+    for (dst, src) in buffers.iter_mut().zip(&shared.bufs) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = f32::from_bits(s.load(Ordering::Relaxed));
+        }
+    }
+
+    Ok(LaunchReport {
+        blocks: nblocks,
+        workers: njobs,
+        busy_ns: shared.busy_ns.load(Ordering::Relaxed),
+        wall_ns: t0.elapsed().as_nanos() as u64,
+    })
 }
 
 fn cmpf(op: CmpOp, x: f32, y: f32) -> bool {
@@ -446,6 +669,41 @@ mod tests {
         let mut c = vec![0.0f32; 4];
         run(&k, (2, 1), (2, 1), vec![&mut a, &mut bb, &mut c]).unwrap();
         assert_eq!(c, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn vadd_parallel_matches_sequential_bitwise() {
+        let k = vadd_kernel();
+        let n = 1024usize;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32) * -1.11).collect();
+        let mut outs = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let mut aa = a.clone();
+            let mut bb = b.clone();
+            let mut c = vec![0.0f32; n];
+            let report = execute_with(
+                Launch {
+                    kernel: &k,
+                    grid: ((n / 64) as u32, 1),
+                    block: (64, 1),
+                    buffers: vec![&mut aa, &mut bb, &mut c],
+                    scalars: vec![],
+                    limits: Limits::default(),
+                },
+                workers,
+            )
+            .unwrap();
+            assert_eq!(report.blocks, (n / 64) as u64);
+            if workers == 1 {
+                assert_eq!(report.workers, 1);
+            } else {
+                assert!(report.workers >= 2 && report.workers <= workers);
+            }
+            outs.push(c);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
     }
 
     #[test]
@@ -575,5 +833,13 @@ mod tests {
         })
         .unwrap();
         assert_eq!(out, vec![1.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn buffer_count_mismatch_rejected() {
+        let k = vadd_kernel();
+        let mut a = vec![0.0f32; 4];
+        let err = run(&k, (1, 1), (4, 1), vec![&mut a]).unwrap_err();
+        assert!(err.to_string().contains("takes 3 buffers"), "{err}");
     }
 }

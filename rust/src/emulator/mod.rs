@@ -3,14 +3,25 @@
 //! grid/block/thread model, shared memory and barriers. Lets the entire
 //! framework run with no PJRT/XLA dependency, e.g. on CI or for
 //! cross-backend differential testing.
+//!
+//! Execution engine: kernels are pre-decoded once per scalar binding
+//! ([`decode`]) and their blocks dispatched across a fixed worker-thread
+//! pool ([`sched`]) — grid-level parallelism is real, not simulated at
+//! 1/N speed. `HLGPU_WORKERS=1` (or a single-block grid) selects the
+//! sequential reference schedule; for race-free kernels both schedules
+//! produce identical results and identical trap coordinates.
 
 pub mod backend_impl;
 pub mod builder;
+pub mod decode;
 pub mod interp;
 pub mod isa;
 pub mod kernels;
+pub mod sched;
 
 pub use backend_impl::VtxBackend;
 pub use builder::KernelBuilder;
-pub use interp::{execute, Launch, Limits, ScalarArg};
+pub use decode::{decode, DecodedKernel};
+pub use interp::{execute, execute_decoded, execute_with, Launch, Limits, ScalarArg};
 pub use isa::{Instr, Kernel, ParamKind};
+pub use sched::{default_workers, set_default_workers, WorkerPool};

@@ -1,0 +1,248 @@
+//! The emulator's **fixed worker-thread pool** and scheduling
+//! configuration.
+//!
+//! Thread blocks of a VTX grid are independent (the CUDA contract), so
+//! the interpreter dispatches them across this pool — one detached,
+//! process-global set of `hlgpu-vtx-N` threads that every launch reuses.
+//! Launch submission is a latch-counted batch of jobs; the submitting
+//! thread blocks until its batch drains, so a launch stays synchronous at
+//! the driver level while streams provide host-side asynchrony above it.
+//!
+//! Configuration:
+//! * `HLGPU_WORKERS` — environment override for the default schedule
+//!   width (`1` forces the sequential schedule);
+//! * [`set_default_workers`] — process-wide programmatic override, used
+//!   by benches to A/B the schedules;
+//! * otherwise the width is `std::thread::available_parallelism()`.
+//!
+//! The pool itself is provisioned with `max(width, 8)` threads so
+//! explicit widths up to 8 (the determinism property tests exercise 1, 2
+//! and 8) get real concurrency even when the default width is smaller.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A unit of work: one scheduler job (a slice of a launch's blocks).
+pub(crate) type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+/// Fixed pool of worker threads executing submitted jobs FIFO.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    size: usize,
+}
+
+impl WorkerPool {
+    fn new(size: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        });
+        for i in 0..size {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("hlgpu-vtx-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("failed to spawn VTX worker thread");
+            // handle intentionally detached: the pool lives for the whole
+            // process, workers park on the queue condvar when idle.
+        }
+        WorkerPool { shared, size }
+    }
+
+    /// The process-global pool, created on first use.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(pool_threads()))
+    }
+
+    /// Number of threads in the pool.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job. Never blocks; jobs run FIFO as workers free up.
+    pub(crate) fn submit(&self, job: Job) {
+        self.shared.queue.lock().unwrap().push_back(job);
+        self.shared.cv.notify_one();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not take the worker down (the submitting
+        // launch observes the panic through its latch guard).
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+/// Completion latch for one launch's batch of jobs. Arrival happens in a
+/// drop guard on the worker, so panicking jobs still release the
+/// submitter (and are reported).
+pub(crate) struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    pub(crate) fn new(count: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining: count, panicked: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn arrive(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        st.panicked |= panicked;
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every job has arrived; returns true if any panicked.
+    pub(crate) fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panicked
+    }
+}
+
+/// Arrival guard: counts down the latch when the job's scope ends, even
+/// by unwinding.
+pub(crate) struct ArriveGuard<'a>(pub(crate) &'a Latch);
+
+impl Drop for ArriveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.arrive(std::thread::panicking());
+    }
+}
+
+// ---- schedule-width configuration ---------------------------------------
+
+/// Programmatic override (0 = unset). Takes precedence over the
+/// environment.
+static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the default schedule width for subsequent launches
+/// (process-wide). Pass `None` to clear; `Some(1)` forces the sequential
+/// schedule. Benches use this to A/B sequential vs parallel execution.
+pub fn set_default_workers(workers: Option<usize>) {
+    WORKER_OVERRIDE.store(workers.unwrap_or(0), Ordering::Relaxed);
+}
+
+fn hardware_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The schedule width used by launches that do not specify one:
+/// the [`set_default_workers`] override, else `HLGPU_WORKERS`, else the
+/// machine's available parallelism.
+pub fn default_workers() -> usize {
+    let o = WORKER_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("HLGPU_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    hardware_parallelism()
+}
+
+/// Threads to provision in the global pool: the machine's parallelism
+/// and any `HLGPU_WORKERS` request, floored at 8 so explicit schedule
+/// widths up to 8 get distinct threads on small machines. Deliberately
+/// ignores [`set_default_workers`] — that override narrows a schedule
+/// for A/B runs and must not freeze a small pool at first use. Launches
+/// clamp their reported width to the pool size, so `LaunchReport` never
+/// claims more concurrency than actually existed.
+fn pool_threads() -> usize {
+    let env = std::env::var("HLGPU_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    hardware_parallelism().max(env).max(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn pool_runs_jobs_and_latch_joins() {
+        let pool = WorkerPool::global();
+        assert!(pool.size() >= 8);
+        let counter = Arc::new(AtomicU32::new(0));
+        let latch = Arc::new(Latch::new(16));
+        for _ in 0..16 {
+            let c = counter.clone();
+            let l = latch.clone();
+            pool.submit(Box::new(move || {
+                let _g = ArriveGuard(&l);
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        assert!(!latch.wait());
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn panicking_job_reported_not_fatal() {
+        let pool = WorkerPool::global();
+        let latch = Arc::new(Latch::new(1));
+        {
+            let l = latch.clone();
+            pool.submit(Box::new(move || {
+                let _g = ArriveGuard(&l);
+                panic!("job panic (expected by test)");
+            }));
+        }
+        assert!(latch.wait(), "panic must be observable");
+        // the pool still works afterwards
+        let latch2 = Arc::new(Latch::new(1));
+        {
+            let l = latch2.clone();
+            pool.submit(Box::new(move || {
+                let _g = ArriveGuard(&l);
+            }));
+        }
+        assert!(!latch2.wait());
+    }
+
+    #[test]
+    fn override_beats_env_and_hardware() {
+        set_default_workers(Some(3));
+        assert_eq!(default_workers(), 3);
+        set_default_workers(None);
+        assert!(default_workers() >= 1);
+    }
+}

@@ -4,71 +4,117 @@
 //! analog), backend compilation failures (PTX/HLO), and automation-level
 //! failures (signature mismatch, unsupported argument types — the analog of
 //! Julia's "would box" compilation abort, §4.1).
+//!
+//! Display and `std::error::Error` are implemented by hand — the offline
+//! build has no `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     // ---- driver-level (CUresult analog) --------------------------------
-    #[error("invalid device ordinal {0}")]
     InvalidDevice(usize),
-    #[error("context was destroyed")]
     ContextDestroyed,
-    #[error("invalid device pointer {0:#x}")]
     InvalidDevicePtr(u64),
-    #[error("device memory access out of bounds: {off}+{len} > {size} (buffer {ptr:#x})")]
     OutOfBounds { ptr: u64, off: usize, len: usize, size: usize },
-    #[error("device out of memory: requested {requested} bytes, {available} available")]
     OutOfMemory { requested: usize, available: usize },
-    #[error("double free of device pointer {0:#x}")]
     DoubleFree(u64),
-    #[error("module not found: {0}")]
     ModuleNotFound(String),
-    #[error("function not found in module: {0}")]
     FunctionNotFound(String),
-    #[error("invalid launch configuration: {0}")]
     InvalidLaunch(String),
-    #[error("stream error: {0}")]
     Stream(String),
-    #[error("event not recorded")]
     EventNotRecorded,
 
     // ---- backend / compilation (nvcc / LLVM-PTX analog) ----------------
-    #[error("artifact not found for kernel `{kernel}` with signature {signature}")]
     NoArtifact { kernel: String, signature: String },
-    #[error("artifact manifest error: {0}")]
     Manifest(String),
-    #[error("backend `{backend}` failed to load module: {reason}")]
     ModuleLoad { backend: String, reason: String },
-    #[error("XLA/PJRT error: {0}")]
     Xla(String),
-    #[error("VTX validation error in kernel `{kernel}`: {reason}")]
     VtxValidation { kernel: String, reason: String },
-    #[error("VTX trap in kernel `{kernel}` (block {block:?}, thread {thread:?}): {reason}")]
     VtxTrap { kernel: String, block: (u32, u32, u32), thread: (u32, u32, u32), reason: String },
 
     // ---- automation-level (the "@cuda would box" analog) ---------------
-    #[error("cannot specialize `{kernel}`: {reason}")]
     Specialize { kernel: String, reason: String },
-    #[error("argument {index} of `{kernel}`: {reason}")]
     BadArgument { kernel: String, index: usize, reason: String },
-    #[error("type error: {0}")]
     Type(String),
 
     // ---- host-language layer -------------------------------------------
-    #[error("hostlang: {0}")]
     HostLang(String),
 
     // ---- misc ------------------------------------------------------------
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("JSON parse error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Error::*;
+        match self {
+            InvalidDevice(n) => write!(f, "invalid device ordinal {n}"),
+            ContextDestroyed => write!(f, "context was destroyed"),
+            InvalidDevicePtr(p) => write!(f, "invalid device pointer {p:#x}"),
+            OutOfBounds { ptr, off, len, size } => write!(
+                f,
+                "device memory access out of bounds: {off}+{len} > {size} (buffer {ptr:#x})"
+            ),
+            OutOfMemory { requested, available } => write!(
+                f,
+                "device out of memory: requested {requested} bytes, {available} available"
+            ),
+            DoubleFree(p) => write!(f, "double free of device pointer {p:#x}"),
+            ModuleNotFound(m) => write!(f, "module not found: {m}"),
+            FunctionNotFound(n) => write!(f, "function not found in module: {n}"),
+            InvalidLaunch(r) => write!(f, "invalid launch configuration: {r}"),
+            Stream(r) => write!(f, "stream error: {r}"),
+            EventNotRecorded => write!(f, "event not recorded"),
+            NoArtifact { kernel, signature } => write!(
+                f,
+                "artifact not found for kernel `{kernel}` with signature {signature}"
+            ),
+            Manifest(r) => write!(f, "artifact manifest error: {r}"),
+            ModuleLoad { backend, reason } => {
+                write!(f, "backend `{backend}` failed to load module: {reason}")
+            }
+            Xla(r) => write!(f, "XLA/PJRT error: {r}"),
+            VtxValidation { kernel, reason } => {
+                write!(f, "VTX validation error in kernel `{kernel}`: {reason}")
+            }
+            VtxTrap { kernel, block, thread, reason } => write!(
+                f,
+                "VTX trap in kernel `{kernel}` (block {block:?}, thread {thread:?}): {reason}"
+            ),
+            Specialize { kernel, reason } => {
+                write!(f, "cannot specialize `{kernel}`: {reason}")
+            }
+            BadArgument { kernel, index, reason } => {
+                write!(f, "argument {index} of `{kernel}`: {reason}")
+            }
+            Type(r) => write!(f, "type error: {r}"),
+            HostLang(r) => write!(f, "hostlang: {r}"),
+            Io(e) => write!(f, "I/O error: {e}"),
+            Json(r) => write!(f, "JSON parse error: {r}"),
+            Other(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -15,7 +15,13 @@
 //! * [`emulator`] — the **VTX backend** (GPU Ocelot analog): a tiny
 //!   PTX-like virtual ISA with a grid/block/thread model, shared memory
 //!   and barriers, interpreted on the host so the whole stack runs with no
-//!   PJRT dependency at all.
+//!   PJRT dependency at all. Kernels are pre-decoded once per scalar
+//!   binding and their thread blocks dispatched across a fixed
+//!   worker-thread pool (`emulator::sched`), so grid parallelism is real:
+//!   `HLGPU_WORKERS` overrides the schedule width (`1` = the sequential
+//!   reference schedule), race-free kernels get identical results and
+//!   trap coordinates at every width, and `LaunchMetrics` reports blocks
+//!   executed and worker utilization per launch.
 //! * [`coordinator`] — the **`@cuda` automation layer**: kernel registry,
 //!   per-signature specialization cache (the paper's method cache),
 //!   `In`/`Out`/`InOut` argument wrappers driving a minimal transfer plan,

@@ -17,9 +17,7 @@
 //! across threads is sound; the `unsafe impl Send/Sync` below encode
 //! exactly that invariant.
 
-use std::sync::{Arc, Mutex, MutexGuard};
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use crate::driver::backend::{Backend, DeviceFunction, LoadedModule, ModuleSource, TensorSpec};
 use crate::driver::launch::{KernelArg, LaunchConfig};
@@ -36,15 +34,25 @@ struct XlaGlobal {
 // clone of it) is serialized through XLA_LOCK; see module docs.
 unsafe impl Send for XlaGlobal {}
 
-static XLA_LOCK: OnceCell<Mutex<XlaGlobal>> = OnceCell::new();
+static XLA_LOCK: OnceLock<Mutex<XlaGlobal>> = OnceLock::new();
 
 fn xla_lock() -> Result<MutexGuard<'static, XlaGlobal>> {
-    let cell = XLA_LOCK.get_or_try_init(|| -> Result<Mutex<XlaGlobal>> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Xla(format!("failed to create PJRT CPU client: {e}")))?;
-        Ok(Mutex::new(XlaGlobal { client }))
-    })?;
-    Ok(cell.lock().unwrap())
+    // std's OnceLock has no stable get_or_try_init, so serialize the
+    // fallible first initialization behind a dedicated mutex
+    // (double-checked): exactly one client is ever constructed — the
+    // serialization invariant the unsafe Send impl above relies on —
+    // and a creation failure leaves the cell empty so a later call can
+    // retry (or observe a client another thread installed meanwhile).
+    if XLA_LOCK.get().is_none() {
+        static INIT: Mutex<()> = Mutex::new(());
+        let _init = INIT.lock().unwrap();
+        if XLA_LOCK.get().is_none() {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Xla(format!("failed to create PJRT CPU client: {e}")))?;
+            let _ = XLA_LOCK.set(Mutex::new(XlaGlobal { client }));
+        }
+    }
+    Ok(XLA_LOCK.get().expect("just initialized").lock().unwrap())
 }
 
 /// Platform name of the global client (diagnostics).
@@ -78,7 +86,7 @@ impl Drop for ExeCell {
 /// The PJRT-backed [`Backend`].
 pub struct PjrtBackend;
 
-static BACKEND: OnceCell<Arc<PjrtBackend>> = OnceCell::new();
+static BACKEND: OnceLock<Arc<PjrtBackend>> = OnceLock::new();
 
 impl PjrtBackend {
     /// The shared process-global backend instance (forces client

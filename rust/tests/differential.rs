@@ -1,0 +1,239 @@
+//! Differential test harness for the parallel block scheduler.
+//!
+//! Two claims are proven here:
+//!
+//! 1. **Numerical equivalence across implementations**: the emulator-path
+//!    trace-transform implementations (`gpu-manual`, `gpu-dynamic`,
+//!    `gpu-auto` — all ultimately executing VTX kernels through the
+//!    parallel scheduler) agree element-wise with the native CPU
+//!    reference across multiple image sizes and PRNG seeds.
+//! 2. **Schedule equivalence**: the parallel schedule is observationally
+//!    identical to the sequential one — bitwise-equal kernel results for
+//!    every pool width, and *identical trap coordinates and reasons* for
+//!    every trap class (OOB access, barrier divergence, step-budget
+//!    exhaustion).
+
+use hlgpu::emulator::{
+    execute_with, KernelBuilder, Launch, Limits, ScalarArg,
+};
+use hlgpu::error::Error;
+use hlgpu::tracetransform::{
+    orientations, random_phantom, shepp_logan, CpuNative, DeviceChoice, GpuAuto, GpuDynamic,
+    GpuManual, TraceImpl, FEATURE_COUNT,
+};
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], rel: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= rel * w.abs().max(1.0),
+            "{name}: feature {i}: {g} vs {w}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- part 1 --
+
+#[test]
+fn emulator_impls_match_cpu_native_across_sizes_and_seeds() {
+    let thetas = orientations(8);
+    for &size in &[12usize, 16, 24] {
+        for seed in 0..3u64 {
+            let img = random_phantom(size, 100 + seed);
+            let want = CpuNative::new().features(&img, &thetas).unwrap();
+            assert_eq!(want.len(), FEATURE_COUNT);
+
+            let manual = GpuManual::on_device(DeviceChoice::Emulator)
+                .unwrap()
+                .features(&img, &thetas)
+                .unwrap();
+            assert_close(&format!("gpu-manual s={size} seed={seed}"), &manual, &want, 2e-3);
+
+            let dynamic = GpuDynamic::on_device(DeviceChoice::Emulator)
+                .unwrap()
+                .features(&img, &thetas)
+                .unwrap();
+            assert_close(&format!("gpu-dynamic s={size} seed={seed}"), &dynamic, &want, 2e-3);
+
+            let auto = GpuAuto::on_device(DeviceChoice::Emulator)
+                .unwrap()
+                .features(&img, &thetas)
+                .unwrap();
+            assert_close(&format!("gpu-auto s={size} seed={seed}"), &auto, &want, 2e-3);
+        }
+    }
+}
+
+#[test]
+fn shepp_logan_differential_at_multiple_sizes() {
+    let thetas = orientations(10);
+    for &size in &[16usize, 20] {
+        let img = shepp_logan(size);
+        let want = CpuNative::new().features(&img, &thetas).unwrap();
+        let auto = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .features(&img, &thetas)
+            .unwrap();
+        assert_close(&format!("gpu-auto shepp-logan s={size}"), &auto, &want, 2e-3);
+    }
+}
+
+// ---------------------------------------------------------------- part 2 --
+
+/// vadd without a tail guard: OOB as soon as a thread's global index
+/// reaches past the (undersized) buffers.
+fn unguarded_vadd() -> hlgpu::emulator::Kernel {
+    let mut b = KernelBuilder::new("vadd_unguarded");
+    let pa = b.ptr_param();
+    let pb = b.ptr_param();
+    let pc = b.ptr_param();
+    let tid = b.tid_x();
+    let bid = b.ctaid_x();
+    let bdim = b.ntid_x();
+    let base = b.imul(bid, bdim);
+    let gid = b.iadd(base, tid);
+    let x = b.ldg(pa, gid);
+    let y = b.ldg(pb, gid);
+    let s = b.fadd(x, y);
+    b.stg(pc, gid, s);
+    b.ret();
+    b.build().unwrap()
+}
+
+/// Run the same launch under both schedules and return both errors.
+fn trap_under_both_schedules(
+    k: &hlgpu::emulator::Kernel,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buf_len: usize,
+    nbufs: usize,
+    limits: Limits,
+) -> (Error, Error) {
+    let mut run = |workers: usize| -> Error {
+        let mut bufs: Vec<Vec<f32>> = (0..nbufs).map(|_| vec![1.0f32; buf_len]).collect();
+        let views: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        execute_with(
+            Launch {
+                kernel: k,
+                grid,
+                block,
+                buffers: views,
+                scalars: vec![],
+                limits,
+            },
+            workers,
+        )
+        .unwrap_err()
+    };
+    (run(1), run(8))
+}
+
+fn assert_same_trap(seq: &Error, par: &Error) {
+    match (seq, par) {
+        (
+            Error::VtxTrap { kernel: k1, block: b1, thread: t1, reason: r1 },
+            Error::VtxTrap { kernel: k2, block: b2, thread: t2, reason: r2 },
+        ) => {
+            assert_eq!(k1, k2, "kernel name");
+            assert_eq!(b1, b2, "block coordinates");
+            assert_eq!(t1, t2, "thread coordinates");
+            assert_eq!(r1, r2, "trap reason");
+        }
+        other => panic!("expected two VtxTrap errors, got {other:?}"),
+    }
+}
+
+#[test]
+fn oob_trap_identical_under_parallel_schedule() {
+    let k = unguarded_vadd();
+    // 8 blocks x 16 threads = 128 global ids, buffers of 40 elements:
+    // the first OOB thread the sequential schedule meets is block 2,
+    // thread 8 (gid 40). The parallel schedule must report the same one.
+    let (seq, par) = trap_under_both_schedules(&k, (8, 1), (16, 1), 40, 3, Limits::default());
+    assert_same_trap(&seq, &par);
+    if let Error::VtxTrap { block, thread, reason, .. } = &seq {
+        assert_eq!(*block, (2, 0, 0));
+        assert_eq!(*thread, (8, 0, 0));
+        assert!(reason.contains("OOB"), "{reason}");
+    }
+}
+
+#[test]
+fn barrier_divergence_trap_identical_under_parallel_schedule() {
+    // threads with tid==0 exit before the barrier in EVERY block; the
+    // reported divergence must come from block (0,0) under both
+    // schedules (lowest block index wins).
+    let mut b = KernelBuilder::new("diverge_all_blocks");
+    let tid = b.tid_x();
+    let zero = b.consti(0);
+    let is0 = b.cmpi(hlgpu::emulator::isa::CmpOp::Eq, tid, zero);
+    let out = b.label();
+    b.bra_if(is0, out);
+    b.bar();
+    b.bind(out);
+    b.ret();
+    let k = b.build().unwrap();
+    let (seq, par) = trap_under_both_schedules(&k, (6, 1), (4, 1), 0, 0, Limits::default());
+    assert_same_trap(&seq, &par);
+    if let Error::VtxTrap { block, reason, .. } = &seq {
+        assert_eq!(*block, (0, 0, 0));
+        assert!(reason.contains("barrier divergence"), "{reason}");
+    }
+}
+
+#[test]
+fn step_budget_trap_identical_under_parallel_schedule() {
+    // every thread of every block spins; the reported exhaustion must be
+    // block (0,0), thread (0,0) under both schedules.
+    let mut b = KernelBuilder::new("spin_grid");
+    let top = b.label();
+    b.bind(top);
+    b.bra(top);
+    let k = b.build().unwrap();
+    let (seq, par) = trap_under_both_schedules(
+        &k,
+        (4, 1),
+        (2, 1),
+        0,
+        0,
+        Limits { steps_per_thread: 500 },
+    );
+    assert_same_trap(&seq, &par);
+    if let Error::VtxTrap { block, thread, reason, .. } = &seq {
+        assert_eq!(*block, (0, 0, 0));
+        assert_eq!(*thread, (0, 0, 0));
+        assert!(reason.contains("step budget"), "{reason}");
+    }
+}
+
+#[test]
+fn results_bitwise_identical_across_schedules_sinogram() {
+    // The real workload kernel, multi-block grid, both schedules:
+    // bitwise-equal outputs (block writes are disjoint).
+    let k = hlgpu::emulator::kernels::sinogram_all().unwrap();
+    let size = 20usize;
+    let angles = 12usize;
+    let img: Vec<f32> = shepp_logan(size).pixels().to_vec();
+    let thetas = orientations(angles);
+    let mut outputs: Vec<Vec<f32>> = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let mut img_b = img.clone();
+        let mut ang_b = thetas.clone();
+        let mut out = vec![0.0f32; 4 * angles * size];
+        execute_with(
+            Launch {
+                kernel: &k,
+                grid: (angles as u32, 1),
+                block: (size as u32, 1),
+                buffers: vec![&mut img_b, &mut ang_b, &mut out],
+                scalars: vec![ScalarArg::I32(size as i32)],
+                limits: Limits::default(),
+            },
+            workers,
+        )
+        .unwrap();
+        outputs.push(out);
+    }
+    assert_eq!(outputs[0], outputs[1], "1 vs 2 workers");
+    assert_eq!(outputs[0], outputs[2], "1 vs 8 workers");
+}

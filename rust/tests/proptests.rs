@@ -159,6 +159,113 @@ fn prop_vtx_reduction_matches_for_power_of_two_blocks() {
     }
 }
 
+#[test]
+fn prop_scheduler_deterministic_across_pool_sizes() {
+    // The parallel block scheduler must be observationally identical to
+    // the sequential schedule: bitwise-equal outputs for pool widths 1,
+    // 2 and 8 on arbitrary launch geometries.
+    let k = kernels::vadd().unwrap();
+    for seed in 0..16u64 {
+        let mut rng = Prng::new(9000 + seed);
+        let n = rng.usize_in(1, 4000);
+        let block = *rng.choose(&[1u32, 7, 32, 64]);
+        let grid = (n as u32).div_ceil(block);
+        let a = rng.f32_vec(n, -10.0, 10.0);
+        let b = rng.f32_vec(n, -10.0, 10.0);
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let mut aa = a.clone();
+            let mut bb = b.clone();
+            let mut c = vec![0.0f32; n];
+            hlgpu::emulator::execute_with(
+                hlgpu::emulator::Launch {
+                    kernel: &k,
+                    grid: (grid, 1),
+                    block: (block, 1),
+                    buffers: vec![&mut aa, &mut bb, &mut c],
+                    scalars: vec![hlgpu::emulator::ScalarArg::I32(n as i32)],
+                    limits: hlgpu::emulator::Limits::default(),
+                },
+                workers,
+            )
+            .unwrap_or_else(|e| panic!("seed {seed} workers {workers}: {e}"));
+            outputs.push(c);
+        }
+        assert_eq!(outputs[0], outputs[1], "seed {seed}: 1 vs 2 workers");
+        assert_eq!(outputs[0], outputs[2], "seed {seed}: 1 vs 8 workers");
+    }
+}
+
+#[test]
+fn prop_scheduler_repeated_runs_identical() {
+    // Same seed, same pool width, repeated runs: bitwise-identical
+    // results (no scheduling nondeterminism leaks into the data).
+    let k = kernels::sinogram_all().unwrap();
+    for seed in 0..4u64 {
+        let mut rng = Prng::new(9500 + seed);
+        let s = rng.usize_in(8, 24);
+        let a = rng.usize_in(2, 10);
+        let img = rng.f32_vec(s * s, 0.0, 1.0);
+        let angles = rng.f32_vec(a, 0.0, 3.14);
+        let mut runs: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..2 {
+            let mut img_b = img.clone();
+            let mut ang_b = angles.clone();
+            let mut out = vec![0.0f32; 4 * a * s];
+            hlgpu::emulator::execute_with(
+                hlgpu::emulator::Launch {
+                    kernel: &k,
+                    grid: (a as u32, 1),
+                    block: (s as u32, 1),
+                    buffers: vec![&mut img_b, &mut ang_b, &mut out],
+                    scalars: vec![hlgpu::emulator::ScalarArg::I32(s as i32)],
+                    limits: hlgpu::emulator::Limits::default(),
+                },
+                8,
+            )
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            runs.push(out);
+        }
+        assert_eq!(runs[0], runs[1], "seed {seed}: repeated runs must agree");
+    }
+}
+
+#[test]
+fn prop_barrier_kernels_deterministic_across_pool_sizes() {
+    // Kernels with shared memory + barriers (the tree reduction) under
+    // the parallel schedule: same results for every pool width.
+    for seed in 0..8u64 {
+        let mut rng = Prng::new(9800 + seed);
+        let h = rng.usize_in(2, 40);
+        let w = rng.usize_in(2, 16);
+        let block_h = h.next_power_of_two();
+        let k = kernels::tfunc_column("radon", block_h).unwrap();
+        let img = rng.f32_vec(h * w, -5.0, 5.0);
+        let mut outputs: Vec<Vec<f32>> = Vec::new();
+        for workers in [1usize, 8] {
+            let mut img_b = img.clone();
+            let mut out = vec![0.0f32; w];
+            hlgpu::emulator::execute_with(
+                hlgpu::emulator::Launch {
+                    kernel: &k,
+                    grid: (w as u32, 1),
+                    block: (block_h as u32, 1),
+                    buffers: vec![&mut img_b, &mut out],
+                    scalars: vec![
+                        hlgpu::emulator::ScalarArg::I32(h as i32),
+                        hlgpu::emulator::ScalarArg::I32(w as i32),
+                    ],
+                    limits: hlgpu::emulator::Limits::default(),
+                },
+                workers,
+            )
+            .unwrap_or_else(|e| panic!("seed {seed} workers {workers}: {e}"));
+            outputs.push(out);
+        }
+        assert_eq!(outputs[0], outputs[1], "seed {seed}");
+    }
+}
+
 // ---------------------------------------------------------- coordinator --
 
 #[test]

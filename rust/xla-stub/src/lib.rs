@@ -1,0 +1,225 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the native XLA/PJRT C++ runtime, which cannot be
+//! built in the offline image. This stub is **API-compatible** with the
+//! subset the `hlgpu::runtime::pjrt` backend uses:
+//!
+//! * pure-host operations ([`Literal`] construction and extraction) work
+//!   for real — they are plain byte-buffer bookkeeping;
+//! * anything that needs the native runtime ([`PjRtClient::cpu`],
+//!   compilation, execution) returns an "unavailable" [`Error`], which the
+//!   backend surfaces as `Error::Xla` and the PJRT-gated tests treat as a
+//!   skip condition.
+//!
+//! Swapping in the real bindings is a Cargo.toml change only.
+
+use std::fmt;
+
+/// Stub error: carries a message; Display-compatible with the real crate.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what} is unavailable: built against the offline xla stub (no native XLA/PJRT runtime)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of the artifact tensors the backend handles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Element trait for typed extraction from a [`Literal`].
+pub trait ArrayElement: Sized + Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl ArrayElement for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl ArrayElement for f64 {
+    const ELEMENT_TYPE: ElementType = ElementType::F64;
+    fn from_le(b: &[u8]) -> f64 {
+        f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+}
+
+impl ArrayElement for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le(b: &[u8]) -> i32 {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// A host-side literal: dtype + shape + raw little-endian bytes. Fully
+/// functional in the stub (no native runtime involved).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel * ty.byte_size() {
+            return Err(Error(format!(
+                "literal data has {} bytes, shape {shape:?} of {ty:?} needs {}",
+                data.len(),
+                numel * ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.ty.byte_size())
+            .map(T::from_le)
+            .collect())
+    }
+
+    /// Tuple unpacking — real executables return tuples; the stub never
+    /// produces one, so this only errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple on a stub literal"))
+    }
+}
+
+/// Parsed HLO module (opaque; parsing is deferred to the native runtime,
+/// which the stub does not have — compile fails later instead).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn parse_and_return_unverified_module(_text: &[u8]) -> Result<HloModuleProto> {
+        Ok(HloModuleProto)
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client. `cpu()` reports the runtime as unavailable in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, -2.5, 3.25]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_length_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+}
