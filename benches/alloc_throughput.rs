@@ -1,0 +1,147 @@
+//! Allocator-policy and batching benchmarks.
+//!
+//! Section 1: **cached vs uncached** device-memory allocation on warm,
+//! repeated same-size alloc/free traffic — the §6.2 rationale for
+//! pre-allocating launch buffers (raw `cuMemAlloc`/`cuMemFree`
+//! round-trips dominate small-kernel launches) made measurable. The
+//! cached policy serves warm requests from power-of-two bins and should
+//! beat the uncached policy by >= 5x on the larger sizes, where the
+//! uncached path pays the host allocator's mmap/zero-fill round trip.
+//!
+//! Section 2: **batch vs loop** through the automated trace-transform
+//! path on the emulator — `features_batch(N images)` does one
+//! `batched_sinogram` launch with one angle-table upload, against N
+//! sequential `features` calls. Reports wall time and `MemStats`
+//! transfer counts.
+//!
+//! Run: `cargo bench --bench alloc_throughput`
+//! (env: AT_ITERS, AT_WARMUP, AT_ROUNDS, AT_SIZE, AT_BATCH, AT_ANGLES).
+
+use hlgpu::bench_support::{fmt_speedup, fmt_summary, measure, Settings, Table};
+use hlgpu::driver::{MemoryPool, PoolPolicy, DEFAULT_CAPACITY};
+use hlgpu::tracetransform::image::random_phantom;
+use hlgpu::tracetransform::{orientations, DeviceChoice, GpuAuto, Image, TraceImpl};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Section 1: warm repeated same-size alloc/free under both policies.
+fn alloc_policy_section(settings: Settings) {
+    let rounds = env_usize("AT_ROUNDS", 512);
+    let sizes: [usize; 4] = [4 << 10, 64 << 10, 256 << 10, 1 << 20];
+
+    let mut table = Table::new(&["size", "uncached", "cached", "hit rate", "speedup"]);
+    for &sz in &sizes {
+        let uncached = MemoryPool::with_policy(DEFAULT_CAPACITY, PoolPolicy::Uncached);
+        let u = measure(settings, || {
+            for _ in 0..rounds {
+                let p = uncached.alloc(sz).unwrap();
+                uncached.free(p).unwrap();
+            }
+        });
+
+        let cached = MemoryPool::with_policy(DEFAULT_CAPACITY, PoolPolicy::Cached);
+        // one cold round parks a block in the bin; everything after is warm
+        let warm = cached.alloc(sz).unwrap();
+        cached.free(warm).unwrap();
+        let c = measure(settings, || {
+            for _ in 0..rounds {
+                let p = cached.alloc(sz).unwrap();
+                cached.free(p).unwrap();
+            }
+        });
+
+        let st = cached.stats();
+        table.row(&[
+            format!("{} KiB", sz >> 10),
+            fmt_summary(&u),
+            fmt_summary(&c),
+            format!("{:.1}%", st.pool_hit_rate() * 100.0),
+            fmt_speedup(u.mean, c.mean),
+        ]);
+    }
+
+    println!(
+        "\nAllocation policy — warm same-size alloc/free x{rounds} per iteration \
+         (the HLGPU_POOL=cached|none A/B)"
+    );
+    println!("{}", table.render());
+    println!("target: cached >= 5x uncached on warm repeated same-size allocs");
+}
+
+/// Section 2: batched vs sequential trace features on the emulator.
+fn batch_section(settings: Settings) {
+    let size = env_usize("AT_SIZE", 32);
+    let nimg = env_usize("AT_BATCH", 8);
+    let thetas = orientations(env_usize("AT_ANGLES", 16));
+    let imgs: Vec<Image> = (0..nimg).map(|i| random_phantom(size, i as u64)).collect();
+
+    let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    // warm both specializations
+    auto.features(&imgs[0], &thetas).unwrap();
+    auto.features_batch(&imgs, &thetas).unwrap();
+
+    // transfer counts, one warm pass each
+    let mem = auto.launcher().context().memory_arc().unwrap();
+    mem.reset_stats();
+    for img in &imgs {
+        auto.features(img, &thetas).unwrap();
+    }
+    let seq_stats = mem.stats();
+    mem.reset_stats();
+    auto.features_batch(&imgs, &thetas).unwrap();
+    let bat_stats = mem.stats();
+
+    // wall time
+    let seq = measure(settings, || {
+        for img in &imgs {
+            auto.features(img, &thetas).unwrap();
+        }
+    });
+    let bat = measure(settings, || {
+        auto.features_batch(&imgs, &thetas).unwrap();
+    });
+
+    let mut table = Table::new(&["path", "time", "h2d", "d2h", "h2d bytes"]);
+    table.row(&[
+        format!("{nimg} x features"),
+        fmt_summary(&seq),
+        seq_stats.h2d_count.to_string(),
+        seq_stats.d2h_count.to_string(),
+        seq_stats.h2d_bytes.to_string(),
+    ]);
+    table.row(&[
+        format!("features_batch({nimg})"),
+        fmt_summary(&bat),
+        bat_stats.h2d_count.to_string(),
+        bat_stats.d2h_count.to_string(),
+        bat_stats.h2d_bytes.to_string(),
+    ]);
+
+    println!(
+        "\nBatched trace pipeline — {nimg} images of {size}x{size}, {} angles (emulator)",
+        thetas.len()
+    );
+    println!("{}", table.render());
+    println!(
+        "batch speedup: {} wall, {}x fewer H2D transfers",
+        fmt_speedup(seq.mean, bat.mean),
+        if bat_stats.h2d_count > 0 { seq_stats.h2d_count / bat_stats.h2d_count } else { 0 }
+    );
+    println!(
+        "pool: hit rate {:.1}%, {} bytes cached, {} trims",
+        mem.stats().pool_hit_rate() * 100.0,
+        mem.stats().cached_bytes,
+        mem.stats().trim_count
+    );
+}
+
+fn main() {
+    let settings = Settings {
+        warmup_iters: env_usize("AT_WARMUP", 3),
+        sample_iters: env_usize("AT_ITERS", 15),
+    };
+    alloc_policy_section(settings);
+    batch_section(settings);
+}

@@ -17,10 +17,24 @@ pub struct DeviceArray {
 }
 
 impl DeviceArray {
-    /// `CuArray(Float32, dims)`: allocate uninitialized.
+    /// `CuArray(Float32, dims)`: allocate uninitialized. The byte length
+    /// is computed with checked arithmetic: a crafted shape like
+    /// `[usize::MAX, 2]` would otherwise wrap and allocate a tiny buffer
+    /// that later transfers would overrun.
     pub fn alloc(ctx: &Context, dtype: Dtype, shape: &[usize]) -> Result<DeviceArray> {
-        let numel: usize = shape.iter().product();
-        let ptr = ctx.alloc(numel * dtype.size_of())?;
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                Error::Type(format!("element count of shape {shape:?} overflows usize"))
+            })?;
+        let bytes = numel.checked_mul(dtype.size_of()).ok_or_else(|| {
+            Error::Type(format!(
+                "byte length of {} x {shape:?} overflows usize",
+                dtype.name()
+            ))
+        })?;
+        let ptr = ctx.alloc(bytes)?;
         Ok(DeviceArray {
             ctx: ctx.clone(),
             ptr,
@@ -64,16 +78,11 @@ impl DeviceArray {
         self.ctx.upload(self.ptr, t.bytes())
     }
 
-    /// `to_host(gpu_array)`.
+    /// `to_host(gpu_array)`. Dispatches on the array's dtype, like
+    /// `alloc` does — device buffers are raw bytes, so every supported
+    /// element type round-trips.
     pub fn download(&self) -> Result<Tensor> {
-        let mut t = match self.dtype {
-            Dtype::F32 => Tensor::zeros_f32(&self.shape),
-            other => {
-                return Err(Error::Type(format!(
-                    "download of {other:?} arrays not supported"
-                )))
-            }
-        };
+        let mut t = Tensor::zeros(self.dtype, &self.shape);
         self.ctx.download(self.ptr, t.bytes_mut())?;
         Ok(t)
     }
@@ -86,16 +95,23 @@ impl DeviceArray {
     }
 
     /// Explicit `free` (Listing 2 line 30). Otherwise freed on drop.
+    /// The array is only marked freed when the driver call succeeds — a
+    /// failed free keeps the drop-time retry instead of silently leaking.
     pub fn free(mut self) -> Result<()> {
+        self.free_inner()
+    }
+
+    fn free_inner(&mut self) -> Result<()> {
+        self.ctx.free(self.ptr)?;
         self.freed = true;
-        self.ctx.free(self.ptr)
+        Ok(())
     }
 }
 
 impl Drop for DeviceArray {
     fn drop(&mut self) {
         if !self.freed && self.ctx.is_alive() {
-            let _ = self.ctx.free(self.ptr);
+            let _ = self.free_inner();
         }
     }
 }
@@ -143,5 +159,50 @@ mod tests {
         d.free().unwrap();
         assert_eq!(ctx.memory().unwrap().live_buffers(), 0);
         assert_eq!(ctx.mem_stats().unwrap().free_count, 1);
+    }
+
+    #[test]
+    fn overflowing_shape_rejected() {
+        // regression: numel/byte-length arithmetic used to wrap, turning
+        // a crafted shape into a tiny allocation
+        let ctx = ctx();
+        let err = DeviceArray::alloc(&ctx, Dtype::F32, &[usize::MAX, 2]).unwrap_err();
+        assert!(matches!(err, Error::Type(_)), "{err}");
+        // numel fits but the byte length overflows
+        let err = DeviceArray::alloc(&ctx, Dtype::F64, &[usize::MAX / 4]).unwrap_err();
+        assert!(matches!(err, Error::Type(_)), "{err}");
+        assert_eq!(ctx.memory().unwrap().live_buffers(), 0);
+    }
+
+    #[test]
+    fn failed_free_does_not_mark_freed() {
+        // regression: `free` used to set the freed flag before the driver
+        // call, so a failed free was silently dropped with no retry
+        let ctx = ctx();
+        let mut d = DeviceArray::alloc(&ctx, Dtype::F32, &[4]).unwrap();
+        // free the buffer behind the array's back: the array's own free
+        // now fails (double free at the driver level)
+        ctx.free(d.ptr).unwrap();
+        assert!(d.free_inner().is_err());
+        assert!(!d.freed, "failed free must keep the drop-time retry armed");
+        // silence this intentionally-broken handle's drop retry
+        d.freed = true;
+    }
+
+    #[test]
+    fn download_dispatches_on_dtype() {
+        // regression: download rejected everything but F32 even though
+        // Dtype/Tensor support more
+        let ctx = ctx();
+        for dtype in [Dtype::F64, Dtype::I32] {
+            let n = 6usize;
+            let data: Vec<u8> = (0..n * dtype.size_of()).map(|i| i as u8).collect();
+            let t = Tensor::new(dtype, &[n], data.clone()).unwrap();
+            let d = DeviceArray::from_tensor(&ctx, &t).unwrap();
+            let back = d.download().unwrap();
+            assert_eq!(back.dtype(), dtype);
+            assert_eq!(back.shape(), &[n]);
+            assert_eq!(back.bytes(), data.as_slice());
+        }
     }
 }

@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::driver::backend::{Backend, ModuleSource};
 use crate::driver::device::Device;
-use crate::driver::memory::{DevicePtr, MemStats, MemoryPool};
+use crate::driver::memory::{DevicePtr, MemStats, MemoryPool, PoolPolicy};
 use crate::driver::module::Module;
 use crate::driver::stream::Stream;
 use crate::error::{Error, Result};
@@ -28,14 +28,25 @@ pub struct Context {
 }
 
 impl Context {
-    /// `cuCtxCreate` for a device ordinal.
+    /// `cuCtxCreate` for a device ordinal. The memory pool's allocation
+    /// policy follows the `HLGPU_POOL` environment knob.
     pub fn create(device: &Device) -> Result<Context> {
+        Self::create_with_policy(device, PoolPolicy::from_env())
+    }
+
+    /// `cuCtxCreate` with an explicit pool policy (benches and tests A/B
+    /// the cached vs uncached allocator without touching the process
+    /// environment).
+    pub fn create_with_policy(device: &Device, policy: PoolPolicy) -> Result<Context> {
         let backend = device.backend()?;
         Ok(Context {
             inner: Arc::new(ContextInner {
                 device: device.clone(),
                 backend,
-                mem: Arc::new(MemoryPool::new(device.attributes.total_memory)),
+                mem: Arc::new(MemoryPool::with_policy(
+                    device.attributes.total_memory,
+                    policy,
+                )),
                 modules: Mutex::new(HashMap::new()),
                 destroyed: AtomicBool::new(false),
             }),
@@ -102,6 +113,12 @@ impl Context {
 
     pub fn mem_stats(&self) -> Result<MemStats> {
         Ok(self.memory()?.stats())
+    }
+
+    /// Release the pool's cached blocks back to the host allocator
+    /// (`cuMemPoolTrimTo(0)` analog); returns the bytes released.
+    pub fn trim_memory(&self) -> Result<usize> {
+        Ok(self.memory()?.trim())
     }
 
     // ---- modules ---------------------------------------------------------

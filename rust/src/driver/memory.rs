@@ -6,6 +6,28 @@
 //! data across with explicit `copy_h2d` / `copy_d2h` calls, which are
 //! counted — the transfer-minimization claims of §6.3 are validated
 //! against these counters.
+//!
+//! # Caching allocator
+//!
+//! The pool is a **caching allocator** in the CUDA.jl mold: `free` does
+//! not return storage to the host allocator but parks the buffer in a
+//! size-binned free list (power-of-two bins), and `alloc` serves
+//! same-bin requests from that cache. This is the §6.2 rationale made
+//! explicit — raw `cuMemAlloc`/`cuMemFree` round-trips dominate
+//! small-kernel launches, so steady-state launch paths must not touch
+//! the underlying allocator at all. Consequences:
+//!
+//! * handles are never recycled — a freed `DevicePtr` stays invalid
+//!   forever, so use-after-free and double-free detection survive
+//!   caching;
+//! * recycled storage retains stale contents (as with `cuMemAlloc`):
+//!   programs must not read device memory they have not written;
+//! * cached blocks count against capacity; when an allocation would
+//!   otherwise report `OutOfMemory` the pool trims its cache and
+//!   retries ([`MemoryPool::trim`] is the explicit version);
+//! * the `HLGPU_POOL` environment knob (`cached` | `none`) selects the
+//!   policy for pools created with [`MemoryPool::new`], so benches can
+//!   A/B the two (`benches/alloc_throughput.rs`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,6 +48,35 @@ impl DevicePtr {
     }
 }
 
+/// Allocation policy of a [`MemoryPool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolPolicy {
+    /// Freed buffers are parked in power-of-two bins and recycled
+    /// (the default; the CUDA.jl caching-pool design).
+    Cached,
+    /// Every `alloc` heap-allocates and every `free` releases to the
+    /// host allocator (the seed behavior; `HLGPU_POOL=none`).
+    Uncached,
+}
+
+impl PoolPolicy {
+    /// Parse an `HLGPU_POOL` value; unknown values select the default.
+    pub fn parse(v: &str) -> PoolPolicy {
+        match v.to_ascii_lowercase().as_str() {
+            "none" | "uncached" | "off" | "0" => PoolPolicy::Uncached,
+            _ => PoolPolicy::Cached,
+        }
+    }
+
+    /// Policy selected by the `HLGPU_POOL` environment variable
+    /// (`cached` | `none`); `Cached` when unset.
+    pub fn from_env() -> PoolPolicy {
+        std::env::var("HLGPU_POOL")
+            .map(|v| Self::parse(&v))
+            .unwrap_or(PoolPolicy::Cached)
+    }
+}
+
 /// Running transfer / allocation statistics for a pool.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MemStats {
@@ -39,10 +90,45 @@ pub struct MemStats {
     pub d2d_bytes: u64,
     pub current_bytes: usize,
     pub peak_bytes: usize,
+    /// Allocations served from the size-binned cache.
+    pub reuse_count: u64,
+    /// Requested bytes served from the cache.
+    pub reuse_bytes: u64,
+    /// Cache drops (explicit `trim` or pressure release).
+    pub trim_count: u64,
+    /// Bytes released back to the host allocator by trims.
+    pub trimmed_bytes: u64,
+    /// Bytes currently parked in the free bins (gauge).
+    pub cached_bytes: usize,
+    /// Blocks currently parked in the free bins (gauge).
+    pub cached_blocks: usize,
+}
+
+impl MemStats {
+    /// Fraction of allocations served from the cache (0.0 when no
+    /// allocations happened yet, or under the uncached policy).
+    pub fn pool_hit_rate(&self) -> f64 {
+        if self.alloc_count == 0 {
+            0.0
+        } else {
+            self.reuse_count as f64 / self.alloc_count as f64
+        }
+    }
+}
+
+/// Smallest bin: sub-16-byte requests share one bin so tiny scalars do
+/// not fragment the free lists.
+const MIN_BIN: usize = 16;
+
+/// Power-of-two bin a request falls into.
+fn bin_size(bytes: usize) -> usize {
+    bytes.checked_next_power_of_two().unwrap_or(bytes).max(MIN_BIN)
 }
 
 struct PoolInner {
     buffers: HashMap<u64, Vec<u8>>,
+    /// bin size -> parked buffers (each with `len == capacity == bin`).
+    free_bins: HashMap<usize, Vec<Vec<u8>>>,
     stats: MemStats,
 }
 
@@ -50,6 +136,7 @@ struct PoolInner {
 /// the same way). Thread-safe: streams copy concurrently.
 pub struct MemoryPool {
     capacity: usize,
+    policy: PoolPolicy,
     next: AtomicU64,
     inner: Mutex<PoolInner>,
 }
@@ -58,11 +145,21 @@ pub struct MemoryPool {
 pub const DEFAULT_CAPACITY: usize = 4 << 30;
 
 impl MemoryPool {
+    /// Pool with the policy selected by `HLGPU_POOL` (cached by default).
     pub fn new(capacity: usize) -> Self {
+        Self::with_policy(capacity, PoolPolicy::from_env())
+    }
+
+    pub fn with_policy(capacity: usize, policy: PoolPolicy) -> Self {
         MemoryPool {
             capacity,
+            policy,
             next: AtomicU64::new(1),
-            inner: Mutex::new(PoolInner { buffers: HashMap::new(), stats: MemStats::default() }),
+            inner: Mutex::new(PoolInner {
+                buffers: HashMap::new(),
+                free_bins: HashMap::new(),
+                stats: MemStats::default(),
+            }),
         }
     }
 
@@ -70,35 +167,141 @@ impl MemoryPool {
         self.capacity
     }
 
-    /// `cuMemAlloc`: allocate `bytes` of device memory.
+    pub fn policy(&self) -> PoolPolicy {
+        self.policy
+    }
+
+    /// `cuMemAlloc`: allocate `bytes` of device memory. Contents are
+    /// unspecified (fresh blocks happen to be zeroed, recycled blocks
+    /// keep stale data — as on real hardware).
     pub fn alloc(&self, bytes: usize) -> Result<DevicePtr> {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.stats.current_bytes + bytes > self.capacity {
-            return Err(Error::OutOfMemory {
-                requested: bytes,
-                available: self.capacity - inner.stats.current_bytes,
-            });
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+
+        // Fast path: recycle from the matching bin. Never increases the
+        // pool's footprint (bin >= bytes), so no capacity check needed.
+        if self.policy == PoolPolicy::Cached {
+            let bin = bin_size(bytes);
+            if let Some(mut buf) = inner.free_bins.get_mut(&bin).and_then(|v| v.pop()) {
+                buf.truncate(bytes); // parked with len == bin >= bytes
+                inner.stats.cached_bytes -= bin;
+                inner.stats.cached_blocks -= 1;
+                inner.stats.reuse_count += 1;
+                inner.stats.reuse_bytes += bytes as u64;
+                return Ok(self.finish_alloc(inner, bytes, buf));
+            }
         }
+
+        // Slow path: fresh allocation. The capacity check must be
+        // overflow-safe — `current + bytes` can wrap for absurd requests
+        // and would then sail past an unchecked comparison.
+        let oom = |inner: &PoolInner| Error::OutOfMemory {
+            requested: bytes,
+            available: self.capacity.saturating_sub(inner.stats.current_bytes),
+        };
+        let footprint = |live: usize, extra: usize, bytes: usize| -> Option<usize> {
+            live.checked_add(extra)?.checked_add(bytes)
+        };
+        let over = match footprint(inner.stats.current_bytes, inner.stats.cached_bytes, bytes)
+        {
+            Some(f) => f > self.capacity,
+            None => true,
+        };
+        if over {
+            // Unsatisfiable requests must not wipe the warm cache.
+            if bytes > self.capacity {
+                return Err(oom(inner));
+            }
+            // Pressure release: drop cached blocks before giving up.
+            Self::trim_locked(inner);
+            let still_over = match inner.stats.current_bytes.checked_add(bytes) {
+                Some(f) => f > self.capacity,
+                None => true,
+            };
+            if still_over {
+                return Err(oom(inner));
+            }
+        }
+        let buf = match self.policy {
+            PoolPolicy::Cached => {
+                // Reserve the full bin so the block re-parks without a
+                // reallocation when freed.
+                let mut b = Vec::with_capacity(bin_size(bytes));
+                b.resize(bytes, 0u8);
+                b
+            }
+            PoolPolicy::Uncached => vec![0u8; bytes],
+        };
+        Ok(self.finish_alloc(inner, bytes, buf))
+    }
+
+    fn finish_alloc(&self, inner: &mut PoolInner, bytes: usize, buf: Vec<u8>) -> DevicePtr {
         let handle = self.next.fetch_add(1, Ordering::Relaxed);
-        inner.buffers.insert(handle, vec![0u8; bytes]);
+        inner.buffers.insert(handle, buf);
         inner.stats.alloc_count += 1;
         inner.stats.current_bytes += bytes;
         inner.stats.peak_bytes = inner.stats.peak_bytes.max(inner.stats.current_bytes);
-        Ok(DevicePtr(handle))
+        DevicePtr(handle)
     }
 
     /// `cuMemFree`. Double frees and unknown handles are errors (the
     /// framework relies on this to catch lifetime bugs in transfer plans).
+    /// Under the cached policy the storage is parked in its size bin; the
+    /// handle is dead either way.
     pub fn free(&self, ptr: DevicePtr) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         match inner.buffers.remove(&ptr.0) {
-            Some(buf) => {
+            Some(mut buf) => {
                 inner.stats.free_count += 1;
                 inner.stats.current_bytes -= buf.len();
+                if self.policy == PoolPolicy::Cached {
+                    let bin = bin_size(buf.len());
+                    // Park only while live + cached stays within capacity
+                    // (bin rounding could otherwise overcommit the
+                    // device); blocks that do not fit are released.
+                    let fits = match inner
+                        .stats
+                        .current_bytes
+                        .checked_add(inner.stats.cached_bytes)
+                        .and_then(|f| f.checked_add(bin))
+                    {
+                        Some(f) => f <= self.capacity,
+                        None => false,
+                    };
+                    if fits {
+                        // Capacity was reserved at the bin size, so this
+                        // never reallocates.
+                        buf.resize(bin, 0u8);
+                        inner.stats.cached_bytes += bin;
+                        inner.stats.cached_blocks += 1;
+                        inner.free_bins.entry(bin).or_default().push(buf);
+                    }
+                }
                 Ok(())
             }
             None => Err(Error::DoubleFree(ptr.0)),
         }
+    }
+
+    /// Release every cached block back to the host allocator; returns the
+    /// bytes released. Live buffers are untouched. The allocator calls
+    /// this itself when an allocation would otherwise hit `OutOfMemory`.
+    pub fn trim(&self) -> usize {
+        let mut guard = self.inner.lock().unwrap();
+        Self::trim_locked(&mut guard)
+    }
+
+    fn trim_locked(inner: &mut PoolInner) -> usize {
+        let released = inner.stats.cached_bytes;
+        if released > 0 {
+            inner.stats.trim_count += 1;
+            inner.stats.trimmed_bytes += released as u64;
+        }
+        inner.stats.cached_bytes = 0;
+        inner.stats.cached_blocks = 0;
+        inner.free_bins.clear();
+        released
     }
 
     pub fn size_of(&self, ptr: DevicePtr) -> Result<usize> {
@@ -284,11 +487,21 @@ impl MemoryPool {
         self.inner.lock().unwrap().stats
     }
 
+    /// Reset the counters; gauges (live bytes, peak, cached blocks)
+    /// survive, as the storage they describe does.
     pub fn reset_stats(&self) {
         let mut inner = self.inner.lock().unwrap();
         let live = inner.stats.current_bytes;
         let peak = inner.stats.peak_bytes;
-        inner.stats = MemStats { current_bytes: live, peak_bytes: peak, ..MemStats::default() };
+        let cached_bytes = inner.stats.cached_bytes;
+        let cached_blocks = inner.stats.cached_blocks;
+        inner.stats = MemStats {
+            current_bytes: live,
+            peak_bytes: peak,
+            cached_bytes,
+            cached_blocks,
+            ..MemStats::default()
+        };
     }
 
     pub fn live_buffers(&self) -> usize {
@@ -397,5 +610,192 @@ mod tests {
         pool.copy_h2d(a, &[9, 9, 9, 9]).unwrap();
         pool.copy_d2d(b, a).unwrap();
         assert_eq!(pool.read_raw(b).unwrap(), vec![9, 9, 9, 9]);
+    }
+
+    // ---- caching allocator -------------------------------------------
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(PoolPolicy::parse("none"), PoolPolicy::Uncached);
+        assert_eq!(PoolPolicy::parse("NONE"), PoolPolicy::Uncached);
+        assert_eq!(PoolPolicy::parse("off"), PoolPolicy::Uncached);
+        assert_eq!(PoolPolicy::parse("cached"), PoolPolicy::Cached);
+        assert_eq!(PoolPolicy::parse(""), PoolPolicy::Cached);
+    }
+
+    #[test]
+    fn bin_sizes_are_powers_of_two() {
+        assert_eq!(bin_size(0), MIN_BIN);
+        assert_eq!(bin_size(1), MIN_BIN);
+        assert_eq!(bin_size(16), 16);
+        assert_eq!(bin_size(17), 32);
+        assert_eq!(bin_size(60), 64);
+        assert_eq!(bin_size(1 << 20), 1 << 20);
+        assert_eq!(bin_size((1 << 20) + 1), 1 << 21);
+    }
+
+    #[test]
+    fn reuse_hit_miss_accounting() {
+        let pool = MemoryPool::with_policy(DEFAULT_CAPACITY, PoolPolicy::Cached);
+        let a = pool.alloc(100).unwrap(); // miss (cold)
+        pool.free(a).unwrap();
+        let b = pool.alloc(100).unwrap(); // hit: bin 128 holds the block
+        let c = pool.alloc(100).unwrap(); // miss: bin drained
+        let st = pool.stats();
+        assert_eq!(st.alloc_count, 3);
+        assert_eq!(st.reuse_count, 1);
+        assert_eq!(st.reuse_bytes, 100);
+        assert!((st.pool_hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+        // a different size in the same power-of-two bin also hits
+        pool.free(b).unwrap();
+        let d = pool.alloc(120).unwrap();
+        assert_eq!(pool.stats().reuse_count, 2);
+        assert_eq!(pool.size_of(d).unwrap(), 120);
+        pool.free(c).unwrap();
+        pool.free(d).unwrap();
+        assert_eq!(pool.stats().cached_blocks, 2);
+    }
+
+    #[test]
+    fn uncached_policy_never_reuses() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Uncached);
+        for _ in 0..5 {
+            let p = pool.alloc(64).unwrap();
+            pool.free(p).unwrap();
+        }
+        let st = pool.stats();
+        assert_eq!(st.alloc_count, 5);
+        assert_eq!(st.reuse_count, 0);
+        assert_eq!(st.cached_bytes, 0);
+        assert_eq!(st.pool_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn recycled_buffer_gets_fresh_handle() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached);
+        let a = pool.alloc(32).unwrap();
+        pool.copy_h2d(a, &[7u8; 32]).unwrap();
+        pool.free(a).unwrap();
+        let b = pool.alloc(32).unwrap();
+        assert_ne!(a, b, "handles are never recycled, only storage");
+        assert!(pool.copy_h2d(a, &[0u8; 32]).is_err(), "stale handle stays dead");
+        assert_eq!(pool.stats().reuse_count, 1);
+        pool.free(b).unwrap();
+    }
+
+    #[test]
+    fn trim_under_pressure_recovers_from_oom() {
+        let pool = MemoryPool::with_policy(256, PoolPolicy::Cached);
+        let a = pool.alloc(200).unwrap(); // bin 256
+        pool.free(a).unwrap();
+        assert_eq!(pool.stats().cached_bytes, 256);
+        // A 100-byte request needs a fresh block (bin 128 is empty) and
+        // cached + requested exceeds capacity: the pool must trim and
+        // recover instead of reporting OutOfMemory.
+        let b = pool.alloc(100).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.current_bytes, 100);
+        assert_eq!(st.cached_bytes, 0);
+        assert_eq!(st.trim_count, 1);
+        assert_eq!(st.trimmed_bytes, 256);
+        pool.free(b).unwrap();
+    }
+
+    #[test]
+    fn oversized_request_preserves_cache() {
+        let pool = MemoryPool::with_policy(1024, PoolPolicy::Cached);
+        let a = pool.alloc(100).unwrap();
+        pool.free(a).unwrap();
+        assert_eq!(pool.stats().cached_blocks, 1);
+        // larger than the device itself: fail fast, keep the warm bins
+        assert!(matches!(pool.alloc(4096), Err(Error::OutOfMemory { .. })));
+        let st = pool.stats();
+        assert_eq!(st.cached_blocks, 1, "unsatisfiable request must not trim");
+        assert_eq!(st.trim_count, 0);
+    }
+
+    #[test]
+    fn cache_never_overcommits_capacity() {
+        let pool = MemoryPool::with_policy(100, PoolPolicy::Cached);
+        let a = pool.alloc(60).unwrap(); // bin 64
+        let b = pool.alloc(33).unwrap(); // bin 64
+        pool.free(a).unwrap(); // live 33 + cached 64 = 97: parked
+        pool.free(b).unwrap(); // a second 64-byte bin would overcommit: released
+        let st = pool.stats();
+        assert_eq!(st.cached_blocks, 1);
+        assert!(st.current_bytes + st.cached_bytes <= pool.capacity());
+    }
+
+    #[test]
+    fn explicit_trim_releases_cache() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached);
+        let a = pool.alloc(100).unwrap();
+        pool.free(a).unwrap();
+        assert_eq!(pool.stats().cached_blocks, 1);
+        assert_eq!(pool.trim(), 128);
+        let st = pool.stats();
+        assert_eq!((st.cached_bytes, st.cached_blocks), (0, 0));
+        let b = pool.alloc(100).unwrap(); // cold again after the trim
+        assert_eq!(pool.stats().reuse_count, 0);
+        pool.free(b).unwrap();
+    }
+
+    #[test]
+    fn peak_ignores_cached_blocks() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached);
+        let a = pool.alloc(512).unwrap();
+        pool.free(a).unwrap();
+        let b = pool.alloc(512).unwrap(); // recycled
+        let st = pool.stats();
+        assert_eq!(st.peak_bytes, 512, "peak tracks live bytes only");
+        assert_eq!(st.current_bytes, 512);
+        pool.free(b).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.current_bytes, 0);
+        assert_eq!(st.peak_bytes, 512);
+    }
+
+    #[test]
+    fn overflowing_request_reports_oom() {
+        // current_bytes + usize::MAX wraps with unchecked arithmetic and
+        // would sail past the capacity check into a host-killing
+        // allocation; the checked path must report OutOfMemory.
+        for policy in [PoolPolicy::Cached, PoolPolicy::Uncached] {
+            let pool = MemoryPool::with_policy(1024, policy);
+            let _a = pool.alloc(16).unwrap();
+            assert!(matches!(
+                pool.alloc(usize::MAX),
+                Err(Error::OutOfMemory { .. })
+            ));
+            // the pool stays usable
+            assert!(pool.alloc(16).is_ok());
+        }
+    }
+
+    #[test]
+    fn reset_stats_preserves_gauges() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached);
+        let a = pool.alloc(64).unwrap();
+        let b = pool.alloc(64).unwrap();
+        pool.free(a).unwrap();
+        pool.reset_stats();
+        let st = pool.stats();
+        assert_eq!(st.alloc_count, 0);
+        assert_eq!(st.reuse_count, 0);
+        assert_eq!(st.current_bytes, 64);
+        assert_eq!(st.cached_blocks, 1);
+        pool.free(b).unwrap();
+    }
+
+    #[test]
+    fn zero_sized_allocs_roundtrip() {
+        for policy in [PoolPolicy::Cached, PoolPolicy::Uncached] {
+            let pool = MemoryPool::with_policy(1024, policy);
+            let p = pool.alloc(0).unwrap();
+            assert_eq!(pool.size_of(p).unwrap(), 0);
+            pool.free(p).unwrap();
+            let q = pool.alloc(0).unwrap();
+            pool.free(q).unwrap();
+        }
     }
 }

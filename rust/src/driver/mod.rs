@@ -25,6 +25,6 @@ pub use context::Context;
 pub use device::{device, device_count, devices, BackendKind, Device, DeviceAttributes};
 pub use event::Event;
 pub use launch::{Dim3, KernelArg, LaunchConfig, LaunchReport};
-pub use memory::{DevicePtr, MemStats, MemoryPool};
+pub use memory::{DevicePtr, MemStats, MemoryPool, PoolPolicy, DEFAULT_CAPACITY};
 pub use module::{Function, Module};
 pub use stream::Stream;

@@ -40,10 +40,14 @@ pub fn vadd() -> Result<Kernel> {
 }
 
 /// Emit a zero-filled bilinear sample of `img` (size `s_i` x `s_i`, row
-/// major) at float coordinates (`sy`, `sx`). Returns the sample register.
+/// major, starting `base` elements into the buffer — the per-image offset
+/// of the batched kernels). `None` skips the offset add entirely, so the
+/// unbatched kernels pay nothing for it on the interpreter's hot loop.
+/// Returns the sample register.
 fn emit_bilinear(
     b: &mut KernelBuilder,
     pimg: u8,
+    base: Option<I>,
     s_i: I,
     sy: F,
     sx: F,
@@ -73,7 +77,10 @@ fn emit_bilinear(
         let skip = b.label();
         b.bra_ifz(ok, skip);
         let row = b.imul(yi, s_i);
-        let idx = b.iadd(row, xi);
+        let mut idx = b.iadd(row, xi);
+        if let Some(base) = base {
+            idx = b.iadd(base, idx);
+        }
         let v = b.ldg(pimg, idx);
         b.movf(out, v);
         b.bind(skip);
@@ -146,7 +153,7 @@ pub fn rotate_bilinear() -> Result<Kernel> {
     let b01 = b.fadd(b0n, b1);
     let sy = b.fadd(b01, c);
 
-    let v = emit_bilinear(&mut b, pimg, s_i, sy, sx);
+    let v = emit_bilinear(&mut b, pimg, None, s_i, sy, sx);
     let rowbase = b.imul(row, s_i);
     let oidx = b.iadd(rowbase, col);
     b.stg(pout, oidx, v);
@@ -204,7 +211,7 @@ pub fn sinogram(tfunc: &str) -> Result<Kernel> {
     let sx = b.fadd(sx_base, sx_t);
     let sy_t = b.fmul(ct, dy);
     let sy = b.fadd(sy_base, sy_t);
-    let v = emit_bilinear(&mut b, pimg, s_i, sy, sx);
+    let v = emit_bilinear(&mut b, pimg, None, s_i, sy, sx);
     match tfunc {
         "radon" => b.fadd_to(acc, v),
         "t1" => {
@@ -282,7 +289,7 @@ pub fn sinogram_all() -> Result<Kernel> {
     let sx = b.fadd(sx_base, sx_t);
     let sy_t = b.fmul(ct, dy);
     let sy = b.fadd(sy_base, sy_t);
-    let v = emit_bilinear(&mut b, pimg, s_i, sy, sx);
+    let v = emit_bilinear(&mut b, pimg, None, s_i, sy, sx);
     b.fadd_to(acc_radon, v);
     let w1 = b.fabs(dy);
     let wv1 = b.fmul(w1, v);
@@ -300,6 +307,93 @@ pub fn sinogram_all() -> Result<Kernel> {
     let base0 = b.iadd(row_base, col);
     let plane = b.imul(n_angles, s_i);
     let mut idx = base0;
+    for acc in [acc_radon, acc_t1, acc_t2, acc_max] {
+        b.stg(pout, idx, acc);
+        idx = b.iadd(idx, plane);
+    }
+    b.bind(end);
+    b.ret();
+    b.build()
+}
+
+/// `batched_sinogram(imgs, angles, out, s)`: the batched launch shape —
+/// N stacked images through ONE launch of one specialization, so a whole
+/// batch pays a single angle-table upload and a single image upload
+/// (§6.2's pre-allocated buffers amortized across the batch). Input
+/// layout `imgs[n][s][s]`, output `out[n][t][angle][col]` with t ordered
+/// as [`T_FUNCTIONALS`]. Grid: (orientations, images); threads: one per
+/// column. Per-element arithmetic is identical to [`sinogram_all`], so
+/// batched and per-image results agree bitwise.
+pub fn batched_sinogram() -> Result<Kernel> {
+    let mut b = KernelBuilder::new("batched_sinogram");
+    let pimg = b.ptr_param();
+    let pangles = b.ptr_param();
+    let pout = b.ptr_param();
+    let ps = b.i32_param();
+
+    let s_i = b.ld_param_i(ps);
+    let col = b.tid_x();
+    let aidx = b.ctaid_x();
+    let bimg = b.ctaid_y();
+    let n_angles = b.nctaid_x();
+    let col_ok = b.cmpi(CmpOp::Lt, col, s_i);
+    let end = b.label();
+    b.bra_ifz(col_ok, end);
+
+    // per-image base offsets: images are s*s apart, outputs 4*a*s apart
+    let ss = b.imul(s_i, s_i);
+    let img_base = b.imul(bimg, ss);
+    let plane = b.imul(n_angles, s_i);
+    let four = b.consti(4);
+    let out_stride = b.imul(four, plane);
+    let out_base = b.imul(bimg, out_stride);
+
+    let theta = b.ldg(pangles, aidx);
+    let ct = b.fcos(theta);
+    let st = b.fsin(theta);
+    let s_f = b.cvt_i2f(s_i);
+    let one_f = b.constf(1.0);
+    let half = b.constf(0.5);
+    let sm1 = b.fsub(s_f, one_f);
+    let c = b.fmul(sm1, half);
+    let colf = b.cvt_i2f(col);
+    let dx = b.fsub(colf, c);
+    let sx_base0 = b.fmul(ct, dx);
+    let sx_base = b.fadd(sx_base0, c);
+    let sy_sub = b.fmul(st, dx);
+    let sy_base = b.fsub(c, sy_sub);
+
+    let acc_radon = b.constf(0.0);
+    let acc_t1 = b.constf(0.0);
+    let acc_t2 = b.constf(0.0);
+    let acc_max = b.constf(f32::NEG_INFINITY);
+    let r = b.consti(0);
+    let one_i = b.consti(1);
+    let top = b.label();
+    b.bind(top);
+    let rf = b.cvt_i2f(r);
+    let dy = b.fsub(rf, c);
+    let sx_t = b.fmul(st, dy);
+    let sx = b.fadd(sx_base, sx_t);
+    let sy_t = b.fmul(ct, dy);
+    let sy = b.fadd(sy_base, sy_t);
+    let v = emit_bilinear(&mut b, pimg, Some(img_base), s_i, sy, sx);
+    b.fadd_to(acc_radon, v);
+    let w1 = b.fabs(dy);
+    let wv1 = b.fmul(w1, v);
+    b.fadd_to(acc_t1, wv1);
+    let w2 = b.fmul(dy, dy);
+    let wv2 = b.fmul(w2, v);
+    b.fadd_to(acc_t2, wv2);
+    b.fmax_to(acc_max, v);
+    b.iadd_to(r, one_i);
+    let more = b.cmpi(CmpOp::Lt, r, s_i);
+    b.bra_if(more, top);
+
+    // out[img*4*a*s + t*a*s + aidx*s + col], t in declaration order
+    let row_base = b.imul(aidx, s_i);
+    let base0 = b.iadd(row_base, col);
+    let mut idx = b.iadd(out_base, base0);
     for acc in [acc_radon, acc_t1, acc_t2, acc_max] {
         b.stg(pout, idx, acc);
         idx = b.iadd(idx, plane);
@@ -402,7 +496,7 @@ pub fn tfunc_column(tfunc: &str, block_h: usize) -> Result<Kernel> {
 /// `s` (rounded block height for the column reduction).
 pub fn trace_module(s: usize) -> Result<Vec<Kernel>> {
     let block_h = s.next_power_of_two();
-    let mut kernels = vec![vadd()?, rotate_bilinear()?, sinogram_all()?];
+    let mut kernels = vec![vadd()?, rotate_bilinear()?, sinogram_all()?, batched_sinogram()?];
     for t in T_FUNCTIONALS {
         kernels.push(sinogram(t)?);
         kernels.push(tfunc_column(t, block_h)?);
@@ -643,9 +737,44 @@ mod tests {
     #[test]
     fn trace_module_builds_all() {
         let ks = trace_module(64).unwrap();
-        assert_eq!(ks.len(), 3 + 2 * T_FUNCTIONALS.len());
+        assert_eq!(ks.len(), 4 + 2 * T_FUNCTIONALS.len());
         for k in &ks {
             assert!(k.validate().is_ok(), "{} invalid", k.name);
+        }
+    }
+
+    #[test]
+    fn batched_sinogram_matches_per_image_fused() {
+        let (s, a, n) = (8usize, 3usize, 3usize);
+        let mut imgs: Vec<f32> =
+            (0..n * s * s).map(|i| ((i * 29) % 31) as f32 * 0.25).collect();
+        let mut angles: Vec<f32> = (0..a).map(|i| 0.3 + i as f32 * 0.9).collect();
+        let k = batched_sinogram().unwrap();
+        let mut out = vec![0.0f32; n * 4 * a * s];
+        execute(Launch {
+            kernel: &k,
+            grid: (a as u32, n as u32),
+            block: (s as u32, 1),
+            buffers: vec![&mut imgs, &mut angles, &mut out],
+            scalars: vec![ScalarArg::I32(s as i32)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        let fused = sinogram_all().unwrap();
+        for i in 0..n {
+            let mut img: Vec<f32> = imgs[i * s * s..(i + 1) * s * s].to_vec();
+            let mut ang = angles.clone();
+            let mut single = vec![0.0f32; 4 * a * s];
+            run(
+                &fused,
+                a as u32,
+                s as u32,
+                vec![&mut img, &mut ang, &mut single],
+                vec![ScalarArg::I32(s as i32)],
+            );
+            let plane = &out[i * 4 * a * s..(i + 1) * 4 * a * s];
+            // identical per-element arithmetic -> bitwise equality
+            assert_eq!(plane, single.as_slice(), "image {i}");
         }
     }
 

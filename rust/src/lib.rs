@@ -8,7 +8,11 @@
 //!
 //! * [`driver`] — a simulated accelerator **driver API** (the CUDA driver
 //!   API analog): devices, contexts, modules, functions, handle-based
-//!   disjoint device memory, streams and events.
+//!   disjoint device memory, streams and events. The memory pool is a
+//!   **caching allocator** (power-of-two bins, CUDA.jl style): freed
+//!   blocks recycle instead of round-tripping the host allocator;
+//!   `HLGPU_POOL=none` restores the uncached policy for A/B runs (see
+//!   `docs/memory.md`).
 //! * [`runtime`] — the **PJRT backend**: loads AOT HLO-text artifacts
 //!   produced by `python/compile/aot.py` (JAX + Pallas) and executes them
 //!   on the `xla` crate's CPU client.

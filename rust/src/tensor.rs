@@ -50,8 +50,13 @@ pub struct Tensor {
 
 impl Tensor {
     pub fn new(dtype: Dtype, shape: &[usize], data: Vec<u8>) -> Result<Self> {
-        let numel: usize = shape.iter().product();
-        if data.len() != numel * dtype.size_of() {
+        // overflow-checked: a wrapped byte length would let a crafted
+        // shape validate against a tiny buffer
+        let want = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .and_then(|numel| numel.checked_mul(dtype.size_of()));
+        if want != Some(data.len()) {
             return Err(Error::Type(format!(
                 "tensor data length {} does not match {:?} x {}",
                 data.len(),
@@ -73,8 +78,19 @@ impl Tensor {
     }
 
     pub fn zeros_f32(shape: &[usize]) -> Self {
-        let numel: usize = shape.iter().product();
-        Tensor { dtype: Dtype::F32, shape: shape.to_vec(), data: vec![0u8; numel * 4] }
+        Self::zeros(Dtype::F32, shape)
+    }
+
+    /// Zero-filled tensor of any supported dtype (the `download` path
+    /// dispatches on the device array's dtype). Panics on byte-length
+    /// overflow — a programming error, like the dtype asserts below.
+    pub fn zeros(dtype: Dtype, shape: &[usize]) -> Self {
+        let bytes = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .and_then(|numel| numel.checked_mul(dtype.size_of()))
+            .expect("tensor byte length overflows usize");
+        Tensor { dtype, shape: shape.to_vec(), data: vec![0u8; bytes] }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -158,9 +174,25 @@ mod tests {
     }
 
     #[test]
+    fn overflowing_shape_never_validates() {
+        // the wrapped byte length must not coincidentally match the data
+        assert!(Tensor::new(Dtype::F32, &[usize::MAX, 2], vec![0u8; 8]).is_err());
+    }
+
+    #[test]
     fn scalar_signature() {
         assert_eq!(Tensor::scalar_f32(2.0).signature(), "f32[]");
         assert_eq!(Tensor::scalar_f32(2.0).numel(), 1);
+    }
+
+    #[test]
+    fn zeros_of_any_dtype() {
+        let t = Tensor::zeros(Dtype::F64, &[3]);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.signature(), "f64[3]");
+        let t = Tensor::zeros(Dtype::I32, &[2, 2]);
+        assert_eq!(t.byte_len(), 16);
+        assert!(t.bytes().iter().all(|&b| b == 0));
     }
 
     #[test]

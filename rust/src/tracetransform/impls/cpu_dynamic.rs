@@ -48,15 +48,13 @@ fn sample_dyn(img: &DynArray, s: usize, sy: f64, sx: f64) -> Result<f64> {
         + gather(y0i + 1, x0i + 1)? * fy * fx)
 }
 
-impl TraceImpl for CpuDynamic {
-    fn name(&self) -> &'static str {
-        "cpu-dynamic"
-    }
-
-    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+impl CpuDynamic {
+    /// Core staged pipeline against a precomputed `(sin, cos)` table —
+    /// the batched path shares one table across all images.
+    fn features_with_trig(&self, img: &Image, trig: &[(f64, f64)]) -> Result<Vec<f32>> {
         // SLOC:core-begin
         let s = img.size();
-        let a = thetas.len();
+        let a = trig.len();
         // host data lives in boxed f64 arrays (the dynamic language world)
         let dimg = DynArray::from_f32(img.pixels(), &[s, s])?;
         let c = (s as f64 - 1.0) / 2.0;
@@ -64,9 +62,8 @@ impl TraceImpl for CpuDynamic {
         // staged: materialize each rotation, then apply every T-functional
         let sinos: Vec<DynArray> =
             T_SET.iter().map(|_| DynArray::zeros(&[a, s])).collect();
-        for (ai, &theta) in thetas.iter().enumerate() {
+        for (ai, &(st, ct)) in trig.iter().enumerate() {
             let rot = DynArray::zeros(&[s, s]);
-            let (st, ct) = (theta as f64).sin_cos();
             for y in 1..=s {
                 for x in 1..=s {
                     let dx = (x - 1) as f64 - c;
@@ -131,6 +128,26 @@ impl TraceImpl for CpuDynamic {
         }
         // SLOC:core-end
         Ok(feats)
+    }
+}
+
+impl TraceImpl for CpuDynamic {
+    fn name(&self) -> &'static str {
+        "cpu-dynamic"
+    }
+
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+        let trig: Vec<(f64, f64)> =
+            thetas.iter().map(|&t| (t as f64).sin_cos()).collect();
+        self.features_with_trig(img, &trig)
+    }
+
+    /// Batched path: the boxed trig table converts once per batch instead
+    /// of once per image.
+    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let trig: Vec<(f64, f64)> =
+            thetas.iter().map(|&t| (t as f64).sin_cos()).collect();
+        imgs.iter().map(|img| self.features_with_trig(img, &trig)).collect()
     }
 }
 

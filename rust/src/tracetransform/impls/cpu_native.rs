@@ -17,31 +17,20 @@ impl CpuNative {
     pub fn new() -> CpuNative {
         CpuNative { sinos: vec![Vec::new(); T_SET.len()] }
     }
-}
 
-impl Default for CpuNative {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl TraceImpl for CpuNative {
-    fn name(&self) -> &'static str {
-        "cpu-native"
-    }
-
-    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+    /// Core marching loop against a precomputed `(sin, cos)` table — the
+    /// batched path shares one table across all images.
+    fn features_with_trig(&mut self, img: &Image, trig: &[(f32, f32)]) -> Result<Vec<f32>> {
         // SLOC:core-begin
         let s = img.size();
-        let a = thetas.len();
+        let a = trig.len();
         let src = img.pixels();
         let c = (s as f32 - 1.0) / 2.0;
         for sino in &mut self.sinos {
             sino.clear();
             sino.resize(a * s, 0.0);
         }
-        for (ai, &theta) in thetas.iter().enumerate() {
-            let (st, ct) = theta.sin_cos();
+        for (ai, &(st, ct)) in trig.iter().enumerate() {
             for col in 0..s {
                 let dx = col as f32 - c;
                 let sx_base = ct * dx + c;
@@ -69,6 +58,30 @@ impl TraceImpl for CpuNative {
         }
         // SLOC:core-end
         Ok(feats)
+    }
+}
+
+impl Default for CpuNative {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceImpl for CpuNative {
+    fn name(&self) -> &'static str {
+        "cpu-native"
+    }
+
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+        let trig: Vec<(f32, f32)> = thetas.iter().map(|t| t.sin_cos()).collect();
+        self.features_with_trig(img, &trig)
+    }
+
+    /// Batched path: one trig table for the whole batch; the per-T
+    /// scratch sinograms were already reused across calls.
+    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let trig: Vec<(f32, f32)> = thetas.iter().map(|t| t.sin_cos()).collect();
+        imgs.iter().map(|img| self.features_with_trig(img, &trig)).collect()
     }
 }
 

@@ -5,7 +5,7 @@
 //! code shrinks to the paper's Listing 3.
 
 use crate::coordinator::{arg, KernelRegistry, Launcher};
-use crate::driver::{Context, LaunchConfig};
+use crate::driver::{BackendKind, Context, LaunchConfig};
 use crate::error::Result;
 use crate::tensor::Tensor;
 use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
@@ -134,6 +134,51 @@ impl TraceImpl for GpuAuto {
         }
         // SLOC:core-end
     }
+
+    /// Batched path: one `batched_sinogram` launch covers the whole
+    /// batch — the angle table and the stacked images upload once, and
+    /// every subsequent batch reuses the specialization's pre-allocated
+    /// device buffers (no allocator traffic at steady state).
+    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if imgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batched_ok = self.mode == AutoMode::SinogramAll
+            && self.launcher.context().device().kind == BackendKind::VtxEmulator
+            && imgs.iter().all(|i| i.size() == imgs[0].size());
+        if !batched_ok {
+            // PJRT artifacts and the ablation modes have no batched
+            // lowering — sequential fallback
+            return imgs.iter().map(|img| self.features(img, thetas)).collect();
+        }
+        let s = imgs[0].size();
+        let n = imgs.len();
+        let a = thetas.len();
+        let nt = T_SET.len();
+        let mut stacked = Vec::with_capacity(n * s * s);
+        for img in imgs {
+            stacked.extend_from_slice(img.pixels());
+        }
+        let imgs_t = Tensor::from_f32(&stacked, &[n, s, s]);
+        let angles_t = Tensor::from_f32(thetas, &[a]);
+        let mut sinos = Tensor::zeros_f32(&[n, nt, a, s]);
+        self.launcher.launch(
+            "batched_sinogram",
+            LaunchConfig::new((a as u32, n as u32), s as u32),
+            &mut [arg::cu_in(&imgs_t), arg::cu_in(&angles_t), arg::cu_out(&mut sinos)],
+        )?;
+        let all = sinos.as_f32();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut feats = Vec::with_capacity(nt * 6);
+            for ti in 0..nt {
+                let off = (i * nt + ti) * a * s;
+                feats.extend(reduce_sinogram(&all[off..off + a * s], a, s));
+            }
+            out.push(feats);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +186,23 @@ mod tests {
     use super::*;
     use crate::tracetransform::functionals::FEATURE_COUNT;
     use crate::tracetransform::image::{orientations, shepp_logan};
+
+    #[test]
+    fn batched_path_specializes_once_per_batch_shape() {
+        let thetas = orientations(5);
+        let imgs: Vec<_> = (0..3)
+            .map(|i| crate::tracetransform::image::random_phantom(10, i as u64))
+            .collect();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let b1 = m.features_batch(&imgs, &thetas).unwrap();
+        assert_eq!(m.launcher().metrics().cold_specializations, 1);
+        let b2 = m.features_batch(&imgs, &thetas).unwrap();
+        assert_eq!(b1, b2);
+        assert_eq!(m.launcher().metrics().cold_specializations, 1, "warm batch");
+        // a different batch size is a different signature
+        m.features_batch(&imgs[..2], &thetas).unwrap();
+        assert_eq!(m.launcher().metrics().cold_specializations, 2);
+    }
 
     #[test]
     fn emulator_auto_runs_and_caches() {

@@ -13,7 +13,7 @@ use crate::runtime::ArtifactLibrary;
 use crate::tensor::Tensor;
 use crate::tracetransform::functionals::{FFunctional, PFunctional, F_SET, P_SET, T_SET};
 use crate::tracetransform::image::Image;
-use crate::tracetransform::impls::{DeviceChoice, TraceImpl};
+use crate::tracetransform::impls::{alloc3, free3, DeviceChoice, TraceImpl};
 
 pub struct GpuDynamic {
     ctx: Context,
@@ -23,6 +23,43 @@ pub struct GpuDynamic {
 }
 
 type DynFeats = Vec<f32>;
+
+/// Box one T-functional's sinogram plane back into the dynamic world and
+/// run the P/F stacks on it — the between-kernel glue that stays dynamic
+/// (§7.3). Shared by the sequential and batched paths.
+fn dyn_reduce_plane(plane: &[f32], a: usize, s: usize) -> Result<DynFeats> {
+    let sino = DynArray::zeros(&[a, s]);
+    sino.fill_from_f32(plane)?;
+    let mut feats = Vec::with_capacity(P_SET.len() * F_SET.len());
+    for p in P_SET {
+        let mut circus = Vec::with_capacity(a);
+        for ai in 1..=a {
+            let mut acc = match p {
+                PFunctional::Max => f64::NEG_INFINITY,
+                _ => 0.0,
+            };
+            for x in 1..=s {
+                let v = sino.get(&[ai, x])?.as_float()?;
+                match p {
+                    PFunctional::Sum => acc += v,
+                    PFunctional::Max => acc = acc.max(v),
+                    PFunctional::L1 => acc += v.abs(),
+                }
+            }
+            circus.push(acc);
+        }
+        for f in F_SET {
+            let v = match f {
+                FFunctional::Mean => circus.iter().sum::<f64>() / a as f64,
+                FFunctional::Max => {
+                    circus.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+                }
+            };
+            feats.push(v as f32);
+        }
+    }
+    Ok(feats)
+}
 
 impl GpuDynamic {
     pub fn new() -> Result<GpuDynamic> {
@@ -61,6 +98,21 @@ impl GpuDynamic {
         self.functions.insert(key, f.clone());
         Ok(f)
     }
+
+    /// Batched kernel handle (emulator only; the generated kernel is
+    /// shape-generic so one cache entry serves every batch).
+    fn batched_function(&mut self) -> Result<Function> {
+        let key = ("batched_sinogram", 0usize, 0usize);
+        if let Some(f) = self.functions.get(&key) {
+            return Ok(f.clone());
+        }
+        let module = self.ctx.load_module(&ModuleSource::Vtx {
+            kernels: vec![crate::emulator::kernels::batched_sinogram()?],
+        })?;
+        let f = module.function("batched_sinogram")?;
+        self.functions.insert(key, f.clone());
+        Ok(f)
+    }
 }
 
 impl TraceImpl for GpuDynamic {
@@ -90,68 +142,115 @@ impl TraceImpl for GpuDynamic {
         );
 
         let nt = T_SET.len();
-        let ga = self.ctx.alloc(img_t.byte_len())?;
-        let gb = self.ctx.alloc(angles_t.byte_len())?;
-        let gc = self.ctx.alloc(nt * a * s * 4)?;
-        self.ctx.upload(ga, img_t.bytes())?;
-        self.ctx.upload(gb, angles_t.bytes())?;
+        let (ga, gb, gc) =
+            alloc3(&self.ctx, img_t.byte_len(), angles_t.byte_len(), nt * a * s * 4)?;
 
-        // one fused launch computes every T-functional's sinogram
-        let f = self.function(s, a)?;
-        let args = match self.device {
-            DeviceChoice::Pjrt => {
-                vec![KernelArg::Ptr(ga), KernelArg::Ptr(gb), KernelArg::Ptr(gc)]
-            }
-            DeviceChoice::Emulator => vec![
-                KernelArg::Ptr(ga),
-                KernelArg::Ptr(gb),
-                KernelArg::Ptr(gc),
-                KernelArg::I32(s as i32),
-            ],
-        };
-        f.launch(&LaunchConfig::new(a as u32, s as u32), &args, self.ctx.memory()?)?;
-        let mut sinos_host = Tensor::zeros_f32(&[nt, a, s]);
-        self.ctx.download(gc, sinos_host.bytes_mut())?;
+        // transfers + launch; the buffers must be freed on every path — a
+        // mid-call error must not leak device memory
+        let body = (|| -> Result<Tensor> {
+            self.ctx.upload(ga, img_t.bytes())?;
+            self.ctx.upload(gb, angles_t.bytes())?;
+            // one fused launch computes every T-functional's sinogram
+            let f = self.function(s, a)?;
+            let args = match self.device {
+                DeviceChoice::Pjrt => {
+                    vec![KernelArg::Ptr(ga), KernelArg::Ptr(gb), KernelArg::Ptr(gc)]
+                }
+                DeviceChoice::Emulator => vec![
+                    KernelArg::Ptr(ga),
+                    KernelArg::Ptr(gb),
+                    KernelArg::Ptr(gc),
+                    KernelArg::I32(s as i32),
+                ],
+            };
+            f.launch(&LaunchConfig::new(a as u32, s as u32), &args, self.ctx.memory()?)?;
+            let mut sinos_host = Tensor::zeros_f32(&[nt, a, s]);
+            self.ctx.download(gc, sinos_host.bytes_mut())?;
+            Ok(sinos_host)
+        })();
+        let sinos_host = free3(&self.ctx, ga, gb, gc, body)?;
 
         let mut feats: DynFeats = Vec::with_capacity(nt * 6);
         for ti in 0..nt {
             // back into the boxed world before the dynamic P/F stacks
-            let sino = DynArray::zeros(&[a, s]);
-            sino.fill_from_f32(&sinos_host.as_f32()[ti * a * s..(ti + 1) * a * s])?;
-            for p in P_SET {
-                let mut circus = Vec::with_capacity(a);
-                for ai in 1..=a {
-                    let mut acc = match p {
-                        PFunctional::Max => f64::NEG_INFINITY,
-                        _ => 0.0,
-                    };
-                    for x in 1..=s {
-                        let v = sino.get(&[ai, x])?.as_float()?;
-                        match p {
-                            PFunctional::Sum => acc += v,
-                            PFunctional::Max => acc = acc.max(v),
-                            PFunctional::L1 => acc += v.abs(),
-                        }
-                    }
-                    circus.push(acc);
-                }
-                for f in F_SET {
-                    let v = match f {
-                        FFunctional::Mean => circus.iter().sum::<f64>() / a as f64,
-                        FFunctional::Max => {
-                            circus.iter().copied().fold(f64::NEG_INFINITY, f64::max)
-                        }
-                    };
-                    feats.push(v as f32);
-                }
-            }
+            feats.extend(dyn_reduce_plane(
+                &sinos_host.as_f32()[ti * a * s..(ti + 1) * a * s],
+                a,
+                s,
+            )?);
         }
-
-        self.ctx.free(ga)?;
-        self.ctx.free(gb)?;
-        self.ctx.free(gc)?;
         // SLOC:core-end
         Ok(feats)
+    }
+
+    /// Batched path (emulator): the dynamic host still pays its boxing
+    /// tax per image, but the whole batch shares ONE angle-table
+    /// conversion + upload and one `batched_sinogram` launch, and the
+    /// three device buffers are recycled through the pool's bins between
+    /// batches.
+    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if imgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let same_size = imgs.iter().all(|i| i.size() == imgs[0].size());
+        if self.device != DeviceChoice::Emulator || !same_size {
+            return imgs.iter().map(|img| self.features(img, thetas)).collect();
+        }
+        let s = imgs[0].size();
+        let a = thetas.len();
+        let n = imgs.len();
+        let nt = T_SET.len();
+
+        // boxed-world conversion per image (the dynamic cost the paper
+        // measures), stacked into a single upload
+        let mut stacked = Vec::with_capacity(n * s * s);
+        for img in imgs {
+            let dimg = DynArray::from_f32(img.pixels(), &[s, s])?;
+            stacked.extend(dimg.to_f32_vec());
+        }
+        let imgs_t = Tensor::from_f32(&stacked, &[n, s, s]);
+        let dangles =
+            DynArray::from_vec(thetas.iter().map(|&t| t as f64).collect(), &[a])?;
+        let angles_t = Tensor::from_f32(&dangles.to_f32_vec(), &[a]);
+
+        let (ga, gb, gc) = alloc3(
+            &self.ctx,
+            imgs_t.byte_len(),
+            angles_t.byte_len(),
+            n * nt * a * s * 4,
+        )?;
+        let body = (|| -> Result<Tensor> {
+            self.ctx.upload(ga, imgs_t.bytes())?;
+            self.ctx.upload(gb, angles_t.bytes())?;
+            let f = self.batched_function()?;
+            let args = vec![
+                KernelArg::Ptr(ga),
+                KernelArg::Ptr(gb),
+                KernelArg::Ptr(gc),
+                KernelArg::I32(s as i32),
+            ];
+            f.launch(
+                &LaunchConfig::new((a as u32, n as u32), s as u32),
+                &args,
+                self.ctx.memory()?,
+            )?;
+            let mut sinos_host = Tensor::zeros_f32(&[n, nt, a, s]);
+            self.ctx.download(gc, sinos_host.bytes_mut())?;
+            Ok(sinos_host)
+        })();
+        let sinos_host = free3(&self.ctx, ga, gb, gc, body)?;
+
+        let all = sinos_host.as_f32();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut feats: DynFeats = Vec::with_capacity(nt * 6);
+            for ti in 0..nt {
+                let off = (i * nt + ti) * a * s;
+                feats.extend(dyn_reduce_plane(&all[off..off + a * s], a, s)?);
+            }
+            out.push(feats);
+        }
+        Ok(out)
     }
 }
 
@@ -160,6 +259,27 @@ mod tests {
     use super::*;
     use crate::tracetransform::functionals::FEATURE_COUNT;
     use crate::tracetransform::image::{orientations, shepp_logan};
+
+    #[test]
+    fn emulator_dynamic_batch_shares_one_angle_upload() {
+        use crate::tracetransform::image::random_phantom;
+        let imgs: Vec<Image> = (0..3).map(|i| random_phantom(10, 70 + i as u64)).collect();
+        let thetas = orientations(5);
+        let mut m = GpuDynamic::on_device(DeviceChoice::Emulator).unwrap();
+        m.features_batch(&imgs, &thetas).unwrap(); // warm the function cache
+        m.ctx.memory().unwrap().reset_stats();
+        m.features_batch(&imgs, &thetas).unwrap();
+        let bat = m.ctx.mem_stats().unwrap();
+        m.ctx.memory().unwrap().reset_stats();
+        for img in &imgs {
+            m.features(img, &thetas).unwrap();
+        }
+        let seq = m.ctx.mem_stats().unwrap();
+        assert_eq!(bat.h2d_count, 2, "stacked images + one angle table");
+        assert_eq!(seq.h2d_count, 2 * imgs.len() as u64);
+        assert_eq!(bat.alloc_count, 3, "ga/gb/gc once per batch");
+        assert_eq!(seq.alloc_count, 3 * imgs.len() as u64);
+    }
 
     #[test]
     fn emulator_dynamic_produces_features() {

@@ -12,7 +12,7 @@ use crate::runtime::ArtifactLibrary;
 use crate::tensor::Tensor;
 use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
 use crate::tracetransform::image::Image;
-use crate::tracetransform::impls::{DeviceChoice, TraceImpl};
+use crate::tracetransform::impls::{alloc3, free3, DeviceChoice, TraceImpl};
 
 pub struct GpuManual {
     ctx: Context,
@@ -95,12 +95,9 @@ impl TraceImpl for GpuManual {
         // manual memory management, Listing 2 style
         let img_t = img.to_tensor();
         let angles_t = Tensor::from_f32(thetas, &[a]);
-        let ga = self.ctx.alloc(img_t.byte_len())?;
-        let gb = self.ctx.alloc(angles_t.byte_len())?;
         let out_elems = if self.staged { a * s } else { nt * a * s };
-        let gc = self.ctx.alloc(out_elems * 4)?;
-        self.ctx.upload(ga, img_t.bytes())?;
-        self.ctx.upload(gb, angles_t.bytes())?;
+        let (ga, gb, gc) =
+            alloc3(&self.ctx, img_t.byte_len(), angles_t.byte_len(), out_elems * 4)?;
 
         let scalar_args = |device: DeviceChoice| -> Vec<KernelArg> {
             let mut v = vec![KernelArg::Ptr(ga), KernelArg::Ptr(gb), KernelArg::Ptr(gc)];
@@ -110,40 +107,44 @@ impl TraceImpl for GpuManual {
             v
         };
 
-        let mut feats = Vec::with_capacity(nt * 6);
-        if self.staged {
-            // original structure: one kernel launch per T-functional
-            let mut sino = Tensor::zeros_f32(&[a, s]);
-            for t in T_SET {
-                let f = self.function(&format!("sinogram_{}", t.name()), s, a)?;
+        // transfers + launches; buffers freed on every path below
+        let body = (|| -> Result<Vec<f32>> {
+            self.ctx.upload(ga, img_t.bytes())?;
+            self.ctx.upload(gb, angles_t.bytes())?;
+            let mut feats = Vec::with_capacity(nt * 6);
+            if self.staged {
+                // original structure: one kernel launch per T-functional
+                let mut sino = Tensor::zeros_f32(&[a, s]);
+                for t in T_SET {
+                    let f = self.function(&format!("sinogram_{}", t.name()), s, a)?;
+                    f.launch(
+                        &LaunchConfig::new(a as u32, s as u32),
+                        &scalar_args(self.device),
+                        self.ctx.memory()?,
+                    )?;
+                    self.ctx.download(gc, sino.bytes_mut())?;
+                    feats.extend(reduce_sinogram(sino.as_f32(), a, s));
+                }
+            } else {
+                // optimized: one fused launch computes all |T| sinograms
+                let f = self.function("sinogram_all", s, a)?;
                 f.launch(
                     &LaunchConfig::new(a as u32, s as u32),
                     &scalar_args(self.device),
                     self.ctx.memory()?,
                 )?;
-                self.ctx.download(gc, sino.bytes_mut())?;
-                feats.extend(reduce_sinogram(sino.as_f32(), a, s));
+                let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
+                self.ctx.download(gc, sinos.bytes_mut())?;
+                let all = sinos.as_f32();
+                for ti in 0..nt {
+                    feats.extend(reduce_sinogram(&all[ti * a * s..(ti + 1) * a * s], a, s));
+                }
             }
-        } else {
-            // optimized: one fused launch computes all |T| sinograms
-            let f = self.function("sinogram_all", s, a)?;
-            f.launch(
-                &LaunchConfig::new(a as u32, s as u32),
-                &scalar_args(self.device),
-                self.ctx.memory()?,
-            )?;
-            let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
-            self.ctx.download(gc, sinos.bytes_mut())?;
-            let all = sinos.as_f32();
-            for ti in 0..nt {
-                feats.extend(reduce_sinogram(&all[ti * a * s..(ti + 1) * a * s], a, s));
-            }
-        }
+            Ok(feats)
+        })();
 
         // clean-up device memory (Listing 2 lines 29–32)
-        self.ctx.free(ga)?;
-        self.ctx.free(gb)?;
-        self.ctx.free(gc)?;
+        let feats = free3(&self.ctx, ga, gb, gc, body)?;
         // SLOC:core-end
         Ok(feats)
     }

@@ -25,6 +25,7 @@ pub use gpu_auto::{AutoMode, GpuAuto};
 pub use gpu_dynamic::GpuDynamic;
 pub use gpu_manual::GpuManual;
 
+use crate::driver::{Context, DevicePtr};
 use crate::error::Result;
 use crate::tracetransform::image::Image;
 
@@ -35,6 +36,15 @@ pub trait TraceImpl {
 
     /// Extract the full (T, P, F) feature vector.
     fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>>;
+
+    /// Extract features for a whole batch of images against one angle
+    /// set. The default loops [`TraceImpl::features`]; implementations
+    /// with a cheaper batched path (one `batched_sinogram` launch, one
+    /// angle-table upload, shared trig tables) override it — results
+    /// must match the sequential path image for image.
+    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
+        imgs.iter().map(|img| self.features(img, thetas)).collect()
+    }
 }
 
 /// Which device the GPU implementations run on.
@@ -53,6 +63,54 @@ impl DeviceChoice {
             DeviceChoice::Emulator => 1,
         }
     }
+}
+
+/// Allocate the three buffers of a Listing-2-style call, freeing the
+/// earlier ones when a later allocation fails — the manual paths must
+/// not leak device memory on OOM.
+pub(crate) fn alloc3(
+    ctx: &Context,
+    b0: usize,
+    b1: usize,
+    b2: usize,
+) -> Result<(DevicePtr, DevicePtr, DevicePtr)> {
+    let p0 = ctx.alloc(b0)?;
+    let p1 = match ctx.alloc(b1) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = ctx.free(p0);
+            return Err(e);
+        }
+    };
+    let p2 = match ctx.alloc(b2) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = ctx.free(p0);
+            let _ = ctx.free(p1);
+            return Err(e);
+        }
+    };
+    Ok((p0, p1, p2))
+}
+
+/// Free three device buffers unconditionally, then surface the body's
+/// result — a body error wins over a free error, so a failed launch
+/// still releases its buffers.
+pub(crate) fn free3<T>(
+    ctx: &Context,
+    p0: DevicePtr,
+    p1: DevicePtr,
+    p2: DevicePtr,
+    body: Result<T>,
+) -> Result<T> {
+    let f0 = ctx.free(p0);
+    let f1 = ctx.free(p1);
+    let f2 = ctx.free(p2);
+    let v = body?;
+    f0?;
+    f1?;
+    f2?;
+    Ok(v)
 }
 
 /// Register the VTX providers for every `sinogram_<t>` logical kernel, so
@@ -98,6 +156,24 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
             config: LaunchConfig::new(a as u32, s as u32),
         })
     });
+    // the batched launch shape: N stacked images, one launch
+    registry.register_vtx("batched_sinogram", |specs| {
+        // specs: [imgs f32[n,s,s], angles f32[a], out f32[n,4,a,s]]
+        if specs.len() != 3 || specs[0].shape.len() != 3 {
+            return Err(Error::Specialize {
+                kernel: "batched_sinogram".into(),
+                reason: format!("unexpected argument shapes: {specs:?}"),
+            });
+        }
+        let n = specs[0].shape[0];
+        let s = specs[0].shape[1];
+        let a = specs[1].shape[0];
+        Ok(VtxSpec {
+            kernel: crate::emulator::kernels::batched_sinogram()?,
+            scalars: vec![KernelArg::I32(s as i32)],
+            config: LaunchConfig::new((a as u32, n as u32), s as u32),
+        })
+    });
     // the running example, for completeness
     registry.register_vtx("vadd", |specs| {
         let n = specs[0].numel();
@@ -113,7 +189,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
 mod tests {
     use super::*;
     use crate::tracetransform::functionals::FEATURE_COUNT;
-    use crate::tracetransform::image::{orientations, shepp_logan};
+    use crate::tracetransform::image::{orientations, random_phantom, shepp_logan};
 
     #[test]
     fn cpu_native_and_dynamic_agree() {
@@ -156,6 +232,80 @@ mod tests {
             let tol = 2e-3 * x.abs().max(1.0);
             assert!((x - y).abs() < tol, "feature {i}: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn alloc3_and_free3_never_leak_on_errors() {
+        let ctx = Context::create(&crate::driver::device(1).unwrap()).unwrap();
+        // the third allocation can never fit: the first two must not leak
+        let err = alloc3(&ctx, 16, 16, usize::MAX / 2).unwrap_err();
+        assert_eq!(err.status(), "ERROR_OUT_OF_MEMORY");
+        assert_eq!(ctx.memory().unwrap().live_buffers(), 0);
+
+        // free3 releases the buffers even when the body failed
+        let (a, b, c) = alloc3(&ctx, 8, 8, 8).unwrap();
+        let body: Result<()> = Err(crate::error::Error::Other("launch trap".into()));
+        assert!(free3(&ctx, a, b, c, body).is_err());
+        assert_eq!(ctx.memory().unwrap().live_buffers(), 0);
+    }
+
+    /// Every implementation's batched path must agree with its own
+    /// sequential path, image for image.
+    #[test]
+    fn features_batch_matches_sequential_everywhere() {
+        let imgs: Vec<Image> = (0..3).map(|i| random_phantom(12, 40 + i as u64)).collect();
+        let thetas = orientations(6);
+        let mut impls: Vec<Box<dyn TraceImpl>> = vec![
+            Box::new(CpuNative::new()),
+            Box::new(CpuDynamic::new()),
+            Box::new(GpuAuto::on_device(DeviceChoice::Emulator).unwrap()),
+            Box::new(GpuDynamic::on_device(DeviceChoice::Emulator).unwrap()),
+            Box::new(GpuManual::on_device(DeviceChoice::Emulator).unwrap()),
+        ];
+        for im in impls.iter_mut() {
+            let name = im.name();
+            let batch = im.features_batch(&imgs, &thetas).unwrap();
+            assert_eq!(batch.len(), imgs.len(), "{name}");
+            for (i, img) in imgs.iter().enumerate() {
+                let seq = im.features(img, &thetas).unwrap();
+                assert_eq!(batch[i].len(), FEATURE_COUNT, "{name} image {i}");
+                for (j, (x, y)) in batch[i].iter().zip(&seq).enumerate() {
+                    let tol = 1e-4 * x.abs().max(1.0);
+                    assert!(
+                        (x - y).abs() < tol,
+                        "{name} image {i} feature {j}: batch {x} vs seq {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The acceptance criterion of the batched path: fewer H2D transfers
+    /// than the sequential loop (one stacked image upload + one angle
+    /// table for the whole batch).
+    #[test]
+    fn batched_auto_uploads_less_than_sequential() {
+        let thetas = orientations(6);
+        let imgs: Vec<Image> = (0..4).map(|i| random_phantom(12, 50 + i as u64)).collect();
+        let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        // warm both specializations so steady-state transfers compare
+        auto.features(&imgs[0], &thetas).unwrap();
+        auto.features_batch(&imgs, &thetas).unwrap();
+
+        auto.launcher().context().memory().unwrap().reset_stats();
+        for img in &imgs {
+            auto.features(img, &thetas).unwrap();
+        }
+        let seq = auto.launcher().context().mem_stats().unwrap();
+
+        auto.launcher().context().memory().unwrap().reset_stats();
+        auto.features_batch(&imgs, &thetas).unwrap();
+        let bat = auto.launcher().context().mem_stats().unwrap();
+
+        assert_eq!(seq.h2d_count, 2 * imgs.len() as u64, "image + angles per call");
+        assert_eq!(bat.h2d_count, 2, "one stacked upload + one angle table");
+        assert!(bat.h2d_count < seq.h2d_count);
+        assert_eq!(bat.alloc_count, 0, "warm batch allocates nothing");
     }
 
     #[test]

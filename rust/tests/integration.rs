@@ -321,6 +321,54 @@ fn wrong_output_shape_fails_specialization() {
     assert!(msg.contains("output") || msg.contains("f32[1025]"), "{msg}");
 }
 
+#[test]
+fn manual_path_recycles_pool_bins_between_calls() {
+    // The Listing-2 manual flow allocs/frees ga/gb/gc every call; with the
+    // caching allocator the second call must be served entirely from the
+    // pool's bins (no fresh host allocations on the steady-state path).
+    use hlgpu::driver::PoolPolicy;
+    use hlgpu::tracetransform::TraceImpl;
+    let img = shepp_logan(12);
+    let thetas = orientations(6);
+    let mut m = impls::GpuManual::on_device(DeviceChoice::Emulator).unwrap();
+    m.features(&img, &thetas).unwrap();
+    m.context().memory().unwrap().reset_stats();
+    m.features(&img, &thetas).unwrap();
+    let st = m.context().mem_stats().unwrap();
+    assert_eq!(st.alloc_count, 3, "ga/gb/gc per call");
+    match m.context().memory().unwrap().policy() {
+        PoolPolicy::Cached => {
+            assert_eq!(st.reuse_count, 3, "warm call fully served from bins");
+            assert!((st.pool_hit_rate() - 1.0).abs() < 1e-9);
+        }
+        PoolPolicy::Uncached => {
+            assert_eq!(st.reuse_count, 0, "HLGPU_POOL=none never recycles");
+        }
+    }
+    // all device memory released either way
+    assert_eq!(m.context().memory().unwrap().live_buffers(), 0);
+}
+
+#[test]
+fn batch_and_sequential_agree_through_the_automation_layer() {
+    use hlgpu::tracetransform::{GpuAuto, TraceImpl};
+    let imgs: Vec<_> = (0..3)
+        .map(|i| hlgpu::tracetransform::random_phantom(14, 90 + i as u64))
+        .collect();
+    let thetas = orientations(8);
+    let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    let batch = auto.features_batch(&imgs, &thetas).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        let seq = auto.features(img, &thetas).unwrap();
+        for (j, (x, y)) in batch[i].iter().zip(&seq).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4 * x.abs().max(1.0),
+                "image {i} feature {j}: {x} vs {y}"
+            );
+        }
+    }
+}
+
 // ------------------------------------------------------------- e2e sanity --
 
 #[test]

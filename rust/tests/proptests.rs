@@ -4,7 +4,9 @@
 //!
 //! Invariants covered:
 //!  * memory pool: alloc/free/copy sequences never corrupt unrelated
-//!    buffers; stats stay consistent; OOM respects capacity;
+//!    buffers; stats stay consistent; OOM respects capacity; the cached
+//!    and uncached allocation policies are observationally identical
+//!    through `DeviceArray` round-trips;
 //!  * VTX interpreter: generated vadd/affine programs match scalar rust
 //!    evaluation for arbitrary sizes and launch geometries;
 //!  * coordinator: for random shapes, the specialization cache key is
@@ -96,6 +98,57 @@ fn prop_memory_capacity_never_exceeded() {
             assert!(pool.stats().current_bytes <= cap, "seed {seed}");
             assert!(pool.stats().peak_bytes <= cap, "seed {seed}");
         }
+    }
+}
+
+#[test]
+fn prop_cached_and_uncached_policies_observationally_identical() {
+    // Same random alloc/upload/download/free schedule against a cached
+    // and an uncached pool: every download must return the uploaded
+    // data, identically under both policies, and the live-byte gauges
+    // must track each other (only the reuse counters may differ).
+    use hlgpu::coordinator::DeviceArray;
+    use hlgpu::driver::{Context, PoolPolicy};
+    for seed in 0..CASES as u64 {
+        let mut rng = Prng::new(11_000 + seed);
+        let dev = hlgpu::driver::device(1).unwrap();
+        let cached = Context::create_with_policy(&dev, PoolPolicy::Cached).unwrap();
+        let uncached = Context::create_with_policy(&dev, PoolPolicy::Uncached).unwrap();
+        let mut live: Vec<(DeviceArray, DeviceArray, Vec<f32>)> = Vec::new();
+        for _ in 0..24 {
+            match rng.usize_in(0, 2) {
+                0 => {
+                    let n = rng.usize_in(1, 512);
+                    let vals = rng.f32_vec(n, -10.0, 10.0);
+                    let t = Tensor::from_f32(&vals, &[n]);
+                    let a = DeviceArray::from_tensor(&cached, &t).unwrap();
+                    let b = DeviceArray::from_tensor(&uncached, &t).unwrap();
+                    live.push((a, b, vals));
+                }
+                1 if !live.is_empty() => {
+                    let idx = rng.usize_in(0, live.len() - 1);
+                    let (a, b, _) = live.remove(idx);
+                    a.free().unwrap();
+                    b.free().unwrap();
+                }
+                _ => {
+                    for (a, b, vals) in &live {
+                        let da = a.download().unwrap();
+                        let db = b.download().unwrap();
+                        assert_eq!(da.as_f32(), vals.as_slice(), "seed {seed}: cached");
+                        assert_eq!(da.as_f32(), db.as_f32(), "seed {seed}: policies differ");
+                    }
+                }
+            }
+        }
+        let sa = cached.mem_stats().unwrap();
+        let sb = uncached.mem_stats().unwrap();
+        assert_eq!(sa.current_bytes, sb.current_bytes, "seed {seed}");
+        assert_eq!(sa.peak_bytes, sb.peak_bytes, "seed {seed}");
+        assert_eq!(sa.alloc_count, sb.alloc_count, "seed {seed}");
+        assert_eq!(sa.free_count, sb.free_count, "seed {seed}");
+        assert_eq!(sb.reuse_count, 0, "seed {seed}: uncached never reuses");
+        assert_eq!(sb.cached_bytes, 0, "seed {seed}");
     }
 }
 
