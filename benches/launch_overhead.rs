@@ -7,17 +7,24 @@
 //! speedup, blocks executed and worker utilization; with >= 4 workers on
 //! adequate hardware the fused sinogram workload shows >= 2x.
 //!
-//! Part 2 (needs `make artifacts`): the §6 claim that the automation
+//! Part 2 (always runs, VTX emulator): the **execution tiers** — the
+//! warp-vectorized interpreter (basic-block lowering + superinstruction
+//! fusion, `HLGPU_EXEC=vector`) vs the scalar reference tier, on the
+//! straight-line sinogram workload. Reports instructions/s, the share
+//! of instructions retired in fused superinstructions, and vector lane
+//! utilization; target >= 3x instructions/s over scalar.
+//!
+//! Part 3 (needs `make artifacts`): the §6 claim that the automation
 //! layer adds **no run-time overhead** over manual driver calls once the
 //! specialization cache is warm, on the PJRT backend.
 //!
 //! Run: `cargo bench --bench launch_overhead`
-//! (env: LO_ITERS, LO_N, LO_SIZE, LO_ANGLES, HLGPU_WORKERS).
+//! (env: LO_ITERS, LO_N, LO_SIZE, LO_ANGLES, HLGPU_WORKERS, HLGPU_EXEC).
 
 use hlgpu::bench_support::{fmt_speedup, fmt_summary, measure, Settings, Table};
 use hlgpu::coordinator::{arg, Launcher};
 use hlgpu::driver::{Context, KernelArg, LaunchConfig};
-use hlgpu::emulator::{default_workers, set_default_workers};
+use hlgpu::emulator::{default_workers, set_default_exec, set_default_workers, ExecTier};
 use hlgpu::runtime::ArtifactLibrary;
 use hlgpu::tensor::Tensor;
 use hlgpu::tracetransform::{orientations, shepp_logan};
@@ -109,6 +116,106 @@ fn emulator_scheduler_section(settings: Settings) {
             "best parallel schedule: {} workers, {} over sequential (target: >= 2x with >= 4 workers)",
             best_width,
             fmt_speedup(seq_mean, best_par)
+        );
+    }
+}
+
+/// Execution-tier section: scalar reference interpreter vs the
+/// warp-vectorized tier on the straight-line sinogram workload, A/B'd
+/// through `set_default_exec` (mirroring the scheduler section's
+/// `set_default_workers` precedent). Both tiers produce bitwise-equal
+/// results; only dispatch amortization differs.
+fn exec_tier_section(settings: Settings) {
+    let size = env_usize("LO_SIZE", 96);
+    let angles = env_usize("LO_ANGLES", 64);
+    let img = shepp_logan(size).to_tensor();
+    let thetas = orientations(angles);
+    let ang = Tensor::from_f32(&thetas, &[angles]);
+    let mut sinos = Tensor::zeros_f32(&[4, angles, size]);
+    let cfg = LaunchConfig::new(angles as u32, size as u32);
+
+    let mut launcher = Launcher::emulator().unwrap();
+    hlgpu::tracetransform::impls::register_trace_providers(launcher.registry_mut());
+
+    let mut table = Table::new(&[
+        "tier",
+        "time/iter",
+        "Minstr/s",
+        "fused share",
+        "lane util",
+        "speedup",
+    ]);
+    let iters = (settings.warmup_iters + settings.sample_iters) as f64;
+    let mut scalar_mean = 0.0f64;
+    let mut vector_mean = f64::INFINITY;
+    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        set_default_exec(Some(tier));
+        // warm the specialization cache under this tier
+        launcher
+            .launch(
+                "sinogram_all",
+                cfg,
+                &mut [arg::cu_in(&img), arg::cu_in(&ang), arg::cu_out(&mut sinos)],
+            )
+            .unwrap();
+        let before = launcher.metrics();
+        let summary = measure(settings, || {
+            launcher
+                .launch(
+                    "sinogram_all",
+                    cfg,
+                    &mut [arg::cu_in(&img), arg::cu_in(&ang), arg::cu_out(&mut sinos)],
+                )
+                .unwrap();
+        });
+        let after = launcher.metrics();
+        let instrs = (after.instrs_retired - before.instrs_retired) as f64 / iters;
+        let mips = instrs / summary.mean / 1e6;
+        let fused = after.fused_instrs - before.fused_instrs;
+        let fused_share = if after.instrs_retired > before.instrs_retired {
+            fused as f64 / (after.instrs_retired - before.instrs_retired) as f64
+        } else {
+            0.0
+        };
+        let lane_slots = after.vector_lane_slots - before.vector_lane_slots;
+        let lane_util = if lane_slots > 0 {
+            (after.vector_lane_ops - before.vector_lane_ops) as f64 / lane_slots as f64
+        } else {
+            0.0
+        };
+        let (name, speedup) = match tier {
+            ExecTier::Scalar => {
+                scalar_mean = summary.mean;
+                ("scalar (reference)".to_string(), "1.00x".to_string())
+            }
+            ExecTier::Vector => {
+                vector_mean = summary.mean;
+                (
+                    "vector (fused superinstructions)".to_string(),
+                    fmt_speedup(scalar_mean, summary.mean),
+                )
+            }
+        };
+        table.row(&[
+            name,
+            fmt_summary(&summary),
+            format!("{mips:.1}"),
+            format!("{:.0}%", fused_share * 100.0),
+            format!("{:.0}%", lane_util * 100.0),
+            speedup,
+        ]);
+    }
+    set_default_exec(None);
+
+    println!(
+        "\nVTX execution tiers — sinogram_all {size}x{size}, {angles} blocks of {size} threads"
+    );
+    println!("(HLGPU_EXEC=scalar|vector overrides the default tier)");
+    println!("{}", table.render());
+    if scalar_mean > 0.0 && vector_mean.is_finite() {
+        println!(
+            "vector tier: {} instructions/s over scalar (target: >= 3x on straight-line kernels)",
+            fmt_speedup(scalar_mean, vector_mean)
         );
     }
 }
@@ -242,6 +349,7 @@ fn main() {
     };
 
     emulator_scheduler_section(settings);
+    exec_tier_section(settings);
 
     match ArtifactLibrary::load_default() {
         Ok(lib) => pjrt_overhead_section(settings, &lib),

@@ -7,8 +7,11 @@
 //! Keys are `(kernel, call signature)`; values hold everything the warm
 //! path needs: the compiled function handle, the precomputed transfer
 //! plan, pre-allocated device scratch buffers and the launch
-//! configuration. Read-mostly: `RwLock` + `Arc` values so warm launches
-//! take only a shared lock.
+//! configuration. On the emulator backend the function handle also
+//! caches the pre-decoded, basic-block-lowered and fused instruction
+//! stream (see `crate::emulator::backend_impl::VtxFunction`), so a warm
+//! launch skips decode, lowering and fusion. Read-mostly: `RwLock` +
+//! `Arc` values so warm launches take only a shared lock.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

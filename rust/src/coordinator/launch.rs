@@ -68,6 +68,18 @@ pub struct LaunchMetrics {
     pub exec_wall_ns: u64,
     /// Widest worker schedule observed.
     pub peak_workers: usize,
+    /// Virtual-ISA instructions retired by the VTX execution engine
+    /// (PJRT launches report zero).
+    pub instrs_retired: u64,
+    /// Instructions retired inside fused superinstructions (vector
+    /// tier only).
+    pub fused_instrs: u64,
+    /// Interpreter dispatch events (scalar tier: == instructions).
+    pub dispatches: u64,
+    /// Σ active lanes over vector-tier dispatches.
+    pub vector_lane_ops: u64,
+    /// Σ block width over vector-tier dispatches.
+    pub vector_lane_slots: u64,
 }
 
 impl LaunchMetrics {
@@ -78,6 +90,24 @@ impl LaunchMetrics {
             return 0.0;
         }
         self.worker_busy_ns as f64 / (self.exec_wall_ns as f64 * self.peak_workers as f64)
+    }
+
+    /// Fraction of retired instructions covered by fused
+    /// superinstructions, aggregated over every launch.
+    pub fn fused_share(&self) -> f64 {
+        if self.instrs_retired == 0 {
+            return 0.0;
+        }
+        self.fused_instrs as f64 / self.instrs_retired as f64
+    }
+
+    /// Mean fraction of a block's lanes active per vector dispatch,
+    /// aggregated over every launch (0.0 when only the scalar tier ran).
+    pub fn vector_lane_utilization(&self) -> f64 {
+        if self.vector_lane_slots == 0 {
+            return 0.0;
+        }
+        self.vector_lane_ops as f64 / self.vector_lane_slots as f64
     }
 }
 
@@ -198,6 +228,11 @@ impl Launcher {
         self.metrics.worker_busy_ns += report.busy_ns;
         self.metrics.exec_wall_ns += report.wall_ns;
         self.metrics.peak_workers = self.metrics.peak_workers.max(report.workers);
+        self.metrics.instrs_retired += report.instrs;
+        self.metrics.fused_instrs += report.fused_instrs;
+        self.metrics.dispatches += report.dispatches;
+        self.metrics.vector_lane_ops += report.lane_ops;
+        self.metrics.vector_lane_slots += report.lane_slots;
         if report.workers > 1 {
             self.metrics.parallel_launches += 1;
         }
@@ -527,8 +562,44 @@ mod tests {
         assert_eq!(m.blocks_executed, 4);
         assert!(m.peak_workers >= 1);
         assert!(m.exec_wall_ns > 0);
+        // execution-engine counters flow through, whatever the tier
+        assert!(m.instrs_retired > 0);
+        assert!(m.dispatches > 0);
+        assert!(m.dispatches <= m.instrs_retired);
+        assert!(m.fused_share() >= 0.0 && m.fused_share() <= 1.0);
+        assert!(m.vector_lane_utilization() >= 0.0 && m.vector_lane_utilization() <= 1.0);
         cuda!(l, (1, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
         assert_eq!(l.metrics().blocks_executed, 8, "blocks accumulate per launch");
+    }
+
+    #[test]
+    fn metrics_track_execution_tiers() {
+        use crate::emulator::{set_default_exec, ExecTier};
+        let _g = crate::emulator::sched::exec_override_test_lock();
+        // Vector tier: fused superinstructions retire and lanes occupy
+        // slots; scalar tier: one dispatch per instruction, no fusion.
+        // Both retire the same instruction count.
+        let mk = || {
+            let mut l = emulator_launcher_with_vadd();
+            let a = Tensor::from_f32(&[1.0; 256], &[256]);
+            let b = Tensor::from_f32(&[2.0; 256], &[256]);
+            let mut c = Tensor::zeros_f32(&[256]);
+            cuda!(l, (1, 1), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+                .unwrap();
+            assert!(c.as_f32().iter().all(|&v| v == 3.0));
+            l.metrics()
+        };
+        set_default_exec(Some(ExecTier::Vector));
+        let vector = mk();
+        set_default_exec(Some(ExecTier::Scalar));
+        let scalar = mk();
+        set_default_exec(None);
+        assert_eq!(vector.instrs_retired, scalar.instrs_retired);
+        assert!(vector.fused_instrs > 0, "vadd's index prologue must fuse");
+        assert_eq!(scalar.fused_instrs, 0);
+        assert!(vector.dispatches < scalar.dispatches, "dispatch amortization");
+        assert!(vector.vector_lane_utilization() > 0.0);
+        assert_eq!(scalar.vector_lane_slots, 0);
     }
 
     #[test]

@@ -90,6 +90,22 @@ pub struct LaunchReport {
     pub busy_ns: u64,
     /// Wall-clock time of the grid execution, in nanoseconds.
     pub wall_ns: u64,
+    /// Virtual-ISA instructions retired across all threads.
+    pub instrs: u64,
+    /// Instructions retired inside fused superinstructions (zero on the
+    /// scalar tier, which interprets the unfused stream).
+    pub fused_instrs: u64,
+    /// Interpreter dispatch events. On the scalar tier this equals
+    /// `instrs`; on the vector tier one dispatch covers every active
+    /// lane of a block, so `instrs / dispatches` is the amortization
+    /// factor.
+    pub dispatches: u64,
+    /// Σ active lanes over vector-tier dispatches (zero on the scalar
+    /// tier).
+    pub lane_ops: u64,
+    /// Σ block width over vector-tier dispatches — the lane capacity
+    /// `lane_ops` is measured against.
+    pub lane_slots: u64,
 }
 
 impl LaunchReport {
@@ -100,6 +116,24 @@ impl LaunchReport {
             return 0.0;
         }
         self.busy_ns as f64 / (self.wall_ns as f64 * self.workers as f64)
+    }
+
+    /// Fraction of retired instructions covered by fused
+    /// superinstructions (0.0 on the scalar tier).
+    pub fn fused_share(&self) -> f64 {
+        if self.instrs == 0 {
+            return 0.0;
+        }
+        self.fused_instrs as f64 / self.instrs as f64
+    }
+
+    /// Mean fraction of a block's lanes active per vector dispatch
+    /// (1.0 = no divergence; 0.0 when the vector tier did not run).
+    pub fn lane_utilization(&self) -> f64 {
+        if self.lane_slots == 0 {
+            return 0.0;
+        }
+        self.lane_ops as f64 / self.lane_slots as f64
     }
 }
 
@@ -166,6 +200,24 @@ mod tests {
         assert!(cfg.validate(1024, 48 << 10).is_err());
         let cfg = LaunchConfig::new((4, 4), (16, 16));
         assert!(cfg.validate(1024, 48 << 10).is_ok());
+    }
+
+    #[test]
+    fn report_ratios_guard_division_by_zero() {
+        let r = LaunchReport::default();
+        assert_eq!(r.utilization(), 0.0);
+        assert_eq!(r.fused_share(), 0.0);
+        assert_eq!(r.lane_utilization(), 0.0);
+        let r = LaunchReport {
+            instrs: 100,
+            fused_instrs: 25,
+            dispatches: 10,
+            lane_ops: 80,
+            lane_slots: 100,
+            ..LaunchReport::default()
+        };
+        assert!((r.fused_share() - 0.25).abs() < 1e-12);
+        assert!((r.lane_utilization() - 0.8).abs() < 1e-12);
     }
 
     #[test]

@@ -27,9 +27,18 @@
 //!   retries ([`MemoryPool::trim`] is the explicit version);
 //! * the `HLGPU_POOL` environment knob (`cached` | `none`) selects the
 //!   policy for pools created with [`MemoryPool::new`], so benches can
-//!   A/B the two (`benches/alloc_throughput.rs`).
+//!   A/B the two (`benches/alloc_throughput.rs`);
+//! * `HLGPU_POOL_CAP` bounds the **cached** (parked) bytes with LRU
+//!   eviction — oldest parked blocks are released first when a free
+//!   would push the cache over the bound — so long-lived processes stop
+//!   holding peak-watermark memory until pressure. Plain bytes, with
+//!   optional `k`/`m`/`g` (or `kb`/`mb`/`gb`) suffix; unset means
+//!   unbounded, and an unparseable value warns on stderr instead of
+//!   silently disabling the bound (the pressure-release path still
+//!   empties the cache before reporting `OutOfMemory`). Evictions
+//!   surface as `evicted_bytes` / `evicted_blocks` in [`MemStats`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -102,6 +111,11 @@ pub struct MemStats {
     pub cached_bytes: usize,
     /// Blocks currently parked in the free bins (gauge).
     pub cached_blocks: usize,
+    /// Bytes released by the LRU bound (`HLGPU_POOL_CAP`) evicting the
+    /// oldest parked blocks (distinct from `trimmed_bytes`).
+    pub evicted_bytes: u64,
+    /// Blocks released by the LRU bound.
+    pub evicted_blocks: u64,
 }
 
 impl MemStats {
@@ -127,8 +141,12 @@ fn bin_size(bytes: usize) -> usize {
 
 struct PoolInner {
     buffers: HashMap<u64, Vec<u8>>,
-    /// bin size -> parked buffers (each with `len == capacity == bin`).
-    free_bins: HashMap<usize, Vec<Vec<u8>>>,
+    /// bin size -> parked buffers (each with `len == capacity == bin`),
+    /// FIFO-ordered and stamped with a park sequence number: reuse pops
+    /// the warm back, LRU eviction pops the oldest front.
+    free_bins: HashMap<usize, VecDeque<(u64, Vec<u8>)>>,
+    /// Monotonic park stamp for LRU ordering across bins.
+    park_seq: u64,
     stats: MemStats,
 }
 
@@ -137,12 +155,59 @@ struct PoolInner {
 pub struct MemoryPool {
     capacity: usize,
     policy: PoolPolicy,
+    /// LRU bound on parked (cached) bytes; `None` = unbounded.
+    cache_cap: Option<usize>,
     next: AtomicU64,
     inner: Mutex<PoolInner>,
 }
 
 /// Default simulated device memory: 4 GiB (GTX-Titan-class with headroom).
 pub const DEFAULT_CAPACITY: usize = 4 << 30;
+
+/// Parse an `HLGPU_POOL_CAP` value: plain bytes with an optional
+/// `k`/`m`/`g` (or `kb`/`mb`/`gb`) suffix, powers of 1024.
+fn parse_cache_cap(v: &str) -> Option<usize> {
+    let mut s = v.trim().to_ascii_lowercase();
+    if s.is_empty() {
+        return None;
+    }
+    // accept the natural `kb`/`mb`/`gb` spellings too
+    if s.len() >= 2 && s.ends_with('b') && matches!(s.as_bytes()[s.len() - 2], b'k' | b'm' | b'g')
+    {
+        s.pop();
+    }
+    let (digits, mult): (&str, usize) = match s.as_bytes()[s.len() - 1] {
+        b'k' => (&s[..s.len() - 1], 1 << 10),
+        b'm' => (&s[..s.len() - 1], 1 << 20),
+        b'g' => (&s[..s.len() - 1], 1 << 30),
+        _ => (&s[..], 1),
+    };
+    digits
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .and_then(|n| n.checked_mul(mult))
+}
+
+fn cache_cap_from_env() -> Option<usize> {
+    let v = std::env::var("HLGPU_POOL_CAP").ok()?;
+    match parse_cache_cap(&v) {
+        Some(cap) => Some(cap),
+        None => {
+            // A resource bound that silently disables itself on a typo
+            // would be a trap; warn (once) and leave the cache unbounded.
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "hlgpu: ignoring unparseable HLGPU_POOL_CAP={v:?} \
+                     (expected bytes with optional k/m/g suffix, e.g. 256m); \
+                     cached-memory bound is DISABLED"
+                );
+            });
+            None
+        }
+    }
+}
 
 impl MemoryPool {
     /// Pool with the policy selected by `HLGPU_POOL` (cached by default).
@@ -154,13 +219,22 @@ impl MemoryPool {
         MemoryPool {
             capacity,
             policy,
+            cache_cap: cache_cap_from_env(),
             next: AtomicU64::new(1),
             inner: Mutex::new(PoolInner {
                 buffers: HashMap::new(),
                 free_bins: HashMap::new(),
+                park_seq: 0,
                 stats: MemStats::default(),
             }),
         }
+    }
+
+    /// Override the LRU bound on cached bytes (`None` = unbounded),
+    /// taking precedence over `HLGPU_POOL_CAP`.
+    pub fn with_cache_cap(mut self, cap: Option<usize>) -> Self {
+        self.cache_cap = cap;
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -169,6 +243,11 @@ impl MemoryPool {
 
     pub fn policy(&self) -> PoolPolicy {
         self.policy
+    }
+
+    /// The LRU bound on cached bytes, if any.
+    pub fn cache_cap(&self) -> Option<usize> {
+        self.cache_cap
     }
 
     /// `cuMemAlloc`: allocate `bytes` of device memory. Contents are
@@ -182,7 +261,10 @@ impl MemoryPool {
         // pool's footprint (bin >= bytes), so no capacity check needed.
         if self.policy == PoolPolicy::Cached {
             let bin = bin_size(bytes);
-            if let Some(mut buf) = inner.free_bins.get_mut(&bin).and_then(|v| v.pop()) {
+            // Pop the warm end (most recently parked); the LRU bound
+            // evicts from the cold front.
+            if let Some((_, mut buf)) = inner.free_bins.get_mut(&bin).and_then(|v| v.pop_back())
+            {
                 buf.truncate(bytes); // parked with len == bin >= bytes
                 inner.stats.cached_bytes -= bin;
                 inner.stats.cached_blocks -= 1;
@@ -257,6 +339,15 @@ impl MemoryPool {
                 inner.stats.current_bytes -= buf.len();
                 if self.policy == PoolPolicy::Cached {
                     let bin = bin_size(buf.len());
+                    // A block whose bin alone exceeds the LRU bound can
+                    // never stay parked: release it directly instead of
+                    // paying the park-then-evict round-trip, and keep
+                    // the eviction counters meaningful (they measure
+                    // real cap pressure, not ordinary frees).
+                    let parkable = match self.cache_cap {
+                        Some(cap) => bin <= cap,
+                        None => true,
+                    };
                     // Park only while live + cached stays within capacity
                     // (bin rounding could otherwise overcommit the
                     // device); blocks that do not fit are released.
@@ -269,18 +360,50 @@ impl MemoryPool {
                         Some(f) => f <= self.capacity,
                         None => false,
                     };
-                    if fits {
+                    if parkable && fits {
                         // Capacity was reserved at the bin size, so this
                         // never reallocates.
                         buf.resize(bin, 0u8);
                         inner.stats.cached_bytes += bin;
                         inner.stats.cached_blocks += 1;
-                        inner.free_bins.entry(bin).or_default().push(buf);
+                        let seq = inner.park_seq;
+                        inner.park_seq += 1;
+                        inner.free_bins.entry(bin).or_default().push_back((seq, buf));
+                        if let Some(cap) = self.cache_cap {
+                            Self::evict_lru(inner, cap);
+                        }
                     }
                 }
                 Ok(())
             }
             None => Err(Error::DoubleFree(ptr.0)),
+        }
+    }
+
+    /// Enforce the LRU bound: release the globally oldest parked blocks
+    /// (smallest park stamp across all bin fronts) until the cache fits
+    /// within `cap`.
+    fn evict_lru(inner: &mut PoolInner, cap: usize) {
+        while inner.stats.cached_bytes > cap {
+            let victim = inner
+                .free_bins
+                .iter()
+                .filter_map(|(bin, q)| q.front().map(|(seq, _)| (*seq, *bin)))
+                .min();
+            match victim {
+                Some((_, bin)) => {
+                    inner
+                        .free_bins
+                        .get_mut(&bin)
+                        .and_then(|q| q.pop_front())
+                        .expect("victim bin has a front block");
+                    inner.stats.cached_bytes -= bin;
+                    inner.stats.cached_blocks -= 1;
+                    inner.stats.evicted_bytes += bin as u64;
+                    inner.stats.evicted_blocks += 1;
+                }
+                None => break, // inconsistent gauge; never loop forever
+            }
         }
     }
 
@@ -785,6 +908,129 @@ mod tests {
         assert_eq!(st.current_bytes, 64);
         assert_eq!(st.cached_blocks, 1);
         pool.free(b).unwrap();
+    }
+
+    // ---- LRU bound on cached bytes (HLGPU_POOL_CAP) ------------------
+
+    #[test]
+    fn cache_cap_parsing() {
+        assert_eq!(parse_cache_cap("4096"), Some(4096));
+        assert_eq!(parse_cache_cap(" 16k "), Some(16 << 10));
+        assert_eq!(parse_cache_cap("2M"), Some(2 << 20));
+        assert_eq!(parse_cache_cap("1g"), Some(1 << 30));
+        // natural kb/mb/gb spellings are accepted too
+        assert_eq!(parse_cache_cap("16kb"), Some(16 << 10));
+        assert_eq!(parse_cache_cap("512MB"), Some(512 << 20));
+        assert_eq!(parse_cache_cap("1gb"), Some(1 << 30));
+        assert_eq!(parse_cache_cap("0"), Some(0));
+        assert_eq!(parse_cache_cap(""), None);
+        assert_eq!(parse_cache_cap("lots"), None);
+        assert_eq!(parse_cache_cap("-1"), None);
+        assert_eq!(parse_cache_cap("b"), None);
+    }
+
+    #[test]
+    fn lru_cap_evicts_oldest_parked_blocks_first() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached)
+            .with_cache_cap(Some(256)); // room for two 128-byte bins
+        assert_eq!(pool.cache_cap(), Some(256));
+        let a = pool.alloc(100).unwrap(); // bin 128
+        let b = pool.alloc(100).unwrap();
+        let c = pool.alloc(100).unwrap();
+        pool.free(a).unwrap(); // oldest parked
+        pool.free(b).unwrap();
+        assert_eq!(pool.stats().cached_blocks, 2);
+        assert_eq!(pool.stats().evicted_blocks, 0);
+        pool.free(c).unwrap(); // would make 384 cached: evict a's block
+        let st = pool.stats();
+        assert_eq!(st.cached_blocks, 2);
+        assert_eq!(st.cached_bytes, 256);
+        assert_eq!(st.evicted_blocks, 1);
+        assert_eq!(st.evicted_bytes, 128);
+        // the survivors still serve allocations
+        let d = pool.alloc(100).unwrap();
+        let e = pool.alloc(100).unwrap();
+        assert_eq!(pool.stats().reuse_count, 2);
+        pool.free(d).unwrap();
+        pool.free(e).unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_is_oldest_across_bins() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached)
+            .with_cache_cap(Some(400));
+        let a = pool.alloc(60).unwrap(); // bin 64 (parked first = oldest)
+        let b = pool.alloc(100).unwrap(); // bin 128
+        let c = pool.alloc(200).unwrap(); // bin 256
+        pool.free(a).unwrap();
+        pool.free(b).unwrap();
+        assert_eq!(pool.stats().cached_bytes, 192);
+        // parking c makes 448 cached: the oldest block (a's, in a
+        // *different* bin than c's) must go, leaving 384 <= 400.
+        pool.free(c).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.cached_bytes, 384);
+        assert_eq!(st.cached_blocks, 2);
+        assert_eq!(st.evicted_blocks, 1);
+        assert_eq!(st.evicted_bytes, 64);
+        // the younger 128- and 256-bin blocks survived
+        let d = pool.alloc(100).unwrap();
+        let e = pool.alloc(200).unwrap();
+        assert_eq!(pool.stats().reuse_count, 2);
+        pool.free(d).unwrap();
+        pool.free(e).unwrap();
+    }
+
+    #[test]
+    fn zero_cache_cap_disables_parking() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached)
+            .with_cache_cap(Some(0));
+        for _ in 0..3 {
+            let p = pool.alloc(64).unwrap();
+            pool.free(p).unwrap();
+        }
+        let st = pool.stats();
+        assert_eq!(st.cached_blocks, 0);
+        assert_eq!(st.reuse_count, 0);
+        // never-parkable blocks are released directly, not counted as
+        // LRU evictions (those measure real cap pressure)
+        assert_eq!(st.evicted_blocks, 0);
+        assert_eq!(st.evicted_bytes, 0);
+    }
+
+    #[test]
+    fn block_larger_than_cap_skips_parking_but_smaller_blocks_still_cache() {
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached)
+            .with_cache_cap(Some(128));
+        let big = pool.alloc(200).unwrap(); // bin 256 > cap: never parks
+        let small = pool.alloc(100).unwrap(); // bin 128 == cap: parks
+        pool.free(big).unwrap();
+        pool.free(small).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.cached_blocks, 1);
+        assert_eq!(st.cached_bytes, 128);
+        assert_eq!(st.evicted_blocks, 0);
+        let again = pool.alloc(100).unwrap();
+        assert_eq!(pool.stats().reuse_count, 1);
+        pool.free(again).unwrap();
+    }
+
+    #[test]
+    fn reuse_prefers_most_recently_parked_block() {
+        // LIFO reuse keeps the warm end hot: write a sentinel into a
+        // block, free it, free another block of the same bin, and check
+        // the *second* (warmest) storage is handed back first.
+        let pool = MemoryPool::with_policy(1 << 20, PoolPolicy::Cached);
+        let a = pool.alloc(32).unwrap();
+        let b = pool.alloc(32).unwrap();
+        pool.copy_h2d(a, &[1u8; 32]).unwrap();
+        pool.copy_h2d(b, &[2u8; 32]).unwrap();
+        pool.free(a).unwrap();
+        pool.free(b).unwrap();
+        let c = pool.alloc(32).unwrap();
+        // recycled storage keeps stale contents: must be b's
+        assert_eq!(pool.read_raw(c).unwrap(), vec![2u8; 32]);
+        pool.free(c).unwrap();
     }
 
     #[test]

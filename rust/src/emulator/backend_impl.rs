@@ -6,7 +6,10 @@
 //! keyed by the launch's scalar arguments: the coordinator loads one
 //! function handle per `Specialized` entry (whose scalars are fixed per
 //! signature), so warm `cuda!` launches reuse the pre-decoded,
-//! register-resolved instruction stream and pay no binding work at all.
+//! register-resolved instruction stream — which also carries its
+//! basic-block, superinstruction-fused lowering
+//! ([`DecodedKernel::lowered`]) — and pay neither binding nor lowering
+//! work at all.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -84,10 +87,11 @@ impl LoadedModule for VtxModule {
 
 pub struct VtxFunction {
     kernel: Arc<Kernel>,
-    /// One-entry decode cache: (scalar binding, decoded form). The
-    /// coordinator's warm path always hits it (fixed scalars per
+    /// One-entry decode cache: (scalar binding, decoded + lowered form).
+    /// The coordinator's warm path always hits it (fixed scalars per
     /// specialization); manual driver users hit it as long as their
-    /// scalar arguments are stable.
+    /// scalar arguments are stable. Hitting it skips decode *and* the
+    /// basic-block/fusion lowering of the vector execution tier.
     decoded: Mutex<Option<(Vec<ScalarArg>, Arc<DecodedKernel>)>>,
 }
 

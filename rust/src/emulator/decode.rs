@@ -14,9 +14,18 @@
 //! scalars are fixed per signature), so warm `cuda!` launches skip the
 //! decode entirely — the emulator-side analog of the paper's "no
 //! steady-state overhead" claim.
+//!
+//! Decoding also runs the next pipeline stage eagerly: the stream is
+//! [lowered](crate::emulator::lower) into its basic-block form with
+//! fused superinstructions and the result is carried in
+//! [`DecodedKernel::lowered`], so the vector execution tier pays no
+//! lowering cost on warm launches either.
+
+use std::sync::Arc;
 
 use crate::emulator::interp::ScalarArg;
 use crate::emulator::isa::{Instr, Kernel, ParamKind};
+use crate::emulator::lower::{lower, LoweredKernel};
 use crate::error::{Error, Result};
 
 /// A kernel with all parameter references resolved for one scalar
@@ -34,8 +43,13 @@ pub struct DecodedKernel {
     /// parameter, in declaration order).
     pub nbufs: usize,
     /// Rewritten instruction stream: `LdG`/`StG` carry buffer slots in
-    /// their `param` field, `LdParam*` no longer occur.
+    /// their `param` field, `LdParam*` no longer occur. The scalar
+    /// execution tier interprets this directly.
     pub code: Vec<Instr>,
+    /// Basic-block lowering of `code` with fused superinstructions —
+    /// the vector execution tier's program, built once here and cached
+    /// with the decoded form.
+    pub lowered: Arc<LoweredKernel>,
 }
 
 /// Resolve `kernel` against the launch's scalar arguments. The kernel must
@@ -77,7 +91,7 @@ pub fn decode(kernel: &Kernel, scalars: &[ScalarArg]) -> Result<DecodedKernel> {
         )));
     }
 
-    let code = kernel
+    let code: Vec<Instr> = kernel
         .code
         .iter()
         .map(|ins| match *ins {
@@ -109,6 +123,7 @@ pub fn decode(kernel: &Kernel, scalars: &[ScalarArg]) -> Result<DecodedKernel> {
         })
         .collect();
 
+    let lowered = Arc::new(lower(&code));
     Ok(DecodedKernel {
         name: kernel.name.clone(),
         fregs: kernel.fregs,
@@ -116,6 +131,7 @@ pub fn decode(kernel: &Kernel, scalars: &[ScalarArg]) -> Result<DecodedKernel> {
         shared_f32: kernel.shared_f32,
         nbufs,
         code,
+        lowered,
     })
 }
 

@@ -24,15 +24,32 @@
 //! therefore traps derived from them) may differ from the sequential
 //! interleaving.
 //!
-//! Within a block, threads run co-operatively — each thread executes
-//! until it hits a barrier or exits, then the next thread runs. A barrier
-//! releases when every live thread has arrived; divergent barriers (some
-//! threads exited while others wait) trap, as on real hardware.
+//! Within a block, execution is **tiered** (`HLGPU_EXEC`, or
+//! [`crate::emulator::sched::set_default_exec`]):
+//!
+//! * the **scalar** tier (this module) is the reference semantics: each
+//!   thread executes until it hits a barrier or exits, then the next
+//!   thread runs — one dispatch per instruction per thread;
+//! * the **vector** tier ([`crate::emulator::vector`], the default)
+//!   executes the lowered basic-block form one operation at a time
+//!   across all active threads of the block with predication masks for
+//!   divergence, amortizing dispatch over `blockDim` threads.
+//!
+//! Both tiers produce bitwise-identical results and identical trap
+//! coordinates for race-free kernels (threads that communicate through
+//! shared or global memory within a barrier segment are racy on real
+//! hardware too, and get unordered behavior). A barrier releases when
+//! every live thread has arrived; divergent barriers (some threads
+//! exited while others wait) trap, as on real hardware, reporting the
+//! coordinates of the lowest-indexed waiting thread.
 //!
 //! Before any block runs, the instruction stream is pre-decoded once per
 //! (kernel, scalar binding) by [`crate::emulator::decode`]: scalar
 //! parameters become immediates and pointer parameters become dense
 //! buffer slots, so the interpreter hot loop performs no binding lookups.
+//! The decode step also lowers the stream into its basic-block, fused
+//! form ([`crate::emulator::lower`]) for the vector tier, cached with
+//! the decoded kernel.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -41,7 +58,9 @@ use std::time::Instant;
 use crate::driver::launch::LaunchReport;
 use crate::emulator::decode::{decode, DecodedKernel};
 use crate::emulator::isa::{CmpOp, FOp, IOp, Instr, Kernel, Special, UnFOp};
-use crate::emulator::sched::{default_workers, ArriveGuard, Latch, WorkerPool};
+use crate::emulator::sched::{
+    default_exec, default_workers, ArriveGuard, ExecTier, Latch, WorkerPool,
+};
 use crate::error::{Error, Result};
 
 /// Per-launch resource limits.
@@ -87,19 +106,31 @@ pub fn execute(launch: Launch<'_>) -> Result<()> {
 /// single-block grid) runs the sequential schedule; larger widths
 /// dispatch blocks across the global worker pool.
 pub fn execute_with(launch: Launch<'_>, workers: usize) -> Result<LaunchReport> {
+    execute_with_tier(launch, workers, default_exec())
+}
+
+/// Execute a launch with an explicit schedule width and execution tier
+/// (tests and benches A/B the tiers through this).
+pub fn execute_with_tier(
+    launch: Launch<'_>,
+    workers: usize,
+    tier: ExecTier,
+) -> Result<LaunchReport> {
     let decoded = Arc::new(decode(launch.kernel, &launch.scalars)?);
-    execute_decoded(
+    execute_decoded_tier(
         &decoded,
         launch.grid,
         launch.block,
         launch.buffers,
         &launch.limits,
         workers,
+        tier,
     )
 }
 
 /// Execute a pre-decoded kernel (the cached warm path: the coordinator's
-/// `Specialized` entry holds the decoded form and skips `decode`).
+/// `Specialized` entry holds the decoded + lowered form and skips both
+/// `decode` and `lower`), on the default execution tier.
 pub fn execute_decoded(
     kernel: &Arc<DecodedKernel>,
     grid: (u32, u32),
@@ -107,6 +138,20 @@ pub fn execute_decoded(
     buffers: Vec<&mut [f32]>,
     limits: &Limits,
     workers: usize,
+) -> Result<LaunchReport> {
+    execute_decoded_tier(kernel, grid, block, buffers, limits, workers, default_exec())
+}
+
+/// Execute a pre-decoded kernel on an explicit execution tier.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_decoded_tier(
+    kernel: &Arc<DecodedKernel>,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buffers: Vec<&mut [f32]>,
+    limits: &Limits,
+    workers: usize,
+    tier: ExecTier,
 ) -> Result<LaunchReport> {
     if buffers.len() != kernel.nbufs {
         return Err(Error::InvalidLaunch(format!(
@@ -118,9 +163,9 @@ pub fn execute_decoded(
     }
     let nblocks = grid.0 as u64 * grid.1 as u64;
     if workers > 1 && nblocks > 1 {
-        run_parallel(kernel, grid, block, buffers, limits, workers)
+        run_parallel(kernel, grid, block, buffers, limits, workers, tier)
     } else {
-        run_sequential(kernel, grid, block, buffers, limits)
+        run_sequential(kernel, grid, block, buffers, limits, tier)
     }
 }
 
@@ -128,10 +173,10 @@ pub fn execute_decoded(
 // Global memory views
 // ------------------------------------------------------------------------
 
-/// Global-memory access used by the block interpreter. Monomorphized per
-/// schedule: plain slices for the sequential path, shared atomic cells
-/// for the parallel path.
-trait GlobalMem {
+/// Global-memory access used by the block interpreters (scalar and
+/// vector tiers). Monomorphized per schedule: plain slices for the
+/// sequential path, shared atomic cells for the parallel path.
+pub(crate) trait GlobalMem {
     fn len(&self, slot: usize) -> usize;
     fn load(&self, slot: usize, idx: usize) -> f32;
     fn store(&mut self, slot: usize, idx: usize, v: f32);
@@ -185,6 +230,101 @@ impl GlobalMem for AtomicMem<'_> {
 // Block interpreter (shared by both schedules)
 // ------------------------------------------------------------------------
 
+/// Execution statistics of one block run, aggregated into the launch's
+/// [`LaunchReport`]. On the scalar tier only `instrs`/`dispatches` are
+/// populated (one dispatch per instruction); the vector tier also
+/// reports fusion and lane-occupancy counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct BlockStats {
+    /// ISA instructions retired across all threads of the block.
+    pub instrs: u64,
+    /// Instructions retired inside fused superinstructions.
+    pub fused_instrs: u64,
+    /// Interpreter dispatch events.
+    pub dispatches: u64,
+    /// Σ active lanes over vector dispatches.
+    pub lane_ops: u64,
+    /// Σ block width over vector dispatches (lane capacity).
+    pub lane_slots: u64,
+}
+
+impl BlockStats {
+    pub(crate) fn merge(&mut self, o: &BlockStats) {
+        self.instrs += o.instrs;
+        self.fused_instrs += o.fused_instrs;
+        self.dispatches += o.dispatches;
+        self.lane_ops += o.lane_ops;
+        self.lane_slots += o.lane_slots;
+    }
+}
+
+/// Apply a binary f32 op — shared between tiers so arithmetic semantics
+/// are single-sourced (bitwise identity by construction).
+#[inline]
+pub(crate) fn binf_apply(op: FOp, x: f32, y: f32) -> f32 {
+    match op {
+        FOp::Add => x + y,
+        FOp::Sub => x - y,
+        FOp::Mul => x * y,
+        FOp::Div => x / y,
+        FOp::Min => x.min(y),
+        FOp::Max => x.max(y),
+    }
+}
+
+/// Apply a unary f32 op (shared between tiers).
+#[inline]
+pub(crate) fn unf_apply(op: UnFOp, x: f32) -> f32 {
+    match op {
+        UnFOp::Neg => -x,
+        UnFOp::Abs => x.abs(),
+        UnFOp::Sqrt => x.sqrt(),
+        UnFOp::Sin => x.sin(),
+        UnFOp::Cos => x.cos(),
+        UnFOp::Floor => x.floor(),
+    }
+}
+
+// Trap-reason constructors, shared between tiers: cross-tier trap
+// parity asserts exact string equality, so the wording must be
+// single-sourced.
+
+pub(crate) const TRAP_DIV_ZERO: &str = "integer division by zero";
+pub(crate) const TRAP_REM_ZERO: &str = "integer remainder by zero";
+
+pub(crate) fn trap_budget(limit: u64) -> String {
+    format!("step budget exhausted ({limit} instructions)")
+}
+
+pub(crate) fn trap_oob_global(kind: &str, i: i64, len: usize, slot: usize) -> String {
+    format!("global {kind} OOB: index {i} in buffer of {len} elements (buffer {slot})")
+}
+
+pub(crate) fn trap_oob_shared(kind: &str, i: i64, len: usize) -> String {
+    format!("shared {kind} OOB: index {i} of {len}")
+}
+
+/// Interpret one block on the selected tier. Both tiers are
+/// observationally identical for race-free kernels, so traps surface
+/// with identical coordinates and reasons under every (schedule, tier)
+/// combination.
+fn run_block_tier<M: GlobalMem>(
+    k: &DecodedKernel,
+    tier: ExecTier,
+    grid: (u32, u32),
+    block: (u32, u32),
+    block_id: (u32, u32),
+    mem: &mut M,
+    limits: &Limits,
+) -> Result<BlockStats> {
+    match tier {
+        ExecTier::Scalar => run_block(k, grid, block, block_id, mem, limits),
+        ExecTier::Vector => {
+            crate::emulator::vector::run_block_vector(k, grid, block, block_id, mem, limits)
+        }
+    }
+}
+
 #[derive(Clone, Copy, PartialEq)]
 enum ThreadState {
     Running,
@@ -200,9 +340,10 @@ struct Thread {
     steps: u64,
 }
 
-/// Interpret one thread block to completion (or trap). Identical for the
-/// sequential and parallel schedules, so traps surface with identical
-/// coordinates and reasons under both.
+/// Interpret one thread block to completion (or trap) on the scalar
+/// reference tier: one dispatch per instruction per thread. Identical
+/// for the sequential and parallel schedules, so traps surface with
+/// identical coordinates and reasons under both.
 fn run_block<M: GlobalMem>(
     k: &DecodedKernel,
     grid: (u32, u32),
@@ -210,7 +351,7 @@ fn run_block<M: GlobalMem>(
     block_id: (u32, u32),
     mem: &mut M,
     limits: &Limits,
-) -> Result<()> {
+) -> Result<BlockStats> {
     let (gx, gy) = grid;
     let (bx, by) = block;
     let (bx_i, by_i) = block_id;
@@ -247,13 +388,7 @@ fn run_block<M: GlobalMem>(
             // Run this thread until barrier/exit/trap.
             loop {
                 if th.steps >= limits.steps_per_thread {
-                    return Err(trap(
-                        (tx, ty),
-                        format!(
-                            "step budget exhausted ({} instructions)",
-                            limits.steps_per_thread
-                        ),
-                    ));
+                    return Err(trap((tx, ty), trap_budget(limits.steps_per_thread)));
                 }
                 th.steps += 1;
                 let ins = k.code[th.pc];
@@ -265,14 +400,7 @@ fn run_block<M: GlobalMem>(
                     Instr::MovI(d, s) => th.i[d as usize] = th.i[s as usize],
                     Instr::BinF(op, d, a, b) => {
                         let (x, y) = (th.f[a as usize], th.f[b as usize]);
-                        th.f[d as usize] = match op {
-                            FOp::Add => x + y,
-                            FOp::Sub => x - y,
-                            FOp::Mul => x * y,
-                            FOp::Div => x / y,
-                            FOp::Min => x.min(y),
-                            FOp::Max => x.max(y),
-                        };
+                        th.f[d as usize] = binf_apply(op, x, y);
                     }
                     Instr::BinI(op, d, a, b) => {
                         let (x, y) = (th.i[a as usize], th.i[b as usize]);
@@ -282,34 +410,21 @@ fn run_block<M: GlobalMem>(
                             IOp::Mul => x.wrapping_mul(y),
                             IOp::Div => {
                                 if y == 0 {
-                                    return Err(trap(
-                                        (tx, ty),
-                                        "integer division by zero".into(),
-                                    ));
+                                    return Err(trap((tx, ty), TRAP_DIV_ZERO.to_string()));
                                 }
-                                x / y
+                                // wrapping: i64::MIN / -1 must not panic
+                                x.wrapping_div(y)
                             }
                             IOp::Rem => {
                                 if y == 0 {
-                                    return Err(trap(
-                                        (tx, ty),
-                                        "integer remainder by zero".into(),
-                                    ));
+                                    return Err(trap((tx, ty), TRAP_REM_ZERO.to_string()));
                                 }
-                                x % y
+                                x.wrapping_rem(y)
                             }
                         };
                     }
                     Instr::UnF(op, d, a) => {
-                        let x = th.f[a as usize];
-                        th.f[d as usize] = match op {
-                            UnFOp::Neg => -x,
-                            UnFOp::Abs => x.abs(),
-                            UnFOp::Sqrt => x.sqrt(),
-                            UnFOp::Sin => x.sin(),
-                            UnFOp::Cos => x.cos(),
-                            UnFOp::Floor => x.floor(),
-                        };
+                        th.f[d as usize] = unf_apply(op, th.f[a as usize]);
                     }
                     Instr::CmpF(op, d, a, b) => {
                         let (x, y) = (th.f[a as usize], th.f[b as usize]);
@@ -346,12 +461,7 @@ fn run_block<M: GlobalMem>(
                         let i = th.i[idx as usize];
                         let len = mem.len(slot);
                         if i < 0 || i as usize >= len {
-                            return Err(trap(
-                                (tx, ty),
-                                format!(
-                                    "global load OOB: index {i} in buffer of {len} elements (buffer {slot})"
-                                ),
-                            ));
+                            return Err(trap((tx, ty), trap_oob_global("load", i, len, slot)));
                         }
                         th.f[dst as usize] = mem.load(slot, i as usize);
                     }
@@ -363,9 +473,7 @@ fn run_block<M: GlobalMem>(
                         if i < 0 || i as usize >= len {
                             return Err(trap(
                                 (tx, ty),
-                                format!(
-                                    "global store OOB: index {i} in buffer of {len} elements (buffer {slot})"
-                                ),
+                                trap_oob_global("store", i, len, slot),
                             ));
                         }
                         mem.store(slot, i as usize, v);
@@ -375,7 +483,7 @@ fn run_block<M: GlobalMem>(
                         if i < 0 || i as usize >= shared.len() {
                             return Err(trap(
                                 (tx, ty),
-                                format!("shared load OOB: index {i} of {}", shared.len()),
+                                trap_oob_shared("load", i, shared.len()),
                             ));
                         }
                         th.f[dst as usize] = shared[i as usize];
@@ -385,7 +493,7 @@ fn run_block<M: GlobalMem>(
                         if i < 0 || i as usize >= shared.len() {
                             return Err(trap(
                                 (tx, ty),
-                                format!("shared store OOB: index {i} of {}", shared.len()),
+                                trap_oob_shared("store", i, shared.len()),
                             ));
                         }
                         shared[i as usize] = th.f[src as usize];
@@ -426,12 +534,20 @@ fn run_block<M: GlobalMem>(
             .filter(|t| t.state == ThreadState::AtBarrier)
             .count();
         if at_barrier == 0 {
-            return Ok(()); // all done
+            // All done: one dispatch per retired instruction on this tier.
+            let instrs: u64 = threads.iter().map(|t| t.steps).sum();
+            return Ok(BlockStats { instrs, dispatches: instrs, ..BlockStats::default() });
         }
         let done = threads.iter().filter(|t| t.state == ThreadState::Done).count();
         if done > 0 {
+            // Report the coordinates of an actual waiting thread (the
+            // lowest-indexed one, matching the vector tier).
+            let waiter = threads
+                .iter()
+                .position(|t| t.state == ThreadState::AtBarrier)
+                .unwrap_or(0) as u32;
             return Err(trap(
-                (0, 0),
+                (waiter % bx, waiter / bx),
                 format!("barrier divergence: {at_barrier} threads waiting, {done} exited"),
             ));
         }
@@ -457,13 +573,16 @@ fn run_sequential(
     block: (u32, u32),
     buffers: Vec<&mut [f32]>,
     limits: &Limits,
+    tier: ExecTier,
 ) -> Result<LaunchReport> {
     let t0 = Instant::now();
     let (gx, gy) = grid;
     let mut mem = SliceMem { bufs: buffers };
+    let mut agg = BlockStats::default();
     for by_i in 0..gy {
         for bx_i in 0..gx {
-            run_block(k, grid, block, (bx_i, by_i), &mut mem, limits)?;
+            let st = run_block_tier(k, tier, grid, block, (bx_i, by_i), &mut mem, limits)?;
+            agg.merge(&st);
         }
     }
     let wall = t0.elapsed().as_nanos() as u64;
@@ -472,6 +591,11 @@ fn run_sequential(
         workers: 1,
         busy_ns: wall,
         wall_ns: wall,
+        instrs: agg.instrs,
+        fused_instrs: agg.fused_instrs,
+        dispatches: agg.dispatches,
+        lane_ops: agg.lane_ops,
+        lane_slots: agg.lane_slots,
     })
 }
 
@@ -482,6 +606,7 @@ struct ParShared {
     grid: (u32, u32),
     block: (u32, u32),
     limits: Limits,
+    tier: ExecTier,
     /// Next unclaimed linear block index. Claimed strictly in order, so
     /// when a trap cancels the launch every block below the trapping one
     /// has already been claimed — guaranteeing the minimum-index trap is
@@ -490,6 +615,11 @@ struct ParShared {
     cancel: AtomicBool,
     traps: Mutex<Vec<(u64, Error)>>,
     busy_ns: AtomicU64,
+    instrs: AtomicU64,
+    fused_instrs: AtomicU64,
+    dispatches: AtomicU64,
+    lane_ops: AtomicU64,
+    lane_slots: AtomicU64,
     latch: Latch,
 }
 
@@ -500,6 +630,7 @@ impl ParShared {
         let gx = self.grid.0 as u64;
         let nblocks = gx * self.grid.1 as u64;
         let mut mem = AtomicMem { bufs: &self.bufs };
+        let mut agg = BlockStats::default();
         loop {
             if self.cancel.load(Ordering::Relaxed) {
                 break;
@@ -509,18 +640,27 @@ impl ParShared {
                 break;
             }
             let block_id = ((lin % gx) as u32, (lin / gx) as u32);
-            if let Err(e) = run_block(
+            match run_block_tier(
                 &self.kernel,
+                self.tier,
                 self.grid,
                 self.block,
                 block_id,
                 &mut mem,
                 &self.limits,
             ) {
-                self.traps.lock().unwrap().push((lin, e));
-                self.cancel.store(true, Ordering::Relaxed);
+                Ok(st) => agg.merge(&st),
+                Err(e) => {
+                    self.traps.lock().unwrap().push((lin, e));
+                    self.cancel.store(true, Ordering::Relaxed);
+                }
             }
         }
+        self.instrs.fetch_add(agg.instrs, Ordering::Relaxed);
+        self.fused_instrs.fetch_add(agg.fused_instrs, Ordering::Relaxed);
+        self.dispatches.fetch_add(agg.dispatches, Ordering::Relaxed);
+        self.lane_ops.fetch_add(agg.lane_ops, Ordering::Relaxed);
+        self.lane_slots.fetch_add(agg.lane_slots, Ordering::Relaxed);
         self.busy_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
@@ -537,6 +677,7 @@ impl ParShared {
 /// serial work, acceptable because the interpreter's per-element cost
 /// dwarfs a memcpy for every kernel in the repo. Revisit with an
 /// in-place atomic view if a memory-bound workload ever appears.
+#[allow(clippy::too_many_arguments)]
 fn run_parallel(
     kernel: &Arc<DecodedKernel>,
     grid: (u32, u32),
@@ -544,6 +685,7 @@ fn run_parallel(
     mut buffers: Vec<&mut [f32]>,
     limits: &Limits,
     workers: usize,
+    tier: ExecTier,
 ) -> Result<LaunchReport> {
     let nblocks = grid.0 as u64 * grid.1 as u64;
     let pool = WorkerPool::global();
@@ -561,10 +703,16 @@ fn run_parallel(
         grid,
         block,
         limits: *limits,
+        tier,
         next: AtomicU64::new(0),
         cancel: AtomicBool::new(false),
         traps: Mutex::new(Vec::new()),
         busy_ns: AtomicU64::new(0),
+        instrs: AtomicU64::new(0),
+        fused_instrs: AtomicU64::new(0),
+        dispatches: AtomicU64::new(0),
+        lane_ops: AtomicU64::new(0),
+        lane_slots: AtomicU64::new(0),
         latch: Latch::new(njobs),
     });
 
@@ -600,10 +748,15 @@ fn run_parallel(
         workers: njobs,
         busy_ns: shared.busy_ns.load(Ordering::Relaxed),
         wall_ns: t0.elapsed().as_nanos() as u64,
+        instrs: shared.instrs.load(Ordering::Relaxed),
+        fused_instrs: shared.fused_instrs.load(Ordering::Relaxed),
+        dispatches: shared.dispatches.load(Ordering::Relaxed),
+        lane_ops: shared.lane_ops.load(Ordering::Relaxed),
+        lane_slots: shared.lane_slots.load(Ordering::Relaxed),
     })
 }
 
-fn cmpf(op: CmpOp, x: f32, y: f32) -> bool {
+pub(crate) fn cmpf(op: CmpOp, x: f32, y: f32) -> bool {
     match op {
         CmpOp::Lt => x < y,
         CmpOp::Le => x <= y,
@@ -614,7 +767,7 @@ fn cmpf(op: CmpOp, x: f32, y: f32) -> bool {
     }
 }
 
-fn cmpi(op: CmpOp, x: i64, y: i64) -> bool {
+pub(crate) fn cmpi(op: CmpOp, x: i64, y: i64) -> bool {
     match op {
         CmpOp::Lt => x < y,
         CmpOp::Le => x <= y,

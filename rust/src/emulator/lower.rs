@@ -1,0 +1,557 @@
+//! Basic-block lowering and superinstruction fusion: the middle stage of
+//! the emulator's tiered execution pipeline
+//! (`decode` → **`lower` → fuse** → `interp`/`vector`).
+//!
+//! The paper's thesis is that code generation — not interpretation of
+//! high-level abstractions — removes run-time overhead. The emulator
+//! cannot JIT to native code, but it can do the next-best thing: rewrite
+//! the decoded instruction stream **once** per specialization into a
+//! form with radically cheaper steady-state dispatch:
+//!
+//! * the flat stream becomes a **basic-block CFG** — branch targets are
+//!   resolved to block ids and every block body is a straight-line run,
+//!   so the vector tier schedules whole blocks instead of single
+//!   instructions and pays one reconvergence decision per block;
+//! * a **fusion pass** collapses common dataflow chains into
+//!   superinstructions (see [`VOp`]), so one dispatch retires several
+//!   ISA instructions.
+//!
+//! # Fusion invariants
+//!
+//! Every superinstruction **replays the exact original instruction
+//! sequence** per thread — same operand registers, same operand order,
+//! same intermediate register writes. Nothing is dead-code-eliminated:
+//! an intermediate register may be read by a later (even
+//! cross-block) instruction, so it is always written. This makes fusion
+//! bitwise-transparent by construction: float operand order is
+//! preserved (f32 ops are not reassociated or commuted), integer ops
+//! keep their wrapping semantics, and the only elided work is the
+//! *dispatch* itself — plus one bounds check in [`VOp::RmwG`], which is
+//! sound because the load and store use the same buffer slot and the
+//! same index register, and the intervening float op cannot modify an
+//! integer register or a buffer length.
+//!
+//! Step accounting is preserved through [`VOp::weight`]: a fused op
+//! charges as many steps as the instructions it replays, so the
+//! step-budget trap fires with the same coordinates and reason under
+//! every tier.
+
+use crate::emulator::isa::{FOp, IOp, Instr, Pc, Reg, Special};
+
+/// One vector-tier operation: either a single non-control ISA
+/// instruction, or a fused superinstruction replaying a short dataflow
+/// chain. Control flow never appears here — it lives in [`Term`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VOp {
+    /// Unfused ISA instruction (never a branch, `Bar` or `Ret`).
+    Base(Instr),
+    /// `BinF(Mul, dm, ma, mb); BinF(Add, dd, aa, ab)` where the product
+    /// feeds the add — the affine chains of the sinogram kernels.
+    MulAddF { dm: Reg, ma: Reg, mb: Reg, dd: Reg, aa: Reg, ab: Reg },
+    /// `BinI(Mul, dm, ma, mb); BinI(Add, dd, aa, ab)` where the product
+    /// feeds the add — index arithmetic (`row*stride + col`).
+    MulAddI { dm: Reg, ma: Reg, mb: Reg, dd: Reg, aa: Reg, ab: Reg },
+    /// `CvtIF(df, si); BinF(Mul, dm, ma, mb); BinF(Add, dd, aa, ab)`
+    /// where the converted value feeds the multiply and the product
+    /// feeds the add — the fused affine of an integer index.
+    CvtMulAddF {
+        df: Reg,
+        si: Reg,
+        dm: Reg,
+        ma: Reg,
+        mb: Reg,
+        dd: Reg,
+        aa: Reg,
+        ab: Reg,
+    },
+    /// The canonical global-thread-id prologue:
+    /// `Spec(tid, ThreadIdX); Spec(bid, BlockIdX); Spec(bdim, BlockDimX);
+    /// BinI(Mul, mul.0, mul.1, mul.2); BinI(Add, add.0, add.1, add.2)`
+    /// where the multiply combines `bid`/`bdim` and the add combines the
+    /// product with `tid`.
+    GlobalIdX {
+        tid: Reg,
+        bid: Reg,
+        bdim: Reg,
+        mul: (Reg, Reg, Reg),
+        add: (Reg, Reg, Reg),
+    },
+    /// `LdG {ld, slot, idx}; BinF(op, st, sa, sb); StG {slot, idx, st}`
+    /// — a global read-modify-write on one element, executed with a
+    /// single bounds check (sound: same slot, same index register, and
+    /// the float op cannot change either).
+    RmwG {
+        slot: u8,
+        idx: Reg,
+        ld: Reg,
+        op: FOp,
+        sa: Reg,
+        sb: Reg,
+        st: Reg,
+    },
+}
+
+impl VOp {
+    /// ISA instructions this op retires (= steps it charges against the
+    /// per-thread budget, preserving step-budget trap parity).
+    pub fn weight(&self) -> u64 {
+        match self {
+            VOp::Base(_) => 1,
+            VOp::MulAddF { .. } | VOp::MulAddI { .. } => 2,
+            VOp::CvtMulAddF { .. } | VOp::RmwG { .. } => 3,
+            VOp::GlobalIdX { .. } => 5,
+        }
+    }
+
+    /// True for superinstructions (anything but `Base`).
+    pub fn is_fused(&self) -> bool {
+        !matches!(self, VOp::Base(_))
+    }
+}
+
+/// Basic-block terminator. Step weights mirror the original stream: an
+/// explicit `Bra`/`BraIf`/`Bar`/`Ret` costs one step; the synthetic jump
+/// of a fallthrough into a branch target costs zero.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Term {
+    /// Unconditional continuation. `steps` is 1 for an explicit `Bra`
+    /// and 0 for a synthetic fallthrough edge.
+    Jump { target: u32, steps: u8 },
+    /// Conditional: `pred != 0` goes to `nz`, else to `z` (covers both
+    /// `BraIf` and `BraIfZ`). Always one step.
+    Branch { pred: Reg, nz: u32, z: u32 },
+    /// Block-wide barrier; released threads continue at `next`.
+    Bar { next: u32 },
+    /// Thread exit.
+    Ret,
+}
+
+/// One basic block: a straight-line run of (possibly fused) operations
+/// and a terminator. Blocks are numbered in original-pc order, so the
+/// lowest block id among divergent threads is also the lowest original
+/// pc — the vector tier's reconvergence heuristic relies on this.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Original pc of the block's first instruction (diagnostics).
+    pub start_pc: Pc,
+    pub ops: Vec<VOp>,
+    pub term: Term,
+}
+
+/// A lowered kernel: the basic-block CFG with fused superinstructions.
+/// Built once per (kernel, scalar binding) by [`lower`] and cached on
+/// [`crate::emulator::decode::DecodedKernel`], so warm launches skip
+/// lowering entirely.
+#[derive(Clone, Debug)]
+pub struct LoweredKernel {
+    pub blocks: Vec<Block>,
+    /// ISA instructions lowered (== the decoded stream's length).
+    pub instr_count: usize,
+    /// ISA instructions covered by superinstructions (static count).
+    pub fused_instrs: usize,
+    /// Superinstructions emitted (static count).
+    pub fused_ops: usize,
+}
+
+/// Lower a decoded instruction stream into its basic-block form and run
+/// the fusion pass. The stream must come from a validated kernel (every
+/// branch target in range, control flow never in final position except
+/// `Ret`/`Bra`) — crate-private because only
+/// [`crate::emulator::decode::decode`], which works on validated
+/// kernels, may call it.
+pub(crate) fn lower(code: &[Instr]) -> LoweredKernel {
+    let n = code.len();
+    if n == 0 {
+        // Validation rejects empty kernels; lowering one is still total.
+        return LoweredKernel { blocks: Vec::new(), instr_count: 0, fused_instrs: 0, fused_ops: 0 };
+    }
+
+    // 1. Leaders: pc 0, every branch target, and every pc following a
+    //    control instruction (branch, barrier, return).
+    let mut is_leader = vec![false; n];
+    is_leader[0] = true;
+    for (pc, ins) in code.iter().enumerate() {
+        match *ins {
+            Instr::Bra(t) => {
+                is_leader[t as usize] = true;
+                if pc + 1 < n {
+                    is_leader[pc + 1] = true;
+                }
+            }
+            Instr::BraIf(_, t) | Instr::BraIfZ(_, t) => {
+                is_leader[t as usize] = true;
+                is_leader[pc + 1] = true;
+            }
+            Instr::Ret | Instr::Bar => {
+                if pc + 1 < n {
+                    is_leader[pc + 1] = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // 2. pc -> block id (blocks numbered in pc order).
+    let mut block_of = vec![0u32; n];
+    let mut nblocks = 0u32;
+    for pc in 0..n {
+        if is_leader[pc] {
+            nblocks += 1;
+        }
+        block_of[pc] = nblocks - 1;
+    }
+
+    // 3. Split, resolve targets to block ids, fuse block bodies.
+    let mut blocks = Vec::with_capacity(nblocks as usize);
+    let mut fused_instrs = 0usize;
+    let mut fused_ops = 0usize;
+    let mut pc = 0usize;
+    while pc < n {
+        let start = pc;
+        let mut body: Vec<Instr> = Vec::new();
+        let term = loop {
+            match code[pc] {
+                Instr::Bra(t) => {
+                    pc += 1;
+                    break Term::Jump { target: block_of[t as usize], steps: 1 };
+                }
+                Instr::BraIf(p, t) => {
+                    pc += 1;
+                    break Term::Branch {
+                        pred: p,
+                        nz: block_of[t as usize],
+                        z: block_of[pc],
+                    };
+                }
+                Instr::BraIfZ(p, t) => {
+                    pc += 1;
+                    break Term::Branch {
+                        pred: p,
+                        nz: block_of[pc],
+                        z: block_of[t as usize],
+                    };
+                }
+                Instr::Ret => {
+                    pc += 1;
+                    break Term::Ret;
+                }
+                Instr::Bar => {
+                    pc += 1;
+                    break Term::Bar { next: block_of[pc] };
+                }
+                other => {
+                    body.push(other);
+                    pc += 1;
+                    if pc >= n {
+                        // Unreachable for validated kernels (they end in
+                        // Ret/Bra); terminate defensively.
+                        break Term::Ret;
+                    }
+                    if is_leader[pc] {
+                        // Fallthrough into a branch target: synthetic
+                        // zero-step edge.
+                        break Term::Jump { target: block_of[pc], steps: 0 };
+                    }
+                }
+            }
+        };
+        blocks.push(Block {
+            start_pc: start as Pc,
+            ops: fuse(&body, &mut fused_instrs, &mut fused_ops),
+            term,
+        });
+    }
+
+    LoweredKernel { blocks, instr_count: n, fused_instrs, fused_ops }
+}
+
+/// Greedy peephole fusion over one straight-line block body: longest
+/// pattern first at each position, falling back to the bare instruction.
+fn fuse(body: &[Instr], fused_instrs: &mut usize, fused_ops: &mut usize) -> Vec<VOp> {
+    let mut ops = Vec::with_capacity(body.len());
+    let mut i = 0usize;
+    while i < body.len() {
+        let (op, len) = match_at(body, i);
+        if len > 1 {
+            *fused_instrs += len;
+            *fused_ops += 1;
+        }
+        ops.push(op);
+        i += len;
+    }
+    ops
+}
+
+/// Try every catalog pattern at position `i`; returns the op and how
+/// many instructions it consumes.
+fn match_at(body: &[Instr], i: usize) -> (VOp, usize) {
+    let rest = &body[i..];
+
+    // Spec + IOp index chain: the global-thread-id prologue (5 instrs).
+    if rest.len() >= 5 {
+        if let (
+            Instr::Spec(tid, Special::ThreadIdX),
+            Instr::Spec(bid, Special::BlockIdX),
+            Instr::Spec(bdim, Special::BlockDimX),
+            Instr::BinI(IOp::Mul, md, ma, mb),
+            Instr::BinI(IOp::Add, ad, aa, ab),
+        ) = (rest[0], rest[1], rest[2], rest[3], rest[4])
+        {
+            let mul_is_chain = (ma == bid && mb == bdim) || (ma == bdim && mb == bid);
+            let add_is_chain = (aa == md && ab == tid) || (aa == tid && ab == md);
+            if mul_is_chain && add_is_chain {
+                return (
+                    VOp::GlobalIdX {
+                        tid,
+                        bid,
+                        bdim,
+                        mul: (md, ma, mb),
+                        add: (ad, aa, ab),
+                    },
+                    5,
+                );
+            }
+        }
+    }
+
+    if rest.len() >= 3 {
+        // CvtIF + FMul + FAdd: fused affine of an integer index.
+        if let (
+            Instr::CvtIF(df, si),
+            Instr::BinF(FOp::Mul, dm, ma, mb),
+            Instr::BinF(FOp::Add, dd, aa, ab),
+        ) = (rest[0], rest[1], rest[2])
+        {
+            if (ma == df || mb == df) && (aa == dm || ab == dm) {
+                return (VOp::CvtMulAddF { df, si, dm, ma, mb, dd, aa, ab }, 3);
+            }
+        }
+        // LdG + FOp + StG on the same slot and index register: fused
+        // read-modify-write with a single bounds check.
+        if let (
+            Instr::LdG { dst, param, idx },
+            Instr::BinF(op, d, a, b),
+            Instr::StG { param: p2, idx: i2, src },
+        ) = (rest[0], rest[1], rest[2])
+        {
+            if p2 == param && i2 == idx && (a == dst || b == dst) && src == d {
+                return (
+                    VOp::RmwG { slot: param, idx, ld: dst, op, sa: a, sb: b, st: d },
+                    3,
+                );
+            }
+        }
+    }
+
+    if rest.len() >= 2 {
+        if let (Instr::BinF(FOp::Mul, dm, ma, mb), Instr::BinF(FOp::Add, dd, aa, ab)) =
+            (rest[0], rest[1])
+        {
+            if aa == dm || ab == dm {
+                return (VOp::MulAddF { dm, ma, mb, dd, aa, ab }, 2);
+            }
+        }
+        if let (Instr::BinI(IOp::Mul, dm, ma, mb), Instr::BinI(IOp::Add, dd, aa, ab)) =
+            (rest[0], rest[1])
+        {
+            if aa == dm || ab == dm {
+                return (VOp::MulAddI { dm, ma, mb, dd, aa, ab }, 2);
+            }
+        }
+    }
+
+    (VOp::Base(rest[0]), 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulator::builder::KernelBuilder;
+    use crate::emulator::decode::decode;
+    use crate::emulator::isa::CmpOp;
+
+    /// Σ weights over a lowered kernel (ops + terminator steps) must
+    /// equal the instruction count — the step-accounting invariant.
+    fn total_weight(l: &LoweredKernel) -> u64 {
+        l.blocks
+            .iter()
+            .map(|b| {
+                let ops: u64 = b.ops.iter().map(|o| o.weight()).sum();
+                let term = match b.term {
+                    Term::Jump { steps, .. } => steps as u64,
+                    Term::Branch { .. } | Term::Bar { .. } | Term::Ret => 1,
+                };
+                ops + term
+            })
+            .sum()
+    }
+
+    #[test]
+    fn vadd_lowering_fuses_global_id_and_preserves_weight() {
+        let k = crate::emulator::kernels::vadd().unwrap();
+        let d = decode(&k, &[crate::emulator::interp::ScalarArg::I32(64)]).unwrap();
+        let l = &d.lowered;
+        assert_eq!(l.instr_count, d.code.len());
+        assert_eq!(total_weight(l), l.instr_count as u64);
+        // the tid/bid/bdim index prologue fuses into one superinstruction
+        assert!(
+            l.blocks
+                .iter()
+                .any(|b| b.ops.iter().any(|o| matches!(o, VOp::GlobalIdX { .. }))),
+            "expected a GlobalIdX superinstruction: {l:?}"
+        );
+        assert!(l.fused_instrs >= 5);
+        assert!(l.fused_ops >= 1);
+    }
+
+    #[test]
+    fn blocks_split_at_branch_targets_and_after_branches() {
+        // consti; bra_ifz -> skip; constf; bind(skip); ret
+        let mut b = KernelBuilder::new("split");
+        let c = b.consti(1);
+        let skip = b.label();
+        b.bra_ifz(c, skip);
+        b.constf(0.5);
+        b.bind(skip);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        let l = &d.lowered;
+        // three blocks: [consti | branch], [constf | fallthrough], [ret]
+        assert_eq!(l.blocks.len(), 3, "{l:?}");
+        assert!(matches!(l.blocks[0].term, Term::Branch { .. }));
+        assert!(matches!(l.blocks[1].term, Term::Jump { target: 2, steps: 0 }));
+        assert!(matches!(l.blocks[2].term, Term::Ret));
+        assert_eq!(total_weight(l), l.instr_count as u64);
+    }
+
+    #[test]
+    fn loop_kernel_backward_edge_resolves_to_block_id() {
+        let mut b = KernelBuilder::new("loop");
+        let acc = b.constf(0.0);
+        let one = b.constf(1.0);
+        let i = b.consti(0);
+        let four = b.consti(4);
+        let inc = b.consti(1);
+        let top = b.label();
+        b.bind(top);
+        b.fadd_to(acc, one);
+        b.iadd_to(i, inc);
+        let more = b.cmpi(CmpOp::Lt, i, four);
+        b.bra_if(more, top);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        let l = &d.lowered;
+        // blocks: [preamble | fallthrough], [loop body | branch], [ret]
+        assert_eq!(l.blocks.len(), 3, "{l:?}");
+        match l.blocks[1].term {
+            Term::Branch { nz, z, .. } => {
+                assert_eq!(nz, 1, "backward edge goes to the loop head");
+                assert_eq!(z, 2);
+            }
+            ref other => panic!("expected Branch, got {other:?}"),
+        }
+        assert_eq!(total_weight(l), l.instr_count as u64);
+    }
+
+    #[test]
+    fn rmw_pattern_fuses_with_single_bounds_check() {
+        // out[tid] = out[tid] * s  (LdG; FMul; StG on the same slot+idx)
+        let mut b = KernelBuilder::new("scale");
+        let p = b.ptr_param();
+        let s = b.constf(3.0);
+        let tid = b.tid_x();
+        let v = b.ldg(p, tid);
+        let w = b.fmul(v, s);
+        b.stg(p, tid, w);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        let l = &d.lowered;
+        assert!(
+            l.blocks
+                .iter()
+                .any(|blk| blk.ops.iter().any(|o| matches!(o, VOp::RmwG { .. }))),
+            "{l:?}"
+        );
+        assert_eq!(total_weight(l), l.instr_count as u64);
+    }
+
+    #[test]
+    fn mul_add_chain_fuses_but_unrelated_pair_does_not() {
+        // chained: dm feeds the add
+        let mut b = KernelBuilder::new("chain");
+        let p = b.ptr_param();
+        let x = b.constf(2.0);
+        let y = b.constf(3.0);
+        let z = b.constf(4.0);
+        let m = b.fmul(x, y);
+        let a = b.fadd(m, z);
+        let tid = b.tid_x();
+        b.stg(p, tid, a);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        assert!(d.lowered.blocks[0]
+            .ops
+            .iter()
+            .any(|o| matches!(o, VOp::MulAddF { .. })));
+
+        // unrelated: the add does not consume the product
+        let mut b = KernelBuilder::new("nochain");
+        let p = b.ptr_param();
+        let x = b.constf(2.0);
+        let y = b.constf(3.0);
+        let _m = b.fmul(x, y);
+        let a = b.fadd(x, y);
+        let tid = b.tid_x();
+        b.stg(p, tid, a);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        assert!(!d.lowered.blocks[0]
+            .ops
+            .iter()
+            .any(|o| matches!(o, VOp::MulAddF { .. })));
+    }
+
+    #[test]
+    fn cvt_mul_add_fuses() {
+        // f = (f32)i * s + c, emitted back-to-back
+        let mut b = KernelBuilder::new("affine");
+        let p = b.ptr_param();
+        let s = b.constf(2.0);
+        let c = b.constf(1.0);
+        let tid = b.tid_x();
+        let tf = b.cvt_i2f(tid);
+        let m = b.fmul(tf, s);
+        let a = b.fadd(m, c);
+        b.stg(p, tid, a);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        assert!(
+            d.lowered.blocks[0]
+                .ops
+                .iter()
+                .any(|o| matches!(o, VOp::CvtMulAddF { .. })),
+            "{:?}",
+            d.lowered
+        );
+    }
+
+    #[test]
+    fn sinogram_kernels_get_nonzero_fused_share() {
+        for k in [
+            crate::emulator::kernels::sinogram_all().unwrap(),
+            crate::emulator::kernels::sinogram("radon").unwrap(),
+        ] {
+            let d = decode(&k, &[crate::emulator::interp::ScalarArg::I32(32)]).unwrap();
+            let l = &d.lowered;
+            assert!(l.fused_ops > 0, "{}: no fusion", k.name);
+            assert!(l.fused_instrs > 0);
+            assert_eq!(total_weight(l), l.instr_count as u64, "{}", k.name);
+        }
+    }
+}

@@ -4,12 +4,20 @@
 //! framework run with no PJRT/XLA dependency, e.g. on CI or for
 //! cross-backend differential testing.
 //!
-//! Execution engine: kernels are pre-decoded once per scalar binding
-//! ([`decode`]) and their blocks dispatched across a fixed worker-thread
-//! pool ([`sched`]) — grid-level parallelism is real, not simulated at
-//! 1/N speed. `HLGPU_WORKERS=1` (or a single-block grid) selects the
-//! sequential reference schedule; for race-free kernels both schedules
-//! produce identical results and identical trap coordinates.
+//! Execution engine — a tiered pipeline (`decode` → `lower`/fuse →
+//! execute): kernels are pre-decoded once per scalar binding
+//! ([`decode`]), lowered into a basic-block CFG with fused
+//! superinstructions ([`lower`]), and their blocks dispatched across a
+//! fixed worker-thread pool ([`sched`]) — grid-level parallelism is
+//! real, not simulated at 1/N speed. Inside a block, `HLGPU_EXEC`
+//! selects the tier: `vector` (the default, [`vector`]) executes one
+//! operation across all threads of the block at a time over
+//! structure-of-arrays register files; `scalar` ([`interp`]) is the
+//! one-instruction-per-thread reference semantics. `HLGPU_WORKERS=1`
+//! (or a single-block grid) selects the sequential block schedule; for
+//! race-free kernels every (schedule, tier) combination produces
+//! identical results and identical trap coordinates. See
+//! `docs/emulator.md`.
 
 pub mod backend_impl;
 pub mod builder;
@@ -17,11 +25,19 @@ pub mod decode;
 pub mod interp;
 pub mod isa;
 pub mod kernels;
+pub mod lower;
 pub mod sched;
+pub(crate) mod vector;
 
 pub use backend_impl::VtxBackend;
 pub use builder::KernelBuilder;
 pub use decode::{decode, DecodedKernel};
-pub use interp::{execute, execute_decoded, execute_with, Launch, Limits, ScalarArg};
+pub use interp::{
+    execute, execute_decoded, execute_decoded_tier, execute_with, execute_with_tier, Launch,
+    Limits, ScalarArg,
+};
 pub use isa::{Instr, Kernel, ParamKind};
-pub use sched::{default_workers, set_default_workers, WorkerPool};
+pub use lower::LoweredKernel;
+pub use sched::{
+    default_exec, default_workers, set_default_exec, set_default_workers, ExecTier, WorkerPool,
+};

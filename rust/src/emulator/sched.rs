@@ -15,6 +15,14 @@
 //!   by benches to A/B the schedules;
 //! * otherwise the width is `std::thread::available_parallelism()`.
 //!
+//! The same precedent applies to the **execution tier** inside a block:
+//! * `HLGPU_EXEC` — `scalar` (the reference interpreter, one dispatch
+//!   per instruction per thread) or `vector` (the warp-vectorized tier
+//!   over the lowered basic-block form; the default);
+//! * [`set_default_exec`] — process-wide programmatic override, used by
+//!   benches to A/B the tiers. Both tiers are observationally identical
+//!   for race-free kernels (see `docs/emulator.md`).
+//!
 //! The pool itself is provisioned with `max(width, 8)` threads so
 //! explicit widths up to 8 (the determinism property tests exercise 1, 2
 //! and 8) get real concurrency even when the default width is smaller.
@@ -192,6 +200,77 @@ fn pool_threads() -> usize {
     hardware_parallelism().max(env).max(8)
 }
 
+// ---- execution-tier configuration ---------------------------------------
+
+/// Execution tier of the per-block interpreter (see
+/// [`crate::emulator::interp`] and [`crate::emulator::vector`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecTier {
+    /// Reference semantics: one dispatch per instruction per thread over
+    /// the pre-decoded instruction stream.
+    Scalar,
+    /// Warp-vectorized: one dispatch per instruction across all active
+    /// threads of the block, over the lowered basic-block form with
+    /// fused superinstructions. Observationally identical to `Scalar`
+    /// for race-free kernels.
+    Vector,
+}
+
+impl ExecTier {
+    /// Parse an `HLGPU_EXEC` value; unknown values select no tier.
+    pub fn parse(v: &str) -> Option<ExecTier> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "interp" | "reference" => Some(ExecTier::Scalar),
+            "vector" | "warp" | "simd" => Some(ExecTier::Vector),
+            _ => None,
+        }
+    }
+}
+
+/// Programmatic tier override (0 = unset, 1 = scalar, 2 = vector). Takes
+/// precedence over the environment, like [`set_default_workers`].
+static EXEC_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the execution tier for subsequent launches (process-wide).
+/// Pass `None` to clear. Benches use this to A/B the tiers.
+pub fn set_default_exec(tier: Option<ExecTier>) {
+    EXEC_OVERRIDE.store(
+        match tier {
+            None => 0,
+            Some(ExecTier::Scalar) => 1,
+            Some(ExecTier::Vector) => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// The tier used by launches that do not specify one: the
+/// [`set_default_exec`] override, else `HLGPU_EXEC`, else the vector
+/// tier (the fast path; `scalar` selects the reference interpreter).
+pub fn default_exec() -> ExecTier {
+    match EXEC_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return ExecTier::Scalar,
+        2 => return ExecTier::Vector,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("HLGPU_EXEC") {
+        if let Some(t) = ExecTier::parse(&v) {
+            return t;
+        }
+    }
+    ExecTier::Vector
+}
+
+/// Serializes tests that flip the process-wide tier override (flipping
+/// is observationally harmless for other launches — both tiers are
+/// identical — but tests asserting on the override itself must not
+/// interleave).
+#[cfg(test)]
+pub(crate) fn exec_override_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,5 +323,28 @@ mod tests {
         assert_eq!(default_workers(), 3);
         set_default_workers(None);
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn exec_tier_parsing() {
+        assert_eq!(ExecTier::parse("scalar"), Some(ExecTier::Scalar));
+        assert_eq!(ExecTier::parse("SCALAR"), Some(ExecTier::Scalar));
+        assert_eq!(ExecTier::parse("vector"), Some(ExecTier::Vector));
+        assert_eq!(ExecTier::parse("warp"), Some(ExecTier::Vector));
+        assert_eq!(ExecTier::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn exec_override_beats_env() {
+        // Both tiers are observationally identical, so flipping the
+        // process-wide default mid-test-run is harmless for concurrent
+        // launches (mirrors override_beats_env_and_hardware).
+        let _g = exec_override_test_lock();
+        set_default_exec(Some(ExecTier::Scalar));
+        assert_eq!(default_exec(), ExecTier::Scalar);
+        set_default_exec(Some(ExecTier::Vector));
+        assert_eq!(default_exec(), ExecTier::Vector);
+        set_default_exec(None);
+        let _ = default_exec(); // env- or default-driven either way
     }
 }

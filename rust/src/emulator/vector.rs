@@ -1,0 +1,742 @@
+//! The **warp-vectorized execution tier**: executes the lowered
+//! basic-block form ([`crate::emulator::lower`]) one operation at a
+//! time across *all active threads of a block*, instead of one
+//! instruction per thread like the scalar reference tier
+//! ([`crate::emulator::interp`]).
+//!
+//! Register files are structure-of-arrays (`reg`-major, one lane per
+//! thread), so each dispatch decodes an operation **once** and then runs
+//! a tight per-lane loop — amortizing the per-instruction match,
+//! program-counter bookkeeping and step accounting over `blockDim`
+//! threads. Per-buffer lengths are hoisted out of the per-thread loop
+//! (loaded once per block), and fused superinstructions retire several
+//! ISA instructions per dispatch.
+//!
+//! # Divergence
+//!
+//! Threads only diverge at block terminators, so each lane's program
+//! counter is just a basic-block id. The scheduler repeatedly picks the
+//! **lowest** block id among running lanes (block ids are ordered by
+//! original pc, so this is the minimum-pc reconvergence heuristic) and
+//! executes that whole block for the set of lanes parked on it — the
+//! predication mask. Lanes on a divergent branch split into two masks
+//! and re-merge as soon as they reach a common block.
+//!
+//! # Observational identity with the scalar tier
+//!
+//! For race-free kernels (no intra-block communication through shared or
+//! global memory within a barrier segment — the only programs with
+//! defined results on real hardware) this tier is bitwise-identical to
+//! the scalar tier, including trap coordinates and reasons:
+//!
+//! * every lane executes exactly its scalar trajectory (fused ops replay
+//!   the original instruction sequence, operand order preserved);
+//! * step budgets are charged per lane with the fused weights (trap-free
+//!   superinstructions charge their whole weight at once — the budget
+//!   trap reason and coordinates are position-independent — while
+//!   `RmwG`, whose bounds check can trap internally, interleaves
+//!   per-instruction budget checks exactly like the scalar tier);
+//! * when a lane traps, all lanes with an index **greater or equal**
+//!   are halted (their side effects cannot be observed — the launch
+//!   errors and device memory is discarded at the driver level) while
+//!   lower lanes run to quiescence. The surviving lowest-indexed trap is
+//!   reported — exactly the trap the scalar tier meets first, because it
+//!   runs threads in index order and lower threads completed cleanly;
+//! * barrier divergence reports the lowest-indexed waiting thread, as
+//!   the scalar tier does.
+
+use crate::emulator::decode::DecodedKernel;
+use crate::emulator::interp::{
+    binf_apply, cmpf, cmpi, trap_budget, trap_oob_global, trap_oob_shared, unf_apply,
+    BlockStats, GlobalMem, Limits, TRAP_DIV_ZERO, TRAP_REM_ZERO,
+};
+use crate::emulator::isa::{IOp, Instr, Special};
+use crate::emulator::lower::{LoweredKernel, Term, VOp};
+use crate::error::{Error, Result};
+
+/// Per-lane scheduling state.
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Running,
+    AtBarrier,
+    Done,
+    /// Stopped because this or a lower-indexed lane trapped; its
+    /// remaining side effects are unobservable (the launch errors).
+    Halted,
+}
+
+/// Everything needed to construct a trap error for a lane.
+struct TrapCtx<'a> {
+    name: &'a str,
+    bx: u32,
+    block: (u32, u32, u32),
+}
+
+impl TrapCtx<'_> {
+    fn trap(&self, lane: usize, reason: String) -> Error {
+        Error::VtxTrap {
+            kernel: self.name.to_string(),
+            block: self.block,
+            thread: ((lane as u32) % self.bx, (lane as u32) / self.bx, 0),
+            reason,
+        }
+    }
+}
+
+/// Record a lane trap: halt the trapping lane and everything above it
+/// (their work cannot influence the reported trap — the scalar tier
+/// never runs them past this point), and keep the lowest-lane error.
+fn record_trap(
+    status: &mut [St],
+    pending: &mut Option<(usize, Error)>,
+    lane: usize,
+    e: Error,
+) {
+    for s in status[lane..].iter_mut() {
+        if *s != St::Done {
+            *s = St::Halted;
+        }
+    }
+    match pending {
+        Some((p, _)) if *p <= lane => {}
+        _ => *pending = Some((lane, e)),
+    }
+}
+
+/// Charge `w` steps to every lane of the mask. On budget exhaustion the
+/// exhausted lane traps (same boundary as the scalar tier: a fused op of
+/// weight `w` traps iff any of its replayed instructions would), the
+/// mask is truncated to the lanes that were charged, and higher lanes
+/// halt.
+#[allow(clippy::too_many_arguments)]
+fn charge(
+    mask: &mut Vec<usize>,
+    steps: &mut [u64],
+    status: &mut [St],
+    pending: &mut Option<(usize, Error)>,
+    limit: u64,
+    w: u64,
+    ctx: &TrapCtx<'_>,
+) {
+    let mut trap_at: Option<usize> = None;
+    for (pos, &lane) in mask.iter().enumerate() {
+        if steps[lane] + w > limit {
+            trap_at = Some(pos);
+            break;
+        }
+        steps[lane] += w;
+    }
+    if let Some(pos) = trap_at {
+        let lane = mask[pos];
+        let e = ctx.trap(lane, trap_budget(limit));
+        record_trap(status, pending, lane, e);
+        mask.truncate(pos);
+    }
+}
+
+/// Interpret one thread block on the vector tier.
+pub(crate) fn run_block_vector<M: GlobalMem>(
+    k: &DecodedKernel,
+    grid: (u32, u32),
+    block: (u32, u32),
+    block_id: (u32, u32),
+    mem: &mut M,
+    limits: &Limits,
+) -> Result<BlockStats> {
+    let lowered: &LoweredKernel = &k.lowered;
+    let (gx, gy) = grid;
+    let (bx, by) = block;
+    let (bx_i, by_i) = block_id;
+    let nl = (bx * by) as usize;
+    let limit = limits.steps_per_thread;
+
+    let ctx = TrapCtx { name: &k.name, bx, block: (bx_i, by_i, 0) };
+
+    let mut stats = BlockStats::default();
+
+    // Structure-of-arrays register files: register-major, one lane per
+    // thread, so per-op lane loops are contiguous.
+    let mut fr = vec![0f32; k.fregs as usize * nl];
+    let mut ir = vec![0i64; k.iregs as usize * nl];
+    let mut shared = vec![0f32; k.shared_f32];
+
+    let mut status = vec![St::Running; nl];
+    let mut cur_blk = vec![0u32; nl];
+    let mut steps = vec![0u64; nl];
+    let mut pending: Option<(usize, Error)> = None;
+    let mut mask: Vec<usize> = Vec::with_capacity(nl);
+
+    // Hoisted per-buffer lengths: loaded once per block instead of once
+    // per access per thread. Launch-constant, so bounds semantics are
+    // unchanged.
+    let lens: Vec<usize> = (0..k.nbufs).map(|s| mem.len(s)).collect();
+
+    'sched: loop {
+        // Reconvergence: the lowest block id among running lanes.
+        let mut next: Option<u32> = None;
+        for l in 0..nl {
+            if status[l] == St::Running {
+                let b = cur_blk[l];
+                match next {
+                    Some(n) if n <= b => {}
+                    _ => next = Some(b),
+                }
+            }
+        }
+        let bid = match next {
+            Some(b) => b,
+            None => {
+                if let Some((_, e)) = pending.take() {
+                    return Err(e);
+                }
+                // Barrier resolution (identical to the scalar tier).
+                let waiting = status.iter().filter(|s| **s == St::AtBarrier).count();
+                if waiting == 0 {
+                    return Ok(stats); // all done
+                }
+                let done = status.iter().filter(|s| **s == St::Done).count();
+                if done > 0 {
+                    let lane = status
+                        .iter()
+                        .position(|s| *s == St::AtBarrier)
+                        .unwrap_or(0);
+                    return Err(ctx.trap(
+                        lane,
+                        format!(
+                            "barrier divergence: {waiting} threads waiting, {done} exited"
+                        ),
+                    ));
+                }
+                for s in status.iter_mut() {
+                    *s = St::Running;
+                }
+                continue;
+            }
+        };
+
+        mask.clear();
+        for l in 0..nl {
+            if status[l] == St::Running && cur_blk[l] == bid {
+                mask.push(l);
+            }
+        }
+
+        let blk = &lowered.blocks[bid as usize];
+
+        for op in &blk.ops {
+            let w = op.weight();
+            // RmwG is the only superinstruction with an internal trap
+            // (the bounds check), so its budget checks must interleave
+            // with the replayed sub-instructions — the arm below does
+            // its own per-sub-instruction accounting. All other ops are
+            // trap-free, so a coarse whole-weight charge reports the
+            // same budget-trap reason and coordinates as the scalar
+            // tier would at whichever sub-instruction.
+            if !matches!(op, VOp::RmwG { .. }) {
+                charge(&mut mask, &mut steps, &mut status, &mut pending, limit, w, &ctx);
+                if mask.is_empty() {
+                    continue 'sched;
+                }
+            }
+            stats.dispatches += 1;
+            stats.instrs += w * mask.len() as u64;
+            if op.is_fused() {
+                stats.fused_instrs += w * mask.len() as u64;
+            }
+            stats.lane_ops += mask.len() as u64;
+            stats.lane_slots += nl as u64;
+
+            // A memory/arithmetic trap inside the op: (position in mask,
+            // reason). Lanes before the position executed normally.
+            let mut trapped: Option<(usize, String)> = None;
+
+            match *op {
+                VOp::Base(ins) => match ins {
+                    Instr::ConstF(d, v) => {
+                        let db = d as usize * nl;
+                        for &l in &mask {
+                            fr[db + l] = v;
+                        }
+                    }
+                    Instr::ConstI(d, v) => {
+                        let db = d as usize * nl;
+                        for &l in &mask {
+                            ir[db + l] = v;
+                        }
+                    }
+                    Instr::MovF(d, s) => {
+                        let (db, sb) = (d as usize * nl, s as usize * nl);
+                        for &l in &mask {
+                            fr[db + l] = fr[sb + l];
+                        }
+                    }
+                    Instr::MovI(d, s) => {
+                        let (db, sb) = (d as usize * nl, s as usize * nl);
+                        for &l in &mask {
+                            ir[db + l] = ir[sb + l];
+                        }
+                    }
+                    Instr::BinF(op, d, a, b) => {
+                        let (db, ab, bb) =
+                            (d as usize * nl, a as usize * nl, b as usize * nl);
+                        for &l in &mask {
+                            fr[db + l] = binf_apply(op, fr[ab + l], fr[bb + l]);
+                        }
+                    }
+                    Instr::BinI(op, d, a, b) => {
+                        let (db, ab, bb) =
+                            (d as usize * nl, a as usize * nl, b as usize * nl);
+                        match op {
+                            IOp::Add => {
+                                for &l in &mask {
+                                    ir[db + l] = ir[ab + l].wrapping_add(ir[bb + l]);
+                                }
+                            }
+                            IOp::Sub => {
+                                for &l in &mask {
+                                    ir[db + l] = ir[ab + l].wrapping_sub(ir[bb + l]);
+                                }
+                            }
+                            IOp::Mul => {
+                                for &l in &mask {
+                                    ir[db + l] = ir[ab + l].wrapping_mul(ir[bb + l]);
+                                }
+                            }
+                            IOp::Div => {
+                                for (pos, &l) in mask.iter().enumerate() {
+                                    let y = ir[bb + l];
+                                    if y == 0 {
+                                        trapped = Some((pos, TRAP_DIV_ZERO.to_string()));
+                                        break;
+                                    }
+                                    // wrapping: i64::MIN / -1 must not panic
+                                    ir[db + l] = ir[ab + l].wrapping_div(y);
+                                }
+                            }
+                            IOp::Rem => {
+                                for (pos, &l) in mask.iter().enumerate() {
+                                    let y = ir[bb + l];
+                                    if y == 0 {
+                                        trapped = Some((pos, TRAP_REM_ZERO.to_string()));
+                                        break;
+                                    }
+                                    ir[db + l] = ir[ab + l].wrapping_rem(y);
+                                }
+                            }
+                        }
+                    }
+                    Instr::UnF(op, d, a) => {
+                        let (db, ab) = (d as usize * nl, a as usize * nl);
+                        for &l in &mask {
+                            fr[db + l] = unf_apply(op, fr[ab + l]);
+                        }
+                    }
+                    Instr::CmpF(op, d, a, b) => {
+                        let (db, ab, bb) =
+                            (d as usize * nl, a as usize * nl, b as usize * nl);
+                        for &l in &mask {
+                            ir[db + l] = cmpf(op, fr[ab + l], fr[bb + l]) as i64;
+                        }
+                    }
+                    Instr::CmpI(op, d, a, b) => {
+                        let (db, ab, bb) =
+                            (d as usize * nl, a as usize * nl, b as usize * nl);
+                        for &l in &mask {
+                            ir[db + l] = cmpi(op, ir[ab + l], ir[bb + l]) as i64;
+                        }
+                    }
+                    Instr::SelF(d, p, a, b) => {
+                        let (db, pb, ab, bb) = (
+                            d as usize * nl,
+                            p as usize * nl,
+                            a as usize * nl,
+                            b as usize * nl,
+                        );
+                        for &l in &mask {
+                            fr[db + l] = if ir[pb + l] != 0 {
+                                fr[ab + l]
+                            } else {
+                                fr[bb + l]
+                            };
+                        }
+                    }
+                    Instr::CvtFI(d, s) => {
+                        let (db, sb) = (d as usize * nl, s as usize * nl);
+                        for &l in &mask {
+                            ir[db + l] = fr[sb + l] as i64;
+                        }
+                    }
+                    Instr::CvtIF(d, s) => {
+                        let (db, sb) = (d as usize * nl, s as usize * nl);
+                        for &l in &mask {
+                            fr[db + l] = ir[sb + l] as f32;
+                        }
+                    }
+                    Instr::Spec(d, s) => {
+                        let db = d as usize * nl;
+                        match s {
+                            Special::ThreadIdX => {
+                                for &l in &mask {
+                                    ir[db + l] = ((l as u32) % bx) as i64;
+                                }
+                            }
+                            Special::ThreadIdY => {
+                                for &l in &mask {
+                                    ir[db + l] = ((l as u32) / bx) as i64;
+                                }
+                            }
+                            other => {
+                                // Uniform across the block: computed once.
+                                let v = match other {
+                                    Special::BlockIdX => bx_i as i64,
+                                    Special::BlockIdY => by_i as i64,
+                                    Special::BlockDimX => bx as i64,
+                                    Special::BlockDimY => by as i64,
+                                    Special::GridDimX => gx as i64,
+                                    Special::GridDimY => gy as i64,
+                                    Special::ThreadIdX | Special::ThreadIdY => {
+                                        unreachable!()
+                                    }
+                                };
+                                for &l in &mask {
+                                    ir[db + l] = v;
+                                }
+                            }
+                        }
+                    }
+                    Instr::LdG { dst, param, idx } => {
+                        let slot = param as usize;
+                        let len = lens[slot];
+                        let (db, ib) = (dst as usize * nl, idx as usize * nl);
+                        for (pos, &l) in mask.iter().enumerate() {
+                            let i = ir[ib + l];
+                            if i < 0 || i as usize >= len {
+                                trapped = Some((pos, trap_oob_global("load", i, len, slot)));
+                                break;
+                            }
+                            fr[db + l] = mem.load(slot, i as usize);
+                        }
+                    }
+                    Instr::StG { param, idx, src } => {
+                        let slot = param as usize;
+                        let len = lens[slot];
+                        let (sb, ib) = (src as usize * nl, idx as usize * nl);
+                        for (pos, &l) in mask.iter().enumerate() {
+                            let i = ir[ib + l];
+                            if i < 0 || i as usize >= len {
+                                trapped = Some((pos, trap_oob_global("store", i, len, slot)));
+                                break;
+                            }
+                            mem.store(slot, i as usize, fr[sb + l]);
+                        }
+                    }
+                    Instr::LdS { dst, idx } => {
+                        let slen = shared.len();
+                        let (db, ib) = (dst as usize * nl, idx as usize * nl);
+                        for (pos, &l) in mask.iter().enumerate() {
+                            let i = ir[ib + l];
+                            if i < 0 || i as usize >= slen {
+                                trapped = Some((pos, trap_oob_shared("load", i, slen)));
+                                break;
+                            }
+                            fr[db + l] = shared[i as usize];
+                        }
+                    }
+                    Instr::StS { idx, src } => {
+                        let slen = shared.len();
+                        let (sb, ib) = (src as usize * nl, idx as usize * nl);
+                        for (pos, &l) in mask.iter().enumerate() {
+                            let i = ir[ib + l];
+                            if i < 0 || i as usize >= slen {
+                                trapped = Some((pos, trap_oob_shared("store", i, slen)));
+                                break;
+                            }
+                            shared[i as usize] = fr[sb + l];
+                        }
+                    }
+                    Instr::LdParamF(..) | Instr::LdParamI(..) => {
+                        unreachable!("scalar params resolved by pre-decode")
+                    }
+                    Instr::Bar
+                    | Instr::Bra(_)
+                    | Instr::BraIf(..)
+                    | Instr::BraIfZ(..)
+                    | Instr::Ret => {
+                        unreachable!("control flow is lowered to block terminators")
+                    }
+                },
+                VOp::MulAddF { dm, ma, mb, dd, aa, ab } => {
+                    let (dmb, mab, mbb) =
+                        (dm as usize * nl, ma as usize * nl, mb as usize * nl);
+                    let (ddb, aab, abb) =
+                        (dd as usize * nl, aa as usize * nl, ab as usize * nl);
+                    for &l in &mask {
+                        fr[dmb + l] = fr[mab + l] * fr[mbb + l];
+                        fr[ddb + l] = fr[aab + l] + fr[abb + l];
+                    }
+                }
+                VOp::MulAddI { dm, ma, mb, dd, aa, ab } => {
+                    let (dmb, mab, mbb) =
+                        (dm as usize * nl, ma as usize * nl, mb as usize * nl);
+                    let (ddb, aab, abb) =
+                        (dd as usize * nl, aa as usize * nl, ab as usize * nl);
+                    for &l in &mask {
+                        ir[dmb + l] = ir[mab + l].wrapping_mul(ir[mbb + l]);
+                        ir[ddb + l] = ir[aab + l].wrapping_add(ir[abb + l]);
+                    }
+                }
+                VOp::CvtMulAddF { df, si, dm, ma, mb, dd, aa, ab } => {
+                    let (dfb, sib) = (df as usize * nl, si as usize * nl);
+                    let (dmb, mab, mbb) =
+                        (dm as usize * nl, ma as usize * nl, mb as usize * nl);
+                    let (ddb, aab, abb) =
+                        (dd as usize * nl, aa as usize * nl, ab as usize * nl);
+                    for &l in &mask {
+                        fr[dfb + l] = ir[sib + l] as f32;
+                        fr[dmb + l] = fr[mab + l] * fr[mbb + l];
+                        fr[ddb + l] = fr[aab + l] + fr[abb + l];
+                    }
+                }
+                VOp::GlobalIdX { tid, bid, bdim, mul, add } => {
+                    let (tb, bb, db) =
+                        (tid as usize * nl, bid as usize * nl, bdim as usize * nl);
+                    let (md, ma, mb) = mul;
+                    let (ad, aa, ab) = add;
+                    let (mdb, mab, mbb) =
+                        (md as usize * nl, ma as usize * nl, mb as usize * nl);
+                    let (adb, aab, abb) =
+                        (ad as usize * nl, aa as usize * nl, ab as usize * nl);
+                    let bidv = bx_i as i64;
+                    let bdimv = bx as i64;
+                    for &l in &mask {
+                        ir[tb + l] = ((l as u32) % bx) as i64;
+                        ir[bb + l] = bidv;
+                        ir[db + l] = bdimv;
+                        ir[mdb + l] = ir[mab + l].wrapping_mul(ir[mbb + l]);
+                        ir[adb + l] = ir[aab + l].wrapping_add(ir[abb + l]);
+                    }
+                }
+                VOp::RmwG { slot, idx, ld, op, sa, sb, st } => {
+                    let slot = slot as usize;
+                    let len = lens[slot];
+                    let (ib, ldb) = (idx as usize * nl, ld as usize * nl);
+                    let (sab, sbb, stb) =
+                        (sa as usize * nl, sb as usize * nl, st as usize * nl);
+                    'lanes: for (pos, &l) in mask.iter().enumerate() {
+                        // Replay LdG; BinF; StG with the scalar tier's
+                        // per-instruction budget checks interleaved: a
+                        // lane whose budget expires mid-superinstruction
+                        // must report the same trap (reason included)
+                        // the scalar tier would.
+                        // -- LdG: budget, then the single bounds check
+                        //    for the load+store pair (same slot, same
+                        //    index register, so if the load fits the
+                        //    store does too).
+                        if steps[l] >= limit {
+                            trapped = Some((pos, trap_budget(limit)));
+                            break 'lanes;
+                        }
+                        steps[l] += 1;
+                        let i = ir[ib + l];
+                        if i < 0 || i as usize >= len {
+                            trapped = Some((pos, trap_oob_global("load", i, len, slot)));
+                            break 'lanes;
+                        }
+                        let iu = i as usize;
+                        fr[ldb + l] = mem.load(slot, iu);
+                        // -- BinF
+                        if steps[l] >= limit {
+                            trapped = Some((pos, trap_budget(limit)));
+                            break 'lanes;
+                        }
+                        steps[l] += 1;
+                        fr[stb + l] = binf_apply(op, fr[sab + l], fr[sbb + l]);
+                        // -- StG (bounds already proven by the load)
+                        if steps[l] >= limit {
+                            trapped = Some((pos, trap_budget(limit)));
+                            break 'lanes;
+                        }
+                        steps[l] += 1;
+                        mem.store(slot, iu, fr[stb + l]);
+                    }
+                }
+            }
+
+            if let Some((pos, reason)) = trapped {
+                let lane = mask[pos];
+                let e = ctx.trap(lane, reason);
+                record_trap(&mut status, &mut pending, lane, e);
+                mask.truncate(pos);
+                if mask.is_empty() {
+                    continue 'sched;
+                }
+            }
+        }
+
+        // Terminator: one step for explicit control flow, zero for a
+        // synthetic fallthrough edge.
+        let w = match blk.term {
+            Term::Jump { steps, .. } => steps as u64,
+            Term::Branch { .. } | Term::Bar { .. } | Term::Ret => 1,
+        };
+        if w > 0 {
+            charge(&mut mask, &mut steps, &mut status, &mut pending, limit, w, &ctx);
+            if mask.is_empty() {
+                continue 'sched;
+            }
+            stats.dispatches += 1;
+            stats.instrs += w * mask.len() as u64;
+            stats.lane_ops += mask.len() as u64;
+            stats.lane_slots += nl as u64;
+        }
+        match blk.term {
+            Term::Jump { target, .. } => {
+                for &l in &mask {
+                    cur_blk[l] = target;
+                }
+            }
+            Term::Branch { pred, nz, z } => {
+                let pb = pred as usize * nl;
+                for &l in &mask {
+                    cur_blk[l] = if ir[pb + l] != 0 { nz } else { z };
+                }
+            }
+            Term::Bar { next } => {
+                for &l in &mask {
+                    cur_blk[l] = next;
+                    status[l] = St::AtBarrier;
+                }
+            }
+            Term::Ret => {
+                for &l in &mask {
+                    status[l] = St::Done;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::emulator::interp::{execute_with_tier, Launch, Limits, ScalarArg};
+    use crate::emulator::kernels;
+    use crate::emulator::sched::ExecTier;
+
+    fn run_tier(
+        k: &crate::emulator::isa::Kernel,
+        tier: ExecTier,
+        grid: (u32, u32),
+        block: (u32, u32),
+        bufs: &mut [Vec<f32>],
+        scalars: Vec<ScalarArg>,
+    ) -> crate::error::Result<crate::driver::launch::LaunchReport> {
+        let views: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        execute_with_tier(
+            Launch { kernel: k, grid, block, buffers: views, scalars, limits: Limits::default() },
+            1,
+            tier,
+        )
+    }
+
+    #[test]
+    fn vadd_matches_scalar_bitwise() {
+        let k = kernels::vadd().unwrap();
+        let n = 100usize; // 4 blocks of 32, tail-guarded
+        let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32) * -1.11).collect();
+        let mut outs = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            let mut bufs = vec![a.clone(), b.clone(), vec![0.0f32; n]];
+            run_tier(&k, tier, (4, 1), (32, 1), &mut bufs, vec![ScalarArg::I32(n as i32)])
+                .unwrap();
+            outs.push(bufs[2].clone());
+        }
+        assert_eq!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn shared_memory_reduction_matches_scalar() {
+        let (h, w) = (13usize, 5usize);
+        let block_h = h.next_power_of_two();
+        let k = kernels::tfunc_column("t2", block_h).unwrap();
+        let img: Vec<f32> = (0..h * w).map(|i| ((i * 11) % 19) as f32 * 0.25).collect();
+        let mut outs = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            let mut bufs = vec![img.clone(), vec![0.0f32; w]];
+            run_tier(
+                &k,
+                tier,
+                (w as u32, 1),
+                (block_h as u32, 1),
+                &mut bufs,
+                vec![ScalarArg::I32(h as i32), ScalarArg::I32(w as i32)],
+            )
+            .unwrap();
+            outs.push(bufs[1].clone());
+        }
+        assert_eq!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn two_dimensional_blocks_use_thread_id_y() {
+        // out[ty*bdimx + tx] = ty*10 + tx via tid_x/tid_y — exercises the
+        // 2-D lane-to-thread mapping of the SoA files.
+        use crate::emulator::builder::KernelBuilder;
+        let mut b = KernelBuilder::new("tid2d");
+        let pout = b.ptr_param();
+        let tx = b.tid_x();
+        let ty = b.tid_y();
+        let bdx = b.ntid_x();
+        let row = b.imul(ty, bdx);
+        let idx = b.iadd(row, tx);
+        let ten = b.consti(10);
+        let v0 = b.imul(ty, ten);
+        let v = b.iadd(v0, tx);
+        let vf = b.cvt_i2f(v);
+        b.stg(pout, idx, vf);
+        b.ret();
+        let k = b.build().unwrap();
+        let (bx, by) = (4u32, 3u32);
+        let mut outs = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            let mut bufs = vec![vec![0.0f32; (bx * by) as usize]];
+            run_tier(&k, tier, (1, 1), (bx, by), &mut bufs, vec![]).unwrap();
+            outs.push(bufs[0].clone());
+        }
+        assert_eq!(outs[0], outs[1]);
+        for ty in 0..by {
+            for tx in 0..bx {
+                assert_eq!(outs[1][(ty * bx + tx) as usize], (ty * 10 + tx) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn instrs_retired_match_scalar_exactly() {
+        // The step-accounting invariant: both tiers retire the same
+        // instruction count (fused weights are exact).
+        let k = kernels::sinogram_all().unwrap();
+        let s = 12usize;
+        let a = 5usize;
+        let img: Vec<f32> = (0..s * s).map(|i| ((i * 13) % 17) as f32).collect();
+        let angles: Vec<f32> = (0..a).map(|i| i as f32 * 0.7).collect();
+        let mut reports = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            let mut bufs =
+                vec![img.clone(), angles.clone(), vec![0.0f32; 4 * a * s]];
+            let r = run_tier(
+                &k,
+                tier,
+                (a as u32, 1),
+                (s as u32, 1),
+                &mut bufs,
+                vec![ScalarArg::I32(s as i32)],
+            )
+            .unwrap();
+            reports.push(r);
+        }
+        assert_eq!(reports[0].instrs, reports[1].instrs);
+        assert!(reports[1].fused_instrs > 0);
+        assert!(reports[1].dispatches < reports[0].dispatches);
+    }
+}

@@ -1,6 +1,7 @@
-//! Differential test harness for the parallel block scheduler.
+//! Differential test harness for the parallel block scheduler and the
+//! tiered execution engine.
 //!
-//! Two claims are proven here:
+//! Three claims are proven here:
 //!
 //! 1. **Numerical equivalence across implementations**: the emulator-path
 //!    trace-transform implementations (`gpu-manual`, `gpu-dynamic`,
@@ -12,9 +13,14 @@
 //!    every pool width, and *identical trap coordinates and reasons* for
 //!    every trap class (OOB access, barrier divergence, step-budget
 //!    exhaustion).
+//! 3. **Tier equivalence**: the warp-vectorized tier (basic-block
+//!    lowering + superinstruction fusion) is observationally identical
+//!    to the scalar reference tier — bitwise-equal results and
+//!    identical trap coordinates/reasons across every (tier, schedule
+//!    width) combination.
 
 use hlgpu::emulator::{
-    execute_with, KernelBuilder, Launch, Limits, ScalarArg,
+    execute_with, execute_with_tier, ExecTier, KernelBuilder, Launch, Limits, ScalarArg,
 };
 use hlgpu::error::Error;
 use hlgpu::tracetransform::{
@@ -204,6 +210,320 @@ fn step_budget_trap_identical_under_parallel_schedule() {
         assert_eq!(*thread, (0, 0, 0));
         assert!(reason.contains("step budget"), "{reason}");
     }
+}
+
+// ---------------------------------------------------------------- part 3 --
+
+/// Run the same launch under both tiers and return both errors.
+fn trap_under_both_tiers(
+    k: &hlgpu::emulator::Kernel,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buf_len: usize,
+    nbufs: usize,
+    limits: Limits,
+) -> (Error, Error) {
+    let mut run = |tier: ExecTier| -> Error {
+        let mut bufs: Vec<Vec<f32>> = (0..nbufs).map(|_| vec![1.0f32; buf_len]).collect();
+        let views: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        execute_with_tier(
+            Launch { kernel: k, grid, block, buffers: views, scalars: vec![], limits },
+            1,
+            tier,
+        )
+        .unwrap_err()
+    };
+    (run(ExecTier::Scalar), run(ExecTier::Vector))
+}
+
+#[test]
+fn oob_trap_identical_across_tiers() {
+    let k = unguarded_vadd();
+    // Same geometry as the schedule test: the first OOB thread the
+    // scalar tier meets is block 2, thread 8 — the vector tier must
+    // report exactly that lane even though it discovers the trap in
+    // lockstep.
+    let (scalar, vector) =
+        trap_under_both_tiers(&k, (8, 1), (16, 1), 40, 3, Limits::default());
+    assert_same_trap(&scalar, &vector);
+    if let Error::VtxTrap { block, thread, reason, .. } = &scalar {
+        assert_eq!(*block, (2, 0, 0));
+        assert_eq!(*thread, (8, 0, 0));
+        assert!(reason.contains("OOB"), "{reason}");
+    }
+}
+
+#[test]
+fn step_budget_trap_identical_across_tiers() {
+    let mut b = KernelBuilder::new("spin_tiers");
+    let top = b.label();
+    b.bind(top);
+    b.bra(top);
+    let k = b.build().unwrap();
+    let (scalar, vector) = trap_under_both_tiers(
+        &k,
+        (2, 1),
+        (4, 1),
+        0,
+        0,
+        Limits { steps_per_thread: 333 },
+    );
+    assert_same_trap(&scalar, &vector);
+    if let Error::VtxTrap { block, thread, reason, .. } = &scalar {
+        assert_eq!(*block, (0, 0, 0));
+        assert_eq!(*thread, (0, 0, 0));
+        assert!(reason.contains("step budget exhausted (333"), "{reason}");
+    }
+}
+
+#[test]
+fn divergence_trap_reports_waiting_thread_coordinates_on_both_tiers() {
+    // Regression for the hardcoded (0, 0) divergence report: thread 0
+    // exits early, threads 1..4 wait at the barrier — the trap must name
+    // thread (1, 0, 0), the lowest ACTUALLY waiting thread, on both
+    // tiers.
+    let mut b = KernelBuilder::new("diverge_nonzero_waiter");
+    let tid = b.tid_x();
+    let zero = b.consti(0);
+    let is0 = b.cmpi(hlgpu::emulator::isa::CmpOp::Eq, tid, zero);
+    let out = b.label();
+    b.bra_if(is0, out);
+    b.bar();
+    b.bind(out);
+    b.ret();
+    let k = b.build().unwrap();
+    let (scalar, vector) = trap_under_both_tiers(&k, (1, 1), (4, 1), 0, 0, Limits::default());
+    assert_same_trap(&scalar, &vector);
+    if let Error::VtxTrap { thread, reason, .. } = &scalar {
+        assert_eq!(*thread, (1, 0, 0), "must report an actual waiting thread");
+        assert!(reason.contains("barrier divergence: 3 threads waiting, 1 exited"), "{reason}");
+    }
+}
+
+#[test]
+fn division_by_zero_trap_identical_across_tiers() {
+    // out[tid] = tid_as_int / (tid - 1): thread 1 divides by zero.
+    let mut b = KernelBuilder::new("divzero");
+    let pout = b.ptr_param();
+    let tid = b.tid_x();
+    let one = b.consti(1);
+    let den = b.isub(tid, one);
+    let q = b.idiv(tid, den);
+    let qf = b.cvt_i2f(q);
+    b.stg(pout, tid, qf);
+    b.ret();
+    let k = b.build().unwrap();
+    let (scalar, vector) = trap_under_both_tiers(&k, (1, 1), (4, 1), 4, 1, Limits::default());
+    assert_same_trap(&scalar, &vector);
+    if let Error::VtxTrap { thread, reason, .. } = &scalar {
+        assert_eq!(*thread, (1, 0, 0));
+        assert!(reason.contains("division by zero"), "{reason}");
+    }
+}
+
+#[test]
+fn int_min_division_wraps_identically_across_tiers() {
+    // i64::MIN / -1 overflows two's complement: like the other integer
+    // ops it must wrap (quotient i64::MIN, remainder 0) instead of
+    // panicking, identically on both tiers.
+    let mut b = KernelBuilder::new("divmin");
+    let pout = b.ptr_param();
+    let m = b.consti(i64::MIN);
+    let neg1 = b.consti(-1);
+    let q = b.idiv(m, neg1);
+    let r = b.irem(m, neg1);
+    let qf = b.cvt_i2f(q);
+    let rf = b.cvt_i2f(r);
+    let zero = b.consti(0);
+    let one = b.consti(1);
+    b.stg(pout, zero, qf);
+    b.stg(pout, one, rf);
+    b.ret();
+    let k = b.build().unwrap();
+    let mut outs = Vec::new();
+    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        let mut out = vec![0.0f32; 2];
+        execute_with_tier(
+            Launch {
+                kernel: &k,
+                grid: (1, 1),
+                block: (1, 1),
+                buffers: vec![&mut out],
+                scalars: vec![],
+                limits: Limits::default(),
+            },
+            1,
+            tier,
+        )
+        .unwrap();
+        outs.push(out);
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[0][0], i64::MIN as f32);
+    assert_eq!(outs[0][1], 0.0);
+}
+
+#[test]
+fn fused_rmw_budget_and_oob_traps_interleave_like_scalar() {
+    // out[tid] = out[tid] * 3 — LdG;FMul;StG fuses into one RmwG
+    // superinstruction on the vector tier. A thread whose step budget
+    // expires *mid*-superinstruction, or whose index is OOB right at
+    // the budget edge, must report exactly the trap the scalar tier
+    // meets first (reason included).
+    let scale = {
+        let mut b = KernelBuilder::new("scale");
+        let p = b.ptr_param();
+        let s = b.constf(3.0);
+        let tid = b.tid_x();
+        let v = b.ldg(p, tid);
+        let w = b.fmul(v, s);
+        b.stg(p, tid, w);
+        b.ret();
+        b.build().unwrap()
+    };
+    // Code: ConstF, Spec, LdG, FMul, StG, Ret (6 steps/thread when it
+    // runs to completion).
+
+    // Budget 3, empty buffer: the scalar tier passes the budget check
+    // before the LdG (2 < 3) and traps OOB — so must the vector tier,
+    // not "step budget exhausted" from a coarse whole-weight charge.
+    let (scalar, vector) =
+        trap_under_both_tiers(&scale, (1, 1), (1, 1), 0, 1, Limits { steps_per_thread: 3 });
+    assert_same_trap(&scalar, &vector);
+    if let Error::VtxTrap { reason, .. } = &scalar {
+        assert!(reason.contains("global load OOB"), "{reason}");
+    }
+
+    // Budget 4, in-bounds buffer: load and multiply retire (steps 3,
+    // 4), then the budget expires before the StG on both tiers.
+    let (scalar, vector) =
+        trap_under_both_tiers(&scale, (1, 1), (1, 1), 1, 1, Limits { steps_per_thread: 4 });
+    assert_same_trap(&scalar, &vector);
+    if let Error::VtxTrap { reason, .. } = &scalar {
+        assert!(reason.contains("step budget exhausted (4"), "{reason}");
+    }
+
+    // Budget 6: exactly enough — both tiers complete.
+    let mut ok = |tier: ExecTier| {
+        let mut buf = vec![2.0f32];
+        execute_with_tier(
+            Launch {
+                kernel: &scale,
+                grid: (1, 1),
+                block: (1, 1),
+                buffers: vec![&mut buf],
+                scalars: vec![],
+                limits: Limits { steps_per_thread: 6 },
+            },
+            1,
+            tier,
+        )
+        .unwrap();
+        buf[0]
+    };
+    assert_eq!(ok(ExecTier::Scalar), 6.0);
+    assert_eq!(ok(ExecTier::Vector), 6.0);
+}
+
+#[test]
+fn results_bitwise_identical_across_tiers_and_widths() {
+    // The real workload kernels under every (tier, width) combination:
+    // straight-line + data-divergent (sinogram_all) and shared-memory +
+    // barrier (tfunc_column) kernels, bitwise-equal outputs everywhere.
+    let size = 16usize;
+    let angles = 6usize;
+    let img: Vec<f32> = shepp_logan(size).pixels().to_vec();
+    let thetas = orientations(angles);
+
+    let sino = hlgpu::emulator::kernels::sinogram_all().unwrap();
+    let mut sino_outs: Vec<Vec<f32>> = Vec::new();
+    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        for workers in [1usize, 2, 8] {
+            let mut img_b = img.clone();
+            let mut ang_b = thetas.clone();
+            let mut out = vec![0.0f32; 4 * angles * size];
+            execute_with_tier(
+                Launch {
+                    kernel: &sino,
+                    grid: (angles as u32, 1),
+                    block: (size as u32, 1),
+                    buffers: vec![&mut img_b, &mut ang_b, &mut out],
+                    scalars: vec![ScalarArg::I32(size as i32)],
+                    limits: Limits::default(),
+                },
+                workers,
+                tier,
+            )
+            .unwrap();
+            sino_outs.push(out);
+        }
+    }
+    for (i, o) in sino_outs.iter().enumerate().skip(1) {
+        assert_eq!(&sino_outs[0], o, "sinogram_all combination {i}");
+    }
+
+    let (h, w) = (10usize, 6usize);
+    let block_h = h.next_power_of_two();
+    let red = hlgpu::emulator::kernels::tfunc_column("radon", block_h).unwrap();
+    let rimg: Vec<f32> = (0..h * w).map(|i| ((i * 7) % 23) as f32 * 0.5).collect();
+    let mut red_outs: Vec<Vec<f32>> = Vec::new();
+    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        for workers in [1usize, 8] {
+            let mut img_b = rimg.clone();
+            let mut out = vec![0.0f32; w];
+            execute_with_tier(
+                Launch {
+                    kernel: &red,
+                    grid: (w as u32, 1),
+                    block: (block_h as u32, 1),
+                    buffers: vec![&mut img_b, &mut out],
+                    scalars: vec![ScalarArg::I32(h as i32), ScalarArg::I32(w as i32)],
+                    limits: Limits::default(),
+                },
+                workers,
+                tier,
+            )
+            .unwrap();
+            red_outs.push(out);
+        }
+    }
+    for (i, o) in red_outs.iter().enumerate().skip(1) {
+        assert_eq!(&red_outs[0], o, "tfunc_column combination {i}");
+    }
+}
+
+#[test]
+fn vector_tier_reports_fusion_and_lane_occupancy() {
+    // Straight-line vadd: the vector tier must retire the same
+    // instruction count as the scalar tier, in fewer dispatches, with a
+    // nonzero fused share and near-full lanes.
+    let k = hlgpu::emulator::kernels::vadd().unwrap();
+    let n = 512usize;
+    let mut report = |tier: ExecTier| {
+        let mut a = vec![1.0f32; n];
+        let mut b = vec![2.0f32; n];
+        let mut c = vec![0.0f32; n];
+        execute_with_tier(
+            Launch {
+                kernel: &k,
+                grid: ((n / 64) as u32, 1),
+                block: (64, 1),
+                buffers: vec![&mut a, &mut b, &mut c],
+                scalars: vec![ScalarArg::I32(n as i32)],
+                limits: Limits::default(),
+            },
+            1,
+            tier,
+        )
+        .unwrap()
+    };
+    let scalar = report(ExecTier::Scalar);
+    let vector = report(ExecTier::Vector);
+    assert_eq!(scalar.instrs, vector.instrs, "tiers retire the same instructions");
+    assert_eq!(scalar.fused_instrs, 0);
+    assert!(vector.fused_instrs > 0, "vadd's index prologue fuses");
+    assert!(vector.dispatches < scalar.dispatches, "dispatch amortization");
+    assert!(vector.lane_utilization() > 0.9, "straight-line kernel, near-full masks");
 }
 
 #[test]

@@ -319,6 +319,204 @@ fn prop_barrier_kernels_deterministic_across_pool_sizes() {
     }
 }
 
+/// out[tid] = tid odd ? a[tid] * 2 : a[tid] + 1 — through real branches
+/// (not SelF), so lanes diverge and reconverge in the vector tier.
+fn divergent_branch_kernel() -> hlgpu::emulator::Kernel {
+    use hlgpu::emulator::KernelBuilder;
+    let mut b = KernelBuilder::new("divergent");
+    let pa = b.ptr_param();
+    let pout = b.ptr_param();
+    let tid = b.tid_x();
+    let bid = b.ctaid_x();
+    let bdim = b.ntid_x();
+    let base = b.imul(bid, bdim);
+    let gid = b.iadd(base, tid);
+    let two = b.consti(2);
+    let odd = b.irem(gid, two);
+    let v = b.ldg(pa, gid);
+    let res = b.f();
+    let odd_path = b.label();
+    let join = b.label();
+    b.bra_if(odd, odd_path);
+    let one = b.constf(1.0);
+    let e = b.fadd(v, one);
+    b.movf(res, e);
+    b.bra(join);
+    b.bind(odd_path);
+    let twof = b.constf(2.0);
+    let o = b.fmul(v, twof);
+    b.movf(res, o);
+    b.bind(join);
+    b.stg(pout, gid, res);
+    b.ret();
+    b.build().unwrap()
+}
+
+#[test]
+fn prop_exec_tiers_observationally_identical() {
+    // The warp-vectorized tier vs the scalar reference tier, across
+    // random launch geometries, pool widths 1/2/8, on straight-line
+    // (vadd), divergent-branch and shared-memory (tree reduction)
+    // kernels: bitwise-equal outputs everywhere.
+    use hlgpu::emulator::{execute_with_tier, ExecTier};
+    let vadd = kernels::vadd().unwrap();
+    let div = divergent_branch_kernel();
+    for seed in 0..12u64 {
+        let mut rng = Prng::new(12_000 + seed);
+
+        // vadd + divergent kernels share a geometry
+        let n = rng.usize_in(1, 2000);
+        let block = *rng.choose(&[1u32, 7, 32, 64]);
+        let grid = (n as u32).div_ceil(block);
+        let a = rng.f32_vec(n, -10.0, 10.0);
+        let b = rng.f32_vec(n, -10.0, 10.0);
+        let mut vadd_outs: Vec<Vec<f32>> = Vec::new();
+        let mut div_outs: Vec<Vec<f32>> = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            for workers in [1usize, 2, 8] {
+                let mut aa = a.clone();
+                let mut bb = b.clone();
+                let mut c = vec![0.0f32; n];
+                execute_with_tier(
+                    hlgpu::emulator::Launch {
+                        kernel: &vadd,
+                        grid: (grid, 1),
+                        block: (block, 1),
+                        buffers: vec![&mut aa, &mut bb, &mut c],
+                        scalars: vec![hlgpu::emulator::ScalarArg::I32(n as i32)],
+                        limits: hlgpu::emulator::Limits::default(),
+                    },
+                    workers,
+                    tier,
+                )
+                .unwrap_or_else(|e| panic!("vadd seed {seed} {tier:?} w{workers}: {e}"));
+                vadd_outs.push(c);
+
+                // the divergent kernel has no tail guard: pad to the grid
+                let padded = (grid * block) as usize;
+                let mut ap = a.clone();
+                ap.resize(padded, 0.0);
+                let mut out = vec![0.0f32; padded];
+                execute_with_tier(
+                    hlgpu::emulator::Launch {
+                        kernel: &div,
+                        grid: (grid, 1),
+                        block: (block, 1),
+                        buffers: vec![&mut ap, &mut out],
+                        scalars: vec![],
+                        limits: hlgpu::emulator::Limits::default(),
+                    },
+                    workers,
+                    tier,
+                )
+                .unwrap_or_else(|e| panic!("div seed {seed} {tier:?} w{workers}: {e}"));
+                div_outs.push(out);
+            }
+        }
+        for (i, o) in vadd_outs.iter().enumerate().skip(1) {
+            assert_eq!(&vadd_outs[0], o, "vadd seed {seed} combination {i}");
+        }
+        for (i, o) in div_outs.iter().enumerate().skip(1) {
+            assert_eq!(&div_outs[0], o, "divergent seed {seed} combination {i}");
+        }
+        // spot-check the divergent kernel against scalar rust
+        for (i, got) in div_outs[0].iter().enumerate().take(n) {
+            let x = if i < a.len() { a[i] } else { 0.0 };
+            let want = if i % 2 == 1 { x * 2.0 } else { x + 1.0 };
+            assert_eq!(*got, want, "divergent seed {seed} elem {i}");
+        }
+
+        // shared-memory tree reduction across tiers
+        let h = rng.usize_in(2, 40);
+        let w = rng.usize_in(2, 12);
+        let block_h = h.next_power_of_two();
+        let red = kernels::tfunc_column("radon", block_h).unwrap();
+        let img = rng.f32_vec(h * w, -5.0, 5.0);
+        let mut red_outs: Vec<Vec<f32>> = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            for workers in [1usize, 8] {
+                let mut img_b = img.clone();
+                let mut out = vec![0.0f32; w];
+                execute_with_tier(
+                    hlgpu::emulator::Launch {
+                        kernel: &red,
+                        grid: (w as u32, 1),
+                        block: (block_h as u32, 1),
+                        buffers: vec![&mut img_b, &mut out],
+                        scalars: vec![
+                            hlgpu::emulator::ScalarArg::I32(h as i32),
+                            hlgpu::emulator::ScalarArg::I32(w as i32),
+                        ],
+                        limits: hlgpu::emulator::Limits::default(),
+                    },
+                    workers,
+                    tier,
+                )
+                .unwrap_or_else(|e| panic!("reduce seed {seed} {tier:?} w{workers}: {e}"));
+                red_outs.push(out);
+            }
+        }
+        for (i, o) in red_outs.iter().enumerate().skip(1) {
+            assert_eq!(&red_outs[0], o, "reduction seed {seed} combination {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_trap_parity_across_tiers_on_random_undersized_buffers() {
+    // Unguarded vadd with randomly undersized buffers: both tiers must
+    // report the same trap coordinates and reason (or both succeed).
+    use hlgpu::emulator::{execute_with_tier, ExecTier, KernelBuilder};
+    let k = {
+        let mut b = KernelBuilder::new("vadd_unguarded_prop");
+        let pa = b.ptr_param();
+        let pb = b.ptr_param();
+        let pc = b.ptr_param();
+        let tid = b.tid_x();
+        let bid = b.ctaid_x();
+        let bdim = b.ntid_x();
+        let base = b.imul(bid, bdim);
+        let gid = b.iadd(base, tid);
+        let x = b.ldg(pa, gid);
+        let y = b.ldg(pb, gid);
+        let s = b.fadd(x, y);
+        b.stg(pc, gid, s);
+        b.ret();
+        b.build().unwrap()
+    };
+    for seed in 0..24u64 {
+        let mut rng = Prng::new(13_000 + seed);
+        let grid = rng.usize_in(1, 8) as u32;
+        let block = rng.usize_in(1, 32) as u32;
+        let total = (grid * block) as usize;
+        let buf_len = rng.usize_in(0, total + 4);
+        let mut run = |tier: ExecTier| {
+            let mut a = vec![1.0f32; buf_len];
+            let mut b = vec![1.0f32; buf_len];
+            let mut c = vec![0.0f32; buf_len];
+            execute_with_tier(
+                hlgpu::emulator::Launch {
+                    kernel: &k,
+                    grid: (grid, 1),
+                    block: (block, 1),
+                    buffers: vec![&mut a, &mut b, &mut c],
+                    scalars: vec![],
+                    limits: hlgpu::emulator::Limits::default(),
+                },
+                1,
+                tier,
+            )
+        };
+        match (run(ExecTier::Scalar), run(ExecTier::Vector)) {
+            (Ok(_), Ok(_)) => assert!(buf_len >= total, "seed {seed}: both passed"),
+            (Err(se), Err(ve)) => {
+                assert_eq!(se.to_string(), ve.to_string(), "seed {seed}");
+            }
+            (s, v) => panic!("seed {seed}: tier disagreement: {s:?} vs {v:?}"),
+        }
+    }
+}
+
 // ---------------------------------------------------------- coordinator --
 
 #[test]
