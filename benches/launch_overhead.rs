@@ -14,20 +14,28 @@
 //! of instructions retired in fused superinstructions, and vector lane
 //! utilization; target >= 3x instructions/s over scalar.
 //!
-//! Part 3 (needs `make artifacts`): the §6 claim that the automation
+//! Part 3 (always runs, VTX emulator): **launch API v2** — (a) a warm
+//! bound `KernelHandle` with all-device-resident arguments vs the v1
+//! host-round-trip `cuda!` path (bytes moved per launch must drop to
+//! zero), and (b) the v1 per-image sync loop vs the v2 two-stream
+//! double-buffered batched pipeline in `gpu_auto` (bytes per image and
+//! wall clock both drop — the device-resident angle table uploads once).
+//!
+//! Part 4 (needs `make artifacts`): the §6 claim that the automation
 //! layer adds **no run-time overhead** over manual driver calls once the
 //! specialization cache is warm, on the PJRT backend.
 //!
 //! Run: `cargo bench --bench launch_overhead`
-//! (env: LO_ITERS, LO_N, LO_SIZE, LO_ANGLES, HLGPU_WORKERS, HLGPU_EXEC).
+//! (env: LO_ITERS, LO_N, LO_SIZE, LO_ANGLES, LO_BATCH, HLGPU_WORKERS,
+//! HLGPU_EXEC, HLGPU_ARENAS).
 
 use hlgpu::bench_support::{fmt_speedup, fmt_summary, measure, Settings, Table};
-use hlgpu::coordinator::{arg, Launcher};
+use hlgpu::coordinator::{arg, DeviceArray, Launcher};
 use hlgpu::driver::{Context, KernelArg, LaunchConfig};
 use hlgpu::emulator::{default_workers, set_default_exec, set_default_workers, ExecTier};
 use hlgpu::runtime::ArtifactLibrary;
-use hlgpu::tensor::Tensor;
-use hlgpu::tracetransform::{orientations, shepp_logan};
+use hlgpu::tensor::{Dtype, Tensor};
+use hlgpu::tracetransform::{orientations, random_phantom, shepp_logan};
 use hlgpu::util::Prng;
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -220,6 +228,144 @@ fn exec_tier_section(settings: Settings) {
     }
 }
 
+/// Launch API v2 section A: a warm bound handle with device-resident
+/// arguments vs the v1 host round-trip, same `sinogram_all` workload.
+fn device_resident_section(settings: Settings) {
+    let size = env_usize("LO_SIZE", 96);
+    let angles = env_usize("LO_ANGLES", 64);
+    let img = shepp_logan(size).to_tensor();
+    let thetas = orientations(angles);
+    let ang = Tensor::from_f32(&thetas, &[angles]);
+    let mut sinos = Tensor::zeros_f32(&[4, angles, size]);
+    let cfg = LaunchConfig::new(angles as u32, size as u32);
+    let iters = (settings.warmup_iters + settings.sample_iters) as f64;
+
+    let mut launcher = Launcher::emulator().unwrap();
+    hlgpu::tracetransform::impls::register_trace_providers(launcher.registry_mut());
+    let ctx = launcher.context().clone();
+
+    let mut table = Table::new(&["path", "time/iter", "KiB moved/iter", "speedup"]);
+
+    // v1: cuda!-style warm launch, every argument round-trips the host
+    launcher
+        .launch(
+            "sinogram_all",
+            cfg,
+            &mut [arg::cu_in(&img), arg::cu_in(&ang), arg::cu_out(&mut sinos)],
+        )
+        .unwrap();
+    ctx.memory().unwrap().reset_stats();
+    let v1 = measure(settings, || {
+        launcher
+            .launch(
+                "sinogram_all",
+                cfg,
+                &mut [arg::cu_in(&img), arg::cu_in(&ang), arg::cu_out(&mut sinos)],
+            )
+            .unwrap();
+    });
+    let st = ctx.mem_stats().unwrap();
+    let v1_kib = (st.h2d_bytes + st.d2h_bytes) as f64 / iters / 1024.0;
+    table.row(&[
+        "v1 round-trip (cuda!)".into(),
+        fmt_summary(&v1),
+        format!("{v1_kib:.1}"),
+        "1.00x".into(),
+    ]);
+
+    // v2: bound handle, all arguments device-resident
+    let d_img = DeviceArray::from_tensor(&ctx, &img).unwrap();
+    let d_ang = DeviceArray::from_tensor(&ctx, &ang).unwrap();
+    let mut d_sinos = DeviceArray::alloc(&ctx, Dtype::F32, &[4, angles, size]).unwrap();
+    let handle = launcher
+        .bind(
+            "sinogram_all",
+            &[arg::cu_dev(&d_img), arg::cu_dev(&d_ang), arg::cu_dev_mut(&mut d_sinos)],
+        )
+        .unwrap();
+    handle
+        .launch(cfg, &mut [arg::cu_dev(&d_img), arg::cu_dev(&d_ang), arg::cu_dev_mut(&mut d_sinos)])
+        .unwrap();
+    ctx.memory().unwrap().reset_stats();
+    let v2 = measure(settings, || {
+        handle
+            .launch(
+                cfg,
+                &mut [arg::cu_dev(&d_img), arg::cu_dev(&d_ang), arg::cu_dev_mut(&mut d_sinos)],
+            )
+            .unwrap();
+    });
+    let st = ctx.mem_stats().unwrap();
+    let v2_kib = (st.h2d_bytes + st.d2h_bytes) as f64 / iters / 1024.0;
+    table.row(&[
+        "v2 device-resident handle".into(),
+        fmt_summary(&v2),
+        format!("{v2_kib:.1}"),
+        fmt_speedup(v1.mean, v2.mean),
+    ]);
+
+    println!("\nLaunch API v2 — device-resident handle vs host round-trip ({size}x{size}, {angles} angles)");
+    println!("{}", table.render());
+    println!("v2 target: 0.0 KiB moved per warm launch (was {v1_kib:.1})");
+}
+
+/// Launch API v2 section B: the v1 per-image sync loop vs the v2
+/// two-stream double-buffered batched pipeline (device-resident angles,
+/// bound handles, uploads overlapping compute).
+fn two_stream_pipeline_section(settings: Settings) {
+    use hlgpu::tracetransform::{DeviceChoice, GpuAuto, TraceImpl};
+    let size = env_usize("LO_SIZE", 96);
+    let angles = env_usize("LO_ANGLES", 64);
+    let batch = env_usize("LO_BATCH", 8);
+    let thetas = orientations(angles);
+    let imgs: Vec<_> = (0..batch).map(|i| random_phantom(size, 7 + i as u64)).collect();
+    let iters = (settings.warmup_iters + settings.sample_iters) as f64;
+    let per_img = |bytes: u64| bytes as f64 / iters / batch as f64 / 1024.0;
+
+    let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    let mut table = Table::new(&["pipeline", "time/batch", "KiB h2d/image", "speedup"]);
+
+    // v1: synchronous per-image loop (round-trip launches)
+    auto.features(&imgs[0], &thetas).unwrap(); // warm the specialization
+    auto.launcher().context().memory().unwrap().reset_stats();
+    let sync = measure(settings, || {
+        for img in &imgs {
+            auto.features(img, &thetas).unwrap();
+        }
+    });
+    let st = auto.launcher().context().mem_stats().unwrap();
+    let sync_kib = per_img(st.h2d_bytes);
+    table.row(&[
+        "v1 sync per-image".into(),
+        fmt_summary(&sync),
+        format!("{sync_kib:.1}"),
+        "1.00x".into(),
+    ]);
+
+    // v2: two-stream double-buffered batch, device-resident angles
+    auto.features_batch(&imgs, &thetas).unwrap(); // warm pipes + handles
+    auto.launcher().context().memory().unwrap().reset_stats();
+    let piped = measure(settings, || {
+        auto.features_batch(&imgs, &thetas).unwrap();
+    });
+    let st = auto.launcher().context().mem_stats().unwrap();
+    let piped_kib = per_img(st.h2d_bytes);
+    table.row(&[
+        "v2 two-stream batched".into(),
+        fmt_summary(&piped),
+        format!("{piped_kib:.1}"),
+        fmt_speedup(sync.mean, piped.mean),
+    ]);
+
+    println!(
+        "\nLaunch API v2 — sync loop vs two-stream pipeline ({batch} images of {size}x{size}, {angles} angles)"
+    );
+    println!("{}", table.render());
+    println!(
+        "v2 moves {piped_kib:.1} KiB h2d per image vs v1's {sync_kib:.1} (angle table device-resident, uploads double-buffered)"
+    );
+}
+
 /// PJRT section: the original §6 manual-vs-automation comparison.
 fn pjrt_overhead_section(settings: Settings, lib: &ArtifactLibrary) {
     let n = env_usize("LO_N", 4096);
@@ -350,6 +496,8 @@ fn main() {
 
     emulator_scheduler_section(settings);
     exec_tier_section(settings);
+    device_resident_section(settings);
+    two_stream_pipeline_section(settings);
 
     match ArtifactLibrary::load_default() {
         Ok(lib) => pjrt_overhead_section(settings, &lib),

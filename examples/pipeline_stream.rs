@@ -14,7 +14,7 @@ use hlgpu::tracetransform::{orientations, random_phantom};
 
 fn main() -> hlgpu::Result<()> {
     // emulator device: everything local, no artifacts needed
-    let dev = hlgpu::driver::device(1)?;
+    let dev = hlgpu::driver::emulator_device()?;
     let ctx = Context::create(&dev)?;
 
     let size = 48usize;

@@ -1,11 +1,19 @@
-//! Argument wrappers: `CuIn` / `CuOut` / `CuInOut` (paper §6.3).
+//! Argument wrappers: `CuIn` / `CuOut` / `CuInOut` (paper §6.3), plus
+//! the v2 **device-resident** modes (`cu_dev` / `cu_dev_mut`).
 //!
 //! By wrapping arguments, the developer tells the framework which
 //! transfers are actually needed; the specialization step turns this into
 //! a fixed transfer plan so the steady-state launch does no analysis work
-//! and moves no unnecessary bytes.
+//! and moves no unnecessary bytes. Device-resident arguments go one step
+//! further: the data already lives on the device (a
+//! [`DeviceArray`]), so the plan skips the host↔device copies entirely —
+//! chained kernels hand buffers to each other without touching the host
+//! (`LaunchMetrics::skipped_h2d` / `skipped_d2h` count the avoided
+//! transfers).
 
-use crate::tensor::Tensor;
+use crate::coordinator::devarray::DeviceArray;
+use crate::driver::DevicePtr;
+use crate::tensor::{Dtype, Tensor};
 
 /// Transfer direction of one kernel argument.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,15 +45,20 @@ impl ArgMode {
     }
 }
 
-enum TensorRef<'a> {
+enum Payload<'a> {
     Shared(&'a Tensor),
     Mut(&'a mut Tensor),
+    /// Read-only device-resident array: no transfers either way.
+    Dev(&'a DeviceArray),
+    /// Read-write device-resident array: the kernel mutates it in place,
+    /// results stay on device.
+    DevMut(&'a mut DeviceArray),
 }
 
 /// One wrapped kernel argument.
 pub struct Arg<'a> {
     mode: ArgMode,
-    tensor: TensorRef<'a>,
+    payload: Payload<'a>,
 }
 
 impl<'a> Arg<'a> {
@@ -53,51 +66,134 @@ impl<'a> Arg<'a> {
         self.mode
     }
 
-    pub fn tensor(&self) -> &Tensor {
-        match &self.tensor {
-            TensorRef::Shared(t) => t,
-            TensorRef::Mut(t) => t,
+    /// True for `cu_dev` / `cu_dev_mut` arguments: the data lives on the
+    /// device and the transfer plan must not copy it.
+    pub fn is_device(&self) -> bool {
+        matches!(self.payload, Payload::Dev(_) | Payload::DevMut(_))
+    }
+
+    /// The device pointer of a device-resident argument.
+    pub fn device_ptr(&self) -> Option<DevicePtr> {
+        match &self.payload {
+            Payload::Dev(d) => Some(d.ptr()),
+            Payload::DevMut(d) => Some(d.ptr()),
+            _ => None,
         }
     }
 
-    pub(crate) fn tensor_mut(&mut self) -> Option<&mut Tensor> {
-        match &mut self.tensor {
-            TensorRef::Shared(_) => None,
-            TensorRef::Mut(t) => Some(t),
+    /// The owning context of a device-resident argument (used to reject
+    /// arrays from a different context at specialization time).
+    pub(crate) fn device_context(&self) -> Option<&crate::driver::Context> {
+        match &self.payload {
+            Payload::Dev(d) => Some(d.context()),
+            Payload::DevMut(d) => Some(d.context()),
+            _ => None,
         }
     }
 
-    /// Signature fragment of this argument (`f32[128,128]`).
+    pub fn dtype(&self) -> Dtype {
+        match &self.payload {
+            Payload::Shared(t) => t.dtype(),
+            Payload::Mut(t) => t.dtype(),
+            Payload::Dev(d) => d.dtype(),
+            Payload::DevMut(d) => d.dtype(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match &self.payload {
+            Payload::Shared(t) => t.shape(),
+            Payload::Mut(t) => t.shape(),
+            Payload::Dev(d) => d.shape(),
+            Payload::DevMut(d) => d.shape(),
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        match &self.payload {
+            Payload::Shared(t) => t.byte_len(),
+            Payload::Mut(t) => t.byte_len(),
+            Payload::Dev(d) => d.byte_len(),
+            Payload::DevMut(d) => d.byte_len(),
+        }
+    }
+
+    /// Host-side view of the argument, when there is one (`None` for
+    /// device-resident arguments).
+    pub(crate) fn host_tensor(&self) -> Option<&Tensor> {
+        match &self.payload {
+            Payload::Shared(t) => Some(t),
+            Payload::Mut(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn host_tensor_mut(&mut self) -> Option<&mut Tensor> {
+        match &mut self.payload {
+            Payload::Mut(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Signature fragment of this argument (`f32[128,128]`), residency
+    /// excluded — artifact manifests key on the plain type shape.
     pub fn signature(&self) -> String {
-        self.tensor().signature()
+        use std::fmt::Write;
+        let mut out = String::with_capacity(16);
+        out.push_str(self.dtype().name());
+        out.push('[');
+        for (d, dim) in self.shape().iter().enumerate() {
+            if d > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{dim}");
+        }
+        out.push(']');
+        out
     }
 }
 
 /// `CuIn(x)`: read-only input.
 pub fn cu_in(t: &Tensor) -> Arg<'_> {
-    Arg { mode: ArgMode::In, tensor: TensorRef::Shared(t) }
+    Arg { mode: ArgMode::In, payload: Payload::Shared(t) }
 }
 
 /// `CuOut(x)`: output container; contents before launch are ignored.
 pub fn cu_out(t: &mut Tensor) -> Arg<'_> {
-    Arg { mode: ArgMode::Out, tensor: TensorRef::Mut(t) }
+    Arg { mode: ArgMode::Out, payload: Payload::Mut(t) }
 }
 
 /// `CuInOut(x)`: read-write.
 pub fn cu_inout(t: &mut Tensor) -> Arg<'_> {
-    Arg { mode: ArgMode::InOut, tensor: TensorRef::Mut(t) }
+    Arg { mode: ArgMode::InOut, payload: Payload::Mut(t) }
 }
 
 /// Unwrapped argument: direction inferred by the framework at
 /// specialization time (§9 future work, implemented). Requires `&mut`
 /// because the inference may classify it as an output.
 pub fn cu_auto(t: &mut Tensor) -> Arg<'_> {
-    Arg { mode: ArgMode::Auto, tensor: TensorRef::Mut(t) }
+    Arg { mode: ArgMode::Auto, payload: Payload::Mut(t) }
+}
+
+/// Device-resident read-only argument (launch API v2): the kernel reads
+/// the [`DeviceArray`] in place — no upload, no download.
+pub fn cu_dev(d: &DeviceArray) -> Arg<'_> {
+    Arg { mode: ArgMode::In, payload: Payload::Dev(d) }
+}
+
+/// Device-resident read-write argument (launch API v2): the kernel
+/// mutates the [`DeviceArray`] in place and the result stays on device —
+/// download it explicitly when (and if) the host needs it.
+pub fn cu_dev_mut(d: &mut DeviceArray) -> Arg<'_> {
+    Arg { mode: ArgMode::InOut, payload: Payload::DevMut(d) }
 }
 
 /// Call-site signature over all arguments — the specialization cache key
 /// (the analog of the Julia method-cache key: the tuple of argument
-/// types, §6.2). Includes modes: `in:f32[12];in:f32[12];out:f32[12]`.
+/// types, §6.2). Includes modes and residency:
+/// `in:f32[12];dev.in:f32[12];out:f32[12]` — a device-resident call
+/// specializes separately from its host-round-trip twin because the
+/// transfer plans differ.
 pub fn call_signature(args: &[Arg<'_>]) -> String {
     let mut out = String::with_capacity(24 * args.len());
     write_call_signature(&mut out, args);
@@ -112,16 +208,18 @@ pub fn write_call_signature(out: &mut String, args: &[Arg<'_>]) {
         if i > 0 {
             out.push(';');
         }
+        if a.is_device() {
+            out.push_str("dev.");
+        }
         out.push_str(match a.mode() {
             ArgMode::In => "in:",
             ArgMode::Out => "out:",
             ArgMode::InOut => "inout:",
             ArgMode::Auto => "auto:",
         });
-        let t = a.tensor();
-        out.push_str(t.dtype().name());
+        out.push_str(a.dtype().name());
         out.push('[');
-        for (d, dim) in t.shape().iter().enumerate() {
+        for (d, dim) in a.shape().iter().enumerate() {
             if d > 0 {
                 out.push(',');
             }
@@ -165,9 +263,29 @@ mod tests {
     fn out_args_expose_mut_tensor() {
         let mut c = Tensor::zeros_f32(&[2]);
         let mut arg = cu_out(&mut c);
-        assert!(arg.tensor_mut().is_some());
+        assert!(arg.host_tensor_mut().is_some());
         let a = Tensor::zeros_f32(&[2]);
         let mut arg = cu_in(&a);
-        assert!(arg.tensor_mut().is_none());
+        assert!(arg.host_tensor_mut().is_none());
+    }
+
+    #[test]
+    fn device_args_carry_residency_in_the_cache_key() {
+        use crate::driver::{emulator_device, Context};
+        let ctx = Context::create(&emulator_device().unwrap()).unwrap();
+        let t = Tensor::from_f32(&[1.0; 8], &[8]);
+        let mut d = DeviceArray::from_tensor(&ctx, &t).unwrap();
+        let host_sig = call_signature(&[cu_in(&t)]);
+        let dev_sig = call_signature(&[cu_dev(&d)]);
+        assert_eq!(host_sig, "in:f32[8]");
+        assert_eq!(dev_sig, "dev.in:f32[8]");
+        assert_ne!(host_sig, dev_sig, "plans differ, keys must differ");
+        assert_eq!(call_signature(&[cu_dev_mut(&mut d)]), "dev.inout:f32[8]");
+        // residency is excluded from the artifact-facing signature
+        let arg = cu_dev(&d);
+        assert_eq!(arg.signature(), "f32[8]");
+        assert!(arg.is_device());
+        assert_eq!(arg.device_ptr(), Some(d.ptr()));
+        assert_eq!(arg.byte_len(), 32);
     }
 }

@@ -22,6 +22,19 @@ impl DeviceArray {
     /// `[usize::MAX, 2]` would otherwise wrap and allocate a tiny buffer
     /// that later transfers would overrun.
     pub fn alloc(ctx: &Context, dtype: Dtype, shape: &[usize]) -> Result<DeviceArray> {
+        Self::alloc_in(ctx, 0, dtype, shape)
+    }
+
+    /// `CuArray(Float32, dims)` in a specific pool arena — pass a
+    /// [`Stream::arena_id`](crate::driver::Stream::arena_id) so a
+    /// stream-ordered pipeline's buffers live in their own allocator
+    /// shard (see `docs/memory.md`).
+    pub fn alloc_in(
+        ctx: &Context,
+        arena: usize,
+        dtype: Dtype,
+        shape: &[usize],
+    ) -> Result<DeviceArray> {
         let numel = shape
             .iter()
             .try_fold(1usize, |acc, &d| acc.checked_mul(d))
@@ -34,7 +47,7 @@ impl DeviceArray {
                 dtype.name()
             ))
         })?;
-        let ptr = ctx.alloc(bytes)?;
+        let ptr = ctx.alloc_in(arena, bytes)?;
         Ok(DeviceArray {
             ctx: ctx.clone(),
             ptr,
@@ -49,6 +62,19 @@ impl DeviceArray {
         let arr = Self::alloc(ctx, t.dtype(), t.shape())?;
         arr.upload(t)?;
         Ok(arr)
+    }
+
+    /// Allocate + upload in a specific pool arena (the stream-pipeline
+    /// variant of [`DeviceArray::from_tensor`]).
+    pub fn from_tensor_in(ctx: &Context, arena: usize, t: &Tensor) -> Result<DeviceArray> {
+        let arr = Self::alloc_in(ctx, arena, t.dtype(), t.shape())?;
+        arr.upload(t)?;
+        Ok(arr)
+    }
+
+    /// The context this array's storage belongs to.
+    pub fn context(&self) -> &Context {
+        &self.ctx
     }
 
     pub fn ptr(&self) -> DevicePtr {
@@ -119,10 +145,10 @@ impl Drop for DeviceArray {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::driver::device;
+    use crate::driver::emulator_device;
 
     fn ctx() -> Context {
-        Context::create(&device::device(1).unwrap()).unwrap()
+        Context::create(&emulator_device().unwrap()).unwrap()
     }
 
     #[test]

@@ -8,33 +8,71 @@
 //! pre-allocated buffers, launch, copy `Out`/`InOut` back. Nothing else —
 //! no lookups beyond one cache read, no allocation, no signature string
 //! rebuilt beyond the key (measured by `benches/launch_overhead.rs`).
+//!
+//! # Launch API v2 (see `docs/api.md`)
+//!
+//! * [`Launcher::bind`] resolves + specializes **once** and returns a
+//!   [`KernelHandle`] whose warm path does zero key-building and zero
+//!   cache hashing — [`Launcher::launch`] (and the [`crate::cuda!`]
+//!   macro) stays source-compatible as a thin front-end that adds the
+//!   one cache read.
+//! * Device-resident arguments (`arg::cu_dev` / `arg::cu_dev_mut` over a
+//!   [`crate::coordinator::DeviceArray`]) make the transfer plan skip
+//!   h2d/d2h for data the device already holds; the skips are counted in
+//!   [`LaunchMetrics::skipped_h2d`] / [`LaunchMetrics::skipped_d2h`].
+//! * [`KernelHandle::launch_on`] enqueues the kernel on a
+//!   [`Stream`] and returns a [`PendingLaunch`] joinable via its
+//!   [`Event`] or [`PendingLaunch::wait`] — the stream-ordered async
+//!   path the double-buffered pipelines build on.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::args::{input_signature, Arg, ArgMode};
+use crate::coordinator::args::{input_signature, write_call_signature, Arg, ArgMode};
 use crate::coordinator::cache::{CacheStats, SpecializationCache};
 use crate::coordinator::registry::{KernelRegistry, VtxSpec};
 use crate::driver::backend::TensorSpec;
 use crate::driver::{
-    BackendKind, Context, DevicePtr, KernelArg, LaunchConfig, MemoryPool,
+    BackendKind, Context, DevicePtr, Event, KernelArg, LaunchConfig, LaunchReport, MemoryPool,
+    Stream,
 };
 use crate::error::{Error, Result};
 
 /// Per-argument entry in the precomputed transfer plan.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct PlanEntry {
     mode: ArgMode,
+    dtype: crate::tensor::Dtype,
+    shape: Vec<usize>,
     byte_len: usize,
+    /// Pre-allocated staging buffer for host arguments; null for
+    /// device-resident entries (their pointer is patched in per launch).
     ptr: DevicePtr,
+    /// True when the argument is device-resident (`cu_dev`/`cu_dev_mut`):
+    /// the plan skips both transfer directions for it.
+    device: bool,
 }
 
 /// A cached specialization: everything the warm path needs.
 struct Specialized {
     function: crate::driver::Function,
     plan: Vec<PlanEntry>,
+    /// True when any plan entry stages through a shared host buffer.
+    /// Launches through such a plan serialize on [`Specialized::stage`]
+    /// — cloned handles (and cache-shared specializations) would
+    /// otherwise interleave upload/launch/download on one staging
+    /// buffer and corrupt each other's arguments. All-device-resident
+    /// plans skip the lock entirely.
+    has_host: bool,
+    /// Serializes staged (host-argument) launches; see `has_host`.
+    stage: Mutex<()>,
     /// Launch-time argument vector template (pointers + trailing scalars).
     kernel_args: Vec<KernelArg>,
+    /// `(arg index, kernel_args index)` pairs for device-resident
+    /// arguments: their concrete pointer is patched into a copy of the
+    /// template at launch time, so one specialization serves every
+    /// same-shaped `DeviceArray`.
+    patches: Vec<(usize, usize)>,
     /// Launch configuration override chosen at specialization time (VTX
     /// providers pick their own grid; artifacts run whole-module).
     config: Option<LaunchConfig>,
@@ -45,7 +83,9 @@ struct Specialized {
 impl Drop for Specialized {
     fn drop(&mut self) {
         for e in &self.plan {
-            let _ = self.pool.free(e.ptr);
+            if !e.device {
+                let _ = self.pool.free(e.ptr);
+            }
         }
     }
 }
@@ -57,6 +97,11 @@ pub struct LaunchMetrics {
     pub cold_specializations: u64,
     /// Total nanoseconds spent in cold specialization work.
     pub specialize_ns: u64,
+    /// Host→device copies the transfer planner *skipped* because the
+    /// argument was device-resident (`arg::cu_dev`/`cu_dev_mut`).
+    pub skipped_h2d: u64,
+    /// Device→host copies skipped for device-resident arguments.
+    pub skipped_d2h: u64,
     /// Thread blocks executed by the VTX emulator's block scheduler
     /// (PJRT launches execute whole modules and report zero).
     pub blocks_executed: u64,
@@ -117,8 +162,185 @@ pub enum TransferPolicy {
     /// Respect `In`/`Out`/`InOut` wrappers (the paper's design).
     Minimal,
     /// Ignore wrappers: upload *and* download every argument (what naive
-    /// host code does without the wrappers, §6.3).
+    /// host code does without the wrappers, §6.3). Device-resident
+    /// arguments still skip — their storage never round-trips.
     Naive,
+}
+
+fn effective_mode(policy: TransferPolicy, m: ArgMode) -> ArgMode {
+    match policy {
+        TransferPolicy::Minimal => m,
+        TransferPolicy::Naive => ArgMode::InOut,
+    }
+}
+
+fn absorb_report(m: &mut LaunchMetrics, r: &LaunchReport) {
+    m.launches += 1;
+    m.blocks_executed += r.blocks;
+    m.worker_busy_ns += r.busy_ns;
+    m.exec_wall_ns += r.wall_ns;
+    m.peak_workers = m.peak_workers.max(r.workers);
+    m.instrs_retired += r.instrs;
+    m.fused_instrs += r.fused_instrs;
+    m.dispatches += r.dispatches;
+    m.vector_lane_ops += r.lane_ops;
+    m.vector_lane_slots += r.lane_slots;
+    if r.workers > 1 {
+        m.parallel_launches += 1;
+    }
+}
+
+/// Checked grid/block conversion used by the [`crate::cuda!`] macro:
+/// dimensions that do not fit in `u32` become [`Error::BadArgument`]
+/// instead of the silent `as u32` truncation of the v1 macro.
+pub fn checked_cfg<G, B>(kernel: &str, grid: G, block: B) -> Result<LaunchConfig>
+where
+    G: TryInto<u32> + Copy + std::fmt::Display,
+    B: TryInto<u32> + Copy + std::fmt::Display,
+{
+    let g: u32 = grid.try_into().map_err(|_| Error::BadArgument {
+        kernel: kernel.to_string(),
+        index: 0,
+        reason: format!("grid dimension {grid} does not fit in u32"),
+    })?;
+    let b: u32 = block.try_into().map_err(|_| Error::BadArgument {
+        kernel: kernel.to_string(),
+        index: 0,
+        reason: format!("block dimension {block} does not fit in u32"),
+    })?;
+    Ok(LaunchConfig::new(g, b))
+}
+
+/// Check a call's arguments against a specialization's transfer plan.
+/// The v1 warm path `zip`ped the two and silently truncated on length
+/// mismatch; the v2 path errors with the shape of the disagreement.
+fn validate_args(kernel: &str, spec: &Specialized, args: &[Arg<'_>]) -> Result<()> {
+    if args.len() != spec.plan.len() {
+        return Err(Error::BadArgument {
+            kernel: kernel.to_string(),
+            index: args.len().min(spec.plan.len()),
+            reason: format!(
+                "call passes {} arguments but this specialization's transfer plan has {} \
+                 entries — the handle was bound for a different call shape",
+                args.len(),
+                spec.plan.len()
+            ),
+        });
+    }
+    for (index, (arg, entry)) in args.iter().zip(&spec.plan).enumerate() {
+        if arg.is_device() != entry.device {
+            return Err(Error::BadArgument {
+                kernel: kernel.to_string(),
+                index,
+                reason: if entry.device {
+                    "plan expects a device-resident argument (arg::cu_dev / cu_dev_mut)".into()
+                } else {
+                    "plan expects a host argument, got a device-resident one".into()
+                },
+            });
+        }
+        // Full type-shape check, not just byte length: the handle path
+        // has no cache key to catch an i32[64] passed where the
+        // specialization was built for f32[64].
+        if arg.dtype() != entry.dtype || arg.shape() != entry.shape.as_slice() {
+            return Err(Error::BadArgument {
+                kernel: kernel.to_string(),
+                index,
+                reason: format!(
+                    "argument is {}, the plan was specialized for {}[{}]",
+                    arg.signature(),
+                    entry.dtype.name(),
+                    entry
+                        .shape
+                        .iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// The shared warm path: transfers in, (patched) launch, transfers out,
+/// metrics. [`Launcher::launch`] reaches it through one cache read;
+/// [`KernelHandle::launch`] reaches it directly.
+fn run_launch(
+    kernel: &str,
+    spec: &Specialized,
+    policy: TransferPolicy,
+    metrics: &Mutex<LaunchMetrics>,
+    cfg: LaunchConfig,
+    args: &mut [Arg<'_>],
+) -> Result<()> {
+    validate_args(kernel, spec, args)?;
+    let mem = &spec.pool;
+    // Plans with host staging buffers serialize: concurrent launches
+    // through cloned handles (or the shared cache entry) must not
+    // interleave upload/launch/download on one buffer. All-device plans
+    // have nothing shared to protect and skip the lock.
+    let _stage_guard = if spec.has_host { Some(spec.stage.lock().unwrap()) } else { None };
+    let mut skipped_h2d = 0u64;
+    let mut skipped_d2h = 0u64;
+
+    // ---- uploads (the code fragment ⟨c⟩ of Figure 2) --------------------
+    for (arg, entry) in args.iter().zip(&spec.plan) {
+        if effective_mode(policy, entry.mode).uploads() {
+            if entry.device {
+                skipped_h2d += 1;
+            } else {
+                mem.copy_h2d(entry.ptr, arg.host_tensor().expect("host plan entry").bytes())?;
+            }
+        }
+    }
+
+    // ---- launch, patching device-resident pointers in -------------------
+    let patched: Vec<KernelArg>;
+    let kargs: &[KernelArg] = if spec.patches.is_empty() {
+        &spec.kernel_args
+    } else {
+        let mut v = spec.kernel_args.clone();
+        for &(ai, ki) in &spec.patches {
+            v[ki] = KernelArg::Ptr(args[ai].device_ptr().expect("validated device entry"));
+        }
+        patched = v;
+        &patched
+    };
+    let launch_cfg = spec.config.unwrap_or(cfg);
+    let report = spec.function.launch_report(&launch_cfg, kargs, mem)?;
+
+    // ---- downloads ------------------------------------------------------
+    for (index, (arg, entry)) in args.iter_mut().zip(&spec.plan).enumerate() {
+        if effective_mode(policy, entry.mode).downloads() {
+            if entry.device {
+                skipped_d2h += 1;
+                continue;
+            }
+            match arg.host_tensor_mut() {
+                Some(t) => mem.copy_d2h(entry.ptr, t.bytes_mut())?,
+                None if policy == TransferPolicy::Naive => {
+                    // Naive mode downloads read-only arguments too —
+                    // into a discarded host buffer, modeling the wasted
+                    // transfer the In/Out wrappers avoid (§6.3).
+                    let mut scratch = vec![0u8; entry.byte_len];
+                    mem.copy_d2h(entry.ptr, &mut scratch)?;
+                }
+                None => {
+                    return Err(Error::BadArgument {
+                        kernel: kernel.to_string(),
+                        index,
+                        reason: "Out/InOut argument is not mutable".into(),
+                    })
+                }
+            }
+        }
+    }
+    let mut m = metrics.lock().unwrap();
+    m.skipped_h2d += skipped_h2d;
+    m.skipped_d2h += skipped_d2h;
+    absorb_report(&mut m, &report);
+    Ok(())
 }
 
 /// The automation front-end: owns a context, a registry and the
@@ -128,7 +350,7 @@ pub struct Launcher {
     registry: KernelRegistry,
     cache: SpecializationCache<Specialized>,
     policy: TransferPolicy,
-    metrics: LaunchMetrics,
+    metrics: Arc<Mutex<LaunchMetrics>>,
 }
 
 impl Launcher {
@@ -138,11 +360,12 @@ impl Launcher {
             registry,
             cache: SpecializationCache::new(),
             policy: TransferPolicy::Minimal,
-            metrics: LaunchMetrics::default(),
+            metrics: Arc::new(Mutex::new(LaunchMetrics::default())),
         }
     }
 
-    /// Launcher on device 0 (PJRT) with the default artifact library.
+    /// Launcher on the default PJRT device with the default artifact
+    /// library.
     pub fn with_default_context() -> Result<Self> {
         Ok(Launcher::new(
             Context::default_device()?,
@@ -153,7 +376,7 @@ impl Launcher {
     /// Launcher on the VTX emulator device with an empty registry —
     /// register providers with [`Launcher::registry_mut`].
     pub fn emulator() -> Result<Self> {
-        let dev = crate::driver::device(1)?;
+        let dev = crate::driver::emulator_device()?;
         Ok(Launcher::new(Context::create(&dev)?, KernelRegistry::new(None)))
     }
 
@@ -167,16 +390,39 @@ impl Launcher {
 
     pub fn set_policy(&mut self, policy: TransferPolicy) {
         self.policy = policy;
-        // Plans are policy-dependent; drop them.
+        // Plans are policy-dependent; drop them. Handles bound earlier
+        // keep the policy they were bound under.
         self.cache.clear();
     }
 
     pub fn metrics(&self) -> LaunchMetrics {
-        self.metrics
+        *self.metrics.lock().unwrap()
     }
 
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// One cache read (key built with one pre-sized String — §Perf I3),
+    /// specializing on miss.
+    fn lookup_or_specialize(&mut self, kernel: &str, args: &[Arg<'_>]) -> Result<Arc<Specialized>> {
+        let mut key = String::with_capacity(kernel.len() + 1 + 24 * args.len());
+        key.push_str(kernel);
+        key.push('\u{1}');
+        write_call_signature(&mut key, args);
+        match self.cache.get(&key) {
+            Some(s) => Ok(s),
+            None => {
+                let t0 = Instant::now();
+                let s = self.specialize(kernel, args)?;
+                {
+                    let mut m = self.metrics.lock().unwrap();
+                    m.cold_specializations += 1;
+                    m.specialize_ns += t0.elapsed().as_nanos() as u64;
+                }
+                Ok(self.cache.insert(key, s))
+            }
+        }
     }
 
     /// The `@cuda (grid, block) kernel(args...)` entry point. `cfg` is the
@@ -189,76 +435,24 @@ impl Launcher {
         cfg: LaunchConfig,
         args: &mut [Arg<'_>],
     ) -> Result<()> {
-        let effective_mode = |m: ArgMode| -> ArgMode {
-            match self.policy {
-                TransferPolicy::Minimal => m,
-                TransferPolicy::Naive => ArgMode::InOut,
-            }
-        };
+        let spec = self.lookup_or_specialize(kernel, args)?;
+        run_launch(kernel, &spec, self.policy, &self.metrics, cfg, args)
+    }
 
-        // ---- phase 1+2, cached: macro expansion + generated function ----
-        // (key built with one pre-sized String — §Perf I3)
-        let mut key = String::with_capacity(kernel.len() + 1 + 24 * args.len());
-        key.push_str(kernel);
-        key.push('\u{1}');
-        crate::coordinator::args::write_call_signature(&mut key, args);
-        let spec = match self.cache.get(&key) {
-            Some(s) => s,
-            None => {
-                let t0 = Instant::now();
-                let s = self.specialize(kernel, args)?;
-                self.metrics.cold_specializations += 1;
-                self.metrics.specialize_ns += t0.elapsed().as_nanos() as u64;
-                self.cache.insert(key, s)
-            }
-        };
-
-        // ---- warm path: the code fragment ⟨c⟩ of Figure 2 ---------------
-        let mem = &spec.pool;
-        for (arg, entry) in args.iter().zip(&spec.plan) {
-            if effective_mode(entry.mode).uploads() {
-                mem.copy_h2d(entry.ptr, arg.tensor().bytes())?;
-            }
-        }
-        let launch_cfg = spec.config.unwrap_or(cfg);
-        let report = spec
-            .function
-            .launch_report(&launch_cfg, &spec.kernel_args, mem)?;
-        self.metrics.blocks_executed += report.blocks;
-        self.metrics.worker_busy_ns += report.busy_ns;
-        self.metrics.exec_wall_ns += report.wall_ns;
-        self.metrics.peak_workers = self.metrics.peak_workers.max(report.workers);
-        self.metrics.instrs_retired += report.instrs;
-        self.metrics.fused_instrs += report.fused_instrs;
-        self.metrics.dispatches += report.dispatches;
-        self.metrics.vector_lane_ops += report.lane_ops;
-        self.metrics.vector_lane_slots += report.lane_slots;
-        if report.workers > 1 {
-            self.metrics.parallel_launches += 1;
-        }
-        for (index, (arg, entry)) in args.iter_mut().zip(&spec.plan).enumerate() {
-            if effective_mode(entry.mode).downloads() {
-                match arg.tensor_mut() {
-                    Some(t) => mem.copy_d2h(entry.ptr, t.bytes_mut())?,
-                    None if self.policy == TransferPolicy::Naive => {
-                        // Naive mode downloads read-only arguments too —
-                        // into a discarded host buffer, modeling the wasted
-                        // transfer the In/Out wrappers avoid (§6.3).
-                        let mut scratch = vec![0u8; entry.byte_len];
-                        mem.copy_d2h(entry.ptr, &mut scratch)?;
-                    }
-                    None => {
-                        return Err(Error::BadArgument {
-                            kernel: kernel.to_string(),
-                            index,
-                            reason: "Out/InOut argument is not mutable".into(),
-                        })
-                    }
-                }
-            }
-        }
-        self.metrics.launches += 1;
-        Ok(())
+    /// Launch API v2: resolve + specialize **once** and hand back a
+    /// [`KernelHandle`] bound to this call shape. The handle's warm path
+    /// builds no cache key and takes no cache read — repeated launches
+    /// through it are pure transfer + dispatch work. The handle shares
+    /// this launcher's [`LaunchMetrics`] and stays valid after the
+    /// launcher moves or specializes other kernels.
+    pub fn bind(&mut self, kernel: &str, args: &[Arg<'_>]) -> Result<KernelHandle> {
+        let spec = self.lookup_or_specialize(kernel, args)?;
+        Ok(KernelHandle {
+            kernel: kernel.to_string(),
+            spec,
+            policy: self.policy,
+            metrics: self.metrics.clone(),
+        })
     }
 
     /// Cold path: the `gen_launch` generated function (§6.2). Runs once
@@ -290,13 +484,13 @@ impl Launcher {
                 let in_sig = input_signature(args);
                 let (lib, entry) = self.registry.resolve_artifact(kernel, &in_sig)?;
                 // Shape validation: outputs of the artifact must match the
-                // Out/InOut tensors of the call, in order.
+                // Out/InOut arguments of the call, in order.
                 let out_specs: Vec<TensorSpec> = args
                     .iter()
                     .filter(|a| a.mode().downloads())
                     .map(|a| TensorSpec {
-                        dtype: a.tensor().dtype().name().to_string(),
-                        shape: a.tensor().shape().to_vec(),
+                        dtype: a.dtype().name().to_string(),
+                        shape: a.shape().to_vec(),
                     })
                     .collect();
                 if out_specs.len() != entry.outputs.len() {
@@ -329,8 +523,8 @@ impl Launcher {
                 let specs: Vec<TensorSpec> = args
                     .iter()
                     .map(|a| TensorSpec {
-                        dtype: a.tensor().dtype().name().to_string(),
-                        shape: a.tensor().shape().to_vec(),
+                        dtype: a.dtype().name().to_string(),
+                        shape: a.shape().to_vec(),
                     })
                     .collect();
                 let spec = self.registry.resolve_vtx(kernel, &specs)?;
@@ -372,14 +566,47 @@ impl Launcher {
         }
 
         let pool = self.ctx.memory_arc()?;
-        // Pre-allocate one device buffer per tensor argument; the plan
-        // carries the *resolved* modes (wrapper or inferred).
+        // Pre-allocate one device staging buffer per *host* tensor
+        // argument; device-resident arguments bring their own storage
+        // (their pointer is patched in per launch) and the plan carries
+        // the *resolved* modes (wrapper or inferred).
         let mut plan = Vec::with_capacity(args.len());
-        for (arg, &mode) in args.iter().zip(&modes) {
-            let byte_len = arg.tensor().byte_len();
-            let ptr = pool.alloc(byte_len)?;
-            plan.push(PlanEntry { mode, byte_len, ptr });
+        for (index, (arg, &mode)) in args.iter().zip(&modes).enumerate() {
+            let byte_len = arg.byte_len();
+            if arg.is_device() {
+                // the array must live in this launcher's device memory
+                if let Some(actx) = arg.device_context() {
+                    let theirs = actx.memory_arc()?;
+                    if !Arc::ptr_eq(&pool, &theirs) {
+                        return Err(Error::BadArgument {
+                            kernel: kernel.to_string(),
+                            index,
+                            reason: "device-resident argument belongs to a different context"
+                                .into(),
+                        });
+                    }
+                }
+                plan.push(PlanEntry {
+                    mode,
+                    dtype: arg.dtype(),
+                    shape: arg.shape().to_vec(),
+                    byte_len,
+                    ptr: DevicePtr::null(),
+                    device: true,
+                });
+            } else {
+                let ptr = pool.alloc(byte_len)?;
+                plan.push(PlanEntry {
+                    mode,
+                    dtype: arg.dtype(),
+                    shape: arg.shape().to_vec(),
+                    byte_len,
+                    ptr,
+                    device: false,
+                });
+            }
         }
+        let has_host = plan.iter().any(|e| !e.device);
         // free plan buffers on any later error via Specialized::drop
 
         match source {
@@ -389,13 +616,33 @@ impl Launcher {
                 // PJRT argument order: uploads (inputs) then downloads
                 // (outputs); InOut pointers appear in both lists.
                 let mut kernel_args = Vec::new();
-                for e in plan.iter().filter(|e| e.mode.uploads()) {
-                    kernel_args.push(KernelArg::Ptr(e.ptr));
+                let mut patches = Vec::new();
+                for (i, e) in plan.iter().enumerate() {
+                    if e.mode.uploads() {
+                        if e.device {
+                            patches.push((i, kernel_args.len()));
+                        }
+                        kernel_args.push(KernelArg::Ptr(e.ptr));
+                    }
                 }
-                for e in plan.iter().filter(|e| e.mode.downloads()) {
-                    kernel_args.push(KernelArg::Ptr(e.ptr));
+                for (i, e) in plan.iter().enumerate() {
+                    if e.mode.downloads() {
+                        if e.device {
+                            patches.push((i, kernel_args.len()));
+                        }
+                        kernel_args.push(KernelArg::Ptr(e.ptr));
+                    }
                 }
-                Ok(Specialized { function, plan, kernel_args, config: None, pool })
+                Ok(Specialized {
+                    function,
+                    plan,
+                    has_host,
+                    stage: Mutex::new(()),
+                    kernel_args,
+                    patches,
+                    config: None,
+                    pool,
+                })
             }
             Resolved::Vtx(VtxSpec { kernel: vk, scalars, config }) => {
                 let module = self
@@ -408,11 +655,20 @@ impl Launcher {
                 // call order), then the provider's scalars.
                 let mut kernel_args: Vec<KernelArg> =
                     plan.iter().map(|e| KernelArg::Ptr(e.ptr)).collect();
+                let patches: Vec<(usize, usize)> = plan
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.device)
+                    .map(|(i, _)| (i, i))
+                    .collect();
                 kernel_args.extend(scalars);
                 Ok(Specialized {
                     function,
                     plan,
+                    has_host,
+                    stage: Mutex::new(()),
                     kernel_args,
+                    patches,
                     config: Some(config),
                     pool,
                 })
@@ -421,25 +677,182 @@ impl Launcher {
     }
 }
 
+/// A kernel bound to one call shape (launch API v2): the product of
+/// [`Launcher::bind`]. Holds the specialization directly — launching
+/// through a handle does **zero** cache-key building and **zero** cache
+/// lookups, only the transfer plan and the dispatch. Cheap to clone;
+/// clones share the specialization and the launcher's metrics.
+#[derive(Clone)]
+pub struct KernelHandle {
+    kernel: String,
+    spec: Arc<Specialized>,
+    policy: TransferPolicy,
+    metrics: Arc<Mutex<LaunchMetrics>>,
+}
+
+impl KernelHandle {
+    /// The logical kernel name this handle was bound to.
+    pub fn kernel(&self) -> &str {
+        &self.kernel
+    }
+
+    /// Synchronous launch through the bound specialization. Arguments
+    /// must match the bound call shape (same count, residency and byte
+    /// lengths) — a different same-shaped `DeviceArray` is fine, its
+    /// pointer is patched into the launch.
+    pub fn launch(&self, cfg: LaunchConfig, args: &mut [Arg<'_>]) -> Result<()> {
+        run_launch(&self.kernel, &self.spec, self.policy, &self.metrics, cfg, args)
+    }
+
+    /// Stream-ordered asynchronous launch (launch API v2): enqueue the
+    /// kernel on `stream` and return immediately with a
+    /// [`PendingLaunch`] joinable via [`PendingLaunch::wait`] or fence-
+    /// able via its [`Event`].
+    ///
+    /// Host `In` arguments are copied into owned buffers and their
+    /// uploads **enqueued on the stream ahead of the kernel**, so
+    /// back-to-back `launch_on` calls through one handle stay correctly
+    /// ordered (call N+1's upload cannot overwrite staging before call
+    /// N's kernel has run). A handle with host-staged arguments must not
+    /// be launched concurrently on *different* streams — the staging
+    /// buffers are shared; use device-resident arguments (or separate
+    /// handles) for cross-stream pipelines. Every `Out`/`InOut` argument
+    /// must be **device-resident** (`arg::cu_dev_mut`): an async launch
+    /// cannot write back into borrowed host memory; download the result
+    /// after joining.
+    pub fn launch_on<'s>(
+        &self,
+        stream: &'s Stream,
+        cfg: LaunchConfig,
+        args: &mut [Arg<'_>],
+    ) -> Result<PendingLaunch<'s>> {
+        let spec = &*self.spec;
+        validate_args(&self.kernel, spec, args)?;
+        let mut skipped_h2d = 0u64;
+        let mut skipped_d2h = 0u64;
+        for (index, entry) in spec.plan.iter().enumerate() {
+            let mode = effective_mode(self.policy, entry.mode);
+            if mode.downloads() && !entry.device {
+                return Err(Error::BadArgument {
+                    kernel: self.kernel.clone(),
+                    index,
+                    reason: "async launch_on requires Out/InOut arguments to be \
+                             device-resident (arg::cu_dev_mut); download explicitly after \
+                             wait()"
+                        .into(),
+                });
+            }
+            if mode.uploads() && entry.device {
+                skipped_h2d += 1;
+            }
+            if mode.downloads() && entry.device {
+                skipped_d2h += 1;
+            }
+        }
+        // Serialize the enqueue sequence for host-staged plans so two
+        // threads sharing a handle cannot interleave their upload/kernel
+        // ops on the stream.
+        let _stage_guard = if spec.has_host { Some(spec.stage.lock().unwrap()) } else { None };
+        for (arg, entry) in args.iter().zip(&spec.plan) {
+            if effective_mode(self.policy, entry.mode).uploads() && !entry.device {
+                let bytes = arg.host_tensor().expect("host plan entry").bytes().to_vec();
+                stream.copy_h2d(spec.pool.clone(), entry.ptr, bytes)?;
+            }
+        }
+        // Owned, patched argument vector: moves into the stream closure.
+        let mut kargs = spec.kernel_args.clone();
+        for &(ai, ki) in &spec.patches {
+            kargs[ki] = KernelArg::Ptr(args[ai].device_ptr().expect("validated device entry"));
+        }
+        let launch_cfg = spec.config.unwrap_or(cfg);
+        let function = spec.function.clone();
+        let pool = spec.pool.clone();
+        let metrics = self.metrics.clone();
+        let error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let slot = error.clone();
+        stream.enqueue(move || match function.launch_report(&launch_cfg, &kargs, &pool) {
+            Ok(report) => {
+                let mut m = metrics.lock().unwrap();
+                m.skipped_h2d += skipped_h2d;
+                m.skipped_d2h += skipped_d2h;
+                absorb_report(&mut m, &report);
+                Ok(())
+            }
+            Err(e) => {
+                *slot.lock().unwrap() = Some(e.to_string());
+                Err(e)
+            }
+        })?;
+        let event = Event::new();
+        stream.record_event(&event)?;
+        Ok(PendingLaunch { stream, event, error })
+    }
+}
+
+/// An in-flight stream-ordered launch: join it with
+/// [`PendingLaunch::wait`], or fence another stream on its
+/// [`PendingLaunch::event`] without blocking the host.
+pub struct PendingLaunch<'s> {
+    stream: &'s Stream,
+    event: Event,
+    error: Arc<Mutex<Option<String>>>,
+}
+
+impl PendingLaunch<'_> {
+    /// Event recorded immediately after the kernel on the stream — pass
+    /// it to [`Stream::wait_event`] to order another stream's work after
+    /// this launch.
+    pub fn event(&self) -> &Event {
+        &self.event
+    }
+
+    /// `cuEventQuery` semantics: has the launch (and everything before it
+    /// on the stream) completed?
+    pub fn is_done(&self) -> bool {
+        self.event.query()
+    }
+
+    /// Block until the launch has completed and surface its error, or —
+    /// CUDA's sticky-error model — any earlier failure on the stream.
+    pub fn wait(self) -> Result<()> {
+        self.event.synchronize();
+        if let Some(msg) = self.error.lock().unwrap().take() {
+            return Err(Error::Stream(msg));
+        }
+        if let Some(msg) = self.stream.peek_error() {
+            return Err(Error::Stream(msg));
+        }
+        Ok(())
+    }
+}
+
 /// The `@cuda` macro analog: `cuda!(launcher, (grid, block), kernel(args...))`.
 ///
 /// Mirrors the paper's Listing 3 call syntax:
 /// `@cuda (len, 1) vadd(CuIn(a), CuIn(b), CuOut(c))`.
+///
+/// The kernel may be a bare identifier or a string literal
+/// (`cuda!(l, (1, n), "sinogram_all"(...))` — useful for names that are
+/// not rust identifiers). Grid/block dimensions are converted with
+/// checked arithmetic: values exceeding `u32::MAX` return
+/// [`Error::BadArgument`](crate::Error::BadArgument) instead of silently
+/// truncating.
 #[macro_export]
 macro_rules! cuda {
     ($launcher:expr, ($grid:expr, $block:expr), $kernel:ident ( $($arg:expr),* $(,)? )) => {
-        $launcher.launch(
-            stringify!($kernel),
-            $crate::driver::LaunchConfig::new($grid as u32, $block as u32),
-            &mut [$($arg),*],
-        )
+        $crate::coordinator::launch::checked_cfg(stringify!($kernel), $grid, $block)
+            .and_then(|cfg| $launcher.launch(stringify!($kernel), cfg, &mut [$($arg),*]))
+    };
+    ($launcher:expr, ($grid:expr, $block:expr), $kernel:literal ( $($arg:expr),* $(,)? )) => {
+        $crate::coordinator::launch::checked_cfg($kernel, $grid, $block)
+            .and_then(|cfg| $launcher.launch($kernel, cfg, &mut [$($arg),*]))
     };
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::arg;
+    use crate::coordinator::{arg, DeviceArray};
     use crate::emulator::kernels;
     use crate::tensor::Tensor;
 
@@ -467,6 +880,37 @@ mod tests {
     }
 
     #[test]
+    fn string_literal_kernel_names_work() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 4], &[4]);
+        let b = Tensor::from_f32(&[2.0; 4], &[4]);
+        let mut c = Tensor::zeros_f32(&[4]);
+        cuda!(l, (1, 4), "vadd"(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c))).unwrap();
+        assert!(c.as_f32().iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn oversized_dims_error_instead_of_truncating() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 4], &[4]);
+        let b = Tensor::from_f32(&[2.0; 4], &[4]);
+        let mut c = Tensor::zeros_f32(&[4]);
+        // u32::MAX + 1 used to truncate to grid 0 via `as u32`
+        let big: u64 = u64::from(u32::MAX) + 1;
+        let err = cuda!(l, (big, 4), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+            .unwrap_err();
+        assert!(matches!(err, Error::BadArgument { .. }), "{err}");
+        assert!(err.to_string().contains("grid dimension"), "{err}");
+        let err = cuda!(l, (1, big), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+            .unwrap_err();
+        assert!(err.to_string().contains("block dimension"), "{err}");
+        // in-range values still go through unscathed
+        cuda!(l, (1u64, 4usize), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
+            .unwrap();
+        assert!(c.as_f32().iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
     fn cache_hit_on_second_call_miss_on_new_signature() {
         let mut l = emulator_launcher_with_vadd();
         let a = Tensor::from_f32(&[1.0; 8], &[8]);
@@ -486,6 +930,104 @@ mod tests {
         cuda!(l, (1, 16), vadd(arg::cu_in(&a2), arg::cu_in(&b2), arg::cu_out(&mut c2))).unwrap();
         assert_eq!(l.metrics().cold_specializations, 2);
         assert_eq!(c2.as_f32()[0], 3.0);
+    }
+
+    #[test]
+    fn bound_handle_launches_without_cache_traffic() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 32], &[32]);
+        let b = Tensor::from_f32(&[2.0; 32], &[32]);
+        let mut c = Tensor::zeros_f32(&[32]);
+        let handle = l
+            .bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap();
+        let before = l.cache_stats();
+        let cfg = LaunchConfig::new(1u32, 32u32);
+        for _ in 0..10 {
+            handle
+                .launch(cfg, &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+                .unwrap();
+        }
+        assert!(c.as_f32().iter().all(|&v| v == 3.0));
+        let after = l.cache_stats();
+        assert_eq!(before.hits, after.hits, "handle launches read no cache");
+        assert_eq!(before.misses, after.misses);
+        assert_eq!(l.metrics().launches, 10);
+    }
+
+    #[test]
+    fn handle_rejects_mismatched_call_shapes() {
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 8], &[8]);
+        let b = Tensor::from_f32(&[2.0; 8], &[8]);
+        let mut c = Tensor::zeros_f32(&[8]);
+        let handle = l
+            .bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap();
+        let cfg = LaunchConfig::new(1u32, 8u32);
+        // wrong arity: the v1 warm path zip-truncated this silently
+        let err = handle.launch(cfg, &mut [arg::cu_in(&a)]).unwrap_err();
+        assert!(matches!(err, Error::BadArgument { .. }), "{err}");
+        assert!(err.to_string().contains("transfer plan"), "{err}");
+        // wrong byte length
+        let short = Tensor::from_f32(&[1.0; 4], &[4]);
+        let err = handle
+            .launch(cfg, &mut [arg::cu_in(&short), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap_err();
+        assert!(matches!(err, Error::BadArgument { .. }), "{err}");
+        // wrong residency
+        let ctx = l.context().clone();
+        let dev_a = DeviceArray::from_tensor(&ctx, &a).unwrap();
+        let err = handle
+            .launch(cfg, &mut [arg::cu_dev(&dev_a), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap_err();
+        assert!(err.to_string().contains("host argument"), "{err}");
+    }
+
+    #[test]
+    fn device_resident_args_skip_all_transfers() {
+        let mut l = emulator_launcher_with_vadd();
+        let ctx = l.context().clone();
+        let a = Tensor::from_f32(&[1.0; 16], &[16]);
+        let b = Tensor::from_f32(&[2.0; 16], &[16]);
+        let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+        let db = DeviceArray::from_tensor(&ctx, &b).unwrap();
+        let mut dc = DeviceArray::alloc(&ctx, crate::tensor::Dtype::F32, &[16]).unwrap();
+        ctx.memory().unwrap().reset_stats();
+        let cfg = LaunchConfig::new(1u32, 16u32);
+        l.launch(
+            "vadd",
+            cfg,
+            &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)],
+        )
+        .unwrap();
+        let st = ctx.mem_stats().unwrap();
+        assert_eq!(st.h2d_count, 0, "device-resident args upload nothing");
+        assert_eq!(st.d2h_count, 0, "results stay on device");
+        let m = l.metrics();
+        assert_eq!(m.skipped_h2d, 3, "a, b (In) + c (InOut) skipped uploads");
+        assert_eq!(m.skipped_d2h, 1, "c (InOut) skipped download");
+        // the result is there when the host finally asks
+        let out = dc.download().unwrap();
+        assert!(out.as_f32().iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn device_args_from_foreign_context_rejected() {
+        let mut l = emulator_launcher_with_vadd();
+        let other = Context::create(&crate::driver::emulator_device().unwrap()).unwrap();
+        let t = Tensor::from_f32(&[1.0; 8], &[8]);
+        let foreign = DeviceArray::from_tensor(&other, &t).unwrap();
+        let b = Tensor::from_f32(&[2.0; 8], &[8]);
+        let mut c = Tensor::zeros_f32(&[8]);
+        let err = l
+            .launch(
+                "vadd",
+                LaunchConfig::new(1u32, 8u32),
+                &mut [arg::cu_dev(&foreign), arg::cu_in(&b), arg::cu_out(&mut c)],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("different context"), "{err}");
     }
 
     #[test]

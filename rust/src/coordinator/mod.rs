@@ -6,8 +6,13 @@
 //! * [`registry`] — logical-kernel resolution: AOT artifacts for the PJRT
 //!   device, generated VTX kernels for the emulator device;
 //! * [`launch`] — [`Launcher`] + the [`crate::cuda!`] macro, the
-//!   `@cuda (grid, block) kernel(args...)` front-end;
-//! * [`devarray`] — `CuArray`-style manual API for the non-automated path.
+//!   `@cuda (grid, block) kernel(args...)` front-end, plus the v2
+//!   surface: [`Launcher::bind`] → [`KernelHandle`] (zero cache traffic
+//!   on the warm path) and [`KernelHandle::launch_on`] →
+//!   [`PendingLaunch`] (stream-ordered async launches) — see
+//!   `docs/api.md`;
+//! * [`devarray`] — `CuArray`-style device-resident arrays; first-class
+//!   launch arguments via [`arg::cu_dev`] / [`arg::cu_dev_mut`].
 
 pub mod args;
 pub mod cache;
@@ -18,10 +23,12 @@ pub mod registry;
 pub use args::{call_signature, input_signature, Arg, ArgMode};
 pub use cache::{CacheStats, SpecializationCache};
 pub use devarray::DeviceArray;
-pub use launch::{LaunchMetrics, Launcher, TransferPolicy};
+pub use launch::{
+    checked_cfg, KernelHandle, LaunchMetrics, Launcher, PendingLaunch, TransferPolicy,
+};
 pub use registry::{KernelRegistry, KernelSource, VtxSpec};
 
 /// Argument constructors, idiomatically imported as `coordinator::arg`.
 pub mod arg {
-    pub use super::args::{cu_auto, cu_in, cu_inout, cu_out};
+    pub use super::args::{cu_auto, cu_dev, cu_dev_mut, cu_in, cu_inout, cu_out};
 }

@@ -92,6 +92,13 @@ impl Context {
         self.memory()?.alloc(bytes)
     }
 
+    /// Allocate in a specific pool arena — pass a
+    /// [`Stream::arena_id`](crate::driver::Stream::arena_id) so the
+    /// stream's buffers live in their own allocator shard.
+    pub fn alloc_in(&self, arena: usize, bytes: usize) -> Result<DevicePtr> {
+        self.memory()?.alloc_in(arena, bytes)
+    }
+
     pub fn free(&self, ptr: DevicePtr) -> Result<()> {
         self.memory()?.free(ptr)
     }
@@ -201,8 +208,8 @@ mod tests {
     use crate::driver::device;
 
     fn emulator_ctx() -> Context {
-        // Device 1 (VTX emulator) needs no PJRT client — fast for tests.
-        Context::create(&device::device(1).unwrap()).unwrap()
+        // The VTX emulator device needs no PJRT client — fast for tests.
+        Context::create(&device::emulator_device().unwrap()).unwrap()
     }
 
     #[test]

@@ -89,6 +89,27 @@ pub fn devices() -> Vec<Device> {
     device_table().to_vec()
 }
 
+/// The first device backed by the VTX emulator. Use this instead of a
+/// hardcoded ordinal — the device table's layout is not part of the API
+/// contract.
+pub fn emulator_device() -> Result<Device> {
+    device_table()
+        .iter()
+        .find(|d| d.kind == BackendKind::VtxEmulator)
+        .cloned()
+        .ok_or_else(|| Error::Other("no VTX emulator device visible".into()))
+}
+
+/// The first PJRT-backed device (the simulated accelerator executing AOT
+/// artifacts).
+pub fn pjrt_device() -> Result<Device> {
+    device_table()
+        .iter()
+        .find(|d| d.kind == BackendKind::Pjrt)
+        .cloned()
+        .ok_or_else(|| Error::Other("no PJRT device visible".into()))
+}
+
 impl Device {
     /// Instantiate the execution backend for this device. PJRT backends
     /// share a process-global client (PJRT clients are heavyweight).
@@ -110,6 +131,12 @@ mod tests {
         assert_eq!(device(0).unwrap().kind, BackendKind::Pjrt);
         assert_eq!(device(1).unwrap().kind, BackendKind::VtxEmulator);
         assert!(matches!(device(9), Err(Error::InvalidDevice(9))));
+    }
+
+    #[test]
+    fn named_device_lookups() {
+        assert_eq!(emulator_device().unwrap().kind, BackendKind::VtxEmulator);
+        assert_eq!(pjrt_device().unwrap().kind, BackendKind::Pjrt);
     }
 
     #[test]

@@ -37,9 +37,27 @@
 //!   silently disabling the bound (the pressure-release path still
 //!   empties the cache before reporting `OutOfMemory`). Evictions
 //!   surface as `evicted_bytes` / `evicted_blocks` in [`MemStats`].
+//!
+//! # Per-stream allocation arenas
+//!
+//! The pool is sharded into **arenas** (`HLGPU_ARENAS`, default 4): each
+//! arena owns its own lock, buffer map and free bins, and a handle
+//! encodes the arena it belongs to, so allocations, frees and copies
+//! against buffers in *different* arenas never contend on one mutex.
+//! [`crate::driver::Stream`]s carry an arena id (round-robin at
+//! creation) and stream-ordered pipelines allocate their double buffers
+//! with [`MemoryPool::alloc_in`] — concurrent streams then stop
+//! serializing on the allocator, the ROADMAP "per-stream allocation
+//! arenas" item. Plain [`MemoryPool::alloc`] always uses arena 0, so
+//! single-threaded workloads keep the exact single-lock semantics
+//! (including LRU order) they had before sharding. Pool-wide gauges
+//! (live/cached/peak bytes) are atomics shared by all arenas; capacity
+//! and the `HLGPU_POOL_CAP` bound are enforced against those global
+//! gauges, with LRU eviction draining the freeing arena first and
+//! sweeping the others only if the bound is still exceeded.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
@@ -86,7 +104,8 @@ impl PoolPolicy {
     }
 }
 
-/// Running transfer / allocation statistics for a pool.
+/// Running transfer / allocation statistics for a pool, aggregated over
+/// every arena.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MemStats {
     pub alloc_count: u64,
@@ -139,30 +158,97 @@ fn bin_size(bytes: usize) -> usize {
     bytes.checked_next_power_of_two().unwrap_or(bytes).max(MIN_BIN)
 }
 
-struct PoolInner {
+/// Per-arena event counters. Gauges (live/cached/peak bytes) and the
+/// pressure counters (trim/evict) are pool-global atomics instead — they
+/// feed capacity decisions that span arenas.
+#[derive(Clone, Copy, Debug, Default)]
+struct ArenaCounters {
+    alloc_count: u64,
+    free_count: u64,
+    h2d_count: u64,
+    d2h_count: u64,
+    d2d_count: u64,
+    h2d_bytes: u64,
+    d2h_bytes: u64,
+    d2d_bytes: u64,
+    reuse_count: u64,
+    reuse_bytes: u64,
+}
+
+/// One allocation arena: its own buffer map and free bins behind its own
+/// lock.
+struct ArenaInner {
     buffers: HashMap<u64, Vec<u8>>,
     /// bin size -> parked buffers (each with `len == capacity == bin`),
     /// FIFO-ordered and stamped with a park sequence number: reuse pops
     /// the warm back, LRU eviction pops the oldest front.
     free_bins: HashMap<usize, VecDeque<(u64, Vec<u8>)>>,
-    /// Monotonic park stamp for LRU ordering across bins.
-    park_seq: u64,
-    stats: MemStats,
+    counters: ArenaCounters,
+    /// Local mirror of this arena's share of the global cached gauge.
+    cached_bytes: usize,
+    cached_blocks: usize,
+}
+
+impl ArenaInner {
+    fn new() -> Self {
+        ArenaInner {
+            buffers: HashMap::new(),
+            free_bins: HashMap::new(),
+            counters: ArenaCounters::default(),
+            cached_bytes: 0,
+            cached_blocks: 0,
+        }
+    }
+}
+
+/// Pool-global gauges and pressure counters, shared by every arena.
+struct GlobalGauges {
+    current_bytes: AtomicUsize,
+    peak_bytes: AtomicUsize,
+    cached_bytes: AtomicUsize,
+    cached_blocks: AtomicUsize,
+    trim_count: AtomicU64,
+    trimmed_bytes: AtomicU64,
+    evicted_bytes: AtomicU64,
+    evicted_blocks: AtomicU64,
+    /// Monotonic park stamp for LRU ordering across bins (and arenas).
+    park_seq: AtomicU64,
+}
+
+impl GlobalGauges {
+    fn new() -> Self {
+        GlobalGauges {
+            current_bytes: AtomicUsize::new(0),
+            peak_bytes: AtomicUsize::new(0),
+            cached_bytes: AtomicUsize::new(0),
+            cached_blocks: AtomicUsize::new(0),
+            trim_count: AtomicU64::new(0),
+            trimmed_bytes: AtomicU64::new(0),
+            evicted_bytes: AtomicU64::new(0),
+            evicted_blocks: AtomicU64::new(0),
+            park_seq: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Device memory pool. One per context (the CUDA context owns allocations
-/// the same way). Thread-safe: streams copy concurrently.
+/// the same way). Thread-safe, and sharded into per-stream arenas:
+/// streams that allocate/copy in different arenas never contend.
 pub struct MemoryPool {
     capacity: usize,
     policy: PoolPolicy,
     /// LRU bound on parked (cached) bytes; `None` = unbounded.
     cache_cap: Option<usize>,
     next: AtomicU64,
-    inner: Mutex<PoolInner>,
+    arenas: Vec<Mutex<ArenaInner>>,
+    global: GlobalGauges,
 }
 
 /// Default simulated device memory: 4 GiB (GTX-Titan-class with headroom).
 pub const DEFAULT_CAPACITY: usize = 4 << 30;
+
+/// Default arena (shard) count when `HLGPU_ARENAS` is unset.
+pub const DEFAULT_ARENAS: usize = 4;
 
 /// Parse an `HLGPU_POOL_CAP` value: plain bytes with an optional
 /// `k`/`m`/`g` (or `kb`/`mb`/`gb`) suffix, powers of 1024.
@@ -209,24 +295,38 @@ fn cache_cap_from_env() -> Option<usize> {
     }
 }
 
+/// Arena count selected by `HLGPU_ARENAS` (>= 1); [`DEFAULT_ARENAS`]
+/// when unset or unparseable.
+fn arena_count_from_env() -> usize {
+    std::env::var("HLGPU_ARENAS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_ARENAS)
+}
+
 impl MemoryPool {
-    /// Pool with the policy selected by `HLGPU_POOL` (cached by default).
+    /// Pool with the policy selected by `HLGPU_POOL` (cached by default)
+    /// and the arena count selected by `HLGPU_ARENAS`.
     pub fn new(capacity: usize) -> Self {
         Self::with_policy(capacity, PoolPolicy::from_env())
     }
 
     pub fn with_policy(capacity: usize, policy: PoolPolicy) -> Self {
+        Self::with_policy_arenas(capacity, policy, arena_count_from_env())
+    }
+
+    /// Pool with an explicit arena (shard) count; `arenas` is floored
+    /// at 1.
+    pub fn with_policy_arenas(capacity: usize, policy: PoolPolicy, arenas: usize) -> Self {
+        let n = arenas.max(1);
         MemoryPool {
             capacity,
             policy,
             cache_cap: cache_cap_from_env(),
             next: AtomicU64::new(1),
-            inner: Mutex::new(PoolInner {
-                buffers: HashMap::new(),
-                free_bins: HashMap::new(),
-                park_seq: 0,
-                stats: MemStats::default(),
-            }),
+            arenas: (0..n).map(|_| Mutex::new(ArenaInner::new())).collect(),
+            global: GlobalGauges::new(),
         }
     }
 
@@ -250,58 +350,117 @@ impl MemoryPool {
         self.cache_cap
     }
 
-    /// `cuMemAlloc`: allocate `bytes` of device memory. Contents are
-    /// unspecified (fresh blocks happen to be zeroed, recycled blocks
-    /// keep stale data — as on real hardware).
-    pub fn alloc(&self, bytes: usize) -> Result<DevicePtr> {
-        let mut guard = self.inner.lock().unwrap();
-        let inner = &mut *guard;
+    /// Number of allocation arenas (lock shards) in this pool.
+    pub fn arena_count(&self) -> usize {
+        self.arenas.len()
+    }
 
-        // Fast path: recycle from the matching bin. Never increases the
-        // pool's footprint (bin >= bytes), so no capacity check needed.
+    /// Arena a handle routes to (handles encode their arena).
+    fn arena_of(&self, ptr: DevicePtr) -> usize {
+        (ptr.0 % self.arenas.len() as u64) as usize
+    }
+
+    /// Map an `alloc_in` arena request to a shard index. Zero always
+    /// means the default arena; nonzero requests (stream arena ids,
+    /// which grow without bound) spread over shards `1..n` and **never**
+    /// land on arena 0 — otherwise the 4th stream of a default 4-arena
+    /// pool would silently share the synchronous path's lock again.
+    fn arena_index(&self, arena: usize) -> usize {
+        let n = self.arenas.len();
+        if arena == 0 || n == 1 {
+            0
+        } else {
+            1 + (arena - 1) % (n - 1)
+        }
+    }
+
+    /// Reserve `bytes` of live capacity with a compare-exchange loop —
+    /// two arenas allocating concurrently must not both pass a stale
+    /// capacity check and overcommit the device. The cached-bytes term
+    /// is a snapshot (parking is advisory and self-heals via pressure
+    /// trims), but live bytes never exceed capacity.
+    fn try_reserve(&self, bytes: usize) -> bool {
+        let mut current = self.global.current_bytes.load(Ordering::Relaxed);
+        loop {
+            let cached = self.global.cached_bytes.load(Ordering::Relaxed);
+            let fits = match current.checked_add(cached).and_then(|f| f.checked_add(bytes)) {
+                Some(f) => f <= self.capacity,
+                None => false,
+            };
+            if !fits {
+                return false;
+            }
+            match self.global.current_bytes.compare_exchange_weak(
+                current,
+                current + bytes,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => current = now,
+            }
+        }
+    }
+
+    fn oom(&self, requested: usize) -> Error {
+        Error::OutOfMemory {
+            requested,
+            available: self
+                .capacity
+                .saturating_sub(self.global.current_bytes.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// `cuMemAlloc`: allocate `bytes` of device memory in arena 0.
+    /// Contents are unspecified (fresh blocks happen to be zeroed,
+    /// recycled blocks keep stale data — as on real hardware).
+    pub fn alloc(&self, bytes: usize) -> Result<DevicePtr> {
+        self.alloc_in(0, bytes)
+    }
+
+    /// `cuMemAlloc` in a specific arena. `0` is the default arena;
+    /// nonzero requests spread over the shards `1..n` and never land on
+    /// arena 0 (stream ids grow without bound — wrapping them back onto
+    /// the default arena would silently reintroduce the shared lock).
+    /// Streams pass their [`crate::driver::Stream::arena_id`] here so
+    /// concurrent pipelines allocate without lock contention.
+    pub fn alloc_in(&self, arena: usize, bytes: usize) -> Result<DevicePtr> {
+        let arena = self.arena_index(arena);
+
+        // Fast path: recycle from the matching bin of this arena. Never
+        // increases the pool's footprint (bin >= bytes), so no capacity
+        // check needed.
         if self.policy == PoolPolicy::Cached {
             let bin = bin_size(bytes);
+            let mut inner = self.arenas[arena].lock().unwrap();
             // Pop the warm end (most recently parked); the LRU bound
             // evicts from the cold front.
             if let Some((_, mut buf)) = inner.free_bins.get_mut(&bin).and_then(|v| v.pop_back())
             {
                 buf.truncate(bytes); // parked with len == bin >= bytes
-                inner.stats.cached_bytes -= bin;
-                inner.stats.cached_blocks -= 1;
-                inner.stats.reuse_count += 1;
-                inner.stats.reuse_bytes += bytes as u64;
-                return Ok(self.finish_alloc(inner, bytes, buf));
+                inner.cached_bytes -= bin;
+                inner.cached_blocks -= 1;
+                self.global.cached_bytes.fetch_sub(bin, Ordering::Relaxed);
+                self.global.cached_blocks.fetch_sub(1, Ordering::Relaxed);
+                inner.counters.reuse_count += 1;
+                inner.counters.reuse_bytes += bytes as u64;
+                return Ok(self.finish_alloc(&mut inner, arena, bytes, buf, false));
             }
         }
 
-        // Slow path: fresh allocation. The capacity check must be
-        // overflow-safe — `current + bytes` can wrap for absurd requests
-        // and would then sail past an unchecked comparison.
-        let oom = |inner: &PoolInner| Error::OutOfMemory {
-            requested: bytes,
-            available: self.capacity.saturating_sub(inner.stats.current_bytes),
-        };
-        let footprint = |live: usize, extra: usize, bytes: usize| -> Option<usize> {
-            live.checked_add(extra)?.checked_add(bytes)
-        };
-        let over = match footprint(inner.stats.current_bytes, inner.stats.cached_bytes, bytes)
-        {
-            Some(f) => f > self.capacity,
-            None => true,
-        };
-        if over {
+        // Slow path: fresh allocation. Capacity is reserved up front
+        // with a compare-exchange (overflow-safe inside `try_reserve`) —
+        // two arenas racing here must not both pass a stale check.
+        if !self.try_reserve(bytes) {
             // Unsatisfiable requests must not wipe the warm cache.
             if bytes > self.capacity {
-                return Err(oom(inner));
+                return Err(self.oom(bytes));
             }
-            // Pressure release: drop cached blocks before giving up.
-            Self::trim_locked(inner);
-            let still_over = match inner.stats.current_bytes.checked_add(bytes) {
-                Some(f) => f > self.capacity,
-                None => true,
-            };
-            if still_over {
-                return Err(oom(inner));
+            // Pressure release: drop cached blocks (all arenas) before
+            // giving up.
+            self.trim();
+            if !self.try_reserve(bytes) {
+                return Err(self.oom(bytes));
             }
         }
         let buf = match self.policy {
@@ -314,15 +473,34 @@ impl MemoryPool {
             }
             PoolPolicy::Uncached => vec![0u8; bytes],
         };
-        Ok(self.finish_alloc(inner, bytes, buf))
+        let mut inner = self.arenas[arena].lock().unwrap();
+        Ok(self.finish_alloc(&mut inner, arena, bytes, buf, true))
     }
 
-    fn finish_alloc(&self, inner: &mut PoolInner, bytes: usize, buf: Vec<u8>) -> DevicePtr {
-        let handle = self.next.fetch_add(1, Ordering::Relaxed);
+    fn finish_alloc(
+        &self,
+        inner: &mut ArenaInner,
+        arena: usize,
+        bytes: usize,
+        buf: Vec<u8>,
+        reserved: bool,
+    ) -> DevicePtr {
+        // Handles encode their arena: handle = seq * arenas + arena,
+        // seq >= 1, so 0 stays the null pointer and `arena_of` is a
+        // modulo.
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        let handle = seq * self.arenas.len() as u64 + arena as u64;
         inner.buffers.insert(handle, buf);
-        inner.stats.alloc_count += 1;
-        inner.stats.current_bytes += bytes;
-        inner.stats.peak_bytes = inner.stats.peak_bytes.max(inner.stats.current_bytes);
+        inner.counters.alloc_count += 1;
+        // The slow path already reserved its bytes in `try_reserve`; the
+        // bin-reuse path (bin >= bytes, so it never grows the footprint)
+        // accounts here.
+        let cur = if reserved {
+            self.global.current_bytes.load(Ordering::Relaxed)
+        } else {
+            self.global.current_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes
+        };
+        self.global.peak_bytes.fetch_max(cur, Ordering::Relaxed);
         DevicePtr(handle)
     }
 
@@ -331,12 +509,14 @@ impl MemoryPool {
     /// Under the cached policy the storage is parked in its size bin; the
     /// handle is dead either way.
     pub fn free(&self, ptr: DevicePtr) -> Result<()> {
-        let mut guard = self.inner.lock().unwrap();
-        let inner = &mut *guard;
+        let arena = self.arena_of(ptr);
+        let mut inner = self.arenas[arena].lock().unwrap();
         match inner.buffers.remove(&ptr.0) {
             Some(mut buf) => {
-                inner.stats.free_count += 1;
-                inner.stats.current_bytes -= buf.len();
+                inner.counters.free_count += 1;
+                self.global
+                    .current_bytes
+                    .fetch_sub(buf.len(), Ordering::Relaxed);
                 if self.policy == PoolPolicy::Cached {
                     let bin = bin_size(buf.len());
                     // A block whose bin alone exceeds the LRU bound can
@@ -351,11 +531,9 @@ impl MemoryPool {
                     // Park only while live + cached stays within capacity
                     // (bin rounding could otherwise overcommit the
                     // device); blocks that do not fit are released.
-                    let fits = match inner
-                        .stats
-                        .current_bytes
-                        .checked_add(inner.stats.cached_bytes)
-                        .and_then(|f| f.checked_add(bin))
+                    let current = self.global.current_bytes.load(Ordering::Relaxed);
+                    let cached = self.global.cached_bytes.load(Ordering::Relaxed);
+                    let fits = match current.checked_add(cached).and_then(|f| f.checked_add(bin))
                     {
                         Some(f) => f <= self.capacity,
                         None => false,
@@ -364,13 +542,21 @@ impl MemoryPool {
                         // Capacity was reserved at the bin size, so this
                         // never reallocates.
                         buf.resize(bin, 0u8);
-                        inner.stats.cached_bytes += bin;
-                        inner.stats.cached_blocks += 1;
-                        let seq = inner.park_seq;
-                        inner.park_seq += 1;
+                        inner.cached_bytes += bin;
+                        inner.cached_blocks += 1;
+                        self.global.cached_bytes.fetch_add(bin, Ordering::Relaxed);
+                        self.global.cached_blocks.fetch_add(1, Ordering::Relaxed);
+                        let seq = self.global.park_seq.fetch_add(1, Ordering::Relaxed);
                         inner.free_bins.entry(bin).or_default().push_back((seq, buf));
                         if let Some(cap) = self.cache_cap {
-                            Self::evict_lru(inner, cap);
+                            // Drain the freeing arena's oldest blocks
+                            // first; sweep the other arenas only if the
+                            // global bound is still exceeded.
+                            self.evict_lru_local(&mut inner, cap);
+                            if self.global.cached_bytes.load(Ordering::Relaxed) > cap {
+                                drop(inner);
+                                self.evict_lru_others(cap, arena);
+                            }
                         }
                     }
                 }
@@ -380,11 +566,11 @@ impl MemoryPool {
         }
     }
 
-    /// Enforce the LRU bound: release the globally oldest parked blocks
-    /// (smallest park stamp across all bin fronts) until the cache fits
-    /// within `cap`.
-    fn evict_lru(inner: &mut PoolInner, cap: usize) {
-        while inner.stats.cached_bytes > cap {
+    /// Enforce the LRU bound within one arena: release its oldest parked
+    /// blocks (smallest park stamp across all bin fronts) until the
+    /// *global* cache fits within `cap` or this arena has nothing parked.
+    fn evict_lru_local(&self, inner: &mut ArenaInner, cap: usize) {
+        while self.global.cached_bytes.load(Ordering::Relaxed) > cap {
             let victim = inner
                 .free_bins
                 .iter()
@@ -397,38 +583,64 @@ impl MemoryPool {
                         .get_mut(&bin)
                         .and_then(|q| q.pop_front())
                         .expect("victim bin has a front block");
-                    inner.stats.cached_bytes -= bin;
-                    inner.stats.cached_blocks -= 1;
-                    inner.stats.evicted_bytes += bin as u64;
-                    inner.stats.evicted_blocks += 1;
+                    inner.cached_bytes -= bin;
+                    inner.cached_blocks -= 1;
+                    self.global.cached_bytes.fetch_sub(bin, Ordering::Relaxed);
+                    self.global.cached_blocks.fetch_sub(1, Ordering::Relaxed);
+                    self.global.evicted_bytes.fetch_add(bin as u64, Ordering::Relaxed);
+                    self.global.evicted_blocks.fetch_add(1, Ordering::Relaxed);
                 }
-                None => break, // inconsistent gauge; never loop forever
+                None => break, // this arena is drained; caller sweeps the rest
             }
         }
     }
 
-    /// Release every cached block back to the host allocator; returns the
-    /// bytes released. Live buffers are untouched. The allocator calls
-    /// this itself when an allocation would otherwise hit `OutOfMemory`.
-    pub fn trim(&self) -> usize {
-        let mut guard = self.inner.lock().unwrap();
-        Self::trim_locked(&mut guard)
+    /// Sweep the remaining arenas (one lock at a time, never nested) when
+    /// the freeing arena alone could not bring the cache under the bound.
+    fn evict_lru_others(&self, cap: usize, skip: usize) {
+        for (i, a) in self.arenas.iter().enumerate() {
+            if i == skip {
+                continue;
+            }
+            if self.global.cached_bytes.load(Ordering::Relaxed) <= cap {
+                return;
+            }
+            let mut inner = a.lock().unwrap();
+            self.evict_lru_local(&mut inner, cap);
+        }
     }
 
-    fn trim_locked(inner: &mut PoolInner) -> usize {
-        let released = inner.stats.cached_bytes;
-        if released > 0 {
-            inner.stats.trim_count += 1;
-            inner.stats.trimmed_bytes += released as u64;
+    /// Release every cached block (all arenas) back to the host
+    /// allocator; returns the bytes released. Live buffers are untouched.
+    /// The allocator calls this itself when an allocation would otherwise
+    /// hit `OutOfMemory`.
+    pub fn trim(&self) -> usize {
+        let mut released = 0usize;
+        for a in &self.arenas {
+            let mut inner = a.lock().unwrap();
+            let r = inner.cached_bytes;
+            if r > 0 {
+                self.global.cached_bytes.fetch_sub(r, Ordering::Relaxed);
+                self.global
+                    .cached_blocks
+                    .fetch_sub(inner.cached_blocks, Ordering::Relaxed);
+                inner.cached_bytes = 0;
+                inner.cached_blocks = 0;
+                inner.free_bins.clear();
+                released += r;
+            }
         }
-        inner.stats.cached_bytes = 0;
-        inner.stats.cached_blocks = 0;
-        inner.free_bins.clear();
+        if released > 0 {
+            self.global.trim_count.fetch_add(1, Ordering::Relaxed);
+            self.global
+                .trimmed_bytes
+                .fetch_add(released as u64, Ordering::Relaxed);
+        }
         released
     }
 
     pub fn size_of(&self, ptr: DevicePtr) -> Result<usize> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.arenas[self.arena_of(ptr)].lock().unwrap();
         inner
             .buffers
             .get(&ptr.0)
@@ -442,7 +654,7 @@ impl MemoryPool {
     }
 
     pub fn copy_h2d_at(&self, dst: DevicePtr, offset: usize, src: &[u8]) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.arenas[self.arena_of(dst)].lock().unwrap();
         let buf = inner
             .buffers
             .get_mut(&dst.0)
@@ -456,8 +668,8 @@ impl MemoryPool {
             });
         }
         buf[offset..offset + src.len()].copy_from_slice(src);
-        inner.stats.h2d_count += 1;
-        inner.stats.h2d_bytes += src.len() as u64;
+        inner.counters.h2d_count += 1;
+        inner.counters.h2d_bytes += src.len() as u64;
         Ok(())
     }
 
@@ -467,7 +679,7 @@ impl MemoryPool {
     }
 
     pub fn copy_d2h_at(&self, src: DevicePtr, offset: usize, dst: &mut [u8]) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.arenas[self.arena_of(src)].lock().unwrap();
         let buf = inner
             .buffers
             .get(&src.0)
@@ -481,19 +693,23 @@ impl MemoryPool {
             });
         }
         dst.copy_from_slice(&buf[offset..offset + dst.len()]);
-        inner.stats.d2h_count += 1;
-        inner.stats.d2h_bytes += dst.len() as u64;
+        inner.counters.d2h_count += 1;
+        inner.counters.d2h_bytes += dst.len() as u64;
         Ok(())
     }
 
-    /// `cuMemcpyDtoD`.
+    /// `cuMemcpyDtoD`. Source and destination may live in different
+    /// arenas; the two locks are taken sequentially, never nested.
     pub fn copy_d2d(&self, dst: DevicePtr, src: DevicePtr) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        let data = inner
-            .buffers
-            .get(&src.0)
-            .ok_or(Error::InvalidDevicePtr(src.0))?
-            .clone();
+        let data = {
+            let inner = self.arenas[self.arena_of(src)].lock().unwrap();
+            inner
+                .buffers
+                .get(&src.0)
+                .ok_or(Error::InvalidDevicePtr(src.0))?
+                .clone()
+        };
+        let mut inner = self.arenas[self.arena_of(dst)].lock().unwrap();
         let dbuf = inner
             .buffers
             .get_mut(&dst.0)
@@ -507,8 +723,8 @@ impl MemoryPool {
             });
         }
         dbuf.copy_from_slice(&data);
-        inner.stats.d2d_count += 1;
-        inner.stats.d2d_bytes += data.len() as u64;
+        inner.counters.d2d_count += 1;
+        inner.counters.d2d_bytes += data.len() as u64;
         Ok(())
     }
 
@@ -516,7 +732,7 @@ impl MemoryPool {
     /// as a D2H *transfer*: used by backends, which access device memory
     /// directly — the kernel-side view).
     pub fn read_raw(&self, ptr: DevicePtr) -> Result<Vec<u8>> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.arenas[self.arena_of(ptr)].lock().unwrap();
         inner
             .buffers
             .get(&ptr.0)
@@ -527,7 +743,7 @@ impl MemoryPool {
     /// Overwrite an entire device buffer (backend-side write; length must
     /// match exactly).
     pub fn write_raw(&self, ptr: DevicePtr, data: &[u8]) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.arenas[self.arena_of(ptr)].lock().unwrap();
         let buf = inner
             .buffers
             .get_mut(&ptr.0)
@@ -543,7 +759,7 @@ impl MemoryPool {
     /// avoids the clone of [`MemoryPool::read_raw`] on hot launch paths —
     /// §Perf iteration I4).
     pub fn with_raw<R>(&self, ptr: DevicePtr, f: impl FnOnce(&[u8]) -> R) -> Result<R> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.arenas[self.arena_of(ptr)].lock().unwrap();
         let buf = inner
             .buffers
             .get(&ptr.0)
@@ -558,7 +774,7 @@ impl MemoryPool {
         ptr: DevicePtr,
         f: impl FnOnce(&mut [u8]) -> R,
     ) -> Result<R> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.arenas[self.arena_of(ptr)].lock().unwrap();
         let buf = inner
             .buffers
             .get_mut(&ptr.0)
@@ -568,67 +784,92 @@ impl MemoryPool {
 
     /// Take several buffers out of the pool, run `f`, and put them back.
     /// Allows a kernel to access multiple buffers mutably without holding
-    /// the pool lock for the duration of the launch.
+    /// any arena lock for the duration of the launch. Buffers may span
+    /// arenas; locks are taken one at a time.
     pub fn with_buffers<R>(
         &self,
         ptrs: &[DevicePtr],
         f: impl FnOnce(&mut [Vec<u8>]) -> R,
     ) -> Result<R> {
-        let mut taken = Vec::with_capacity(ptrs.len());
-        {
-            let mut inner = self.inner.lock().unwrap();
-            // Validate all first so we never partially remove.
-            for p in ptrs {
-                if !inner.buffers.contains_key(&p.0) {
+        // Duplicate pointers are not supported (aliasing) — error out
+        // before removing anything.
+        for (i, p) in ptrs.iter().enumerate() {
+            if ptrs[..i].contains(p) {
+                return Err(Error::InvalidLaunch(format!(
+                    "duplicate device pointer argument {:#x}",
+                    p.0
+                )));
+            }
+        }
+        let mut taken: Vec<Vec<u8>> = Vec::with_capacity(ptrs.len());
+        for (i, p) in ptrs.iter().enumerate() {
+            let removed = {
+                let mut inner = self.arenas[self.arena_of(*p)].lock().unwrap();
+                inner.buffers.remove(&p.0)
+            };
+            match removed {
+                Some(buf) => taken.push(buf),
+                None => {
+                    // Roll back the buffers already taken, then error.
+                    for (q, buf) in ptrs[..i].iter().zip(taken) {
+                        let mut inner = self.arenas[self.arena_of(*q)].lock().unwrap();
+                        inner.buffers.insert(q.0, buf);
+                    }
                     return Err(Error::InvalidDevicePtr(p.0));
                 }
             }
-            // Duplicate pointers are not supported (aliasing) — error out.
-            for (i, p) in ptrs.iter().enumerate() {
-                if ptrs[..i].contains(p) {
-                    return Err(Error::InvalidLaunch(format!(
-                        "duplicate device pointer argument {:#x}",
-                        p.0
-                    )));
-                }
-            }
-            for p in ptrs {
-                taken.push(inner.buffers.remove(&p.0).unwrap());
-            }
         }
         let result = f(&mut taken);
-        {
-            let mut inner = self.inner.lock().unwrap();
-            for (p, buf) in ptrs.iter().zip(taken) {
-                inner.buffers.insert(p.0, buf);
-            }
+        for (p, buf) in ptrs.iter().zip(taken) {
+            let mut inner = self.arenas[self.arena_of(*p)].lock().unwrap();
+            inner.buffers.insert(p.0, buf);
         }
         Ok(result)
     }
 
     pub fn stats(&self) -> MemStats {
-        self.inner.lock().unwrap().stats
+        let mut st = MemStats::default();
+        for a in &self.arenas {
+            let c = a.lock().unwrap().counters;
+            st.alloc_count += c.alloc_count;
+            st.free_count += c.free_count;
+            st.h2d_count += c.h2d_count;
+            st.d2h_count += c.d2h_count;
+            st.d2d_count += c.d2d_count;
+            st.h2d_bytes += c.h2d_bytes;
+            st.d2h_bytes += c.d2h_bytes;
+            st.d2d_bytes += c.d2d_bytes;
+            st.reuse_count += c.reuse_count;
+            st.reuse_bytes += c.reuse_bytes;
+        }
+        st.current_bytes = self.global.current_bytes.load(Ordering::Relaxed);
+        st.peak_bytes = self.global.peak_bytes.load(Ordering::Relaxed);
+        st.cached_bytes = self.global.cached_bytes.load(Ordering::Relaxed);
+        st.cached_blocks = self.global.cached_blocks.load(Ordering::Relaxed);
+        st.trim_count = self.global.trim_count.load(Ordering::Relaxed);
+        st.trimmed_bytes = self.global.trimmed_bytes.load(Ordering::Relaxed);
+        st.evicted_bytes = self.global.evicted_bytes.load(Ordering::Relaxed);
+        st.evicted_blocks = self.global.evicted_blocks.load(Ordering::Relaxed);
+        st
     }
 
     /// Reset the counters; gauges (live bytes, peak, cached blocks)
     /// survive, as the storage they describe does.
     pub fn reset_stats(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        let live = inner.stats.current_bytes;
-        let peak = inner.stats.peak_bytes;
-        let cached_bytes = inner.stats.cached_bytes;
-        let cached_blocks = inner.stats.cached_blocks;
-        inner.stats = MemStats {
-            current_bytes: live,
-            peak_bytes: peak,
-            cached_bytes,
-            cached_blocks,
-            ..MemStats::default()
-        };
+        for a in &self.arenas {
+            a.lock().unwrap().counters = ArenaCounters::default();
+        }
+        self.global.trim_count.store(0, Ordering::Relaxed);
+        self.global.trimmed_bytes.store(0, Ordering::Relaxed);
+        self.global.evicted_bytes.store(0, Ordering::Relaxed);
+        self.global.evicted_blocks.store(0, Ordering::Relaxed);
     }
 
     pub fn live_buffers(&self) -> usize {
-        self.inner.lock().unwrap().buffers.len()
+        self.arenas
+            .iter()
+            .map(|a| a.lock().unwrap().buffers.len())
+            .sum()
     }
 }
 
@@ -723,6 +964,17 @@ mod tests {
         assert_eq!(pool.read_raw(a).unwrap()[0], 42);
         assert_eq!(pool.read_raw(b).unwrap()[1], 7);
         assert_eq!(pool.live_buffers(), 2);
+    }
+
+    #[test]
+    fn with_buffers_rolls_back_on_dead_handle() {
+        let pool = MemoryPool::default();
+        let a = pool.alloc(4).unwrap();
+        let dead = pool.alloc(4).unwrap();
+        pool.free(dead).unwrap();
+        assert!(pool.with_buffers(&[a, dead], |_| ()).is_err());
+        // the live buffer was rolled back, not lost
+        assert_eq!(pool.size_of(a).unwrap(), 4);
     }
 
     #[test]
@@ -1043,5 +1295,124 @@ mod tests {
             let q = pool.alloc(0).unwrap();
             pool.free(q).unwrap();
         }
+    }
+
+    // ---- per-stream allocation arenas --------------------------------
+
+    #[test]
+    fn arena_routing_roundtrips_across_arenas() {
+        let pool = MemoryPool::with_policy_arenas(1 << 20, PoolPolicy::Cached, 4);
+        assert_eq!(pool.arena_count(), 4);
+        let ptrs: Vec<DevicePtr> = (0..8)
+            .map(|i| pool.alloc_in(i, 16).unwrap())
+            .collect();
+        // 0 is the default arena; nonzero requests spread over 1..n and
+        // never wrap back onto arena 0
+        for (i, p) in ptrs.iter().enumerate() {
+            let expect = if i == 0 { 0 } else { 1 + (i - 1) % 3 };
+            assert_eq!(pool.arena_of(*p), expect, "request {i}");
+            pool.copy_h2d(*p, &[i as u8; 16]).unwrap();
+        }
+        for (i, p) in ptrs.iter().enumerate() {
+            let mut out = [0u8; 16];
+            pool.copy_d2h(*p, &mut out).unwrap();
+            assert_eq!(out, [i as u8; 16]);
+        }
+        assert_eq!(pool.live_buffers(), 8);
+        assert_eq!(pool.stats().alloc_count, 8);
+        for p in ptrs {
+            pool.free(p).unwrap();
+        }
+        assert_eq!(pool.live_buffers(), 0);
+        assert_eq!(pool.stats().free_count, 8);
+    }
+
+    #[test]
+    fn arena_caches_are_local_but_capacity_is_global() {
+        let pool = MemoryPool::with_policy_arenas(256, PoolPolicy::Cached, 2);
+        let a = pool.alloc_in(0, 100).unwrap(); // bin 128 in arena 0
+        pool.free(a).unwrap();
+        // a same-bin request in the *other* arena misses arena 0's cache
+        let b = pool.alloc_in(1, 100).unwrap();
+        assert_eq!(pool.stats().reuse_count, 0, "bins are arena-local");
+        // but capacity counts the parked block globally: live 100 +
+        // cached 128 + another fresh 100 would exceed 256, so the pool
+        // must pressure-trim arena 0's cache to satisfy it
+        let c = pool.alloc_in(1, 100).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.trim_count, 1);
+        assert_eq!(st.cached_bytes, 0);
+        pool.free(b).unwrap();
+        pool.free(c).unwrap();
+    }
+
+    #[test]
+    fn lru_cap_enforced_globally_across_arenas() {
+        let pool = MemoryPool::with_policy_arenas(1 << 20, PoolPolicy::Cached, 2)
+            .with_cache_cap(Some(128));
+        let a = pool.alloc_in(0, 100).unwrap(); // bin 128
+        let b = pool.alloc_in(1, 100).unwrap(); // bin 128
+        pool.free(a).unwrap(); // arena 0 parks: cached 128 == cap
+        // arena 1 parks its block, pushing the global cache to 256 > cap;
+        // the freeing arena drains itself first, so arena 1's block goes
+        // and arena 0's parked block survives.
+        pool.free(b).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.cached_bytes, 128);
+        assert_eq!(st.cached_blocks, 1);
+        assert_eq!(st.evicted_blocks, 1);
+        let again = pool.alloc_in(0, 100).unwrap();
+        assert_eq!(pool.stats().reuse_count, 1, "arena 0's block survived");
+        pool.free(again).unwrap();
+    }
+
+    #[test]
+    fn d2d_copies_across_arenas() {
+        let pool = MemoryPool::with_policy_arenas(1 << 20, PoolPolicy::Cached, 3);
+        let a = pool.alloc_in(0, 8).unwrap();
+        let b = pool.alloc_in(2, 8).unwrap();
+        pool.copy_h2d(a, &[5u8; 8]).unwrap();
+        pool.copy_d2d(b, a).unwrap();
+        assert_eq!(pool.read_raw(b).unwrap(), vec![5u8; 8]);
+        // with_buffers spans arenas too
+        pool.with_buffers(&[a, b], |bufs| {
+            bufs[0][0] = 1;
+            bufs[1][0] = 2;
+        })
+        .unwrap();
+        assert_eq!(pool.read_raw(a).unwrap()[0], 1);
+        assert_eq!(pool.read_raw(b).unwrap()[0], 2);
+    }
+
+    #[test]
+    fn concurrent_arena_traffic_is_consistent() {
+        use std::sync::Arc;
+        let pool = Arc::new(MemoryPool::with_policy_arenas(
+            1 << 22,
+            PoolPolicy::Cached,
+            4,
+        ));
+        let mut handles = Vec::new();
+        for arena in 0..4usize {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200usize {
+                    let ptr = p.alloc_in(arena, 64 + (i % 3) * 64).unwrap();
+                    p.copy_h2d(ptr, &[arena as u8; 64]).unwrap();
+                    let mut out = vec![0u8; 64];
+                    p.copy_d2h(ptr, &mut out).unwrap();
+                    assert_eq!(out, vec![arena as u8; 64]);
+                    p.free(ptr).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let st = pool.stats();
+        assert_eq!(st.alloc_count, 800);
+        assert_eq!(st.free_count, 800);
+        assert_eq!(st.current_bytes, 0);
+        assert_eq!(pool.live_buffers(), 0);
     }
 }

@@ -22,7 +22,10 @@ pub mod stream;
 
 pub use backend::{Backend, DeviceFunction, LoadedModule, ModuleSource, TensorSpec};
 pub use context::Context;
-pub use device::{device, device_count, devices, BackendKind, Device, DeviceAttributes};
+pub use device::{
+    device, device_count, devices, emulator_device, pjrt_device, BackendKind, Device,
+    DeviceAttributes,
+};
 pub use event::Event;
 pub use launch::{Dim3, KernelArg, LaunchConfig, LaunchReport};
 pub use memory::{DevicePtr, MemStats, MemoryPool, PoolPolicy, DEFAULT_CAPACITY};

@@ -10,13 +10,14 @@
 //! emulator's worker pool which drains the blocks concurrently, and
 //! [`Stream::synchronize`] (or an [`Event`]) joins.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::driver::event::Event;
 use crate::driver::launch::{KernelArg, LaunchConfig};
-use crate::driver::memory::MemoryPool;
+use crate::driver::memory::{DevicePtr, MemoryPool};
 use crate::driver::module::Function;
 use crate::error::{Error, Result};
 
@@ -34,11 +35,23 @@ struct Tracker {
 }
 
 /// An asynchronous, ordered work queue backed by a worker thread.
+///
+/// Every stream carries an **arena id** (round-robin over a global
+/// counter, starting at 1 so arena 0 stays the default synchronous
+/// arena): allocations a pipeline makes for this stream's work go
+/// through [`MemoryPool::alloc_in`] with that id, landing in a dedicated
+/// pool shard so concurrent streams do not contend on one allocator
+/// lock (see `docs/memory.md`, per-stream arenas).
 pub struct Stream {
     tx: Sender<Msg>,
     tracker: Arc<(Mutex<Tracker>, Condvar)>,
     worker: Option<JoinHandle<()>>,
+    arena_id: usize,
 }
+
+/// Round-robin source of stream arena ids (0 is reserved for the
+/// default arena used by plain `alloc`).
+static NEXT_ARENA: AtomicUsize = AtomicUsize::new(1);
 
 impl Stream {
     /// `cuStreamCreate`.
@@ -65,7 +78,19 @@ impl Stream {
                 }
             })
             .expect("failed to spawn stream worker");
-        Stream { tx, tracker, worker: Some(worker) }
+        Stream {
+            tx,
+            tracker,
+            worker: Some(worker),
+            arena_id: NEXT_ARENA.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// The allocation arena assigned to this stream (pass to
+    /// [`MemoryPool::alloc_in`] / `Context::alloc_in` so this stream's
+    /// buffers live in their own pool shard).
+    pub fn arena_id(&self) -> usize {
+        self.arena_id
     }
 
     /// Enqueue an operation. Errors inside the op are captured and
@@ -108,12 +133,39 @@ impl Stream {
         self.enqueue(move || f.launch(&cfg, &args, &mem))
     }
 
+    /// `cuMemcpyHtoDAsync`: enqueue a host→device upload of an owned
+    /// buffer. The copy executes on the stream's worker in FIFO order
+    /// with the stream's other work, so a subsequent launch on the same
+    /// stream observes the uploaded data while *other* streams keep
+    /// computing — the double-buffered upload pattern.
+    pub fn copy_h2d(
+        &self,
+        mem: Arc<MemoryPool>,
+        dst: DevicePtr,
+        data: Vec<u8>,
+    ) -> Result<()> {
+        self.enqueue(move || mem.copy_h2d(dst, &data))
+    }
+
     /// Enqueue an event record (`cuEventRecord`): the event fires when all
     /// previously enqueued work has completed.
     pub fn record_event(&self, event: &Event) -> Result<()> {
         let ev = event.clone();
         self.enqueue(move || {
             ev.record_now();
+            Ok(())
+        })
+    }
+
+    /// `cuStreamWaitEvent`: all work enqueued after this call waits until
+    /// `event` is recorded (by another stream or the host). This is the
+    /// cross-stream fence the double-buffered pipelines use: the compute
+    /// stream waits on the upload stream's record without blocking the
+    /// host.
+    pub fn wait_event(&self, event: &Event) -> Result<()> {
+        let ev = event.clone();
+        self.enqueue(move || {
+            ev.synchronize();
             Ok(())
         })
     }
@@ -137,6 +189,15 @@ impl Stream {
         let (lock, _) = &*self.tracker;
         let t = lock.lock().unwrap();
         t.completed >= t.submitted
+    }
+
+    /// Non-consuming view of the sticky error, if any work enqueued so
+    /// far has failed. Unlike [`Stream::synchronize`] this neither blocks
+    /// nor clears the error — `PendingLaunch::wait` uses it to surface a
+    /// failure without swallowing it for a later synchronize.
+    pub fn peek_error(&self) -> Option<String> {
+        let (lock, _) = &*self.tracker;
+        lock.lock().unwrap().failed.clone()
     }
 }
 
@@ -277,6 +338,73 @@ mod tests {
         for (i, v) in vals.iter().enumerate() {
             assert_eq!(*v, (i % 16) as f32, "element {i}");
         }
+    }
+
+    #[test]
+    fn streams_get_distinct_arena_ids() {
+        let a = Stream::new();
+        let b = Stream::new();
+        assert_ne!(a.arena_id(), b.arena_id());
+        assert!(a.arena_id() >= 1, "arena 0 is reserved for the default path");
+    }
+
+    #[test]
+    fn async_copy_h2d_is_stream_ordered() {
+        let mem = Arc::new(crate::driver::memory::MemoryPool::default());
+        let dst = mem.alloc(4).unwrap();
+        let s = Stream::new();
+        s.copy_h2d(mem.clone(), dst, vec![1, 2, 3, 4]).unwrap();
+        s.synchronize().unwrap();
+        assert_eq!(mem.read_raw(dst).unwrap(), vec![1, 2, 3, 4]);
+        // an upload into a dead handle is a sticky stream error
+        mem.free(dst).unwrap();
+        s.copy_h2d(mem.clone(), dst, vec![9]).unwrap();
+        assert!(s.synchronize().is_err());
+    }
+
+    #[test]
+    fn wait_event_fences_across_streams() {
+        let producer = Stream::new();
+        let consumer = Stream::new();
+        let flag = Arc::new(AtomicU32::new(0));
+        let ev = Event::new();
+        let f1 = flag.clone();
+        producer
+            .enqueue(move || {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+                f1.store(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        producer.record_event(&ev).unwrap();
+        consumer.wait_event(&ev).unwrap();
+        let f2 = flag.clone();
+        let seen = Arc::new(AtomicU32::new(99));
+        let s2 = seen.clone();
+        consumer
+            .enqueue(move || {
+                s2.store(f2.load(Ordering::SeqCst), Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        consumer.synchronize().unwrap();
+        assert_eq!(seen.load(Ordering::SeqCst), 1, "consumer ran after the fence");
+        producer.synchronize().unwrap();
+    }
+
+    #[test]
+    fn peek_error_does_not_consume() {
+        let s = Stream::new();
+        s.enqueue(|| Err(Error::Stream("boom".into()))).unwrap();
+        while s.peek_error().is_none() {
+            std::thread::yield_now();
+        }
+        assert!(s.peek_error().unwrap().contains("boom"));
+        assert!(s.peek_error().is_some(), "peek leaves the sticky error in place");
+        // synchronize still surfaces (and consumes) it
+        assert!(s.synchronize().is_err());
+        assert!(s.peek_error().is_none());
+        s.synchronize().unwrap();
     }
 
     #[test]

@@ -29,7 +29,12 @@
 //! * [`coordinator`] — the **`@cuda` automation layer**: kernel registry,
 //!   per-signature specialization cache (the paper's method cache),
 //!   `In`/`Out`/`InOut` argument wrappers driving a minimal transfer plan,
-//!   and the [`cuda!`] launch macro.
+//!   and the [`cuda!`] launch macro. The v2 surface (`docs/api.md`) adds
+//!   bound `KernelHandle`s (warm launches with zero cache traffic),
+//!   device-resident `arg::cu_dev`/`cu_dev_mut` arguments (the transfer
+//!   plan skips h2d/d2h for data the device already holds), and
+//!   stream-ordered async launches (`launch_on` → `PendingLaunch`,
+//!   joinable via `Event`s) over per-stream pool arenas.
 //! * [`hostlang`] — a dynamic, boxed, bounds-checked array layer playing
 //!   the role of the high-level host language in the evaluation.
 //! * [`tracetransform`] — the paper's case study (§7): the trace transform

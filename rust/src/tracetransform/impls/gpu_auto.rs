@@ -3,11 +3,21 @@
 //! analog): arguments wrapped `CuIn`/`CuOut`, specialization cached per
 //! signature, transfers minimized, module management invisible — the host
 //! code shrinks to the paper's Listing 3.
+//!
+//! The batched path uses the **launch API v2** (see `docs/api.md`): the
+//! angle table and the image/sinogram buffers are device-resident
+//! (`arg::cu_dev` / `cu_dev_mut`), the `batched_sinogram` kernel is a
+//! bound [`KernelHandle`] launched with zero cache traffic, and the batch
+//! is split into two chunks whose uploads (on a dedicated upload stream,
+//! allocating from its own pool arena) overlap the other chunk's compute
+//! (on a second stream, fenced by events) — the double-buffered pipeline.
 
-use crate::coordinator::{arg, KernelRegistry, Launcher};
-use crate::driver::{BackendKind, Context, LaunchConfig};
+use std::collections::HashMap;
+
+use crate::coordinator::{arg, DeviceArray, KernelHandle, KernelRegistry, Launcher};
+use crate::driver::{BackendKind, Context, Event, LaunchConfig, Stream};
 use crate::error::Result;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
 use crate::tracetransform::image::Image;
 use crate::tracetransform::impls::{register_trace_providers, DeviceChoice, TraceImpl};
@@ -25,9 +35,27 @@ pub enum AutoMode {
     TraceFull,
 }
 
+/// One double-buffer slot of the batched pipeline: a bound kernel handle
+/// plus device-resident image and sinogram buffers for a fixed chunk
+/// length.
+struct ChunkPipe {
+    handle: KernelHandle,
+    imgs: DeviceArray,
+    sinos: DeviceArray,
+}
+
 pub struct GpuAuto {
     launcher: Launcher,
     mode: AutoMode,
+    /// Device-resident angle table, uploaded once per distinct angle set
+    /// and reused across every subsequent call (keyed by the raw bits).
+    angles_dev: Option<(Vec<u32>, DeviceArray)>,
+    /// Double-buffer pipeline state keyed by (chunk_len, size, angles,
+    /// slot) — two slots so chunk i+1's upload overlaps chunk i's
+    /// compute without aliasing buffers.
+    pipes: HashMap<(usize, usize, usize, usize), ChunkPipe>,
+    upload_stream: Option<Stream>,
+    compute_stream: Option<Stream>,
 }
 
 impl GpuAuto {
@@ -44,7 +72,14 @@ impl GpuAuto {
                 l
             }
         };
-        Ok(GpuAuto { launcher, mode: AutoMode::SinogramAll })
+        Ok(GpuAuto {
+            launcher,
+            mode: AutoMode::SinogramAll,
+            angles_dev: None,
+            pipes: HashMap::new(),
+            upload_stream: None,
+            compute_stream: None,
+        })
     }
 
     pub fn with_mode(mut self, mode: AutoMode) -> Self {
@@ -56,7 +91,14 @@ impl GpuAuto {
     pub fn fused() -> Result<GpuAuto> {
         let ctx = Context::default_device()?;
         let registry = KernelRegistry::with_default_library()?;
-        Ok(GpuAuto { launcher: Launcher::new(ctx, registry), mode: AutoMode::TraceFull })
+        Ok(GpuAuto {
+            launcher: Launcher::new(ctx, registry),
+            mode: AutoMode::TraceFull,
+            angles_dev: None,
+            pipes: HashMap::new(),
+            upload_stream: None,
+            compute_stream: None,
+        })
     }
 
     pub fn launcher(&self) -> &Launcher {
@@ -65,6 +107,22 @@ impl GpuAuto {
 
     pub fn launcher_mut(&mut self) -> &mut Launcher {
         &mut self.launcher
+    }
+
+    /// The device-resident angle table for `thetas`, uploading only when
+    /// the set changes.
+    fn angle_table(&mut self, thetas: &[f32]) -> Result<()> {
+        let key: Vec<u32> = thetas.iter().map(|t| t.to_bits()).collect();
+        let stale = match &self.angles_dev {
+            Some((k, _)) => *k != key,
+            None => true,
+        };
+        if stale {
+            let t = Tensor::from_f32(thetas, &[thetas.len()]);
+            let arr = DeviceArray::from_tensor(self.launcher.context(), &t)?;
+            self.angles_dev = Some((key, arr));
+        }
+        Ok(())
     }
 }
 
@@ -135,10 +193,13 @@ impl TraceImpl for GpuAuto {
         // SLOC:core-end
     }
 
-    /// Batched path: one `batched_sinogram` launch covers the whole
-    /// batch — the angle table and the stacked images upload once, and
-    /// every subsequent batch reuses the specialization's pre-allocated
-    /// device buffers (no allocator traffic at steady state).
+    /// Batched path, launch API v2: the batch splits into two chunks
+    /// processed through a double-buffered two-stream pipeline. The
+    /// angle table and all kernel buffers are device-resident — the only
+    /// host↔device traffic at steady state is one stacked-image upload
+    /// per chunk and one sinogram download per chunk; the
+    /// `batched_sinogram` handle launches with zero specialization-cache
+    /// traffic.
     fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
         if imgs.is_empty() {
             return Ok(Vec::new());
@@ -155,27 +216,98 @@ impl TraceImpl for GpuAuto {
         let n = imgs.len();
         let a = thetas.len();
         let nt = T_SET.len();
-        let mut stacked = Vec::with_capacity(n * s * s);
-        for img in imgs {
-            stacked.extend_from_slice(img.pixels());
+
+        let ctx = self.launcher.context().clone();
+        if self.upload_stream.is_none() {
+            self.upload_stream = Some(ctx.create_stream()?);
+            self.compute_stream = Some(ctx.create_stream()?);
         }
-        let imgs_t = Tensor::from_f32(&stacked, &[n, s, s]);
-        let angles_t = Tensor::from_f32(thetas, &[a]);
-        let mut sinos = Tensor::zeros_f32(&[n, nt, a, s]);
-        self.launcher.launch(
-            "batched_sinogram",
-            LaunchConfig::new((a as u32, n as u32), s as u32),
-            &mut [arg::cu_in(&imgs_t), arg::cu_in(&angles_t), arg::cu_out(&mut sinos)],
-        )?;
-        let all = sinos.as_f32();
-        let mut out = Vec::with_capacity(n);
-        for i in 0..n {
-            let mut feats = Vec::with_capacity(nt * 6);
-            for ti in 0..nt {
-                let off = (i * nt + ti) * a * s;
-                feats.extend(reduce_sinogram(&all[off..off + a * s], a, s));
+        self.angle_table(thetas)?;
+
+        // Two chunks double-buffer: chunk 1's upload overlaps chunk 0's
+        // compute. A singleton batch degenerates to one chunk.
+        let half = n.div_ceil(2);
+        let mut bounds = vec![(0usize, half)];
+        if half < n {
+            bounds.push((half, n));
+        }
+
+        // Bind handles + allocate device buffers per (chunk shape, slot),
+        // reused across batches. Image buffers live in the upload
+        // stream's arena, sinograms in the compute stream's — concurrent
+        // stages allocate and copy without sharing a pool lock.
+        for (slot, &(lo, hi)) in bounds.iter().enumerate() {
+            let len = hi - lo;
+            let key = (len, s, a, slot);
+            if !self.pipes.contains_key(&key) {
+                let up_arena = self.upload_stream.as_ref().unwrap().arena_id();
+                let co_arena = self.compute_stream.as_ref().unwrap().arena_id();
+                let imgs_dev = DeviceArray::alloc_in(&ctx, up_arena, Dtype::F32, &[len, s, s])?;
+                let mut sinos_dev =
+                    DeviceArray::alloc_in(&ctx, co_arena, Dtype::F32, &[len, nt, a, s])?;
+                let (_, angles_dev) = self.angles_dev.as_ref().unwrap();
+                let handle = self.launcher.bind(
+                    "batched_sinogram",
+                    &[
+                        arg::cu_dev(&imgs_dev),
+                        arg::cu_dev(angles_dev),
+                        arg::cu_dev_mut(&mut sinos_dev),
+                    ],
+                )?;
+                self.pipes.insert(key, ChunkPipe { handle, imgs: imgs_dev, sinos: sinos_dev });
             }
-            out.push(feats);
+        }
+
+        // Stage 1+2: enqueue every chunk's upload (stream U) and launch
+        // (stream C, fenced on the upload's event) before joining any —
+        // that is what overlaps the stages.
+        let mem = ctx.memory_arc()?;
+        let upload = self.upload_stream.as_ref().unwrap();
+        let compute = self.compute_stream.as_ref().unwrap();
+        let mut pendings = Vec::with_capacity(bounds.len());
+        for (slot, &(lo, hi)) in bounds.iter().enumerate() {
+            let len = hi - lo;
+            let pipe = self.pipes.get_mut(&(len, s, a, slot)).unwrap();
+            let mut bytes = Vec::with_capacity(len * s * s * 4);
+            for img in &imgs[lo..hi] {
+                for v in img.pixels() {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            upload.copy_h2d(mem.clone(), pipe.imgs.ptr(), bytes)?;
+            let uploaded = Event::new();
+            upload.record_event(&uploaded)?;
+            compute.wait_event(&uploaded)?;
+            let (_, angles_dev) = self.angles_dev.as_ref().unwrap();
+            let pending = pipe.handle.launch_on(
+                compute,
+                LaunchConfig::new((a as u32, len as u32), s as u32),
+                &mut [
+                    arg::cu_dev(&pipe.imgs),
+                    arg::cu_dev(angles_dev),
+                    arg::cu_dev_mut(&mut pipe.sinos),
+                ],
+            )?;
+            pendings.push((slot, lo, hi, pending));
+        }
+
+        // Stage 3: join chunks in order, download each chunk's sinograms
+        // once, and reduce on the host.
+        let mut out = vec![Vec::new(); n];
+        for (slot, lo, hi, pending) in pendings {
+            pending.wait()?;
+            let len = hi - lo;
+            let pipe = self.pipes.get(&(len, s, a, slot)).unwrap();
+            let sinos_host = pipe.sinos.download()?;
+            let all = sinos_host.as_f32();
+            for (i, feats_slot) in out[lo..hi].iter_mut().enumerate() {
+                let mut feats = Vec::with_capacity(nt * 6);
+                for ti in 0..nt {
+                    let off = (i * nt + ti) * a * s;
+                    feats.extend(reduce_sinogram(&all[off..off + a * s], a, s));
+                }
+                *feats_slot = feats;
+            }
         }
         Ok(out)
     }
@@ -188,20 +320,50 @@ mod tests {
     use crate::tracetransform::image::{orientations, shepp_logan};
 
     #[test]
-    fn batched_path_specializes_once_per_batch_shape() {
+    fn batched_pipeline_specializes_once_per_chunk_shape() {
         let thetas = orientations(5);
         let imgs: Vec<_> = (0..3)
             .map(|i| crate::tracetransform::image::random_phantom(10, i as u64))
             .collect();
         let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
         let b1 = m.features_batch(&imgs, &thetas).unwrap();
-        assert_eq!(m.launcher().metrics().cold_specializations, 1);
+        // 3 images split into chunks of 2 and 1 — two call shapes
+        assert_eq!(m.launcher().metrics().cold_specializations, 2);
         let b2 = m.features_batch(&imgs, &thetas).unwrap();
         assert_eq!(b1, b2);
-        assert_eq!(m.launcher().metrics().cold_specializations, 1, "warm batch");
-        // a different batch size is a different signature
+        assert_eq!(
+            m.launcher().metrics().cold_specializations,
+            2,
+            "warm batch re-specializes nothing"
+        );
+        // a 2-image batch splits into two length-1 chunks — the length-1
+        // shape is already bound, so still no new specialization
         m.features_batch(&imgs[..2], &thetas).unwrap();
         assert_eq!(m.launcher().metrics().cold_specializations, 2);
+        // cache stats confirm the handles bypass the cache: only the
+        // bind() calls touched it
+        let st = m.launcher().cache_stats();
+        assert_eq!(st.misses, 2);
+    }
+
+    #[test]
+    fn warm_batch_moves_only_images_and_sinograms() {
+        let thetas = orientations(5);
+        let imgs: Vec<_> = (0..4)
+            .map(|i| crate::tracetransform::image::random_phantom(10, 20 + i as u64))
+            .collect();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        m.features_batch(&imgs, &thetas).unwrap(); // cold: builds pipes
+        m.launcher().context().memory().unwrap().reset_stats();
+        m.features_batch(&imgs, &thetas).unwrap();
+        let st = m.launcher().context().mem_stats().unwrap();
+        assert_eq!(st.alloc_count, 0, "warm batch allocates nothing");
+        assert_eq!(st.h2d_count, 2, "one stacked upload per chunk, no angle re-upload");
+        assert_eq!(st.d2h_count, 2, "one sinogram download per chunk");
+        // the device-resident skips are visible in the launch metrics
+        let lm = m.launcher().metrics();
+        assert!(lm.skipped_h2d > 0);
+        assert!(lm.skipped_d2h > 0);
     }
 
     #[test]

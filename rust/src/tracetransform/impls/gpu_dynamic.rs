@@ -6,11 +6,12 @@
 
 use std::collections::HashMap;
 
+use crate::coordinator::DeviceArray;
 use crate::driver::{Context, Function, KernelArg, LaunchConfig, ModuleSource};
 use crate::error::Result;
 use crate::hostlang::DynArray;
 use crate::runtime::ArtifactLibrary;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use crate::tracetransform::functionals::{FFunctional, PFunctional, F_SET, P_SET, T_SET};
 use crate::tracetransform::image::Image;
 use crate::tracetransform::impls::{alloc3, free3, DeviceChoice, TraceImpl};
@@ -20,6 +21,14 @@ pub struct GpuDynamic {
     device: DeviceChoice,
     library: Option<ArtifactLibrary>,
     functions: HashMap<(&'static str, usize, usize), Function>,
+    /// Device-resident angle table for the batched path: the boxing tax
+    /// and the upload are paid once per distinct angle set, not per
+    /// batch (keyed by the raw bits).
+    angles_dev: Option<(Vec<u32>, DeviceArray)>,
+    /// Persistent batched-path device buffers (stacked images,
+    /// sinograms), keyed by (batch, size, angles) and reused across
+    /// batches of the same shape.
+    batch_bufs: Option<((usize, usize, usize), DeviceArray, DeviceArray)>,
 }
 
 type DynFeats = Vec<f32>;
@@ -67,12 +76,19 @@ impl GpuDynamic {
     }
 
     pub fn on_device(device: DeviceChoice) -> Result<GpuDynamic> {
-        let ctx = Context::create(&crate::driver::device(device.ordinal())?)?;
+        let ctx = Context::create(&device.device()?)?;
         let library = match device {
             DeviceChoice::Pjrt => Some(ArtifactLibrary::load_default()?),
             DeviceChoice::Emulator => None,
         };
-        Ok(GpuDynamic { ctx, device, library, functions: HashMap::new() })
+        Ok(GpuDynamic {
+            ctx,
+            device,
+            library,
+            functions: HashMap::new(),
+            angles_dev: None,
+            batch_bufs: None,
+        })
     }
 
     fn function(&mut self, s: usize, a: usize) -> Result<Function> {
@@ -184,10 +200,12 @@ impl TraceImpl for GpuDynamic {
     }
 
     /// Batched path (emulator): the dynamic host still pays its boxing
-    /// tax per image, but the whole batch shares ONE angle-table
-    /// conversion + upload and one `batched_sinogram` launch, and the
-    /// three device buffers are recycled through the pool's bins between
-    /// batches.
+    /// tax per image, but the angle table is **device-resident** across
+    /// batches (one conversion + upload per distinct angle set), the
+    /// stacked-image and sinogram buffers persist between same-shaped
+    /// batches, and one `batched_sinogram` launch covers the whole
+    /// batch — the steady state moves only the stacked images in and the
+    /// sinograms out, allocating nothing.
     fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
         if imgs.is_empty() {
             return Ok(Vec::new());
@@ -209,36 +227,48 @@ impl TraceImpl for GpuDynamic {
             stacked.extend(dimg.to_f32_vec());
         }
         let imgs_t = Tensor::from_f32(&stacked, &[n, s, s]);
-        let dangles =
-            DynArray::from_vec(thetas.iter().map(|&t| t as f64).collect(), &[a])?;
-        let angles_t = Tensor::from_f32(&dangles.to_f32_vec(), &[a]);
 
-        let (ga, gb, gc) = alloc3(
-            &self.ctx,
-            imgs_t.byte_len(),
-            angles_t.byte_len(),
-            n * nt * a * s * 4,
+        // device-resident angle table, refreshed only when the set changes
+        let akey: Vec<u32> = thetas.iter().map(|t| t.to_bits()).collect();
+        let stale = match &self.angles_dev {
+            Some((k, _)) => *k != akey,
+            None => true,
+        };
+        if stale {
+            let dangles =
+                DynArray::from_vec(thetas.iter().map(|&t| t as f64).collect(), &[a])?;
+            let angles_t = Tensor::from_f32(&dangles.to_f32_vec(), &[a]);
+            self.angles_dev = Some((akey, DeviceArray::from_tensor(&self.ctx, &angles_t)?));
+        }
+
+        // persistent device buffers, rebuilt only when the batch shape
+        // changes (the old ones drop back into the pool's bins first)
+        let bkey = (n, s, a);
+        let rebuild = !matches!(&self.batch_bufs, Some((k, _, _)) if *k == bkey);
+        if rebuild {
+            self.batch_bufs = None;
+            let di = DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, s, s])?;
+            let ds = DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, nt, a, s])?;
+            self.batch_bufs = Some((bkey, di, ds));
+        }
+
+        let f = self.batched_function()?;
+        let (_, imgs_dev, sinos_dev) = self.batch_bufs.as_ref().unwrap();
+        let (_, angles_dev) = self.angles_dev.as_ref().unwrap();
+        imgs_dev.upload(&imgs_t)?;
+        let args = vec![
+            KernelArg::Ptr(imgs_dev.ptr()),
+            KernelArg::Ptr(angles_dev.ptr()),
+            KernelArg::Ptr(sinos_dev.ptr()),
+            KernelArg::I32(s as i32),
+        ];
+        f.launch(
+            &LaunchConfig::new((a as u32, n as u32), s as u32),
+            &args,
+            self.ctx.memory()?,
         )?;
-        let body = (|| -> Result<Tensor> {
-            self.ctx.upload(ga, imgs_t.bytes())?;
-            self.ctx.upload(gb, angles_t.bytes())?;
-            let f = self.batched_function()?;
-            let args = vec![
-                KernelArg::Ptr(ga),
-                KernelArg::Ptr(gb),
-                KernelArg::Ptr(gc),
-                KernelArg::I32(s as i32),
-            ];
-            f.launch(
-                &LaunchConfig::new((a as u32, n as u32), s as u32),
-                &args,
-                self.ctx.memory()?,
-            )?;
-            let mut sinos_host = Tensor::zeros_f32(&[n, nt, a, s]);
-            self.ctx.download(gc, sinos_host.bytes_mut())?;
-            Ok(sinos_host)
-        })();
-        let sinos_host = free3(&self.ctx, ga, gb, gc, body)?;
+        let mut sinos_host = Tensor::zeros_f32(&[n, nt, a, s]);
+        sinos_dev.download_into(&mut sinos_host)?;
 
         let all = sinos_host.as_f32();
         let mut out = Vec::with_capacity(n);
@@ -261,12 +291,12 @@ mod tests {
     use crate::tracetransform::image::{orientations, shepp_logan};
 
     #[test]
-    fn emulator_dynamic_batch_shares_one_angle_upload() {
+    fn emulator_dynamic_batch_keeps_angles_and_buffers_device_resident() {
         use crate::tracetransform::image::random_phantom;
         let imgs: Vec<Image> = (0..3).map(|i| random_phantom(10, 70 + i as u64)).collect();
         let thetas = orientations(5);
         let mut m = GpuDynamic::on_device(DeviceChoice::Emulator).unwrap();
-        m.features_batch(&imgs, &thetas).unwrap(); // warm the function cache
+        m.features_batch(&imgs, &thetas).unwrap(); // cold: buffers + angle table
         m.ctx.memory().unwrap().reset_stats();
         m.features_batch(&imgs, &thetas).unwrap();
         let bat = m.ctx.mem_stats().unwrap();
@@ -275,10 +305,18 @@ mod tests {
             m.features(img, &thetas).unwrap();
         }
         let seq = m.ctx.mem_stats().unwrap();
-        assert_eq!(bat.h2d_count, 2, "stacked images + one angle table");
+        assert_eq!(bat.h2d_count, 1, "stacked images only; angles stay on device");
+        assert_eq!(bat.d2h_count, 1, "one sinogram download per batch");
+        assert_eq!(bat.alloc_count, 0, "persistent buffers recycle across batches");
         assert_eq!(seq.h2d_count, 2 * imgs.len() as u64);
-        assert_eq!(bat.alloc_count, 3, "ga/gb/gc once per batch");
         assert_eq!(seq.alloc_count, 3 * imgs.len() as u64);
+        // a different batch shape rebuilds the buffers, then goes warm again
+        m.ctx.memory().unwrap().reset_stats();
+        m.features_batch(&imgs[..2], &thetas).unwrap();
+        assert!(m.ctx.mem_stats().unwrap().alloc_count > 0);
+        m.ctx.memory().unwrap().reset_stats();
+        m.features_batch(&imgs[..2], &thetas).unwrap();
+        assert_eq!(m.ctx.mem_stats().unwrap().alloc_count, 0);
     }
 
     #[test]

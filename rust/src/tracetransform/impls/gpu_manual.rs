@@ -31,7 +31,7 @@ impl GpuManual {
     }
 
     pub fn on_device(device: DeviceChoice) -> Result<GpuManual> {
-        let ctx = Context::create(&crate::driver::device(device.ordinal())?)?;
+        let ctx = Context::create(&device.device()?)?;
         let library = match device {
             DeviceChoice::Pjrt => Some(ArtifactLibrary::load_default()?),
             DeviceChoice::Emulator => None,

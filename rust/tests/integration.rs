@@ -20,7 +20,7 @@ fn have_artifacts() -> bool {
 
 #[test]
 fn driver_full_lifecycle_on_emulator() {
-    let dev = hlgpu::driver::device(1).unwrap();
+    let dev = hlgpu::driver::emulator_device().unwrap();
     let ctx = Context::create(&dev).unwrap();
     let module = ctx
         .load_module(&ModuleSource::Vtx { kernels: vec![kernels::vadd().unwrap()] })
@@ -60,7 +60,7 @@ fn driver_full_lifecycle_on_emulator() {
 
 #[test]
 fn streams_order_launches_and_events_time_them() {
-    let dev = hlgpu::driver::device(1).unwrap();
+    let dev = hlgpu::driver::emulator_device().unwrap();
     let ctx = Context::create(&dev).unwrap();
     let module = ctx
         .load_module(&ModuleSource::Vtx { kernels: vec![kernels::vadd().unwrap()] })

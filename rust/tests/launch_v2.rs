@@ -1,0 +1,362 @@
+//! Launch API v2 integration suite: bound kernel handles, device-resident
+//! arguments, stream-ordered async launches (see `docs/api.md`).
+//!
+//! The acceptance regression lives here: a warm `KernelHandle` launch
+//! with all-device-resident arguments performs **zero** h2d/d2h copies
+//! and **zero** specialization-cache lookups, asserted against
+//! `LaunchMetrics` and `MemStats`.
+
+use std::sync::Mutex;
+
+use hlgpu::coordinator::{arg, DeviceArray, Launcher, VtxSpec};
+use hlgpu::driver::{emulator_device, Context, KernelArg, LaunchConfig};
+use hlgpu::tensor::{Dtype, Tensor};
+
+/// Guards the process-wide execution-tier override.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+fn vadd_launcher() -> Launcher {
+    let mut l = Launcher::emulator().unwrap();
+    l.registry_mut().register_vtx("vadd", |specs| {
+        let n = specs[0].numel();
+        Ok(VtxSpec {
+            kernel: hlgpu::emulator::kernels::vadd()?,
+            scalars: vec![KernelArg::I32(n as i32)],
+            config: LaunchConfig::new((n as u32).div_ceil(256), 256u32),
+        })
+    });
+    l
+}
+
+// ------------------------------------------------- acceptance criterion --
+
+#[test]
+fn warm_device_resident_handle_launch_is_zero_copy_zero_lookup() {
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let a = Tensor::from_f32(&[1.0; 64], &[64]);
+    let b = Tensor::from_f32(&[2.0; 64], &[64]);
+    let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+    let db = DeviceArray::from_tensor(&ctx, &b).unwrap();
+    let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[64]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let cfg = LaunchConfig::new(1u32, 64u32);
+    // one warm-up launch, then measure a steady-state window
+    handle
+        .launch(cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    ctx.memory().unwrap().reset_stats();
+    let cache_before = l.cache_stats();
+    let m_before = l.metrics();
+    for _ in 0..25 {
+        handle
+            .launch(cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+            .unwrap();
+    }
+    let st = ctx.mem_stats().unwrap();
+    assert_eq!(st.h2d_count, 0, "zero host->device copies");
+    assert_eq!(st.d2h_count, 0, "zero device->host copies");
+    assert_eq!(st.alloc_count, 0, "zero allocator traffic");
+    let cache_after = l.cache_stats();
+    assert_eq!(cache_before.hits, cache_after.hits, "zero cache lookups");
+    assert_eq!(cache_before.misses, cache_after.misses, "zero cache misses");
+    let m = l.metrics();
+    assert_eq!(m.launches - m_before.launches, 25);
+    assert_eq!(m.skipped_h2d - m_before.skipped_h2d, 75, "3 skipped uploads per launch");
+    assert_eq!(m.skipped_d2h - m_before.skipped_d2h, 25, "1 skipped download per launch");
+    assert!(dc.download().unwrap().as_f32().iter().all(|&v| v == 3.0));
+}
+
+// ------------------------------------------- device-resident chaining --
+
+#[test]
+fn device_resident_chaining_identical_across_exec_tiers() {
+    use hlgpu::emulator::{set_default_exec, ExecTier};
+    let _g = EXEC_LOCK.lock().unwrap();
+    let mut per_tier = Vec::new();
+    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        set_default_exec(Some(tier));
+        let mut l = vadd_launcher();
+        let ctx = l.context().clone();
+        let n = 128usize;
+        let a = Tensor::from_f32(&(0..n).map(|i| i as f32).collect::<Vec<_>>(), &[n]);
+        let b = Tensor::from_f32(&(0..n).map(|i| (i * 2) as f32).collect::<Vec<_>>(), &[n]);
+        let cfg = LaunchConfig::new(1u32, n as u32);
+        // device-resident chain: a+b -> c, c+a -> d; no host round-trip
+        let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+        let db = DeviceArray::from_tensor(&ctx, &b).unwrap();
+        let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[n]).unwrap();
+        let mut dd = DeviceArray::alloc(&ctx, Dtype::F32, &[n]).unwrap();
+        l.launch("vadd", cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+            .unwrap();
+        l.launch("vadd", cfg, &mut [arg::cu_dev(&dc), arg::cu_dev(&da), arg::cu_dev_mut(&mut dd)])
+            .unwrap();
+        let chained = dd.download().unwrap().to_vec_f32();
+        // the chained stages really skipped the host
+        let m = l.metrics();
+        assert_eq!(m.skipped_h2d, 6);
+        assert_eq!(m.skipped_d2h, 2);
+        // host round-trip reference through the same launcher
+        let mut c = Tensor::zeros_f32(&[n]);
+        let mut d = Tensor::zeros_f32(&[n]);
+        l.launch("vadd", cfg, &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap();
+        l.launch("vadd", cfg, &mut [arg::cu_in(&c), arg::cu_in(&a), arg::cu_out(&mut d)])
+            .unwrap();
+        assert_eq!(chained, d.to_vec_f32(), "chain == round-trip under {tier:?}");
+        per_tier.push(chained);
+    }
+    set_default_exec(None);
+    assert_eq!(per_tier[0], per_tier[1], "scalar and vector tiers agree bitwise");
+}
+
+// --------------------------------------------- stream-ordered launches --
+
+#[test]
+fn pending_launch_event_orders_two_streams() {
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let n = 4096usize;
+    let a = Tensor::from_f32(&vec![1.5; n], &[n]);
+    let b = Tensor::from_f32(&vec![2.5; n], &[n]);
+    let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+    let db = DeviceArray::from_tensor(&ctx, &b).unwrap();
+    let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[n]).unwrap();
+    let mut dd = DeviceArray::alloc(&ctx, Dtype::F32, &[n]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let s1 = ctx.create_stream().unwrap();
+    let s2 = ctx.create_stream().unwrap();
+    let cfg = LaunchConfig::new((n as u32).div_ceil(256), 256u32);
+    let p1 = handle
+        .launch_on(&s1, cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    // fence stream 2 on stream 1's launch, then chain off its output
+    s2.wait_event(p1.event()).unwrap();
+    let p2 = handle
+        .launch_on(&s2, cfg, &mut [arg::cu_dev(&dc), arg::cu_dev(&da), arg::cu_dev_mut(&mut dd)])
+        .unwrap();
+    p2.wait().unwrap();
+    p1.wait().unwrap();
+    let out = dd.download().unwrap();
+    // d = (a + b) + a = 1.5 + 2.5 + 1.5
+    assert!(out.as_f32().iter().all(|&v| v == 5.5));
+}
+
+#[test]
+fn async_launch_with_host_inputs_uploads_in_order() {
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let a = Tensor::from_f32(&[4.0; 32], &[32]);
+    let b = Tensor::from_f32(&[5.0; 32], &[32]);
+    let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[32]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let s = ctx.create_stream().unwrap();
+    let p = handle
+        .launch_on(
+            &s,
+            LaunchConfig::new(1u32, 32u32),
+            &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_dev_mut(&mut dc)],
+        )
+        .unwrap();
+    p.wait().unwrap();
+    assert!(dc.download().unwrap().as_f32().iter().all(|&v| v == 9.0));
+}
+
+#[test]
+fn back_to_back_async_launches_keep_host_inputs_ordered() {
+    // Regression: the staging buffer for a host `In` argument is shared
+    // by every launch through a handle. The second launch_on's upload
+    // must be stream-ordered AFTER the first kernel, not performed
+    // eagerly on the host (which would overwrite the input kernel 1
+    // reads).
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let zeros = Tensor::from_f32(&[0.0; 32], &[32]);
+    let x1 = Tensor::from_f32(&[1.0; 32], &[32]);
+    let x2 = Tensor::from_f32(&[100.0; 32], &[32]);
+    let mut d1 = DeviceArray::alloc(&ctx, Dtype::F32, &[32]).unwrap();
+    let mut d2 = DeviceArray::alloc(&ctx, Dtype::F32, &[32]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_in(&x1), arg::cu_in(&zeros), arg::cu_dev_mut(&mut d1)])
+        .unwrap();
+    let s = ctx.create_stream().unwrap();
+    let cfg = LaunchConfig::new(1u32, 32u32);
+    let p1 = handle
+        .launch_on(&s, cfg, &mut [arg::cu_in(&x1), arg::cu_in(&zeros), arg::cu_dev_mut(&mut d1)])
+        .unwrap();
+    let p2 = handle
+        .launch_on(&s, cfg, &mut [arg::cu_in(&x2), arg::cu_in(&zeros), arg::cu_dev_mut(&mut d2)])
+        .unwrap();
+    p1.wait().unwrap();
+    p2.wait().unwrap();
+    assert!(d1.download().unwrap().as_f32().iter().all(|&v| v == 1.0), "kernel 1 saw x1");
+    assert!(d2.download().unwrap().as_f32().iter().all(|&v| v == 100.0), "kernel 2 saw x2");
+}
+
+#[test]
+fn cloned_handles_serialize_host_staging_across_threads() {
+    // Regression: synchronous launches through cloned handles share one
+    // staging plan; the per-specialization stage lock must keep two
+    // threads from interleaving upload/launch/download on it.
+    let mut l = vadd_launcher();
+    let handle = {
+        let a = Tensor::from_f32(&[0.0; 64], &[64]);
+        let b = Tensor::from_f32(&[0.0; 64], &[64]);
+        let mut c = Tensor::zeros_f32(&[64]);
+        l.bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)]).unwrap()
+    };
+    let cfg = LaunchConfig::new(1u32, 64u32);
+    let mut workers = Vec::new();
+    for t in 0..4u32 {
+        let h = handle.clone();
+        workers.push(std::thread::spawn(move || {
+            for i in 0..50u32 {
+                let va = (t * 1000 + i) as f32;
+                let a = Tensor::from_f32(&[va; 64], &[64]);
+                let b = Tensor::from_f32(&[0.5; 64], &[64]);
+                let mut c = Tensor::zeros_f32(&[64]);
+                h.launch(cfg, &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+                    .unwrap();
+                assert!(
+                    c.as_f32().iter().all(|&v| v == va + 0.5),
+                    "thread {t} iter {i}: staging interleaved"
+                );
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+}
+
+#[test]
+fn handle_rejects_type_punned_arguments() {
+    // Regression: the handle path has no cache key, so validation must
+    // catch an i32 tensor passed where the plan was built for f32 of
+    // the same byte length.
+    let mut l = vadd_launcher();
+    let a = Tensor::from_f32(&[1.0; 16], &[16]);
+    let b = Tensor::from_f32(&[2.0; 16], &[16]);
+    let mut c = Tensor::zeros_f32(&[16]);
+    let handle = l
+        .bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+        .unwrap();
+    let cfg = LaunchConfig::new(1u32, 16u32);
+    // same 64 bytes, wrong dtype
+    let punned = Tensor::new(
+        hlgpu::tensor::Dtype::I32,
+        &[16],
+        vec![0u8; 64],
+    )
+    .unwrap();
+    let err = handle
+        .launch(cfg, &mut [arg::cu_in(&punned), arg::cu_in(&b), arg::cu_out(&mut c)])
+        .unwrap_err();
+    assert!(err.to_string().contains("specialized for"), "{err}");
+    // same byte length, different shape
+    let reshaped = Tensor::from_f32(&[1.0; 16], &[4, 4]);
+    let err = handle
+        .launch(cfg, &mut [arg::cu_in(&reshaped), arg::cu_in(&b), arg::cu_out(&mut c)])
+        .unwrap_err();
+    assert!(err.to_string().contains("specialized for"), "{err}");
+}
+
+#[test]
+fn launch_on_rejects_host_outputs() {
+    let mut l = vadd_launcher();
+    let a = Tensor::from_f32(&[1.0; 8], &[8]);
+    let b = Tensor::from_f32(&[1.0; 8], &[8]);
+    let mut c = Tensor::zeros_f32(&[8]);
+    let handle = l
+        .bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+        .unwrap();
+    let s = l.context().create_stream().unwrap();
+    let err = handle
+        .launch_on(
+            &s,
+            LaunchConfig::new(1u32, 8u32),
+            &mut [arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("device-resident"), "{err}");
+}
+
+#[test]
+fn sticky_stream_errors_surface_on_wait() {
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let a = Tensor::from_f32(&[1.0; 16], &[16]);
+    let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+    let db = DeviceArray::from_tensor(&ctx, &a).unwrap();
+    let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[16]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let s = ctx.create_stream().unwrap();
+    // poison the stream before the launch: CUDA's sticky-error model
+    // surfaces the earlier failure at the join point
+    s.enqueue(|| Err(hlgpu::Error::Stream("poisoned upstream".into()))).unwrap();
+    let p = handle
+        .launch_on(
+            &s,
+            LaunchConfig::new(1u32, 16u32),
+            &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)],
+        )
+        .unwrap();
+    let err = p.wait().unwrap_err();
+    assert!(err.to_string().contains("poisoned upstream"), "{err}");
+    // the stream kept draining: the launch after the poison still ran
+    assert!(dc.download().unwrap().as_f32().iter().all(|&v| v == 2.0));
+}
+
+// ------------------------------------------------- per-stream arenas --
+
+#[test]
+fn stream_arenas_partition_the_pool() {
+    let ctx = Context::create(&emulator_device().unwrap()).unwrap();
+    let s1 = ctx.create_stream().unwrap();
+    let s2 = ctx.create_stream().unwrap();
+    assert_ne!(s1.arena_id(), s2.arena_id());
+    let p1 = ctx.alloc_in(s1.arena_id(), 256).unwrap();
+    let p2 = ctx.alloc_in(s2.arena_id(), 256).unwrap();
+    let n = ctx.memory().unwrap().arena_count() as u64;
+    // handles encode their arena (seq * arenas + arena); nonzero stream
+    // ids spread over shards 1..n, never the default arena 0
+    let expect = |id: u64| if n == 1 { 0 } else { 1 + (id - 1) % (n - 1) };
+    assert_eq!(p1.0 % n, expect(s1.arena_id() as u64));
+    assert_eq!(p2.0 % n, expect(s2.arena_id() as u64));
+    if n > 1 {
+        assert_ne!(p1.0 % n, 0, "stream buffers avoid the synchronous arena");
+    }
+    ctx.free(p1).unwrap();
+    ctx.free(p2).unwrap();
+}
+
+// ------------------------------------------- end-to-end batched pipeline --
+
+#[test]
+fn two_stream_batched_pipeline_matches_sequential() {
+    use hlgpu::tracetransform::{orientations, random_phantom, DeviceChoice, GpuAuto, TraceImpl};
+    let imgs: Vec<_> = (0..6).map(|i| random_phantom(12, 500 + i as u64)).collect();
+    let thetas = orientations(7);
+    let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    let batch = auto.features_batch(&imgs, &thetas).unwrap();
+    // repeat to exercise the warm (buffer-reusing) path too
+    let batch2 = auto.features_batch(&imgs, &thetas).unwrap();
+    assert_eq!(batch, batch2);
+    for (i, img) in imgs.iter().enumerate() {
+        let seq = auto.features(img, &thetas).unwrap();
+        for (j, (x, y)) in batch[i].iter().zip(&seq).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4 * x.abs().max(1.0),
+                "image {i} feature {j}: batch {x} vs seq {y}"
+            );
+        }
+    }
+}

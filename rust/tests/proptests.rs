@@ -111,7 +111,7 @@ fn prop_cached_and_uncached_policies_observationally_identical() {
     use hlgpu::driver::{Context, PoolPolicy};
     for seed in 0..CASES as u64 {
         let mut rng = Prng::new(11_000 + seed);
-        let dev = hlgpu::driver::device(1).unwrap();
+        let dev = hlgpu::driver::emulator_device().unwrap();
         let cached = Context::create_with_policy(&dev, PoolPolicy::Cached).unwrap();
         let uncached = Context::create_with_policy(&dev, PoolPolicy::Uncached).unwrap();
         let mut live: Vec<(DeviceArray, DeviceArray, Vec<f32>)> = Vec::new();
