@@ -17,9 +17,12 @@
 //! Part 3 (always runs, VTX emulator): **launch API v2** — (a) a warm
 //! bound `KernelHandle` with all-device-resident arguments vs the v1
 //! host-round-trip `cuda!` path (bytes moved per launch must drop to
-//! zero), and (b) the v1 per-image sync loop vs the v2 two-stream
+//! zero), (b) the v1 per-image sync loop vs the v2 two-stream
 //! double-buffered batched pipeline in `gpu_auto` (bytes per image and
-//! wall clock both drop — the device-resident angle table uploads once).
+//! wall clock both drop — the device-resident angle table uploads once),
+//! and (c) the host vs device P/F reduction stage (`HLGPU_REDUCE`):
+//! bytes downloaded per image collapse from `|T|·a·s` floats to the
+//! `FEATURE_COUNT`-float block.
 //!
 //! Part 4 (needs `make artifacts`): the §6 claim that the automation
 //! layer adds **no run-time overhead** over manual driver calls once the
@@ -366,6 +369,66 @@ fn two_stream_pipeline_section(settings: Settings) {
     );
 }
 
+/// Launch API v2 section C: the P/F reduction stage on the host (every
+/// sinogram downloaded, `reduce_sinogram` on the CPU) vs on the device
+/// (`circus_all`/`features_all` kernels + async `PendingDownload` of the
+/// FEATURE_COUNT-float block). Reports bytes downloaded per image and
+/// end-to-end features/s.
+fn reduce_stage_section(settings: Settings) {
+    use hlgpu::tracetransform::{
+        set_default_reduce, DeviceChoice, GpuAuto, ReduceMode, TraceImpl, FEATURE_COUNT,
+    };
+    let size = env_usize("LO_SIZE", 96);
+    let angles = env_usize("LO_ANGLES", 64);
+    let batch = env_usize("LO_BATCH", 8);
+    let thetas = orientations(angles);
+    let imgs: Vec<_> = (0..batch).map(|i| random_phantom(size, 90 + i as u64)).collect();
+    let iters = (settings.warmup_iters + settings.sample_iters) as f64;
+
+    let mut table = Table::new(&["reduce stage", "time/batch", "KiB d2h/image", "features/s", "speedup"]);
+    let mut host_mean = 0.0f64;
+    for mode in [ReduceMode::Host, ReduceMode::Device] {
+        set_default_reduce(Some(mode));
+        let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        auto.features_batch(&imgs, &thetas).unwrap(); // warm pipes + handles
+        auto.launcher().context().memory().unwrap().reset_stats();
+        let summary = measure(settings, || {
+            auto.features_batch(&imgs, &thetas).unwrap();
+        });
+        let st = auto.launcher().context().mem_stats().unwrap();
+        let d2h_kib = st.d2h_bytes as f64 / iters / batch as f64 / 1024.0;
+        let feats_per_s = (batch * FEATURE_COUNT) as f64 / summary.mean;
+        let (name, speedup) = match mode {
+            ReduceMode::Host => {
+                host_mean = summary.mean;
+                ("host (download sinograms)".to_string(), "1.00x".to_string())
+            }
+            ReduceMode::Device => (
+                "device (circus_all + features_all)".to_string(),
+                fmt_speedup(host_mean, summary.mean),
+            ),
+        };
+        table.row(&[
+            name,
+            fmt_summary(&summary),
+            format!("{d2h_kib:.2}"),
+            format!("{feats_per_s:.0}"),
+            speedup,
+        ]);
+    }
+    set_default_reduce(None);
+
+    println!(
+        "\nLaunch API v2 — host vs device P/F reduction ({batch} images of {size}x{size}, {angles} angles)"
+    );
+    println!("(HLGPU_REDUCE=host|device overrides the default placement)");
+    println!("{}", table.render());
+    println!(
+        "device target: {:.3} KiB d2h per image (FEATURE_COUNT * 4 bytes) vs the host path's full sinogram download",
+        FEATURE_COUNT as f64 * 4.0 / 1024.0
+    );
+}
+
 /// PJRT section: the original §6 manual-vs-automation comparison.
 fn pjrt_overhead_section(settings: Settings, lib: &ArtifactLibrary) {
     let n = env_usize("LO_N", 4096);
@@ -498,6 +561,7 @@ fn main() {
     exec_tier_section(settings);
     device_resident_section(settings);
     two_stream_pipeline_section(settings);
+    reduce_stage_section(settings);
 
     match ArtifactLibrary::load_default() {
         Ok(lib) => pjrt_overhead_section(settings, &lib),

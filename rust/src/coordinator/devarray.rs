@@ -113,6 +113,33 @@ impl DeviceArray {
         Ok(t)
     }
 
+    /// Asynchronous `to_host`: enqueue the download on `stream` (after
+    /// everything already enqueued there — a kernel that produces this
+    /// array on the same stream is observed) and return a
+    /// [`PendingDownload`](crate::coordinator::PendingDownload) that
+    /// resolves to the tensor on `wait()`. Sticky stream errors surface
+    /// at the join, and the download's
+    /// [`Event`](crate::driver::Event) composes with
+    /// [`Stream::wait_event`](crate::driver::Stream::wait_event) for
+    /// cross-stream chains. See `docs/api.md` (launch API v2).
+    pub fn download_on<'s>(
+        &self,
+        stream: &'s crate::driver::Stream,
+    ) -> Result<crate::coordinator::PendingDownload<'s>> {
+        let pool = self.ctx.memory_arc()?;
+        let bytes = std::sync::Arc::new(std::sync::Mutex::new(vec![0u8; self.byte_len()]));
+        stream.copy_d2h(pool, self.ptr, bytes.clone())?;
+        let event = crate::driver::Event::new();
+        stream.record_event(&event)?;
+        Ok(crate::coordinator::PendingDownload {
+            stream,
+            event,
+            bytes,
+            dtype: self.dtype,
+            shape: self.shape.clone(),
+        })
+    }
+
     pub fn download_into(&self, t: &mut Tensor) -> Result<()> {
         if t.shape() != self.shape.as_slice() || t.dtype() != self.dtype {
             return Err(Error::Type("download shape mismatch".into()));
@@ -213,6 +240,19 @@ mod tests {
         assert!(!d.freed, "failed free must keep the drop-time retry armed");
         // silence this intentionally-broken handle's drop retry
         d.freed = true;
+    }
+
+    #[test]
+    fn download_on_resolves_to_the_uploaded_tensor() {
+        let ctx = ctx();
+        let t = Tensor::from_f32(&[4.0, 5.0, 6.0, 7.0], &[4]);
+        let d = DeviceArray::from_tensor(&ctx, &t).unwrap();
+        let s = ctx.create_stream().unwrap();
+        let pd = d.download_on(&s).unwrap();
+        let back = pd.wait().unwrap();
+        assert_eq!(back.dtype(), Dtype::F32);
+        assert_eq!(back.shape(), &[4]);
+        assert_eq!(back.as_f32(), t.as_f32());
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //!   [`Stream`] and returns a [`PendingLaunch`] joinable via its
 //!   [`Event`] or [`PendingLaunch::wait`] — the stream-ordered async
 //!   path the double-buffered pipelines build on.
+//! * [`KernelHandle::download_on`] /
+//!   [`crate::coordinator::DeviceArray::download_on`] enqueue an
+//!   **async d2h readback** and return a [`PendingDownload`] that
+//!   resolves to a [`Tensor`](crate::tensor::Tensor) on
+//!   [`PendingDownload::wait`] — the result-fetch half of a fully
+//!   device-resident pipeline (the trace pipeline's feature block is
+//!   `FEATURE_COUNT` floats instead of whole sinograms; see
+//!   `docs/api.md`).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -125,6 +133,13 @@ pub struct LaunchMetrics {
     pub vector_lane_ops: u64,
     /// Σ block width over vector-tier dispatches.
     pub vector_lane_slots: u64,
+    /// Async d2h readbacks enqueued through [`KernelHandle::download_on`]
+    /// (each resolves to a `Tensor` on `PendingDownload::wait`).
+    pub d2h_deferred: u64,
+    /// Bytes moved by those deferred readbacks — for the trace pipeline's
+    /// device-reduce path this is `FEATURE_COUNT * 4` per image, the
+    /// measurable A/B against downloading whole sinograms.
+    pub features_bytes: u64,
 }
 
 impl LaunchMetrics {
@@ -237,6 +252,23 @@ fn validate_args(kernel: &str, spec: &Specialized, args: &[Arg<'_>]) -> Result<(
                 } else {
                     "plan expects a host argument, got a device-resident one".into()
                 },
+            });
+        }
+        // Transfer-direction check: the handle path has no cache key to
+        // separate an `In` plan from an `InOut` call — a mismatch would
+        // silently run the *bound* plan's transfers (e.g. never
+        // downloading what the caller wrapped as an output). `Auto` call
+        // modes are exempt: the plan's resolved mode IS their meaning.
+        if !arg.mode().is_auto() && arg.mode() != entry.mode {
+            return Err(Error::BadArgument {
+                kernel: kernel.to_string(),
+                index,
+                reason: format!(
+                    "argument is wrapped {:?}, the plan was specialized for {:?} — transfer \
+                     directions are part of the bound call shape",
+                    arg.mode(),
+                    entry.mode
+                ),
             });
         }
         // Full type-shape check, not just byte length: the handle path
@@ -716,7 +748,12 @@ impl KernelHandle {
     /// N's kernel has run). A handle with host-staged arguments must not
     /// be launched concurrently on *different* streams — the staging
     /// buffers are shared; use device-resident arguments (or separate
-    /// handles) for cross-stream pipelines. Every `Out`/`InOut` argument
+    /// handles) for cross-stream pipelines. For the same reason, do not
+    /// interleave a synchronous [`KernelHandle::launch`] with an
+    /// in-flight `launch_on` on a host-staged handle: the sync path
+    /// copies into the shared staging buffers immediately, not in
+    /// stream order — join the pending launch first (all-device plans
+    /// have no staging and mix freely). Every `Out`/`InOut` argument
     /// must be **device-resident** (`arg::cu_dev_mut`): an async launch
     /// cannot write back into borrowed host memory; download the result
     /// after joining.
@@ -787,6 +824,27 @@ impl KernelHandle {
         stream.record_event(&event)?;
         Ok(PendingLaunch { stream, event, error })
     }
+
+    /// Enqueue an asynchronous readback of `array` on `stream` and
+    /// return a [`PendingDownload`] resolving to the array's contents —
+    /// the natural tail of a `launch_on` chain (enqueue it on the same
+    /// stream after the producing kernel, or fence another stream with
+    /// the launch's [`Event`] first). Identical to
+    /// [`crate::coordinator::DeviceArray::download_on`] except the
+    /// readback is counted in this handle's [`LaunchMetrics`]
+    /// (`d2h_deferred` / `features_bytes`), so pipelines can assert how
+    /// many bytes their result path actually moves.
+    pub fn download_on<'s>(
+        &self,
+        stream: &'s Stream,
+        array: &crate::coordinator::DeviceArray,
+    ) -> Result<PendingDownload<'s>> {
+        let pd = array.download_on(stream)?;
+        let mut m = self.metrics.lock().unwrap();
+        m.d2h_deferred += 1;
+        m.features_bytes += array.byte_len() as u64;
+        Ok(pd)
+    }
 }
 
 /// An in-flight stream-ordered launch: join it with
@@ -823,6 +881,50 @@ impl PendingLaunch<'_> {
             return Err(Error::Stream(msg));
         }
         Ok(())
+    }
+}
+
+/// An in-flight stream-ordered **device→host readback** (launch API v2):
+/// the async counterpart of `DeviceArray::download`. Obtained from
+/// [`KernelHandle::download_on`] or
+/// [`crate::coordinator::DeviceArray::download_on`]; the copy runs in
+/// stream order (after every kernel enqueued before it), and
+/// [`PendingDownload::wait`] blocks until it lands, surfaces any sticky
+/// stream error, and hands back the bytes as a typed
+/// [`Tensor`](crate::tensor::Tensor). Fence another stream's consumer on
+/// [`PendingDownload::event`] via [`Stream::wait_event`] to chain
+/// without blocking the host.
+pub struct PendingDownload<'s> {
+    pub(crate) stream: &'s Stream,
+    pub(crate) event: Event,
+    pub(crate) bytes: Arc<Mutex<Vec<u8>>>,
+    pub(crate) dtype: crate::tensor::Dtype,
+    pub(crate) shape: Vec<usize>,
+}
+
+impl PendingDownload<'_> {
+    /// Event recorded immediately after the copy on the stream.
+    pub fn event(&self) -> &Event {
+        &self.event
+    }
+
+    /// `cuEventQuery` semantics: has the copy (and everything before it
+    /// on the stream) completed?
+    pub fn is_done(&self) -> bool {
+        self.event.query()
+    }
+
+    /// Block until the copy has landed and return the tensor — or, per
+    /// the sticky-error model, the first failure of anything enqueued on
+    /// the stream so far (a trapped kernel upstream poisons the
+    /// readback; the bytes would be garbage).
+    pub fn wait(self) -> Result<crate::tensor::Tensor> {
+        self.event.synchronize();
+        if let Some(msg) = self.stream.peek_error() {
+            return Err(Error::Stream(msg));
+        }
+        let data = std::mem::take(&mut *self.bytes.lock().unwrap());
+        crate::tensor::Tensor::new(self.dtype, &self.shape, data)
     }
 }
 
@@ -982,6 +1084,33 @@ mod tests {
             .launch(cfg, &mut [arg::cu_dev(&dev_a), arg::cu_in(&b), arg::cu_out(&mut c)])
             .unwrap_err();
         assert!(err.to_string().contains("host argument"), "{err}");
+    }
+
+    #[test]
+    fn handle_rejects_mismatched_transfer_modes() {
+        // Regression: the handle path has no cache key, so a call whose
+        // wrapper direction differs from the bound plan must error
+        // instead of silently running the plan's transfers.
+        let mut l = emulator_launcher_with_vadd();
+        let a = Tensor::from_f32(&[1.0; 8], &[8]);
+        let b = Tensor::from_f32(&[2.0; 8], &[8]);
+        let mut c = Tensor::zeros_f32(&[8]);
+        let handle = l
+            .bind("vadd", &[arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap();
+        let cfg = LaunchConfig::new(1u32, 8u32);
+        let mut a2 = Tensor::from_f32(&[1.0; 8], &[8]);
+        let err = handle
+            .launch(cfg, &mut [arg::cu_inout(&mut a2), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap_err();
+        assert!(matches!(err, Error::BadArgument { .. }), "{err}");
+        assert!(err.to_string().contains("transfer"), "{err}");
+        // Auto call modes stay accepted — the plan's resolved mode is
+        // exactly what Auto defers to.
+        handle
+            .launch(cfg, &mut [arg::cu_auto(&mut a2), arg::cu_in(&b), arg::cu_out(&mut c)])
+            .unwrap();
+        assert!(c.as_f32().iter().all(|&v| v == 3.0));
     }
 
     #[test]

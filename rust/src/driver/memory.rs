@@ -135,6 +135,13 @@ pub struct MemStats {
     pub evicted_bytes: u64,
     /// Blocks released by the LRU bound.
     pub evicted_blocks: u64,
+    /// Bytes served by **cross-arena bin stealing**: an arena whose own
+    /// bins were empty recycled a fitting block parked by a sibling
+    /// arena instead of carving fresh capacity (counted at the bin
+    /// size; also included in `reuse_*`).
+    pub stolen_bytes: u64,
+    /// Blocks served by cross-arena bin stealing.
+    pub stolen_blocks: u64,
 }
 
 impl MemStats {
@@ -173,6 +180,8 @@ struct ArenaCounters {
     d2d_bytes: u64,
     reuse_count: u64,
     reuse_bytes: u64,
+    stolen_bytes: u64,
+    stolen_blocks: u64,
 }
 
 /// One allocation arena: its own buffer map and free bins behind its own
@@ -445,6 +454,50 @@ impl MemoryPool {
                 inner.counters.reuse_count += 1;
                 inner.counters.reuse_bytes += bytes as u64;
                 return Ok(self.finish_alloc(&mut inner, arena, bytes, buf, false));
+            }
+        }
+
+        // Cross-arena bin stealing: before carving fresh capacity, check
+        // whether a *sibling* arena parks a block of the right bin. Under
+        // imbalanced stream traffic (one arena frees what another
+        // allocates) this turns a fresh carve into a recycle. Sibling
+        // locks are taken one at a time and released before this arena's
+        // lock, so the steal never nests locks; the stolen block is
+        // re-registered under a handle that routes to the *thief's*
+        // arena. Guarded by the global cached gauge so a cold pool (the
+        // allocation-heavy startup phase, nothing parked anywhere) pays
+        // one relaxed load instead of sweeping every sibling's mutex.
+        if self.policy == PoolPolicy::Cached
+            && self.arenas.len() > 1
+            && self.global.cached_blocks.load(Ordering::Relaxed) > 0
+        {
+            let bin = bin_size(bytes);
+            for (i, sibling) in self.arenas.iter().enumerate() {
+                if i == arena {
+                    continue;
+                }
+                let stolen = {
+                    let mut other = sibling.lock().unwrap();
+                    match other.free_bins.get_mut(&bin).and_then(|v| v.pop_back()) {
+                        Some((_, buf)) => {
+                            other.cached_bytes -= bin;
+                            other.cached_blocks -= 1;
+                            Some(buf)
+                        }
+                        None => None,
+                    }
+                };
+                if let Some(mut buf) = stolen {
+                    self.global.cached_bytes.fetch_sub(bin, Ordering::Relaxed);
+                    self.global.cached_blocks.fetch_sub(1, Ordering::Relaxed);
+                    buf.truncate(bytes); // parked with len == bin >= bytes
+                    let mut inner = self.arenas[arena].lock().unwrap();
+                    inner.counters.reuse_count += 1;
+                    inner.counters.reuse_bytes += bytes as u64;
+                    inner.counters.stolen_blocks += 1;
+                    inner.counters.stolen_bytes += bin as u64;
+                    return Ok(self.finish_alloc(&mut inner, arena, bytes, buf, false));
+                }
             }
         }
 
@@ -841,6 +894,8 @@ impl MemoryPool {
             st.d2d_bytes += c.d2d_bytes;
             st.reuse_count += c.reuse_count;
             st.reuse_bytes += c.reuse_bytes;
+            st.stolen_bytes += c.stolen_bytes;
+            st.stolen_blocks += c.stolen_blocks;
         }
         st.current_bytes = self.global.current_bytes.load(Ordering::Relaxed);
         st.peak_bytes = self.global.peak_bytes.load(Ordering::Relaxed);
@@ -1328,22 +1383,74 @@ mod tests {
     }
 
     #[test]
-    fn arena_caches_are_local_but_capacity_is_global() {
+    fn cross_arena_bin_stealing_recycles_sibling_blocks() {
+        let pool = MemoryPool::with_policy_arenas(1 << 20, PoolPolicy::Cached, 2);
+        let a = pool.alloc_in(0, 100).unwrap(); // bin 128 parked in arena 0
+        pool.copy_h2d(a, &[7u8; 100]).unwrap();
+        pool.free(a).unwrap();
+        assert_eq!(pool.stats().cached_blocks, 1);
+        // a same-bin request in the *other* arena steals the parked
+        // block instead of carving fresh capacity
+        let b = pool.alloc_in(1, 100).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.reuse_count, 1, "the steal is a cache hit");
+        assert_eq!(st.stolen_blocks, 1);
+        assert_eq!(st.stolen_bytes, 128, "counted at the bin size");
+        assert_eq!((st.cached_bytes, st.cached_blocks), (0, 0));
+        assert_eq!(st.current_bytes, 100, "no fresh capacity carved");
+        // the stolen handle routes to the thief's arena
+        assert_eq!(pool.arena_of(b), 1);
+        // recycled storage keeps stale contents, as always
+        assert_eq!(pool.read_raw(b).unwrap(), vec![7u8; 100]);
+        pool.free(b).unwrap();
+    }
+
+    #[test]
+    fn bin_stealing_requires_a_fitting_bin() {
+        let pool = MemoryPool::with_policy_arenas(1 << 20, PoolPolicy::Cached, 2);
+        let a = pool.alloc_in(0, 100).unwrap(); // bin 128
+        pool.free(a).unwrap();
+        // a different-bin request in the other arena must NOT steal
+        let b = pool.alloc_in(1, 300).unwrap(); // bin 512
+        let st = pool.stats();
+        assert_eq!(st.stolen_blocks, 0);
+        assert_eq!(st.reuse_count, 0);
+        assert_eq!(st.cached_blocks, 1, "arena 0's block stays parked");
+        pool.free(b).unwrap();
+    }
+
+    #[test]
+    fn local_bins_beat_stealing() {
+        // When the allocating arena has its own parked block, it is
+        // preferred — stealing only covers the local-miss case.
+        let pool = MemoryPool::with_policy_arenas(1 << 20, PoolPolicy::Cached, 3);
+        let a = pool.alloc_in(1, 100).unwrap();
+        let b = pool.alloc_in(2, 100).unwrap();
+        pool.free(a).unwrap();
+        pool.free(b).unwrap();
+        let c = pool.alloc_in(1, 100).unwrap(); // local hit, not a steal
+        let st = pool.stats();
+        assert_eq!(st.reuse_count, 1);
+        assert_eq!(st.stolen_blocks, 0);
+        assert_eq!(pool.arena_of(c), pool.arena_index(1));
+        pool.free(c).unwrap();
+    }
+
+    #[test]
+    fn arena_capacity_is_global() {
         let pool = MemoryPool::with_policy_arenas(256, PoolPolicy::Cached, 2);
         let a = pool.alloc_in(0, 100).unwrap(); // bin 128 in arena 0
         pool.free(a).unwrap();
-        // a same-bin request in the *other* arena misses arena 0's cache
-        let b = pool.alloc_in(1, 100).unwrap();
-        assert_eq!(pool.stats().reuse_count, 0, "bins are arena-local");
-        // but capacity counts the parked block globally: live 100 +
-        // cached 128 + another fresh 100 would exceed 256, so the pool
+        // a *different-bin* request in the other arena cannot steal;
+        // capacity counts the parked block globally: live 0 + cached 128
+        // + fresh 192 (bin 256... request 192) exceeds 256, so the pool
         // must pressure-trim arena 0's cache to satisfy it
-        let c = pool.alloc_in(1, 100).unwrap();
+        let b = pool.alloc_in(1, 192).unwrap();
         let st = pool.stats();
         assert_eq!(st.trim_count, 1);
         assert_eq!(st.cached_bytes, 0);
+        assert_eq!(st.stolen_blocks, 0);
         pool.free(b).unwrap();
-        pool.free(c).unwrap();
     }
 
     #[test]

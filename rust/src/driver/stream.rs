@@ -147,6 +147,25 @@ impl Stream {
         self.enqueue(move || mem.copy_h2d(dst, &data))
     }
 
+    /// `cuMemcpyDtoHAsync`: enqueue a device→host download. The bytes
+    /// land in the shared `dst` slot when the stream reaches the op, so
+    /// the download observes every kernel enqueued before it — the same
+    /// FIFO staging discipline as [`Stream::copy_h2d`], mirrored. The
+    /// slot must be pre-sized to the buffer's byte length; readers join
+    /// via an [`Event`] recorded after this op (what
+    /// `PendingDownload` does) before touching the bytes.
+    pub fn copy_d2h(
+        &self,
+        mem: Arc<MemoryPool>,
+        src: DevicePtr,
+        dst: Arc<Mutex<Vec<u8>>>,
+    ) -> Result<()> {
+        self.enqueue(move || {
+            let mut buf = dst.lock().unwrap();
+            mem.copy_d2h(src, &mut buf)
+        })
+    }
+
     /// Enqueue an event record (`cuEventRecord`): the event fires when all
     /// previously enqueued work has completed.
     pub fn record_event(&self, event: &Event) -> Result<()> {
@@ -359,6 +378,25 @@ mod tests {
         // an upload into a dead handle is a sticky stream error
         mem.free(dst).unwrap();
         s.copy_h2d(mem.clone(), dst, vec![9]).unwrap();
+        assert!(s.synchronize().is_err());
+    }
+
+    #[test]
+    fn async_copy_d2h_is_stream_ordered() {
+        let mem = Arc::new(crate::driver::memory::MemoryPool::default());
+        let src = mem.alloc(4).unwrap();
+        let s = Stream::new();
+        // the download must observe the upload enqueued before it
+        s.copy_h2d(mem.clone(), src, vec![9, 8, 7, 6]).unwrap();
+        let slot = Arc::new(Mutex::new(vec![0u8; 4]));
+        s.copy_d2h(mem.clone(), src, slot.clone()).unwrap();
+        s.synchronize().unwrap();
+        assert_eq!(*slot.lock().unwrap(), vec![9, 8, 7, 6]);
+        let st = mem.stats();
+        assert_eq!((st.h2d_count, st.d2h_count), (1, 1));
+        // a download from a dead handle is a sticky stream error
+        mem.free(src).unwrap();
+        s.copy_d2h(mem.clone(), src, slot).unwrap();
         assert!(s.synchronize().is_err());
     }
 

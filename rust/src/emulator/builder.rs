@@ -334,6 +334,53 @@ impl KernelBuilder {
         self.code.push(Instr::Ret);
     }
 
+    // ---- reduction primitive ---------------------------------------------
+
+    /// Emit a barrier-synchronized **shared-memory tree reduction** over
+    /// one or more regions of the block's shared array — the generic
+    /// building block behind every reduction kernel (`tfunc_<t>`,
+    /// `circus_all`, `features_all`, and whatever future workloads need
+    /// a block-wide fold).
+    ///
+    /// Each `(base, op)` region is `block_h` consecutive f32 slots
+    /// starting at `base`; `block_h` must be a power of two and every
+    /// thread of the block must reach this code (the loop barriers are
+    /// unconditional). All regions reduce in one strided loop, so a
+    /// multi-functional kernel pays one barrier per stride instead of
+    /// one per functional. On return `shared[base]` holds each region's
+    /// fold; callers seed the slots with their operator's identity
+    /// (0 for `Add`, `-inf` for `Max`) before the preceding barrier.
+    pub fn reduce1d(&mut self, tid: I, block_h: usize, regions: &[(usize, FOp)]) {
+        assert!(block_h.is_power_of_two(), "block_h must be a power of two");
+        assert!(!regions.is_empty(), "reduce1d needs at least one region");
+        let stride = self.consti((block_h / 2) as i64);
+        let one = self.consti(1);
+        let two = self.consti(2);
+        let bases: Vec<I> = regions.iter().map(|&(base, _)| self.consti(base as i64)).collect();
+        let top = self.label();
+        let skip = self.label();
+        let done = self.label();
+        self.bind(top);
+        let cont = self.cmpi(CmpOp::Ge, stride, one);
+        self.bra_ifz(cont, done);
+        let active = self.cmpi(CmpOp::Lt, tid, stride);
+        self.bra_ifz(active, skip);
+        for (base, &(_, op)) in bases.iter().zip(regions) {
+            let li = self.iadd(*base, tid);
+            let ri = self.iadd(li, stride);
+            let lhs = self.lds(li);
+            let rhs = self.lds(ri);
+            let red = self.binf(op, lhs, rhs);
+            self.sts(li, red);
+        }
+        self.bind(skip);
+        self.bar();
+        let halved = self.idiv(stride, two);
+        self.movi(stride, halved);
+        self.bra(top);
+        self.bind(done);
+    }
+
     // ---- finish ----------------------------------------------------------------------
 
     /// Resolve labels and validate — errors mirror a PTX JIT rejection.
@@ -395,6 +442,54 @@ mod tests {
         let k = b.build().unwrap();
         assert_eq!(k.params.len(), 1);
         assert!(k.fregs >= 2 && k.iregs >= 4);
+    }
+
+    #[test]
+    fn reduce1d_folds_multiple_regions_in_one_strided_loop() {
+        use crate::emulator::interp::{execute, Launch, Limits};
+        use crate::emulator::isa::FOp;
+        // shared[tid] = in[tid] (sum region); shared[bh+tid] = in[tid]
+        // (max region); one reduce1d call folds both; thread 0 writes
+        // out = [Σ in, max in].
+        let bh = 8usize;
+        let mut b = KernelBuilder::new("fold2");
+        let pin = b.ptr_param();
+        let pout = b.ptr_param();
+        b.shared(2 * bh);
+        let tid = b.tid_x();
+        let v = b.ldg(pin, tid);
+        b.sts(tid, v);
+        let bh_i = b.consti(bh as i64);
+        let hi = b.iadd(tid, bh_i);
+        b.sts(hi, v);
+        b.bar();
+        b.reduce1d(tid, bh, &[(0, FOp::Add), (bh, FOp::Max)]);
+        let zero = b.consti(0);
+        let is0 = b.cmpi(CmpOp::Eq, tid, zero);
+        let end = b.label();
+        b.bra_ifz(is0, end);
+        let sum = b.lds(zero);
+        b.stg(pout, zero, sum);
+        let one = b.consti(1);
+        let mx = b.lds(bh_i);
+        b.stg(pout, one, mx);
+        b.bind(end);
+        b.ret();
+        let k = b.build().unwrap();
+
+        let mut input: Vec<f32> = vec![3.0, -1.0, 4.0, 1.0, -5.0, 9.0, 2.0, 6.0];
+        let mut out = vec![0.0f32; 2];
+        execute(Launch {
+            kernel: &k,
+            grid: (1, 1),
+            block: (bh as u32, 1),
+            buffers: vec![&mut input, &mut out],
+            scalars: vec![],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        assert_eq!(out[0], 19.0);
+        assert_eq!(out[1], 9.0);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! reductions with barriers where the CUDA version used them.
 
 use crate::emulator::builder::{KernelBuilder, F, I};
-use crate::emulator::isa::{CmpOp, Kernel};
+use crate::emulator::isa::{CmpOp, FOp, Kernel};
 use crate::error::Result;
 
 /// Supported T-functionals, mirroring `python/compile/kernels/tfunctionals.py`.
@@ -403,6 +403,150 @@ pub fn batched_sinogram() -> Result<Kernel> {
     b.build()
 }
 
+/// `circus_all(sinos, circus, s)`: the device-side **P stage** — one
+/// block per sinogram row, a shared-memory tree reduction computing all
+/// `|P|` circus values (Σ, max, Σ|·|) for the row in ONE pass over the
+/// data (`P_SET` order). Input rows are `s` wide; grid `(a, T)` where
+/// `T` is however many sinogram planes are stacked (4 for one image's
+/// `sinogram_all` output, `n·4` for a `batched_sinogram` batch — the
+/// kernel only sees rows). Output layout `circus[(t*3 + p)*a + angle]`,
+/// so the F stage reads each (t, p) circus function contiguously.
+/// `block_h` threads per block (power of two >= s; extra threads
+/// contribute the identity). The tree width is baked into the kernel
+/// (shared size, loop bound), so the name carries it — the driver's
+/// module cache keys on kernel names, and two widths must not collide.
+pub fn circus_all(block_h: usize) -> Result<Kernel> {
+    assert!(block_h.is_power_of_two(), "block_h must be a power of two");
+    let mut b = KernelBuilder::new(&format!("circus_all_b{block_h}"));
+    let psin = b.ptr_param();
+    let pcir = b.ptr_param();
+    let ps = b.i32_param();
+    b.shared(3 * block_h);
+
+    let s_i = b.ld_param_i(ps);
+    let tid = b.tid_x();
+    let aidx = b.ctaid_x();
+    let t = b.ctaid_y();
+    let na = b.nctaid_x();
+
+    // identities: 0 for the sums, -inf for the max
+    let sumv = b.constf(0.0);
+    let maxv = b.constf(f32::NEG_INFINITY);
+    let l1v = b.constf(0.0);
+    let in_s = b.cmpi(CmpOp::Lt, tid, s_i);
+    let skip_load = b.label();
+    b.bra_ifz(in_s, skip_load);
+    let row0 = b.imul(t, na);
+    let row = b.iadd(row0, aidx);
+    let rbase = b.imul(row, s_i);
+    let idx = b.iadd(rbase, tid);
+    let g = b.ldg(psin, idx);
+    b.movf(sumv, g);
+    b.movf(maxv, g);
+    let ab = b.fabs(g);
+    b.movf(l1v, ab);
+    b.bind(skip_load);
+
+    // three shared regions [0, bh, 2bh), folded by one reduce1d loop
+    let bh_i = b.consti(block_h as i64);
+    let bh2_i = b.consti(2 * block_h as i64);
+    b.sts(tid, sumv);
+    let i1 = b.iadd(tid, bh_i);
+    b.sts(i1, maxv);
+    let i2 = b.iadd(tid, bh2_i);
+    b.sts(i2, l1v);
+    b.bar();
+    b.reduce1d(
+        tid,
+        block_h,
+        &[(0, FOp::Add), (block_h, FOp::Max), (2 * block_h, FOp::Add)],
+    );
+
+    // thread 0 writes circus[(t*3 + p)*a + aidx] for p in P_SET order
+    let zero = b.consti(0);
+    let is0 = b.cmpi(CmpOp::Eq, tid, zero);
+    let end = b.label();
+    b.bra_ifz(is0, end);
+    let three = b.consti(3);
+    let one = b.consti(1);
+    let t3 = b.imul(t, three);
+    let mut prow = t3;
+    for sh_base in [zero, bh_i, bh2_i] {
+        let obase = b.imul(prow, na);
+        let oi = b.iadd(obase, aidx);
+        let v = b.lds(sh_base);
+        b.stg(pcir, oi, v);
+        prow = b.iadd(prow, one);
+    }
+    b.bind(end);
+    b.ret();
+    b.build()
+}
+
+/// `features_all(circus, out, a)`: the device-side **F stage** — one
+/// block per (t, p) circus function, reducing its `a` angle samples
+/// with all `|F|` functionals (mean, max — `F_SET` order) in one
+/// shared-memory tree pass. Grid `(|P|, T)`; input layout is
+/// [`circus_all`]'s output; output `out[(t*|P| + p)*2 + f]` — exactly
+/// the (T, P, F)-lexicographic feature block of
+/// `functionals::feature_order`, `FEATURE_COUNT` floats for a full
+/// stack. `block_h` threads per block (power of two >= a); like
+/// [`circus_all`], the baked tree width rides in the kernel name so
+/// module caches never serve the wrong width.
+pub fn features_all(block_h: usize) -> Result<Kernel> {
+    assert!(block_h.is_power_of_two(), "block_h must be a power of two");
+    let mut b = KernelBuilder::new(&format!("features_all_b{block_h}"));
+    let pcir = b.ptr_param();
+    let pout = b.ptr_param();
+    let pa = b.i32_param();
+    b.shared(2 * block_h);
+
+    let a_i = b.ld_param_i(pa);
+    let tid = b.tid_x();
+    let p = b.ctaid_x();
+    let t = b.ctaid_y();
+    let np = b.nctaid_x();
+    let row0 = b.imul(t, np);
+    let row = b.iadd(row0, p);
+
+    let sumv = b.constf(0.0);
+    let maxv = b.constf(f32::NEG_INFINITY);
+    let in_a = b.cmpi(CmpOp::Lt, tid, a_i);
+    let skip_load = b.label();
+    b.bra_ifz(in_a, skip_load);
+    let rbase = b.imul(row, a_i);
+    let idx = b.iadd(rbase, tid);
+    let h = b.ldg(pcir, idx);
+    b.movf(sumv, h);
+    b.movf(maxv, h);
+    b.bind(skip_load);
+
+    let bh_i = b.consti(block_h as i64);
+    b.sts(tid, sumv);
+    let i1 = b.iadd(tid, bh_i);
+    b.sts(i1, maxv);
+    b.bar();
+    b.reduce1d(tid, block_h, &[(0, FOp::Add), (block_h, FOp::Max)]);
+
+    let zero = b.consti(0);
+    let is0 = b.cmpi(CmpOp::Eq, tid, zero);
+    let end = b.label();
+    b.bra_ifz(is0, end);
+    let total = b.lds(zero);
+    let a_f = b.cvt_i2f(a_i);
+    let mean = b.fdiv(total, a_f);
+    let two = b.consti(2);
+    let oi0 = b.imul(row, two);
+    b.stg(pout, oi0, mean);
+    let one = b.consti(1);
+    let oi1 = b.iadd(oi0, one);
+    let mx = b.lds(bh_i);
+    b.stg(pout, oi1, mx);
+    b.bind(end);
+    b.ret();
+    b.build()
+}
+
 /// `tfunc_<tf>(img, out, h, w)`: standalone column T-functional with a
 /// shared-memory tree reduction — one block per column, `block_h` threads
 /// per block (must be a power of two >= h; extra threads contribute the
@@ -457,29 +601,9 @@ pub fn tfunc_column(tfunc: &str, block_h: usize) -> Result<Kernel> {
     b.bar();
 
     // tree reduction over block_h (power of two)
-    let s = b.consti((block_h / 2) as i64);
-    let one_i = b.consti(1);
-    let two_i = b.consti(2);
+    let op = if tfunc == "tmax" { FOp::Max } else { FOp::Add };
+    b.reduce1d(tid, block_h, &[(0, op)]);
     let zero_i = b.consti(0);
-    let top = b.label();
-    let skip = b.label();
-    let done = b.label();
-    b.bind(top);
-    let cont = b.cmpi(CmpOp::Ge, s, one_i);
-    b.bra_ifz(cont, done);
-    let active = b.cmpi(CmpOp::Lt, tid, s);
-    b.bra_ifz(active, skip);
-    let lhs = b.lds(tid);
-    let oidx = b.iadd(tid, s);
-    let rhs = b.lds(oidx);
-    let red = if tfunc == "tmax" { b.fmax(lhs, rhs) } else { b.fadd(lhs, rhs) };
-    b.sts(tid, red);
-    b.bind(skip);
-    b.bar();
-    let halved = b.idiv(s, two_i);
-    b.movi(s, halved);
-    b.bra(top);
-    b.bind(done);
 
     let is0 = b.cmpi(CmpOp::Eq, tid, zero_i);
     let write_ok = b.imul(is0, col_ok);
@@ -496,7 +620,16 @@ pub fn tfunc_column(tfunc: &str, block_h: usize) -> Result<Kernel> {
 /// `s` (rounded block height for the column reduction).
 pub fn trace_module(s: usize) -> Result<Vec<Kernel>> {
     let block_h = s.next_power_of_two();
-    let mut kernels = vec![vadd()?, rotate_bilinear()?, sinogram_all()?, batched_sinogram()?];
+    let mut kernels = vec![
+        vadd()?,
+        rotate_bilinear()?,
+        sinogram_all()?,
+        batched_sinogram()?,
+        // the device-resident P/F stage (the F stage's block covers the
+        // angle count, which is bounded by the row width in practice)
+        circus_all(block_h)?,
+        features_all(block_h)?,
+    ];
     for t in T_FUNCTIONALS {
         kernels.push(sinogram(t)?);
         kernels.push(tfunc_column(t, block_h)?);
@@ -737,9 +870,125 @@ mod tests {
     #[test]
     fn trace_module_builds_all() {
         let ks = trace_module(64).unwrap();
-        assert_eq!(ks.len(), 4 + 2 * T_FUNCTIONALS.len());
+        assert_eq!(ks.len(), 6 + 2 * T_FUNCTIONALS.len());
         for k in &ks {
             assert!(k.validate().is_ok(), "{} invalid", k.name);
+        }
+    }
+
+    #[test]
+    fn circus_all_matches_host_p_functionals() {
+        use crate::tracetransform::functionals::P_SET;
+        let (nt, a, s) = (4usize, 5usize, 10usize);
+        let mut sinos: Vec<f32> =
+            (0..nt * a * s).map(|i| ((i * 31) % 29) as f32 * 0.4 - 5.0).collect();
+        let block_h = s.next_power_of_two();
+        let k = circus_all(block_h).unwrap();
+        let mut circus = vec![0.0f32; nt * 3 * a];
+        execute(Launch {
+            kernel: &k,
+            grid: (a as u32, nt as u32),
+            block: (block_h as u32, 1),
+            buffers: vec![&mut sinos, &mut circus],
+            scalars: vec![ScalarArg::I32(s as i32)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        for t in 0..nt {
+            for ai in 0..a {
+                let row = &sinos[(t * a + ai) * s..(t * a + ai + 1) * s];
+                for (p, pf) in P_SET.iter().enumerate() {
+                    let want = pf.apply(row);
+                    let got = circus[(t * 3 + p) * a + ai];
+                    assert!(
+                        (got - want).abs() < 1e-4 * want.abs().max(1.0),
+                        "t={t} p={p} a={ai}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn features_all_matches_host_f_functionals() {
+        use crate::tracetransform::functionals::F_SET;
+        let (rows, a) = (12usize, 7usize); // rows = nt * |P|
+        let mut circus: Vec<f32> =
+            (0..rows * a).map(|i| ((i * 17) % 13) as f32 * 0.7 - 2.0).collect();
+        let block_h = a.next_power_of_two();
+        let k = features_all(block_h).unwrap();
+        let mut out = vec![0.0f32; rows * 2];
+        execute(Launch {
+            kernel: &k,
+            grid: (3, (rows / 3) as u32), // grid (|P|, T)
+            block: (block_h as u32, 1),
+            buffers: vec![&mut circus, &mut out],
+            scalars: vec![ScalarArg::I32(a as i32)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        for r in 0..rows {
+            let h = &circus[r * a..(r + 1) * a];
+            for (f, ff) in F_SET.iter().enumerate() {
+                let want = ff.apply(h);
+                let got = out[r * 2 + f];
+                assert!(
+                    (got - want).abs() < 1e-4 * want.abs().max(1.0),
+                    "row {r} f {f}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    /// The full device chain `sinogram_all -> circus_all -> features_all`
+    /// agrees with the host `reduce_sinogram` reference on the fused
+    /// sinograms — the kernel-level version of the pipeline acceptance.
+    #[test]
+    fn device_reduction_chain_matches_reduce_sinogram() {
+        use crate::tracetransform::functionals::reduce_sinogram;
+        let (s, a) = (12usize, 6usize);
+        let mut img: Vec<f32> = (0..s * s).map(|i| ((i * 13) % 19) as f32 * 0.3).collect();
+        let mut angles: Vec<f32> = (0..a).map(|i| 0.2 + i as f32 * 0.5).collect();
+        let mut sinos = vec![0.0f32; 4 * a * s];
+        let k_sino = sinogram_all().unwrap();
+        run(
+            &k_sino,
+            a as u32,
+            s as u32,
+            vec![&mut img, &mut angles, &mut sinos],
+            vec![ScalarArg::I32(s as i32)],
+        );
+        let mut want = Vec::new();
+        for t in 0..4 {
+            want.extend(reduce_sinogram(&sinos[t * a * s..(t + 1) * a * s], a, s));
+        }
+
+        let bh_s = s.next_power_of_two();
+        let k_cir = circus_all(bh_s).unwrap();
+        let mut circus = vec![0.0f32; 4 * 3 * a];
+        execute(Launch {
+            kernel: &k_cir,
+            grid: (a as u32, 4),
+            block: (bh_s as u32, 1),
+            buffers: vec![&mut sinos, &mut circus],
+            scalars: vec![ScalarArg::I32(s as i32)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        let bh_a = a.next_power_of_two();
+        let k_feat = features_all(bh_a).unwrap();
+        let mut feats = vec![0.0f32; 24];
+        execute(Launch {
+            kernel: &k_feat,
+            grid: (3, 4),
+            block: (bh_a as u32, 1),
+            buffers: vec![&mut circus, &mut feats],
+            scalars: vec![ScalarArg::I32(a as i32)],
+            limits: Limits::default(),
+        })
+        .unwrap();
+        for (i, (g, w)) in feats.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4 * w.abs().max(1.0), "feature {i}: {g} vs {w}");
         }
     }
 

@@ -36,7 +36,7 @@
 //! step-budget trap fires with the same coordinates and reason under
 //! every tier.
 
-use crate::emulator::isa::{FOp, IOp, Instr, Pc, Reg, Special};
+use crate::emulator::isa::{CmpOp, FOp, IOp, Instr, Pc, Reg, Special};
 
 /// One vector-tier operation: either a single non-control ISA
 /// instruction, or a fused superinstruction replaying a short dataflow
@@ -124,6 +124,23 @@ pub enum Term {
     Bar { next: u32 },
     /// Thread exit.
     Ret,
+    /// Fused loop-counter back-edge:
+    /// `BinI(Add, ad, aa, ab); CmpI(op, pred, ca, cb); BraIf(pred, nz)`
+    /// where the compare reads the add's destination and `nz` is a
+    /// backward edge — the `i += step; if i < n goto top` epilogue of
+    /// every marching kernel loop, retired in ONE dispatch per
+    /// iteration. Replays the exact original sequence (the counter and
+    /// predicate registers are written), weight 3, and none of the three
+    /// replayed instructions can trap, so whole-weight budget charging
+    /// keeps trap parity with the scalar tier.
+    LoopBack {
+        add: (Reg, Reg, Reg),
+        cmp_op: CmpOp,
+        pred: Reg,
+        cmp: (Reg, Reg),
+        nz: u32,
+        z: u32,
+    },
 }
 
 /// One basic block: a straight-line run of (possibly fused) operations
@@ -255,6 +272,34 @@ pub(crate) fn lower(code: &[Instr]) -> LoweredKernel {
                 }
             }
         };
+        // Terminator fusion: the canonical loop-counter epilogue
+        // (`IAdd; CmpI; BraIf` back-edge) collapses into one fused
+        // terminator before the body's peephole pass runs, so the two
+        // counter instructions are not considered for body patterns.
+        let mut body = body;
+        let mut term = term;
+        if let Term::Branch { pred, nz, z } = term {
+            let id = blocks.len() as u32;
+            if nz <= id && body.len() >= 2 {
+                if let (Instr::BinI(IOp::Add, ad, aa, ab), Instr::CmpI(op, cd, ca, cb)) =
+                    (body[body.len() - 2], body[body.len() - 1])
+                {
+                    if cd == pred && (ca == ad || cb == ad) {
+                        body.truncate(body.len() - 2);
+                        term = Term::LoopBack {
+                            add: (ad, aa, ab),
+                            cmp_op: op,
+                            pred,
+                            cmp: (ca, cb),
+                            nz,
+                            z,
+                        };
+                        fused_instrs += 3;
+                        fused_ops += 1;
+                    }
+                }
+            }
+        }
         blocks.push(Block {
             start_pc: start as Pc,
             ops: fuse(&body, &mut fused_instrs, &mut fused_ops),
@@ -380,6 +425,7 @@ mod tests {
                 let term = match b.term {
                     Term::Jump { steps, .. } => steps as u64,
                     Term::Branch { .. } | Term::Bar { .. } | Term::Ret => 1,
+                    Term::LoopBack { .. } => 3,
                 };
                 ops + term
             })
@@ -443,16 +489,78 @@ mod tests {
         let k = b.build().unwrap();
         let d = decode(&k, &[]).unwrap();
         let l = &d.lowered;
-        // blocks: [preamble | fallthrough], [loop body | branch], [ret]
+        // blocks: [preamble | fallthrough], [loop body | LoopBack], [ret]
+        // — the counter epilogue (iadd_to; cmpi; bra_if back-edge) fuses
+        // into the terminator.
         assert_eq!(l.blocks.len(), 3, "{l:?}");
         match l.blocks[1].term {
-            Term::Branch { nz, z, .. } => {
+            Term::LoopBack { nz, z, cmp_op, .. } => {
                 assert_eq!(nz, 1, "backward edge goes to the loop head");
                 assert_eq!(z, 2);
+                assert_eq!(cmp_op, CmpOp::Lt);
             }
-            ref other => panic!("expected Branch, got {other:?}"),
+            ref other => panic!("expected LoopBack, got {other:?}"),
         }
+        // the two counter instructions left the block body
+        assert_eq!(l.blocks[1].ops.len(), 1, "only the fadd_to remains");
         assert_eq!(total_weight(l), l.instr_count as u64);
+    }
+
+    /// A forward conditional branch (no back-edge) must NOT fuse — the
+    /// loop-counter superinstruction is strictly for backward edges.
+    #[test]
+    fn forward_branch_with_counter_shape_does_not_fuse() {
+        let mut b = KernelBuilder::new("fwd_guard");
+        let p = b.ptr_param();
+        let i = b.consti(0);
+        let one = b.consti(1);
+        let four = b.consti(4);
+        b.iadd_to(i, one);
+        let more = b.cmpi(CmpOp::Lt, i, four);
+        let skip = b.label();
+        b.bra_if(more, skip); // forward edge
+        let v = b.constf(9.0);
+        let tid = b.tid_x();
+        b.stg(p, tid, v);
+        b.bind(skip);
+        b.ret();
+        let k = b.build().unwrap();
+        let d = decode(&k, &[]).unwrap();
+        assert!(
+            !d.lowered
+                .blocks
+                .iter()
+                .any(|blk| matches!(blk.term, Term::LoopBack { .. })),
+            "{:?}",
+            d.lowered
+        );
+        assert_eq!(total_weight(&d.lowered), d.lowered.instr_count as u64);
+    }
+
+    /// The sinogram marching loops end in the canonical counter epilogue:
+    /// their back-edges must fuse, and the static fused share must stay
+    /// above the pre-LoopBack catalog's (regression for the fusion
+    /// catalog growth).
+    #[test]
+    fn sinogram_loops_fuse_their_back_edges() {
+        for k in [
+            crate::emulator::kernels::sinogram_all().unwrap(),
+            crate::emulator::kernels::sinogram("t1").unwrap(),
+            crate::emulator::kernels::vadd().unwrap(),
+        ] {
+            let d = decode(&k, &[crate::emulator::interp::ScalarArg::I32(16)]).unwrap();
+            let has_loop = d
+                .lowered
+                .blocks
+                .iter()
+                .any(|blk| matches!(blk.term, Term::LoopBack { .. }));
+            if k.name.starts_with("sinogram") {
+                assert!(has_loop, "{}: marching loop must fuse its back-edge", k.name);
+            } else {
+                assert!(!has_loop, "{}: no loop, no LoopBack", k.name);
+            }
+            assert_eq!(total_weight(&d.lowered), d.lowered.instr_count as u64, "{}", k.name);
+        }
     }
 
     #[test]

@@ -574,10 +574,13 @@ pub(crate) fn run_block_vector<M: GlobalMem>(
         }
 
         // Terminator: one step for explicit control flow, zero for a
-        // synthetic fallthrough edge.
+        // synthetic fallthrough edge, three for the fused loop-counter
+        // back-edge (it replays IAdd + CmpI + BraIf; none can trap, so
+        // the whole-weight budget charge keeps scalar trap parity).
         let w = match blk.term {
             Term::Jump { steps, .. } => steps as u64,
             Term::Branch { .. } | Term::Bar { .. } | Term::Ret => 1,
+            Term::LoopBack { .. } => 3,
         };
         if w > 0 {
             charge(&mut mask, &mut steps, &mut status, &mut pending, limit, w, &ctx);
@@ -586,6 +589,9 @@ pub(crate) fn run_block_vector<M: GlobalMem>(
             }
             stats.dispatches += 1;
             stats.instrs += w * mask.len() as u64;
+            if matches!(blk.term, Term::LoopBack { .. }) {
+                stats.fused_instrs += w * mask.len() as u64;
+            }
             stats.lane_ops += mask.len() as u64;
             stats.lane_slots += nl as u64;
         }
@@ -599,6 +605,20 @@ pub(crate) fn run_block_vector<M: GlobalMem>(
                 let pb = pred as usize * nl;
                 for &l in &mask {
                     cur_blk[l] = if ir[pb + l] != 0 { nz } else { z };
+                }
+            }
+            Term::LoopBack { add: (ad, aa, ab), cmp_op, pred, cmp: (ca, cb), nz, z } => {
+                // Replay counter add + compare, then branch — exactly
+                // the original sequence, one dispatch per iteration.
+                let (adb, aab, abb) =
+                    (ad as usize * nl, aa as usize * nl, ab as usize * nl);
+                let (pdb, cab, cbb) =
+                    (pred as usize * nl, ca as usize * nl, cb as usize * nl);
+                for &l in &mask {
+                    ir[adb + l] = ir[aab + l].wrapping_add(ir[abb + l]);
+                    let p = cmpi(cmp_op, ir[cab + l], ir[cbb + l]) as i64;
+                    ir[pdb + l] = p;
+                    cur_blk[l] = if p != 0 { nz } else { z };
                 }
             }
             Term::Bar { next } => {
@@ -709,6 +729,106 @@ mod tests {
                 assert_eq!(outs[1][(ty * bx + tx) as usize], (ty * 10 + tx) as f32);
             }
         }
+    }
+
+    #[test]
+    fn loop_back_edge_fuses_and_matches_scalar() {
+        use crate::emulator::builder::KernelBuilder;
+        use crate::emulator::isa::CmpOp;
+        // out[tid] = n iterations of acc += 1.0 — the loop epilogue must
+        // retire as a fused terminator with identical results and step
+        // accounting across tiers.
+        let n = 37i64;
+        let mut b = KernelBuilder::new("loopn");
+        let pout = b.ptr_param();
+        let acc = b.constf(0.0);
+        let one_f = b.constf(1.0);
+        let i = b.consti(0);
+        let lim = b.consti(n);
+        let one = b.consti(1);
+        let top = b.label();
+        b.bind(top);
+        b.fadd_to(acc, one_f);
+        b.iadd_to(i, one);
+        let more = b.cmpi(CmpOp::Lt, i, lim);
+        b.bra_if(more, top);
+        let tid = b.tid_x();
+        b.stg(pout, tid, acc);
+        b.ret();
+        let k = b.build().unwrap();
+
+        let mut reports = Vec::new();
+        let mut outs = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            let mut bufs = vec![vec![0.0f32; 8]];
+            let r = run_tier(&k, tier, (1, 1), (8, 1), &mut bufs, vec![]).unwrap();
+            reports.push(r);
+            outs.push(bufs[0].clone());
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert!(outs[1].iter().all(|&v| v == n as f32));
+        assert_eq!(reports[0].instrs, reports[1].instrs, "step accounting preserved");
+        // fused_share regression: the back-edge dominates this loop
+        // (3 of 4 per-iteration instructions), so the fused share must
+        // clear 0.5 — it was 0.0 for this kernel before the LoopBack
+        // catalog entry.
+        let share = reports[1].fused_instrs as f64 / reports[1].instrs as f64;
+        assert!(share > 0.5, "fused share {share} too low: {:?}", reports[1]);
+        assert_eq!(reports[0].fused_instrs, 0, "scalar tier reports no fusion");
+    }
+
+    #[test]
+    fn loop_budget_trap_parity_across_tiers() {
+        use crate::emulator::builder::KernelBuilder;
+        use crate::emulator::isa::CmpOp;
+        // A long counter loop against a small step budget: both tiers
+        // must trap with the same reason and coordinates even though the
+        // vector tier charges the fused back-edge as one unit.
+        let mut b = KernelBuilder::new("loop_budget");
+        let pout = b.ptr_param();
+        let acc = b.constf(0.0);
+        let one_f = b.constf(1.0);
+        let i = b.consti(0);
+        let lim = b.consti(1_000_000);
+        let one = b.consti(1);
+        let top = b.label();
+        b.bind(top);
+        b.fadd_to(acc, one_f);
+        b.iadd_to(i, one);
+        let more = b.cmpi(CmpOp::Lt, i, lim);
+        b.bra_if(more, top);
+        let tid = b.tid_x();
+        b.stg(pout, tid, acc);
+        b.ret();
+        let k = b.build().unwrap();
+        assert!(crate::emulator::decode::decode(&k, &[])
+            .unwrap()
+            .lowered
+            .blocks
+            .iter()
+            .any(|blk| matches!(blk.term, crate::emulator::lower::Term::LoopBack { .. })));
+
+        let mut errs = Vec::new();
+        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+            let mut bufs = vec![vec![0.0f32; 4]];
+            let views: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let e = execute_with_tier(
+                Launch {
+                    kernel: &k,
+                    grid: (1, 1),
+                    block: (4, 1),
+                    buffers: views,
+                    scalars: vec![],
+                    limits: Limits { steps_per_thread: 100 },
+                },
+                1,
+                tier,
+            )
+            .unwrap_err();
+            errs.push(e.to_string());
+        }
+        assert_eq!(errs[0], errs[1], "trap reason and coordinates must match");
+        assert!(errs[0].contains("step budget"), "{}", errs[0]);
     }
 
     #[test]

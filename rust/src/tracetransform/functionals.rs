@@ -157,16 +157,40 @@ pub fn feature_order() -> Vec<(TFunctional, PFunctional, FFunctional)> {
 /// Reduce a sinogram (`angles` rows × `width` offsets, row-major) with
 /// every (P, F) pair, in order. Returns `P_SET.len() * F_SET.len()`
 /// features for the given T's sinogram.
+///
+/// Single sweep: each row is read **once**, producing all `|P|` circus
+/// values simultaneously, and the `|F|` accumulators fold the circus
+/// functions on the fly — no per-P `Vec`, no re-reading the row per
+/// functional. Structurally this is the host twin of the device-side
+/// `circus_all`/`features_all` kernel pair (`docs/emulator.md`), and
+/// both F-functionals are streaming (running sum for the mean, running
+/// max), so the output is bitwise-identical to the staged
+/// circus-then-reduce formulation.
 pub fn reduce_sinogram(sino: &[f32], angles: usize, width: usize) -> Vec<f32> {
     assert_eq!(sino.len(), angles * width);
-    let mut out = Vec::with_capacity(P_SET.len() * F_SET.len());
-    for p in P_SET {
-        let circus: Vec<f32> = (0..angles)
-            .map(|a| p.apply(&sino[a * width..(a + 1) * width]))
-            .collect();
-        for f in F_SET {
-            out.push(f.apply(&circus));
+    const NP: usize = P_SET.len();
+    // Per-P circus folds over the angle axis: running sum (F = Mean) and
+    // running max (F = Max).
+    let mut csum = [0.0f32; NP];
+    let mut cmax = [f32::NEG_INFINITY; NP];
+    for row in sino.chunks_exact(width) {
+        // One pass over the row computes every P value.
+        let (mut sum, mut l1) = (0.0f32, 0.0f32);
+        let mut max = f32::NEG_INFINITY;
+        for &v in row {
+            sum += v;
+            max = max.max(v);
+            l1 += v.abs();
         }
+        for ((cs, cm), circus) in csum.iter_mut().zip(&mut cmax).zip([sum, max, l1]) {
+            *cs += circus;
+            *cm = cm.max(circus);
+        }
+    }
+    let mut out = Vec::with_capacity(NP * F_SET.len());
+    for (cs, cm) in csum.iter().zip(&cmax) {
+        out.push(cs / angles as f32); // FFunctional::Mean
+        out.push(*cm); // FFunctional::Max
     }
     out
 }
@@ -227,6 +251,29 @@ mod tests {
             order[FEATURE_COUNT - 1],
             (TFunctional::TMax, PFunctional::L1, FFunctional::Max)
         );
+    }
+
+    /// The single-sweep `reduce_sinogram` must stay bitwise-identical to
+    /// the staged circus-then-reduce formulation it replaced (same fold
+    /// orders everywhere), so the host reference for the device kernels
+    /// is the function the pipeline actually runs.
+    #[test]
+    fn reduce_sinogram_matches_staged_formulation_bitwise() {
+        let (angles, width) = (7usize, 11usize);
+        let sino: Vec<f32> = (0..angles * width)
+            .map(|i| ((i * 37) % 23) as f32 * 0.31 - 3.0)
+            .collect();
+        let got = reduce_sinogram(&sino, angles, width);
+        let mut want = Vec::new();
+        for p in P_SET {
+            let circus: Vec<f32> = (0..angles)
+                .map(|a| p.apply(&sino[a * width..(a + 1) * width]))
+                .collect();
+            for f in F_SET {
+                want.push(f.apply(&circus));
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -11,16 +11,28 @@
 //! is split into two chunks whose uploads (on a dedicated upload stream,
 //! allocating from its own pool arena) overlap the other chunk's compute
 //! (on a second stream, fenced by events) — the double-buffered pipeline.
+//!
+//! Under the default `HLGPU_REDUCE=device` placement the P/F stage runs
+//! on the device too: `sinogram_all → circus_all → features_all` chain
+//! entirely device-side and only the `FEATURE_COUNT`-float feature block
+//! comes back — in the batched path as an async [`PendingDownload`]
+//! enqueued behind the chunk's kernel chain, so the sinograms are never
+//! downloaded at all. `HLGPU_REDUCE=host` keeps the pre-v2 host
+//! reduction as the differential reference.
 
 use std::collections::HashMap;
 
-use crate::coordinator::{arg, DeviceArray, KernelHandle, KernelRegistry, Launcher};
+use crate::coordinator::{
+    arg, DeviceArray, KernelHandle, KernelRegistry, Launcher, PendingDownload,
+};
 use crate::driver::{BackendKind, Context, Event, LaunchConfig, Stream};
 use crate::error::Result;
 use crate::tensor::{Dtype, Tensor};
-use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
+use crate::tracetransform::functionals::{reduce_sinogram, FEATURE_COUNT, P_SET, T_SET};
 use crate::tracetransform::image::Image;
-use crate::tracetransform::impls::{register_trace_providers, DeviceChoice, TraceImpl};
+use crate::tracetransform::impls::{
+    default_reduce, register_trace_providers, DeviceChoice, ReduceMode, TraceImpl,
+};
 
 /// Which kernel structure the automated path launches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,13 +47,31 @@ pub enum AutoMode {
     TraceFull,
 }
 
+/// Device-resident P/F reduction stage of one pipeline: bound handles
+/// and intermediate buffers for the `circus_all → features_all` chain.
+struct ReduceStage {
+    circus_handle: KernelHandle,
+    features_handle: KernelHandle,
+    circus: DeviceArray,
+    feats: DeviceArray,
+}
+
 /// One double-buffer slot of the batched pipeline: a bound kernel handle
 /// plus device-resident image and sinogram buffers for a fixed chunk
-/// length.
+/// length — and, on the device-reduce path, the chunk's [`ReduceStage`].
 struct ChunkPipe {
     handle: KernelHandle,
     imgs: DeviceArray,
     sinos: DeviceArray,
+    reduce: Option<ReduceStage>,
+}
+
+/// Persistent device buffers of the *single-image* device-reduce chain,
+/// keyed by (size, angles).
+struct ReduceBufs {
+    sinos: DeviceArray,
+    circus: DeviceArray,
+    feats: DeviceArray,
 }
 
 pub struct GpuAuto {
@@ -51,9 +81,12 @@ pub struct GpuAuto {
     /// and reused across every subsequent call (keyed by the raw bits).
     angles_dev: Option<(Vec<u32>, DeviceArray)>,
     /// Double-buffer pipeline state keyed by (chunk_len, size, angles,
-    /// slot) — two slots so chunk i+1's upload overlaps chunk i's
-    /// compute without aliasing buffers.
-    pipes: HashMap<(usize, usize, usize, usize), ChunkPipe>,
+    /// slot, device_reduce) — two slots so chunk i+1's upload overlaps
+    /// chunk i's compute without aliasing buffers; the reduce placement
+    /// is part of the key because the pipes it builds differ.
+    pipes: HashMap<(usize, usize, usize, usize, bool), ChunkPipe>,
+    /// Single-image device-reduce buffers, keyed by (size, angles).
+    reduce_bufs: HashMap<(usize, usize), ReduceBufs>,
     upload_stream: Option<Stream>,
     compute_stream: Option<Stream>,
 }
@@ -77,6 +110,7 @@ impl GpuAuto {
             mode: AutoMode::SinogramAll,
             angles_dev: None,
             pipes: HashMap::new(),
+            reduce_bufs: HashMap::new(),
             upload_stream: None,
             compute_stream: None,
         })
@@ -96,6 +130,7 @@ impl GpuAuto {
             mode: AutoMode::TraceFull,
             angles_dev: None,
             pipes: HashMap::new(),
+            reduce_bufs: HashMap::new(),
             upload_stream: None,
             compute_stream: None,
         })
@@ -107,6 +142,16 @@ impl GpuAuto {
 
     pub fn launcher_mut(&mut self) -> &mut Launcher {
         &mut self.launcher
+    }
+
+    /// True when this call's P/F stage runs on the device: the default
+    /// placement (`HLGPU_REDUCE`) on the emulator backend, fused
+    /// single-launch mode excluded (only the VTX registry carries the
+    /// `circus_all`/`features_all` lowerings).
+    fn device_reduce(&self) -> bool {
+        self.mode == AutoMode::SinogramAll
+            && self.launcher.context().device().kind == BackendKind::VtxEmulator
+            && default_reduce() == ReduceMode::Device
     }
 
     /// The device-resident angle table for `thetas`, uploading only when
@@ -154,6 +199,44 @@ impl TraceImpl for GpuAuto {
                     &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut out)],
                 )?;
                 Ok(out.to_vec_f32())
+            }
+            AutoMode::SinogramAll if self.device_reduce() => {
+                // Fully resident chain: the sinograms and circus
+                // functions never leave the device; the only d2h is the
+                // FEATURE_COUNT-float block.
+                let np = P_SET.len();
+                if !self.reduce_bufs.contains_key(&(s, a)) {
+                    let ctx = self.launcher.context().clone();
+                    self.reduce_bufs.insert(
+                        (s, a),
+                        ReduceBufs {
+                            sinos: DeviceArray::alloc(&ctx, Dtype::F32, &[nt, a, s])?,
+                            circus: DeviceArray::alloc(&ctx, Dtype::F32, &[nt, np, a])?,
+                            feats: DeviceArray::alloc(&ctx, Dtype::F32, &[FEATURE_COUNT])?,
+                        },
+                    );
+                }
+                let bufs = self.reduce_bufs.get_mut(&(s, a)).unwrap();
+                self.launcher.launch(
+                    "sinogram_all",
+                    LaunchConfig::new(a as u32, s as u32),
+                    &mut [
+                        arg::cu_in(&img_t),
+                        arg::cu_in(&angles_t),
+                        arg::cu_dev_mut(&mut bufs.sinos),
+                    ],
+                )?;
+                self.launcher.launch(
+                    "circus_all",
+                    LaunchConfig::new(a as u32, s as u32),
+                    &mut [arg::cu_dev(&bufs.sinos), arg::cu_dev_mut(&mut bufs.circus)],
+                )?;
+                self.launcher.launch(
+                    "features_all",
+                    LaunchConfig::new(np as u32, a as u32),
+                    &mut [arg::cu_dev(&bufs.circus), arg::cu_dev_mut(&mut bufs.feats)],
+                )?;
+                Ok(bufs.feats.download()?.to_vec_f32())
             }
             AutoMode::SinogramAll => {
                 // @cuda (a, s) sinogram_all(CuIn(img), CuIn(angles), CuOut(sinos))
@@ -216,6 +299,8 @@ impl TraceImpl for GpuAuto {
         let n = imgs.len();
         let a = thetas.len();
         let nt = T_SET.len();
+        let np = P_SET.len();
+        let dev_reduce = self.device_reduce();
 
         let ctx = self.launcher.context().clone();
         if self.upload_stream.is_none() {
@@ -235,10 +320,12 @@ impl TraceImpl for GpuAuto {
         // Bind handles + allocate device buffers per (chunk shape, slot),
         // reused across batches. Image buffers live in the upload
         // stream's arena, sinograms in the compute stream's — concurrent
-        // stages allocate and copy without sharing a pool lock.
+        // stages allocate and copy without sharing a pool lock. On the
+        // device-reduce path each slot also carries its circus/feature
+        // buffers and the bound P/F-stage handles.
         for (slot, &(lo, hi)) in bounds.iter().enumerate() {
             let len = hi - lo;
-            let key = (len, s, a, slot);
+            let key = (len, s, a, slot, dev_reduce);
             if !self.pipes.contains_key(&key) {
                 let up_arena = self.upload_stream.as_ref().unwrap().arena_id();
                 let co_arena = self.compute_stream.as_ref().unwrap().arena_id();
@@ -254,20 +341,45 @@ impl TraceImpl for GpuAuto {
                         arg::cu_dev_mut(&mut sinos_dev),
                     ],
                 )?;
-                self.pipes.insert(key, ChunkPipe { handle, imgs: imgs_dev, sinos: sinos_dev });
+                let reduce = if dev_reduce {
+                    let mut circus =
+                        DeviceArray::alloc_in(&ctx, co_arena, Dtype::F32, &[len, nt, np, a])?;
+                    let mut feats =
+                        DeviceArray::alloc_in(&ctx, co_arena, Dtype::F32, &[len, FEATURE_COUNT])?;
+                    let circus_handle = self.launcher.bind(
+                        "circus_all",
+                        &[arg::cu_dev(&sinos_dev), arg::cu_dev_mut(&mut circus)],
+                    )?;
+                    let features_handle = self.launcher.bind(
+                        "features_all",
+                        &[arg::cu_dev(&circus), arg::cu_dev_mut(&mut feats)],
+                    )?;
+                    Some(ReduceStage { circus_handle, features_handle, circus, feats })
+                } else {
+                    None
+                };
+                self.pipes.insert(
+                    key,
+                    ChunkPipe { handle, imgs: imgs_dev, sinos: sinos_dev, reduce },
+                );
             }
         }
 
-        // Stage 1+2: enqueue every chunk's upload (stream U) and launch
-        // (stream C, fenced on the upload's event) before joining any —
-        // that is what overlaps the stages.
+        // Stage 1+2: enqueue every chunk's upload (stream U) and kernel
+        // chain (stream C, fenced on the upload's event) before joining
+        // any — that is what overlaps the stages. On the device-reduce
+        // path the chain is sinogram → circus → features → async feature
+        // readback, all stream-ordered; the sinograms never cross to the
+        // host.
         let mem = ctx.memory_arc()?;
         let upload = self.upload_stream.as_ref().unwrap();
         let compute = self.compute_stream.as_ref().unwrap();
-        let mut pendings = Vec::with_capacity(bounds.len());
+        let cfg = LaunchConfig::new(1u32, 1u32); // VTX providers pick their own grids
+        let mut sino_pendings = Vec::new();
+        let mut feat_pendings: Vec<(usize, usize, PendingDownload<'_>)> = Vec::new();
         for (slot, &(lo, hi)) in bounds.iter().enumerate() {
             let len = hi - lo;
-            let pipe = self.pipes.get_mut(&(len, s, a, slot)).unwrap();
+            let pipe = self.pipes.get_mut(&(len, s, a, slot, dev_reduce)).unwrap();
             let mut bytes = Vec::with_capacity(len * s * s * 4);
             for img in &imgs[lo..hi] {
                 for v in img.pixels() {
@@ -288,16 +400,47 @@ impl TraceImpl for GpuAuto {
                     arg::cu_dev_mut(&mut pipe.sinos),
                 ],
             )?;
-            pendings.push((slot, lo, hi, pending));
+            match pipe.reduce.as_mut() {
+                Some(rs) => {
+                    // Same stream: the chain is ordered after the
+                    // sinogram kernel without host synchronization.
+                    rs.circus_handle.launch_on(
+                        compute,
+                        cfg,
+                        &mut [arg::cu_dev(&pipe.sinos), arg::cu_dev_mut(&mut rs.circus)],
+                    )?;
+                    rs.features_handle.launch_on(
+                        compute,
+                        cfg,
+                        &mut [arg::cu_dev(&rs.circus), arg::cu_dev_mut(&mut rs.feats)],
+                    )?;
+                    let pd = rs.features_handle.download_on(compute, &rs.feats)?;
+                    feat_pendings.push((lo, hi, pd));
+                }
+                None => sino_pendings.push((slot, lo, hi, pending)),
+            }
         }
 
-        // Stage 3: join chunks in order, download each chunk's sinograms
-        // once, and reduce on the host.
         let mut out = vec![Vec::new(); n];
-        for (slot, lo, hi, pending) in pendings {
+        if dev_reduce {
+            // Stage 3, device reduce: join each chunk's feature readback
+            // — FEATURE_COUNT floats per image, zero sinogram d2h.
+            for (lo, hi, pd) in feat_pendings {
+                let feats_host = pd.wait()?;
+                let all = feats_host.as_f32();
+                for (i, feats_slot) in out[lo..hi].iter_mut().enumerate() {
+                    *feats_slot = all[i * FEATURE_COUNT..(i + 1) * FEATURE_COUNT].to_vec();
+                }
+            }
+            return Ok(out);
+        }
+
+        // Stage 3, host reduce: join chunks in order, download each
+        // chunk's sinograms once, and reduce on the host.
+        for (slot, lo, hi, pending) in sino_pendings {
             pending.wait()?;
             let len = hi - lo;
-            let pipe = self.pipes.get(&(len, s, a, slot)).unwrap();
+            let pipe = self.pipes.get(&(len, s, a, slot, dev_reduce)).unwrap();
             let sinos_host = pipe.sinos.download()?;
             let all = sinos_host.as_f32();
             for (i, feats_slot) in out[lo..hi].iter_mut().enumerate() {
@@ -319,35 +462,42 @@ mod tests {
     use crate::tracetransform::functionals::FEATURE_COUNT;
     use crate::tracetransform::image::{orientations, shepp_logan};
 
+    use crate::tracetransform::impls::REDUCE_TEST_LOCK;
+
     #[test]
     fn batched_pipeline_specializes_once_per_chunk_shape() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let thetas = orientations(5);
         let imgs: Vec<_> = (0..3)
             .map(|i| crate::tracetransform::image::random_phantom(10, i as u64))
             .collect();
         let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        // 3 images split into chunks of 2 and 1 — two call shapes; the
+        // device-reduce chain binds 3 kernels per shape, the host path 1
+        let per_shape: u64 = if m.device_reduce() { 3 } else { 1 };
         let b1 = m.features_batch(&imgs, &thetas).unwrap();
-        // 3 images split into chunks of 2 and 1 — two call shapes
-        assert_eq!(m.launcher().metrics().cold_specializations, 2);
+        assert_eq!(m.launcher().metrics().cold_specializations, 2 * per_shape);
         let b2 = m.features_batch(&imgs, &thetas).unwrap();
         assert_eq!(b1, b2);
         assert_eq!(
             m.launcher().metrics().cold_specializations,
-            2,
+            2 * per_shape,
             "warm batch re-specializes nothing"
         );
         // a 2-image batch splits into two length-1 chunks — the length-1
-        // shape is already bound, so still no new specialization
+        // shapes are already specialized, so binding the new slot's
+        // handles hits the cache and re-specializes nothing
         m.features_batch(&imgs[..2], &thetas).unwrap();
-        assert_eq!(m.launcher().metrics().cold_specializations, 2);
-        // cache stats confirm the handles bypass the cache: only the
-        // bind() calls touched it
+        assert_eq!(m.launcher().metrics().cold_specializations, 2 * per_shape);
+        // cache stats confirm the handles bypass the cache on the warm
+        // path: only the bind() calls touched it
         let st = m.launcher().cache_stats();
-        assert_eq!(st.misses, 2);
+        assert_eq!(st.misses, 2 * per_shape);
     }
 
     #[test]
-    fn warm_batch_moves_only_images_and_sinograms() {
+    fn warm_batch_moves_only_images_and_results() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let thetas = orientations(5);
         let imgs: Vec<_> = (0..4)
             .map(|i| crate::tracetransform::image::random_phantom(10, 20 + i as u64))
@@ -359,22 +509,80 @@ mod tests {
         let st = m.launcher().context().mem_stats().unwrap();
         assert_eq!(st.alloc_count, 0, "warm batch allocates nothing");
         assert_eq!(st.h2d_count, 2, "one stacked upload per chunk, no angle re-upload");
-        assert_eq!(st.d2h_count, 2, "one sinogram download per chunk");
+        assert_eq!(st.d2h_count, 2, "one result download per chunk");
         // the device-resident skips are visible in the launch metrics
         let lm = m.launcher().metrics();
         assert!(lm.skipped_h2d > 0);
         assert!(lm.skipped_d2h > 0);
     }
 
+    /// PR-5 acceptance criterion: on the device-reduce path a warm
+    /// batched run performs **zero sinogram d2h transfers** — the bytes
+    /// downloaded per image are exactly the `FEATURE_COUNT`-float block,
+    /// asserted through both `MemStats` and the `LaunchMetrics`
+    /// deferred-readback counters.
+    #[test]
+    fn device_reduce_batch_downloads_only_feature_blocks() {
+        use crate::tracetransform::impls::set_default_reduce;
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_default_reduce(Some(ReduceMode::Device));
+        let thetas = orientations(6);
+        let imgs: Vec<_> = (0..5)
+            .map(|i| crate::tracetransform::image::random_phantom(12, 90 + i as u64))
+            .collect();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        m.features_batch(&imgs, &thetas).unwrap(); // cold
+        m.launcher().context().memory().unwrap().reset_stats();
+        let lm_before = m.launcher().metrics();
+        m.features_batch(&imgs, &thetas).unwrap();
+        let st = m.launcher().context().mem_stats().unwrap();
+        assert_eq!(
+            st.d2h_bytes,
+            (imgs.len() * FEATURE_COUNT * 4) as u64,
+            "per-image download bytes == FEATURE_COUNT * 4"
+        );
+        let lm = m.launcher().metrics();
+        assert_eq!(lm.d2h_deferred - lm_before.d2h_deferred, 2, "one async readback per chunk");
+        assert_eq!(
+            lm.features_bytes - lm_before.features_bytes,
+            (imgs.len() * FEATURE_COUNT * 4) as u64
+        );
+        set_default_reduce(None);
+    }
+
+    /// The two reduce placements are observationally identical (up to
+    /// reduction-order rounding) through the same pipeline object.
+    #[test]
+    fn host_and_device_reduce_agree() {
+        use crate::tracetransform::impls::set_default_reduce;
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let img = shepp_logan(14);
+        let thetas = orientations(7);
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        set_default_reduce(Some(ReduceMode::Host));
+        let host = m.features(&img, &thetas).unwrap();
+        set_default_reduce(Some(ReduceMode::Device));
+        let dev = m.features(&img, &thetas).unwrap();
+        set_default_reduce(None);
+        assert_eq!(host.len(), FEATURE_COUNT);
+        for (i, (h, d)) in host.iter().zip(&dev).enumerate() {
+            assert!((h - d).abs() < 1e-4 * h.abs().max(1.0), "feature {i}: {h} vs {d}");
+        }
+    }
+
     #[test]
     fn emulator_auto_runs_and_caches() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let img = shepp_logan(12);
         let thetas = orientations(5);
         let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        // device reduce: sinogram_all + circus_all + features_all;
+        // host reduce: the fused sinogram_all only
+        let expect_cold = if m.device_reduce() { 3 } else { 1 };
         let f1 = m.features(&img, &thetas).unwrap();
         assert_eq!(f1.len(), FEATURE_COUNT);
         let cold = m.launcher().metrics().cold_specializations;
-        assert_eq!(cold, 1); // one fused sinogram_all specialization
+        assert_eq!(cold, expect_cold);
         // second call: fully warm
         let f2 = m.features(&img, &thetas).unwrap();
         assert_eq!(f1, f2);

@@ -12,9 +12,13 @@ use crate::error::Result;
 use crate::hostlang::DynArray;
 use crate::runtime::ArtifactLibrary;
 use crate::tensor::{Dtype, Tensor};
-use crate::tracetransform::functionals::{FFunctional, PFunctional, F_SET, P_SET, T_SET};
+use crate::tracetransform::functionals::{
+    FFunctional, PFunctional, FEATURE_COUNT, F_SET, P_SET, T_SET,
+};
 use crate::tracetransform::image::Image;
-use crate::tracetransform::impls::{alloc3, free3, DeviceChoice, TraceImpl};
+use crate::tracetransform::impls::{
+    alloc3, alloc_n, default_reduce, free3, free_n, DeviceChoice, ReduceMode, TraceImpl,
+};
 
 pub struct GpuDynamic {
     ctx: Context,
@@ -26,9 +30,21 @@ pub struct GpuDynamic {
     /// batch (keyed by the raw bits).
     angles_dev: Option<(Vec<u32>, DeviceArray)>,
     /// Persistent batched-path device buffers (stacked images,
-    /// sinograms), keyed by (batch, size, angles) and reused across
-    /// batches of the same shape.
-    batch_bufs: Option<((usize, usize, usize), DeviceArray, DeviceArray)>,
+    /// sinograms, and the device-reduce chain's circus/feature blocks),
+    /// keyed by (batch, size, angles) and reused across batches of the
+    /// same shape.
+    batch_bufs: Option<BatchBufs>,
+}
+
+/// The batched path's persistent device arrays. The reduce-chain
+/// scratch exists only on the device-reduce path — host-reduce batches
+/// must not hold device memory they never touch.
+struct BatchBufs {
+    key: (usize, usize, usize),
+    imgs: DeviceArray,
+    sinos: DeviceArray,
+    circus: Option<DeviceArray>,
+    feats: Option<DeviceArray>,
 }
 
 type DynFeats = Vec<f32>;
@@ -115,6 +131,72 @@ impl GpuDynamic {
         Ok(f)
     }
 
+    /// Handles for the device-side P/F stage (emulator only): the
+    /// `circus_all` kernel is specialized per row width `s`, the
+    /// `features_all` kernel per angle count `a` (their tree widths are
+    /// the next powers of two).
+    fn reduce_functions(&mut self, s: usize, a: usize) -> Result<(Function, Function)> {
+        let ckey = ("circus_all", s, 0);
+        let fkey = ("features_all", 0, a);
+        if let (Some(c), Some(f)) = (self.functions.get(&ckey), self.functions.get(&fkey)) {
+            return Ok((c.clone(), f.clone()));
+        }
+        // the generated kernels carry their tree width in their names —
+        // resolve by that, so the driver's name-keyed module cache never
+        // serves a mismatched width
+        let ck = crate::emulator::kernels::circus_all(s.next_power_of_two())?;
+        let cname = ck.name.clone();
+        let cmod = self.ctx.load_module(&ModuleSource::Vtx { kernels: vec![ck] })?;
+        let c = cmod.function(&cname)?;
+        let fk = crate::emulator::kernels::features_all(a.next_power_of_two())?;
+        let fname = fk.name.clone();
+        let fmod = self.ctx.load_module(&ModuleSource::Vtx { kernels: vec![fk] })?;
+        let f = fmod.function(&fname)?;
+        self.functions.insert(ckey, c.clone());
+        self.functions.insert(fkey, f.clone());
+        Ok((c, f))
+    }
+
+    /// True when this call's P/F stage runs on the device.
+    fn device_reduce(&self) -> bool {
+        self.device == DeviceChoice::Emulator && default_reduce() == ReduceMode::Device
+    }
+
+    /// Launch the device-side `circus_all → features_all` chain over
+    /// `rows = T` sinogram planes already resident at `sinos`, leaving
+    /// the `rows/|T| * FEATURE_COUNT` feature block at `feats`.
+    fn launch_reduce(
+        &mut self,
+        sinos: crate::driver::DevicePtr,
+        circus: crate::driver::DevicePtr,
+        feats: crate::driver::DevicePtr,
+        rows: usize,
+        s: usize,
+        a: usize,
+    ) -> Result<()> {
+        let np = P_SET.len();
+        let (cf, ff) = self.reduce_functions(s, a)?;
+        cf.launch(
+            &LaunchConfig::new((a as u32, rows as u32), s.next_power_of_two() as u32),
+            &[
+                KernelArg::Ptr(sinos),
+                KernelArg::Ptr(circus),
+                KernelArg::I32(s as i32),
+            ],
+            self.ctx.memory()?,
+        )?;
+        ff.launch(
+            &LaunchConfig::new((np as u32, rows as u32), a.next_power_of_two() as u32),
+            &[
+                KernelArg::Ptr(circus),
+                KernelArg::Ptr(feats),
+                KernelArg::I32(a as i32),
+            ],
+            self.ctx.memory()?,
+        )?;
+        Ok(())
+    }
+
     /// Batched kernel handle (emulator only; the generated kernel is
     /// shape-generic so one cache entry serves every batch).
     fn batched_function(&mut self) -> Result<Function> {
@@ -158,6 +240,45 @@ impl TraceImpl for GpuDynamic {
         );
 
         let nt = T_SET.len();
+        let np = P_SET.len();
+
+        if self.device_reduce() {
+            // Device-resident P/F stage: sinograms and circus functions
+            // never reach the boxed world; only the FEATURE_COUNT-float
+            // block is downloaded (the dynamic tax stays on the inputs).
+            let ptrs = alloc_n(
+                &self.ctx,
+                &[
+                    img_t.byte_len(),
+                    angles_t.byte_len(),
+                    nt * a * s * 4,
+                    nt * np * a * 4,
+                    FEATURE_COUNT * 4,
+                ],
+            )?;
+            let (ga, gb, gc, gd, ge) = (ptrs[0], ptrs[1], ptrs[2], ptrs[3], ptrs[4]);
+            let body = (|| -> Result<Vec<f32>> {
+                self.ctx.upload(ga, img_t.bytes())?;
+                self.ctx.upload(gb, angles_t.bytes())?;
+                let f = self.function(s, a)?;
+                f.launch(
+                    &LaunchConfig::new(a as u32, s as u32),
+                    &[
+                        KernelArg::Ptr(ga),
+                        KernelArg::Ptr(gb),
+                        KernelArg::Ptr(gc),
+                        KernelArg::I32(s as i32),
+                    ],
+                    self.ctx.memory()?,
+                )?;
+                self.launch_reduce(gc, gd, ge, nt, s, a)?;
+                let mut feats_host = Tensor::zeros_f32(&[FEATURE_COUNT]);
+                self.ctx.download(ge, feats_host.bytes_mut())?;
+                Ok(feats_host.to_vec_f32())
+            })();
+            return free_n(&self.ctx, &ptrs, body);
+        }
+
         let (ga, gb, gc) =
             alloc3(&self.ctx, img_t.byte_len(), angles_t.byte_len(), nt * a * s * 4)?;
 
@@ -242,24 +363,42 @@ impl TraceImpl for GpuDynamic {
         }
 
         // persistent device buffers, rebuilt only when the batch shape
-        // changes (the old ones drop back into the pool's bins first)
+        // changes (the old ones drop back into the pool's bins first) or
+        // when a mode flip to device reduce finds no reduce scratch
+        let np = P_SET.len();
+        let dev = self.device_reduce();
         let bkey = (n, s, a);
-        let rebuild = !matches!(&self.batch_bufs, Some((k, _, _)) if *k == bkey);
+        let rebuild = match &self.batch_bufs {
+            Some(b) => b.key != bkey || (dev && b.circus.is_none()),
+            None => true,
+        };
         if rebuild {
             self.batch_bufs = None;
-            let di = DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, s, s])?;
-            let ds = DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, nt, a, s])?;
-            self.batch_bufs = Some((bkey, di, ds));
+            let (circus, feats) = if dev {
+                (
+                    Some(DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, nt, np, a])?),
+                    Some(DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, FEATURE_COUNT])?),
+                )
+            } else {
+                (None, None)
+            };
+            self.batch_bufs = Some(BatchBufs {
+                key: bkey,
+                imgs: DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, s, s])?,
+                sinos: DeviceArray::alloc(&self.ctx, Dtype::F32, &[n, nt, a, s])?,
+                circus,
+                feats,
+            });
         }
 
         let f = self.batched_function()?;
-        let (_, imgs_dev, sinos_dev) = self.batch_bufs.as_ref().unwrap();
+        let bufs = self.batch_bufs.as_ref().unwrap();
         let (_, angles_dev) = self.angles_dev.as_ref().unwrap();
-        imgs_dev.upload(&imgs_t)?;
+        bufs.imgs.upload(&imgs_t)?;
         let args = vec![
-            KernelArg::Ptr(imgs_dev.ptr()),
+            KernelArg::Ptr(bufs.imgs.ptr()),
             KernelArg::Ptr(angles_dev.ptr()),
-            KernelArg::Ptr(sinos_dev.ptr()),
+            KernelArg::Ptr(bufs.sinos.ptr()),
             KernelArg::I32(s as i32),
         ];
         f.launch(
@@ -267,8 +406,28 @@ impl TraceImpl for GpuDynamic {
             &args,
             self.ctx.memory()?,
         )?;
+
+        if dev {
+            // One launch pair reduces the whole batch's sinograms on
+            // device; the download is n * FEATURE_COUNT floats.
+            let bufs = self.batch_bufs.as_ref().unwrap();
+            let (sinos, circus, feats) = (
+                bufs.sinos.ptr(),
+                bufs.circus.as_ref().expect("device-reduce scratch built above").ptr(),
+                bufs.feats.as_ref().expect("device-reduce scratch built above").ptr(),
+            );
+            self.launch_reduce(sinos, circus, feats, n * nt, s, a)?;
+            let bufs = self.batch_bufs.as_ref().unwrap();
+            let feats_host = bufs.feats.as_ref().expect("checked above").download()?;
+            let all = feats_host.as_f32();
+            return Ok((0..n)
+                .map(|i| all[i * FEATURE_COUNT..(i + 1) * FEATURE_COUNT].to_vec())
+                .collect());
+        }
+
+        let bufs = self.batch_bufs.as_ref().unwrap();
         let mut sinos_host = Tensor::zeros_f32(&[n, nt, a, s]);
-        sinos_dev.download_into(&mut sinos_host)?;
+        bufs.sinos.download_into(&mut sinos_host)?;
 
         let all = sinos_host.as_f32();
         let mut out = Vec::with_capacity(n);
@@ -293,9 +452,15 @@ mod tests {
     #[test]
     fn emulator_dynamic_batch_keeps_angles_and_buffers_device_resident() {
         use crate::tracetransform::image::random_phantom;
+        let _g = crate::tracetransform::impls::REDUCE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         let imgs: Vec<Image> = (0..3).map(|i| random_phantom(10, 70 + i as u64)).collect();
         let thetas = orientations(5);
         let mut m = GpuDynamic::on_device(DeviceChoice::Emulator).unwrap();
+        // device reduce allocates the circus/feature scratch per
+        // sequential call (5 buffers); host reduce the Listing-2 three
+        let per_call = if m.device_reduce() { 5 } else { 3 };
         m.features_batch(&imgs, &thetas).unwrap(); // cold: buffers + angle table
         m.ctx.memory().unwrap().reset_stats();
         m.features_batch(&imgs, &thetas).unwrap();
@@ -306,10 +471,10 @@ mod tests {
         }
         let seq = m.ctx.mem_stats().unwrap();
         assert_eq!(bat.h2d_count, 1, "stacked images only; angles stay on device");
-        assert_eq!(bat.d2h_count, 1, "one sinogram download per batch");
+        assert_eq!(bat.d2h_count, 1, "one result download per batch");
         assert_eq!(bat.alloc_count, 0, "persistent buffers recycle across batches");
         assert_eq!(seq.h2d_count, 2 * imgs.len() as u64);
-        assert_eq!(seq.alloc_count, 3 * imgs.len() as u64);
+        assert_eq!(seq.alloc_count, (per_call * imgs.len()) as u64);
         // a different batch shape rebuilds the buffers, then goes warm again
         m.ctx.memory().unwrap().reset_stats();
         m.features_batch(&imgs[..2], &thetas).unwrap();

@@ -10,9 +10,11 @@ use crate::driver::{Context, Function, KernelArg, LaunchConfig, ModuleSource};
 use crate::error::Result;
 use crate::runtime::ArtifactLibrary;
 use crate::tensor::Tensor;
-use crate::tracetransform::functionals::{reduce_sinogram, T_SET};
+use crate::tracetransform::functionals::{reduce_sinogram, FEATURE_COUNT, P_SET, T_SET};
 use crate::tracetransform::image::Image;
-use crate::tracetransform::impls::{alloc3, free3, DeviceChoice, TraceImpl};
+use crate::tracetransform::impls::{
+    alloc3, alloc_n, default_reduce, free3, free_n, DeviceChoice, ReduceMode, TraceImpl,
+};
 
 pub struct GpuManual {
     ctx: Context,
@@ -66,18 +68,34 @@ impl GpuManual {
             DeviceChoice::Emulator => {
                 let vk = if kernel == "sinogram_all" {
                     crate::emulator::kernels::sinogram_all()?
+                } else if kernel == "circus_all" {
+                    crate::emulator::kernels::circus_all(s.next_power_of_two())?
+                } else if kernel == "features_all" {
+                    crate::emulator::kernels::features_all(a.next_power_of_two())?
                 } else {
                     let tname = kernel.strip_prefix("sinogram_").unwrap_or(kernel);
                     crate::emulator::kernels::sinogram(tname)?
                 };
+                // resolve by the *generated* kernel's name — the width-
+                // specialized reductions carry their tree width in it
+                let fname = vk.name.clone();
                 let module = self
                     .ctx
                     .load_module(&ModuleSource::Vtx { kernels: vec![vk] })?;
-                module.function(kernel)?
+                module.function(&fname)?
             }
         };
         self.functions.insert(key, f.clone());
         Ok(f)
+    }
+
+    /// True when this call's P/F stage runs on the device: the
+    /// `HLGPU_REDUCE` default on the emulator, fused structure only (the
+    /// staged ablation keeps the paper's per-functional host reduce).
+    fn device_reduce(&self) -> bool {
+        self.device == DeviceChoice::Emulator
+            && !self.staged
+            && default_reduce() == ReduceMode::Device
     }
 }
 
@@ -95,6 +113,55 @@ impl TraceImpl for GpuManual {
         // manual memory management, Listing 2 style
         let img_t = img.to_tensor();
         let angles_t = Tensor::from_f32(thetas, &[a]);
+
+        if self.device_reduce() {
+            // Manual flavor of the device-resident chain: five buffers,
+            // three launches, a FEATURE_COUNT-float download — the
+            // sinograms never leave the device.
+            let np = P_SET.len();
+            let ptrs = alloc_n(
+                &self.ctx,
+                &[
+                    img_t.byte_len(),
+                    angles_t.byte_len(),
+                    nt * a * s * 4,
+                    nt * np * a * 4,
+                    FEATURE_COUNT * 4,
+                ],
+            )?;
+            let (ga, gb, gc, gd, ge) = (ptrs[0], ptrs[1], ptrs[2], ptrs[3], ptrs[4]);
+            let body = (|| -> Result<Vec<f32>> {
+                self.ctx.upload(ga, img_t.bytes())?;
+                self.ctx.upload(gb, angles_t.bytes())?;
+                let f = self.function("sinogram_all", s, a)?;
+                f.launch(
+                    &LaunchConfig::new(a as u32, s as u32),
+                    &[
+                        KernelArg::Ptr(ga),
+                        KernelArg::Ptr(gb),
+                        KernelArg::Ptr(gc),
+                        KernelArg::I32(s as i32),
+                    ],
+                    self.ctx.memory()?,
+                )?;
+                let cf = self.function("circus_all", s, a)?;
+                cf.launch(
+                    &LaunchConfig::new((a as u32, nt as u32), s.next_power_of_two() as u32),
+                    &[KernelArg::Ptr(gc), KernelArg::Ptr(gd), KernelArg::I32(s as i32)],
+                    self.ctx.memory()?,
+                )?;
+                let ff = self.function("features_all", s, a)?;
+                ff.launch(
+                    &LaunchConfig::new((np as u32, nt as u32), a.next_power_of_two() as u32),
+                    &[KernelArg::Ptr(gd), KernelArg::Ptr(ge), KernelArg::I32(a as i32)],
+                    self.ctx.memory()?,
+                )?;
+                let mut feats = Tensor::zeros_f32(&[FEATURE_COUNT]);
+                self.ctx.download(ge, feats.bytes_mut())?;
+                Ok(feats.to_vec_f32())
+            })();
+            return free_n(&self.ctx, &ptrs, body);
+        }
         let out_elems = if self.staged { a * s } else { nt * a * s };
         let (ga, gb, gc) =
             alloc3(&self.ctx, img_t.byte_len(), angles_t.byte_len(), out_elems * 4)?;
@@ -187,11 +254,16 @@ mod tests {
 
     #[test]
     fn emulator_manual_runs_and_caches_functions() {
+        let _g = crate::tracetransform::impls::REDUCE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         let img = shepp_logan(12);
         let thetas = orientations(6);
         let mut m = GpuManual::on_device(DeviceChoice::Emulator).unwrap();
+        // fused kernel alone, or + the device P/F pair
+        let expect = if m.device_reduce() { 3 } else { 1 };
         let f1 = m.features(&img, &thetas).unwrap();
-        assert_eq!(m.loaded_function_count(), 1); // fused kernel
+        assert_eq!(m.loaded_function_count(), expect);
         let f2 = m.features(&img, &thetas).unwrap();
         assert_eq!(f1, f2);
         // device memory fully released after each call

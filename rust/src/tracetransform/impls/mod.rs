@@ -47,6 +47,82 @@ pub trait TraceImpl {
     }
 }
 
+/// Where the P/F reduction stage of the trace pipeline runs (the
+/// `HLGPU_REDUCE` knob).
+///
+/// * `Device` (the default): the sinograms never leave the device — the
+///   `circus_all`/`features_all` kernels reduce them to the
+///   `FEATURE_COUNT`-float feature block, and only that block is
+///   downloaded (`|T|·a·s` floats of d2h traffic become 24 per image).
+/// * `Host`: the pre-PR-5 behavior — download every sinogram and run
+///   `functionals::reduce_sinogram` on the host. Kept as the
+///   differential reference; CI runs tier-1 under both.
+///
+/// Only the VTX-emulator paths have the device lowering; PJRT and the
+/// ablation modes always reduce on the host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceMode {
+    Host,
+    Device,
+}
+
+impl ReduceMode {
+    /// Parse an `HLGPU_REDUCE` value; unknown values select no mode.
+    pub fn parse(v: &str) -> Option<ReduceMode> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "host" | "cpu" => Some(ReduceMode::Host),
+            "device" | "gpu" => Some(ReduceMode::Device),
+            _ => None,
+        }
+    }
+}
+
+/// Programmatic reduce-mode override (0 = unset, 1 = host, 2 = device).
+/// Takes precedence over the environment, mirroring
+/// [`crate::emulator::set_default_exec`].
+static REDUCE_OVERRIDE: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Override the reduce stage's placement for subsequent calls
+/// (process-wide). Pass `None` to clear. Benches and the differential
+/// tests use this to A/B the two placements; both are observationally
+/// identical (up to reduction-order rounding), so flipping it mid-run is
+/// harmless for concurrent pipelines.
+pub fn set_default_reduce(mode: Option<ReduceMode>) {
+    REDUCE_OVERRIDE.store(
+        match mode {
+            None => 0,
+            Some(ReduceMode::Host) => 1,
+            Some(ReduceMode::Device) => 2,
+        },
+        std::sync::atomic::Ordering::Relaxed,
+    );
+}
+
+/// The reduce placement used by pipelines that do not specify one: the
+/// [`set_default_reduce`] override, else `HLGPU_REDUCE`, else the
+/// device-resident stage.
+pub fn default_reduce() -> ReduceMode {
+    match REDUCE_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => return ReduceMode::Host,
+        2 => return ReduceMode::Device,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("HLGPU_REDUCE") {
+        if let Some(m) = ReduceMode::parse(&v) {
+            return m;
+        }
+    }
+    ReduceMode::Device
+}
+
+/// Serializes tests that flip (or assert counts depending on) the
+/// process-wide reduce-mode override — flipping is observationally
+/// harmless for concurrent pipelines, but transfer/specialization
+/// counters differ between the placements, so count-asserting tests
+/// must not interleave with a flip.
+#[cfg(test)]
+pub(crate) static REDUCE_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Which device the GPU implementations run on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DeviceChoice {
@@ -74,37 +150,50 @@ impl DeviceChoice {
     }
 }
 
-/// Allocate the three buffers of a Listing-2-style call, freeing the
+/// Allocate one device buffer per requested byte length, freeing the
 /// earlier ones when a later allocation fails — the manual paths must
 /// not leak device memory on OOM.
+pub(crate) fn alloc_n(ctx: &Context, sizes: &[usize]) -> Result<Vec<DevicePtr>> {
+    let mut ptrs = Vec::with_capacity(sizes.len());
+    for &bytes in sizes {
+        match ctx.alloc(bytes) {
+            Ok(p) => ptrs.push(p),
+            Err(e) => {
+                for p in ptrs {
+                    let _ = ctx.free(p);
+                }
+                return Err(e);
+            }
+        }
+    }
+    Ok(ptrs)
+}
+
+/// Free every buffer unconditionally, then surface the body's result —
+/// a body error wins over a free error, so a failed launch still
+/// releases its buffers.
+pub(crate) fn free_n<T>(ctx: &Context, ptrs: &[DevicePtr], body: Result<T>) -> Result<T> {
+    let frees: Vec<Result<()>> = ptrs.iter().map(|&p| ctx.free(p)).collect();
+    let v = body?;
+    for f in frees {
+        f?;
+    }
+    Ok(v)
+}
+
+/// The three buffers of a Listing-2-style call ([`alloc_n`] with the
+/// historical arity).
 pub(crate) fn alloc3(
     ctx: &Context,
     b0: usize,
     b1: usize,
     b2: usize,
 ) -> Result<(DevicePtr, DevicePtr, DevicePtr)> {
-    let p0 = ctx.alloc(b0)?;
-    let p1 = match ctx.alloc(b1) {
-        Ok(p) => p,
-        Err(e) => {
-            let _ = ctx.free(p0);
-            return Err(e);
-        }
-    };
-    let p2 = match ctx.alloc(b2) {
-        Ok(p) => p,
-        Err(e) => {
-            let _ = ctx.free(p0);
-            let _ = ctx.free(p1);
-            return Err(e);
-        }
-    };
-    Ok((p0, p1, p2))
+    let v = alloc_n(ctx, &[b0, b1, b2])?;
+    Ok((v[0], v[1], v[2]))
 }
 
-/// Free three device buffers unconditionally, then surface the body's
-/// result — a body error wins over a free error, so a failed launch
-/// still releases its buffers.
+/// [`free_n`] with the historical three-buffer arity.
 pub(crate) fn free3<T>(
     ctx: &Context,
     p0: DevicePtr,
@@ -112,14 +201,7 @@ pub(crate) fn free3<T>(
     p2: DevicePtr,
     body: Result<T>,
 ) -> Result<T> {
-    let f0 = ctx.free(p0);
-    let f1 = ctx.free(p1);
-    let f2 = ctx.free(p2);
-    let v = body?;
-    f0?;
-    f1?;
-    f2?;
-    Ok(v)
+    free_n(ctx, &[p0, p1, p2], body)
 }
 
 /// Register the VTX providers for every `sinogram_<t>` logical kernel, so
@@ -181,6 +263,49 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
             kernel: crate::emulator::kernels::batched_sinogram()?,
             scalars: vec![KernelArg::I32(s as i32)],
             config: LaunchConfig::new((a as u32, n as u32), s as u32),
+        })
+    });
+    // the device-side P stage: all |P| circus values per sinogram row
+    // (input may be one image's [t,a,s] stack or a batch's [n,t,a,s] —
+    // the kernel only sees rows, so the leading dims just multiply out)
+    registry.register_vtx("circus_all", |specs| {
+        // specs: [sinos f32[...,a,s], circus f32[...,|P|,a]]
+        if specs.len() != 2 || specs[0].shape.len() < 3 {
+            return Err(Error::Specialize {
+                kernel: "circus_all".into(),
+                reason: format!("unexpected argument shapes: {specs:?}"),
+            });
+        }
+        let sh = &specs[0].shape;
+        let s = sh[sh.len() - 1];
+        let a = sh[sh.len() - 2];
+        let rows: usize = sh[..sh.len() - 2].iter().product();
+        let block_h = s.next_power_of_two();
+        Ok(VtxSpec {
+            kernel: crate::emulator::kernels::circus_all(block_h)?,
+            scalars: vec![KernelArg::I32(s as i32)],
+            config: LaunchConfig::new((a as u32, rows as u32), block_h as u32),
+        })
+    });
+    // the device-side F stage: mean + max over every circus function,
+    // writing the (T, P, F)-ordered feature block
+    registry.register_vtx("features_all", |specs| {
+        // specs: [circus f32[...,|P|,a], out f32[...]]
+        if specs.len() != 2 || specs[0].shape.len() < 2 {
+            return Err(Error::Specialize {
+                kernel: "features_all".into(),
+                reason: format!("unexpected argument shapes: {specs:?}"),
+            });
+        }
+        let sh = &specs[0].shape;
+        let a = sh[sh.len() - 1];
+        let np = sh[sh.len() - 2];
+        let rows: usize = sh[..sh.len() - 2].iter().product();
+        let block_h = a.next_power_of_two();
+        Ok(VtxSpec {
+            kernel: crate::emulator::kernels::features_all(block_h)?,
+            scalars: vec![KernelArg::I32(a as i32)],
+            config: LaunchConfig::new((np as u32, rows as u32), block_h as u32),
         })
     });
     // the running example, for completeness
@@ -295,6 +420,7 @@ mod tests {
     /// across batches).
     #[test]
     fn batched_auto_uploads_less_than_sequential() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let thetas = orientations(6);
         let imgs: Vec<Image> = (0..4).map(|i| random_phantom(12, 50 + i as u64)).collect();
         let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();

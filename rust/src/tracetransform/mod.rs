@@ -13,5 +13,6 @@ pub use functionals::{
 };
 pub use image::{orientations, random_phantom, shepp_logan, Image};
 pub use impls::{
-    AutoMode, CpuDynamic, CpuNative, DeviceChoice, GpuAuto, GpuDynamic, GpuManual, TraceImpl,
+    default_reduce, set_default_reduce, AutoMode, CpuDynamic, CpuNative, DeviceChoice, GpuAuto,
+    GpuDynamic, GpuManual, ReduceMode, TraceImpl,
 };

@@ -557,3 +557,96 @@ fn results_bitwise_identical_across_schedules_sinogram() {
     assert_eq!(outputs[0], outputs[1], "1 vs 2 workers");
     assert_eq!(outputs[0], outputs[2], "1 vs 8 workers");
 }
+
+// ---------------------------------------------------------------- part 4 --
+// The device-resident P/F reduction stage vs the host reference.
+
+/// `circus_all → features_all` on device vs `reduce_sinogram` on the
+/// host, over independently-generated sinograms: every T-functional,
+/// multiple sizes, multiple seeds. The device stage reduces pairwise
+/// (tree) where the host reduces sequentially, so comparison is
+/// tolerance-based, not bitwise.
+#[test]
+fn device_reduce_matches_reduce_sinogram_across_t_sizes_and_seeds() {
+    use hlgpu::driver::{KernelArg, LaunchConfig, ModuleSource};
+    use hlgpu::tracetransform::functionals::reduce_sinogram;
+    use hlgpu::tracetransform::{rotate, T_SET};
+
+    let ctx = hlgpu::driver::Context::create(&hlgpu::driver::emulator_device().unwrap()).unwrap();
+    for &size in &[8usize, 12, 17] {
+        let angles = size / 2 + 1;
+        let thetas = orientations(angles);
+        for seed in 0..3u64 {
+            let img = random_phantom(size, 700 + seed);
+            // stack every T-functional's sinogram: [|T|, a, s]
+            let mut stacked: Vec<f32> = Vec::with_capacity(T_SET.len() * angles * size);
+            let mut want: Vec<f32> = Vec::new();
+            for t in T_SET {
+                let sino = rotate::sinogram(&img, &thetas, t);
+                want.extend(reduce_sinogram(&sino, angles, size));
+                stacked.extend(sino);
+            }
+
+            let nt = T_SET.len();
+            let np = 3usize;
+            let bh_s = size.next_power_of_two();
+            let bh_a = angles.next_power_of_two();
+            let g_sino = ctx.alloc(stacked.len() * 4).unwrap();
+            let g_cir = ctx.alloc(nt * np * angles * 4).unwrap();
+            let g_feat = ctx.alloc(FEATURE_COUNT * 4).unwrap();
+            let bytes: Vec<u8> = stacked.iter().flat_map(|v| v.to_le_bytes()).collect();
+            ctx.upload(g_sino, &bytes).unwrap();
+
+            let ck = hlgpu::emulator::kernels::circus_all(bh_s).unwrap();
+            let cname = ck.name.clone();
+            let cmod = ctx
+                .load_module(&ModuleSource::Vtx { kernels: vec![ck] })
+                .unwrap();
+            cmod.function(&cname)
+                .unwrap()
+                .launch(
+                    &LaunchConfig::new((angles as u32, nt as u32), bh_s as u32),
+                    &[
+                        KernelArg::Ptr(g_sino),
+                        KernelArg::Ptr(g_cir),
+                        KernelArg::I32(size as i32),
+                    ],
+                    ctx.memory().unwrap(),
+                )
+                .unwrap();
+            let fk = hlgpu::emulator::kernels::features_all(bh_a).unwrap();
+            let fname = fk.name.clone();
+            let fmod = ctx
+                .load_module(&ModuleSource::Vtx { kernels: vec![fk] })
+                .unwrap();
+            fmod.function(&fname)
+                .unwrap()
+                .launch(
+                    &LaunchConfig::new((np as u32, nt as u32), bh_a as u32),
+                    &[
+                        KernelArg::Ptr(g_cir),
+                        KernelArg::Ptr(g_feat),
+                        KernelArg::I32(angles as i32),
+                    ],
+                    ctx.memory().unwrap(),
+                )
+                .unwrap();
+
+            let mut out = vec![0u8; FEATURE_COUNT * 4];
+            ctx.download(g_feat, &mut out).unwrap();
+            let got: Vec<f32> = out
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            assert_close(
+                &format!("device-reduce s={size} a={angles} seed={seed}"),
+                &got,
+                &want,
+                1e-4,
+            );
+            ctx.free(g_sino).unwrap();
+            ctx.free(g_cir).unwrap();
+            ctx.free(g_feat).unwrap();
+        }
+    }
+}

@@ -315,6 +315,86 @@ fn sticky_stream_errors_surface_on_wait() {
     assert!(dc.download().unwrap().as_f32().iter().all(|&v| v == 2.0));
 }
 
+// --------------------------------------------- async d2h readbacks --
+
+#[test]
+fn pending_download_is_stream_ordered_after_the_kernel() {
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let a = Tensor::from_f32(&[1.0; 64], &[64]);
+    let b = Tensor::from_f32(&[2.0; 64], &[64]);
+    let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+    let db = DeviceArray::from_tensor(&ctx, &b).unwrap();
+    let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[64]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let s = ctx.create_stream().unwrap();
+    let cfg = LaunchConfig::new(1u32, 64u32);
+    // enqueue kernel then download on the same stream: no host sync in
+    // between — FIFO order makes the download observe the kernel
+    handle
+        .launch_on(&s, cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let pd = handle.download_on(&s, &dc).unwrap();
+    let t = pd.wait().unwrap();
+    assert_eq!(t.shape(), &[64]);
+    assert!(t.as_f32().iter().all(|&v| v == 3.0));
+    // the deferred readback is visible in the metrics
+    let m = l.metrics();
+    assert_eq!(m.d2h_deferred, 1);
+    assert_eq!(m.features_bytes, 64 * 4);
+}
+
+#[test]
+fn pending_download_chains_across_streams_via_events() {
+    let mut l = vadd_launcher();
+    let ctx = l.context().clone();
+    let n = 2048usize;
+    let a = Tensor::from_f32(&vec![1.25; n], &[n]);
+    let b = Tensor::from_f32(&vec![0.75; n], &[n]);
+    let da = DeviceArray::from_tensor(&ctx, &a).unwrap();
+    let db = DeviceArray::from_tensor(&ctx, &b).unwrap();
+    let mut dc = DeviceArray::alloc(&ctx, Dtype::F32, &[n]).unwrap();
+    let handle = l
+        .bind("vadd", &[arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let compute = ctx.create_stream().unwrap();
+    let download = ctx.create_stream().unwrap();
+    let cfg = LaunchConfig::new((n as u32).div_ceil(256), 256u32);
+    let p = handle
+        .launch_on(
+            &compute,
+            cfg,
+            &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)],
+        )
+        .unwrap();
+    // fence the download stream on the launch, then read back there
+    download.wait_event(p.event()).unwrap();
+    let pd = dc.download_on(&download).unwrap();
+    let t = pd.wait().unwrap();
+    assert!(t.as_f32().iter().all(|&v| v == 2.0));
+    assert!(download.is_idle(), "wait() joins the download stream's work");
+    p.wait().unwrap();
+}
+
+#[test]
+fn pending_download_surfaces_sticky_stream_errors() {
+    let l = vadd_launcher();
+    let ctx = l.context().clone();
+    let t = Tensor::from_f32(&[5.0; 16], &[16]);
+    let d = DeviceArray::from_tensor(&ctx, &t).unwrap();
+    let s = ctx.create_stream().unwrap();
+    s.enqueue(|| Err(hlgpu::Error::Stream("poisoned before readback".into()))).unwrap();
+    let pd = d.download_on(&s).unwrap();
+    let err = pd.wait().unwrap_err();
+    assert!(err.to_string().contains("poisoned before readback"), "{err}");
+    // a fresh download on a clean stream still works
+    s.synchronize().unwrap_err(); // consume the sticky error
+    let pd = d.download_on(&s).unwrap();
+    assert_eq!(pd.wait().unwrap().as_f32(), t.as_f32());
+}
+
 // ------------------------------------------------- per-stream arenas --
 
 #[test]

@@ -676,3 +676,51 @@ fn prop_json_parses_generated_manifests() {
         assert_eq!(lib.len(), n);
     }
 }
+
+// ------------------------------------------------------- reduce stage --
+
+/// `HLGPU_REDUCE=host` and `HLGPU_REDUCE=device` are observationally
+/// identical (up to reduction-order rounding) for random images, sizes
+/// and angle counts, through every emulator pipeline — the property the
+/// differential CI runs rely on.
+#[test]
+fn prop_host_and_device_reduce_observationally_identical() {
+    use hlgpu::tracetransform::{
+        random_phantom, set_default_reduce, DeviceChoice, GpuAuto, GpuDynamic, GpuManual,
+        ReduceMode, TraceImpl,
+    };
+    // Serialize against anything else in this binary that might flip the
+    // process-wide reduce override.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    for seed in 0..8u64 {
+        let mut rng = Prng::new(9100 + seed);
+        let size = rng.usize_in(6, 18);
+        let angles = rng.usize_in(2, 9);
+        let img = random_phantom(size, 9200 + seed);
+        let thetas = hlgpu::tracetransform::orientations(angles);
+
+        let mut impls: Vec<Box<dyn TraceImpl>> = vec![
+            Box::new(GpuAuto::on_device(DeviceChoice::Emulator).unwrap()),
+            Box::new(GpuDynamic::on_device(DeviceChoice::Emulator).unwrap()),
+            Box::new(GpuManual::on_device(DeviceChoice::Emulator).unwrap()),
+        ];
+        for im in impls.iter_mut() {
+            let name = im.name();
+            set_default_reduce(Some(ReduceMode::Host));
+            let host = im.features(&img, &thetas).unwrap();
+            set_default_reduce(Some(ReduceMode::Device));
+            let dev = im.features(&img, &thetas).unwrap();
+            set_default_reduce(None);
+            assert_eq!(host.len(), dev.len(), "{name} seed {seed}");
+            for (i, (h, d)) in host.iter().zip(&dev).enumerate() {
+                assert!(
+                    (h - d).abs() <= 1e-4 * h.abs().max(1.0),
+                    "{name} seed {seed} (s={size}, a={angles}) feature {i}: host {h} vs device {d}"
+                );
+            }
+        }
+    }
+    set_default_reduce(None);
+}
