@@ -1,0 +1,196 @@
+//! Open-loop load harness for the feature-serving engine (`hlgpu::serve`,
+//! see `docs/serving.md`).
+//!
+//! Arrivals are Poisson (exponential interarrival times from the crate
+//! PRNG) and **open-loop**: the submitter never waits for completions,
+//! so queue growth, shedding and deadline expiry behave as they would
+//! under real load rather than being self-throttled by the client. Each
+//! request draws one of three image sizes, exercising the per-size batch
+//! former under a mixed stream.
+//!
+//! Per offered rate the report shows admitted/served/shed/expired
+//! counts, completion-time latency percentiles (p50/p99/p999 — tickets
+//! timestamp resolution at the worker, so joining after the window does
+//! not distort them), served images/s, and the maximum admission-queue
+//! depth observed (must stay bounded by the configured capacity). A
+//! batch-size histogram at the end shows what the dynamic former
+//! actually built.
+//!
+//! Run: `cargo bench --bench serve_load`
+//! Env: SL_RATES (req/s list, default "200,1000,4000"), SL_MS (window
+//! per rate, default 400), SL_DEADLINE_US (per-request budget, default
+//! 100000), SL_SEED, SL_SMOKE=1 (CI smoke: one small rate, short
+//! window).
+
+use std::time::{Duration, Instant};
+
+use hlgpu::bench_support::{fmt_time, Table};
+use hlgpu::serve::{BatchHistogram, ServeConfig, Service};
+use hlgpu::tracetransform::{orientations, random_phantom, DeviceChoice, Image};
+use hlgpu::util::Prng;
+use hlgpu::Error;
+
+const SIZES: [usize; 3] = [10, 12, 16];
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn fmt_pct(sorted: &[f64], p: f64) -> String {
+    if sorted.is_empty() {
+        "-".into()
+    } else {
+        fmt_time(pct(sorted, p))
+    }
+}
+
+struct RateOutcome {
+    served: u64,
+    max_depth: usize,
+    capacity: usize,
+    histogram: String,
+}
+
+fn run_rate(rate: f64, window: Duration, deadline_us: u64, seed: u64, table: &mut Table) -> RateOutcome {
+    let thetas = orientations(6);
+    let config = ServeConfig {
+        max_batch: 8,
+        max_delay_us: 300,
+        queue_capacity: 64,
+        default_deadline_us: deadline_us,
+        workers: 2,
+    };
+    let capacity = config.queue_capacity;
+    let svc = Service::new(DeviceChoice::Emulator, &thetas, config).unwrap();
+
+    // Pre-built image pools so the submit loop measures serving, not
+    // phantom generation.
+    let pools: Vec<Vec<Image>> = SIZES
+        .iter()
+        .map(|&s| (0..16).map(|i| random_phantom(s, seed ^ ((s as u64) << 8) ^ i)).collect())
+        .collect();
+
+    let mut prng = Prng::new(seed);
+    let mut pending: Vec<(Instant, hlgpu::serve::Ticket)> = Vec::new();
+    let mut shed = 0u64;
+    let mut max_depth = 0usize;
+    let start = Instant::now();
+    let mut next_arrival = start;
+    let mut n = 0usize;
+    while start.elapsed() < window {
+        let now = Instant::now();
+        if now < next_arrival {
+            std::thread::sleep(next_arrival - now);
+        }
+        let which = prng.usize_in(0, SIZES.len() - 1);
+        let img = pools[which][n % pools[which].len()].clone();
+        n += 1;
+        match svc.submit("load", img) {
+            Ok(t) => pending.push((Instant::now(), t)),
+            Err(Error::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+        max_depth = max_depth.max(svc.queue_depth());
+        // Poisson arrivals: exponential interarrival gap.
+        let u = prng.next_f64().min(1.0 - 1e-12);
+        next_arrival += Duration::from_secs_f64(-(1.0 - u).ln() / rate);
+    }
+    let offered = pending.len() as u64 + shed;
+
+    // Join every ticket; resolution instants were stamped by the workers.
+    let mut lats: Vec<f64> = Vec::with_capacity(pending.len());
+    let mut expired = 0u64;
+    let mut failed = 0u64;
+    for (t0, ticket) in pending {
+        match ticket.wait_timed() {
+            (at, Ok(_)) => lats.push(at.saturating_duration_since(t0).as_secs_f64()),
+            (_, Err(Error::DeadlineExceeded { .. })) => expired += 1,
+            (_, Err(_)) => failed += 1,
+        }
+    }
+    let total = start.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let served = lats.len() as u64;
+
+    table.row(&[
+        format!("{rate:.0}/s"),
+        offered.to_string(),
+        served.to_string(),
+        shed.to_string(),
+        expired.to_string(),
+        failed.to_string(),
+        fmt_pct(&lats, 50.0),
+        fmt_pct(&lats, 99.0),
+        fmt_pct(&lats, 99.9),
+        format!("{:.0}", served as f64 / total),
+        format!("{max_depth}/{capacity}"),
+    ]);
+
+    // Sanity against the service's own books before it drops.
+    let st = svc.stats_total();
+    assert_eq!(st.served, served, "ticket joins and stats agree on served");
+    assert_eq!(st.rejected, shed, "admission sheds and stats agree");
+    RateOutcome { served, max_depth, capacity, histogram: histogram_line(&st.batches) }
+}
+
+fn histogram_line(h: &BatchHistogram) -> String {
+    let parts: Vec<String> = BatchHistogram::LABELS
+        .iter()
+        .zip(h.counts())
+        .filter(|&(_, c)| c > 0)
+        .map(|(l, c)| format!("{l}:{c}"))
+        .collect();
+    format!("[{}]", parts.join(" "))
+}
+
+fn main() {
+    let smoke = std::env::var("SL_SMOKE").is_ok();
+    let rates: Vec<f64> = if smoke {
+        vec![300.0]
+    } else {
+        std::env::var("SL_RATES")
+            .unwrap_or_else(|_| "200,1000,4000".into())
+            .split(',')
+            .filter_map(|r| r.trim().parse().ok())
+            .collect()
+    };
+    let window = Duration::from_millis(if smoke { 120 } else { env_u64("SL_MS", 400) });
+    let deadline_us = env_u64("SL_DEADLINE_US", 100_000);
+    let seed = env_u64("SL_SEED", 42);
+
+    println!(
+        "serve_load: open-loop Poisson arrivals, sizes {SIZES:?}, \
+         {} ms window, {deadline_us} µs deadline\n",
+        window.as_millis()
+    );
+    let mut table = Table::new(&[
+        "offered", "reqs", "served", "shed", "expired", "failed", "p50", "p99", "p999",
+        "imgs/s", "maxq",
+    ]);
+    let mut outcomes = Vec::new();
+    for &rate in &rates {
+        outcomes.push(run_rate(rate, window, deadline_us, seed, &mut table));
+    }
+    println!("\n{}", table.render());
+
+    for (rate, o) in rates.iter().zip(&outcomes) {
+        println!("{rate:>6.0}/s batch sizes: {}", o.histogram);
+        assert!(
+            o.max_depth <= o.capacity,
+            "queue depth {} exceeded capacity {} at {rate}/s",
+            o.max_depth,
+            o.capacity
+        );
+    }
+    let total_served: u64 = outcomes.iter().map(|o| o.served).sum();
+    assert!(total_served > 0, "no request was ever served");
+    println!("queue depth stayed bounded at every rate; zero panics.");
+}

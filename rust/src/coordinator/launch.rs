@@ -226,6 +226,34 @@ where
     Ok(LaunchConfig::new(g, b))
 }
 
+/// [`checked_cfg`] for 2-D grids (`LaunchConfig::new((gx, gy), block)`):
+/// the batched pipelines' `(angles, batch)` grids route through this so
+/// a batch or angle count past `u32::MAX` is [`Error::BadArgument`], not
+/// a silently truncated grid.
+pub fn checked_cfg2<X, Y, B>(kernel: &str, grid: (X, Y), block: B) -> Result<LaunchConfig>
+where
+    X: TryInto<u32> + Copy + std::fmt::Display,
+    Y: TryInto<u32> + Copy + std::fmt::Display,
+    B: TryInto<u32> + Copy + std::fmt::Display,
+{
+    let gx: u32 = grid.0.try_into().map_err(|_| Error::BadArgument {
+        kernel: kernel.to_string(),
+        index: 0,
+        reason: format!("grid x dimension {} does not fit in u32", grid.0),
+    })?;
+    let gy: u32 = grid.1.try_into().map_err(|_| Error::BadArgument {
+        kernel: kernel.to_string(),
+        index: 0,
+        reason: format!("grid y dimension {} does not fit in u32", grid.1),
+    })?;
+    let b: u32 = block.try_into().map_err(|_| Error::BadArgument {
+        kernel: kernel.to_string(),
+        index: 0,
+        reason: format!("block dimension {block} does not fit in u32"),
+    })?;
+    Ok(LaunchConfig::new((gx, gy), b))
+}
+
 /// Check a call's arguments against a specialization's transfer plan.
 /// The v1 warm path `zip`ped the two and silently truncated on length
 /// mismatch; the v2 path errors with the shape of the disagreement.
@@ -1010,6 +1038,23 @@ mod tests {
         cuda!(l, (1u64, 4usize), vadd(arg::cu_in(&a), arg::cu_in(&b), arg::cu_out(&mut c)))
             .unwrap();
         assert!(c.as_f32().iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn checked_cfg2_rejects_overflow_in_either_grid_dim() {
+        // the batched pipelines' 2-D grids ((angles, batch)) route
+        // through this; a dimension past u32::MAX must error, not wrap
+        let big: u64 = u64::from(u32::MAX) + 1;
+        let err = checked_cfg2("batched_sinogram", (big, 4u64), 8u64).unwrap_err();
+        assert!(matches!(err, Error::BadArgument { .. }), "{err}");
+        assert!(err.to_string().contains("grid x dimension"), "{err}");
+        let err = checked_cfg2("batched_sinogram", (4u64, big), 8u64).unwrap_err();
+        assert!(err.to_string().contains("grid y dimension"), "{err}");
+        let err = checked_cfg2("batched_sinogram", (4u64, 4u64), big).unwrap_err();
+        assert!(err.to_string().contains("block dimension"), "{err}");
+        // in-range usize dims pass through to the 2-D grid unchanged
+        let cfg = checked_cfg2("batched_sinogram", (6usize, 3usize), 12usize).unwrap();
+        assert_eq!((cfg.grid.x, cfg.grid.y, cfg.block.x), (6, 3, 12));
     }
 
     #[test]

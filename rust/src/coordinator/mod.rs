@@ -24,8 +24,8 @@ pub use args::{call_signature, input_signature, Arg, ArgMode};
 pub use cache::{CacheStats, SpecializationCache};
 pub use devarray::DeviceArray;
 pub use launch::{
-    checked_cfg, KernelHandle, LaunchMetrics, Launcher, PendingDownload, PendingLaunch,
-    TransferPolicy,
+    checked_cfg, checked_cfg2, KernelHandle, LaunchMetrics, Launcher, PendingDownload,
+    PendingLaunch, TransferPolicy,
 };
 pub use registry::{KernelRegistry, KernelSource, VtxSpec};
 

@@ -19,6 +19,7 @@ pub mod launch;
 pub mod memory;
 pub mod module;
 pub mod stream;
+pub mod streampool;
 
 pub use backend::{Backend, DeviceFunction, LoadedModule, ModuleSource, TensorSpec};
 pub use context::Context;
@@ -31,3 +32,4 @@ pub use launch::{Dim3, KernelArg, LaunchConfig, LaunchReport};
 pub use memory::{DevicePtr, MemStats, MemoryPool, PoolPolicy, DEFAULT_CAPACITY};
 pub use module::{Function, Module};
 pub use stream::Stream;
+pub use streampool::{StreamLease, StreamPool, StreamPoolStats};

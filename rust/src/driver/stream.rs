@@ -218,6 +218,25 @@ impl Stream {
         let (lock, _) = &*self.tracker;
         lock.lock().unwrap().failed.clone()
     }
+
+    /// Reclaim a stream after a sticky error: block until every op
+    /// submitted so far has drained off the worker, then clear and
+    /// return the sticky error, if any. After this call the stream is
+    /// clean — no in-flight work, no latent error — so it can be leased
+    /// to a new client without serving another request's stale failure
+    /// (or, worse, results ordered behind a failed op). This is the
+    /// quarantine-then-reclaim primitive [`StreamPool`] applies to
+    /// streams returned in an errored state.
+    ///
+    /// [`StreamPool`]: crate::driver::StreamPool
+    pub fn reset_error(&self) -> Option<String> {
+        let (lock, cv) = &*self.tracker;
+        let mut t = lock.lock().unwrap();
+        while t.completed < t.submitted {
+            t = cv.wait(t).unwrap();
+        }
+        t.failed.take()
+    }
 }
 
 impl Default for Stream {
@@ -442,6 +461,26 @@ mod tests {
         // synchronize still surfaces (and consumes) it
         assert!(s.synchronize().is_err());
         assert!(s.peek_error().is_none());
+        s.synchronize().unwrap();
+    }
+
+    #[test]
+    fn reset_error_drains_and_reclaims() {
+        let s = Stream::new();
+        s.enqueue(|| Err(Error::Stream("poisoned".into()))).unwrap();
+        s.enqueue(|| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            Ok(())
+        })
+        .unwrap();
+        // reclaim: waits for the queue to drain, returns the sticky error
+        let taken = s.reset_error().unwrap();
+        assert!(taken.contains("poisoned"));
+        assert!(s.is_idle(), "reset_error drains every submitted op");
+        // the stream is clean: no latent error for the next client
+        assert!(s.peek_error().is_none());
+        assert!(s.reset_error().is_none());
+        s.enqueue(|| Ok(())).unwrap();
         s.synchronize().unwrap();
     }
 

@@ -1,0 +1,262 @@
+//! Multi-tenant stream pool: checkout/return leasing of [`Stream`]s with
+//! sticky-error quarantine.
+//!
+//! The double-buffered pipelines (`gpu_auto::features_batch`) and the
+//! serving layer (`rust/src/serve`) both need streams that outlive one
+//! call but must not be poisoned by it: under CUDA's sticky-error model
+//! a failed launch leaves an error on the stream that surfaces to the
+//! *next* synchronize — which, once streams are shared across requests
+//! and tenants, would hand one client another client's failure (or hide
+//! its own). The pool closes that hole at the return boundary:
+//!
+//! * [`StreamPool::checkout`] leases a stream (creating up to `capacity`
+//!   lazily, then blocking until one is returned). The lease derefs to
+//!   `&Stream`, so `launch_on`/`copy_h2d`/`record_event` work unchanged.
+//! * Dropping the [`StreamLease`] returns the stream. A stream returned
+//!   with a sticky error is **quarantined**: the pool drains it and
+//!   clears the error via [`Stream::reset_error`] before it re-enters
+//!   the idle set, so the next lessee starts from a clean queue. An
+//!   error that has not yet surfaced when the lease drops (the op is
+//!   still in flight) is caught the same way on a later return, and in
+//!   the meantime remains visible to the lessee through
+//!   `peek_error`/`synchronize` — either way it is reported or
+//!   reclaimed, never silently recycled.
+//!
+//! [`StreamPoolStats`] counts leases, lazily created streams, and
+//! quarantine/reclaim events for the serve layer's observability.
+
+use std::ops::Deref;
+use std::sync::{Condvar, Mutex};
+
+use crate::driver::stream::Stream;
+
+/// Counters of pool activity since construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamPoolStats {
+    /// Checkouts served (from the idle set or freshly created).
+    pub leases: u64,
+    /// Streams created lazily to serve a checkout.
+    pub created: u64,
+    /// Streams returned with a sticky error and pulled aside.
+    pub quarantined: u64,
+    /// Quarantined streams whose error was drained and cleared.
+    pub reclaimed: u64,
+}
+
+struct Inner {
+    idle: Vec<Stream>,
+    /// Streams alive (idle + leased); bounded by `capacity`.
+    live: usize,
+}
+
+/// A bounded pool of [`Stream`]s leased to concurrent clients.
+pub struct StreamPool {
+    inner: Mutex<Inner>,
+    available: Condvar,
+    stats: Mutex<StreamPoolStats>,
+    capacity: usize,
+}
+
+impl StreamPool {
+    /// A pool that lazily creates up to `capacity` streams (at least 1).
+    pub fn new(capacity: usize) -> StreamPool {
+        StreamPool {
+            inner: Mutex::new(Inner { idle: Vec::new(), live: 0 }),
+            available: Condvar::new(),
+            stats: Mutex::new(StreamPoolStats::default()),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Streams currently parked in the idle set.
+    pub fn idle_count(&self) -> usize {
+        self.inner.lock().unwrap().idle.len()
+    }
+
+    pub fn stats(&self) -> StreamPoolStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Lease a stream: pop an idle one, create one if the pool is under
+    /// capacity, otherwise block until a lease is returned. The stream
+    /// goes back to the pool when the returned lease drops.
+    pub fn checkout(&self) -> StreamLease<'_> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(s) = inner.idle.pop() {
+                drop(inner);
+                self.stats.lock().unwrap().leases += 1;
+                return StreamLease { pool: self, stream: Some(s) };
+            }
+            if inner.live < self.capacity {
+                inner.live += 1;
+                drop(inner);
+                let mut st = self.stats.lock().unwrap();
+                st.leases += 1;
+                st.created += 1;
+                drop(st);
+                return StreamLease { pool: self, stream: Some(Stream::new()) };
+            }
+            inner = self.available.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking [`StreamPool::checkout`]: `None` when every stream
+    /// is leased out and the pool is at capacity.
+    pub fn try_checkout(&self) -> Option<StreamLease<'_>> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(s) = inner.idle.pop() {
+            drop(inner);
+            self.stats.lock().unwrap().leases += 1;
+            return Some(StreamLease { pool: self, stream: Some(s) });
+        }
+        if inner.live < self.capacity {
+            inner.live += 1;
+            drop(inner);
+            let mut st = self.stats.lock().unwrap();
+            st.leases += 1;
+            st.created += 1;
+            return Some(StreamLease { pool: self, stream: Some(Stream::new()) });
+        }
+        None
+    }
+
+    /// Return path: quarantine-then-reclaim. A stream coming back with a
+    /// visible sticky error is drained and cleared before it can serve
+    /// the next lessee; a clean stream goes straight to the idle set.
+    fn give_back(&self, stream: Stream) {
+        if stream.peek_error().is_some() {
+            let mut st = self.stats.lock().unwrap();
+            st.quarantined += 1;
+            drop(st);
+            if stream.reset_error().is_some() {
+                self.stats.lock().unwrap().reclaimed += 1;
+            }
+        }
+        self.inner.lock().unwrap().idle.push(stream);
+        self.available.notify_one();
+    }
+}
+
+/// An exclusive lease on one pooled [`Stream`]; derefs to `&Stream` and
+/// returns the stream to the pool on drop.
+pub struct StreamLease<'p> {
+    pool: &'p StreamPool,
+    stream: Option<Stream>,
+}
+
+impl Deref for StreamLease<'_> {
+    type Target = Stream;
+
+    fn deref(&self) -> &Stream {
+        self.stream.as_ref().expect("lease holds its stream until drop")
+    }
+}
+
+impl Drop for StreamLease<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.stream.take() {
+            self.pool.give_back(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn leases_recycle_the_same_streams() {
+        let pool = StreamPool::new(2);
+        let (a1, a2) = {
+            let a = pool.checkout();
+            let b = pool.checkout();
+            (a.arena_id(), b.arena_id())
+        };
+        assert_ne!(a1, a2);
+        // both returned; the next pair reuses them (no new arenas)
+        let c = pool.checkout();
+        let d = pool.checkout();
+        assert!(
+            [a1, a2].contains(&c.arena_id()) && [a1, a2].contains(&d.arena_id()),
+            "warm checkouts lease the pooled streams, not fresh ones"
+        );
+        let st = pool.stats();
+        assert_eq!(st.created, 2);
+        assert_eq!(st.leases, 4);
+    }
+
+    #[test]
+    fn checkout_blocks_at_capacity_until_return() {
+        let pool = Arc::new(StreamPool::new(1));
+        let first = pool.checkout();
+        let progressed = Arc::new(AtomicU32::new(0));
+        let (p2, pr2) = (pool.clone(), progressed.clone());
+        let waiter = std::thread::spawn(move || {
+            let lease = p2.checkout(); // blocks until `first` drops
+            pr2.store(1, Ordering::SeqCst);
+            drop(lease);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(progressed.load(Ordering::SeqCst), 0, "second checkout must wait");
+        assert!(pool.try_checkout().is_none());
+        drop(first);
+        waiter.join().unwrap();
+        assert_eq!(progressed.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.stats().created, 1, "capacity 1 never creates a second stream");
+    }
+
+    #[test]
+    fn errored_stream_is_quarantined_then_reclaimed() {
+        let pool = StreamPool::new(1);
+        {
+            let lease = pool.checkout();
+            lease.enqueue(|| Err(Error::Stream("tenant A's failure".into()))).unwrap();
+            // make the error visible before the lease returns
+            while lease.peek_error().is_none() {
+                std::thread::yield_now();
+            }
+        }
+        let st = pool.stats();
+        assert_eq!((st.quarantined, st.reclaimed), (1, 1));
+        // the reclaimed stream serves the next tenant cleanly: no stale
+        // sticky error, fresh work completes
+        let lease = pool.checkout();
+        assert!(lease.peek_error().is_none(), "tenant B must not see tenant A's error");
+        lease.enqueue(|| Ok(())).unwrap();
+        lease.synchronize().unwrap();
+    }
+
+    #[test]
+    fn late_surfacing_error_is_reported_or_reclaimed_never_recycled() {
+        let pool = StreamPool::new(1);
+        {
+            // the failing op is still queued behind a sleep when the
+            // lease returns, so quarantine cannot trigger yet
+            let lease = pool.checkout();
+            lease
+                .enqueue(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(15));
+                    Err(Error::Stream("late failure".into()))
+                })
+                .unwrap();
+        }
+        let lease = pool.checkout();
+        // the sticky model still reports it to whoever joins the stream…
+        let err = lease.synchronize().unwrap_err();
+        assert!(err.to_string().contains("late failure"));
+        drop(lease);
+        // …and once consumed (or caught at a later return) the stream is
+        // clean again
+        let lease = pool.checkout();
+        lease.enqueue(|| Ok(())).unwrap();
+        lease.synchronize().unwrap();
+    }
+}

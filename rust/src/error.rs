@@ -44,6 +44,15 @@ pub enum Error {
     // ---- host-language layer -------------------------------------------
     HostLang(String),
 
+    // ---- serving layer (rust/src/serve) ---------------------------------
+    /// A request's deadline budget ran out — rejected at admission when
+    /// the budget is already zero, or dropped from a formed batch before
+    /// launch when it expired while queued.
+    DeadlineExceeded { waited_us: u64, budget_us: u64 },
+    /// The admission queue is at capacity; the service sheds the request
+    /// instead of growing the queue without bound.
+    Overloaded { depth: usize, capacity: usize },
+
     // ---- misc ------------------------------------------------------------
     Io(std::io::Error),
     Json(String),
@@ -95,6 +104,14 @@ impl fmt::Display for Error {
             }
             Type(r) => write!(f, "type error: {r}"),
             HostLang(r) => write!(f, "hostlang: {r}"),
+            DeadlineExceeded { waited_us, budget_us } => write!(
+                f,
+                "request deadline exceeded: waited {waited_us} µs of a {budget_us} µs budget"
+            ),
+            Overloaded { depth, capacity } => write!(
+                f,
+                "service overloaded: admission queue at {depth}/{capacity}"
+            ),
             Io(e) => write!(f, "I/O error: {e}"),
             Json(r) => write!(f, "JSON parse error: {r}"),
             Other(r) => write!(f, "{r}"),
@@ -156,6 +173,8 @@ impl Error {
             BadArgument { .. } => "ERROR_INVALID_VALUE",
             Type(_) => "ERROR_INVALID_VALUE",
             HostLang(_) => "ERROR_UNKNOWN",
+            DeadlineExceeded { .. } => "ERROR_TIMEOUT",
+            Overloaded { .. } => "ERROR_OUT_OF_RESOURCES",
             Io(_) => "ERROR_FILE_NOT_FOUND",
             Json(_) => "ERROR_INVALID_IMAGE",
             Other(_) => "ERROR_UNKNOWN",
@@ -174,6 +193,16 @@ mod tests {
             Error::OutOfMemory { requested: 10, available: 5 }.status(),
             "ERROR_OUT_OF_MEMORY"
         );
+    }
+
+    #[test]
+    fn serving_errors_have_statuses_and_details() {
+        let e = Error::DeadlineExceeded { waited_us: 1500, budget_us: 1000 };
+        assert_eq!(e.status(), "ERROR_TIMEOUT");
+        assert!(e.to_string().contains("1500"));
+        let e = Error::Overloaded { depth: 64, capacity: 64 };
+        assert_eq!(e.status(), "ERROR_OUT_OF_RESOURCES");
+        assert!(e.to_string().contains("64/64"));
     }
 
     #[test]

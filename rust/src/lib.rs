@@ -39,6 +39,9 @@
 //!   the role of the high-level host language in the evaluation.
 //! * [`tracetransform`] — the paper's case study (§7): the trace transform
 //!   with T/P/F functional stacks and the five benchmark implementations.
+//! * [`serve`] — the **feature-serving engine** over the batched pipeline:
+//!   admission queue with dynamic batch formation, per-request deadlines,
+//!   bounded-queue backpressure and per-tenant stats (`docs/serving.md`).
 //! * [`stats`], [`bench_support`], [`sloc`], [`util`] — measurement
 //!   methodology (log-normal fits, §7.2), bench harness, LoC counting for
 //!   Table 2, and offline-built utility substrates (JSON, PRNG, CLI).
@@ -66,6 +69,7 @@ pub mod emulator;
 pub mod error;
 pub mod hostlang;
 pub mod runtime;
+pub mod serve;
 pub mod sloc;
 pub mod stats;
 pub mod tensor;

@@ -1,0 +1,29 @@
+//! Feature-serving engine: an in-process service front for the resident
+//! batched pipeline (see `docs/serving.md`).
+//!
+//! The layers below make one *batch* fast — device-resident angle table
+//! and buffers, bound kernel handles, a leased two-stream double-buffered
+//! pipeline, optional device-side P/F reduction. This layer makes a
+//! *stream of requests* fast and well-behaved:
+//!
+//! * [`Service`] — admission queue + worker pool over
+//!   [`crate::tracetransform::GpuAuto`];
+//! * dynamic batch formation — flush after `max_delay_us` or `max_batch`
+//!   requests, whichever first, per image-size group (no head-of-line
+//!   blocking across sizes);
+//! * per-request deadlines — [`crate::Error::DeadlineExceeded`] at
+//!   admission for a zero budget, expiry-drop before launch for requests
+//!   that aged out in the queue;
+//! * bounded-queue backpressure — [`crate::Error::Overloaded`] instead
+//!   of unbounded growth;
+//! * per-tenant [`ServeStats`] — admitted/served/rejected/expired/failed
+//!   counters and a [`BatchHistogram`] of formed batch sizes.
+//!
+//! The open-loop load harness lives in `benches/serve_load.rs`; the
+//! correctness suite in `rust/tests/serve.rs`.
+
+pub mod service;
+pub mod stats;
+
+pub use service::{ServeConfig, Service, Ticket};
+pub use stats::{BatchHistogram, ServeStats};

@@ -1,0 +1,431 @@
+//! The in-process feature-serving engine.
+//!
+//! [`Service`] fronts the resident batched pipeline
+//! ([`GpuAuto::features_batch`]) with an admission queue and a small
+//! worker pool:
+//!
+//! * **admission** — [`Service::submit`] either enqueues the request and
+//!   returns a [`Ticket`], or sheds it: [`Error::Overloaded`] when the
+//!   bounded queue is full, [`Error::DeadlineExceeded`] when the
+//!   request's deadline budget is already zero.
+//! * **dynamic batching** — a worker forms a batch from queued requests
+//!   of one image size and flushes it when either `max_batch` requests
+//!   are available or the oldest has waited `max_delay_us`, whichever
+//!   comes first. Requests of *other* sizes never gate a ready batch:
+//!   the former picks whichever size group is ready first, so a slow
+//!   size class cannot head-of-line-block a fast one.
+//! * **deadlines** — a request whose budget ran out while it waited is
+//!   dropped from the formed batch before launch; its ticket resolves to
+//!   [`Error::DeadlineExceeded`] carrying the actual wait.
+//! * **execution** — each worker owns a [`GpuAuto`] pipeline whose
+//!   batched path leases its two streams per batch from a
+//!   [`crate::driver::StreamPool`]; a failed batch's sticky stream error
+//!   is quarantined and reclaimed at lease return, so the next batch
+//!   starts clean (see `docs/serving.md`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::tracetransform::{DeviceChoice, GpuAuto, Image, TraceImpl};
+
+use super::stats::ServeStats;
+
+/// Tuning knobs for a [`Service`]. `Default` is sized for the emulator
+/// device: small batches, sub-millisecond flush, a queue deep enough to
+/// absorb bursts without unbounded growth.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Flush a size group once this many requests are queued.
+    pub max_batch: usize,
+    /// Flush a size group once its oldest request has waited this long.
+    pub max_delay_us: u64,
+    /// Admission-queue bound; submissions past it get
+    /// [`Error::Overloaded`].
+    pub queue_capacity: usize,
+    /// Deadline budget for [`Service::submit`] (µs);
+    /// [`Service::submit_with_deadline`] overrides per request.
+    pub default_deadline_us: u64,
+    /// Worker threads, each owning its own pipeline. Two or more keep a
+    /// flushing size group from serializing behind another's execution.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_delay_us: 500,
+            queue_capacity: 64,
+            default_deadline_us: 1_000_000,
+            workers: 2,
+        }
+    }
+}
+
+/// What a worker sends back through a ticket: the resolution instant
+/// (taken at send, for load harnesses measuring true completion-time
+/// latency) and the outcome.
+type Resolution = (Instant, Result<Vec<f32>>);
+
+/// One queued request.
+struct PendingReq {
+    tenant: String,
+    image: Image,
+    enqueued: Instant,
+    budget: Duration,
+    tx: Sender<Resolution>,
+}
+
+/// State shared between submitters and workers.
+struct Shared {
+    queue: Mutex<VecDeque<PendingReq>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+    stats: Mutex<HashMap<String, ServeStats>>,
+    config: ServeConfig,
+}
+
+impl Shared {
+    fn stat<'a>(
+        map: &'a mut HashMap<String, ServeStats>,
+        tenant: &str,
+    ) -> &'a mut ServeStats {
+        map.entry(tenant.to_string()).or_default()
+    }
+}
+
+/// Handle to one submitted request; resolves to the feature vector or
+/// the error that ended it.
+pub struct Ticket {
+    rx: Receiver<Resolution>,
+}
+
+impl Ticket {
+    /// Block until the request resolves.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.wait_timed().1
+    }
+
+    /// Block until the request resolves; also return the instant the
+    /// worker resolved it, so a load harness joining tickets after the
+    /// fact still measures true completion-time latency.
+    pub fn wait_timed(self) -> (Instant, Result<Vec<f32>>) {
+        self.rx.recv().unwrap_or_else(|_| {
+            (
+                Instant::now(),
+                Err(Error::Other("serving worker dropped the request".into())),
+            )
+        })
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>>> {
+        self.rx.try_recv().ok().map(|(_, r)| r)
+    }
+}
+
+/// The in-process feature-serving engine. See the module docs for the
+/// request lifecycle; construction spins up the worker pool, [`Drop`]
+/// (or [`Service::shutdown`]) drains the queue and joins it.
+pub struct Service {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Build a service on `device` answering every request against the
+    /// fixed angle set `thetas` (the angle table uploads once per worker
+    /// pipeline and stays device-resident).
+    pub fn new(device: DeviceChoice, thetas: &[f32], config: ServeConfig) -> Result<Service> {
+        if thetas.is_empty() {
+            return Err(Error::Other("serving needs a non-empty angle set".into()));
+        }
+        let config = ServeConfig {
+            max_batch: config.max_batch.max(1),
+            queue_capacity: config.queue_capacity.max(1),
+            workers: config.workers.max(1),
+            ..config
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            stats: Mutex::new(HashMap::new()),
+            config: config.clone(),
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(config.workers);
+        for _ in 0..config.workers {
+            let shared = shared.clone();
+            let thetas = thetas.to_vec();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(shared, device, thetas, ready)
+            }));
+        }
+        drop(ready_tx);
+        let mut service = Service { shared, workers };
+        for _ in 0..service.workers.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    service.stop_and_join();
+                    return Err(e);
+                }
+                Err(_) => {
+                    service.stop_and_join();
+                    return Err(Error::Other("serving worker died during startup".into()));
+                }
+            }
+        }
+        Ok(service)
+    }
+
+    /// Submit with the config's default deadline budget.
+    pub fn submit(&self, tenant: &str, image: Image) -> Result<Ticket> {
+        self.submit_with_deadline(tenant, image, self.shared.config.default_deadline_us)
+    }
+
+    /// Submit with an explicit deadline budget (µs from now). Sheds the
+    /// request instead of queueing when the budget is already zero or
+    /// the admission queue is full.
+    pub fn submit_with_deadline(
+        &self,
+        tenant: &str,
+        image: Image,
+        budget_us: u64,
+    ) -> Result<Ticket> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Other("service is shut down".into()));
+        }
+        if budget_us == 0 {
+            let mut stats = self.shared.stats.lock().unwrap();
+            Shared::stat(&mut stats, tenant).rejected += 1;
+            return Err(Error::DeadlineExceeded { waited_us: 0, budget_us: 0 });
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        let capacity = self.shared.config.queue_capacity;
+        if q.len() >= capacity {
+            let depth = q.len();
+            drop(q);
+            let mut stats = self.shared.stats.lock().unwrap();
+            Shared::stat(&mut stats, tenant).rejected += 1;
+            return Err(Error::Overloaded { depth, capacity });
+        }
+        let (tx, rx) = mpsc::channel();
+        q.push_back(PendingReq {
+            tenant: tenant.to_string(),
+            image,
+            enqueued: Instant::now(),
+            budget: Duration::from_micros(budget_us),
+            tx,
+        });
+        drop(q);
+        let mut stats = self.shared.stats.lock().unwrap();
+        Shared::stat(&mut stats, tenant).admitted += 1;
+        drop(stats);
+        self.shared.work.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Current admission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// One tenant's counters (zeroes for an unknown tenant).
+    pub fn stats(&self, tenant: &str) -> ServeStats {
+        self.shared
+            .stats
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Every tenant's counters.
+    pub fn all_stats(&self) -> HashMap<String, ServeStats> {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Counters summed across tenants.
+    pub fn stats_total(&self) -> ServeStats {
+        let mut total = ServeStats::default();
+        for s in self.shared.stats.lock().unwrap().values() {
+            total.merge(s);
+        }
+        total
+    }
+
+    /// The (normalized) configuration this service runs with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.shared.config
+    }
+
+    /// Stop admitting, drain the queue (queued requests still get
+    /// batched and served), and join the workers.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    device: DeviceChoice,
+    thetas: Vec<f32>,
+    ready: Sender<Result<()>>,
+) {
+    let mut engine = match GpuAuto::on_device(device) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Some(batch) = next_batch(&shared) {
+        run_batch(&shared, &mut engine, &thetas, batch);
+    }
+}
+
+/// Block until a size group is ready to flush, then extract it from the
+/// queue (FIFO within the group, other sizes left in place). `None` only
+/// on shutdown with an empty queue — shutdown flushes every group, so
+/// queued work drains before the workers exit.
+fn next_batch(shared: &Shared) -> Option<Vec<PendingReq>> {
+    let max_batch = shared.config.max_batch;
+    let delay = Duration::from_micros(shared.config.max_delay_us);
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        let down = shared.shutdown.load(Ordering::SeqCst);
+        if q.is_empty() {
+            if down {
+                return None;
+            }
+            // Bounded wait so a shutdown raced against this sleep is
+            // noticed without a wakeup.
+            let (guard, _) = shared
+                .work
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+            continue;
+        }
+        // Group the queue by image size: per group the oldest entry (the
+        // first seen — the queue is FIFO) decides the flush deadline.
+        let now = Instant::now();
+        let mut groups: Vec<(usize, Instant, usize)> = Vec::new(); // (size, oldest, count)
+        for p in q.iter() {
+            let size = p.image.size();
+            match groups.iter_mut().find(|g| g.0 == size) {
+                Some(g) => g.2 += 1,
+                None => groups.push((size, p.enqueued, 1)),
+            }
+        }
+        let ready = groups
+            .iter()
+            .filter(|&&(_, oldest, count)| down || count >= max_batch || oldest + delay <= now)
+            .min_by_key(|&&(_, oldest, _)| oldest);
+        if let Some(&(size, _, _)) = ready {
+            let mut batch = Vec::with_capacity(max_batch);
+            let mut i = 0;
+            while i < q.len() && batch.len() < max_batch {
+                if q[i].image.size() == size {
+                    batch.push(q.remove(i).expect("index in bounds"));
+                } else {
+                    i += 1;
+                }
+            }
+            if !q.is_empty() {
+                // Another group may already be ready — hand it to a peer.
+                shared.work.notify_one();
+            }
+            return Some(batch);
+        }
+        // Nothing ready: sleep until the earliest group flushes by age,
+        // or a submission/shutdown wakes us.
+        let next_flush = groups
+            .iter()
+            .map(|&(_, oldest, _)| oldest + delay)
+            .min()
+            .expect("non-empty queue has groups");
+        let (guard, _) = shared
+            .work
+            .wait_timeout(q, next_flush.saturating_duration_since(now))
+            .unwrap();
+        q = guard;
+    }
+}
+
+/// Drop expired requests, run the survivors through the pipeline, and
+/// resolve every ticket.
+fn run_batch(shared: &Shared, engine: &mut GpuAuto, thetas: &[f32], batch: Vec<PendingReq>) {
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for p in batch {
+        let waited = now.saturating_duration_since(p.enqueued);
+        if waited > p.budget {
+            let mut stats = shared.stats.lock().unwrap();
+            Shared::stat(&mut stats, &p.tenant).expired += 1;
+            drop(stats);
+            let _ = p.tx.send((
+                Instant::now(),
+                Err(Error::DeadlineExceeded {
+                    waited_us: waited.as_micros() as u64,
+                    budget_us: p.budget.as_micros() as u64,
+                }),
+            ));
+        } else {
+            live.push(p);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let images: Vec<Image> = live.iter().map(|p| p.image.clone()).collect();
+    match engine.features_batch(&images, thetas) {
+        Ok(results) => {
+            let n = live.len();
+            let done = Instant::now();
+            let mut stats = shared.stats.lock().unwrap();
+            for (p, feats) in live.into_iter().zip(results) {
+                let s = Shared::stat(&mut stats, &p.tenant);
+                s.served += 1;
+                s.batches.record(n);
+                let _ = p.tx.send((done, Ok(feats)));
+            }
+        }
+        Err(e) => {
+            // `Error` is not `Clone`; every rider gets the failure text.
+            let msg = format!("serving batch failed: {e}");
+            let done = Instant::now();
+            let mut stats = shared.stats.lock().unwrap();
+            for p in live {
+                Shared::stat(&mut stats, &p.tenant).failed += 1;
+                let _ = p.tx.send((done, Err(Error::Stream(msg.clone()))));
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-tenant serving counters and the batch-size histogram.
+//!
+//! Every counter is updated under the service's stats lock and read back
+//! by value ([`ServeStats`] is `Clone`), so callers never hold a lock
+//! into the serving hot path.
+
+/// Histogram of formed-batch sizes, power-of-two buckets. A request's
+/// bucket is the size of the batch it was *served in*, recorded once per
+/// request — so per-tenant totals line up with the `served` counter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchHistogram {
+    buckets: [u64; 7],
+}
+
+impl BatchHistogram {
+    /// Bucket labels, index-aligned with [`BatchHistogram::counts`].
+    pub const LABELS: [&'static str; 7] = ["1", "2-3", "4-7", "8-15", "16-31", "32-63", "64+"];
+
+    fn bucket(n: usize) -> usize {
+        let n = n.max(1);
+        ((usize::BITS - 1 - n.leading_zeros()) as usize).min(6)
+    }
+
+    /// Record one request served in a batch of `n` images.
+    pub fn record(&mut self, n: usize) {
+        self.buckets[Self::bucket(n)] += 1;
+    }
+
+    /// Per-bucket request counts (see [`BatchHistogram::LABELS`]).
+    pub fn counts(&self) -> [u64; 7] {
+        self.buckets
+    }
+
+    /// Total requests recorded.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+}
+
+/// One tenant's admission/serving counters.
+///
+/// The lifecycle is: every request ends in exactly one of `served`,
+/// `rejected` (shed at admission: [`crate::Error::Overloaded`], or a
+/// zero budget at admission), `expired` (deadline ran out while queued)
+/// or `failed` (the batch it rode in errored) — and `admitted` counts
+/// the ones that made it past admission into the queue.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests accepted into the admission queue.
+    pub admitted: u64,
+    /// Requests completed with features delivered.
+    pub served: u64,
+    /// Requests shed at admission (queue full, or zero deadline budget).
+    pub rejected: u64,
+    /// Admitted requests dropped before launch: the deadline budget ran
+    /// out while they waited in the queue.
+    pub expired: u64,
+    /// Admitted requests whose batch failed in the pipeline.
+    pub failed: u64,
+    /// Sizes of the batches this tenant's served requests rode in.
+    pub batches: BatchHistogram,
+}
+
+impl ServeStats {
+    /// Accumulate another tenant's counters into this one (used for the
+    /// service-wide totals).
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.admitted += other.admitted;
+        self.served += other.served;
+        self.rejected += other.rejected;
+        self.expired += other.expired;
+        self.failed += other.failed;
+        for (b, o) in self.batches.buckets.iter_mut().zip(other.batches.buckets) {
+            *b += o;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_power_of_two_ranges() {
+        let mut h = BatchHistogram::default();
+        for n in [1, 2, 3, 4, 7, 8, 15, 16, 31, 32, 63, 64, 1000] {
+            h.record(n);
+        }
+        assert_eq!(h.counts(), [1, 2, 2, 2, 2, 2, 2]);
+        assert_eq!(h.total(), 13);
+        assert_eq!(BatchHistogram::LABELS.len(), h.counts().len());
+    }
+
+    #[test]
+    fn stats_default_to_zero() {
+        let s = ServeStats::default();
+        assert_eq!(s.admitted + s.served + s.rejected + s.expired + s.failed, 0);
+        assert_eq!(s.batches.total(), 0);
+    }
+}

@@ -8,9 +8,16 @@
 //! angle table and the image/sinogram buffers are device-resident
 //! (`arg::cu_dev` / `cu_dev_mut`), the `batched_sinogram` kernel is a
 //! bound [`KernelHandle`] launched with zero cache traffic, and the batch
-//! is split into two chunks whose uploads (on a dedicated upload stream,
+//! is split into two chunks whose uploads (on a leased upload stream,
 //! allocating from its own pool arena) overlap the other chunk's compute
-//! (on a second stream, fenced by events) — the double-buffered pipeline.
+//! (on a second leased stream, fenced by events) — the double-buffered
+//! pipeline. The stream pair is **leased per batch** from a
+//! [`StreamPool`] rather than owned: a batch that fails no longer
+//! poisons the pipeline forever, because the pool quarantines a stream
+//! returned with a sticky error and reclaims it (drain + clear) before
+//! the next batch leases it — the serve layer (`rust/src/serve`,
+//! `docs/serving.md`) relies on this to run many tenants' batches
+//! through one pipeline object.
 //!
 //! Under the default `HLGPU_REDUCE=device` placement the P/F stage runs
 //! on the device too: `sinogram_all → circus_all → features_all` chain
@@ -23,10 +30,11 @@
 use std::collections::HashMap;
 
 use crate::coordinator::{
-    arg, DeviceArray, KernelHandle, KernelRegistry, Launcher, PendingDownload,
+    arg, checked_cfg, checked_cfg2, DeviceArray, KernelHandle, KernelRegistry, Launcher,
+    PendingDownload,
 };
-use crate::driver::{BackendKind, Context, Event, LaunchConfig, Stream};
-use crate::error::Result;
+use crate::driver::{BackendKind, Context, Event, LaunchConfig, StreamPool};
+use crate::error::{Error, Result};
 use crate::tensor::{Dtype, Tensor};
 use crate::tracetransform::functionals::{reduce_sinogram, FEATURE_COUNT, P_SET, T_SET};
 use crate::tracetransform::image::Image;
@@ -74,6 +82,53 @@ struct ReduceBufs {
     feats: DeviceArray,
 }
 
+type PipeKey = (usize, usize, usize, usize, bool);
+
+/// Internal-state error for the warm path: a cache entry the preceding
+/// code should have populated came back empty. Surfaced as an error so a
+/// desynced cache fails the one call instead of panicking mid-serve.
+fn state_desync(what: &str) -> Error {
+    Error::InvalidLaunch(format!(
+        "batched-pipeline state desynced: {what} missing for this call's shape"
+    ))
+}
+
+/// Warm-path lookup of a double-buffer pipe; `Err`, not panic, on a
+/// cache/shape mismatch.
+fn pipe_entry<'m>(
+    pipes: &'m mut HashMap<PipeKey, ChunkPipe>,
+    key: &PipeKey,
+) -> Result<&'m mut ChunkPipe> {
+    pipes
+        .get_mut(key)
+        .ok_or_else(|| state_desync(&format!("double-buffer pipe {key:?}")))
+}
+
+/// Read-only flavor of [`pipe_entry`] for the join stage.
+fn pipe_view<'m>(pipes: &'m HashMap<PipeKey, ChunkPipe>, key: &PipeKey) -> Result<&'m ChunkPipe> {
+    pipes
+        .get(key)
+        .ok_or_else(|| state_desync(&format!("double-buffer pipe {key:?}")))
+}
+
+/// The device-resident angle table, or an error when it was never
+/// uploaded (or was invalidated) for this call.
+fn angle_entry(angles: &Option<(Vec<u32>, DeviceArray)>) -> Result<&DeviceArray> {
+    angles
+        .as_ref()
+        .map(|(_, arr)| arr)
+        .ok_or_else(|| state_desync("device-resident angle table"))
+}
+
+/// Warm-path lookup of the single-image device-reduce buffers.
+fn reduce_entry<'m>(
+    bufs: &'m mut HashMap<(usize, usize), ReduceBufs>,
+    key: (usize, usize),
+) -> Result<&'m mut ReduceBufs> {
+    bufs.get_mut(&key)
+        .ok_or_else(|| state_desync(&format!("device-reduce buffers for (s,a)={key:?}")))
+}
+
 pub struct GpuAuto {
     launcher: Launcher,
     mode: AutoMode,
@@ -87,8 +142,11 @@ pub struct GpuAuto {
     pipes: HashMap<(usize, usize, usize, usize, bool), ChunkPipe>,
     /// Single-image device-reduce buffers, keyed by (size, angles).
     reduce_bufs: HashMap<(usize, usize), ReduceBufs>,
-    upload_stream: Option<Stream>,
-    compute_stream: Option<Stream>,
+    /// Pool the batched path leases its (upload, compute) stream pair
+    /// from, built on first use. Leasing instead of owning means a
+    /// failed batch's sticky stream error is quarantined and reclaimed
+    /// at lease return, never carried into the next batch.
+    streams: Option<StreamPool>,
 }
 
 impl GpuAuto {
@@ -111,8 +169,7 @@ impl GpuAuto {
             angles_dev: None,
             pipes: HashMap::new(),
             reduce_bufs: HashMap::new(),
-            upload_stream: None,
-            compute_stream: None,
+            streams: None,
         })
     }
 
@@ -131,8 +188,7 @@ impl GpuAuto {
             angles_dev: None,
             pipes: HashMap::new(),
             reduce_bufs: HashMap::new(),
-            upload_stream: None,
-            compute_stream: None,
+            streams: None,
         })
     }
 
@@ -142,6 +198,12 @@ impl GpuAuto {
 
     pub fn launcher_mut(&mut self) -> &mut Launcher {
         &mut self.launcher
+    }
+
+    /// The batched path's stream pool, once a batch has built it — the
+    /// serve layer and benches read its lease/quarantine counters.
+    pub fn stream_pool(&self) -> Option<&StreamPool> {
+        self.streams.as_ref()
     }
 
     /// True when this call's P/F stage runs on the device: the default
@@ -195,7 +257,7 @@ impl TraceImpl for GpuAuto {
                     Tensor::zeros_f32(&[crate::tracetransform::functionals::FEATURE_COUNT]);
                 self.launcher.launch(
                     "trace_full",
-                    LaunchConfig::new(a as u32, s as u32),
+                    checked_cfg("trace_full", a, s)?,
                     &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut out)],
                 )?;
                 Ok(out.to_vec_f32())
@@ -216,10 +278,10 @@ impl TraceImpl for GpuAuto {
                         },
                     );
                 }
-                let bufs = self.reduce_bufs.get_mut(&(s, a)).unwrap();
+                let bufs = reduce_entry(&mut self.reduce_bufs, (s, a))?;
                 self.launcher.launch(
                     "sinogram_all",
-                    LaunchConfig::new(a as u32, s as u32),
+                    checked_cfg("sinogram_all", a, s)?,
                     &mut [
                         arg::cu_in(&img_t),
                         arg::cu_in(&angles_t),
@@ -228,12 +290,12 @@ impl TraceImpl for GpuAuto {
                 )?;
                 self.launcher.launch(
                     "circus_all",
-                    LaunchConfig::new(a as u32, s as u32),
+                    checked_cfg("circus_all", a, s)?,
                     &mut [arg::cu_dev(&bufs.sinos), arg::cu_dev_mut(&mut bufs.circus)],
                 )?;
                 self.launcher.launch(
                     "features_all",
-                    LaunchConfig::new(np as u32, a as u32),
+                    checked_cfg("features_all", np, a)?,
                     &mut [arg::cu_dev(&bufs.circus), arg::cu_dev_mut(&mut bufs.feats)],
                 )?;
                 Ok(bufs.feats.download()?.to_vec_f32())
@@ -243,7 +305,7 @@ impl TraceImpl for GpuAuto {
                 let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
                 self.launcher.launch(
                     "sinogram_all",
-                    LaunchConfig::new(a as u32, s as u32),
+                    checked_cfg("sinogram_all", a, s)?,
                     &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut sinos)],
                 )?;
                 let all = sinos.as_f32();
@@ -261,7 +323,7 @@ impl TraceImpl for GpuAuto {
                 for t in T_SET {
                     self.launcher.launch(
                         &format!("sinogram_{}", t.name()),
-                        LaunchConfig::new(a as u32, s as u32),
+                        checked_cfg(&format!("sinogram_{}", t.name()), a, s)?,
                         &mut [
                             arg::cu_in(&img_t),
                             arg::cu_in(&angles_t),
@@ -303,11 +365,17 @@ impl TraceImpl for GpuAuto {
         let dev_reduce = self.device_reduce();
 
         let ctx = self.launcher.context().clone();
-        if self.upload_stream.is_none() {
-            self.upload_stream = Some(ctx.create_stream()?);
-            self.compute_stream = Some(ctx.create_stream()?);
-        }
         self.angle_table(thetas)?;
+
+        // Lease this batch's (upload, compute) stream pair. The pool is
+        // built lazily with capacity 2, so warm batches lease the same
+        // two streams (and their pool arenas) every time; the leases
+        // return when this call ends — through the pool's
+        // quarantine-then-reclaim path if the batch left a sticky error
+        // behind, so one failed batch cannot poison the next.
+        let streams = self.streams.get_or_insert_with(|| StreamPool::new(2));
+        let upload = streams.checkout();
+        let compute = streams.checkout();
 
         // Two chunks double-buffer: chunk 1's upload overlaps chunk 0's
         // compute. A singleton batch degenerates to one chunk.
@@ -327,12 +395,12 @@ impl TraceImpl for GpuAuto {
             let len = hi - lo;
             let key = (len, s, a, slot, dev_reduce);
             if !self.pipes.contains_key(&key) {
-                let up_arena = self.upload_stream.as_ref().unwrap().arena_id();
-                let co_arena = self.compute_stream.as_ref().unwrap().arena_id();
+                let up_arena = upload.arena_id();
+                let co_arena = compute.arena_id();
                 let imgs_dev = DeviceArray::alloc_in(&ctx, up_arena, Dtype::F32, &[len, s, s])?;
                 let mut sinos_dev =
                     DeviceArray::alloc_in(&ctx, co_arena, Dtype::F32, &[len, nt, a, s])?;
-                let (_, angles_dev) = self.angles_dev.as_ref().unwrap();
+                let angles_dev = angle_entry(&self.angles_dev)?;
                 let handle = self.launcher.bind(
                     "batched_sinogram",
                     &[
@@ -372,14 +440,12 @@ impl TraceImpl for GpuAuto {
         // readback, all stream-ordered; the sinograms never cross to the
         // host.
         let mem = ctx.memory_arc()?;
-        let upload = self.upload_stream.as_ref().unwrap();
-        let compute = self.compute_stream.as_ref().unwrap();
         let cfg = LaunchConfig::new(1u32, 1u32); // VTX providers pick their own grids
         let mut sino_pendings = Vec::new();
         let mut feat_pendings: Vec<(usize, usize, PendingDownload<'_>)> = Vec::new();
         for (slot, &(lo, hi)) in bounds.iter().enumerate() {
             let len = hi - lo;
-            let pipe = self.pipes.get_mut(&(len, s, a, slot, dev_reduce)).unwrap();
+            let pipe = pipe_entry(&mut self.pipes, &(len, s, a, slot, dev_reduce))?;
             let mut bytes = Vec::with_capacity(len * s * s * 4);
             for img in &imgs[lo..hi] {
                 for v in img.pixels() {
@@ -390,10 +456,10 @@ impl TraceImpl for GpuAuto {
             let uploaded = Event::new();
             upload.record_event(&uploaded)?;
             compute.wait_event(&uploaded)?;
-            let (_, angles_dev) = self.angles_dev.as_ref().unwrap();
+            let angles_dev = angle_entry(&self.angles_dev)?;
             let pending = pipe.handle.launch_on(
-                compute,
-                LaunchConfig::new((a as u32, len as u32), s as u32),
+                &compute,
+                checked_cfg2("batched_sinogram", (a, len), s)?,
                 &mut [
                     arg::cu_dev(&pipe.imgs),
                     arg::cu_dev(angles_dev),
@@ -405,16 +471,16 @@ impl TraceImpl for GpuAuto {
                     // Same stream: the chain is ordered after the
                     // sinogram kernel without host synchronization.
                     rs.circus_handle.launch_on(
-                        compute,
+                        &compute,
                         cfg,
                         &mut [arg::cu_dev(&pipe.sinos), arg::cu_dev_mut(&mut rs.circus)],
                     )?;
                     rs.features_handle.launch_on(
-                        compute,
+                        &compute,
                         cfg,
                         &mut [arg::cu_dev(&rs.circus), arg::cu_dev_mut(&mut rs.feats)],
                     )?;
-                    let pd = rs.features_handle.download_on(compute, &rs.feats)?;
+                    let pd = rs.features_handle.download_on(&compute, &rs.feats)?;
                     feat_pendings.push((lo, hi, pd));
                 }
                 None => sino_pendings.push((slot, lo, hi, pending)),
@@ -440,7 +506,7 @@ impl TraceImpl for GpuAuto {
         for (slot, lo, hi, pending) in sino_pendings {
             pending.wait()?;
             let len = hi - lo;
-            let pipe = self.pipes.get(&(len, s, a, slot, dev_reduce)).unwrap();
+            let pipe = pipe_view(&self.pipes, &(len, s, a, slot, dev_reduce))?;
             let sinos_host = pipe.sinos.download()?;
             let all = sinos_host.as_f32();
             for (i, feats_slot) in out[lo..hi].iter_mut().enumerate() {
@@ -568,6 +634,67 @@ mod tests {
         for (i, (h, d)) in host.iter().zip(&dev).enumerate() {
             assert!((h - d).abs() < 1e-4 * h.abs().max(1.0), "feature {i}: {h} vs {d}");
         }
+    }
+
+    /// Satellite regression (PR-6): the warm-path cache lookups return a
+    /// typed error on desynced internal state instead of panicking — a
+    /// `features_batch` call that hits a missing pipe/angle-table/reduce
+    /// buffer fails that one call, not the process.
+    #[test]
+    fn desynced_pipe_cache_errors_instead_of_panicking() {
+        let mut pipes: HashMap<PipeKey, ChunkPipe> = HashMap::new();
+        let err = pipe_entry(&mut pipes, &(2, 10, 5, 0, true)).unwrap_err();
+        assert!(matches!(err, Error::InvalidLaunch(_)), "got {err}");
+        assert!(err.to_string().contains("state desynced"), "{err}");
+        let err = pipe_view(&pipes, &(2, 10, 5, 0, true)).unwrap_err();
+        assert!(matches!(err, Error::InvalidLaunch(_)), "got {err}");
+        let err = angle_entry(&None).unwrap_err();
+        assert!(err.to_string().contains("angle table"), "{err}");
+        let mut bufs: HashMap<(usize, usize), ReduceBufs> = HashMap::new();
+        let err = reduce_entry(&mut bufs, (10, 5)).unwrap_err();
+        assert!(matches!(err, Error::InvalidLaunch(_)), "got {err}");
+    }
+
+    /// Clearing every piece of cached pipeline state mid-life and
+    /// rerunning rebuilds it and produces bitwise-identical features —
+    /// the desync error above is about *partial* loss, full rebuild is
+    /// always safe.
+    #[test]
+    fn pipe_cache_rebuild_after_clear_keeps_results_identical() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let thetas = orientations(6);
+        let imgs: Vec<_> = (0..3)
+            .map(|i| crate::tracetransform::image::random_phantom(11, 70 + i as u64))
+            .collect();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let before = m.features_batch(&imgs, &thetas).unwrap();
+        m.pipes.clear();
+        m.angles_dev = None;
+        m.reduce_bufs.clear();
+        let after = m.features_batch(&imgs, &thetas).unwrap();
+        assert_eq!(before, after, "rebuilt pipeline is bitwise-identical");
+    }
+
+    /// The batched path leases its stream pair from a pool instead of
+    /// owning streams: two warm batches lease the same two streams (so
+    /// their pool arenas — and the warm-path zero-alloc invariant — are
+    /// stable) and return them clean.
+    #[test]
+    fn batched_pipeline_pools_its_streams() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let thetas = orientations(5);
+        let imgs: Vec<_> = (0..4)
+            .map(|i| crate::tracetransform::image::random_phantom(10, 50 + i as u64))
+            .collect();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        m.features_batch(&imgs, &thetas).unwrap();
+        m.features_batch(&imgs, &thetas).unwrap();
+        let pool = m.streams.as_ref().expect("pool built on first batch");
+        let st = pool.stats();
+        assert_eq!(st.created, 2, "pool creates exactly the double-buffer pair");
+        assert_eq!(st.leases, 4, "two leases per batch");
+        assert_eq!(st.quarantined, 0, "clean batches quarantine nothing");
+        assert_eq!(pool.idle_count(), 2, "both streams returned after the batch");
     }
 
     #[test]

@@ -6,8 +6,8 @@
 
 use std::collections::HashMap;
 
-use crate::coordinator::DeviceArray;
-use crate::driver::{Context, Function, KernelArg, LaunchConfig, ModuleSource};
+use crate::coordinator::{checked_cfg, checked_cfg2, DeviceArray};
+use crate::driver::{Context, Function, KernelArg, ModuleSource};
 use crate::error::Result;
 use crate::hostlang::DynArray;
 use crate::runtime::ArtifactLibrary;
@@ -177,7 +177,7 @@ impl GpuDynamic {
         let np = P_SET.len();
         let (cf, ff) = self.reduce_functions(s, a)?;
         cf.launch(
-            &LaunchConfig::new((a as u32, rows as u32), s.next_power_of_two() as u32),
+            &checked_cfg2("circus_all", (a, rows), s.next_power_of_two())?,
             &[
                 KernelArg::Ptr(sinos),
                 KernelArg::Ptr(circus),
@@ -186,7 +186,7 @@ impl GpuDynamic {
             self.ctx.memory()?,
         )?;
         ff.launch(
-            &LaunchConfig::new((np as u32, rows as u32), a.next_power_of_two() as u32),
+            &checked_cfg2("features_all", (np, rows), a.next_power_of_two())?,
             &[
                 KernelArg::Ptr(circus),
                 KernelArg::Ptr(feats),
@@ -262,7 +262,7 @@ impl TraceImpl for GpuDynamic {
                 self.ctx.upload(gb, angles_t.bytes())?;
                 let f = self.function(s, a)?;
                 f.launch(
-                    &LaunchConfig::new(a as u32, s as u32),
+                    &checked_cfg("sinogram_all", a, s)?,
                     &[
                         KernelArg::Ptr(ga),
                         KernelArg::Ptr(gb),
@@ -300,7 +300,7 @@ impl TraceImpl for GpuDynamic {
                     KernelArg::I32(s as i32),
                 ],
             };
-            f.launch(&LaunchConfig::new(a as u32, s as u32), &args, self.ctx.memory()?)?;
+            f.launch(&checked_cfg("sinogram_all", a, s)?, &args, self.ctx.memory()?)?;
             let mut sinos_host = Tensor::zeros_f32(&[nt, a, s]);
             self.ctx.download(gc, sinos_host.bytes_mut())?;
             Ok(sinos_host)
@@ -402,7 +402,7 @@ impl TraceImpl for GpuDynamic {
             KernelArg::I32(s as i32),
         ];
         f.launch(
-            &LaunchConfig::new((a as u32, n as u32), s as u32),
+            &checked_cfg2("batched_sinogram", (a, n), s)?,
             &args,
             self.ctx.memory()?,
         )?;

@@ -6,7 +6,8 @@
 
 use std::collections::HashMap;
 
-use crate::driver::{Context, Function, KernelArg, LaunchConfig, ModuleSource};
+use crate::coordinator::{checked_cfg, checked_cfg2};
+use crate::driver::{Context, Function, KernelArg, ModuleSource};
 use crate::error::Result;
 use crate::runtime::ArtifactLibrary;
 use crate::tensor::Tensor;
@@ -135,7 +136,7 @@ impl TraceImpl for GpuManual {
                 self.ctx.upload(gb, angles_t.bytes())?;
                 let f = self.function("sinogram_all", s, a)?;
                 f.launch(
-                    &LaunchConfig::new(a as u32, s as u32),
+                    &checked_cfg("sinogram_all", a, s)?,
                     &[
                         KernelArg::Ptr(ga),
                         KernelArg::Ptr(gb),
@@ -146,13 +147,13 @@ impl TraceImpl for GpuManual {
                 )?;
                 let cf = self.function("circus_all", s, a)?;
                 cf.launch(
-                    &LaunchConfig::new((a as u32, nt as u32), s.next_power_of_two() as u32),
+                    &checked_cfg2("circus_all", (a, nt), s.next_power_of_two())?,
                     &[KernelArg::Ptr(gc), KernelArg::Ptr(gd), KernelArg::I32(s as i32)],
                     self.ctx.memory()?,
                 )?;
                 let ff = self.function("features_all", s, a)?;
                 ff.launch(
-                    &LaunchConfig::new((np as u32, nt as u32), a.next_power_of_two() as u32),
+                    &checked_cfg2("features_all", (np, nt), a.next_power_of_two())?,
                     &[KernelArg::Ptr(gd), KernelArg::Ptr(ge), KernelArg::I32(a as i32)],
                     self.ctx.memory()?,
                 )?;
@@ -183,9 +184,10 @@ impl TraceImpl for GpuManual {
                 // original structure: one kernel launch per T-functional
                 let mut sino = Tensor::zeros_f32(&[a, s]);
                 for t in T_SET {
-                    let f = self.function(&format!("sinogram_{}", t.name()), s, a)?;
+                    let name = format!("sinogram_{}", t.name());
+                    let f = self.function(&name, s, a)?;
                     f.launch(
-                        &LaunchConfig::new(a as u32, s as u32),
+                        &checked_cfg(&name, a, s)?,
                         &scalar_args(self.device),
                         self.ctx.memory()?,
                     )?;
@@ -196,7 +198,7 @@ impl TraceImpl for GpuManual {
                 // optimized: one fused launch computes all |T| sinograms
                 let f = self.function("sinogram_all", s, a)?;
                 f.launch(
-                    &LaunchConfig::new(a as u32, s as u32),
+                    &checked_cfg("sinogram_all", a, s)?,
                     &scalar_args(self.device),
                     self.ctx.memory()?,
                 )?;

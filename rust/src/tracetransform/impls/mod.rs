@@ -207,8 +207,8 @@ pub(crate) fn free3<T>(
 /// Register the VTX providers for every `sinogram_<t>` logical kernel, so
 /// the automation layer can serve the emulator device (the Ocelot path).
 pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistry) {
-    use crate::coordinator::VtxSpec;
-    use crate::driver::{KernelArg, LaunchConfig};
+    use crate::coordinator::{checked_cfg, checked_cfg2, VtxSpec};
+    use crate::driver::KernelArg;
     use crate::error::Error;
 
     for t in crate::tracetransform::functionals::T_SET {
@@ -227,7 +227,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
             Ok(VtxSpec {
                 kernel: crate::emulator::kernels::sinogram(tname)?,
                 scalars: vec![KernelArg::I32(s as i32)],
-                config: LaunchConfig::new(a as u32, s as u32),
+                config: checked_cfg(&format!("sinogram_{tname}"), a, s)?,
             })
         });
     }
@@ -244,7 +244,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
         Ok(VtxSpec {
             kernel: crate::emulator::kernels::sinogram_all()?,
             scalars: vec![KernelArg::I32(s as i32)],
-            config: LaunchConfig::new(a as u32, s as u32),
+            config: checked_cfg("sinogram_all", a, s)?,
         })
     });
     // the batched launch shape: N stacked images, one launch
@@ -262,7 +262,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
         Ok(VtxSpec {
             kernel: crate::emulator::kernels::batched_sinogram()?,
             scalars: vec![KernelArg::I32(s as i32)],
-            config: LaunchConfig::new((a as u32, n as u32), s as u32),
+            config: checked_cfg2("batched_sinogram", (a, n), s)?,
         })
     });
     // the device-side P stage: all |P| circus values per sinogram row
@@ -284,7 +284,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
         Ok(VtxSpec {
             kernel: crate::emulator::kernels::circus_all(block_h)?,
             scalars: vec![KernelArg::I32(s as i32)],
-            config: LaunchConfig::new((a as u32, rows as u32), block_h as u32),
+            config: checked_cfg2("circus_all", (a, rows), block_h)?,
         })
     });
     // the device-side F stage: mean + max over every circus function,
@@ -305,7 +305,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
         Ok(VtxSpec {
             kernel: crate::emulator::kernels::features_all(block_h)?,
             scalars: vec![KernelArg::I32(a as i32)],
-            config: LaunchConfig::new((np as u32, rows as u32), block_h as u32),
+            config: checked_cfg2("features_all", (np, rows), block_h)?,
         })
     });
     // the running example, for completeness
@@ -314,7 +314,7 @@ pub fn register_trace_providers(registry: &mut crate::coordinator::KernelRegistr
         Ok(VtxSpec {
             kernel: crate::emulator::kernels::vadd()?,
             scalars: vec![KernelArg::I32(n as i32)],
-            config: LaunchConfig::new(((n as u32) + 255) / 256, 256u32),
+            config: checked_cfg("vadd", n.div_ceil(256), 256u32)?,
         })
     });
 }

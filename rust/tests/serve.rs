@@ -1,0 +1,244 @@
+//! Serving-engine correctness suite (see `docs/serving.md`).
+//!
+//! Covers the batch former's boundaries (flush-by-count vs
+//! flush-by-deadline, 1-image batches, mixed sizes), deadline handling
+//! (admission rejection and queued expiry), bounded-queue backpressure,
+//! drain-on-shutdown, per-tenant stats, and the observational-identity
+//! guarantee: features served through the engine are bitwise identical
+//! to a direct `features_batch` call on the same images.
+//!
+//! Timing-sensitive tests only ever assert *lower* bounds (a deadline
+//! that has certainly passed, a margin that has certainly not), so a
+//! slow CI machine cannot flake them.
+
+use hlgpu::serve::{ServeConfig, Service};
+use hlgpu::tracetransform::{
+    orientations, random_phantom, DeviceChoice, GpuAuto, TraceImpl, FEATURE_COUNT,
+};
+use hlgpu::Error;
+
+fn service(config: ServeConfig) -> Service {
+    Service::new(DeviceChoice::Emulator, &orientations(5), config).unwrap()
+}
+
+#[test]
+fn single_request_is_served_as_a_batch_of_one() {
+    let svc = service(ServeConfig { max_delay_us: 1_000, ..ServeConfig::default() });
+    let feats = svc.submit("t", random_phantom(10, 1)).unwrap().wait().unwrap();
+    assert_eq!(feats.len(), FEATURE_COUNT);
+    let st = svc.stats("t");
+    assert_eq!((st.admitted, st.served, st.rejected, st.expired), (1, 1, 0, 0));
+    assert_eq!(st.batches.counts()[0], 1, "served in a batch of exactly 1");
+}
+
+#[test]
+fn flush_by_count_forms_full_batches() {
+    // The delay is far beyond the test's lifetime, so the only way these
+    // requests get served is the count trigger.
+    let svc = service(ServeConfig {
+        max_batch: 4,
+        max_delay_us: 30_000_000,
+        workers: 1,
+        ..ServeConfig::default()
+    });
+    let tickets: Vec<_> = (0..4)
+        .map(|i| svc.submit("t", random_phantom(10, 10 + i)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = svc.stats("t");
+    assert_eq!(st.served, 4);
+    assert_eq!(st.batches.counts()[2], 4, "all four rode one 4-image batch");
+}
+
+#[test]
+fn flush_by_deadline_serves_partial_batches() {
+    // max_batch is unreachable; only the age trigger can flush.
+    let svc = service(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 2_000,
+        ..ServeConfig::default()
+    });
+    let tickets: Vec<_> = (0..3)
+        .map(|i| svc.submit("t", random_phantom(10, 20 + i)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = svc.stats("t");
+    assert_eq!(st.served, 3);
+    assert_eq!(st.batches.total(), 3);
+    assert_eq!(st.rejected + st.expired, 0);
+}
+
+#[test]
+fn zero_budget_is_rejected_at_admission() {
+    let svc = service(ServeConfig::default());
+    let err = svc
+        .submit_with_deadline("t", random_phantom(10, 30), 0)
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::DeadlineExceeded { waited_us: 0, budget_us: 0 }),
+        "got {err}"
+    );
+    assert_eq!(err.status(), "ERROR_TIMEOUT");
+    let st = svc.stats("t");
+    assert_eq!((st.admitted, st.rejected), (0, 1));
+}
+
+#[test]
+fn queued_requests_expire_before_launch() {
+    // The formed batch flushes by age after 30 ms; the 1 ms-budget
+    // request has certainly expired by then, the generous one has not.
+    // The expiry drop must not take the rest of the batch down with it.
+    let svc = service(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 30_000,
+        workers: 1,
+        ..ServeConfig::default()
+    });
+    let doomed = svc
+        .submit_with_deadline("t", random_phantom(10, 40), 1_000)
+        .unwrap();
+    let alive = svc
+        .submit_with_deadline("t", random_phantom(10, 41), 30_000_000)
+        .unwrap();
+    let err = doomed.wait().unwrap_err();
+    match err {
+        Error::DeadlineExceeded { waited_us, budget_us } => {
+            assert_eq!(budget_us, 1_000);
+            assert!(waited_us > budget_us, "waited {waited_us} <= budget {budget_us}");
+        }
+        other => panic!("expected DeadlineExceeded, got {other}"),
+    }
+    alive.wait().unwrap();
+    let st = svc.stats("t");
+    assert_eq!((st.admitted, st.served, st.expired), (2, 1, 1));
+}
+
+#[test]
+fn overload_sheds_and_bounds_the_queue() {
+    // One worker held off by a 200 ms age trigger: the first four
+    // submissions certainly fill the queue before any batch forms.
+    let svc = service(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 200_000,
+        queue_capacity: 4,
+        workers: 1,
+        ..ServeConfig::default()
+    });
+    let tickets: Vec<_> = (0..4)
+        .map(|i| svc.submit("t", random_phantom(10, 50 + i)).unwrap())
+        .collect();
+    let err = svc.submit("t", random_phantom(10, 54)).unwrap_err();
+    assert!(
+        matches!(err, Error::Overloaded { depth: 4, capacity: 4 }),
+        "got {err}"
+    );
+    assert_eq!(err.status(), "ERROR_OUT_OF_RESOURCES");
+    assert!(svc.queue_depth() <= 4, "queue stayed bounded");
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = svc.stats("t");
+    assert_eq!((st.admitted, st.served, st.rejected), (4, 4, 1));
+}
+
+#[test]
+fn mixed_sizes_form_separate_batches_without_blocking() {
+    // Two interleaved size classes, each flushing on a count of 2; the
+    // age trigger is unreachable, so serving proves the former split
+    // them into per-size batches (a mixed batch would fall back to the
+    // sequential path and still serve, but the histogram would show
+    // batches of 4).
+    let svc = service(ServeConfig {
+        max_batch: 2,
+        max_delay_us: 30_000_000,
+        ..ServeConfig::default()
+    });
+    let mut tickets = Vec::new();
+    for i in 0..2u64 {
+        tickets.push(svc.submit("t", random_phantom(10, 60 + i)).unwrap());
+        tickets.push(svc.submit("t", random_phantom(12, 60 + i)).unwrap());
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = svc.stats("t");
+    assert_eq!(st.served, 4);
+    assert_eq!(st.batches.counts()[1], 4, "two 2-image batches, one per size");
+}
+
+#[test]
+fn service_results_match_direct_batch_bitwise() {
+    // The emulator is deterministic: the same images through the same
+    // batched pipeline must produce bit-identical features whether
+    // driven directly or through the serving engine.
+    let thetas = orientations(5);
+    let imgs: Vec<_> = (0..4).map(|i| random_phantom(12, 70 + i)).collect();
+    let mut direct = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    let want = direct.features_batch(&imgs, &thetas).unwrap();
+    let svc = Service::new(
+        DeviceChoice::Emulator,
+        &thetas,
+        ServeConfig {
+            max_batch: imgs.len(),
+            max_delay_us: 30_000_000,
+            workers: 1,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let tickets: Vec<_> = imgs
+        .iter()
+        .map(|img| svc.submit("t", img.clone()).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(t.wait().unwrap(), want[i], "image {i} diverged");
+    }
+}
+
+#[test]
+fn shutdown_drains_queued_work() {
+    // Requests sitting on a long age trigger still get served when the
+    // service shuts down: shutdown flushes every group before exit.
+    let svc = service(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 30_000_000,
+        workers: 1,
+        ..ServeConfig::default()
+    });
+    let tickets: Vec<_> = (0..3)
+        .map(|i| svc.submit("t", random_phantom(10, 80 + i)).unwrap())
+        .collect();
+    svc.shutdown();
+    for t in tickets {
+        let feats = t.wait().unwrap();
+        assert_eq!(feats.len(), FEATURE_COUNT);
+    }
+}
+
+#[test]
+fn tenants_get_separate_stats() {
+    let svc = service(ServeConfig { max_delay_us: 1_000, ..ServeConfig::default() });
+    let mut tickets = Vec::new();
+    for i in 0..2u64 {
+        tickets.push(svc.submit("alice", random_phantom(10, 90 + i)).unwrap());
+    }
+    for i in 0..3u64 {
+        tickets.push(svc.submit("bob", random_phantom(10, 95 + i)).unwrap());
+    }
+    let _ = svc.submit_with_deadline("bob", random_phantom(10, 99), 0);
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(svc.stats("alice").served, 2);
+    assert_eq!(svc.stats("bob").served, 3);
+    assert_eq!(svc.stats("bob").rejected, 1);
+    assert_eq!(svc.stats("nobody"), Default::default());
+    let total = svc.stats_total();
+    assert_eq!((total.admitted, total.served, total.rejected), (5, 5, 1));
+    assert_eq!(total.batches.total(), 5);
+    assert_eq!(svc.all_stats().len(), 2);
+}
