@@ -22,7 +22,11 @@
 //! wall clock both drop — the device-resident angle table uploads once),
 //! and (c) the host vs device P/F reduction stage (`HLGPU_REDUCE`):
 //! bytes downloaded per image collapse from `|T|·a·s` floats to the
-//! `FEATURE_COUNT`-float block.
+//! `FEATURE_COUNT`-float block, and (d) the single-device pipeline vs
+//! the same batch **sharded across a 2-/4-member `DeviceSet`**
+//! (`HLGPU_SHARD=auto`): images/s, scaling efficiency, per-member
+//! placement and the shard imbalance ratio (results stay bitwise
+//! identical to the 1-device baseline).
 //!
 //! Part 4 (needs `make artifacts`): the §6 claim that the automation
 //! layer adds **no run-time overhead** over manual driver calls once the
@@ -429,6 +433,98 @@ fn reduce_stage_section(settings: Settings) {
     );
 }
 
+/// Launch API v2 section D: the single-device two-stream pipeline vs the
+/// same batch sharded across 2- and 4-member `DeviceSet`s (the
+/// `HLGPU_SHARD=auto` path in `gpu_auto::features_batch`). Every run is
+/// checked bitwise against the 1-device baseline; the table reports
+/// images/s, the speedup over one device, scaling efficiency
+/// (speedup / device count) and the shard imbalance ratio, plus the
+/// per-member image placement underneath.
+fn multi_device_section(settings: Settings) {
+    use hlgpu::driver::DeviceSet;
+    use hlgpu::tracetransform::{DeviceChoice, GpuAuto, ShardMode, TraceImpl};
+    let size = env_usize("LO_SIZE", 96);
+    let angles = env_usize("LO_ANGLES", 64);
+    let batch = env_usize("LO_BATCH", 8);
+    let thetas = orientations(angles);
+    let imgs: Vec<_> = (0..batch).map(|i| random_phantom(size, 170 + i as u64)).collect();
+
+    let mut table = Table::new(&[
+        "devices",
+        "time/batch",
+        "images/s",
+        "speedup",
+        "efficiency",
+        "imbalance",
+    ]);
+    let mut placements: Vec<String> = Vec::new();
+    let mut base_mean = 0.0f64;
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for k in [1usize, 2, 4] {
+        let (mut auto, set) = if k == 1 {
+            let a = GpuAuto::on_device(DeviceChoice::Emulator)
+                .unwrap()
+                .with_shard(Some(ShardMode::Off));
+            (a, None)
+        } else {
+            let set = DeviceSet::emulator(k).unwrap();
+            let a = GpuAuto::on_set(set.clone()).unwrap().with_shard(Some(ShardMode::Auto));
+            (a, Some(set))
+        };
+        // warm every lane's pipes + handles, and hold sharding to the
+        // acceptance bar: bitwise identity with the 1-device result
+        let got = auto.features_batch(&imgs, &thetas).unwrap();
+        if k == 1 {
+            want = got;
+        } else {
+            assert_eq!(got, want, "{k}-device shard diverged from single-device");
+        }
+        let summary = measure(settings, || {
+            auto.features_batch(&imgs, &thetas).unwrap();
+        });
+        let images_per_s = batch as f64 / summary.mean;
+        let (speedup, eff) = if k == 1 {
+            base_mean = summary.mean;
+            ("1.00x".to_string(), "100%".to_string())
+        } else {
+            (
+                fmt_speedup(base_mean, summary.mean),
+                format!("{:.0}%", base_mean / summary.mean / k as f64 * 100.0),
+            )
+        };
+        let imbalance = match &set {
+            Some(s) => format!("{:.2}", s.imbalance()),
+            None => "-".into(),
+        };
+        table.row(&[
+            if k == 1 { "1 (two-stream baseline)".into() } else { format!("{k} (sharded)") },
+            fmt_summary(&summary),
+            format!("{images_per_s:.1}"),
+            speedup,
+            eff,
+            imbalance,
+        ]);
+        if let Some(s) = set {
+            let per: Vec<String> = s
+                .stats()
+                .iter()
+                .map(|m| format!("dev{} {} imgs", m.ordinal, m.images))
+                .collect();
+            placements.push(format!("{k} devices: {}", per.join(", ")));
+        }
+    }
+
+    println!(
+        "\nLaunch API v2 — 1 vs N-device sharded features_batch ({batch} images of {size}x{size}, {angles} angles)"
+    );
+    println!("(HLGPU_DEVICES=N sizes the registry, HLGPU_SHARD=auto|off gates the sharded path)");
+    println!("{}", table.render());
+    for p in &placements {
+        println!("  {p}");
+    }
+    println!("efficiency = speedup / devices; lanes share this machine's cores, so treat it as an upper-bound trend, not a hardware claim");
+}
+
 /// PJRT section: the original §6 manual-vs-automation comparison.
 fn pjrt_overhead_section(settings: Settings, lib: &ArtifactLibrary) {
     let n = env_usize("LO_N", 4096);
@@ -562,6 +658,7 @@ fn main() {
     device_resident_section(settings);
     two_stream_pipeline_section(settings);
     reduce_stage_section(settings);
+    multi_device_section(settings);
 
     match ArtifactLibrary::load_default() {
         Ok(lib) => pjrt_overhead_section(settings, &lib),

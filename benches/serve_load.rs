@@ -16,11 +16,18 @@
 //! batch-size histogram at the end shows what the dynamic former
 //! actually built.
 //!
+//! Every rate then runs a second pass on a 2-member `DeviceSet`
+//! (`Service::on_set`, workers pinned round-robin onto members — see
+//! `docs/devices.md`): the report adds per-member image counts, busy
+//! time and the shard imbalance ratio, plus the 2-device / 1-device
+//! served-throughput ratio (report-only; lanes share this machine's
+//! cores, so the >1.5x multi-device target needs independent hardware).
+//!
 //! Run: `cargo bench --bench serve_load`
 //! Env: SL_RATES (req/s list, default "200,1000,4000"), SL_MS (window
 //! per rate, default 400), SL_DEADLINE_US (per-request budget, default
-//! 100000), SL_SEED, SL_SMOKE=1 (CI smoke: one small rate, short
-//! window).
+//! 100000), SL_SEED, SL_DEVICES (second-pass set size, default 2),
+//! SL_SMOKE=1 (CI smoke: one small rate, short window, both passes).
 
 use std::time::{Duration, Instant};
 
@@ -54,22 +61,36 @@ fn fmt_pct(sorted: &[f64], p: f64) -> String {
 
 struct RateOutcome {
     served: u64,
+    throughput: f64,
     max_depth: usize,
     capacity: usize,
     histogram: String,
+    device_line: Option<String>,
 }
 
-fn run_rate(rate: f64, window: Duration, deadline_us: u64, seed: u64, table: &mut Table) -> RateOutcome {
+fn run_rate(
+    rate: f64,
+    window: Duration,
+    deadline_us: u64,
+    seed: u64,
+    devices: usize,
+    table: &mut Table,
+) -> RateOutcome {
     let thetas = orientations(6);
     let config = ServeConfig {
         max_batch: 8,
         max_delay_us: 300,
         queue_capacity: 64,
         default_deadline_us: deadline_us,
-        workers: 2,
+        workers: devices.max(2),
     };
     let capacity = config.queue_capacity;
-    let svc = Service::new(DeviceChoice::Emulator, &thetas, config).unwrap();
+    let svc = if devices <= 1 {
+        Service::new(DeviceChoice::Emulator, &thetas, config).unwrap()
+    } else {
+        Service::on_set(hlgpu::driver::DeviceSet::emulator(devices).unwrap(), &thetas, config)
+            .unwrap()
+    };
 
     // Pre-built image pools so the submit loop measures serving, not
     // phantom generation.
@@ -121,7 +142,7 @@ fn run_rate(rate: f64, window: Duration, deadline_us: u64, seed: u64, table: &mu
     let served = lats.len() as u64;
 
     table.row(&[
-        format!("{rate:.0}/s"),
+        format!("{rate:.0}/s x{devices}d"),
         offered.to_string(),
         served.to_string(),
         shed.to_string(),
@@ -138,7 +159,23 @@ fn run_rate(rate: f64, window: Duration, deadline_us: u64, seed: u64, table: &mu
     let st = svc.stats_total();
     assert_eq!(st.served, served, "ticket joins and stats agree on served");
     assert_eq!(st.rejected, shed, "admission sheds and stats agree");
-    RateOutcome { served, max_depth, capacity, histogram: histogram_line(&st.batches) }
+    // Per-member utilization, for the DeviceSet passes.
+    let device_line = svc.device_set().map(|s| {
+        let per: Vec<String> = s
+            .stats()
+            .iter()
+            .map(|m| format!("dev{} {} imgs {:.0} ms busy", m.ordinal, m.images, m.busy_ns as f64 / 1e6))
+            .collect();
+        format!("{} — imbalance {:.2}", per.join(", "), s.imbalance())
+    });
+    RateOutcome {
+        served,
+        throughput: served as f64 / total,
+        max_depth,
+        capacity,
+        histogram: histogram_line(&st.batches),
+        device_line,
+    }
 }
 
 fn histogram_line(h: &BatchHistogram) -> String {
@@ -175,14 +212,24 @@ fn main() {
         "offered", "reqs", "served", "shed", "expired", "failed", "p50", "p99", "p999",
         "imgs/s", "maxq",
     ]);
+    let set_size = env_u64("SL_DEVICES", 2).max(2) as usize;
     let mut outcomes = Vec::new();
+    let mut multi = Vec::new();
     for &rate in &rates {
-        outcomes.push(run_rate(rate, window, deadline_us, seed, &mut table));
+        outcomes.push(run_rate(rate, window, deadline_us, seed, 1, &mut table));
+    }
+    // Second pass: same offered load against a DeviceSet-backed service,
+    // workers pinned round-robin onto the members.
+    for &rate in &rates {
+        multi.push(run_rate(rate, window, deadline_us, seed, set_size, &mut table));
     }
     println!("\n{}", table.render());
 
-    for (rate, o) in rates.iter().zip(&outcomes) {
+    for (rate, o) in rates.iter().cycle().zip(outcomes.iter().chain(&multi)) {
         println!("{rate:>6.0}/s batch sizes: {}", o.histogram);
+        if let Some(line) = &o.device_line {
+            println!("        members: {line}");
+        }
         assert!(
             o.max_depth <= o.capacity,
             "queue depth {} exceeded capacity {} at {rate}/s",
@@ -190,7 +237,16 @@ fn main() {
             o.capacity
         );
     }
-    let total_served: u64 = outcomes.iter().map(|o| o.served).sum();
+    for ((rate, one), many) in rates.iter().zip(&outcomes).zip(&multi) {
+        if one.throughput > 0.0 {
+            println!(
+                "{rate:>6.0}/s: {set_size}-device serve throughput {:.2}x the 1-device pass \
+                 (report-only; target > 1.5x on 2 independent devices)",
+                many.throughput / one.throughput
+            );
+        }
+    }
+    let total_served: u64 = outcomes.iter().chain(&multi).map(|o| o.served).sum();
     assert!(total_served > 0, "no request was ever served");
-    println!("queue depth stayed bounded at every rate; zero panics.");
+    println!("queue depth stayed bounded at every rate and set size; zero panics.");
 }

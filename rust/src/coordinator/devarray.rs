@@ -147,6 +147,16 @@ impl DeviceArray {
         self.ctx.download(self.ptr, t.bytes_mut())
     }
 
+    /// Migrate this array's contents to another context (`cuMemcpyPeer`
+    /// analog, staged through the host: d2h from the home device, h2d
+    /// into a fresh allocation on `target`). The source array is left
+    /// intact — free it when the old replica is no longer needed.
+    /// Migrating within one context produces an independent copy.
+    pub fn migrate_to(&self, target: &Context) -> Result<DeviceArray> {
+        let host = self.download()?;
+        DeviceArray::from_tensor(target, &host)
+    }
+
     /// Explicit `free` (Listing 2 line 30). Otherwise freed on drop.
     /// The array is only marked freed when the driver call succeeds — a
     /// failed free keeps the drop-time retry instead of silently leaking.
@@ -253,6 +263,20 @@ mod tests {
         assert_eq!(back.dtype(), Dtype::F32);
         assert_eq!(back.shape(), &[4]);
         assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn migrate_to_copies_across_contexts() {
+        let a = ctx();
+        let b = ctx();
+        let t = Tensor::from_f32(&[9.0, 8.0, 7.0], &[3]);
+        let d = DeviceArray::from_tensor(&a, &t).unwrap();
+        let moved = d.migrate_to(&b).unwrap();
+        assert_eq!(moved.download().unwrap().as_f32(), t.as_f32());
+        // the source is untouched and both contexts hold one buffer
+        assert_eq!(d.download().unwrap().as_f32(), t.as_f32());
+        assert_eq!(a.memory().unwrap().live_buffers(), 1);
+        assert_eq!(b.memory().unwrap().live_buffers(), 1);
     }
 
     #[test]

@@ -86,6 +86,9 @@ struct Specialized {
     config: Option<LaunchConfig>,
     /// Pool the plan's buffers live in (freed on drop).
     pool: Arc<MemoryPool>,
+    /// Ordinal of the device this specialization targets (for residency
+    /// diagnostics and handle migration).
+    ordinal: usize,
 }
 
 impl Drop for Specialized {
@@ -254,6 +257,24 @@ where
     Ok(LaunchConfig::new((gx, gy), b))
 }
 
+/// The foreign-context rejection: names both device ordinals and the
+/// offending argument index (a generic `BadArgument` hid which array on
+/// which device broke the launch once multiple devices existed). Two
+/// contexts on the *same* ordinal are still foreign — each owns its own
+/// address space, like two CUDA contexts on one GPU.
+fn foreign_context_error(kernel: &str, index: usize, ours: usize, theirs: usize) -> Error {
+    Error::BadArgument {
+        kernel: kernel.to_string(),
+        index,
+        reason: format!(
+            "device-resident argument {index} belongs to a different context: the array \
+             lives on device {theirs}, this specialization targets device {ours} (two \
+             contexts on one ordinal are still distinct address spaces) — copy it with \
+             DeviceArray::migrate_to or rebind on the owning context"
+        ),
+    }
+}
+
 /// Check a call's arguments against a specialization's transfer plan.
 /// The v1 warm path `zip`ped the two and silently truncated on length
 /// mismatch; the v2 path errors with the shape of the disagreement.
@@ -281,6 +302,23 @@ fn validate_args(kernel: &str, spec: &Specialized, args: &[Arg<'_>]) -> Result<(
                     "plan expects a host argument, got a device-resident one".into()
                 },
             });
+        }
+        // Residency check at launch time: a handle migrated to another
+        // device (or a call mixing arrays from several contexts) must
+        // fail with the ordinals named, not with an InvalidDevicePtr
+        // from the wrong pool deep inside the launch.
+        if entry.device {
+            if let Some(actx) = arg.device_context() {
+                let theirs = actx.memory_arc()?;
+                if !Arc::ptr_eq(&spec.pool, &theirs) {
+                    return Err(foreign_context_error(
+                        kernel,
+                        index,
+                        spec.ordinal,
+                        actx.device().ordinal,
+                    ));
+                }
+            }
         }
         // Transfer-direction check: the handle path has no cache key to
         // separate an `In` plan from an `InOut` call — a mismatch would
@@ -638,12 +676,12 @@ impl Launcher {
                 if let Some(actx) = arg.device_context() {
                     let theirs = actx.memory_arc()?;
                     if !Arc::ptr_eq(&pool, &theirs) {
-                        return Err(Error::BadArgument {
-                            kernel: kernel.to_string(),
+                        return Err(foreign_context_error(
+                            kernel,
                             index,
-                            reason: "device-resident argument belongs to a different context"
-                                .into(),
-                        });
+                            self.ctx.device().ordinal,
+                            actx.device().ordinal,
+                        ));
                     }
                 }
                 plan.push(PlanEntry {
@@ -702,6 +740,7 @@ impl Launcher {
                     patches,
                     config: None,
                     pool,
+                    ordinal: self.ctx.device().ordinal,
                 })
             }
             Resolved::Vtx(VtxSpec { kernel: vk, scalars, config }) => {
@@ -731,6 +770,7 @@ impl Launcher {
                     patches,
                     config: Some(config),
                     pool,
+                    ordinal: self.ctx.device().ordinal,
                 })
             }
         }
@@ -872,6 +912,69 @@ impl KernelHandle {
         m.d2h_deferred += 1;
         m.features_bytes += array.byte_len() as u64;
         Ok(pd)
+    }
+
+    /// Migrate this bound handle to another device: re-resolve and
+    /// re-specialize the bound call shape against `target`'s registry
+    /// and module cache, and return a new handle whose plan (staging
+    /// buffers, patched pointers, launch config) lives entirely in the
+    /// target context. Repeated migrations of same-shaped handles hit
+    /// the target's specialization cache. The handle's *data* does not
+    /// move with it — migrate the backing `DeviceArray`s with
+    /// [`crate::coordinator::DeviceArray::migrate_to`]; launching the
+    /// migrated handle with un-migrated arrays fails with the
+    /// foreign-context error naming both ordinals. Migrating to the
+    /// handle's own context returns a plain clone.
+    pub fn migrate_to(&self, target: &mut Launcher) -> Result<KernelHandle> {
+        use crate::coordinator::arg;
+
+        let spec = &*self.spec;
+        let tpool = target.ctx.memory_arc()?;
+        if Arc::ptr_eq(&spec.pool, &tpool) {
+            return Ok(self.clone());
+        }
+        // Rebuild the bound call shape. Specialization depends only on
+        // dtype/shape/mode/residency, so host entries stage through
+        // zeroed tensors and device entries through temporary arrays on
+        // the target (freed again once the plan is built — device plan
+        // entries hold no storage, their pointer is patched per launch).
+        enum Backing {
+            Host(crate::tensor::Tensor),
+            Dev(crate::coordinator::DeviceArray),
+        }
+        let mut backing = Vec::with_capacity(spec.plan.len());
+        for e in &spec.plan {
+            backing.push(if e.device {
+                Backing::Dev(crate::coordinator::DeviceArray::alloc(
+                    target.context(),
+                    e.dtype,
+                    &e.shape,
+                )?)
+            } else {
+                Backing::Host(crate::tensor::Tensor::new(
+                    e.dtype,
+                    &e.shape,
+                    vec![0u8; e.byte_len],
+                )?)
+            });
+        }
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(spec.plan.len());
+        for (e, b) in spec.plan.iter().zip(backing.iter_mut()) {
+            args.push(match b {
+                Backing::Host(t) => match e.mode {
+                    ArgMode::In => arg::cu_in(t),
+                    ArgMode::Out => arg::cu_out(t),
+                    ArgMode::InOut => arg::cu_inout(t),
+                    // plans never carry Auto (resolved at specialization)
+                    ArgMode::Auto => arg::cu_inout(t),
+                },
+                Backing::Dev(d) => match e.mode {
+                    ArgMode::In => arg::cu_dev(d),
+                    _ => arg::cu_dev_mut(d),
+                },
+            });
+        }
+        target.bind(&self.kernel, &args)
     }
 }
 

@@ -12,17 +12,22 @@
 //!   [`PendingLaunch`] (stream-ordered async launches) — see
 //!   `docs/api.md`;
 //! * [`devarray`] — `CuArray`-style device-resident arrays; first-class
-//!   launch arguments via [`arg::cu_dev`] / [`arg::cu_dev_mut`].
+//!   launch arguments via [`arg::cu_dev`] / [`arg::cu_dev_mut`];
+//! * [`replicated`] — read-only inputs replicated lazily across the
+//!   members of a [`DeviceSet`](crate::driver::DeviceSet) (see
+//!   `docs/devices.md`).
 
 pub mod args;
 pub mod cache;
 pub mod devarray;
 pub mod launch;
 pub mod registry;
+pub mod replicated;
 
 pub use args::{call_signature, input_signature, Arg, ArgMode};
 pub use cache::{CacheStats, SpecializationCache};
 pub use devarray::DeviceArray;
+pub use replicated::ReplicatedArray;
 pub use launch::{
     checked_cfg, checked_cfg2, KernelHandle, LaunchMetrics, Launcher, PendingDownload,
     PendingLaunch, TransferPolicy,

@@ -1,0 +1,78 @@
+//! `ReplicatedArray` — a read-only input replicated across devices.
+//!
+//! Multi-device pipelines share read-only inputs (the trace pipeline's
+//! angle table) across every member of a
+//! [`DeviceSet`](crate::driver::DeviceSet). A `ReplicatedArray` holds
+//! the host master copy and uploads **lazily, once per context**: the
+//! first shard placed on a device pays the h2d, every later shard on
+//! that device reuses the resident copy. Replicas are keyed by the
+//! context's memory pool identity (two contexts on one ordinal are
+//! distinct address spaces and each get their own copy).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::devarray::DeviceArray;
+use crate::driver::Context;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// A host tensor with lazily-uploaded per-context device replicas.
+pub struct ReplicatedArray {
+    master: Tensor,
+    copies: Mutex<HashMap<usize, Arc<DeviceArray>>>,
+}
+
+impl ReplicatedArray {
+    pub fn new(master: Tensor) -> ReplicatedArray {
+        ReplicatedArray { master, copies: Mutex::new(HashMap::new()) }
+    }
+
+    /// The device replica for `ctx`, uploading on first use. Replicas
+    /// are shared (`Arc`) — a shard borrows its local copy for the
+    /// duration of a launch while the table stays cached here.
+    pub fn on(&self, ctx: &Context) -> Result<Arc<DeviceArray>> {
+        let key = Arc::as_ptr(&ctx.memory_arc()?) as usize;
+        let mut copies = self.copies.lock().unwrap();
+        if let Some(a) = copies.get(&key) {
+            return Ok(a.clone());
+        }
+        let a = Arc::new(DeviceArray::from_tensor(ctx, &self.master)?);
+        copies.insert(key, a.clone());
+        Ok(a)
+    }
+
+    /// Number of device replicas uploaded so far.
+    pub fn uploads(&self) -> usize {
+        self.copies.lock().unwrap().len()
+    }
+
+    /// The host master copy.
+    pub fn master(&self) -> &Tensor {
+        &self.master
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::{emulator_device, Context};
+
+    #[test]
+    fn uploads_once_per_context() {
+        let a = Context::create(&emulator_device().unwrap()).unwrap();
+        let b = Context::create(&emulator_device().unwrap()).unwrap();
+        let rep = ReplicatedArray::new(Tensor::from_f32(&[1.0, 2.0, 3.0], &[3]));
+        assert_eq!(rep.uploads(), 0);
+
+        let ra1 = rep.on(&a).unwrap();
+        let ra2 = rep.on(&a).unwrap();
+        assert_eq!(rep.uploads(), 1, "same context reuses the replica");
+        assert_eq!(ra1.ptr(), ra2.ptr());
+
+        let rb = rep.on(&b).unwrap();
+        assert_eq!(rep.uploads(), 2, "second context pays its own upload");
+        assert_eq!(rb.download().unwrap().as_f32(), rep.master().as_f32());
+        assert_eq!(ra1.download().unwrap().as_f32(), rep.master().as_f32());
+    }
+}

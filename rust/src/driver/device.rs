@@ -1,4 +1,15 @@
 //! Device enumeration (`cuDeviceGet` / `cuDeviceGetAttribute` analog).
+//!
+//! The device table is a configurable registry: `HLGPU_DEVICES=N`
+//! exposes N independent VTX emulator devices (ordinals 1..=N) next to
+//! the PJRT device at ordinal 0. Each emulator device gets its own
+//! worker pool (see `emulator::sched::device_pool`), and every
+//! `Context` created on it gets its own module cache, `MemoryPool`
+//! arenas, and streams — so the emulator devices are independent in the
+//! same sense real GPUs are. `HLGPU_DEV_MEM` overrides per-ordinal
+//! memory capacity (comma-separated sizes, `k`/`m`/`g` suffixes; empty
+//! entries keep the default), making asymmetric-capacity OOM behavior
+//! testable. See `docs/devices.md`.
 
 use std::sync::{Arc, OnceLock};
 
@@ -52,22 +63,57 @@ impl std::fmt::Debug for Device {
 
 static DEVICES: OnceLock<Vec<Device>> = OnceLock::new();
 
+/// Upper bound on `HLGPU_DEVICES` — a typo guard, not a real limit.
+const MAX_EMULATOR_DEVICES: usize = 64;
+
+/// Number of VTX emulator devices to expose: `HLGPU_DEVICES` clamped to
+/// `1..=MAX_EMULATOR_DEVICES`; 1 when unset or unparseable.
+pub(crate) fn emulator_count_from_env() -> usize {
+    std::env::var("HLGPU_DEVICES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.clamp(1, MAX_EMULATOR_DEVICES))
+        .unwrap_or(1)
+}
+
+/// Parse an `HLGPU_DEV_MEM` value: comma-separated per-ordinal sizes
+/// (`k`/`m`/`g` suffixes, powers of 1024). Entry i applies to ordinal
+/// i; empty or malformed entries keep that ordinal's default.
+fn parse_device_memory(v: &str) -> Vec<Option<usize>> {
+    v.split(',').map(crate::driver::memory::parse_mem_size).collect()
+}
+
 fn device_table() -> &'static [Device] {
     DEVICES.get_or_init(|| {
-        vec![
-            Device {
-                ordinal: 0,
-                name: "PJRT CPU (simulated accelerator)".into(),
-                kind: BackendKind::Pjrt,
-                attributes: DeviceAttributes::default(),
-            },
-            Device {
-                ordinal: 1,
-                name: "VTX emulator (Ocelot analog)".into(),
+        let mem = std::env::var("HLGPU_DEV_MEM")
+            .map(|v| parse_device_memory(&v))
+            .unwrap_or_default();
+        let attrs_for = |ordinal: usize| {
+            let mut a = DeviceAttributes::default();
+            if let Some(&Some(bytes)) = mem.get(ordinal) {
+                a.total_memory = bytes;
+            }
+            a
+        };
+        let mut table = vec![Device {
+            ordinal: 0,
+            name: "PJRT CPU (simulated accelerator)".into(),
+            kind: BackendKind::Pjrt,
+            attributes: attrs_for(0),
+        }];
+        for i in 0..emulator_count_from_env() {
+            table.push(Device {
+                ordinal: 1 + i,
+                name: if i == 0 {
+                    "VTX emulator (Ocelot analog)".into()
+                } else {
+                    format!("VTX emulator {i} (Ocelot analog)")
+                },
                 kind: BackendKind::VtxEmulator,
-                attributes: DeviceAttributes::default(),
-            },
-        ]
+                attributes: attrs_for(1 + i),
+            });
+        }
+        table
     })
 }
 
@@ -100,6 +146,15 @@ pub fn emulator_device() -> Result<Device> {
         .ok_or_else(|| Error::Other("no VTX emulator device visible".into()))
 }
 
+/// All visible VTX emulator devices, in ordinal order.
+pub fn emulator_devices() -> Vec<Device> {
+    device_table()
+        .iter()
+        .filter(|d| d.kind == BackendKind::VtxEmulator)
+        .cloned()
+        .collect()
+}
+
 /// The first PJRT-backed device (the simulated accelerator executing AOT
 /// artifacts).
 pub fn pjrt_device() -> Result<Device> {
@@ -112,11 +167,33 @@ pub fn pjrt_device() -> Result<Device> {
 
 impl Device {
     /// Instantiate the execution backend for this device. PJRT backends
-    /// share a process-global client (PJRT clients are heavyweight).
+    /// share a process-global client (PJRT clients are heavyweight);
+    /// each emulator device gets a backend bound to that device's
+    /// worker pool.
     pub fn backend(&self) -> Result<Arc<dyn Backend>> {
         match self.kind {
             BackendKind::Pjrt => Ok(crate::runtime::PjrtBackend::global()?),
-            BackendKind::VtxEmulator => Ok(Arc::new(crate::emulator::VtxBackend::new())),
+            BackendKind::VtxEmulator => {
+                Ok(Arc::new(crate::emulator::VtxBackend::for_device(self.ordinal)))
+            }
+        }
+    }
+
+    /// Synthesize a VTX emulator device descriptor outside the visible
+    /// table — for `DeviceSet` members beyond `HLGPU_DEVICES`, or tests
+    /// that need a device with asymmetric memory capacity. The ordinal
+    /// should not collide with a visible device of a different kind
+    /// (ordinal 0 is always PJRT).
+    pub fn emulator_at(ordinal: usize, total_memory: Option<usize>) -> Device {
+        let mut attributes = DeviceAttributes::default();
+        if let Some(bytes) = total_memory {
+            attributes.total_memory = bytes;
+        }
+        Device {
+            ordinal,
+            name: format!("VTX emulator {ordinal} (synthesized)"),
+            kind: BackendKind::VtxEmulator,
+            attributes,
         }
     }
 }
@@ -127,10 +204,18 @@ mod tests {
 
     #[test]
     fn enumeration() {
-        assert_eq!(device_count(), 2);
+        // The table layout depends on HLGPU_DEVICES, which CI varies.
+        let emus = emulator_count_from_env();
+        assert_eq!(device_count(), 1 + emus);
         assert_eq!(device(0).unwrap().kind, BackendKind::Pjrt);
-        assert_eq!(device(1).unwrap().kind, BackendKind::VtxEmulator);
-        assert!(matches!(device(9), Err(Error::InvalidDevice(9))));
+        for i in 1..=emus {
+            let d = device(i).unwrap();
+            assert_eq!(d.kind, BackendKind::VtxEmulator);
+            assert_eq!(d.ordinal, i);
+        }
+        let past = device_count() + 7;
+        assert!(matches!(device(past), Err(Error::InvalidDevice(p)) if p == past));
+        assert_eq!(emulator_devices().len(), emus);
     }
 
     #[test]
@@ -144,5 +229,22 @@ mod tests {
         let d = device(0).unwrap();
         assert!(d.attributes.max_threads_per_block >= 256);
         assert!(d.attributes.max_shared_mem_per_block >= 16 << 10);
+    }
+
+    #[test]
+    fn per_device_memory_parses() {
+        assert_eq!(parse_device_memory("1g,2g"), vec![Some(1 << 30), Some(2 << 30)]);
+        assert_eq!(parse_device_memory(",512m"), vec![None, Some(512 << 20)]);
+        assert_eq!(parse_device_memory("nope,4096"), vec![None, Some(4096)]);
+    }
+
+    #[test]
+    fn synthesized_emulator_device() {
+        let d = Device::emulator_at(7, Some(1 << 20));
+        assert_eq!(d.ordinal, 7);
+        assert_eq!(d.kind, BackendKind::VtxEmulator);
+        assert_eq!(d.attributes.total_memory, 1 << 20);
+        let d2 = Device::emulator_at(3, None);
+        assert_eq!(d2.attributes.total_memory, crate::driver::memory::DEFAULT_CAPACITY);
     }
 }

@@ -1,0 +1,260 @@
+//! `DeviceSet`: a scheduling group of devices with per-member contexts
+//! and least-outstanding-work placement.
+//!
+//! A set owns one [`Context`] per member device — each with its own
+//! module cache, `MemoryPool` arenas, and streams — and tracks, per
+//! member, the outstanding work weight (images currently placed there),
+//! cumulative shard/image counts, and busy time. Placement is a simple
+//! least-outstanding-work heuristic with lowest-ordinal tie-break:
+//! callers place shards **serially in deterministic chunk order**, so
+//! for a fixed set size the (chunk → member) assignment is a pure
+//! function of the chunk weights — which is what lets sharded results
+//! be reassembled bitwise-identically to single-device execution (see
+//! `docs/devices.md`).
+//!
+//! The sharded `features_batch` path (`tracetransform::impls::gpu_auto`)
+//! and the serve layer's worker pinning both build on this type.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::driver::context::Context;
+use crate::driver::device::{self, BackendKind, Device};
+use crate::error::{Error, Result};
+
+struct Member {
+    ctx: Context,
+    /// Work weight currently placed on this member (e.g. images).
+    outstanding: AtomicU64,
+    /// Cumulative shards placed here.
+    shards: AtomicU64,
+    /// Cumulative images recorded here.
+    images: AtomicU64,
+    /// Cumulative busy time recorded here (worker-reported).
+    busy_ns: AtomicU64,
+}
+
+/// Per-member scheduling counters, as reported by [`DeviceSet::stats`].
+#[derive(Clone, Debug)]
+pub struct DeviceSetStats {
+    pub ordinal: usize,
+    pub shards: u64,
+    pub images: u64,
+    pub outstanding: u64,
+    pub busy_ns: u64,
+}
+
+/// A scheduling group of devices. Cheap to clone (shared members).
+#[derive(Clone)]
+pub struct DeviceSet {
+    members: Arc<Vec<Member>>,
+}
+
+impl DeviceSet {
+    /// Build a set with one fresh context per device.
+    pub fn new(devices: &[Device]) -> Result<DeviceSet> {
+        if devices.is_empty() {
+            return Err(Error::Other("a DeviceSet needs at least one device".into()));
+        }
+        let mut members = Vec::with_capacity(devices.len());
+        for d in devices {
+            members.push(Member {
+                ctx: Context::create(d)?,
+                outstanding: AtomicU64::new(0),
+                shards: AtomicU64::new(0),
+                images: AtomicU64::new(0),
+                busy_ns: AtomicU64::new(0),
+            });
+        }
+        Ok(DeviceSet { members: Arc::new(members) })
+    }
+
+    /// A set of `n` VTX emulator devices: the visible emulator devices
+    /// first (in ordinal order), then synthesized devices at ordinals
+    /// past the table for any shortfall — so `DeviceSet::emulator(4)`
+    /// works regardless of `HLGPU_DEVICES`.
+    pub fn emulator(n: usize) -> Result<DeviceSet> {
+        if n == 0 {
+            return Err(Error::Other("a DeviceSet needs at least one device".into()));
+        }
+        let mut devs = device::emulator_devices();
+        devs.truncate(n);
+        let have = devs.len();
+        let next = device::device_count();
+        for i in have..n {
+            devs.push(Device::emulator_at(next + (i - have), None));
+        }
+        DeviceSet::new(&devs)
+    }
+
+    /// Number of member devices.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The member context at index `i` (panics if out of range).
+    pub fn context(&self, i: usize) -> &Context {
+        &self.members[i].ctx
+    }
+
+    /// The member device at index `i`.
+    pub fn device(&self, i: usize) -> &Device {
+        self.members[i].ctx.device()
+    }
+
+    /// Place a shard of the given weight: picks the member with the
+    /// least outstanding work (lowest index on ties), adds the weight,
+    /// and returns the member index. Callers placing shards serially in
+    /// a deterministic order get a deterministic assignment.
+    pub fn place(&self, weight: u64) -> usize {
+        let i = self
+            .members
+            .iter()
+            .enumerate()
+            .min_by_key(|(idx, m)| (m.outstanding.load(Ordering::Relaxed), *idx))
+            .map(|(idx, _)| idx)
+            .unwrap_or(0);
+        self.members[i].outstanding.fetch_add(weight, Ordering::Relaxed);
+        self.members[i].shards.fetch_add(1, Ordering::Relaxed);
+        i
+    }
+
+    /// Retire a previously placed shard's weight from member `i`.
+    pub fn complete(&self, i: usize, weight: u64) {
+        self.members[i].outstanding.fetch_sub(weight, Ordering::Relaxed);
+    }
+
+    /// Record `n` images processed on member `i` (for utilization
+    /// reporting).
+    pub fn record_images(&self, i: usize, n: u64) {
+        self.members[i].images.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record busy time on member `i`.
+    pub fn record_busy(&self, i: usize, ns: u64) {
+        self.members[i].busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Per-member scheduling counters.
+    pub fn stats(&self) -> Vec<DeviceSetStats> {
+        self.members
+            .iter()
+            .map(|m| DeviceSetStats {
+                ordinal: m.ctx.device().ordinal,
+                shards: m.shards.load(Ordering::Relaxed),
+                images: m.images.load(Ordering::Relaxed),
+                outstanding: m.outstanding.load(Ordering::Relaxed),
+                busy_ns: m.busy_ns.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Shard imbalance: max over mean of per-member image counts
+    /// (1.0 = perfectly balanced; 0.0 when nothing ran).
+    pub fn imbalance(&self) -> f64 {
+        let counts: Vec<u64> =
+            self.members.iter().map(|m| m.images.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / counts.len() as f64;
+        counts.iter().copied().max().unwrap_or(0) as f64 / mean
+    }
+}
+
+impl std::fmt::Debug for DeviceSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ords: Vec<usize> = self.members.iter().map(|m| m.ctx.device().ordinal).collect();
+        write!(f, "DeviceSet({ords:?})")
+    }
+}
+
+/// Convenience: is this set made of emulator devices only? (The sharded
+/// batch path requires it — PJRT members share a process-global client.)
+impl DeviceSet {
+    pub fn all_emulator(&self) -> bool {
+        self.members.iter().all(|m| m.ctx.device().kind == BackendKind::VtxEmulator)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emulator_set_has_distinct_contexts() {
+        let set = DeviceSet::emulator(3).unwrap();
+        assert_eq!(set.len(), 3);
+        assert!(set.all_emulator());
+        // Every member context owns its own pool.
+        for i in 0..set.len() {
+            for j in (i + 1)..set.len() {
+                let a = set.context(i).memory_arc().unwrap();
+                let b = set.context(j).memory_arc().unwrap();
+                assert!(!Arc::ptr_eq(&a, &b), "members {i} and {j} share a pool");
+            }
+        }
+        // Ordinals are distinct.
+        let mut ords: Vec<usize> = (0..set.len()).map(|i| set.device(i).ordinal).collect();
+        ords.dedup();
+        assert_eq!(ords.len(), 3);
+    }
+
+    #[test]
+    fn placement_is_least_outstanding_deterministic() {
+        let set = DeviceSet::emulator(2).unwrap();
+        // Equal load: ties break to the lowest index.
+        assert_eq!(set.place(10), 0);
+        assert_eq!(set.place(10), 1);
+        // Member 1 finishes first; the next shards chase the lighter member.
+        set.complete(1, 10);
+        assert_eq!(set.place(4), 1); // 1 at 0 < 10
+        assert_eq!(set.place(4), 1); // 1 at 4 < 10
+        assert_eq!(set.place(1), 1); // 1 at 8 < 10
+        let st = set.stats();
+        assert_eq!(st[0].shards + st[1].shards, 5);
+        assert_eq!(st[0].outstanding, 10);
+        assert_eq!(st[1].outstanding, 9);
+    }
+
+    #[test]
+    fn imbalance_and_image_accounting() {
+        let set = DeviceSet::emulator(2).unwrap();
+        assert_eq!(set.imbalance(), 0.0);
+        set.record_images(0, 6);
+        set.record_images(1, 2);
+        let st = set.stats();
+        assert_eq!(st[0].images, 6);
+        assert_eq!(st[1].images, 2);
+        assert!((set.imbalance() - 1.5).abs() < 1e-12);
+        set.record_images(1, 4);
+        assert!((set.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_set_rejected() {
+        assert!(DeviceSet::new(&[]).is_err());
+        assert!(DeviceSet::emulator(0).is_err());
+    }
+
+    /// Per-member capacities are independent (the `HLGPU_DEV_MEM` shape):
+    /// a small member OOMs on a request its sibling absorbs.
+    #[test]
+    fn asymmetric_capacities_oom_independently() {
+        let base = device::device_count();
+        let set = DeviceSet::new(&[
+            Device::emulator_at(base + 10, Some(1 << 20)),
+            Device::emulator_at(base + 11, None),
+        ])
+        .unwrap();
+        let err = set.context(0).alloc(2 << 20).unwrap_err();
+        assert!(matches!(err, Error::OutOfMemory { .. }), "{err:?}");
+        let p = set.context(1).alloc(2 << 20).unwrap();
+        set.context(1).free(p).unwrap();
+    }
+}

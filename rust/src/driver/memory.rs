@@ -259,9 +259,10 @@ pub const DEFAULT_CAPACITY: usize = 4 << 30;
 /// Default arena (shard) count when `HLGPU_ARENAS` is unset.
 pub const DEFAULT_ARENAS: usize = 4;
 
-/// Parse an `HLGPU_POOL_CAP` value: plain bytes with an optional
-/// `k`/`m`/`g` (or `kb`/`mb`/`gb`) suffix, powers of 1024.
-fn parse_cache_cap(v: &str) -> Option<usize> {
+/// Parse a byte-size value (`HLGPU_POOL_CAP`, `HLGPU_DEV_MEM` entries):
+/// plain bytes with an optional `k`/`m`/`g` (or `kb`/`mb`/`gb`) suffix,
+/// powers of 1024.
+pub(crate) fn parse_mem_size(v: &str) -> Option<usize> {
     let mut s = v.trim().to_ascii_lowercase();
     if s.is_empty() {
         return None;
@@ -286,7 +287,7 @@ fn parse_cache_cap(v: &str) -> Option<usize> {
 
 fn cache_cap_from_env() -> Option<usize> {
     let v = std::env::var("HLGPU_POOL_CAP").ok()?;
-    match parse_cache_cap(&v) {
+    match parse_mem_size(&v) {
         Some(cap) => Some(cap),
         None => {
             // A resource bound that silently disables itself on a typo
@@ -1221,19 +1222,19 @@ mod tests {
 
     #[test]
     fn cache_cap_parsing() {
-        assert_eq!(parse_cache_cap("4096"), Some(4096));
-        assert_eq!(parse_cache_cap(" 16k "), Some(16 << 10));
-        assert_eq!(parse_cache_cap("2M"), Some(2 << 20));
-        assert_eq!(parse_cache_cap("1g"), Some(1 << 30));
+        assert_eq!(parse_mem_size("4096"), Some(4096));
+        assert_eq!(parse_mem_size(" 16k "), Some(16 << 10));
+        assert_eq!(parse_mem_size("2M"), Some(2 << 20));
+        assert_eq!(parse_mem_size("1g"), Some(1 << 30));
         // natural kb/mb/gb spellings are accepted too
-        assert_eq!(parse_cache_cap("16kb"), Some(16 << 10));
-        assert_eq!(parse_cache_cap("512MB"), Some(512 << 20));
-        assert_eq!(parse_cache_cap("1gb"), Some(1 << 30));
-        assert_eq!(parse_cache_cap("0"), Some(0));
-        assert_eq!(parse_cache_cap(""), None);
-        assert_eq!(parse_cache_cap("lots"), None);
-        assert_eq!(parse_cache_cap("-1"), None);
-        assert_eq!(parse_cache_cap("b"), None);
+        assert_eq!(parse_mem_size("16kb"), Some(16 << 10));
+        assert_eq!(parse_mem_size("512MB"), Some(512 << 20));
+        assert_eq!(parse_mem_size("1gb"), Some(1 << 30));
+        assert_eq!(parse_mem_size("0"), Some(0));
+        assert_eq!(parse_mem_size(""), None);
+        assert_eq!(parse_mem_size("lots"), None);
+        assert_eq!(parse_mem_size("-1"), None);
+        assert_eq!(parse_mem_size("b"), None);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 pub mod backend;
 pub mod context;
 pub mod device;
+pub mod deviceset;
 pub mod event;
 pub mod launch;
 pub mod memory;
@@ -24,9 +25,10 @@ pub mod streampool;
 pub use backend::{Backend, DeviceFunction, LoadedModule, ModuleSource, TensorSpec};
 pub use context::Context;
 pub use device::{
-    device, device_count, devices, emulator_device, pjrt_device, BackendKind, Device,
-    DeviceAttributes,
+    device, device_count, devices, emulator_device, emulator_devices, pjrt_device, BackendKind,
+    Device, DeviceAttributes,
 };
+pub use deviceset::{DeviceSet, DeviceSetStats};
 pub use event::Event;
 pub use launch::{Dim3, KernelArg, LaunchConfig, LaunchReport};
 pub use memory::{DevicePtr, MemStats, MemoryPool, PoolPolicy, DEFAULT_CAPACITY};

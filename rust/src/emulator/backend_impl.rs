@@ -18,18 +18,35 @@ use crate::driver::backend::{Backend, DeviceFunction, LoadedModule, ModuleSource
 use crate::driver::launch::{KernelArg, LaunchConfig, LaunchReport};
 use crate::driver::memory::MemoryPool;
 use crate::emulator::decode::{decode, DecodedKernel};
-use crate::emulator::interp::{execute_decoded, Limits, ScalarArg};
+use crate::emulator::interp::{execute_decoded_on, Limits, ScalarArg};
 use crate::emulator::isa::{Kernel, ParamKind};
-use crate::emulator::sched::default_workers;
+use crate::emulator::sched::{default_workers, device_pool, WorkerPool};
 use crate::error::{Error, Result};
 
-/// The emulator backend. Stateless: each module owns its kernels.
-#[derive(Default)]
-pub struct VtxBackend;
+/// The emulator backend. Stateless apart from the worker pool it
+/// dispatches onto: each module owns its kernels, and the pool is the
+/// per-device-ordinal pool (see [`device_pool`]) so launches on
+/// different emulator devices never contend for the same worker queue.
+pub struct VtxBackend {
+    pool: &'static WorkerPool,
+}
+
+impl Default for VtxBackend {
+    fn default() -> Self {
+        VtxBackend::new()
+    }
+}
 
 impl VtxBackend {
+    /// A backend on the first emulator device's (global) worker pool.
     pub fn new() -> Self {
-        VtxBackend
+        VtxBackend { pool: WorkerPool::global() }
+    }
+
+    /// A backend dispatching onto the worker pool of the given device
+    /// ordinal.
+    pub fn for_device(ordinal: usize) -> Self {
+        VtxBackend { pool: device_pool(ordinal) }
     }
 }
 
@@ -50,7 +67,7 @@ impl Backend for VtxBackend {
                     })?;
                     map.insert(k.name.clone(), Arc::new(k.clone()));
                 }
-                Ok(Arc::new(VtxModule { kernels: map }))
+                Ok(Arc::new(VtxModule { kernels: map, pool: self.pool }))
             }
             other => Err(Error::ModuleLoad {
                 backend: "vtx-emulator".into(),
@@ -65,6 +82,7 @@ impl Backend for VtxBackend {
 
 pub struct VtxModule {
     kernels: HashMap<String, Arc<Kernel>>,
+    pool: &'static WorkerPool,
 }
 
 impl LoadedModule for VtxModule {
@@ -75,6 +93,7 @@ impl LoadedModule for VtxModule {
                 Arc::new(VtxFunction {
                     kernel: k.clone(),
                     decoded: Mutex::new(None),
+                    pool: self.pool,
                 }) as Arc<dyn DeviceFunction>
             })
             .ok_or_else(|| Error::FunctionNotFound(name.to_string()))
@@ -93,6 +112,7 @@ pub struct VtxFunction {
     /// scalar arguments are stable. Hitting it skips decode *and* the
     /// basic-block/fusion lowering of the vector execution tier.
     decoded: Mutex<Option<(Vec<ScalarArg>, Arc<DecodedKernel>)>>,
+    pool: &'static WorkerPool,
 }
 
 /// Bitwise scalar-binding equality: the cache must distinguish -0.0
@@ -175,13 +195,14 @@ impl DeviceFunction for VtxFunction {
             let report = {
                 let views: Vec<&mut [f32]> =
                     f32bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
-                execute_decoded(
+                execute_decoded_on(
                     &decoded,
                     (cfg.grid.x, cfg.grid.y),
                     (cfg.block.x, cfg.block.y),
                     views,
                     &Limits::default(),
                     default_workers(),
+                    self.pool,
                 )?
             };
             for (b, f) in bufs.iter_mut().zip(&f32bufs) {

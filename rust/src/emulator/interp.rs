@@ -142,7 +142,26 @@ pub fn execute_decoded(
     execute_decoded_tier(kernel, grid, block, buffers, limits, workers, default_exec())
 }
 
-/// Execute a pre-decoded kernel on an explicit execution tier.
+/// Execute a pre-decoded kernel on an explicit worker pool — the
+/// per-device dispatch path: each emulator device's backend passes its
+/// own pool (see [`crate::emulator::sched::device_pool`]) so launches
+/// on different devices never share a worker queue. Uses the default
+/// execution tier.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_decoded_on(
+    kernel: &Arc<DecodedKernel>,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buffers: Vec<&mut [f32]>,
+    limits: &Limits,
+    workers: usize,
+    pool: &'static WorkerPool,
+) -> Result<LaunchReport> {
+    execute_decoded_pool_tier(kernel, grid, block, buffers, limits, workers, default_exec(), pool)
+}
+
+/// Execute a pre-decoded kernel on an explicit execution tier (the
+/// global worker pool).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_decoded_tier(
     kernel: &Arc<DecodedKernel>,
@@ -152,6 +171,29 @@ pub fn execute_decoded_tier(
     limits: &Limits,
     workers: usize,
     tier: ExecTier,
+) -> Result<LaunchReport> {
+    execute_decoded_pool_tier(
+        kernel,
+        grid,
+        block,
+        buffers,
+        limits,
+        workers,
+        tier,
+        WorkerPool::global(),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_decoded_pool_tier(
+    kernel: &Arc<DecodedKernel>,
+    grid: (u32, u32),
+    block: (u32, u32),
+    buffers: Vec<&mut [f32]>,
+    limits: &Limits,
+    workers: usize,
+    tier: ExecTier,
+    pool: &'static WorkerPool,
 ) -> Result<LaunchReport> {
     if buffers.len() != kernel.nbufs {
         return Err(Error::InvalidLaunch(format!(
@@ -163,7 +205,7 @@ pub fn execute_decoded_tier(
     }
     let nblocks = grid.0 as u64 * grid.1 as u64;
     if workers > 1 && nblocks > 1 {
-        run_parallel(kernel, grid, block, buffers, limits, workers, tier)
+        run_parallel(kernel, grid, block, buffers, limits, workers, tier, pool)
     } else {
         run_sequential(kernel, grid, block, buffers, limits, tier)
     }
@@ -686,9 +728,9 @@ fn run_parallel(
     limits: &Limits,
     workers: usize,
     tier: ExecTier,
+    pool: &'static WorkerPool,
 ) -> Result<LaunchReport> {
     let nblocks = grid.0 as u64 * grid.1 as u64;
-    let pool = WorkerPool::global();
     // Clamp to the pool: submitting more jobs than threads cannot add
     // concurrency, and the report must state the width that actually ran.
     let njobs = workers.min(nblocks as usize).min(pool.size()).max(1);

@@ -33,11 +33,12 @@ pub use backend_impl::VtxBackend;
 pub use builder::KernelBuilder;
 pub use decode::{decode, DecodedKernel};
 pub use interp::{
-    execute, execute_decoded, execute_decoded_tier, execute_with, execute_with_tier, Launch,
-    Limits, ScalarArg,
+    execute, execute_decoded, execute_decoded_on, execute_decoded_tier, execute_with,
+    execute_with_tier, Launch, Limits, ScalarArg,
 };
 pub use isa::{Instr, Kernel, ParamKind};
 pub use lower::LoweredKernel;
 pub use sched::{
-    default_exec, default_workers, set_default_exec, set_default_workers, ExecTier, WorkerPool,
+    default_exec, default_workers, device_pool, set_default_exec, set_default_workers, ExecTier,
+    WorkerPool,
 };

@@ -69,6 +69,26 @@ impl WorkerPool {
         POOL.get_or_init(|| WorkerPool::new(pool_threads()))
     }
 
+    /// The worker pool for an emulator device ordinal. The first
+    /// emulator device (ordinal 1, and ordinal 0 for safety) maps to
+    /// the process-global pool; every other ordinal gets its own pool,
+    /// created on first use and leaked — device pools, like the global
+    /// one, live for the whole process. This is what makes
+    /// `HLGPU_DEVICES=N` emulator devices *independent*: blocks
+    /// launched on different devices never contend for the same worker
+    /// queue.
+    pub fn device_pool(ordinal: usize) -> &'static WorkerPool {
+        if ordinal <= 1 {
+            return WorkerPool::global();
+        }
+        static POOLS: OnceLock<Mutex<std::collections::HashMap<usize, &'static WorkerPool>>> =
+            OnceLock::new();
+        let mut pools = POOLS.get_or_init(|| Mutex::new(Default::default())).lock().unwrap();
+        *pools
+            .entry(ordinal)
+            .or_insert_with(|| Box::leak(Box::new(WorkerPool::new(pool_threads()))))
+    }
+
     /// Number of threads in the pool.
     pub fn size(&self) -> usize {
         self.size
@@ -315,6 +335,32 @@ mod tests {
             }));
         }
         assert!(!latch2.wait());
+    }
+
+    #[test]
+    fn device_pools_are_distinct_and_stable() {
+        // Ordinals 0 and 1 alias the global pool; higher ordinals get
+        // their own pool, and repeated lookups return the same one.
+        assert!(std::ptr::eq(device_pool(0), WorkerPool::global()));
+        assert!(std::ptr::eq(device_pool(1), WorkerPool::global()));
+        let p2 = device_pool(2);
+        let p3 = device_pool(3);
+        assert!(!std::ptr::eq(p2, WorkerPool::global()));
+        assert!(!std::ptr::eq(p2, p3));
+        assert!(std::ptr::eq(p2, device_pool(2)));
+        // A per-device pool runs jobs like the global one.
+        let counter = Arc::new(AtomicU32::new(0));
+        let latch = Arc::new(Latch::new(4));
+        for _ in 0..4 {
+            let c = counter.clone();
+            let l = latch.clone();
+            p2.submit(Box::new(move || {
+                let _g = ArriveGuard(&l);
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        assert!(!latch.wait());
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //! * bounded-queue backpressure — [`crate::Error::Overloaded`] instead
 //!   of unbounded growth;
 //! * per-tenant [`ServeStats`] — admitted/served/rejected/expired/failed
-//!   counters and a [`BatchHistogram`] of formed batch sizes.
+//!   counters and a [`BatchHistogram`] of formed batch sizes;
+//! * multi-device serving — [`Service::on_set`] pins workers round-robin
+//!   onto [`crate::driver::DeviceSet`] members with per-member
+//!   utilization accounting (see `docs/devices.md`).
 //!
 //! The open-loop load harness lives in `benches/serve_load.rs`; the
 //! correctness suite in `rust/tests/serve.rs`.

@@ -30,6 +30,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::driver::DeviceSet;
 use crate::error::{Error, Result};
 use crate::tracetransform::{DeviceChoice, GpuAuto, Image, TraceImpl};
 
@@ -129,12 +130,22 @@ impl Ticket {
     }
 }
 
+/// Where a worker's pipeline comes from: a device choice (each worker
+/// builds its own context) or a shared [`DeviceSet`] (worker `i` is
+/// pinned to member `i % len`, round-robin).
+#[derive(Clone)]
+enum EngineSource {
+    Device(DeviceChoice),
+    Set(DeviceSet),
+}
+
 /// The in-process feature-serving engine. See the module docs for the
 /// request lifecycle; construction spins up the worker pool, [`Drop`]
 /// (or [`Service::shutdown`]) drains the queue and joins it.
 pub struct Service {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    set: Option<DeviceSet>,
 }
 
 impl Service {
@@ -142,6 +153,19 @@ impl Service {
     /// fixed angle set `thetas` (the angle table uploads once per worker
     /// pipeline and stays device-resident).
     pub fn new(device: DeviceChoice, thetas: &[f32], config: ServeConfig) -> Result<Service> {
+        Self::build(EngineSource::Device(device), thetas, config)
+    }
+
+    /// Build a service over a [`DeviceSet`]: worker `i` is pinned
+    /// round-robin to member `i % set.len()`, each with a single-lane
+    /// pipeline on that member's context. Per-member images and busy
+    /// time are recorded into the set — read them back through
+    /// [`Service::device_set`] for utilization reporting.
+    pub fn on_set(set: DeviceSet, thetas: &[f32], config: ServeConfig) -> Result<Service> {
+        Self::build(EngineSource::Set(set), thetas, config)
+    }
+
+    fn build(source: EngineSource, thetas: &[f32], config: ServeConfig) -> Result<Service> {
         if thetas.is_empty() {
             return Err(Error::Other("serving needs a non-empty angle set".into()));
         }
@@ -158,18 +182,23 @@ impl Service {
             stats: Mutex::new(HashMap::new()),
             config: config.clone(),
         });
+        let set = match &source {
+            EngineSource::Set(s) => Some(s.clone()),
+            EngineSource::Device(_) => None,
+        };
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(config.workers);
-        for _ in 0..config.workers {
+        for index in 0..config.workers {
             let shared = shared.clone();
             let thetas = thetas.to_vec();
             let ready = ready_tx.clone();
+            let source = source.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(shared, device, thetas, ready)
+                worker_loop(shared, source, index, thetas, ready)
             }));
         }
         drop(ready_tx);
-        let mut service = Service { shared, workers };
+        let mut service = Service { shared, workers, set };
         for _ in 0..service.workers.len() {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
@@ -184,6 +213,12 @@ impl Service {
             }
         }
         Ok(service)
+    }
+
+    /// The device set behind [`Service::on_set`] (per-member utilization
+    /// counters); `None` for per-device construction.
+    pub fn device_set(&self) -> Option<&DeviceSet> {
+        self.set.as_ref()
     }
 
     /// Submit with the config's default deadline budget.
@@ -291,14 +326,22 @@ impl Drop for Service {
 
 fn worker_loop(
     shared: Arc<Shared>,
-    device: DeviceChoice,
+    source: EngineSource,
+    index: usize,
     thetas: Vec<f32>,
     ready: Sender<Result<()>>,
 ) {
-    let mut engine = match GpuAuto::on_device(device) {
-        Ok(e) => {
+    let built = match source {
+        EngineSource::Device(device) => GpuAuto::on_device(device).map(|e| (e, None)),
+        EngineSource::Set(set) => {
+            let member = index % set.len();
+            GpuAuto::on_context(set.context(member).clone()).map(|e| (e, Some((set, member))))
+        }
+    };
+    let (mut engine, pin) = match built {
+        Ok(v) => {
             let _ = ready.send(Ok(()));
-            e
+            v
         }
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -306,7 +349,7 @@ fn worker_loop(
         }
     };
     while let Some(batch) = next_batch(&shared) {
-        run_batch(&shared, &mut engine, &thetas, batch);
+        run_batch(&shared, &mut engine, pin.as_ref(), &thetas, batch);
     }
 }
 
@@ -380,8 +423,15 @@ fn next_batch(shared: &Shared) -> Option<Vec<PendingReq>> {
 }
 
 /// Drop expired requests, run the survivors through the pipeline, and
-/// resolve every ticket.
-fn run_batch(shared: &Shared, engine: &mut GpuAuto, thetas: &[f32], batch: Vec<PendingReq>) {
+/// resolve every ticket. A worker pinned to a [`DeviceSet`] member
+/// records its images and busy time into the set.
+fn run_batch(
+    shared: &Shared,
+    engine: &mut GpuAuto,
+    pin: Option<&(DeviceSet, usize)>,
+    thetas: &[f32],
+    batch: Vec<PendingReq>,
+) {
     let now = Instant::now();
     let mut live = Vec::with_capacity(batch.len());
     for p in batch {
@@ -405,7 +455,15 @@ fn run_batch(shared: &Shared, engine: &mut GpuAuto, thetas: &[f32], batch: Vec<P
         return;
     }
     let images: Vec<Image> = live.iter().map(|p| p.image.clone()).collect();
-    match engine.features_batch(&images, thetas) {
+    let started = Instant::now();
+    let outcome = engine.features_batch(&images, thetas);
+    if let Some((set, member)) = pin {
+        set.record_busy(*member, started.elapsed().as_nanos() as u64);
+        if outcome.is_ok() {
+            set.record_images(*member, images.len() as u64);
+        }
+    }
+    match outcome {
         Ok(results) => {
             let n = live.len();
             let done = Instant::now();

@@ -8,7 +8,7 @@
 //! angle table and the image/sinogram buffers are device-resident
 //! (`arg::cu_dev` / `cu_dev_mut`), the `batched_sinogram` kernel is a
 //! bound [`KernelHandle`] launched with zero cache traffic, and the batch
-//! is split into two chunks whose uploads (on a leased upload stream,
+//! is split into chunks whose uploads (on a leased upload stream,
 //! allocating from its own pool arena) overlap the other chunk's compute
 //! (on a second leased stream, fenced by events) — the double-buffered
 //! pipeline. The stream pair is **leased per batch** from a
@@ -18,6 +18,19 @@
 //! the next batch leases it — the serve layer (`rust/src/serve`,
 //! `docs/serving.md`) relies on this to run many tenants' batches
 //! through one pipeline object.
+//!
+//! **Multi-device** (see `docs/devices.md`): a `GpuAuto` holds one
+//! [`DeviceLane`] — launcher, pipe cache, stream pool — per member of an
+//! optional [`DeviceSet`]. Under `HLGPU_SHARD=auto` (the default) a
+//! `features_batch` call on a multi-lane pipeline splits into contiguous
+//! chunks placed by least-outstanding-work and executed concurrently,
+//! one thread per lane, each running the same double-buffered two-stream
+//! pipeline it would run alone; the angle table is a
+//! [`ReplicatedArray`], uploaded lazily once per member. Every image's
+//! features depend only on its own pixels, so reassembling by image
+//! index makes the sharded result **bitwise identical** to the
+//! single-device path — `HLGPU_SHARD=off` pins everything to lane 0 and
+//! is the differential reference.
 //!
 //! Under the default `HLGPU_REDUCE=device` placement the P/F stage runs
 //! on the device too: `sinogram_all → circus_all → features_all` chain
@@ -31,15 +44,16 @@ use std::collections::HashMap;
 
 use crate::coordinator::{
     arg, checked_cfg, checked_cfg2, DeviceArray, KernelHandle, KernelRegistry, Launcher,
-    PendingDownload,
+    PendingDownload, ReplicatedArray,
 };
-use crate::driver::{BackendKind, Context, Event, LaunchConfig, StreamPool};
+use crate::driver::{BackendKind, Context, DeviceSet, Event, LaunchConfig, StreamPool};
 use crate::error::{Error, Result};
 use crate::tensor::{Dtype, Tensor};
 use crate::tracetransform::functionals::{reduce_sinogram, FEATURE_COUNT, P_SET, T_SET};
 use crate::tracetransform::image::Image;
 use crate::tracetransform::impls::{
-    default_reduce, register_trace_providers, DeviceChoice, ReduceMode, TraceImpl,
+    default_reduce, default_shard, register_trace_providers, DeviceChoice, ReduceMode, ShardMode,
+    TraceImpl,
 };
 
 /// Which kernel structure the automated path launches.
@@ -111,12 +125,12 @@ fn pipe_view<'m>(pipes: &'m HashMap<PipeKey, ChunkPipe>, key: &PipeKey) -> Resul
         .ok_or_else(|| state_desync(&format!("double-buffer pipe {key:?}")))
 }
 
-/// The device-resident angle table, or an error when it was never
-/// uploaded (or was invalidated) for this call.
-fn angle_entry(angles: &Option<(Vec<u32>, DeviceArray)>) -> Result<&DeviceArray> {
+/// The replicated angle table, or an error when it was never built (or
+/// was invalidated) for this call.
+fn angle_entry(angles: &Option<(Vec<u32>, ReplicatedArray)>) -> Result<&ReplicatedArray> {
     angles
         .as_ref()
-        .map(|(_, arr)| arr)
+        .map(|(_, rep)| rep)
         .ok_or_else(|| state_desync("device-resident angle table"))
 }
 
@@ -129,17 +143,18 @@ fn reduce_entry<'m>(
         .ok_or_else(|| state_desync(&format!("device-reduce buffers for (s,a)={key:?}")))
 }
 
-pub struct GpuAuto {
+/// One device's worth of pipeline state: a launcher over that device's
+/// context plus every per-context cache the batched path keeps warm. A
+/// single-device `GpuAuto` is exactly one lane; a sharded one holds one
+/// lane per [`DeviceSet`] member, and each lane's `run_chunks` is the
+/// same double-buffered two-stream pipeline the single-device path runs.
+struct DeviceLane {
     launcher: Launcher,
-    mode: AutoMode,
-    /// Device-resident angle table, uploaded once per distinct angle set
-    /// and reused across every subsequent call (keyed by the raw bits).
-    angles_dev: Option<(Vec<u32>, DeviceArray)>,
     /// Double-buffer pipeline state keyed by (chunk_len, size, angles,
-    /// slot, device_reduce) — two slots so chunk i+1's upload overlaps
-    /// chunk i's compute without aliasing buffers; the reduce placement
-    /// is part of the key because the pipes it builds differ.
-    pipes: HashMap<(usize, usize, usize, usize, bool), ChunkPipe>,
+    /// slot, device_reduce) — distinct slots so chunk i+1's upload
+    /// overlaps chunk i's compute without aliasing buffers; the reduce
+    /// placement is part of the key because the pipes it builds differ.
+    pipes: HashMap<PipeKey, ChunkPipe>,
     /// Single-image device-reduce buffers, keyed by (size, angles).
     reduce_bufs: HashMap<(usize, usize), ReduceBufs>,
     /// Pool the batched path leases its (upload, compute) stream pair
@@ -149,223 +164,59 @@ pub struct GpuAuto {
     streams: Option<StreamPool>,
 }
 
-impl GpuAuto {
-    pub fn new() -> Result<GpuAuto> {
-        Self::on_device(DeviceChoice::Pjrt)
-    }
-
-    pub fn on_device(device: DeviceChoice) -> Result<GpuAuto> {
-        let launcher = match device {
-            DeviceChoice::Pjrt => Launcher::with_default_context()?,
-            DeviceChoice::Emulator => {
-                let mut l = Launcher::emulator()?;
+impl DeviceLane {
+    /// A lane over an existing context: VTX contexts get an empty
+    /// registry with the trace providers registered, anything else gets
+    /// the default AOT artifact library.
+    fn on_context(ctx: Context) -> Result<DeviceLane> {
+        let launcher = match ctx.device().kind {
+            BackendKind::VtxEmulator => {
+                let mut l = Launcher::new(ctx, KernelRegistry::new(None));
                 register_trace_providers(l.registry_mut());
                 l
             }
+            BackendKind::Pjrt => Launcher::new(ctx, KernelRegistry::with_default_library()?),
         };
-        Ok(GpuAuto {
+        Ok(DeviceLane {
             launcher,
-            mode: AutoMode::SinogramAll,
-            angles_dev: None,
             pipes: HashMap::new(),
             reduce_bufs: HashMap::new(),
             streams: None,
         })
     }
 
-    pub fn with_mode(mut self, mode: AutoMode) -> Self {
-        self.mode = mode;
-        self
-    }
-
-    /// Single-launch variant using the AOT fused full-pipeline graph.
-    pub fn fused() -> Result<GpuAuto> {
-        let ctx = Context::default_device()?;
-        let registry = KernelRegistry::with_default_library()?;
-        Ok(GpuAuto {
-            launcher: Launcher::new(ctx, registry),
-            mode: AutoMode::TraceFull,
-            angles_dev: None,
+    fn from_launcher(launcher: Launcher) -> DeviceLane {
+        DeviceLane {
+            launcher,
             pipes: HashMap::new(),
             reduce_bufs: HashMap::new(),
             streams: None,
-        })
-    }
-
-    pub fn launcher(&self) -> &Launcher {
-        &self.launcher
-    }
-
-    pub fn launcher_mut(&mut self) -> &mut Launcher {
-        &mut self.launcher
-    }
-
-    /// The batched path's stream pool, once a batch has built it — the
-    /// serve layer and benches read its lease/quarantine counters.
-    pub fn stream_pool(&self) -> Option<&StreamPool> {
-        self.streams.as_ref()
-    }
-
-    /// True when this call's P/F stage runs on the device: the default
-    /// placement (`HLGPU_REDUCE`) on the emulator backend, fused
-    /// single-launch mode excluded (only the VTX registry carries the
-    /// `circus_all`/`features_all` lowerings).
-    fn device_reduce(&self) -> bool {
-        self.mode == AutoMode::SinogramAll
-            && self.launcher.context().device().kind == BackendKind::VtxEmulator
-            && default_reduce() == ReduceMode::Device
-    }
-
-    /// The device-resident angle table for `thetas`, uploading only when
-    /// the set changes.
-    fn angle_table(&mut self, thetas: &[f32]) -> Result<()> {
-        let key: Vec<u32> = thetas.iter().map(|t| t.to_bits()).collect();
-        let stale = match &self.angles_dev {
-            Some((k, _)) => *k != key,
-            None => true,
-        };
-        if stale {
-            let t = Tensor::from_f32(thetas, &[thetas.len()]);
-            let arr = DeviceArray::from_tensor(self.launcher.context(), &t)?;
-            self.angles_dev = Some((key, arr));
-        }
-        Ok(())
-    }
-}
-
-impl TraceImpl for GpuAuto {
-    fn name(&self) -> &'static str {
-        match self.mode {
-            AutoMode::SinogramAll => "gpu-auto",
-            AutoMode::PerFunctional => "gpu-auto-staged",
-            AutoMode::TraceFull => "gpu-auto-fused",
         }
     }
 
-    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
-        // SLOC:core-begin
-        let s = img.size();
-        let a = thetas.len();
-        let nt = T_SET.len();
-        let img_t = img.to_tensor();
-        let angles_t = Tensor::from_f32(thetas, &[a]);
-
-        match self.mode {
-            AutoMode::TraceFull => {
-                // one launch of the L2-fused pipeline
-                let mut out =
-                    Tensor::zeros_f32(&[crate::tracetransform::functionals::FEATURE_COUNT]);
-                self.launcher.launch(
-                    "trace_full",
-                    checked_cfg("trace_full", a, s)?,
-                    &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut out)],
-                )?;
-                Ok(out.to_vec_f32())
-            }
-            AutoMode::SinogramAll if self.device_reduce() => {
-                // Fully resident chain: the sinograms and circus
-                // functions never leave the device; the only d2h is the
-                // FEATURE_COUNT-float block.
-                let np = P_SET.len();
-                if !self.reduce_bufs.contains_key(&(s, a)) {
-                    let ctx = self.launcher.context().clone();
-                    self.reduce_bufs.insert(
-                        (s, a),
-                        ReduceBufs {
-                            sinos: DeviceArray::alloc(&ctx, Dtype::F32, &[nt, a, s])?,
-                            circus: DeviceArray::alloc(&ctx, Dtype::F32, &[nt, np, a])?,
-                            feats: DeviceArray::alloc(&ctx, Dtype::F32, &[FEATURE_COUNT])?,
-                        },
-                    );
-                }
-                let bufs = reduce_entry(&mut self.reduce_bufs, (s, a))?;
-                self.launcher.launch(
-                    "sinogram_all",
-                    checked_cfg("sinogram_all", a, s)?,
-                    &mut [
-                        arg::cu_in(&img_t),
-                        arg::cu_in(&angles_t),
-                        arg::cu_dev_mut(&mut bufs.sinos),
-                    ],
-                )?;
-                self.launcher.launch(
-                    "circus_all",
-                    checked_cfg("circus_all", a, s)?,
-                    &mut [arg::cu_dev(&bufs.sinos), arg::cu_dev_mut(&mut bufs.circus)],
-                )?;
-                self.launcher.launch(
-                    "features_all",
-                    checked_cfg("features_all", np, a)?,
-                    &mut [arg::cu_dev(&bufs.circus), arg::cu_dev_mut(&mut bufs.feats)],
-                )?;
-                Ok(bufs.feats.download()?.to_vec_f32())
-            }
-            AutoMode::SinogramAll => {
-                // @cuda (a, s) sinogram_all(CuIn(img), CuIn(angles), CuOut(sinos))
-                let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
-                self.launcher.launch(
-                    "sinogram_all",
-                    checked_cfg("sinogram_all", a, s)?,
-                    &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut sinos)],
-                )?;
-                let all = sinos.as_f32();
-                let mut feats = Vec::with_capacity(nt * 6);
-                for ti in 0..nt {
-                    feats.extend(reduce_sinogram(&all[ti * a * s..(ti + 1) * a * s], a, s));
-                }
-                Ok(feats)
-            }
-            AutoMode::PerFunctional => {
-                // the paper's structure: one kernel per T-functional,
-                // @cuda (a, s) sinogram_t(CuIn(img), CuIn(angles), CuOut(sino))
-                let mut feats = Vec::with_capacity(nt * 6);
-                let mut sino = Tensor::zeros_f32(&[a, s]);
-                for t in T_SET {
-                    self.launcher.launch(
-                        &format!("sinogram_{}", t.name()),
-                        checked_cfg(&format!("sinogram_{}", t.name()), a, s)?,
-                        &mut [
-                            arg::cu_in(&img_t),
-                            arg::cu_in(&angles_t),
-                            arg::cu_out(&mut sino),
-                        ],
-                    )?;
-                    feats.extend(reduce_sinogram(sino.as_f32(), a, s));
-                }
-                Ok(feats)
-            }
-        }
-        // SLOC:core-end
-    }
-
-    /// Batched path, launch API v2: the batch splits into two chunks
-    /// processed through a double-buffered two-stream pipeline. The
-    /// angle table and all kernel buffers are device-resident — the only
-    /// host↔device traffic at steady state is one stacked-image upload
-    /// per chunk and one sinogram download per chunk; the
-    /// `batched_sinogram` handle launches with zero specialization-cache
-    /// traffic.
-    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
-        if imgs.is_empty() {
-            return Ok(Vec::new());
-        }
-        let batched_ok = self.mode == AutoMode::SinogramAll
-            && self.launcher.context().device().kind == BackendKind::VtxEmulator
-            && imgs.iter().all(|i| i.size() == imgs[0].size());
-        if !batched_ok {
-            // PJRT artifacts and the ablation modes have no batched
-            // lowering — sequential fallback
-            return imgs.iter().map(|img| self.features(img, thetas)).collect();
-        }
+    /// Run `chunks` — disjoint `(lo, hi)` index ranges into `imgs`, all
+    /// of one image size — through this lane's double-buffered
+    /// two-stream pipeline, writing image `i`'s feature vector into
+    /// `out[i]`. This is the whole batched pipeline for one device; the
+    /// single-device path calls it once with the classic two-chunk
+    /// split, the sharded path calls it concurrently on every lane with
+    /// that lane's placed chunks.
+    fn run_chunks(
+        &mut self,
+        imgs: &[Image],
+        chunks: &[(usize, usize)],
+        angles: &ReplicatedArray,
+        dev_reduce: bool,
+        out: &mut [Vec<f32>],
+    ) -> Result<()> {
         let s = imgs[0].size();
-        let n = imgs.len();
-        let a = thetas.len();
+        let a = angles.master().shape()[0];
         let nt = T_SET.len();
         let np = P_SET.len();
-        let dev_reduce = self.device_reduce();
-
         let ctx = self.launcher.context().clone();
-        self.angle_table(thetas)?;
+        // This lane's replica of the angle table — uploaded on the first
+        // batch this member sees, resident afterwards.
+        let angles_dev = angles.on(&ctx)?;
 
         // Lease this batch's (upload, compute) stream pair. The pool is
         // built lazily with capacity 2, so warm batches lease the same
@@ -377,21 +228,13 @@ impl TraceImpl for GpuAuto {
         let upload = streams.checkout();
         let compute = streams.checkout();
 
-        // Two chunks double-buffer: chunk 1's upload overlaps chunk 0's
-        // compute. A singleton batch degenerates to one chunk.
-        let half = n.div_ceil(2);
-        let mut bounds = vec![(0usize, half)];
-        if half < n {
-            bounds.push((half, n));
-        }
-
         // Bind handles + allocate device buffers per (chunk shape, slot),
         // reused across batches. Image buffers live in the upload
         // stream's arena, sinograms in the compute stream's — concurrent
         // stages allocate and copy without sharing a pool lock. On the
         // device-reduce path each slot also carries its circus/feature
         // buffers and the bound P/F-stage handles.
-        for (slot, &(lo, hi)) in bounds.iter().enumerate() {
+        for (slot, &(lo, hi)) in chunks.iter().enumerate() {
             let len = hi - lo;
             let key = (len, s, a, slot, dev_reduce);
             if !self.pipes.contains_key(&key) {
@@ -400,12 +243,11 @@ impl TraceImpl for GpuAuto {
                 let imgs_dev = DeviceArray::alloc_in(&ctx, up_arena, Dtype::F32, &[len, s, s])?;
                 let mut sinos_dev =
                     DeviceArray::alloc_in(&ctx, co_arena, Dtype::F32, &[len, nt, a, s])?;
-                let angles_dev = angle_entry(&self.angles_dev)?;
                 let handle = self.launcher.bind(
                     "batched_sinogram",
                     &[
                         arg::cu_dev(&imgs_dev),
-                        arg::cu_dev(angles_dev),
+                        arg::cu_dev(&angles_dev),
                         arg::cu_dev_mut(&mut sinos_dev),
                     ],
                 )?;
@@ -443,7 +285,7 @@ impl TraceImpl for GpuAuto {
         let cfg = LaunchConfig::new(1u32, 1u32); // VTX providers pick their own grids
         let mut sino_pendings = Vec::new();
         let mut feat_pendings: Vec<(usize, usize, PendingDownload<'_>)> = Vec::new();
-        for (slot, &(lo, hi)) in bounds.iter().enumerate() {
+        for (slot, &(lo, hi)) in chunks.iter().enumerate() {
             let len = hi - lo;
             let pipe = pipe_entry(&mut self.pipes, &(len, s, a, slot, dev_reduce))?;
             let mut bytes = Vec::with_capacity(len * s * s * 4);
@@ -456,13 +298,12 @@ impl TraceImpl for GpuAuto {
             let uploaded = Event::new();
             upload.record_event(&uploaded)?;
             compute.wait_event(&uploaded)?;
-            let angles_dev = angle_entry(&self.angles_dev)?;
             let pending = pipe.handle.launch_on(
                 &compute,
                 checked_cfg2("batched_sinogram", (a, len), s)?,
                 &mut [
                     arg::cu_dev(&pipe.imgs),
-                    arg::cu_dev(angles_dev),
+                    arg::cu_dev(&angles_dev),
                     arg::cu_dev_mut(&mut pipe.sinos),
                 ],
             )?;
@@ -487,7 +328,6 @@ impl TraceImpl for GpuAuto {
             }
         }
 
-        let mut out = vec![Vec::new(); n];
         if dev_reduce {
             // Stage 3, device reduce: join each chunk's feature readback
             // — FEATURE_COUNT floats per image, zero sinogram d2h.
@@ -498,7 +338,7 @@ impl TraceImpl for GpuAuto {
                     *feats_slot = all[i * FEATURE_COUNT..(i + 1) * FEATURE_COUNT].to_vec();
                 }
             }
-            return Ok(out);
+            return Ok(());
         }
 
         // Stage 3, host reduce: join chunks in order, download each
@@ -516,6 +356,394 @@ impl TraceImpl for GpuAuto {
                     feats.extend(reduce_sinogram(&all[off..off + a * s], a, s));
                 }
                 *feats_slot = feats;
+            }
+        }
+        Ok(())
+    }
+}
+
+pub struct GpuAuto {
+    /// One lane per device. Lane 0 is the "home" device: the
+    /// single-image path, the shard-off path, and the
+    /// [`GpuAuto::launcher`] accessor all use it.
+    lanes: Vec<DeviceLane>,
+    mode: AutoMode,
+    /// The angle table, replicated lazily across lanes — built once per
+    /// distinct angle set (keyed by the raw bits) and reused across
+    /// every subsequent call.
+    angles: Option<(Vec<u32>, ReplicatedArray)>,
+    /// The scheduling group behind a multi-lane pipeline: placement
+    /// counters and per-member utilization stats. `None` on the classic
+    /// single-device construction.
+    set: Option<DeviceSet>,
+    /// Per-instance sharding override; `None` defers to
+    /// [`default_shard`] (`HLGPU_SHARD`).
+    shard: Option<ShardMode>,
+}
+
+impl GpuAuto {
+    pub fn new() -> Result<GpuAuto> {
+        Self::on_device(DeviceChoice::Pjrt)
+    }
+
+    pub fn on_device(device: DeviceChoice) -> Result<GpuAuto> {
+        match device {
+            DeviceChoice::Pjrt => Ok(Self::single(DeviceLane::from_launcher(
+                Launcher::with_default_context()?,
+            ))),
+            DeviceChoice::Emulator => {
+                // `HLGPU_DEVICES` makes more than one emulator device
+                // visible: build a lane per device so batches can shard.
+                let devs = crate::driver::emulator_devices();
+                if devs.len() > 1 {
+                    return Self::on_set(DeviceSet::new(&devs)?);
+                }
+                let mut l = Launcher::emulator()?;
+                register_trace_providers(l.registry_mut());
+                Ok(Self::single(DeviceLane::from_launcher(l)))
+            }
+        }
+    }
+
+    /// A single-lane pipeline pinned to an existing context — how the
+    /// serve layer binds one worker to one [`DeviceSet`] member.
+    pub fn on_context(ctx: Context) -> Result<GpuAuto> {
+        Ok(Self::single(DeviceLane::on_context(ctx)?))
+    }
+
+    /// A multi-lane pipeline over every member of `set`. Batches shard
+    /// across the members under [`ShardMode::Auto`]; everything else
+    /// (single-image calls, shard-off batches) runs on member 0.
+    pub fn on_set(set: DeviceSet) -> Result<GpuAuto> {
+        let mut lanes = Vec::with_capacity(set.len());
+        for i in 0..set.len() {
+            lanes.push(DeviceLane::on_context(set.context(i).clone())?);
+        }
+        Ok(GpuAuto {
+            lanes,
+            mode: AutoMode::SinogramAll,
+            angles: None,
+            set: Some(set),
+            shard: None,
+        })
+    }
+
+    fn single(lane: DeviceLane) -> GpuAuto {
+        GpuAuto {
+            lanes: vec![lane],
+            mode: AutoMode::SinogramAll,
+            angles: None,
+            set: None,
+            shard: None,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: AutoMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Per-instance sharding override (`Some(ShardMode::Off)` pins every
+    /// batch to lane 0); `None` defers to `HLGPU_SHARD`.
+    pub fn with_shard(mut self, shard: Option<ShardMode>) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    /// Single-launch variant using the AOT fused full-pipeline graph.
+    pub fn fused() -> Result<GpuAuto> {
+        let ctx = Context::default_device()?;
+        let registry = KernelRegistry::with_default_library()?;
+        let mut auto = Self::single(DeviceLane::from_launcher(Launcher::new(ctx, registry)));
+        auto.mode = AutoMode::TraceFull;
+        Ok(auto)
+    }
+
+    pub fn launcher(&self) -> &Launcher {
+        &self.lanes[0].launcher
+    }
+
+    pub fn launcher_mut(&mut self) -> &mut Launcher {
+        &mut self.lanes[0].launcher
+    }
+
+    /// Number of device lanes this pipeline can shard across.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The scheduling group behind a multi-lane pipeline (per-member
+    /// shard/image/busy counters), when one exists.
+    pub fn device_set(&self) -> Option<&DeviceSet> {
+        self.set.as_ref()
+    }
+
+    /// Lane 0's stream pool, once a batch has built it — the serve layer
+    /// and benches read its lease/quarantine counters.
+    pub fn stream_pool(&self) -> Option<&StreamPool> {
+        self.lanes[0].streams.as_ref()
+    }
+
+    /// True when this call's P/F stage runs on the device: the default
+    /// placement (`HLGPU_REDUCE`) on the emulator backend, fused
+    /// single-launch mode excluded (only the VTX registry carries the
+    /// `circus_all`/`features_all` lowerings).
+    fn device_reduce(&self) -> bool {
+        self.mode == AutoMode::SinogramAll
+            && self.lanes[0].launcher.context().device().kind == BackendKind::VtxEmulator
+            && default_reduce() == ReduceMode::Device
+    }
+
+    /// The replicated angle table for `thetas`, rebuilt only when the
+    /// set changes; per-lane uploads happen lazily inside `run_chunks`.
+    fn angle_table(&mut self, thetas: &[f32]) -> Result<()> {
+        let key: Vec<u32> = thetas.iter().map(|t| t.to_bits()).collect();
+        let stale = match &self.angles {
+            Some((k, _)) => *k != key,
+            None => true,
+        };
+        if stale {
+            let t = Tensor::from_f32(thetas, &[thetas.len()]);
+            self.angles = Some((key, ReplicatedArray::new(t)));
+        }
+        Ok(())
+    }
+}
+
+impl TraceImpl for GpuAuto {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            AutoMode::SinogramAll => "gpu-auto",
+            AutoMode::PerFunctional => "gpu-auto-staged",
+            AutoMode::TraceFull => "gpu-auto-fused",
+        }
+    }
+
+    fn features(&mut self, img: &Image, thetas: &[f32]) -> Result<Vec<f32>> {
+        // SLOC:core-begin
+        let s = img.size();
+        let a = thetas.len();
+        let nt = T_SET.len();
+        let img_t = img.to_tensor();
+        let angles_t = Tensor::from_f32(thetas, &[a]);
+        let dev_reduce = self.device_reduce();
+        let lane = &mut self.lanes[0];
+
+        match self.mode {
+            AutoMode::TraceFull => {
+                // one launch of the L2-fused pipeline
+                let mut out =
+                    Tensor::zeros_f32(&[crate::tracetransform::functionals::FEATURE_COUNT]);
+                lane.launcher.launch(
+                    "trace_full",
+                    checked_cfg("trace_full", a, s)?,
+                    &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut out)],
+                )?;
+                Ok(out.to_vec_f32())
+            }
+            AutoMode::SinogramAll if dev_reduce => {
+                // Fully resident chain: the sinograms and circus
+                // functions never leave the device; the only d2h is the
+                // FEATURE_COUNT-float block.
+                let np = P_SET.len();
+                if !lane.reduce_bufs.contains_key(&(s, a)) {
+                    let ctx = lane.launcher.context().clone();
+                    lane.reduce_bufs.insert(
+                        (s, a),
+                        ReduceBufs {
+                            sinos: DeviceArray::alloc(&ctx, Dtype::F32, &[nt, a, s])?,
+                            circus: DeviceArray::alloc(&ctx, Dtype::F32, &[nt, np, a])?,
+                            feats: DeviceArray::alloc(&ctx, Dtype::F32, &[FEATURE_COUNT])?,
+                        },
+                    );
+                }
+                let bufs = reduce_entry(&mut lane.reduce_bufs, (s, a))?;
+                lane.launcher.launch(
+                    "sinogram_all",
+                    checked_cfg("sinogram_all", a, s)?,
+                    &mut [
+                        arg::cu_in(&img_t),
+                        arg::cu_in(&angles_t),
+                        arg::cu_dev_mut(&mut bufs.sinos),
+                    ],
+                )?;
+                lane.launcher.launch(
+                    "circus_all",
+                    checked_cfg("circus_all", a, s)?,
+                    &mut [arg::cu_dev(&bufs.sinos), arg::cu_dev_mut(&mut bufs.circus)],
+                )?;
+                lane.launcher.launch(
+                    "features_all",
+                    checked_cfg("features_all", np, a)?,
+                    &mut [arg::cu_dev(&bufs.circus), arg::cu_dev_mut(&mut bufs.feats)],
+                )?;
+                Ok(bufs.feats.download()?.to_vec_f32())
+            }
+            AutoMode::SinogramAll => {
+                // @cuda (a, s) sinogram_all(CuIn(img), CuIn(angles), CuOut(sinos))
+                let mut sinos = Tensor::zeros_f32(&[nt, a, s]);
+                lane.launcher.launch(
+                    "sinogram_all",
+                    checked_cfg("sinogram_all", a, s)?,
+                    &mut [arg::cu_in(&img_t), arg::cu_in(&angles_t), arg::cu_out(&mut sinos)],
+                )?;
+                let all = sinos.as_f32();
+                let mut feats = Vec::with_capacity(nt * 6);
+                for ti in 0..nt {
+                    feats.extend(reduce_sinogram(&all[ti * a * s..(ti + 1) * a * s], a, s));
+                }
+                Ok(feats)
+            }
+            AutoMode::PerFunctional => {
+                // the paper's structure: one kernel per T-functional,
+                // @cuda (a, s) sinogram_t(CuIn(img), CuIn(angles), CuOut(sino))
+                let mut feats = Vec::with_capacity(nt * 6);
+                let mut sino = Tensor::zeros_f32(&[a, s]);
+                for t in T_SET {
+                    lane.launcher.launch(
+                        &format!("sinogram_{}", t.name()),
+                        checked_cfg(&format!("sinogram_{}", t.name()), a, s)?,
+                        &mut [
+                            arg::cu_in(&img_t),
+                            arg::cu_in(&angles_t),
+                            arg::cu_out(&mut sino),
+                        ],
+                    )?;
+                    feats.extend(reduce_sinogram(sino.as_f32(), a, s));
+                }
+                Ok(feats)
+            }
+        }
+        // SLOC:core-end
+    }
+
+    /// Batched path, launch API v2: the batch splits into chunks
+    /// processed through a double-buffered two-stream pipeline — on one
+    /// lane (classic two-chunk split), or sharded across every lane of a
+    /// multi-device pipeline under [`ShardMode::Auto`]. The angle table
+    /// and all kernel buffers are device-resident — the only
+    /// host↔device traffic at steady state is one stacked-image upload
+    /// per chunk and one result download per chunk; the
+    /// `batched_sinogram` handles launch with zero specialization-cache
+    /// traffic. Sharded output is reassembled by image index and is
+    /// bitwise identical to the single-lane path.
+    fn features_batch(&mut self, imgs: &[Image], thetas: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if imgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batched_ok = self.mode == AutoMode::SinogramAll
+            && self.lanes[0].launcher.context().device().kind == BackendKind::VtxEmulator
+            && imgs.iter().all(|i| i.size() == imgs[0].size());
+        if !batched_ok {
+            // PJRT artifacts and the ablation modes have no batched
+            // lowering — sequential fallback
+            return imgs.iter().map(|img| self.features(img, thetas)).collect();
+        }
+        let n = imgs.len();
+        let dev_reduce = self.device_reduce();
+        let shard = self.shard.unwrap_or_else(default_shard);
+        self.angle_table(thetas)?;
+
+        let set = if shard == ShardMode::Auto && self.lanes.len() > 1 && n >= 2 {
+            self.set.clone()
+        } else {
+            None
+        };
+        let rep = angle_entry(&self.angles)?;
+        let mut out = vec![Vec::new(); n];
+        let set = match set {
+            None => {
+                // Classic single-device path (and the shard-off
+                // differential reference): two chunks double-buffer —
+                // chunk 1's upload overlaps chunk 0's compute. A
+                // singleton batch degenerates to one chunk.
+                let half = n.div_ceil(2);
+                let mut chunks = vec![(0usize, half)];
+                if half < n {
+                    chunks.push((half, n));
+                }
+                self.lanes[0].run_chunks(imgs, &chunks, rep, dev_reduce, &mut out)?;
+                return Ok(out);
+            }
+            Some(s) => s,
+        };
+
+        // Sharded path. Deterministic contiguous chunking: double-buffer
+        // depth (two chunks) per lane, but never more chunks than
+        // images.
+        let nlanes = self.lanes.len();
+        let nchunks = (2 * nlanes).min(n);
+        let per = n.div_ceil(nchunks);
+        let mut chunks = Vec::with_capacity(nchunks);
+        let mut next = 0usize;
+        while next < n {
+            let hi = (next + per).min(n);
+            chunks.push((next, hi));
+            next = hi;
+        }
+        // Serial placement in chunk order: least outstanding work, ties
+        // to the lowest member — deterministic for a quiet set.
+        let mut per_lane: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nlanes];
+        for &(clo, chi) in &chunks {
+            let m = set.place((chi - clo) as u64);
+            per_lane[m].push((clo, chi));
+        }
+        // One thread per lane with placed work; each runs its own
+        // double-buffered pipeline on its own context, so the only
+        // shared state is the replicated angle table (internally
+        // locked) and the set's counters (atomics).
+        let lane_results: Vec<Result<Vec<Vec<f32>>>> = std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for (li, (lane, lane_chunks)) in
+                self.lanes.iter_mut().zip(per_lane.iter()).enumerate()
+            {
+                if lane_chunks.is_empty() {
+                    joins.push(None);
+                    continue;
+                }
+                let set = set.clone();
+                joins.push(Some(scope.spawn(move || {
+                    let start = std::time::Instant::now();
+                    let mut local = vec![Vec::new(); n];
+                    let r = lane.run_chunks(imgs, lane_chunks, rep, dev_reduce, &mut local);
+                    let weight: u64 =
+                        lane_chunks.iter().map(|&(lo, hi)| (hi - lo) as u64).sum();
+                    set.complete(li, weight);
+                    set.record_busy(li, start.elapsed().as_nanos() as u64);
+                    if r.is_ok() {
+                        set.record_images(li, weight);
+                    }
+                    r.map(|()| local)
+                })));
+            }
+            joins
+                .into_iter()
+                .flatten()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(Error::Other("a sharded pipeline lane panicked".into()))
+                    })
+                })
+                .collect()
+        });
+        // First error wins, in lane order.
+        let mut locals = Vec::with_capacity(lane_results.len());
+        for r in lane_results {
+            locals.push(r?);
+        }
+        // Reassemble by global image index. Each image's features depend
+        // only on its own pixels, so the shard composition leaves the
+        // bits unchanged relative to single-device execution.
+        let mut it = locals.into_iter();
+        for lane_chunks in per_lane.iter() {
+            if lane_chunks.is_empty() {
+                continue;
+            }
+            let mut local = it.next().ok_or_else(|| state_desync("sharded lane results"))?;
+            for &(clo, chi) in lane_chunks {
+                for (slot, got) in out[clo..chi].iter_mut().zip(local[clo..chi].iter_mut()) {
+                    *slot = std::mem::take(got);
+                }
             }
         }
         Ok(out)
@@ -537,7 +765,11 @@ mod tests {
         let imgs: Vec<_> = (0..3)
             .map(|i| crate::tracetransform::image::random_phantom(10, i as u64))
             .collect();
-        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        // Counts below are per-lane-0; pin sharding off so they hold
+        // under `HLGPU_DEVICES>1`.
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
         // 3 images split into chunks of 2 and 1 — two call shapes; the
         // device-reduce chain binds 3 kernels per shape, the host path 1
         let per_shape: u64 = if m.device_reduce() { 3 } else { 1 };
@@ -568,7 +800,9 @@ mod tests {
         let imgs: Vec<_> = (0..4)
             .map(|i| crate::tracetransform::image::random_phantom(10, 20 + i as u64))
             .collect();
-        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
         m.features_batch(&imgs, &thetas).unwrap(); // cold: builds pipes
         m.launcher().context().memory().unwrap().reset_stats();
         m.features_batch(&imgs, &thetas).unwrap();
@@ -596,7 +830,9 @@ mod tests {
         let imgs: Vec<_> = (0..5)
             .map(|i| crate::tracetransform::image::random_phantom(12, 90 + i as u64))
             .collect();
-        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
         m.features_batch(&imgs, &thetas).unwrap(); // cold
         m.launcher().context().memory().unwrap().reset_stats();
         let lm_before = m.launcher().metrics();
@@ -668,9 +904,11 @@ mod tests {
             .collect();
         let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
         let before = m.features_batch(&imgs, &thetas).unwrap();
-        m.pipes.clear();
-        m.angles_dev = None;
-        m.reduce_bufs.clear();
+        m.angles = None;
+        for lane in &mut m.lanes {
+            lane.pipes.clear();
+            lane.reduce_bufs.clear();
+        }
         let after = m.features_batch(&imgs, &thetas).unwrap();
         assert_eq!(before, after, "rebuilt pipeline is bitwise-identical");
     }
@@ -686,15 +924,71 @@ mod tests {
         let imgs: Vec<_> = (0..4)
             .map(|i| crate::tracetransform::image::random_phantom(10, 50 + i as u64))
             .collect();
-        let mut m = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        let mut m = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
         m.features_batch(&imgs, &thetas).unwrap();
         m.features_batch(&imgs, &thetas).unwrap();
-        let pool = m.streams.as_ref().expect("pool built on first batch");
+        let pool = m.stream_pool().expect("pool built on first batch");
         let st = pool.stats();
         assert_eq!(st.created, 2, "pool creates exactly the double-buffer pair");
         assert_eq!(st.leases, 4, "two leases per batch");
         assert_eq!(st.quarantined, 0, "clean batches quarantine nothing");
         assert_eq!(pool.idle_count(), 2, "both streams returned after the batch");
+    }
+
+    /// Tentpole acceptance criterion: a batch sharded across a
+    /// 2- or 4-member `DeviceSet` is **bitwise identical** to the
+    /// single-device pipeline, and the set's accounting shows the work
+    /// actually spread and every shard retired.
+    #[test]
+    fn sharded_batch_is_bitwise_identical_to_single_device() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let thetas = orientations(7);
+        let imgs: Vec<_> = (0..9)
+            .map(|i| crate::tracetransform::image::random_phantom(12, 200 + i as u64))
+            .collect();
+        let mut single = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
+        let reference = single.features_batch(&imgs, &thetas).unwrap();
+        for k in [2usize, 4] {
+            let set = DeviceSet::emulator(k).unwrap();
+            let mut sharded = GpuAuto::on_set(set)
+                .unwrap()
+                .with_shard(Some(ShardMode::Auto));
+            assert_eq!(sharded.lane_count(), k);
+            let got = sharded.features_batch(&imgs, &thetas).unwrap();
+            assert_eq!(got, reference, "{k}-device shard must be bitwise identical");
+            let stats = sharded.device_set().unwrap().stats();
+            let total: u64 = stats.iter().map(|s| s.images).sum();
+            assert_eq!(total, imgs.len() as u64, "every image accounted to a member");
+            assert!(stats.iter().all(|s| s.outstanding == 0), "all shards retired");
+            assert!(
+                stats.iter().filter(|s| s.images > 0).count() >= 2,
+                "work spread across members: {stats:?}"
+            );
+        }
+    }
+
+    /// Shard-off on a multi-lane pipeline is the single-device path:
+    /// nothing moves through the set, and the other members' contexts
+    /// see zero traffic.
+    #[test]
+    fn shard_off_runs_everything_on_lane_zero() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let thetas = orientations(5);
+        let imgs: Vec<_> = (0..4)
+            .map(|i| crate::tracetransform::image::random_phantom(10, 300 + i as u64))
+            .collect();
+        let set = DeviceSet::emulator(2).unwrap();
+        let mut m = GpuAuto::on_set(set).unwrap().with_shard(Some(ShardMode::Off));
+        m.features_batch(&imgs, &thetas).unwrap();
+        let stats = m.device_set().unwrap().stats();
+        assert!(stats.iter().all(|s| s.images == 0), "shard-off bypasses the set: {stats:?}");
+        let idle = m.device_set().unwrap().context(1).mem_stats().unwrap();
+        assert_eq!(idle.h2d_count, 0, "member 1 saw no uploads");
+        assert_eq!(idle.alloc_count, 0, "member 1 allocated nothing");
     }
 
     #[test]

@@ -115,6 +115,71 @@ pub fn default_reduce() -> ReduceMode {
     ReduceMode::Device
 }
 
+/// Whether the batched trace pipeline shards a `features_batch` call
+/// across the members of a [`DeviceSet`](crate::driver::DeviceSet) (the
+/// `HLGPU_SHARD` knob).
+///
+/// * `Auto` (the default): when the pipeline holds more than one device
+///   lane, the batch is split into contiguous chunks placed by
+///   least-outstanding-work and executed concurrently, one thread per
+///   lane; results are reassembled by image index and are bitwise
+///   identical to the single-device path (each image's features depend
+///   only on its own pixels).
+/// * `Off`: always run the classic single-device double-buffered
+///   pipeline on lane 0 — the differential reference, and what
+///   count-asserting tests pin so per-context transfer counters stay
+///   meaningful under `HLGPU_DEVICES>1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardMode {
+    Auto,
+    Off,
+}
+
+impl ShardMode {
+    /// Parse an `HLGPU_SHARD` value; unknown values select no mode.
+    pub fn parse(v: &str) -> Option<ShardMode> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "auto" | "on" => Some(ShardMode::Auto),
+            "off" | "none" => Some(ShardMode::Off),
+            _ => None,
+        }
+    }
+}
+
+/// Programmatic shard-mode override (0 = unset, 1 = auto, 2 = off),
+/// mirroring [`set_default_reduce`].
+static SHARD_OVERRIDE: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Override the sharding policy for pipelines that do not specify one
+/// (process-wide). Pass `None` to clear. Per-instance
+/// [`GpuAuto::with_shard`] takes precedence over this.
+pub fn set_default_shard(mode: Option<ShardMode>) {
+    SHARD_OVERRIDE.store(
+        match mode {
+            None => 0,
+            Some(ShardMode::Auto) => 1,
+            Some(ShardMode::Off) => 2,
+        },
+        std::sync::atomic::Ordering::Relaxed,
+    );
+}
+
+/// The sharding policy used by pipelines that do not specify one: the
+/// [`set_default_shard`] override, else `HLGPU_SHARD`, else `Auto`.
+pub fn default_shard() -> ShardMode {
+    match SHARD_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => return ShardMode::Auto,
+        2 => return ShardMode::Off,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("HLGPU_SHARD") {
+        if let Some(m) = ShardMode::parse(&v) {
+            return m;
+        }
+    }
+    ShardMode::Auto
+}
+
 /// Serializes tests that flip (or assert counts depending on) the
 /// process-wide reduce-mode override — flipping is observationally
 /// harmless for concurrent pipelines, but transfer/specialization
@@ -423,7 +488,12 @@ mod tests {
         let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let thetas = orientations(6);
         let imgs: Vec<Image> = (0..4).map(|i| random_phantom(12, 50 + i as u64)).collect();
-        let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        // Pin sharding off: the counts below are per-context, and under
+        // `HLGPU_DEVICES>1` + shard auto the batch would spread across
+        // lanes whose contexts this test does not inspect.
+        let mut auto = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
         // warm both specializations so steady-state transfers compare
         auto.features(&imgs[0], &thetas).unwrap();
         auto.features_batch(&imgs, &thetas).unwrap();

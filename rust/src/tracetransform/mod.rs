@@ -13,6 +13,6 @@ pub use functionals::{
 };
 pub use image::{orientations, random_phantom, shepp_logan, Image};
 pub use impls::{
-    default_reduce, set_default_reduce, AutoMode, CpuDynamic, CpuNative, DeviceChoice, GpuAuto,
-    GpuDynamic, GpuManual, ReduceMode, TraceImpl,
+    default_reduce, default_shard, set_default_reduce, set_default_shard, AutoMode, CpuDynamic,
+    CpuNative, DeviceChoice, GpuAuto, GpuDynamic, GpuManual, ReduceMode, ShardMode, TraceImpl,
 };

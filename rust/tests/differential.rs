@@ -650,3 +650,97 @@ fn device_reduce_matches_reduce_sinogram_across_t_sizes_and_seeds() {
         }
     }
 }
+
+// ---------------------------------------------------------------- part 5 --
+//
+// Multi-device equivalence: sharding a `features_batch` across a
+// `DeviceSet` must be *bitwise* identical to running the same batch on a
+// single device.  Each image's feature block is computed independently
+// (the batched kernels grid over `(angle, image)` and never mix images),
+// chunks are placed deterministically, and reassembly is by absolute
+// index — so the shard seams cannot perturb a single bit.
+
+/// Sharded execution across 2- and 4-member device sets reproduces the
+/// single-device result exactly, cold and warm.
+#[test]
+fn sharded_batch_matches_single_device_bitwise() {
+    use hlgpu::driver::DeviceSet;
+    use hlgpu::tracetransform::ShardMode;
+
+    let thetas = orientations(9);
+    for (size, n, seed0) in [(12usize, 5usize, 500u64), (16, 11, 600)] {
+        let imgs: Vec<_> = (0..n)
+            .map(|i| random_phantom(size, seed0 + i as u64))
+            .collect();
+
+        let mut single = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
+        let want = single.features_batch(&imgs, &thetas).unwrap();
+
+        for k in [2usize, 4] {
+            let mut multi = GpuAuto::on_set(DeviceSet::emulator(k).unwrap())
+                .unwrap()
+                .with_shard(Some(ShardMode::Auto));
+            let cold = multi.features_batch(&imgs, &thetas).unwrap();
+            assert_eq!(cold, want, "cold {k}-device shard s={size} n={n}");
+            // Warm pass: every lane reuses its cached pipes + replicas.
+            let warm = multi.features_batch(&imgs, &thetas).unwrap();
+            assert_eq!(warm, want, "warm {k}-device shard s={size} n={n}");
+        }
+    }
+}
+
+/// A set with asymmetric per-member memory capacities (the
+/// `HLGPU_DEV_MEM` shape, built here via `Device::emulator_at`) shards
+/// correctly as long as every member can hold its chunk working set.
+#[test]
+fn mixed_capacity_set_matches_single_device_bitwise() {
+    use hlgpu::driver::{device_count, Device, DeviceSet};
+    use hlgpu::tracetransform::ShardMode;
+
+    let thetas = orientations(7);
+    let imgs: Vec<_> = (0..6).map(|i| random_phantom(12, 700 + i)).collect();
+
+    let mut single = GpuAuto::on_device(DeviceChoice::Emulator)
+        .unwrap()
+        .with_shard(Some(ShardMode::Off));
+    let want = single.features_batch(&imgs, &thetas).unwrap();
+
+    // One roomy member, one deliberately small (16 MiB) member: plenty
+    // for a few 12x12 chunks, nothing like the default capacity.
+    let base = device_count();
+    let set = DeviceSet::new(&[
+        Device::emulator_at(base, None),
+        Device::emulator_at(base + 1, Some(16 << 20)),
+    ])
+    .unwrap();
+    let mut multi = GpuAuto::on_set(set)
+        .unwrap()
+        .with_shard(Some(ShardMode::Auto));
+    let got = multi.features_batch(&imgs, &thetas).unwrap();
+    assert_eq!(got, want, "asymmetric-capacity shard diverged");
+}
+
+/// Degenerate shards: a single-image batch cannot be split (the sharded
+/// path requires at least two images) and an empty batch short-circuits;
+/// both must agree with the single-device path.
+#[test]
+fn degenerate_batches_shard_identically() {
+    use hlgpu::driver::DeviceSet;
+    use hlgpu::tracetransform::ShardMode;
+
+    let thetas = orientations(6);
+    let img = vec![random_phantom(10, 42)];
+
+    let mut single = GpuAuto::on_device(DeviceChoice::Emulator)
+        .unwrap()
+        .with_shard(Some(ShardMode::Off));
+    let want = single.features_batch(&img, &thetas).unwrap();
+
+    let mut multi = GpuAuto::on_set(DeviceSet::emulator(3).unwrap())
+        .unwrap()
+        .with_shard(Some(ShardMode::Auto));
+    assert_eq!(multi.features_batch(&img, &thetas).unwrap(), want);
+    assert!(multi.features_batch(&[], &thetas).unwrap().is_empty());
+}

@@ -440,3 +440,80 @@ fn two_stream_batched_pipeline_matches_sequential() {
         }
     }
 }
+
+// ----------------------------------------- multi-device handle migration --
+
+/// A vadd launcher bound to a caller-supplied context (a `DeviceSet`
+/// member) instead of the process-default emulator device.
+fn vadd_launcher_on(ctx: Context) -> Launcher {
+    let mut l = Launcher::new(ctx, hlgpu::coordinator::KernelRegistry::new(None));
+    l.registry_mut().register_vtx("vadd", |specs| {
+        let n = specs[0].numel();
+        Ok(VtxSpec {
+            kernel: hlgpu::emulator::kernels::vadd()?,
+            scalars: vec![KernelArg::I32(n as i32)],
+            config: LaunchConfig::new((n as u32).div_ceil(256), 256u32),
+        })
+    });
+    l
+}
+
+/// `KernelHandle::migrate_to` rebinds a specialized handle onto another
+/// set member; re-run against migrated arrays it reproduces the origin
+/// device's results bitwise. Feeding the migrated handle an array that
+/// still lives on the origin device names both ordinals and the
+/// offending argument index.
+#[test]
+fn migrated_handle_matches_origin_and_names_ordinals_on_mixups() {
+    use hlgpu::driver::DeviceSet;
+    use hlgpu::error::Error;
+
+    let set = DeviceSet::emulator(2).unwrap();
+    let mut src = vadd_launcher_on(set.context(0).clone());
+    let mut dst = vadd_launcher_on(set.context(1).clone());
+
+    let n = 300usize;
+    let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+    let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+    let ta = Tensor::from_f32(&a, &[n]);
+    let tb = Tensor::from_f32(&b, &[n]);
+
+    let da = DeviceArray::from_tensor(set.context(0), &ta).unwrap();
+    let db = DeviceArray::from_tensor(set.context(0), &tb).unwrap();
+    let mut dc = DeviceArray::alloc(set.context(0), Dtype::F32, &[n]).unwrap();
+
+    let h = src
+        .bind("vadd", &[arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let cfg = LaunchConfig::new((n as u32).div_ceil(256), 256u32);
+    h.launch(cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&db), arg::cu_dev_mut(&mut dc)])
+        .unwrap();
+    let want = dc.download().unwrap().as_f32().to_vec();
+
+    // Migrating onto the same context is a preflight no-op (clone).
+    assert!(h.migrate_to(&mut src).is_ok());
+
+    // Cross-device: migrate the handle and its operands, then re-run.
+    let h2 = h.migrate_to(&mut dst).unwrap();
+    let ma = da.migrate_to(set.context(1)).unwrap();
+    let mb = db.migrate_to(set.context(1)).unwrap();
+    let mut mc = DeviceArray::alloc(set.context(1), Dtype::F32, &[n]).unwrap();
+    h2.launch(cfg, &mut [arg::cu_dev(&ma), arg::cu_dev(&mb), arg::cu_dev_mut(&mut mc)])
+        .unwrap();
+    assert_eq!(mc.download().unwrap().as_f32(), want.as_slice());
+
+    // Mixed-context launch: argument 0 still lives on member 0.
+    let err = h2
+        .launch(cfg, &mut [arg::cu_dev(&da), arg::cu_dev(&mb), arg::cu_dev_mut(&mut mc)])
+        .unwrap_err();
+    let (o0, o1) = (set.device(0).ordinal, set.device(1).ordinal);
+    match err {
+        Error::BadArgument { index, reason, .. } => {
+            assert_eq!(index, 0);
+            assert!(reason.contains("different context"), "{reason}");
+            assert!(reason.contains(&format!("lives on device {o0}")), "{reason}");
+            assert!(reason.contains(&format!("targets device {o1}")), "{reason}");
+        }
+        other => panic!("expected BadArgument, got {other:?}"),
+    }
+}

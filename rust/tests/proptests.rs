@@ -724,3 +724,124 @@ fn prop_host_and_device_reduce_observationally_identical() {
     }
     set_default_reduce(None);
 }
+
+// ---------------------------------------------------------- multi-device --
+
+/// Sharded `features_batch` over random batch sizes, image sizes and
+/// device counts — including runs where one member is pre-loaded with
+/// phantom outstanding work so placement skews hard onto the others —
+/// is bitwise identical to the single-device path.
+#[test]
+fn prop_sharded_splits_agree_with_single_device() {
+    use hlgpu::driver::DeviceSet;
+    use hlgpu::tracetransform::{
+        orientations, random_phantom, DeviceChoice, GpuAuto, ShardMode, TraceImpl,
+    };
+    for seed in 0..6u64 {
+        let mut rng = Prng::new(14_000 + seed);
+        let size = rng.usize_in(8, 16);
+        let n = rng.usize_in(2, 9);
+        let nlanes = rng.usize_in(2, 4);
+        let thetas = orientations(rng.usize_in(3, 8));
+        let imgs: Vec<_> = (0..n)
+            .map(|i| random_phantom(size, 14_500 + seed * 100 + i as u64))
+            .collect();
+
+        let mut single = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
+        let want = single.features_batch(&imgs, &thetas).unwrap();
+
+        let set = DeviceSet::emulator(nlanes).unwrap();
+        if rng.bool() {
+            // Skew: member 0 looks saturated, chunks chase the others.
+            set.place(1_000);
+        }
+        let mut multi = GpuAuto::on_set(set)
+            .unwrap()
+            .with_shard(Some(ShardMode::Auto));
+        let got = multi.features_batch(&imgs, &thetas).unwrap();
+        assert_eq!(got, want, "seed {seed} size {size} n {n} lanes {nlanes}");
+    }
+}
+
+/// Per-member memory pools are fully isolated (traffic on one member
+/// never moves a sibling's counters) and each member's cross-arena
+/// accounting stays consistent: steals are a subset of cache reuse, the
+/// cached gauges agree with each other, and draining all live buffers
+/// leaves nothing outstanding.
+#[test]
+fn prop_per_member_arena_stats_isolated_and_consistent() {
+    use hlgpu::coordinator::DeviceArray;
+    use hlgpu::driver::DeviceSet;
+    for seed in 0..8u64 {
+        let mut rng = Prng::new(15_000 + seed);
+        let set = DeviceSet::emulator(3).unwrap();
+        let quiet: Vec<_> =
+            (0..set.len()).map(|i| set.context(i).mem_stats().unwrap()).collect();
+
+        let victim = rng.usize_in(0, set.len() - 1);
+        let ctx = set.context(victim);
+        let mut live: Vec<DeviceArray> = Vec::new();
+        for _ in 0..24 {
+            if rng.bool() || live.is_empty() {
+                let n = rng.usize_in(1, 512);
+                let arena = rng.usize_in(0, 3);
+                let t = Tensor::from_f32(&rng.f32_vec(n, -1.0, 1.0), &[n]);
+                live.push(DeviceArray::from_tensor_in(ctx, arena, &t).unwrap());
+            } else {
+                let idx = rng.usize_in(0, live.len() - 1);
+                live.remove(idx).free().unwrap();
+            }
+        }
+        // Directed cross-arena churn: park same-size blocks from one
+        // arena, re-allocate them from another — served from the bins
+        // (locally or stolen from the sibling), never fresh carving.
+        let t = Tensor::from_f32(&rng.f32_vec(256, -1.0, 1.0), &[256]);
+        let parked: Vec<DeviceArray> = (0..4)
+            .map(|_| DeviceArray::from_tensor_in(ctx, 1, &t).unwrap())
+            .collect();
+        for a in parked {
+            a.free().unwrap();
+        }
+        let before = ctx.mem_stats().unwrap();
+        let restolen: Vec<DeviceArray> = (0..4)
+            .map(|_| DeviceArray::from_tensor_in(ctx, 2, &t).unwrap())
+            .collect();
+        let after = ctx.mem_stats().unwrap();
+        if ctx.memory().unwrap().policy() == hlgpu::driver::PoolPolicy::Cached {
+            assert!(
+                after.reuse_count >= before.reuse_count + 4,
+                "seed {seed}: same-size churn must be served from the bins"
+            );
+        }
+        for a in restolen {
+            a.free().unwrap();
+        }
+        for a in live.drain(..) {
+            a.free().unwrap();
+        }
+
+        let st = ctx.mem_stats().unwrap();
+        assert_eq!(st.current_bytes, 0, "seed {seed}: everything was freed");
+        assert_eq!(st.alloc_count, st.free_count, "seed {seed}");
+        // Cross-arena steals are counted inside the reuse totals.
+        assert!(st.stolen_bytes <= st.reuse_bytes, "seed {seed}");
+        assert!(st.stolen_blocks <= st.reuse_count, "seed {seed}");
+        // The cached gauges agree with each other and with eviction:
+        // blocks and bytes park/leave together.
+        assert_eq!(st.cached_bytes == 0, st.cached_blocks == 0, "seed {seed}");
+        assert_eq!(st.evicted_bytes == 0, st.evicted_blocks == 0, "seed {seed}");
+
+        // Member isolation: the two untouched members saw zero traffic.
+        for i in 0..set.len() {
+            if i == victim {
+                continue;
+            }
+            let s = set.context(i).mem_stats().unwrap();
+            assert_eq!(s.alloc_count, quiet[i].alloc_count, "seed {seed} member {i}");
+            assert_eq!(s.h2d_count, quiet[i].h2d_count, "seed {seed} member {i}");
+            assert_eq!(s.current_bytes, quiet[i].current_bytes, "seed {seed} member {i}");
+        }
+    }
+}

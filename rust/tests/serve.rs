@@ -242,3 +242,34 @@ fn tenants_get_separate_stats() {
     assert_eq!(total.batches.total(), 5);
     assert_eq!(svc.all_stats().len(), 2);
 }
+
+// ---------------------------------------------------------- multi-device --
+
+/// A `DeviceSet`-backed service (workers pinned round-robin onto the
+/// members) serves features bitwise identical to a direct
+/// `features_batch`, and attributes every served image to a member
+/// through the set's per-device accounting.
+#[test]
+fn deviceset_service_matches_direct_and_accounts_per_member() {
+    use hlgpu::driver::DeviceSet;
+    let thetas = orientations(5);
+    let imgs: Vec<_> = (0..8u64).map(|i| random_phantom(10, 300 + i)).collect();
+
+    let mut direct = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    let want = direct.features_batch(&imgs, &thetas).unwrap();
+
+    let svc = Service::on_set(
+        DeviceSet::emulator(2).unwrap(),
+        &thetas,
+        ServeConfig { max_batch: 2, max_delay_us: 500, workers: 2, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let tickets: Vec<_> = imgs.iter().map(|img| svc.submit("t", img.clone()).unwrap()).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(t.wait().unwrap(), want[i], "image {i} diverged through the set");
+    }
+
+    let set = svc.device_set().expect("a set-backed service exposes its DeviceSet");
+    let total: u64 = set.stats().iter().map(|m| m.images).sum();
+    assert_eq!(total, imgs.len() as u64, "every served image is attributed to a member");
+}
