@@ -65,6 +65,7 @@ struct RateOutcome {
     max_depth: usize,
     capacity: usize,
     histogram: String,
+    errors: String,
     device_line: Option<String>,
 }
 
@@ -168,12 +169,21 @@ fn run_rate(
             .collect();
         format!("{} — imbalance {:.2}", per.join(", "), s.imbalance())
     });
+    // Error breakdown: terminal outcomes plus the non-terminal recovery
+    // counters (requests re-admitted after a failed batch, and those
+    // re-admitted behind a worker that failed over to another member —
+    // see docs/faults.md).
+    let errors = format!(
+        "shed {shed} / expired {expired} / failed-over {} / failed {failed} (retried {})",
+        st.failed_over, st.retried
+    );
     RateOutcome {
         served,
         throughput: served as f64 / total,
         max_depth,
         capacity,
         histogram: histogram_line(&st.batches),
+        errors,
         device_line,
     }
 }
@@ -227,6 +237,7 @@ fn main() {
 
     for (rate, o) in rates.iter().cycle().zip(outcomes.iter().chain(&multi)) {
         println!("{rate:>6.0}/s batch sizes: {}", o.histogram);
+        println!("        errors: {}", o.errors);
         if let Some(line) = &o.device_line {
             println!("        members: {line}");
         }

@@ -137,6 +137,7 @@ impl DeviceArray {
             bytes,
             dtype: self.dtype,
             shape: self.shape.clone(),
+            ordinal: self.ctx.device().ordinal,
         })
     }
 

@@ -34,7 +34,7 @@
 //!   `docs/api.md`).
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::args::{input_signature, write_call_signature, Arg, ArgMode};
 use crate::coordinator::cache::{CacheStats, SpecializationCache};
@@ -373,6 +373,9 @@ fn run_launch(
     args: &mut [Arg<'_>],
 ) -> Result<()> {
     validate_args(kernel, spec, args)?;
+    // Fault plane: one `launch` operation per warm-path call; an
+    // injected failure here loses the device (sticky, see docs/faults.md).
+    crate::driver::faults::on_launch(spec.ordinal)?;
     let mem = &spec.pool;
     // Plans with host staging buffers serialize: concurrent launches
     // through cloned handles (or the shared cache entry) must not
@@ -833,6 +836,13 @@ impl KernelHandle {
     ) -> Result<PendingLaunch<'s>> {
         let spec = &*self.spec;
         validate_args(&self.kernel, spec, args)?;
+        // Fault plane: the `launch` operation is counted at enqueue time
+        // (deterministic for a deterministic enqueue order); an injected
+        // failure surfaces here, before anything lands on the stream. A
+        // scheduled `hang` turns the enqueued kernel into one that never
+        // completes until the watchdog (or the hang cap) loses the device.
+        crate::driver::faults::on_launch(spec.ordinal)?;
+        let hang = crate::driver::faults::hang_requested(spec.ordinal);
         let mut skipped_h2d = 0u64;
         let mut skipped_d2h = 0u64;
         for (index, entry) in spec.plan.iter().enumerate() {
@@ -875,22 +885,30 @@ impl KernelHandle {
         let metrics = self.metrics.clone();
         let error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let slot = error.clone();
-        stream.enqueue(move || match function.launch_report(&launch_cfg, &kargs, &pool) {
-            Ok(report) => {
-                let mut m = metrics.lock().unwrap();
-                m.skipped_h2d += skipped_h2d;
-                m.skipped_d2h += skipped_d2h;
-                absorb_report(&mut m, &report);
-                Ok(())
-            }
-            Err(e) => {
+        let ordinal = spec.ordinal;
+        stream.enqueue(move || {
+            if hang {
+                let e = crate::driver::faults::hang_until_lost(ordinal);
                 *slot.lock().unwrap() = Some(e.to_string());
-                Err(e)
+                return Err(e);
+            }
+            match function.launch_report(&launch_cfg, &kargs, &pool) {
+                Ok(report) => {
+                    let mut m = metrics.lock().unwrap();
+                    m.skipped_h2d += skipped_h2d;
+                    m.skipped_d2h += skipped_d2h;
+                    absorb_report(&mut m, &report);
+                    Ok(())
+                }
+                Err(e) => {
+                    *slot.lock().unwrap() = Some(e.to_string());
+                    Err(e)
+                }
             }
         })?;
         let event = Event::new();
         stream.record_event(&event)?;
-        Ok(PendingLaunch { stream, event, error })
+        Ok(PendingLaunch { stream, event, error, ordinal })
     }
 
     /// Enqueue an asynchronous readback of `array` on `stream` and
@@ -985,6 +1003,7 @@ pub struct PendingLaunch<'s> {
     stream: &'s Stream,
     event: Event,
     error: Arc<Mutex<Option<String>>>,
+    ordinal: usize,
 }
 
 impl PendingLaunch<'_> {
@@ -1003,8 +1022,34 @@ impl PendingLaunch<'_> {
 
     /// Block until the launch has completed and surface its error, or —
     /// CUDA's sticky-error model — any earlier failure on the stream.
+    /// With `HLGPU_WATCHDOG_MS` set the join is bounded: a launch that
+    /// has not completed within the budget loses its device
+    /// ([`crate::Error::DeviceLost`]) instead of wedging the caller.
     pub fn wait(self) -> Result<()> {
+        match crate::driver::faults::watchdog_ms() {
+            Some(ms) => self.wait_timeout(Duration::from_millis(ms)),
+            None => self.join(),
+        }
+    }
+
+    /// Bounded join — the launch watchdog. Waits up to `timeout` for
+    /// the launch to complete; on timeout the device is marked lost and
+    /// the join fails with [`crate::Error::DeviceLost`]. A hung op
+    /// observes the loss and unwedges itself, so the stream worker
+    /// recovers rather than carrying the hang forever.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<()> {
+        if !self.event.wait_timeout(timeout) {
+            crate::driver::faults::mark_lost(self.ordinal);
+            return Err(Error::DeviceLost(self.ordinal));
+        }
+        self.join()
+    }
+
+    fn join(self) -> Result<()> {
         self.event.synchronize();
+        // One `sync` fault-site operation per join (shared with
+        // `PendingDownload::wait`); a lost ordinal fails fast here.
+        crate::driver::faults::on_sync(self.ordinal)?;
         if let Some(msg) = self.error.lock().unwrap().take() {
             return Err(Error::Stream(msg));
         }
@@ -1031,6 +1076,7 @@ pub struct PendingDownload<'s> {
     pub(crate) bytes: Arc<Mutex<Vec<u8>>>,
     pub(crate) dtype: crate::tensor::Dtype,
     pub(crate) shape: Vec<usize>,
+    pub(crate) ordinal: usize,
 }
 
 impl PendingDownload<'_> {
@@ -1049,8 +1095,19 @@ impl PendingDownload<'_> {
     /// the sticky-error model, the first failure of anything enqueued on
     /// the stream so far (a trapped kernel upstream poisons the
     /// readback; the bytes would be garbage).
+    /// Respects the `HLGPU_WATCHDOG_MS` launch watchdog the same way
+    /// [`PendingLaunch::wait`] does: a readback stuck behind a hung
+    /// kernel becomes [`crate::Error::DeviceLost`] instead of a wedge.
     pub fn wait(self) -> Result<crate::tensor::Tensor> {
+        if let Some(ms) = crate::driver::faults::watchdog_ms() {
+            if !self.event.wait_timeout(Duration::from_millis(ms)) {
+                crate::driver::faults::mark_lost(self.ordinal);
+                return Err(Error::DeviceLost(self.ordinal));
+            }
+        }
         self.event.synchronize();
+        // Same `sync` fault site as `PendingLaunch`: one operation per join.
+        crate::driver::faults::on_sync(self.ordinal)?;
         if let Some(msg) = self.stream.peek_error() {
             return Err(Error::Stream(msg));
         }
@@ -1100,6 +1157,37 @@ mod tests {
             })
         });
         l
+    }
+
+    /// The watchdog path in isolation: an event that never records (a
+    /// hung kernel) times out, marks the ordinal lost, and returns the
+    /// typed loss. Uses a synthesized high ordinal so the sticky mark
+    /// cannot perturb tests running in parallel on real ordinals.
+    #[test]
+    fn watchdog_timeout_marks_device_lost() {
+        let ord = 9_070usize;
+        let stream = Stream::new();
+        let pending = PendingLaunch {
+            stream: &stream,
+            event: Event::new(),
+            error: Arc::new(Mutex::new(None)),
+            ordinal: ord,
+        };
+        let err = pending.wait_timeout(Duration::from_millis(25)).unwrap_err();
+        assert!(matches!(err, Error::DeviceLost(o) if o == ord), "{err}");
+        assert!(crate::driver::faults::is_lost(ord));
+        crate::driver::faults::reset_device(ord);
+        // A recorded event joins normally within the budget.
+        let ev = Event::new();
+        ev.record_now();
+        let pending = PendingLaunch {
+            stream: &stream,
+            event: ev,
+            error: Arc::new(Mutex::new(None)),
+            ordinal: ord,
+        };
+        pending.wait_timeout(Duration::from_millis(25)).unwrap();
+        assert!(!crate::driver::faults::is_lost(ord));
     }
 
     #[test]

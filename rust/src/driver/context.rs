@@ -43,10 +43,10 @@ impl Context {
             inner: Arc::new(ContextInner {
                 device: device.clone(),
                 backend,
-                mem: Arc::new(MemoryPool::with_policy(
-                    device.attributes.total_memory,
-                    policy,
-                )),
+                mem: Arc::new(
+                    MemoryPool::with_policy(device.attributes.total_memory, policy)
+                        .with_device_ordinal(device.ordinal),
+                ),
                 modules: Mutex::new(HashMap::new()),
                 destroyed: AtomicBool::new(false),
             }),
@@ -60,10 +60,11 @@ impl Context {
 
     fn check_alive(&self) -> Result<()> {
         if self.inner.destroyed.load(Ordering::Acquire) {
-            Err(Error::ContextDestroyed)
-        } else {
-            Ok(())
+            return Err(Error::ContextDestroyed);
         }
+        // Sticky device loss: every context over a lost ordinal fails
+        // fast until `Device::reset` (see docs/faults.md).
+        crate::driver::faults::check_lost(self.inner.device.ordinal)
     }
 
     pub fn device(&self) -> &Device {

@@ -196,6 +196,16 @@ impl Device {
             attributes,
         }
     }
+
+    /// `cuDeviceReset` analog for device loss: clear this ordinal's
+    /// sticky lost mark (see `crate::driver::faults` and
+    /// `docs/faults.md`). Contexts over the device work again
+    /// afterwards, but memory contents are not guaranteed — in-flight
+    /// work at the moment of loss was abandoned. A `DeviceSet` member
+    /// additionally needs `DeviceSet::probe` to return to placement.
+    pub fn reset(&self) {
+        crate::driver::faults::reset_device(self.ordinal);
+    }
 }
 
 #[cfg(test)]

@@ -15,12 +15,39 @@
 //! The sharded `features_batch` path (`tracetransform::impls::gpu_auto`)
 //! and the serve layer's worker pinning both build on this type.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::Arc;
 
 use crate::driver::context::Context;
 use crate::driver::device::{self, BackendKind, Device};
+use crate::driver::faults;
 use crate::error::{Error, Result};
+
+/// Per-member health, driven by observed pipeline errors (see
+/// `docs/faults.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Normal placement target.
+    Healthy,
+    /// A transient failure was observed here recently; placed only when
+    /// no healthy member remains, reclaimed by [`DeviceSet::probe`].
+    Quarantined,
+    /// A device loss was observed here; excluded from placement until
+    /// `Device::reset` clears the sticky mark *and* a probe succeeds.
+    Lost,
+}
+
+const HEALTHY: u8 = 0;
+const QUARANTINED: u8 = 1;
+const LOST: u8 = 2;
+
+fn health_from(v: u8) -> Health {
+    match v {
+        QUARANTINED => Health::Quarantined,
+        LOST => Health::Lost,
+        _ => Health::Healthy,
+    }
+}
 
 struct Member {
     ctx: Context,
@@ -32,6 +59,8 @@ struct Member {
     images: AtomicU64,
     /// Cumulative busy time recorded here (worker-reported).
     busy_ns: AtomicU64,
+    /// Health state (`HEALTHY`/`QUARANTINED`/`LOST`).
+    health: AtomicU8,
 }
 
 /// Per-member scheduling counters, as reported by [`DeviceSet::stats`].
@@ -42,6 +71,7 @@ pub struct DeviceSetStats {
     pub images: u64,
     pub outstanding: u64,
     pub busy_ns: u64,
+    pub health: Health,
 }
 
 /// A scheduling group of devices. Cheap to clone (shared members).
@@ -64,6 +94,9 @@ impl DeviceSet {
                 shards: AtomicU64::new(0),
                 images: AtomicU64::new(0),
                 busy_ns: AtomicU64::new(0),
+                // A set built over an already-lost ordinal starts that
+                // member excluded rather than discovering it the hard way.
+                health: AtomicU8::new(if faults::is_lost(d.ordinal) { LOST } else { HEALTHY }),
             });
         }
         Ok(DeviceSet { members: Arc::new(members) })
@@ -110,17 +143,88 @@ impl DeviceSet {
     /// least outstanding work (lowest index on ties), adds the weight,
     /// and returns the member index. Callers placing shards serially in
     /// a deterministic order get a deterministic assignment.
+    ///
+    /// Placement is health-aware: healthy members are preferred, then
+    /// quarantined ones; lost members are only chosen when *every*
+    /// member is lost (the caller will surface the failure). With all
+    /// members healthy — the fault-free case — the assignment is
+    /// identical to the original least-outstanding heuristic.
     pub fn place(&self, weight: u64) -> usize {
-        let i = self
-            .members
-            .iter()
-            .enumerate()
-            .min_by_key(|(idx, m)| (m.outstanding.load(Ordering::Relaxed), *idx))
-            .map(|(idx, _)| idx)
+        let best = |eligible: fn(u8) -> bool| {
+            self.members
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| eligible(m.health.load(Ordering::Relaxed)))
+                .min_by_key(|(idx, m)| (m.outstanding.load(Ordering::Relaxed), *idx))
+                .map(|(idx, _)| idx)
+        };
+        let i = best(|h| h == HEALTHY)
+            .or_else(|| best(|h| h != LOST))
+            .or_else(|| best(|_| true))
             .unwrap_or(0);
         self.members[i].outstanding.fetch_add(weight, Ordering::Relaxed);
         self.members[i].shards.fetch_add(1, Ordering::Relaxed);
         i
+    }
+
+    /// The least-loaded *healthy* member, if any — the serve layer's
+    /// re-pinning target after a worker observes a device loss. Unlike
+    /// [`DeviceSet::place`] this mutates no counters.
+    pub fn pick_healthy(&self) -> Option<usize> {
+        self.members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.health.load(Ordering::Relaxed) == HEALTHY)
+            .min_by_key(|(idx, m)| (m.outstanding.load(Ordering::Relaxed), *idx))
+            .map(|(idx, _)| idx)
+    }
+
+    /// Member `i`'s current health.
+    pub fn health(&self, i: usize) -> Health {
+        health_from(self.members[i].health.load(Ordering::Relaxed))
+    }
+
+    /// Drive member `i`'s health from an error observed while running
+    /// work placed there: a device loss marks it `Lost` (sticky at set
+    /// level too — only [`DeviceSet::probe`] after `Device::reset`
+    /// brings it back); a transient failure quarantines a healthy
+    /// member (never downgrading `Lost`). Non-transient errors — bad
+    /// arguments, type mismatches — say nothing about device health and
+    /// leave it unchanged.
+    pub fn observe_error(&self, i: usize, e: &Error) {
+        let m = &self.members[i];
+        if e.is_device_loss() {
+            m.health.store(LOST, Ordering::Relaxed);
+        } else if e.is_transient() {
+            let _ = m.health.compare_exchange(
+                HEALTHY,
+                QUARANTINED,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// Probe unhealthy members and reclaim the ones that answer: a
+    /// member returns to `Healthy` once its ordinal is no longer
+    /// sticky-lost (see `Device::reset`) and a trivial alloc/free on
+    /// its context succeeds. Returns how many members were reclaimed.
+    pub fn probe(&self) -> usize {
+        let mut reclaimed = 0;
+        for m in self.members.iter() {
+            if m.health.load(Ordering::Relaxed) == HEALTHY {
+                continue;
+            }
+            if faults::is_lost(m.ctx.device().ordinal) {
+                continue;
+            }
+            let ok = m.ctx.alloc(64).and_then(|p| m.ctx.free(p)).is_ok();
+            if ok {
+                m.health.store(HEALTHY, Ordering::Relaxed);
+                reclaimed += 1;
+            }
+        }
+        reclaimed
     }
 
     /// Retire a previously placed shard's weight from member `i`.
@@ -149,6 +253,7 @@ impl DeviceSet {
                 images: m.images.load(Ordering::Relaxed),
                 outstanding: m.outstanding.load(Ordering::Relaxed),
                 busy_ns: m.busy_ns.load(Ordering::Relaxed),
+                health: health_from(m.health.load(Ordering::Relaxed)),
             })
             .collect()
     }
@@ -205,9 +310,20 @@ mod tests {
         assert_eq!(ords.len(), 3);
     }
 
+    /// A set over synthesized ordinals far past the visible table, so
+    /// an ambient chaos schedule (`HLGPU_FAULTS` targeting real
+    /// ordinals) can never mark a member lost under these tests. Each
+    /// test passes a distinct `slot` so tests that mark their own
+    /// members lost cannot collide with tests running in parallel.
+    fn quiet_set(slot: usize, n: usize) -> DeviceSet {
+        let base = device::device_count() + 100 + slot * 16;
+        let devs: Vec<Device> = (0..n).map(|i| Device::emulator_at(base + i, None)).collect();
+        DeviceSet::new(&devs).unwrap()
+    }
+
     #[test]
     fn placement_is_least_outstanding_deterministic() {
-        let set = DeviceSet::emulator(2).unwrap();
+        let set = quiet_set(0, 2);
         // Equal load: ties break to the lowest index.
         assert_eq!(set.place(10), 0);
         assert_eq!(set.place(10), 1);
@@ -224,7 +340,7 @@ mod tests {
 
     #[test]
     fn imbalance_and_image_accounting() {
-        let set = DeviceSet::emulator(2).unwrap();
+        let set = quiet_set(1, 2);
         assert_eq!(set.imbalance(), 0.0);
         set.record_images(0, 6);
         set.record_images(1, 2);
@@ -234,6 +350,67 @@ mod tests {
         assert!((set.imbalance() - 1.5).abs() < 1e-12);
         set.record_images(1, 4);
         assert!((set.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn health_drives_placement_and_probe_reclaims() {
+        let set = quiet_set(2, 3);
+        for i in 0..3 {
+            assert_eq!(set.health(i), Health::Healthy);
+            assert_eq!(set.stats()[i].health, Health::Healthy);
+        }
+        // A transient failure quarantines; placement prefers the others.
+        set.observe_error(0, &Error::Stream("injected h2d fault on device 0".into()));
+        assert_eq!(set.health(0), Health::Quarantined);
+        assert_eq!(set.place(1), 1);
+        assert_eq!(set.place(1), 2);
+        // Non-transient errors say nothing about health.
+        set.observe_error(1, &Error::Type("bad dtype".into()));
+        assert_eq!(set.health(1), Health::Healthy);
+        // A probe reclaims the quarantined member (nothing sticky-lost).
+        assert_eq!(set.probe(), 1);
+        assert_eq!(set.health(0), Health::Healthy);
+        set.complete(1, 1);
+        set.complete(2, 1);
+    }
+
+    #[test]
+    fn lost_member_is_excluded_until_reset_and_probe() {
+        let set = quiet_set(3, 2);
+        let ord0 = set.device(0).ordinal;
+        faults::mark_lost(ord0);
+        set.observe_error(0, &Error::DeviceLost(ord0));
+        assert_eq!(set.health(0), Health::Lost);
+        // Placement and re-pinning both skip the lost member.
+        for _ in 0..3 {
+            assert_eq!(set.place(1), 1);
+        }
+        assert_eq!(set.pick_healthy(), Some(1));
+        // Probe alone cannot reclaim it while the sticky mark stands...
+        assert_eq!(set.probe(), 0);
+        assert_eq!(set.health(0), Health::Lost);
+        // ...but reset + probe brings it back.
+        set.device(0).reset();
+        assert_eq!(set.probe(), 1);
+        assert_eq!(set.health(0), Health::Healthy);
+        // A set constructed over a lost ordinal starts excluded.
+        faults::mark_lost(ord0);
+        let set2 = DeviceSet::new(&[set.device(0).clone(), set.device(1).clone()]).unwrap();
+        assert_eq!(set2.health(0), Health::Lost);
+        assert_eq!(set2.place(1), 1);
+        faults::reset_device(ord0);
+    }
+
+    #[test]
+    fn all_lost_set_still_places() {
+        let set = quiet_set(4, 2);
+        for i in 0..2 {
+            set.observe_error(i, &Error::DeviceLost(set.device(i).ordinal));
+        }
+        // Callers still get a member back (and will surface the typed
+        // loss); least-outstanding order holds within the lost tier.
+        assert_eq!(set.place(1), 0);
+        assert_eq!(set.place(1), 1);
     }
 
     #[test]

@@ -52,6 +52,24 @@ impl Event {
         }
     }
 
+    /// Bounded [`Event::synchronize`]: block until recorded or until
+    /// `timeout` elapses. Returns `true` when the event was recorded in
+    /// time — the launch watchdog (`HLGPU_WATCHDOG_MS`) builds on this.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        while st.recorded.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        true
+    }
+
     fn instant(&self) -> Result<Instant> {
         self.state
             .0
@@ -94,6 +112,16 @@ mod tests {
         let ms = Event::elapsed_ms(&a, &b).unwrap();
         assert!(ms >= 4.0, "elapsed {ms} ms");
         assert!(a.query() && b.query());
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_succeeds() {
+        let ev = Event::new();
+        let t0 = Instant::now();
+        assert!(!ev.wait_timeout(std::time::Duration::from_millis(20)));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        ev.record_now();
+        assert!(ev.wait_timeout(std::time::Duration::from_millis(1)));
     }
 
     #[test]

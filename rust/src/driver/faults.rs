@@ -1,0 +1,556 @@
+//! Deterministic fault-injection plane and the sticky device-loss
+//! registry (see `docs/faults.md`).
+//!
+//! A [`FaultPlan`] names *sites* — the driver boundaries where real GPU
+//! stacks fail — and schedules an injection at the `nth` operation a
+//! given device ordinal performs at that site:
+//!
+//! | site     | boundary                                  | injected failure |
+//! |----------|-------------------------------------------|------------------|
+//! | `alloc`  | device memory allocation                  | [`Error::OutOfMemory`] |
+//! | `h2d`    | host→device copy                          | [`Error::Stream`] |
+//! | `d2h`    | device→host copy                          | [`Error::Stream`] |
+//! | `launch` | kernel launch (sync or stream enqueue)    | sticky [`Error::DeviceLost`] |
+//! | `sync`   | host-side join (`PendingLaunch::wait` / `PendingDownload::wait`) | sticky [`Error::DeviceLost`] |
+//! | `hang`   | stream launch that never completes        | watchdog → [`Error::DeviceLost`] |
+//!
+//! Plans come from code ([`install`]) or from the environment
+//! (`HLGPU_FAULTS=<site>@<ordinal>:<nth>[,…]`, parsed once at first
+//! use). Operations are only counted at (site, ordinal) pairs the
+//! active plan targets, and a rule fires on the exact `nth` count —
+//! so schedules are deterministic for a deterministic workload, and
+//! [`FaultPlan::seeded`] plans replay identically under the same seed.
+//!
+//! Loss is *sticky*, mirroring CUDA's model: once an ordinal is marked
+//! lost every subsequent operation on any context over it fails fast
+//! with [`Error::DeviceLost`], and `Device::reset` is the only way
+//! back. The layers above lean on that contract — `DeviceSet` health,
+//! the sharded-batch retry, and serve-worker re-pinning all key off
+//! [`Error::is_device_loss`].
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::util::Prng;
+
+/// A named injection site (one driver boundary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// Device memory allocation; fires as [`Error::OutOfMemory`].
+    Alloc,
+    /// Kernel launch (sync launch or stream enqueue); fires as a sticky
+    /// [`Error::DeviceLost`].
+    Launch,
+    /// Host-side join of pending stream work; fires as a sticky
+    /// [`Error::DeviceLost`].
+    Sync,
+    /// Host→device copy; fires as a (transient) [`Error::Stream`].
+    H2d,
+    /// Device→host copy; fires as a (transient) [`Error::Stream`].
+    D2h,
+    /// Stream launch that never completes — until a watchdog or the
+    /// hang cap marks the device lost.
+    Hang,
+}
+
+impl FaultSite {
+    /// Every site, in grammar order.
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::Alloc,
+        FaultSite::Launch,
+        FaultSite::Sync,
+        FaultSite::H2d,
+        FaultSite::D2h,
+        FaultSite::Hang,
+    ];
+
+    /// The site's name in the `HLGPU_FAULTS` grammar.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Alloc => "alloc",
+            FaultSite::Launch => "launch",
+            FaultSite::Sync => "sync",
+            FaultSite::H2d => "h2d",
+            FaultSite::D2h => "d2h",
+            FaultSite::Hang => "hang",
+        }
+    }
+
+    /// Parse a grammar name (case-insensitive).
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        let s = s.trim().to_ascii_lowercase();
+        FaultSite::ALL.into_iter().find(|site| site.name() == s)
+    }
+}
+
+/// One scheduled injection: fail the `nth` operation (1-based) that
+/// device `ordinal` performs at `site`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub ordinal: usize,
+    /// 1-based operation count at which the rule fires, exactly once.
+    pub nth: u64,
+}
+
+/// A deterministic fault schedule: a set of [`FaultRule`]s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no injections).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Builder: fail the `nth` (1-based, clamped to ≥ 1) operation at
+    /// `site` on device `ordinal`.
+    pub fn fail(mut self, site: FaultSite, ordinal: usize, nth: u64) -> FaultPlan {
+        self.rules.push(FaultRule { site, ordinal, nth: nth.max(1) });
+        self
+    }
+
+    /// The scheduled rules.
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Does the plan schedule nothing?
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Parse the `HLGPU_FAULTS` grammar: `<site>@<ordinal>:<nth>[,…]`,
+    /// e.g. `launch@2:3,h2d@1:1`. Empty segments are skipped.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site_s, rest) = part.split_once('@').ok_or_else(|| bad(part, "missing `@`"))?;
+            let (ord_s, nth_s) = rest.split_once(':').ok_or_else(|| bad(part, "missing `:`"))?;
+            let site = FaultSite::parse(site_s).ok_or_else(|| bad(part, "unknown site"))?;
+            let ordinal: usize =
+                ord_s.trim().parse().map_err(|_| bad(part, "bad device ordinal"))?;
+            let nth: u64 = nth_s.trim().parse().map_err(|_| bad(part, "bad operation count"))?;
+            if nth == 0 {
+                return Err(bad(part, "operation counts are 1-based"));
+            }
+            plan.rules.push(FaultRule { site, ordinal, nth });
+        }
+        Ok(plan)
+    }
+
+    /// A seeded random plan: draw `count` rules over the given `sites`
+    /// and `ordinals` with operation counts in `1..=max_nth`. The same
+    /// seed always yields the same plan (the crate PRNG is pure).
+    pub fn seeded(
+        seed: u64,
+        sites: &[FaultSite],
+        ordinals: &[usize],
+        max_nth: u64,
+        count: usize,
+    ) -> FaultPlan {
+        let mut prng = Prng::new(seed);
+        let mut plan = FaultPlan::new();
+        if sites.is_empty() || ordinals.is_empty() {
+            return plan;
+        }
+        for _ in 0..count {
+            let site = *prng.choose(sites);
+            let ordinal = *prng.choose(ordinals);
+            let nth = 1 + prng.next_u64() % max_nth.max(1);
+            plan.rules.push(FaultRule { site, ordinal, nth });
+        }
+        plan
+    }
+
+    fn targets(&self, site: FaultSite, ordinal: usize) -> bool {
+        self.rules.iter().any(|r| r.site == site && r.ordinal == ordinal)
+    }
+
+    fn fires(&self, site: FaultSite, ordinal: usize, count: u64) -> bool {
+        self.rules.iter().any(|r| r.site == site && r.ordinal == ordinal && r.nth == count)
+    }
+}
+
+fn bad(part: &str, why: &str) -> Error {
+    Error::Other(format!(
+        "HLGPU_FAULTS: bad rule `{part}`: {why} \
+         (grammar: <site>@<ordinal>:<nth>[,...]; sites: alloc launch sync h2d d2h hang)"
+    ))
+}
+
+// ------------------------------------------------------ global state --
+
+struct FaultState {
+    /// The active schedule; `None` disarms every site hook.
+    plan: Mutex<Option<FaultPlan>>,
+    /// Operations seen per (site, ordinal) the active plan targets.
+    seen: Mutex<HashMap<(FaultSite, usize), u64>>,
+    /// Injections fired per (site, ordinal).
+    fired: Mutex<HashMap<(FaultSite, usize), u64>>,
+    /// Sticky lost ordinals.
+    lost: Mutex<HashSet<usize>>,
+    /// Fast-path gates: plan present / any ordinal lost.
+    armed: AtomicBool,
+    lost_count: AtomicUsize,
+}
+
+fn state() -> &'static FaultState {
+    static STATE: OnceLock<FaultState> = OnceLock::new();
+    STATE.get_or_init(|| {
+        // The env plan is parsed once, lazily, at first use; a later
+        // `install` overrides it for the rest of the process.
+        let plan = std::env::var("HLGPU_FAULTS").ok().and_then(|v| match FaultPlan::parse(&v) {
+            Ok(p) if !p.is_empty() => Some(p),
+            Ok(_) => None,
+            Err(e) => {
+                eprintln!("hlgpu: ignoring HLGPU_FAULTS: {e}");
+                None
+            }
+        });
+        FaultState {
+            armed: AtomicBool::new(plan.is_some()),
+            plan: Mutex::new(plan),
+            seen: Mutex::new(HashMap::new()),
+            fired: Mutex::new(HashMap::new()),
+            lost: Mutex::new(HashSet::new()),
+            lost_count: AtomicUsize::new(0),
+        }
+    })
+}
+
+/// Install `plan` as the active schedule — replacing the env plan or a
+/// previous install — and reset the operation and injection counters.
+pub fn install(plan: FaultPlan) {
+    let st = state();
+    st.seen.lock().unwrap().clear();
+    st.fired.lock().unwrap().clear();
+    let armed = !plan.is_empty();
+    *st.plan.lock().unwrap() = Some(plan);
+    st.armed.store(armed, Ordering::SeqCst);
+}
+
+/// Remove the active plan (every site hook disarms) and reset the
+/// counters. Sticky lost marks survive — see [`reset_all`] and
+/// `Device::reset`.
+pub fn clear() {
+    let st = state();
+    *st.plan.lock().unwrap() = None;
+    st.armed.store(false, Ordering::SeqCst);
+    st.seen.lock().unwrap().clear();
+    st.fired.lock().unwrap().clear();
+}
+
+/// [`clear`] plus dropping every sticky lost mark — the chaos suite's
+/// between-tests reset.
+pub fn reset_all() {
+    clear();
+    let st = state();
+    st.lost.lock().unwrap().clear();
+    st.lost_count.store(0, Ordering::SeqCst);
+}
+
+/// Is a fault plan currently armed? Tests use this to relax exact
+/// work-placement assertions under an ambient chaos schedule.
+pub fn armed() -> bool {
+    state().armed.load(Ordering::Relaxed)
+}
+
+/// A snapshot of the active plan, if any.
+pub fn active_plan() -> Option<FaultPlan> {
+    state().plan.lock().unwrap().clone()
+}
+
+/// Injections fired so far at `site` on `ordinal` under the active plan.
+pub fn injections(site: FaultSite, ordinal: usize) -> u64 {
+    state().fired.lock().unwrap().get(&(site, ordinal)).copied().unwrap_or(0)
+}
+
+/// Every (site, ordinal) pair that fired at least once, with its count,
+/// in deterministic order — the chaos suite compares these across
+/// same-seed runs.
+pub fn injection_counts() -> Vec<(FaultSite, usize, u64)> {
+    let mut v: Vec<(FaultSite, usize, u64)> =
+        state().fired.lock().unwrap().iter().map(|(&(s, o), &c)| (s, o, c)).collect();
+    v.sort_unstable_by_key(|&(s, o, _)| (s, o));
+    v
+}
+
+// ------------------------------------------------------ loss registry --
+
+/// Mark `ordinal` lost: every subsequent driver operation on a context
+/// over it fails fast with [`Error::DeviceLost`] until `Device::reset`.
+pub fn mark_lost(ordinal: usize) {
+    let st = state();
+    if st.lost.lock().unwrap().insert(ordinal) {
+        st.lost_count.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Is `ordinal` sticky-lost? One relaxed atomic load on the (common)
+/// nothing-lost path.
+pub fn is_lost(ordinal: usize) -> bool {
+    let st = state();
+    if st.lost_count.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    st.lost.lock().unwrap().contains(&ordinal)
+}
+
+/// Clear the sticky lost mark on `ordinal` — the `cuDeviceReset`
+/// analog, reached through `Device::reset`.
+pub fn reset_device(ordinal: usize) {
+    let st = state();
+    if st.lost.lock().unwrap().remove(&ordinal) {
+        st.lost_count.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Fail fast when `ordinal` is lost.
+pub fn check_lost(ordinal: usize) -> Result<()> {
+    if is_lost(ordinal) {
+        Err(Error::DeviceLost(ordinal))
+    } else {
+        Ok(())
+    }
+}
+
+/// Count one operation at (site, ordinal) against the active plan and
+/// report whether a rule fires on it. Pairs the plan does not target
+/// are not counted, so an unfaulted workload pays one atomic load.
+fn decide(site: FaultSite, ordinal: usize) -> bool {
+    let st = state();
+    if !st.armed.load(Ordering::Relaxed) {
+        return false;
+    }
+    let plan = st.plan.lock().unwrap();
+    let Some(plan) = plan.as_ref() else {
+        return false;
+    };
+    if !plan.targets(site, ordinal) {
+        return false;
+    }
+    let count = {
+        let mut seen = st.seen.lock().unwrap();
+        let c = seen.entry((site, ordinal)).or_insert(0);
+        *c += 1;
+        *c
+    };
+    if plan.fires(site, ordinal, count) {
+        *st.fired.lock().unwrap().entry((site, ordinal)).or_insert(0) += 1;
+        true
+    } else {
+        false
+    }
+}
+
+// --------------------------------------------------------- site hooks --
+
+/// Allocation-site hook: fail fast on a lost device, else an injected
+/// [`Error::OutOfMemory`] when the plan schedules one here.
+pub(crate) fn on_alloc(ordinal: usize, requested: usize) -> Result<()> {
+    check_lost(ordinal)?;
+    if decide(FaultSite::Alloc, ordinal) {
+        return Err(Error::OutOfMemory { requested, available: 0 });
+    }
+    Ok(())
+}
+
+/// Host→device copy hook: the injected failure is a transient stream
+/// error, not a loss.
+pub(crate) fn on_h2d(ordinal: usize) -> Result<()> {
+    check_lost(ordinal)?;
+    if decide(FaultSite::H2d, ordinal) {
+        return Err(Error::Stream(format!("injected h2d fault on device {ordinal}")));
+    }
+    Ok(())
+}
+
+/// Device→host copy hook: transient stream error, as [`on_h2d`].
+pub(crate) fn on_d2h(ordinal: usize) -> Result<()> {
+    check_lost(ordinal)?;
+    if decide(FaultSite::D2h, ordinal) {
+        return Err(Error::Stream(format!("injected d2h fault on device {ordinal}")));
+    }
+    Ok(())
+}
+
+/// Launch-site hook (sync launch and stream enqueue): an injected
+/// launch failure *loses* the device — sticky until reset.
+pub(crate) fn on_launch(ordinal: usize) -> Result<()> {
+    check_lost(ordinal)?;
+    if decide(FaultSite::Launch, ordinal) {
+        mark_lost(ordinal);
+        return Err(Error::DeviceLost(ordinal));
+    }
+    Ok(())
+}
+
+/// Sync-site hook, shared by `PendingLaunch::wait` and
+/// `PendingDownload::wait`: one `sync` operation is counted per join,
+/// and an injected failure loses the device.
+pub(crate) fn on_sync(ordinal: usize) -> Result<()> {
+    check_lost(ordinal)?;
+    if decide(FaultSite::Sync, ordinal) {
+        mark_lost(ordinal);
+        return Err(Error::DeviceLost(ordinal));
+    }
+    Ok(())
+}
+
+/// Should the next stream launch on `ordinal` hang instead of running?
+/// Consulted at `launch_on` enqueue time (the sync launch path cannot
+/// hang — it would wedge the caller with no watchdog in between).
+pub(crate) fn hang_requested(ordinal: usize) -> bool {
+    decide(FaultSite::Hang, ordinal)
+}
+
+/// Upper bound on an injected hang when no watchdog fires first: past
+/// the cap the hung op loses the device *itself* and returns, so the
+/// stream worker always unblocks and `Stream::drop` can always join.
+/// `HLGPU_HANG_MS` overrides.
+const DEFAULT_HANG_CAP_MS: u64 = 1_500;
+
+fn env_ms(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok()).filter(|&ms| ms > 0)
+}
+
+/// The launch-watchdog budget from `HLGPU_WATCHDOG_MS`, if set (read
+/// per call so tests can flip it).
+pub fn watchdog_ms() -> Option<u64> {
+    env_ms("HLGPU_WATCHDOG_MS")
+}
+
+/// Body of an injected hung kernel: nap in 1 ms steps until a watchdog
+/// marks the ordinal lost, or the hang cap expires and the op marks it
+/// lost itself. Either way the device ends lost and the returned error
+/// goes into the stream's sticky slot.
+pub(crate) fn hang_until_lost(ordinal: usize) -> Error {
+    let cap = Duration::from_millis(env_ms("HLGPU_HANG_MS").unwrap_or(DEFAULT_HANG_CAP_MS));
+    let start = Instant::now();
+    while !is_lost(ordinal) && start.elapsed() < cap {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    mark_lost(ordinal);
+    Error::DeviceLost(ordinal)
+}
+
+/// Serializes lib-internal tests that mutate the process-global fault
+/// plane (the integration chaos suite runs in its own process and has
+/// its own lock).
+#[cfg(test)]
+pub(crate) static FAULT_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Synthesized ordinals far past any real device table, so marking
+    // them lost cannot perturb tests running in parallel.
+    const ORD: usize = 9_200;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        FAULT_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parse_grammar_roundtrip() {
+        let plan = FaultPlan::parse("launch@2:3, h2d@1:1,,D2H@0:7").unwrap();
+        assert_eq!(
+            plan.rules(),
+            &[
+                FaultRule { site: FaultSite::Launch, ordinal: 2, nth: 3 },
+                FaultRule { site: FaultSite::H2d, ordinal: 1, nth: 1 },
+                FaultRule { site: FaultSite::D2h, ordinal: 0, nth: 7 },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_rules() {
+        for bad in ["launch@2", "launch:2@1", "bogus@1:1", "launch@x:1", "launch@1:0", "@1:1"] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert!(err.to_string().contains("HLGPU_FAULTS"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_replay_under_the_same_seed() {
+        let ords = [1usize, 2, 3, 4];
+        let sites = FaultSite::ALL;
+        let mut distinct = false;
+        for seed in 0..8u64 {
+            let a = FaultPlan::seeded(seed, &sites, &ords, 6, 5);
+            let b = FaultPlan::seeded(seed, &sites, &ords, 6, 5);
+            assert_eq!(a, b, "seed {seed} must replay");
+            assert_eq!(a.rules().len(), 5);
+            distinct |= a != FaultPlan::seeded(seed + 1, &sites, &ords, 6, 5);
+        }
+        assert!(distinct, "different seeds should produce different plans");
+    }
+
+    #[test]
+    fn rules_fire_on_the_exact_nth_operation_only() {
+        let _g = lock();
+        install(FaultPlan::new().fail(FaultSite::Alloc, ORD, 2));
+        assert!(armed());
+        assert!(on_alloc(ORD, 64).is_ok(), "1st op passes");
+        let err = on_alloc(ORD, 64).unwrap_err();
+        assert!(matches!(err, Error::OutOfMemory { requested: 64, available: 0 }));
+        assert!(on_alloc(ORD, 64).is_ok(), "3rd op passes again");
+        // Untargeted ordinals are never counted or failed.
+        assert!(on_alloc(ORD + 1, 64).is_ok());
+        assert_eq!(injections(FaultSite::Alloc, ORD), 1);
+        assert_eq!(injection_counts(), vec![(FaultSite::Alloc, ORD, 1)]);
+        reset_all();
+        assert!(!armed());
+        assert!(active_plan().is_none());
+    }
+
+    #[test]
+    fn launch_injection_is_sticky_until_reset() {
+        let _g = lock();
+        let ord = ORD + 10;
+        install(FaultPlan::new().fail(FaultSite::Launch, ord, 1));
+        let err = on_launch(ord).unwrap_err();
+        assert!(err.is_device_loss());
+        assert!(is_lost(ord));
+        // Every later site on the ordinal fails fast, typed.
+        assert!(matches!(on_alloc(ord, 8).unwrap_err(), Error::DeviceLost(o) if o == ord));
+        assert!(matches!(on_h2d(ord).unwrap_err(), Error::DeviceLost(_)));
+        assert!(matches!(on_sync(ord).unwrap_err(), Error::DeviceLost(_)));
+        assert!(check_lost(ord).is_err());
+        // Reset is the only way back.
+        reset_device(ord);
+        assert!(!is_lost(ord));
+        assert!(on_sync(ord).is_ok());
+        reset_all();
+    }
+
+    #[test]
+    fn hang_cap_unwedges_and_loses_the_device() {
+        let _g = lock();
+        let ord = ORD + 20;
+        install(FaultPlan::new().fail(FaultSite::Hang, ord, 1));
+        assert!(hang_requested(ord), "1st stream launch hangs");
+        assert!(!hang_requested(ord), "2nd does not");
+        // A watchdog path: mark the device lost from "outside" and the
+        // hung body returns promptly.
+        mark_lost(ord);
+        let t0 = Instant::now();
+        let err = hang_until_lost(ord);
+        assert!(err.is_device_loss());
+        assert!(t0.elapsed() < Duration::from_millis(DEFAULT_HANG_CAP_MS));
+        reset_all();
+    }
+}

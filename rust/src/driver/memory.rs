@@ -248,6 +248,10 @@ pub struct MemoryPool {
     policy: PoolPolicy,
     /// LRU bound on parked (cached) bytes; `None` = unbounded.
     cache_cap: Option<usize>,
+    /// Owning device ordinal, when the pool belongs to a context: routes
+    /// alloc/copy operations through the fault plane
+    /// (`crate::driver::faults`). Free-standing pools stay uninstrumented.
+    ordinal: Option<usize>,
     next: AtomicU64,
     arenas: Vec<Mutex<ArenaInner>>,
     global: GlobalGauges,
@@ -334,6 +338,7 @@ impl MemoryPool {
             capacity,
             policy,
             cache_cap: cache_cap_from_env(),
+            ordinal: None,
             next: AtomicU64::new(1),
             arenas: (0..n).map(|_| Mutex::new(ArenaInner::new())).collect(),
             global: GlobalGauges::new(),
@@ -345,6 +350,19 @@ impl MemoryPool {
     pub fn with_cache_cap(mut self, cap: Option<usize>) -> Self {
         self.cache_cap = cap;
         self
+    }
+
+    /// Attach the owning device's ordinal, routing this pool's alloc and
+    /// copy operations through the fault-injection plane
+    /// (`crate::driver::faults`). Contexts set this at creation.
+    pub fn with_device_ordinal(mut self, ordinal: usize) -> Self {
+        self.ordinal = Some(ordinal);
+        self
+    }
+
+    /// The owning device's ordinal, when attached.
+    pub fn device_ordinal(&self) -> Option<usize> {
+        self.ordinal
     }
 
     pub fn capacity(&self) -> usize {
@@ -435,6 +453,9 @@ impl MemoryPool {
     /// Streams pass their [`crate::driver::Stream::arena_id`] here so
     /// concurrent pipelines allocate without lock contention.
     pub fn alloc_in(&self, arena: usize, bytes: usize) -> Result<DevicePtr> {
+        if let Some(ord) = self.ordinal {
+            crate::driver::faults::on_alloc(ord, bytes)?;
+        }
         let arena = self.arena_index(arena);
 
         // Fast path: recycle from the matching bin of this arena. Never
@@ -708,6 +729,9 @@ impl MemoryPool {
     }
 
     pub fn copy_h2d_at(&self, dst: DevicePtr, offset: usize, src: &[u8]) -> Result<()> {
+        if let Some(ord) = self.ordinal {
+            crate::driver::faults::on_h2d(ord)?;
+        }
         let mut inner = self.arenas[self.arena_of(dst)].lock().unwrap();
         let buf = inner
             .buffers
@@ -733,6 +757,9 @@ impl MemoryPool {
     }
 
     pub fn copy_d2h_at(&self, src: DevicePtr, offset: usize, dst: &mut [u8]) -> Result<()> {
+        if let Some(ord) = self.ordinal {
+            crate::driver::faults::on_d2h(ord)?;
+        }
         let mut inner = self.arenas[self.arena_of(src)].lock().unwrap();
         let buf = inner
             .buffers

@@ -16,6 +16,7 @@ pub mod context;
 pub mod device;
 pub mod deviceset;
 pub mod event;
+pub mod faults;
 pub mod launch;
 pub mod memory;
 pub mod module;
@@ -28,8 +29,9 @@ pub use device::{
     device, device_count, devices, emulator_device, emulator_devices, pjrt_device, BackendKind,
     Device, DeviceAttributes,
 };
-pub use deviceset::{DeviceSet, DeviceSetStats};
+pub use deviceset::{DeviceSet, DeviceSetStats, Health};
 pub use event::Event;
+pub use faults::{FaultPlan, FaultRule, FaultSite};
 pub use launch::{Dim3, KernelArg, LaunchConfig, LaunchReport};
 pub use memory::{DevicePtr, MemStats, MemoryPool, PoolPolicy, DEFAULT_CAPACITY};
 pub use module::{Function, Module};

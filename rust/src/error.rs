@@ -27,6 +27,12 @@ pub enum Error {
     InvalidLaunch(String),
     Stream(String),
     EventNotRecorded,
+    /// The device was lost — a hung kernel hit the watchdog, a launch
+    /// failed fatally, or the fault plane injected a loss. Sticky per
+    /// ordinal: every subsequent operation on any context over that
+    /// device fails fast with this error until `Device::reset` clears
+    /// the mark (see `docs/faults.md`).
+    DeviceLost(usize),
 
     // ---- backend / compilation (nvcc / LLVM-PTX analog) ----------------
     NoArtifact { kernel: String, signature: String },
@@ -80,6 +86,7 @@ impl fmt::Display for Error {
             InvalidLaunch(r) => write!(f, "invalid launch configuration: {r}"),
             Stream(r) => write!(f, "stream error: {r}"),
             EventNotRecorded => write!(f, "event not recorded"),
+            DeviceLost(n) => write!(f, "device {n} was lost (reset required)"),
             NoArtifact { kernel, signature } => write!(
                 f,
                 "artifact not found for kernel `{kernel}` with signature {signature}"
@@ -163,6 +170,7 @@ impl Error {
             InvalidLaunch(_) => "ERROR_INVALID_VALUE",
             Stream(_) => "ERROR_LAUNCH_FAILED",
             EventNotRecorded => "ERROR_NOT_READY",
+            DeviceLost(_) => "ERROR_DEVICE_LOST",
             NoArtifact { .. } => "ERROR_NO_BINARY_FOR_GPU",
             Manifest(_) => "ERROR_INVALID_IMAGE",
             ModuleLoad { .. } => "ERROR_INVALID_IMAGE",
@@ -180,7 +188,40 @@ impl Error {
             Other(_) => "ERROR_UNKNOWN",
         }
     }
+
+    /// Does this error classify as a *device loss*? True for the typed
+    /// [`Error::DeviceLost`], and for stringly carriers — sticky stream
+    /// errors and serve-layer batch-failure wrappers stringify their
+    /// cause — whose message contains the canonical loss phrase.
+    pub fn is_device_loss(&self) -> bool {
+        match self {
+            Error::DeviceLost(_) => true,
+            Error::Stream(m) | Error::Other(m) => m.contains(DEVICE_LOST_PHRASE),
+            _ => false,
+        }
+    }
+
+    /// Is this error worth retrying on the same device set? Transient
+    /// failures are tied to one batch — a poisoned stream, a failed
+    /// allocation, a desynced warm cache, an overloaded queue — rather
+    /// than to broken input or a lost device.
+    pub fn is_transient(&self) -> bool {
+        if self.is_device_loss() {
+            return false;
+        }
+        matches!(
+            self,
+            Error::OutOfMemory { .. }
+                | Error::Stream(_)
+                | Error::InvalidLaunch(_)
+                | Error::Overloaded { .. }
+        )
+    }
 }
+
+/// Canonical device-loss phrase from `Error::DeviceLost`'s Display, the
+/// marker [`Error::is_device_loss`] matches in stringly-typed carriers.
+const DEVICE_LOST_PHRASE: &str = "was lost (reset required)";
 
 #[cfg(test)]
 mod tests {
@@ -209,6 +250,32 @@ mod tests {
     fn xla_errors_convert() {
         let e: Error = Error::Xla("boom".into());
         assert_eq!(e.status(), "ERROR_LAUNCH_FAILED");
+    }
+
+    #[test]
+    fn device_loss_is_sticky_and_classified() {
+        let e = Error::DeviceLost(2);
+        assert_eq!(e.status(), "ERROR_DEVICE_LOST");
+        assert!(e.to_string().contains("device 2 was lost"));
+        assert!(e.is_device_loss());
+        assert!(!e.is_transient());
+        // Stringly carriers keep the classification: a sticky stream
+        // error stores the original Display text.
+        let carried = Error::Stream(Error::DeviceLost(2).to_string());
+        assert!(carried.is_device_loss());
+        assert!(!carried.is_transient());
+        let wrapped = Error::Other(format!("serving batch failed: {e}"));
+        assert!(wrapped.is_device_loss());
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(Error::OutOfMemory { requested: 1, available: 0 }.is_transient());
+        assert!(Error::Stream("injected h2d fault on device 1".into()).is_transient());
+        assert!(Error::InvalidLaunch("desynced pipe".into()).is_transient());
+        assert!(Error::Overloaded { depth: 1, capacity: 1 }.is_transient());
+        assert!(!Error::Type("bad dtype".into()).is_transient());
+        assert!(!Error::Type("bad dtype".into()).is_device_loss());
     }
 
     #[test]

@@ -20,7 +20,14 @@
 //!   counters and a [`BatchHistogram`] of formed batch sizes;
 //! * multi-device serving — [`Service::on_set`] pins workers round-robin
 //!   onto [`crate::driver::DeviceSet`] members with per-member
-//!   utilization accounting (see `docs/devices.md`).
+//!   utilization accounting (see `docs/devices.md`);
+//! * fault tolerance — batch failures are classified with
+//!   [`crate::Error::is_device_loss`] / [`crate::Error::is_transient`];
+//!   a worker whose member is lost re-pins onto a healthy one, the
+//!   failed batch's requests are re-admitted once at the queue front,
+//!   and every ticket still resolves with a result or a typed error.
+//!   The `retried` / `failed_over` counters in [`ServeStats`] track
+//!   this path (see `docs/faults.md`).
 //!
 //! The open-loop load harness lives in `benches/serve_load.rs`; the
 //! correctness suite in `rust/tests/serve.rs`.

@@ -22,6 +22,14 @@
 //!   [`crate::driver::StreamPool`]; a failed batch's sticky stream error
 //!   is quarantined and reclaimed at lease return, so the next batch
 //!   starts clean (see `docs/serving.md`).
+//! * **failover** — a failed batch marks the worker's `DeviceSet`
+//!   member via `DeviceSet::observe_error`; on a device loss
+//!   ([`Error::is_device_loss`]) the worker re-pins onto a healthy
+//!   member with a fresh pipeline. The batch's requests are re-admitted
+//!   once at the queue front (FIFO preserved, queue bound respected);
+//!   a request whose retry also fails resolves with the typed error —
+//!   every ticket resolves, nothing is silently dropped (see
+//!   `docs/faults.md`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -79,6 +87,9 @@ struct PendingReq {
     image: Image,
     enqueued: Instant,
     budget: Duration,
+    /// Already re-admitted once after a failed batch; a second failure
+    /// resolves the ticket with the error instead of retrying again.
+    retried: bool,
     tx: Sender<Resolution>,
 }
 
@@ -258,6 +269,7 @@ impl Service {
             image,
             enqueued: Instant::now(),
             budget: Duration::from_micros(budget_us),
+            retried: false,
             tx,
         });
         drop(q);
@@ -338,7 +350,7 @@ fn worker_loop(
             GpuAuto::on_context(set.context(member).clone()).map(|e| (e, Some((set, member))))
         }
     };
-    let (mut engine, pin) = match built {
+    let (mut engine, mut pin) = match built {
         Ok(v) => {
             let _ = ready.send(Ok(()));
             v
@@ -349,7 +361,7 @@ fn worker_loop(
         }
     };
     while let Some(batch) = next_batch(&shared) {
-        run_batch(&shared, &mut engine, pin.as_ref(), &thetas, batch);
+        run_batch(&shared, &mut engine, &mut pin, &thetas, batch);
     }
 }
 
@@ -424,11 +436,13 @@ fn next_batch(shared: &Shared) -> Option<Vec<PendingReq>> {
 
 /// Drop expired requests, run the survivors through the pipeline, and
 /// resolve every ticket. A worker pinned to a [`DeviceSet`] member
-/// records its images and busy time into the set.
+/// records its images and busy time into the set; a failed batch marks
+/// the member, re-pins the worker onto a healthy one after a device
+/// loss, and re-admits the batch's requests once at the queue front.
 fn run_batch(
     shared: &Shared,
     engine: &mut GpuAuto,
-    pin: Option<&(DeviceSet, usize)>,
+    pin: &mut Option<(DeviceSet, usize)>,
     thetas: &[f32],
     batch: Vec<PendingReq>,
 ) {
@@ -457,7 +471,7 @@ fn run_batch(
     let images: Vec<Image> = live.iter().map(|p| p.image.clone()).collect();
     let started = Instant::now();
     let outcome = engine.features_batch(&images, thetas);
-    if let Some((set, member)) = pin {
+    if let Some((set, member)) = pin.as_ref() {
         set.record_busy(*member, started.elapsed().as_nanos() as u64);
         if outcome.is_ok() {
             set.record_images(*member, images.len() as u64);
@@ -476,11 +490,59 @@ fn run_batch(
             }
         }
         Err(e) => {
+            // Classify the failure and, after a device loss, re-pin this
+            // worker onto a healthy member with a fresh pipeline before
+            // deciding each rider's fate.
+            let mut failed_over = false;
+            if let Some((set, member)) = pin.as_mut() {
+                set.observe_error(*member, &e);
+                if e.is_device_loss() {
+                    if let Some(next) = set.pick_healthy() {
+                        if next != *member {
+                            if let Ok(fresh) = GpuAuto::on_context(set.context(next).clone()) {
+                                *engine = fresh;
+                                *member = next;
+                                failed_over = true;
+                            }
+                        }
+                    }
+                }
+            }
+            // Re-admit each rider once at the queue front (reverse
+            // iteration + push_front preserves FIFO order) while the
+            // queue bound allows; everyone else resolves with the typed
+            // error. Re-admitted requests keep their original deadline.
+            let retryable = e.is_device_loss() || e.is_transient();
+            let capacity = shared.config.queue_capacity;
             // `Error` is not `Clone`; every rider gets the failure text.
             let msg = format!("serving batch failed: {e}");
+            let mut requeued: Vec<String> = Vec::new();
+            let mut dead = Vec::new();
+            {
+                let mut q = shared.queue.lock().unwrap();
+                for mut p in live.into_iter().rev() {
+                    if retryable && !p.retried && q.len() < capacity {
+                        p.retried = true;
+                        requeued.push(p.tenant.clone());
+                        q.push_front(p);
+                    } else {
+                        dead.push(p);
+                    }
+                }
+            }
+            if !requeued.is_empty() {
+                shared.work.notify_all();
+            }
             let done = Instant::now();
             let mut stats = shared.stats.lock().unwrap();
-            for p in live {
+            for tenant in &requeued {
+                let s = Shared::stat(&mut stats, tenant);
+                s.retried += 1;
+                if failed_over {
+                    s.failed_over += 1;
+                }
+            }
+            for p in dead {
                 Shared::stat(&mut stats, &p.tenant).failed += 1;
                 let _ = p.tx.send((done, Err(Error::Stream(msg.clone()))));
             }

@@ -57,6 +57,13 @@ pub struct ServeStats {
     pub expired: u64,
     /// Admitted requests whose batch failed in the pipeline.
     pub failed: u64,
+    /// Requests re-admitted after their batch failed with a transient or
+    /// device-loss error. Not a terminal state: each retried request
+    /// still ends in `served`, `expired` or `failed`.
+    pub retried: u64,
+    /// Retried requests whose worker re-pinned onto another `DeviceSet`
+    /// member (device loss) before the retry. Not a terminal state.
+    pub failed_over: u64,
     /// Sizes of the batches this tenant's served requests rode in.
     pub batches: BatchHistogram,
 }
@@ -70,6 +77,8 @@ impl ServeStats {
         self.rejected += other.rejected;
         self.expired += other.expired;
         self.failed += other.failed;
+        self.retried += other.retried;
+        self.failed_over += other.failed_over;
         for (b, o) in self.batches.buckets.iter_mut().zip(other.batches.buckets) {
             *b += o;
         }
@@ -95,6 +104,7 @@ mod tests {
     fn stats_default_to_zero() {
         let s = ServeStats::default();
         assert_eq!(s.admitted + s.served + s.rejected + s.expired + s.failed, 0);
+        assert_eq!(s.retried + s.failed_over, 0);
         assert_eq!(s.batches.total(), 0);
     }
 }

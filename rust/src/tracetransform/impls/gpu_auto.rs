@@ -194,6 +194,18 @@ impl DeviceLane {
         }
     }
 
+    /// Drop every piece of warm cached state: double-buffer pipes,
+    /// reduce buffers, the leased-stream pool. A lane whose batch just
+    /// failed may hold buffers desynced from the kernel chain's
+    /// progress — rebuilding them lazily on the next call is always
+    /// safe (cold and warm paths are bitwise identical), whereas
+    /// keeping them risks `InvalidLaunch` on a later, healthy call.
+    fn invalidate(&mut self) {
+        self.pipes.clear();
+        self.reduce_bufs.clear();
+        self.streams = None;
+    }
+
     /// Run `chunks` — disjoint `(lo, hi)` index ranges into `imgs`, all
     /// of one image size — through this lane's double-buffered
     /// two-stream pipeline, writing image `i`'s feature vector into
@@ -662,7 +674,13 @@ impl TraceImpl for GpuAuto {
                 if half < n {
                     chunks.push((half, n));
                 }
-                self.lanes[0].run_chunks(imgs, &chunks, rep, dev_reduce, &mut out)?;
+                if let Err(e) = self.lanes[0].run_chunks(imgs, &chunks, rep, dev_reduce, &mut out)
+                {
+                    // Surface the typed error but never a poisoned warm
+                    // path: the next call rebuilds the lane's caches.
+                    self.lanes[0].invalidate();
+                    return Err(e);
+                }
                 return Ok(out);
             }
             Some(s) => s,
@@ -692,57 +710,102 @@ impl TraceImpl for GpuAuto {
         // double-buffered pipeline on its own context, so the only
         // shared state is the replicated angle table (internally
         // locked) and the set's counters (atomics).
-        let lane_results: Vec<Result<Vec<Vec<f32>>>> = std::thread::scope(|scope| {
+        let lane_results: Vec<(usize, Result<Vec<Vec<f32>>>)> = std::thread::scope(|scope| {
             let mut joins = Vec::new();
             for (li, (lane, lane_chunks)) in
                 self.lanes.iter_mut().zip(per_lane.iter()).enumerate()
             {
                 if lane_chunks.is_empty() {
-                    joins.push(None);
                     continue;
                 }
                 let set = set.clone();
-                joins.push(Some(scope.spawn(move || {
-                    let start = std::time::Instant::now();
-                    let mut local = vec![Vec::new(); n];
-                    let r = lane.run_chunks(imgs, lane_chunks, rep, dev_reduce, &mut local);
-                    let weight: u64 =
-                        lane_chunks.iter().map(|&(lo, hi)| (hi - lo) as u64).sum();
-                    set.complete(li, weight);
-                    set.record_busy(li, start.elapsed().as_nanos() as u64);
-                    if r.is_ok() {
-                        set.record_images(li, weight);
-                    }
-                    r.map(|()| local)
-                })));
+                joins.push((
+                    li,
+                    scope.spawn(move || {
+                        let start = std::time::Instant::now();
+                        let mut local = vec![Vec::new(); n];
+                        let r = lane.run_chunks(imgs, lane_chunks, rep, dev_reduce, &mut local);
+                        let weight: u64 =
+                            lane_chunks.iter().map(|&(lo, hi)| (hi - lo) as u64).sum();
+                        set.complete(li, weight);
+                        set.record_busy(li, start.elapsed().as_nanos() as u64);
+                        if r.is_ok() {
+                            set.record_images(li, weight);
+                        }
+                        r.map(|()| local)
+                    }),
+                ));
             }
             joins
                 .into_iter()
-                .flatten()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        Err(Error::Other("a sharded pipeline lane panicked".into()))
-                    })
+                .map(|(li, h)| {
+                    (
+                        li,
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Other("a sharded pipeline lane panicked".into()))
+                        }),
+                    )
                 })
                 .collect()
         });
-        // First error wins, in lane order.
-        let mut locals = Vec::with_capacity(lane_results.len());
-        for r in lane_results {
-            locals.push(r?);
-        }
-        // Reassemble by global image index. Each image's features depend
-        // only on its own pixels, so the shard composition leaves the
-        // bits unchanged relative to single-device execution.
-        let mut it = locals.into_iter();
-        for lane_chunks in per_lane.iter() {
-            if lane_chunks.is_empty() {
-                continue;
+        // Reassemble the successful lanes by global image index — each
+        // image's features depend only on its own pixels, so the shard
+        // composition leaves the bits unchanged relative to
+        // single-device execution — and collect the failed lanes for
+        // the bounded failover retry below.
+        let mut failed: Vec<(usize, Error)> = Vec::new();
+        for (li, r) in lane_results {
+            match r {
+                Ok(mut local) => {
+                    for &(clo, chi) in &per_lane[li] {
+                        for (slot, got) in out[clo..chi].iter_mut().zip(local[clo..chi].iter_mut())
+                        {
+                            *slot = std::mem::take(got);
+                        }
+                    }
+                }
+                Err(e) => failed.push((li, e)),
             }
-            let mut local = it.next().ok_or_else(|| state_desync("sharded lane results"))?;
-            for &(clo, chi) in lane_chunks {
-                for (slot, got) in out[clo..chi].iter_mut().zip(local[clo..chi].iter_mut()) {
-                    *slot = std::mem::take(got);
+        }
+        // Failover: a failed lane marks its member's health and drops
+        // its warm caches (they may be desynced mid-chain). Device-loss
+        // and transient failures get one retry per chunk, re-placed on
+        // the surviving members — the health-aware `place` skips the
+        // lost one. Retried shards recompute the same per-image pure
+        // function, so the reassembled batch stays bitwise identical to
+        // a fault-free run.
+        for (li, e) in failed {
+            set.observe_error(li, &e);
+            self.lanes[li].invalidate();
+            if !(e.is_device_loss() || e.is_transient()) {
+                return Err(e);
+            }
+            for &(clo, chi) in &per_lane[li] {
+                let weight = (chi - clo) as u64;
+                let m = set.place(weight);
+                if m == li {
+                    // No healthier member to fail over to.
+                    set.complete(m, weight);
+                    return Err(e);
+                }
+                let start = std::time::Instant::now();
+                let mut local = vec![Vec::new(); n];
+                let r = self.lanes[m].run_chunks(imgs, &[(clo, chi)], rep, dev_reduce, &mut local);
+                set.complete(m, weight);
+                set.record_busy(m, start.elapsed().as_nanos() as u64);
+                match r {
+                    Ok(()) => {
+                        set.record_images(m, weight);
+                        for (slot, got) in out[clo..chi].iter_mut().zip(local[clo..chi].iter_mut())
+                        {
+                            *slot = std::mem::take(got);
+                        }
+                    }
+                    Err(e2) => {
+                        set.observe_error(m, &e2);
+                        self.lanes[m].invalidate();
+                        return Err(e2);
+                    }
                 }
             }
         }
@@ -937,6 +1000,46 @@ mod tests {
         assert_eq!(pool.idle_count(), 2, "both streams returned after the batch");
     }
 
+    /// Warm-path poisoning regression: an injected transient fault
+    /// fails one batch, the lane's cached pipes/reduce-bufs/streams are
+    /// invalidated, and the *next* call rebuilds them and succeeds with
+    /// bitwise-identical output — no sticky `InvalidLaunch` from a
+    /// desynced cache.
+    #[test]
+    fn failed_batch_invalidates_warm_caches_and_next_call_succeeds() {
+        let _g = REDUCE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _f = crate::driver::faults::FAULT_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let thetas = orientations(5);
+        let imgs: Vec<_> = (0..4)
+            .map(|i| crate::tracetransform::image::random_phantom(10, 700 + i as u64))
+            .collect();
+        let mut reference = GpuAuto::on_device(DeviceChoice::Emulator)
+            .unwrap()
+            .with_shard(Some(ShardMode::Off));
+        let expect = reference.features_batch(&imgs, &thetas).unwrap();
+
+        // A synthesized ordinal only this test touches: parallel tests
+        // doing h2d on the shared emulator device must not consume (or
+        // trip over) the scheduled injection.
+        let ord = 9_300usize;
+        let ctx = Context::create(&crate::driver::Device::emulator_at(ord, None)).unwrap();
+        let mut m = GpuAuto::on_context(ctx).unwrap().with_shard(Some(ShardMode::Off));
+        crate::driver::faults::install(
+            crate::driver::faults::FaultPlan::new().fail(
+                crate::driver::faults::FaultSite::H2d,
+                ord,
+                1,
+            ),
+        );
+        let err = m.features_batch(&imgs, &thetas).unwrap_err();
+        assert!(err.is_transient(), "injected h2d fault is transient: {err}");
+        assert!(!err.is_device_loss());
+        // The rule fired exactly once; the rebuilt warm path succeeds.
+        let got = m.features_batch(&imgs, &thetas).unwrap();
+        assert_eq!(got, expect, "post-failure rebuild is bitwise identical");
+        crate::driver::faults::reset_all();
+    }
+
     /// Tentpole acceptance criterion: a batch sharded across a
     /// 2- or 4-member `DeviceSet` is **bitwise identical** to the
     /// single-device pipeline, and the set's accounting shows the work
@@ -964,8 +1067,13 @@ mod tests {
             let total: u64 = stats.iter().map(|s| s.images).sum();
             assert_eq!(total, imgs.len() as u64, "every image accounted to a member");
             assert!(stats.iter().all(|s| s.outstanding == 0), "all shards retired");
+            // Under an ambient chaos schedule (HLGPU_FAULTS) a member
+            // may be lost and excluded from placement — the bitwise
+            // identity above still must hold, but the spread may
+            // legitimately collapse onto the survivors.
             assert!(
-                stats.iter().filter(|s| s.images > 0).count() >= 2,
+                crate::driver::faults::armed()
+                    || stats.iter().filter(|s| s.images > 0).count() >= 2,
                 "work spread across members: {stats:?}"
             );
         }
