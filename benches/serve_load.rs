@@ -23,15 +23,27 @@
 //! served-throughput ratio (report-only; lanes share this machine's
 //! cores, so the >1.5x multi-device target needs independent hardware).
 //!
+//! With `SL_REMOTE=1` the same offered load is driven **over loopback
+//! TCP** through `hlgpu::net` (`docs/wire.md`): a `NetServer` fronts the
+//! service, the submitter pipelines framed requests on one socket half
+//! while a collector thread joins responses on the other, and the report
+//! keeps the same columns — so the network tax is directly comparable.
+//! Latency is then measured at response receipt (it includes the wire),
+//! every submitted request must come back (zero ticket loss; a 30 s
+//! receive timeout trips instead of hanging), and the client-side error
+//! breakdown must agree with the server's own books.
+//!
 //! Run: `cargo bench --bench serve_load`
 //! Env: SL_RATES (req/s list, default "200,1000,4000"), SL_MS (window
 //! per rate, default 400), SL_DEADLINE_US (per-request budget, default
 //! 100000), SL_SEED, SL_DEVICES (second-pass set size, default 2),
-//! SL_SMOKE=1 (CI smoke: one small rate, short window, both passes).
+//! SL_REMOTE=1 (drive over loopback TCP), SL_SMOKE=1 (CI smoke: one
+//! small rate, short window, both passes).
 
 use std::time::{Duration, Instant};
 
 use hlgpu::bench_support::{fmt_time, Table};
+use hlgpu::net::{NetClient, NetConfig, NetServer, Received};
 use hlgpu::serve::{BatchHistogram, ServeConfig, Service};
 use hlgpu::tracetransform::{orientations, random_phantom, DeviceChoice, Image};
 use hlgpu::util::Prng;
@@ -69,6 +81,65 @@ struct RateOutcome {
     device_line: Option<String>,
 }
 
+fn build_service(deadline_us: u64, devices: usize, thetas: &[f32]) -> Service {
+    let config = ServeConfig {
+        max_batch: 8,
+        max_delay_us: 300,
+        queue_capacity: 64,
+        default_deadline_us: deadline_us,
+        workers: devices.max(2),
+    };
+    if devices <= 1 {
+        Service::new(DeviceChoice::Emulator, thetas, config).unwrap()
+    } else {
+        Service::on_set(hlgpu::driver::DeviceSet::emulator(devices).unwrap(), thetas, config)
+            .unwrap()
+    }
+}
+
+/// Pre-built image pools so the submit loop measures serving, not
+/// phantom generation.
+fn build_pools(seed: u64) -> Vec<Vec<Image>> {
+    SIZES
+        .iter()
+        .map(|&s| (0..16).map(|i| random_phantom(s, seed ^ ((s as u64) << 8) ^ i)).collect())
+        .collect()
+}
+
+/// Cross-check the client-side tallies against the service's own books,
+/// and render the per-rate report lines shared by both flavors.
+fn report_tail(
+    svc: &Service,
+    served: u64,
+    shed: u64,
+    expired: u64,
+    failed: u64,
+) -> (String, String, Option<String>) {
+    let st = svc.stats_total();
+    assert_eq!(st.served, served, "ticket joins and stats agree on served");
+    assert_eq!(st.rejected, shed, "admission sheds and stats agree");
+    // Per-member utilization, for the DeviceSet passes.
+    let device_line = svc.device_set().map(|s| {
+        let per: Vec<String> = s
+            .stats()
+            .iter()
+            .map(|m| {
+                format!("dev{} {} imgs {:.0} ms busy", m.ordinal, m.images, m.busy_ns as f64 / 1e6)
+            })
+            .collect();
+        format!("{} — imbalance {:.2}", per.join(", "), s.imbalance())
+    });
+    // Error breakdown: terminal outcomes plus the non-terminal recovery
+    // counters (requests re-admitted after a failed batch, and those
+    // re-admitted behind a worker that failed over to another member —
+    // see docs/faults.md).
+    let errors = format!(
+        "shed {shed} / expired {expired} / failed-over {} / failed {failed} (retried {})",
+        st.failed_over, st.retried
+    );
+    (histogram_line(&st.batches), errors, device_line)
+}
+
 fn run_rate(
     rate: f64,
     window: Duration,
@@ -78,27 +149,9 @@ fn run_rate(
     table: &mut Table,
 ) -> RateOutcome {
     let thetas = orientations(6);
-    let config = ServeConfig {
-        max_batch: 8,
-        max_delay_us: 300,
-        queue_capacity: 64,
-        default_deadline_us: deadline_us,
-        workers: devices.max(2),
-    };
-    let capacity = config.queue_capacity;
-    let svc = if devices <= 1 {
-        Service::new(DeviceChoice::Emulator, &thetas, config).unwrap()
-    } else {
-        Service::on_set(hlgpu::driver::DeviceSet::emulator(devices).unwrap(), &thetas, config)
-            .unwrap()
-    };
-
-    // Pre-built image pools so the submit loop measures serving, not
-    // phantom generation.
-    let pools: Vec<Vec<Image>> = SIZES
-        .iter()
-        .map(|&s| (0..16).map(|i| random_phantom(s, seed ^ ((s as u64) << 8) ^ i)).collect())
-        .collect();
+    let svc = build_service(deadline_us, devices, &thetas);
+    let capacity = svc.config().queue_capacity;
+    let pools = build_pools(seed);
 
     let mut prng = Prng::new(seed);
     let mut pending: Vec<(Instant, hlgpu::serve::Ticket)> = Vec::new();
@@ -156,36 +209,134 @@ fn run_rate(
         format!("{max_depth}/{capacity}"),
     ]);
 
-    // Sanity against the service's own books before it drops.
-    let st = svc.stats_total();
-    assert_eq!(st.served, served, "ticket joins and stats agree on served");
-    assert_eq!(st.rejected, shed, "admission sheds and stats agree");
-    // Per-member utilization, for the DeviceSet passes.
-    let device_line = svc.device_set().map(|s| {
-        let per: Vec<String> = s
-            .stats()
-            .iter()
-            .map(|m| format!("dev{} {} imgs {:.0} ms busy", m.ordinal, m.images, m.busy_ns as f64 / 1e6))
-            .collect();
-        format!("{} — imbalance {:.2}", per.join(", "), s.imbalance())
-    });
-    // Error breakdown: terminal outcomes plus the non-terminal recovery
-    // counters (requests re-admitted after a failed batch, and those
-    // re-admitted behind a worker that failed over to another member —
-    // see docs/faults.md).
-    let errors = format!(
-        "shed {shed} / expired {expired} / failed-over {} / failed {failed} (retried {})",
-        st.failed_over, st.retried
-    );
+    let (histogram, errors, device_line) = report_tail(&svc, served, shed, expired, failed);
     RateOutcome {
         served,
         throughput: served as f64 / total,
         max_depth,
         capacity,
-        histogram: histogram_line(&st.batches),
+        histogram,
         errors,
         device_line,
     }
+}
+
+/// What the collector thread tallies from the response stream.
+struct Collected {
+    lats: Vec<f64>,
+    shed: u64,
+    expired: u64,
+    failed: u64,
+    received: u64,
+}
+
+/// The remote flavor: the same open-loop Poisson stream, driven through
+/// a loopback `NetServer` + split `NetClient` instead of direct submits.
+fn run_rate_remote(
+    rate: f64,
+    window: Duration,
+    deadline_us: u64,
+    seed: u64,
+    devices: usize,
+    table: &mut Table,
+) -> RateOutcome {
+    let thetas = orientations(6);
+    let svc = build_service(deadline_us, devices, &thetas);
+    let capacity = svc.config().queue_capacity;
+    let server = NetServer::bind("127.0.0.1:0", svc, NetConfig::default()).unwrap();
+    let client = NetClient::connect(&server.addr().to_string(), "load").unwrap();
+    let (mut net_tx, mut net_rx) = client.split();
+    // A lost ticket must trip this timeout and fail the run, not hang it.
+    net_rx.set_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // The submitter streams each request's (id, t0) to the collector;
+    // responses arrive in submission order, so the collector joins them
+    // one-for-one and measures receipt-time latency (wire included).
+    let (t0_tx, t0_rx) = std::sync::mpsc::channel::<(u64, Instant)>();
+    let collector = std::thread::spawn(move || {
+        let mut c = Collected { lats: Vec::new(), shed: 0, expired: 0, failed: 0, received: 0 };
+        loop {
+            match net_rx.recv() {
+                Ok(Some(Received::Response(id, outcome))) => {
+                    let (want, t0) = t0_rx.recv().expect("a submit record for every response");
+                    assert_eq!(id, want, "responses arrive in submission order");
+                    c.received += 1;
+                    match outcome {
+                        Ok(_) => c.lats.push(t0.elapsed().as_secs_f64()),
+                        Err(Error::Overloaded { .. }) => c.shed += 1,
+                        Err(Error::DeadlineExceeded { .. }) => c.expired += 1,
+                        Err(_) => c.failed += 1,
+                    }
+                }
+                Ok(Some(Received::Stats(..))) => panic!("unsolicited stats reply"),
+                Ok(None) => return c,
+                Err(e) => panic!("receive failed — a ticket was lost over the wire: {e}"),
+            }
+        }
+    });
+
+    let pools = build_pools(seed);
+    let mut prng = Prng::new(seed);
+    let mut submitted = 0u64;
+    let mut max_depth = 0usize;
+    let start = Instant::now();
+    let mut next_arrival = start;
+    let mut n = 0usize;
+    while start.elapsed() < window {
+        let now = Instant::now();
+        if now < next_arrival {
+            std::thread::sleep(next_arrival - now);
+        }
+        let which = prng.usize_in(0, SIZES.len() - 1);
+        let img = &pools[which][n % pools[which].len()];
+        n += 1;
+        let t0 = Instant::now();
+        let id = net_tx.submit(img, deadline_us).unwrap();
+        t0_tx.send((id, t0)).unwrap();
+        submitted += 1;
+        // Same-process introspection: the queue bound must hold with the
+        // wire in front of it too.
+        max_depth = max_depth.max(server.service().queue_depth());
+        let u = prng.next_f64().min(1.0 - 1e-12);
+        next_arrival += Duration::from_secs_f64(-(1.0 - u).ln() / rate);
+    }
+    drop(t0_tx);
+    // GOODBYE: the server drains every in-flight response, then closes —
+    // the collector sees them all, then a clean EOF.
+    net_tx.goodbye().unwrap();
+    let mut c = collector.join().unwrap();
+    let total = start.elapsed().as_secs_f64();
+    assert_eq!(c.received, submitted, "zero ticket loss: every request came back");
+    c.lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let served = c.lats.len() as u64;
+
+    table.row(&[
+        format!("{rate:.0}/s x{devices}d net"),
+        submitted.to_string(),
+        served.to_string(),
+        c.shed.to_string(),
+        c.expired.to_string(),
+        c.failed.to_string(),
+        fmt_pct(&c.lats, 50.0),
+        fmt_pct(&c.lats, 99.0),
+        fmt_pct(&c.lats, 99.9),
+        format!("{:.0}", served as f64 / total),
+        format!("{max_depth}/{capacity}"),
+    ]);
+
+    let (histogram, errors, device_line) =
+        report_tail(server.service(), served, c.shed, c.expired, c.failed);
+    let outcome = RateOutcome {
+        served,
+        throughput: served as f64 / total,
+        max_depth,
+        capacity,
+        histogram,
+        errors,
+        device_line,
+    };
+    server.shutdown();
+    outcome
 }
 
 fn histogram_line(h: &BatchHistogram) -> String {
@@ -200,6 +351,7 @@ fn histogram_line(h: &BatchHistogram) -> String {
 
 fn main() {
     let smoke = std::env::var("SL_SMOKE").is_ok();
+    let remote = std::env::var("SL_REMOTE").is_ok();
     let rates: Vec<f64> = if smoke {
         vec![300.0]
     } else {
@@ -214,24 +366,26 @@ fn main() {
     let seed = env_u64("SL_SEED", 42);
 
     println!(
-        "serve_load: open-loop Poisson arrivals, sizes {SIZES:?}, \
+        "serve_load: open-loop Poisson arrivals{}, sizes {SIZES:?}, \
          {} ms window, {deadline_us} µs deadline\n",
+        if remote { " over loopback TCP" } else { "" },
         window.as_millis()
     );
     let mut table = Table::new(&[
         "offered", "reqs", "served", "shed", "expired", "failed", "p50", "p99", "p999",
         "imgs/s", "maxq",
     ]);
+    let run = if remote { run_rate_remote } else { run_rate };
     let set_size = env_u64("SL_DEVICES", 2).max(2) as usize;
     let mut outcomes = Vec::new();
     let mut multi = Vec::new();
     for &rate in &rates {
-        outcomes.push(run_rate(rate, window, deadline_us, seed, 1, &mut table));
+        outcomes.push(run(rate, window, deadline_us, seed, 1, &mut table));
     }
     // Second pass: same offered load against a DeviceSet-backed service,
     // workers pinned round-robin onto the members.
     for &rate in &rates {
-        multi.push(run_rate(rate, window, deadline_us, seed, set_size, &mut table));
+        multi.push(run(rate, window, deadline_us, seed, set_size, &mut table));
     }
     println!("\n{}", table.render());
 

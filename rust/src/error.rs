@@ -58,6 +58,10 @@ pub enum Error {
     /// The admission queue is at capacity; the service sheds the request
     /// instead of growing the queue without bound.
     Overloaded { depth: usize, capacity: usize },
+    /// A wire-protocol violation on the framed TCP transport
+    /// (`rust/src/net`): bad magic, truncated or oversized frame,
+    /// unknown frame type, malformed payload (see `docs/wire.md`).
+    Protocol(String),
 
     // ---- misc ------------------------------------------------------------
     Io(std::io::Error),
@@ -119,6 +123,7 @@ impl fmt::Display for Error {
                 f,
                 "service overloaded: admission queue at {depth}/{capacity}"
             ),
+            Protocol(r) => write!(f, "wire protocol error: {r}"),
             Io(e) => write!(f, "I/O error: {e}"),
             Json(r) => write!(f, "JSON parse error: {r}"),
             Other(r) => write!(f, "{r}"),
@@ -183,9 +188,104 @@ impl Error {
             HostLang(_) => "ERROR_UNKNOWN",
             DeadlineExceeded { .. } => "ERROR_TIMEOUT",
             Overloaded { .. } => "ERROR_OUT_OF_RESOURCES",
+            Protocol(_) => "ERROR_PROTOCOL",
             Io(_) => "ERROR_FILE_NOT_FOUND",
             Json(_) => "ERROR_INVALID_IMAGE",
             Other(_) => "ERROR_UNKNOWN",
+        }
+    }
+
+    /// Stable numeric status code for the framed wire protocol
+    /// (`rust/src/net`, see `docs/wire.md`). `0` is reserved for OK, so
+    /// every variant maps to a non-zero code. Codes are grouped by layer
+    /// (driver 1–19, backend 20–29, automation 30–39, host-language 40s,
+    /// serving 50s, misc/transport 60s) and **never reused**: the match
+    /// below is exhaustive, so adding an `Error` variant without
+    /// assigning it a code fails to compile, and the
+    /// `wire_codes_are_stable_and_unique` test pins the published
+    /// values.
+    pub fn wire_code(&self) -> u16 {
+        use Error::*;
+        match self {
+            // driver-level
+            InvalidDevice(_) => 1,
+            ContextDestroyed => 2,
+            InvalidDevicePtr(_) => 3,
+            OutOfBounds { .. } => 4,
+            OutOfMemory { .. } => 5,
+            DoubleFree(_) => 6,
+            ModuleNotFound(_) => 7,
+            FunctionNotFound(_) => 8,
+            InvalidLaunch(_) => 9,
+            Stream(_) => 10,
+            EventNotRecorded => 11,
+            DeviceLost(_) => 12,
+            // backend / compilation
+            NoArtifact { .. } => 20,
+            Manifest(_) => 21,
+            ModuleLoad { .. } => 22,
+            Xla(_) => 23,
+            VtxValidation { .. } => 24,
+            VtxTrap { .. } => 25,
+            // automation-level
+            Specialize { .. } => 30,
+            BadArgument { .. } => 31,
+            Type(_) => 32,
+            // host-language layer
+            HostLang(_) => 40,
+            // serving layer
+            DeadlineExceeded { .. } => 50,
+            Overloaded { .. } => 51,
+            // misc / transport
+            Io(_) => 60,
+            Json(_) => 61,
+            Other(_) => 62,
+            Protocol(_) => 63,
+        }
+    }
+
+    /// Project this error onto the wire: `(code, a, b, message)`, where
+    /// `a`/`b` carry the variant's numeric payload (so the well-known
+    /// variants reconstruct losslessly through [`Error::from_wire`]) and
+    /// `message` is the Display text.
+    pub fn to_wire(&self) -> (u16, u64, u64, String) {
+        use Error::*;
+        let (a, b) = match self {
+            InvalidDevice(n) | DeviceLost(n) => (*n as u64, 0),
+            InvalidDevicePtr(p) | DoubleFree(p) => (*p, 0),
+            OutOfMemory { requested, available } => (*requested as u64, *available as u64),
+            DeadlineExceeded { waited_us, budget_us } => (*waited_us, *budget_us),
+            Overloaded { depth, capacity } => (*depth as u64, *capacity as u64),
+            _ => (0, 0),
+        };
+        (self.wire_code(), a, b, self.to_string())
+    }
+
+    /// Reconstruct an error from its wire projection. Well-known codes
+    /// come back as their structured variants (deadlines, overload,
+    /// device loss, OOM keep their numbers; stringly variants keep the
+    /// message); anything else lands in [`Error::Other`] carrying the
+    /// remote Display text, so no information is silently dropped.
+    pub fn from_wire(code: u16, a: u64, b: u64, msg: String) -> Error {
+        // The message travels as Display text; peel the variant's own
+        // prefix back off so reconstruction doesn't double-wrap it.
+        fn strip(msg: String, prefix: &str) -> String {
+            match msg.strip_prefix(prefix) {
+                Some(inner) => inner.to_string(),
+                None => msg,
+            }
+        }
+        match code {
+            5 => Error::OutOfMemory { requested: a as usize, available: b as usize },
+            9 => Error::InvalidLaunch(strip(msg, "invalid launch configuration: ")),
+            10 => Error::Stream(strip(msg, "stream error: ")),
+            12 => Error::DeviceLost(a as usize),
+            32 => Error::Type(strip(msg, "type error: ")),
+            50 => Error::DeadlineExceeded { waited_us: a, budget_us: b },
+            51 => Error::Overloaded { depth: a as usize, capacity: b as usize },
+            61 => Error::Json(strip(msg, "JSON parse error: ")),
+            63 => Error::Protocol(strip(msg, "wire protocol error: ")),
+            _ => Error::Other(msg),
         }
     }
 
@@ -276,6 +376,93 @@ mod tests {
         assert!(Error::Overloaded { depth: 1, capacity: 1 }.is_transient());
         assert!(!Error::Type("bad dtype".into()).is_transient());
         assert!(!Error::Type("bad dtype".into()).is_device_loss());
+    }
+
+    /// One representative instance of every variant. `wire_code`'s match
+    /// is exhaustive, so a new variant without a code fails to compile;
+    /// this test additionally pins the *published* values (the wire
+    /// contract) and checks no two variants share a code.
+    fn every_variant() -> Vec<Error> {
+        vec![
+            Error::InvalidDevice(3),
+            Error::ContextDestroyed,
+            Error::InvalidDevicePtr(0x10),
+            Error::OutOfBounds { ptr: 0x10, off: 4, len: 8, size: 8 },
+            Error::OutOfMemory { requested: 10, available: 5 },
+            Error::DoubleFree(0x20),
+            Error::ModuleNotFound("m".into()),
+            Error::FunctionNotFound("f".into()),
+            Error::InvalidLaunch("r".into()),
+            Error::Stream("r".into()),
+            Error::EventNotRecorded,
+            Error::DeviceLost(2),
+            Error::NoArtifact { kernel: "k".into(), signature: "s".into() },
+            Error::Manifest("r".into()),
+            Error::ModuleLoad { backend: "b".into(), reason: "r".into() },
+            Error::Xla("r".into()),
+            Error::VtxValidation { kernel: "k".into(), reason: "r".into() },
+            Error::VtxTrap {
+                kernel: "k".into(),
+                block: (0, 0, 0),
+                thread: (0, 0, 0),
+                reason: "r".into(),
+            },
+            Error::Specialize { kernel: "k".into(), reason: "r".into() },
+            Error::BadArgument { kernel: "k".into(), index: 0, reason: "r".into() },
+            Error::Type("r".into()),
+            Error::HostLang("r".into()),
+            Error::DeadlineExceeded { waited_us: 1, budget_us: 2 },
+            Error::Overloaded { depth: 1, capacity: 2 },
+            Error::Io(std::io::Error::other("r")),
+            Error::Json("r".into()),
+            Error::Other("r".into()),
+            Error::Protocol("r".into()),
+        ]
+    }
+
+    #[test]
+    fn wire_codes_are_stable_and_unique() {
+        let want: &[u16] = &[
+            1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, // driver
+            20, 21, 22, 23, 24, 25, // backend
+            30, 31, 32, // automation
+            40, // hostlang
+            50, 51, // serving
+            60, 61, 62, 63, // misc / transport
+        ];
+        let all = every_variant();
+        assert_eq!(all.len(), want.len(), "every_variant drifted from the code table");
+        let mut seen = std::collections::HashSet::new();
+        for (e, &code) in all.iter().zip(want) {
+            assert_eq!(e.wire_code(), code, "code for {e:?} moved — wire codes are append-only");
+            assert_ne!(e.wire_code(), 0, "0 is reserved for OK");
+            assert!(seen.insert(e.wire_code()), "duplicate wire code {code}");
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_typed_variants() {
+        for e in [
+            Error::DeadlineExceeded { waited_us: 1500, budget_us: 1000 },
+            Error::Overloaded { depth: 64, capacity: 64 },
+            Error::DeviceLost(2),
+            Error::OutOfMemory { requested: 10, available: 5 },
+            Error::Stream("sticky".into()),
+            Error::Protocol("bad magic".into()),
+        ] {
+            let status = e.status();
+            let classified = (e.is_device_loss(), e.is_transient());
+            let (code, a, b, msg) = e.to_wire();
+            let back = Error::from_wire(code, a, b, msg.clone());
+            assert_eq!(back.wire_code(), code, "{back:?}");
+            assert_eq!(back.status(), status, "{back:?}");
+            assert_eq!((back.is_device_loss(), back.is_transient()), classified, "{back:?}");
+            assert_eq!(back.to_string(), e.to_string());
+        }
+        // Unknown / unmapped codes keep the remote message readable.
+        let back = Error::from_wire(25, 0, 0, "VTX trap in kernel `k`".into());
+        assert!(matches!(back, Error::Other(_)));
+        assert!(back.to_string().contains("VTX trap"));
     }
 
     #[test]

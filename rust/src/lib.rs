@@ -42,6 +42,9 @@
 //! * [`serve`] — the **feature-serving engine** over the batched pipeline:
 //!   admission queue with dynamic batch formation, per-request deadlines,
 //!   bounded-queue backpressure and per-tenant stats (`docs/serving.md`).
+//! * [`net`] — the **networked serving layer**: a versioned length-prefixed
+//!   wire format, a std-only TCP front door mapping connections onto
+//!   serving tenants, and the matching client (`docs/wire.md`).
 //! * [`stats`], [`bench_support`], [`sloc`], [`util`] — measurement
 //!   methodology (log-normal fits, §7.2), bench harness, LoC counting for
 //!   Table 2, and offline-built utility substrates (JSON, PRNG, CLI).
@@ -68,6 +71,7 @@ pub mod driver;
 pub mod emulator;
 pub mod error;
 pub mod hostlang;
+pub mod net;
 pub mod runtime;
 pub mod serve;
 pub mod sloc;

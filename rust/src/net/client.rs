@@ -1,0 +1,236 @@
+//! Blocking client for the framed serving protocol (`super::wire`).
+//!
+//! [`NetClient`] holds one TCP connection: connect performs the
+//! HELLO/WELCOME handshake, then requests pipeline — [`NetClient::submit`]
+//! writes a REQUEST without waiting, [`NetClient::recv`] reads the next
+//! RESPONSE (the server answers in submission order). For the common
+//! one-at-a-time case [`NetClient::features`] does both. A load
+//! generator that wants the submit and receive sides on different
+//! threads calls [`NetClient::split`].
+//!
+//! Typed failures cross the wire: a shed request comes back as
+//! [`Error::Overloaded`], an expired one as [`Error::DeadlineExceeded`],
+//! a device loss the service could not absorb as [`Error::DeviceLost`] —
+//! the same variants in-process callers match on (`Error::from_wire`).
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::tracetransform::Image;
+use crate::util::json::Json;
+
+use super::wire::{self, Frame, Pixels, DEFAULT_MAX_FRAME, VERSION};
+
+fn handshake(
+    addr: &str,
+    tenant: &str,
+) -> Result<(io::BufReader<TcpStream>, io::BufWriter<TcpStream>, u32, u32)> {
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    let read_half = stream.try_clone()?;
+    let mut rd = io::BufReader::new(read_half);
+    let mut wr = io::BufWriter::new(stream);
+    wire::write_frame(&mut wr, &Frame::Hello { version: VERSION, tenant: tenant.to_string() })?;
+    wr.flush()?;
+    match wire::read_frame(&mut rd, DEFAULT_MAX_FRAME)? {
+        Some(Frame::Welcome { version, max_frame, window }) => {
+            if version != VERSION {
+                return Err(Error::Protocol(format!(
+                    "server speaks protocol version {version}, client speaks {VERSION}"
+                )));
+            }
+            Ok((rd, wr, max_frame, window))
+        }
+        // A handshake refusal arrives as a typed error response on id 0.
+        Some(Frame::Response { outcome: Err(failure), .. }) => Err(failure.into_error()),
+        Some(_) => Err(Error::Protocol("expected WELCOME to answer HELLO".into())),
+        None => Err(Error::Protocol("server closed during handshake".into())),
+    }
+}
+
+/// The submit half after a [`NetClient::split`]: owns the write side.
+pub struct NetSender {
+    wr: io::BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl NetSender {
+    fn send_request(&mut self, size: usize, pixels: Pixels, deadline_us: u64) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Request { id, deadline_us, size: size as u32, pixels };
+        wire::write_frame(&mut self.wr, &frame)?;
+        self.wr.flush()?;
+        Ok(id)
+    }
+
+    /// Write one f32 REQUEST and return its id without waiting.
+    pub fn submit(&mut self, image: &Image, deadline_us: u64) -> Result<u64> {
+        self.send_request(image.size(), Pixels::F32(image.pixels().to_vec()), deadline_us)
+    }
+
+    /// Write one quantized-u8 REQUEST (1 byte/pixel on the wire; the
+    /// server reconstructs `v / 255` — not bitwise-faithful, for
+    /// bandwidth-constrained clients).
+    pub fn submit_u8(&mut self, size: usize, pixels: Vec<u8>, deadline_us: u64) -> Result<u64> {
+        if pixels.len() != size * size {
+            return Err(Error::Type(format!(
+                "u8 image data length {} != {size}x{size}",
+                pixels.len()
+            )));
+        }
+        self.send_request(size, Pixels::U8(pixels), deadline_us)
+    }
+
+    /// Write a STATS probe and return its id; the snapshot arrives on
+    /// the receive side as a [`Json`] in response order.
+    pub fn submit_stats(&mut self) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(&mut self.wr, &Frame::Stats { id })?;
+        self.wr.flush()?;
+        Ok(id)
+    }
+
+    /// Announce a clean end of conversation (the server drains in-flight
+    /// responses, the receive side then sees EOF after the last one).
+    pub fn goodbye(mut self) -> Result<()> {
+        wire::write_frame(&mut self.wr, &Frame::Goodbye)?;
+        self.wr.flush()?;
+        Ok(())
+    }
+}
+
+/// What the receive side yields per frame: a resolved request or a
+/// stats snapshot.
+pub enum Received {
+    /// `Response { id }`: the feature vector or the typed failure.
+    Response(u64, Result<Vec<f32>>),
+    /// `StatsReply { id }`: the parsed JSON snapshot.
+    Stats(u64, Json),
+}
+
+/// The receive half after a [`NetClient::split`]: owns the read side.
+pub struct NetReceiver {
+    rd: io::BufReader<TcpStream>,
+    max_frame: u32,
+}
+
+impl NetReceiver {
+    /// Bound how long [`NetReceiver::recv`] blocks (`None` restores
+    /// blocking reads). With a timeout set, a quiet socket surfaces as
+    /// `Error::Io` with kind `WouldBlock`/`TimedOut` — load harnesses
+    /// use this to detect lost tickets instead of hanging.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.rd.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Read the next RESPONSE or STATS_REPLY. `Ok(None)` means the
+    /// server closed cleanly at a frame boundary.
+    pub fn recv(&mut self) -> Result<Option<Received>> {
+        match wire::read_frame(&mut self.rd, self.max_frame)? {
+            Some(Frame::Response { id, outcome }) => {
+                Ok(Some(Received::Response(id, outcome.map_err(|f| f.into_error()))))
+            }
+            Some(Frame::StatsReply { id, json }) => {
+                Ok(Some(Received::Stats(id, Json::parse(&json)?)))
+            }
+            Some(_) => Err(Error::Protocol("unexpected client-side frame from server".into())),
+            None => Ok(None),
+        }
+    }
+}
+
+/// One connection to a [`NetServer`](super::NetServer); see the module
+/// docs.
+pub struct NetClient {
+    tx: NetSender,
+    rx: NetReceiver,
+    window: u32,
+}
+
+impl NetClient {
+    /// Connect and perform the HELLO/WELCOME handshake. Requests on this
+    /// connection are accounted to `tenant` in the server's per-tenant
+    /// serving stats.
+    pub fn connect(addr: &str, tenant: &str) -> Result<NetClient> {
+        let (rd, wr, max_frame, window) = handshake(addr, tenant)?;
+        Ok(NetClient {
+            tx: NetSender { wr, next_id: 1 },
+            rx: NetReceiver { rd, max_frame },
+            window,
+        })
+    }
+
+    /// The in-flight window the server granted: responses it buffers
+    /// before its reader stops pulling new requests off the socket.
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    /// Pipeline one request without waiting; returns its id.
+    pub fn submit(&mut self, image: &Image, deadline_us: u64) -> Result<u64> {
+        self.tx.submit(image, deadline_us)
+    }
+
+    /// Pipeline one quantized-u8 request without waiting; returns its id.
+    pub fn submit_u8(&mut self, size: usize, pixels: Vec<u8>, deadline_us: u64) -> Result<u64> {
+        self.tx.submit_u8(size, pixels, deadline_us)
+    }
+
+    /// Read the next response in submission order: `(id, outcome)`.
+    pub fn recv(&mut self) -> Result<(u64, Result<Vec<f32>>)> {
+        match self.rx.recv()? {
+            Some(Received::Response(id, outcome)) => Ok((id, outcome)),
+            Some(Received::Stats(..)) => {
+                Err(Error::Protocol("stats reply arrived where a response was expected".into()))
+            }
+            None => Err(Error::Protocol("server closed with a response outstanding".into())),
+        }
+    }
+
+    /// Submit one request and wait for its response — the remote
+    /// equivalent of an in-process submit + `Ticket::wait`.
+    pub fn features(&mut self, image: &Image, deadline_us: u64) -> Result<Vec<f32>> {
+        let want = self.submit(image, deadline_us)?;
+        let (id, outcome) = self.recv()?;
+        if id != want {
+            return Err(Error::Protocol(format!(
+                "response id {id} does not match request id {want}"
+            )));
+        }
+        outcome
+    }
+
+    /// Fetch the server's stats snapshot (per-tenant serving books,
+    /// queue depth, device health — see `docs/wire.md`). Responses come
+    /// in submission order, so call this with no requests in flight (or
+    /// use [`NetClient::split`] and match ids).
+    pub fn stats(&mut self) -> Result<Json> {
+        let want = self.tx.submit_stats()?;
+        match self.rx.recv()? {
+            Some(Received::Stats(id, json)) if id == want => Ok(json),
+            Some(Received::Stats(id, _)) => Err(Error::Protocol(format!(
+                "stats reply id {id} does not match probe id {want}"
+            ))),
+            Some(Received::Response(..)) => {
+                Err(Error::Protocol("response arrived where a stats reply was expected".into()))
+            }
+            None => Err(Error::Protocol("server closed with a stats probe outstanding".into())),
+        }
+    }
+
+    /// Split into independent submit and receive halves (two socket
+    /// handles over the one connection), for open-loop load generation.
+    pub fn split(self) -> (NetSender, NetReceiver) {
+        (self.tx, self.rx)
+    }
+
+    /// End the conversation cleanly.
+    pub fn goodbye(self) -> Result<()> {
+        self.tx.goodbye()
+    }
+}

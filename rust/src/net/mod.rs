@@ -1,0 +1,31 @@
+//! Networked serving: the process boundary for `hlgpu::serve`.
+//!
+//! Three layers (see `docs/wire.md` for the protocol reference):
+//!
+//! * [`wire`] — the versioned, length-prefixed binary frame format:
+//!   HELLO/WELCOME handshake, pipelined REQUEST/RESPONSE, the STATS
+//!   control probe, typed failures carrying the stable
+//!   [`Error::wire_code`](crate::error::Error::wire_code) status table.
+//! * [`server`] — [`NetServer`], a std-only blocking TCP front door: an
+//!   accept loop, one reader/writer thread pair per connection, a
+//!   bounded in-flight window for backpressure, graceful drain on
+//!   shutdown. Each connection maps onto a tenant in the service's
+//!   per-tenant stats and deadline machinery; the admission queue and
+//!   batching below it are unchanged.
+//! * [`client`] — [`NetClient`], the matching blocking client; splits
+//!   into submit/receive halves for open-loop load generation
+//!   (`benches/serve_load.rs` with `SL_REMOTE=1` drives a loopback
+//!   server and reports the same table as the in-process run, so the
+//!   network tax is directly measurable).
+//!
+//! Everything rides the standard library: no async runtime, no serde,
+//! no protocol dependencies — the same offline-first constraint as the
+//! rest of the crate.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, NetReceiver, NetSender, Received};
+pub use server::{NetConfig, NetServer};
+pub use wire::{Frame, Pixels, WireFailure, DEFAULT_MAX_FRAME, MAGIC, VERSION};

@@ -1,0 +1,456 @@
+//! The std-only TCP front door for [`Service`](crate::serve::Service).
+//!
+//! [`NetServer::bind`] wraps an existing service and listens on a TCP
+//! address. The accept loop is a blocking thread; each connection gets a
+//! **reader/writer thread pair** joined by a bounded channel of
+//! [`NetConfig::window`] slots:
+//!
+//! * the **reader** decodes frames (`super::wire`), maps each REQUEST
+//!   into the service's admission queue under the connection's tenant
+//!   (the HELLO tenant feeds the per-tenant
+//!   [`ServeStats`](crate::serve::ServeStats) books and deadline
+//!   machinery unchanged), and pushes the resulting ticket into the
+//!   channel. When `window` responses are in flight the push **blocks**,
+//!   which stops reading, which fills the kernel socket buffers, which
+//!   stalls the client's writes — backpressure for free, no frame is
+//!   ever dropped.
+//! * the **writer** pops tickets in FIFO order, waits each one, and
+//!   writes the RESPONSE (or STATS_REPLY). A client that disconnects
+//!   mid-batch breaks the socket but not the drain: the writer keeps
+//!   popping and waiting tickets so every server-side ticket resolves
+//!   and the stats books stay exact.
+//!
+//! Shutdown is a graceful drain: stop accepting, let every reader stop
+//! at its next frame boundary (mid-frame reads get
+//! [`NetConfig::drain_grace_ms`] to finish), let the writers flush every
+//! in-flight response *while the service workers are still running*,
+//! then [`Service::drain`] the service itself. Tickets admitted over the
+//! network are never stranded.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::serve::Service;
+use crate::tracetransform::Image;
+use crate::util::json::Json;
+
+use super::wire::{self, Frame, WireFailure, DEFAULT_MAX_FRAME, VERSION};
+
+/// Tuning knobs for a [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Largest frame accepted from a client (bytes, header excluded);
+    /// advertised in WELCOME. Oversized frames get a typed protocol
+    /// error and the connection closes.
+    pub max_frame: u32,
+    /// Per-connection in-flight window: responses admitted but not yet
+    /// written. The reader blocks once the window is full (see the
+    /// module docs); advertised in WELCOME.
+    pub window: usize,
+    /// Reader poll interval (ms): how often a blocked read re-checks
+    /// the shutdown flag. Bounds shutdown latency, not throughput.
+    pub poll_ms: u64,
+    /// On shutdown, how long a reader mid-frame may keep reading before
+    /// the connection is cut (ms).
+    pub drain_grace_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { max_frame: DEFAULT_MAX_FRAME, window: 32, poll_ms: 20, drain_grace_ms: 2000 }
+    }
+}
+
+/// What the reader hands the writer, in FIFO order.
+enum Outgoing {
+    /// An admitted request: the client's id and the service ticket.
+    Pending(u64, crate::serve::Ticket),
+    /// A request that never reached the queue (shed, bad image, shut
+    /// down) or a protocol failure to report before closing.
+    Done(u64, Error),
+    /// A STATS probe to answer with the JSON snapshot.
+    Stats(u64),
+}
+
+/// A running TCP front door; dropping (or [`NetServer::shutdown`])
+/// drains connections and the service.
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    service: Arc<Service>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `service` over it.
+    pub fn bind(addr: &str, service: Service, config: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let service = Arc::new(service);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let service = service.clone();
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, service, config, shutdown, conns)
+            })
+        };
+        Ok(NetServer { addr, shutdown, accept: Some(accept), conns, service })
+    }
+
+    /// The bound address (with the resolved port when bound to `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The service behind the front door, for in-process inspection
+    /// (stats, queue depth) while remote clients drive it.
+    pub fn service(&self) -> &Arc<Service> {
+        &self.service
+    }
+
+    /// Graceful drain: stop accepting, finish every in-flight response,
+    /// then drain the service (see the module docs for the ordering).
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // The accept loop blocks in `accept`; a throwaway connection
+        // wakes it to observe the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // Only now — with every network ticket resolved and written —
+        // drain the workers.
+        self.service.drain();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    service: Arc<Service>,
+    config: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            // The wake-up connection from `stop`, or a client racing the
+            // shutdown: either way, refuse by closing.
+            return;
+        }
+        let service = service.clone();
+        let config = config.clone();
+        let flag = shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            handle_conn(stream, service, config, flag);
+        });
+        let mut guard = conns.lock().unwrap();
+        // Reap finished connections so a long-lived server does not
+        // accumulate handles.
+        guard.retain(|h| !h.is_finished());
+        guard.push(handle);
+    }
+}
+
+/// `Read` over a `TcpStream` with a poll timeout, so a blocked reader
+/// notices the shutdown flag. Returns EOF (`Ok(0)`) when shutdown
+/// arrives **at a frame boundary** (no bytes consumed since
+/// [`PollReader::begin_frame`]) — `wire::read_frame` turns that into a
+/// clean `Ok(None)`. Mid-frame, the peer gets `drain_grace_ms` to finish
+/// the frame before the read times out for real.
+struct PollReader<'a> {
+    stream: &'a TcpStream,
+    shutdown: &'a AtomicBool,
+    grace: Duration,
+    mid_frame: bool,
+    cut_at: Option<Instant>,
+}
+
+impl<'a> PollReader<'a> {
+    fn new(stream: &'a TcpStream, shutdown: &'a AtomicBool, grace: Duration) -> PollReader<'a> {
+        PollReader { stream, shutdown, grace, mid_frame: false, cut_at: None }
+    }
+
+    /// Mark a frame boundary: a shutdown observed from here until the
+    /// first byte of the next frame reads as clean EOF.
+    fn begin_frame(&mut self) {
+        self.mid_frame = false;
+    }
+}
+
+impl Read for PollReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            match self.stream.read(buf) {
+                Ok(n) => {
+                    if n > 0 {
+                        self.mid_frame = true;
+                    }
+                    return Ok(n);
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if !self.shutdown.load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    if !self.mid_frame {
+                        return Ok(0);
+                    }
+                    let cut = *self.cut_at.get_or_insert_with(|| Instant::now() + self.grace);
+                    if Instant::now() >= cut {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "drain grace expired mid-frame",
+                        ));
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: Arc<Service>,
+    config: NetConfig,
+    shutdown: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(config.poll_ms.max(1))));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let grace = Duration::from_millis(config.drain_grace_ms);
+    let mut reader = PollReader::new(&stream, &shutdown, grace);
+
+    // Handshake: exactly one HELLO, answered by WELCOME (or a typed
+    // error response and close).
+    let mut hello_err = None;
+    let tenant = match wire::read_frame(&mut reader, config.max_frame) {
+        Ok(Some(Frame::Hello { version, tenant })) if version == VERSION => {
+            if tenant.is_empty() {
+                "anonymous".to_string()
+            } else {
+                tenant
+            }
+        }
+        Ok(Some(Frame::Hello { version, .. })) => {
+            hello_err = Some(Error::Protocol(format!(
+                "unsupported protocol version {version} (server speaks {VERSION})"
+            )));
+            String::new()
+        }
+        Ok(Some(_)) => {
+            hello_err = Some(Error::Protocol("expected HELLO as the first frame".into()));
+            String::new()
+        }
+        Ok(None) => return,
+        Err(e @ Error::Protocol(_)) => {
+            hello_err = Some(e);
+            String::new()
+        }
+        Err(_) => return,
+    };
+    let mut writer = io::BufWriter::new(write_half);
+    if let Some(e) = hello_err {
+        let frame =
+            Frame::Response { id: 0, outcome: Err(WireFailure::from_error(&e)) };
+        let _ = wire::write_frame(&mut writer, &frame);
+        let _ = writer.flush();
+        return;
+    }
+    let welcome = Frame::Welcome {
+        version: VERSION,
+        max_frame: config.max_frame,
+        window: config.window as u32,
+    };
+    let welcomed = wire::write_frame(&mut writer, &welcome)
+        .and_then(|()| writer.flush().map_err(Error::Io));
+    if welcomed.is_err() {
+        return;
+    }
+
+    // Reader/writer pair joined by the bounded in-flight window.
+    let (tx, rx) = mpsc::sync_channel::<Outgoing>(config.window.max(1));
+    let writer_service = service.clone();
+    let writer_handle =
+        std::thread::spawn(move || writer_loop(writer, rx, writer_service));
+    reader_loop(&mut reader, tx, &service, &tenant, config.max_frame);
+    // Dropping our sender ends the writer's queue; it drains every
+    // in-flight ticket before exiting.
+    let _ = writer_handle.join();
+}
+
+fn reader_loop(
+    reader: &mut PollReader<'_>,
+    tx: SyncSender<Outgoing>,
+    service: &Service,
+    tenant: &str,
+    max_frame: u32,
+) {
+    loop {
+        reader.begin_frame();
+        let out = match wire::read_frame(reader, max_frame) {
+            Ok(Some(Frame::Request { id, deadline_us, size, pixels })) => {
+                match Image::new(size as usize, pixels.to_f32()) {
+                    Ok(image) => match service.submit_with_deadline(tenant, image, deadline_us) {
+                        Ok(ticket) => Outgoing::Pending(id, ticket),
+                        Err(e) => Outgoing::Done(id, e),
+                    },
+                    Err(e) => Outgoing::Done(id, e),
+                }
+            }
+            Ok(Some(Frame::Stats { id })) => Outgoing::Stats(id),
+            Ok(Some(Frame::Goodbye)) | Ok(None) => return,
+            Ok(Some(_)) => {
+                // A server-to-client frame arriving here is a protocol
+                // violation: report on id 0 and close.
+                let e = Error::Protocol("unexpected server-side frame from client".into());
+                let _ = tx.send(Outgoing::Done(0, e));
+                return;
+            }
+            Err(e @ Error::Protocol(_)) => {
+                let _ = tx.send(Outgoing::Done(0, e));
+                return;
+            }
+            Err(_) => return,
+        };
+        // Blocking send: this is the in-flight window's backpressure.
+        if tx.send(out).is_err() {
+            return;
+        }
+    }
+}
+
+fn writer_loop(
+    mut writer: io::BufWriter<TcpStream>,
+    rx: Receiver<Outgoing>,
+    service: Arc<Service>,
+) {
+    // After a socket write fails (client gone) we stop writing but keep
+    // draining: every ticket still resolves, so the service's books
+    // (served/expired/failed) stay exact — nothing leaks.
+    let mut broken = false;
+    for out in rx {
+        let frame = match out {
+            Outgoing::Pending(id, ticket) => {
+                let (_, res) = ticket.wait_timed();
+                Frame::Response { id, outcome: res.map_err(|e| WireFailure::from_error(&e)) }
+            }
+            Outgoing::Done(id, e) => {
+                Frame::Response { id, outcome: Err(WireFailure::from_error(&e)) }
+            }
+            Outgoing::Stats(id) => {
+                Frame::StatsReply { id, json: stats_snapshot(&service).to_string() }
+            }
+        };
+        if !broken {
+            let sent = wire::write_frame(&mut writer, &frame)
+                .and_then(|()| writer.flush().map_err(Error::Io));
+            broken = sent.is_err();
+        }
+    }
+}
+
+/// The STATS snapshot: the service's per-tenant books, queue depth and
+/// config, plus per-member `DeviceSet` health when the service runs on
+/// a set. Schema documented in `docs/wire.md`.
+fn stats_snapshot(service: &Service) -> Json {
+    fn num(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+    let mut root = BTreeMap::new();
+    root.insert("queue_depth".to_string(), num(service.queue_depth() as u64));
+    let mut tenants = BTreeMap::new();
+    for (name, s) in service.all_stats() {
+        let mut t = BTreeMap::new();
+        t.insert("admitted".to_string(), num(s.admitted));
+        t.insert("served".to_string(), num(s.served));
+        t.insert("rejected".to_string(), num(s.rejected));
+        t.insert("expired".to_string(), num(s.expired));
+        t.insert("failed".to_string(), num(s.failed));
+        t.insert("retried".to_string(), num(s.retried));
+        t.insert("failed_over".to_string(), num(s.failed_over));
+        let mut batches = BTreeMap::new();
+        for (label, count) in
+            crate::serve::BatchHistogram::LABELS.iter().zip(s.batches.counts())
+        {
+            if count > 0 {
+                batches.insert(label.to_string(), num(count));
+            }
+        }
+        t.insert("batches".to_string(), Json::Obj(batches));
+        tenants.insert(name, Json::Obj(t));
+    }
+    root.insert("tenants".to_string(), Json::Obj(tenants));
+    if let Some(set) = service.device_set() {
+        let members = set
+            .stats()
+            .iter()
+            .map(|m| {
+                let mut d = BTreeMap::new();
+                d.insert("ordinal".to_string(), num(m.ordinal as u64));
+                d.insert("shards".to_string(), num(m.shards));
+                d.insert("images".to_string(), num(m.images));
+                d.insert("outstanding".to_string(), num(m.outstanding));
+                d.insert("busy_ms".to_string(), Json::Num(m.busy_ns as f64 / 1e6));
+                d.insert(
+                    "health".to_string(),
+                    Json::Str(format!("{:?}", m.health).to_lowercase()),
+                );
+                Json::Obj(d)
+            })
+            .collect();
+        root.insert("devices".to_string(), Json::Arr(members));
+    }
+    let c = service.config();
+    let mut config = BTreeMap::new();
+    config.insert("max_batch".to_string(), num(c.max_batch as u64));
+    config.insert("max_delay_us".to_string(), num(c.max_delay_us));
+    config.insert("queue_capacity".to_string(), num(c.queue_capacity as u64));
+    config.insert("default_deadline_us".to_string(), num(c.default_deadline_us));
+    config.insert("workers".to_string(), num(c.workers as u64));
+    root.insert("config".to_string(), Json::Obj(config));
+    Json::Obj(root)
+}

@@ -1,0 +1,551 @@
+//! The versioned, length-prefixed binary wire format for networked
+//! serving (see `docs/wire.md` for the layout diagrams).
+//!
+//! Every frame on the stream is
+//!
+//! ```text
+//! [len: u32 LE] [type: u8] [payload: len-1 bytes]
+//! ```
+//!
+//! where `len` counts the type byte plus the payload, so a frame costs
+//! 4 bytes of framing. A connection opens with a client [`Frame::Hello`]
+//! (magic + version + tenant) answered by a server [`Frame::Welcome`]
+//! (negotiated limits); after that the client pipelines
+//! [`Frame::Request`]s (and [`Frame::Stats`] probes) and the server
+//! answers each with exactly one [`Frame::Response`] (or
+//! [`Frame::StatsReply`]), in submission order. [`Frame::Goodbye`] ends
+//! the conversation cleanly.
+//!
+//! All integers are little-endian. Malformed input — bad magic, a frame
+//! longer than the negotiated cap, a payload that doesn't parse or has
+//! trailing bytes, an unknown type — decodes to [`Error::Protocol`], so
+//! transports can answer with a typed status (code 63) and close instead
+//! of guessing. Failures travel as [`WireFailure`]: the stable
+//! [`Error::wire_code`] plus two variant-specific numbers and the
+//! Display text, reconstructed client-side by [`Error::from_wire`].
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// First bytes of every conversation ("HLGW": hlgpu wire).
+pub const MAGIC: [u8; 4] = *b"HLGW";
+/// Protocol version carried in HELLO/WELCOME; bumped on layout changes.
+pub const VERSION: u16 = 1;
+/// Default cap on a single frame (header excluded). A 2048² f32 image is
+/// 16 MiB, so this serves every benchmark size with headroom.
+pub const DEFAULT_MAX_FRAME: u32 = 20 << 20;
+
+const T_HELLO: u8 = 1;
+const T_WELCOME: u8 = 2;
+const T_REQUEST: u8 = 3;
+const T_RESPONSE: u8 = 4;
+const T_STATS: u8 = 5;
+const T_STATS_REPLY: u8 = 6;
+const T_GOODBYE: u8 = 7;
+
+/// Request pixel payload: f32 (bitwise-exact, 4 bytes/px) or u8
+/// (quantized, 1 byte/px — the client trades fidelity for bandwidth;
+/// the server maps `v / 255` into the f32 pipeline).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pixels {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+}
+
+impl Pixels {
+    /// Number of pixels carried.
+    pub fn len(&self) -> usize {
+        match self {
+            Pixels::F32(v) => v.len(),
+            Pixels::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The f32 pixels the pipeline runs on (u8 maps to `v / 255`).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Pixels::F32(v) => v.clone(),
+            Pixels::U8(v) => v.iter().map(|&b| b as f32 / 255.0).collect(),
+        }
+    }
+}
+
+/// A failure crossing the wire: the stable numeric status (see
+/// [`Error::wire_code`]), two variant-specific numbers, and the remote
+/// Display text.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFailure {
+    pub code: u16,
+    pub a: u64,
+    pub b: u64,
+    pub msg: String,
+}
+
+impl WireFailure {
+    pub fn from_error(e: &Error) -> WireFailure {
+        let (code, a, b, msg) = e.to_wire();
+        WireFailure { code, a, b, msg }
+    }
+
+    pub fn into_error(self) -> Error {
+        Error::from_wire(self.code, self.a, self.b, self.msg)
+    }
+}
+
+/// One frame of the conversation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client opener: magic + version + the tenant this connection's
+    /// requests are accounted to.
+    Hello { version: u16, tenant: String },
+    /// Server answer: the version it speaks, the frame-size cap it
+    /// enforces, and the per-connection in-flight window it grants.
+    Welcome { version: u16, max_frame: u32, window: u32 },
+    /// One inference request: client-chosen id (echoed in the
+    /// response), deadline budget in µs, square image dims and pixels.
+    Request { id: u64, deadline_us: u64, size: u32, pixels: Pixels },
+    /// The answer to `Request { id }`: the feature vector, or a typed
+    /// failure.
+    Response { id: u64, outcome: std::result::Result<Vec<f32>, WireFailure> },
+    /// Control probe: ask for a JSON snapshot of serving + device stats.
+    Stats { id: u64 },
+    /// The answer to `Stats { id }`: a JSON document (see `docs/wire.md`).
+    StatsReply { id: u64, json: String },
+    /// Clean end of conversation; the server drains in-flight responses
+    /// and closes.
+    Goodbye,
+}
+
+// ------------------------------------------------------------ encoding --
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(u16::MAX as usize);
+    put_u16(out, n as u16);
+    out.extend_from_slice(&bytes[..n]);
+}
+
+fn put_str32(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(u32::MAX as usize);
+    put_u32(out, n as u32);
+    out.extend_from_slice(&bytes[..n]);
+}
+
+/// Encode a frame to its full wire bytes (length header included).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::with_capacity(64);
+    match frame {
+        Frame::Hello { version, tenant } => {
+            body.push(T_HELLO);
+            body.extend_from_slice(&MAGIC);
+            put_u16(&mut body, *version);
+            put_str16(&mut body, tenant);
+        }
+        Frame::Welcome { version, max_frame, window } => {
+            body.push(T_WELCOME);
+            put_u16(&mut body, *version);
+            put_u32(&mut body, *max_frame);
+            put_u32(&mut body, *window);
+        }
+        Frame::Request { id, deadline_us, size, pixels } => {
+            body.reserve(21 + pixels.len() * 4);
+            body.push(T_REQUEST);
+            put_u64(&mut body, *id);
+            put_u64(&mut body, *deadline_us);
+            put_u32(&mut body, *size);
+            match pixels {
+                Pixels::F32(v) => {
+                    body.push(0);
+                    for x in v {
+                        body.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Pixels::U8(v) => {
+                    body.push(1);
+                    body.extend_from_slice(v);
+                }
+            }
+        }
+        Frame::Response { id, outcome } => {
+            body.push(T_RESPONSE);
+            put_u64(&mut body, *id);
+            match outcome {
+                Ok(feats) => {
+                    body.reserve(6 + feats.len() * 4);
+                    put_u16(&mut body, 0);
+                    put_u32(&mut body, feats.len() as u32);
+                    for x in feats {
+                        body.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Err(f) => {
+                    put_u16(&mut body, f.code.max(1));
+                    put_u64(&mut body, f.a);
+                    put_u64(&mut body, f.b);
+                    put_str32(&mut body, &f.msg);
+                }
+            }
+        }
+        Frame::Stats { id } => {
+            body.push(T_STATS);
+            put_u64(&mut body, *id);
+        }
+        Frame::StatsReply { id, json } => {
+            body.push(T_STATS_REPLY);
+            put_u64(&mut body, *id);
+            put_str32(&mut body, json);
+        }
+        Frame::Goodbye => body.push(T_GOODBYE),
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode + write a frame. I/O failures surface as [`Error::Io`].
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    w.write_all(&encode(frame))?;
+    Ok(())
+}
+
+// ------------------------------------------------------------ decoding --
+
+/// Byte-cursor over a frame body; every getter fails with a typed
+/// [`Error::Protocol`] on truncation.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Error::Protocol(format!(
+                "truncated frame: wanted {n} bytes for {what}, {} left",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, count: usize, what: &str) -> Result<Vec<f32>> {
+        let b = self.take(count * 4, what)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn str16(&mut self, what: &str) -> Result<String> {
+        let n = self.u16(what)? as usize;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Protocol(format!("{what} is not valid UTF-8")))
+    }
+
+    fn str32(&mut self, what: &str) -> Result<String> {
+        let n = self.u32(what)? as usize;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Protocol(format!("{what} is not valid UTF-8")))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame body (the type byte plus payload — everything the
+/// length header counted).
+pub fn decode_body(body: &[u8]) -> Result<Frame> {
+    let mut rd = Rd::new(body);
+    let frame = match rd.u8("frame type")? {
+        T_HELLO => {
+            let magic = rd.take(4, "magic")?;
+            if magic != MAGIC {
+                return Err(Error::Protocol(format!(
+                    "bad magic {magic:02x?} (expected {MAGIC:02x?} — not an hlgpu client?)"
+                )));
+            }
+            let version = rd.u16("version")?;
+            let tenant = rd.str16("tenant")?;
+            Frame::Hello { version, tenant }
+        }
+        T_WELCOME => {
+            let version = rd.u16("version")?;
+            let max_frame = rd.u32("max_frame")?;
+            let window = rd.u32("window")?;
+            Frame::Welcome { version, max_frame, window }
+        }
+        T_REQUEST => {
+            let id = rd.u64("request id")?;
+            let deadline_us = rd.u64("deadline")?;
+            let size = rd.u32("image size")?;
+            let dtype = rd.u8("pixel dtype")?;
+            if size == 0 {
+                return Err(Error::Protocol("zero image size".into()));
+            }
+            let npix = size as u64 * size as u64;
+            let expect = match dtype {
+                0 => npix * 4,
+                1 => npix,
+                other => {
+                    return Err(Error::Protocol(format!("unknown pixel dtype {other}")));
+                }
+            };
+            if rd.remaining() as u64 != expect {
+                return Err(Error::Protocol(format!(
+                    "pixel payload is {} bytes, {size}x{size} dtype {dtype} needs {expect}",
+                    rd.remaining()
+                )));
+            }
+            let pixels = match dtype {
+                0 => Pixels::F32(rd.f32s(npix as usize, "pixels")?),
+                _ => Pixels::U8(rd.take(npix as usize, "pixels")?.to_vec()),
+            };
+            Frame::Request { id, deadline_us, size, pixels }
+        }
+        T_RESPONSE => {
+            let id = rd.u64("response id")?;
+            let code = rd.u16("status code")?;
+            let outcome = if code == 0 {
+                let count = rd.u32("feature count")? as usize;
+                if rd.remaining() != count * 4 {
+                    return Err(Error::Protocol(format!(
+                        "feature payload is {} bytes, count {count} needs {}",
+                        rd.remaining(),
+                        count * 4
+                    )));
+                }
+                Ok(rd.f32s(count, "features")?)
+            } else {
+                let a = rd.u64("status detail a")?;
+                let b = rd.u64("status detail b")?;
+                let msg = rd.str32("status message")?;
+                Err(WireFailure { code, a, b, msg })
+            };
+            Frame::Response { id, outcome }
+        }
+        T_STATS => Frame::Stats { id: rd.u64("stats id")? },
+        T_STATS_REPLY => {
+            let id = rd.u64("stats id")?;
+            let json = rd.str32("stats json")?;
+            Frame::StatsReply { id, json }
+        }
+        T_GOODBYE => Frame::Goodbye,
+        other => {
+            return Err(Error::Protocol(format!("unknown frame type {other}")));
+        }
+    };
+    rd.done("frame")?;
+    Ok(frame)
+}
+
+/// Read one frame off the stream. Returns `Ok(None)` on a clean EOF at
+/// a frame boundary (the peer closed); mid-frame EOF, an oversized or
+/// empty length header, and every malformed body decode to
+/// [`Error::Protocol`]; transport trouble surfaces as [`Error::Io`].
+pub fn read_frame(r: &mut impl Read, max_frame: u32) -> Result<Option<Frame>> {
+    let mut header = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(Error::Protocol(format!(
+                    "connection closed mid-header ({got}/4 bytes)"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(header);
+    if len == 0 {
+        return Err(Error::Protocol("empty frame (length 0)".into()));
+    }
+    if len > max_frame {
+        return Err(Error::Protocol(format!(
+            "oversized frame: {len} bytes exceeds the {max_frame}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    if let Err(e) = r.read_exact(&mut body) {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            return Err(Error::Protocol(format!("connection closed mid-frame ({len} bytes)")));
+        }
+        return Err(Error::Io(e));
+    }
+    decode_body(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: Frame) {
+        let bytes = encode(&frame);
+        let back = read_frame(&mut Cursor::new(&bytes), DEFAULT_MAX_FRAME)
+            .unwrap()
+            .expect("one frame");
+        assert_eq!(back, frame);
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        roundtrip(Frame::Hello { version: VERSION, tenant: "tenant-α".into() });
+        roundtrip(Frame::Welcome { version: VERSION, max_frame: 1 << 20, window: 32 });
+        roundtrip(Frame::Request {
+            id: 7,
+            deadline_us: 100_000,
+            size: 2,
+            pixels: Pixels::F32(vec![0.0, 0.25, 0.5, 1.0]),
+        });
+        roundtrip(Frame::Request {
+            id: 8,
+            deadline_us: 0,
+            size: 2,
+            pixels: Pixels::U8(vec![0, 64, 128, 255]),
+        });
+        roundtrip(Frame::Response { id: 7, outcome: Ok(vec![1.5, -2.5]) });
+        roundtrip(Frame::Response {
+            id: 9,
+            outcome: Err(WireFailure { code: 51, a: 64, b: 64, msg: "overloaded".into() }),
+        });
+        roundtrip(Frame::Stats { id: 1 });
+        roundtrip(Frame::StatsReply { id: 1, json: "{\"queue_depth\":0}".into() });
+        roundtrip(Frame::Goodbye);
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_order() {
+        let mut bytes = encode(&Frame::Stats { id: 1 });
+        bytes.extend(encode(&Frame::Goodbye));
+        let mut cur = Cursor::new(&bytes);
+        assert_eq!(read_frame(&mut cur, 1024).unwrap(), Some(Frame::Stats { id: 1 }));
+        assert_eq!(read_frame(&mut cur, 1024).unwrap(), Some(Frame::Goodbye));
+        assert_eq!(read_frame(&mut cur, 1024).unwrap(), None, "clean EOF at the boundary");
+    }
+
+    #[test]
+    fn u8_pixels_map_to_unit_range() {
+        let p = Pixels::U8(vec![0, 255]);
+        assert_eq!(p.to_f32(), vec![0.0, 1.0]);
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_empty());
+    }
+
+    fn expect_protocol(bytes: &[u8]) -> Error {
+        let err = read_frame(&mut Cursor::new(bytes), 1024).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "wanted Protocol, got {err:?}");
+        err
+    }
+
+    #[test]
+    fn malformed_streams_get_typed_protocol_errors() {
+        // Truncated header.
+        expect_protocol(&[1, 0]);
+        // Empty frame.
+        expect_protocol(&0u32.to_le_bytes());
+        // Oversized: ASCII text reads as a huge little-endian length.
+        let err = expect_protocol(b"GET / HTTP/1.1\r\n");
+        assert!(err.to_string().contains("oversized"), "{err}");
+        // Truncated body.
+        let mut bytes = encode(&Frame::Stats { id: 1 });
+        bytes.truncate(bytes.len() - 2);
+        expect_protocol(&bytes);
+        // Unknown frame type.
+        expect_protocol(&[2, 0, 0, 0, 0xEE, 0]);
+        // Bad magic in HELLO.
+        let mut hello = encode(&Frame::Hello { version: VERSION, tenant: "t".into() });
+        hello[5] = b'X'; // first magic byte (after len header + type)
+        let err = expect_protocol(&hello);
+        assert!(err.to_string().contains("magic"), "{err}");
+        // Trailing junk after a valid payload.
+        let mut stats = encode(&Frame::Stats { id: 1 });
+        stats.extend_from_slice(&[0, 0]);
+        let fixed = (stats.len() - 4) as u32;
+        stats[..4].copy_from_slice(&fixed.to_le_bytes());
+        let err = expect_protocol(&stats);
+        assert!(err.to_string().contains("trailing"), "{err}");
+        // Pixel payload / dims mismatch.
+        let mut req = encode(&Frame::Request {
+            id: 1,
+            deadline_us: 1,
+            size: 2,
+            pixels: Pixels::U8(vec![1, 2, 3, 4]),
+        });
+        let short = (req.len() - 4 - 1) as u32;
+        req.truncate(req.len() - 1);
+        req[..4].copy_from_slice(&short.to_le_bytes());
+        let err = expect_protocol(&req);
+        assert!(err.to_string().contains("pixel payload"), "{err}");
+        // All of these carry the Protocol wire code.
+        assert_eq!(err.wire_code(), 63);
+        assert_eq!(err.status(), "ERROR_PROTOCOL");
+    }
+
+    #[test]
+    fn failures_cross_the_wire_typed() {
+        let e = Error::Overloaded { depth: 64, capacity: 64 };
+        let f = WireFailure::from_error(&e);
+        assert_eq!(f.code, e.wire_code());
+        let back = f.into_error();
+        assert!(matches!(back, Error::Overloaded { depth: 64, capacity: 64 }), "{back:?}");
+    }
+}

@@ -31,6 +31,12 @@
 //!
 //! The open-loop load harness lives in `benches/serve_load.rs`; the
 //! correctness suite in `rust/tests/serve.rs`.
+//!
+//! The process boundary is `crate::net`: a framed TCP front door that
+//! maps each connection onto a tenant here and submits into this same
+//! admission queue (`docs/wire.md`). [`Service::drain`] is the shared
+//! graceful-shutdown path — safe to call through an `Arc<Service>`, and
+//! every admitted ticket resolves before the workers exit.
 
 pub mod service;
 pub mod stats;

@@ -155,7 +155,7 @@ enum EngineSource {
 /// (or [`Service::shutdown`]) drains the queue and joins it.
 pub struct Service {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
     set: Option<DeviceSet>,
 }
 
@@ -209,16 +209,17 @@ impl Service {
             }));
         }
         drop(ready_tx);
-        let mut service = Service { shared, workers, set };
-        for _ in 0..service.workers.len() {
+        let worker_count = workers.len();
+        let service = Service { shared, workers: Mutex::new(workers), set };
+        for _ in 0..worker_count {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
-                    service.stop_and_join();
+                    service.drain();
                     return Err(e);
                 }
                 Err(_) => {
-                    service.stop_and_join();
+                    service.drain();
                     return Err(Error::Other("serving worker died during startup".into()));
                 }
             }
@@ -246,15 +247,22 @@ impl Service {
         image: Image,
         budget_us: u64,
     ) -> Result<Ticket> {
-        if self.shared.shutdown.load(Ordering::SeqCst) {
-            return Err(Error::Other("service is shut down".into()));
-        }
         if budget_us == 0 {
             let mut stats = self.shared.stats.lock().unwrap();
             Shared::stat(&mut stats, tenant).rejected += 1;
             return Err(Error::DeadlineExceeded { waited_us: 0, budget_us: 0 });
         }
         let mut q = self.shared.queue.lock().unwrap();
+        // Checked under the queue lock: `drain` raises the flag while
+        // holding this lock, so a submission either lands before the
+        // drain snapshot (workers flush it — shutdown makes every size
+        // group ready) or observes the flag and is refused. Checking
+        // before the lock left a window where a racing submit could
+        // enqueue after the workers had already seen empty-queue +
+        // shutdown and exited, stranding that ticket forever.
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Other("service is shut down".into()));
+        }
         let capacity = self.shared.config.queue_capacity;
         if q.len() >= capacity {
             let depth = q.len();
@@ -317,14 +325,25 @@ impl Service {
 
     /// Stop admitting, drain the queue (queued requests still get
     /// batched and served), and join the workers.
-    pub fn shutdown(mut self) {
-        self.stop_and_join();
+    pub fn shutdown(self) {
+        self.drain();
     }
 
-    fn stop_and_join(&mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+    /// [`Service::shutdown`] through a shared handle (`&self`, so it
+    /// works behind an `Arc` — the TCP front door in `crate::net` drains
+    /// this way). Raises the shutdown flag *under the queue lock*: every
+    /// ticket admitted before the flag is flushed by the workers (the
+    /// flag makes all size groups ready), every submit after it is
+    /// refused — no ticket is ever stranded by the race. Idempotent;
+    /// concurrent callers all return once the workers have exited.
+    pub fn drain(&self) {
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
         self.shared.work.notify_all();
-        for h in self.workers.drain(..) {
+        let mut workers = self.workers.lock().unwrap();
+        for h in workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -332,7 +351,7 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.stop_and_join();
+        self.drain();
     }
 }
 

@@ -1,9 +1,13 @@
 //! Minimal recursive-descent JSON parser (RFC 8259 subset sufficient for
 //! the AOT manifest): objects, arrays, strings (with escapes), numbers,
 //! booleans, null. No serde available offline — this is the in-repo
-//! substrate.
+//! substrate. [`Json`] also implements [`std::fmt::Display`] as a
+//! compact serializer (object keys sorted — `BTreeMap` — so output is
+//! deterministic), used by the wire protocol's STATS snapshot
+//! (`crate::net`, see `docs/wire.md`).
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use crate::error::{Error, Result};
 
@@ -80,6 +84,66 @@ impl Json {
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key)
             .ok_or_else(|| Error::Json(format!("missing required key `{key}`")))
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+/// Compact serializer; `Json::parse(v.to_string())` round-trips every
+/// value this crate builds (non-finite numbers render as `null`, which
+/// JSON cannot carry).
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
     }
 }
 
@@ -339,6 +403,21 @@ mod tests {
         let inner = outer[1].as_arr().unwrap()[1].as_arr().unwrap();
         assert_eq!(inner[1], Json::Null);
         assert_eq!(inner[2], Json::Bool(true));
+    }
+
+    #[test]
+    fn display_serializes_and_roundtrips() {
+        let doc = r#"{"b":[1,2.5,null,true],"a":"x\n\"y\"","z":{"k":-3}}"#;
+        let j = Json::parse(doc).unwrap();
+        // Keys come back sorted (BTreeMap), values compact.
+        assert_eq!(j.to_string(), r#"{"a":"x\n\"y\"","b":[1,2.5,null,true],"z":{"k":-3}}"#);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // Integral floats render without a trailing `.0`.
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        // Control characters escape to \u sequences.
+        assert_eq!(Json::Str("\u{0007}".into()).to_string(), r#""\u0007""#);
+        assert_eq!(Json::parse(r#""\u0007""#).unwrap(), Json::Str("\u{0007}".into()));
     }
 
     #[test]

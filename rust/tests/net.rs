@@ -1,0 +1,521 @@
+//! Networked-serving suite: the framed wire protocol and the TCP front
+//! door end to end over loopback (see `docs/wire.md`).
+//!
+//! Three axes of coverage:
+//!
+//! * **remote identity** — features served over a socket are bitwise
+//!   identical to a direct `features_batch` on the same images, for
+//!   single-device and `DeviceSet`-backed services, pipelined and mixed
+//!   sizes, and under an injected device loss (the failover is invisible
+//!   to the client except through the STATS snapshot).
+//! * **protocol robustness** — garbage, truncated, unknown-type and
+//!   partial-write streams produce one typed protocol error (wire code
+//!   63) and a clean close, never a wedged or panicked server; the next
+//!   connection is served normally.
+//! * **lifecycle** — a client disconnecting mid-batch leaks nothing (the
+//!   server still resolves every admitted ticket and the stats books
+//!   balance), and a server shutdown drains every in-flight response to
+//!   a still-connected client before closing.
+//!
+//! The fault-injection test serializes on a local chaos guard and
+//! targets synthesized far ordinals, so it cannot perturb the parallel
+//! tests (or be perturbed by an ambient `HLGPU_FAULTS` schedule).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use hlgpu::driver::faults::{self, FaultPlan, FaultSite};
+use hlgpu::driver::{device_count, Device, DeviceSet, Health};
+use hlgpu::net::wire::{self, Frame, Pixels, WireFailure};
+use hlgpu::net::{NetClient, NetConfig, NetServer, Received, VERSION};
+use hlgpu::serve::{ServeConfig, Service};
+use hlgpu::tracetransform::{
+    orientations, random_phantom, DeviceChoice, GpuAuto, Image, TraceImpl,
+};
+use hlgpu::Error;
+
+/// A generous per-request budget: these tests assert on outcomes, not
+/// latency, and must not flake into `DeadlineExceeded` on a loaded CI
+/// machine.
+const DEADLINE_US: u64 = 30_000_000;
+
+fn thetas() -> Vec<f32> {
+    orientations(5)
+}
+
+fn serve_config() -> ServeConfig {
+    ServeConfig {
+        max_batch: 4,
+        max_delay_us: 500,
+        queue_capacity: 64,
+        default_deadline_us: DEADLINE_US,
+        workers: 2,
+    }
+}
+
+fn server_on(config: ServeConfig) -> NetServer {
+    let svc = Service::new(DeviceChoice::Emulator, &thetas(), config).unwrap();
+    NetServer::bind("127.0.0.1:0", svc, NetConfig::default()).unwrap()
+}
+
+fn direct_features(imgs: &[Image]) -> Vec<Vec<f32>> {
+    let mut engine = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+    engine.features_batch(imgs, &thetas()).unwrap()
+}
+
+fn direct_one(img: &Image) -> Vec<f32> {
+    direct_features(std::slice::from_ref(img)).remove(0)
+}
+
+/// Raw-socket handshake for the malformed-stream tests: HELLO out,
+/// WELCOME back, no client-layer machinery in the way.
+fn raw_handshake(addr: std::net::SocketAddr, tenant: &str) -> TcpStream {
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let hello = Frame::Hello { version: VERSION, tenant: tenant.to_string() };
+    wire::write_frame(&mut raw, &hello).unwrap();
+    raw.flush().unwrap();
+    let frame = wire::read_frame(&mut raw, u32::MAX).unwrap();
+    assert!(matches!(frame, Some(Frame::Welcome { .. })), "expected WELCOME, got {frame:?}");
+    raw
+}
+
+#[test]
+fn handshake_and_single_request_match_direct_bitwise() {
+    let server = server_on(serve_config());
+    let addr = server.addr().to_string();
+    let img = random_phantom(12, 4000);
+    let want = direct_one(&img);
+
+    let mut client = NetClient::connect(&addr, "tenant-a").unwrap();
+    assert!(client.window() >= 1, "the server granted an in-flight window");
+    let feats = client.features(&img, DEADLINE_US).unwrap();
+    assert_eq!(feats, want, "remote features diverged from the direct run");
+
+    let st = server.service().stats("tenant-a");
+    assert_eq!(st.served, 1, "the request was accounted to the HELLO tenant: {st:?}");
+    client.goodbye().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_mixed_sizes_match_direct_bitwise() {
+    let server = server_on(serve_config());
+    let addr = server.addr().to_string();
+    // Two interleaved size classes: the per-size batch former regroups
+    // execution freely, but responses come back in submission order.
+    let mut imgs = Vec::new();
+    for i in 0..8u64 {
+        let size = if i % 2 == 0 { 10 } else { 12 };
+        imgs.push(random_phantom(size, 4100 + i));
+    }
+    let mut want = Vec::new();
+    for img in &imgs {
+        want.push(direct_one(img));
+    }
+
+    let mut client = NetClient::connect(&addr, "pipeline").unwrap();
+    let mut ids = Vec::new();
+    for img in &imgs {
+        ids.push(client.submit(img, DEADLINE_US).unwrap());
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let (got_id, outcome) = client.recv().unwrap();
+        assert_eq!(got_id, id, "responses arrive in submission order");
+        assert_eq!(outcome.unwrap(), want[i], "image {i} diverged over the wire");
+    }
+    client.goodbye().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn u8_payload_serves_the_quantized_image() {
+    let server = server_on(serve_config());
+    let addr = server.addr().to_string();
+    let size = 10usize;
+    let mut bytes = Vec::new();
+    for i in 0..size * size {
+        bytes.push((i * 7 % 256) as u8);
+    }
+    // The wire contract: u8 pixels decode as v / 255 — the direct run on
+    // that reconstruction is the bitwise reference.
+    let unit: Vec<f32> = bytes.iter().map(|&b| b as f32 / 255.0).collect();
+    let want = direct_one(&Image::new(size, unit).unwrap());
+
+    let mut client = NetClient::connect(&addr, "quant").unwrap();
+    let id = client.submit_u8(size, bytes, DEADLINE_US).unwrap();
+    let (got_id, outcome) = client.recv().unwrap();
+    assert_eq!(got_id, id);
+    assert_eq!(outcome.unwrap(), want, "quantized path diverged");
+    server.shutdown();
+}
+
+#[test]
+fn deviceset_service_over_loopback_matches_direct_bitwise() {
+    // The sharded serving shape (`HLGPU_DEVICES=2` in production, an
+    // explicit two-member set here), driven remotely.
+    let mut imgs = Vec::new();
+    for i in 0..8u64 {
+        imgs.push(random_phantom(10, 4200 + i));
+    }
+    let want = direct_features(&imgs);
+
+    let set = DeviceSet::emulator(2).unwrap();
+    let svc = Service::on_set(set, &thetas(), serve_config()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", svc, NetConfig::default()).unwrap();
+    let mut client = NetClient::connect(&server.addr().to_string(), "sharded").unwrap();
+    let mut ids = Vec::new();
+    for img in &imgs {
+        ids.push(client.submit(img, DEADLINE_US).unwrap());
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let (got_id, outcome) = client.recv().unwrap();
+        assert_eq!(got_id, id);
+        assert_eq!(outcome.unwrap(), want[i], "image {i} diverged through the set");
+    }
+    let members = server.service().device_set().unwrap().stats();
+    let total: u64 = members.iter().map(|m| m.images).sum();
+    assert_eq!(total, imgs.len() as u64, "every image attributed to a set member");
+    server.shutdown();
+}
+
+// ------------------------------------------------------- robustness --
+
+#[test]
+fn garbage_stream_gets_typed_protocol_error_and_clean_close() {
+    let server = server_on(serve_config());
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    // An HTTP request's first four bytes decode as a ~542 MB frame
+    // length — far past the cap.
+    raw.write_all(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    raw.flush().unwrap();
+    match wire::read_frame(&mut raw, u32::MAX).unwrap() {
+        Some(Frame::Response { id: 0, outcome: Err(f) }) => {
+            assert_eq!(f.code, 63, "protocol violations carry wire code 63");
+            let err = f.into_error();
+            assert!(matches!(err, Error::Protocol(_)), "got {err:?}");
+            assert!(err.to_string().contains("oversized"), "{err}");
+        }
+        other => panic!("expected a typed protocol response, got {other:?}"),
+    }
+    // …and then a clean close, not a wedge.
+    let next = wire::read_frame(&mut raw, u32::MAX).unwrap();
+    assert!(next.is_none(), "clean EOF after the error, got {next:?}");
+    server.shutdown();
+}
+
+#[test]
+fn unknown_frame_type_after_handshake_errors_and_closes() {
+    let server = server_on(serve_config());
+    let mut raw = raw_handshake(server.addr(), "raw");
+    // len=2 covers the type byte (0x63 — unknown) and one payload byte.
+    raw.write_all(&[2, 0, 0, 0, 0x63, 0]).unwrap();
+    raw.flush().unwrap();
+    match wire::read_frame(&mut raw, u32::MAX).unwrap() {
+        Some(Frame::Response { id: 0, outcome: Err(f) }) => {
+            assert_eq!(f.code, 63);
+            assert!(f.msg.contains("unknown frame type"), "{}", f.msg);
+        }
+        other => panic!("expected a typed protocol response, got {other:?}"),
+    }
+    assert!(wire::read_frame(&mut raw, u32::MAX).unwrap().is_none());
+    server.shutdown();
+}
+
+#[test]
+fn truncated_frame_closes_cleanly_and_the_next_connection_serves() {
+    let server = server_on(serve_config());
+    {
+        let mut raw = raw_handshake(server.addr(), "trunc");
+        // Announce a full frame, deliver half of it, hang up.
+        let full = wire::encode(&Frame::Request {
+            id: 1,
+            deadline_us: DEADLINE_US,
+            size: 10,
+            pixels: Pixels::F32(random_phantom(10, 4300).pixels().to_vec()),
+        });
+        raw.write_all(&full[..full.len() / 2]).unwrap();
+        raw.flush().unwrap();
+        // Dropping `raw` closes mid-frame; the server must treat that as
+        // a violation on this connection only.
+    }
+    let img = random_phantom(10, 4301);
+    let want = direct_one(&img);
+    let mut client = NetClient::connect(&server.addr().to_string(), "after").unwrap();
+    let feats = client.features(&img, DEADLINE_US).unwrap();
+    assert_eq!(feats, want, "a truncated neighbor must not poison the listener");
+    server.shutdown();
+}
+
+#[test]
+fn partial_writes_across_frame_boundaries_reassemble() {
+    let server = server_on(serve_config());
+    let img = random_phantom(12, 4400);
+    let want = direct_one(&img);
+
+    let mut raw = raw_handshake(server.addr(), "dribble");
+    raw.set_nodelay(true).unwrap();
+    // Dribble the request a few bytes at a time, with pauses straddling
+    // the length header, the type byte and the payload: the server must
+    // reassemble exactly one frame from many short reads.
+    let full = wire::encode(&Frame::Request {
+        id: 9,
+        deadline_us: DEADLINE_US,
+        size: 12,
+        pixels: Pixels::F32(img.pixels().to_vec()),
+    });
+    for chunk in [&full[..2], &full[2..5], &full[5..40]] {
+        raw.write_all(chunk).unwrap();
+        raw.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    raw.write_all(&full[40..]).unwrap();
+    raw.flush().unwrap();
+    match wire::read_frame(&mut raw, u32::MAX).unwrap() {
+        Some(Frame::Response { id: 9, outcome: Ok(feats) }) => {
+            assert_eq!(feats, want, "reassembled request diverged");
+        }
+        other => panic!("expected the served response, got {other:?}"),
+    }
+    wire::write_frame(&mut raw, &Frame::Goodbye).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn client_disconnect_mid_batch_still_resolves_server_tickets() {
+    // A long flush delay guarantees the requests are still queued —
+    // tickets unresolved, responses unwritten — when the client hangs
+    // up. Nothing may leak: every admitted ticket must still reach a
+    // terminal outcome and the books must balance.
+    let server = server_on(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 100_000,
+        workers: 1,
+        ..serve_config()
+    });
+    let service = server.service().clone();
+    {
+        let mut client = NetClient::connect(&server.addr().to_string(), "ghost").unwrap();
+        for i in 0..4u64 {
+            client.submit(&random_phantom(10, 4500 + i), DEADLINE_US).unwrap();
+        }
+        // Dropped without recv or GOODBYE: an abrupt disconnect with
+        // four tickets in flight.
+    }
+    // Shutdown waits out the writers and drains the service; afterwards
+    // every ticket has resolved.
+    server.shutdown();
+    let st = service.stats("ghost");
+    assert_eq!(st.admitted, 4, "all four requests were admitted before the hangup");
+    let resolved = st.served + st.expired + st.failed;
+    assert_eq!(resolved, st.admitted, "every ticket reached a terminal outcome: {st:?}");
+    assert_eq!(st.rejected, 0, "{st:?}");
+}
+
+#[test]
+fn server_shutdown_drains_inflight_responses_to_the_client() {
+    // Requests parked on a long age trigger; shutdown must flush them
+    // through the workers AND deliver every response before the socket
+    // closes (writers drain while the service is still alive).
+    let server = server_on(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 100_000,
+        workers: 1,
+        ..serve_config()
+    });
+    let mut imgs = Vec::new();
+    for i in 0..3u64 {
+        imgs.push(random_phantom(10, 4600 + i));
+    }
+    let want = direct_features(&imgs);
+    let client = NetClient::connect(&server.addr().to_string(), "drain").unwrap();
+    let (mut tx, mut rx) = client.split();
+    let mut ids = Vec::new();
+    for img in &imgs {
+        ids.push(tx.submit(img, DEADLINE_US).unwrap());
+    }
+    let shutter = std::thread::spawn(move || server.shutdown());
+    for (i, &id) in ids.iter().enumerate() {
+        match rx.recv().unwrap() {
+            Some(Received::Response(got_id, outcome)) => {
+                assert_eq!(got_id, id);
+                assert_eq!(outcome.unwrap(), want[i], "drained response {i} diverged");
+            }
+            Some(Received::Stats(..)) => panic!("unexpected stats reply for response {i}"),
+            None => panic!("server closed before delivering response {i}"),
+        }
+    }
+    assert!(rx.recv().unwrap().is_none(), "clean EOF after the drain");
+    shutter.join().unwrap();
+}
+
+#[test]
+fn stats_probe_returns_the_serving_snapshot() {
+    // Far synthesized ordinals: exact health/counter assertions must not
+    // collide with an ambient chaos schedule on the real device table.
+    let base = device_count() + 820;
+    let members = [Device::emulator_at(base, None), Device::emulator_at(base + 1, None)];
+    let set = DeviceSet::new(&members).unwrap();
+    let svc = Service::on_set(set, &thetas(), serve_config()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", svc, NetConfig::default()).unwrap();
+    let mut client = NetClient::connect(&server.addr().to_string(), "probe").unwrap();
+    for i in 0..3u64 {
+        let feats = client.features(&random_phantom(10, 4700 + i), DEADLINE_US).unwrap();
+        assert!(!feats.is_empty());
+    }
+    let snap = client.stats().unwrap();
+    assert_eq!(snap.get("queue_depth").unwrap().as_usize(), Some(0));
+    let probe = snap.get("tenants").unwrap().get("probe").unwrap();
+    assert_eq!(probe.get("admitted").unwrap().as_usize(), Some(3));
+    assert_eq!(probe.get("served").unwrap().as_usize(), Some(3));
+    assert_eq!(probe.get("failed").unwrap().as_usize(), Some(0));
+    assert!(probe.get("batches").unwrap().as_obj().is_some());
+    let devices = snap.get("devices").unwrap().as_arr().unwrap();
+    assert_eq!(devices.len(), 2, "one snapshot entry per set member");
+    for d in devices {
+        assert_eq!(d.get("health").unwrap().as_str(), Some("healthy"));
+        assert!(d.get("ordinal").unwrap().as_usize().unwrap() >= base);
+    }
+    let config = snap.get("config").unwrap();
+    assert_eq!(config.get("queue_capacity").unwrap().as_usize(), Some(64));
+    client.goodbye().unwrap();
+    server.shutdown();
+}
+
+// ---------------------------------------------- injected device loss --
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Exclusive, self-cleaning access to the process-global fault plane
+/// (same idiom as `rust/tests/faults.rs`).
+struct Chaos {
+    _guard: std::sync::MutexGuard<'static, ()>,
+}
+
+impl Chaos {
+    fn begin() -> Chaos {
+        let guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        faults::reset_all();
+        Chaos { _guard: guard }
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        faults::reset_all();
+    }
+}
+
+#[test]
+fn injected_device_loss_is_invisible_to_the_remote_client() {
+    let _chaos = Chaos::begin();
+    // Far ordinals: the injected loss must not leak into parallel tests.
+    let base = device_count() + 840;
+    let mut imgs = Vec::new();
+    for i in 0..8u64 {
+        imgs.push(random_phantom(10, 4800 + i));
+    }
+    let want = direct_features(&imgs);
+
+    let members = [Device::emulator_at(base, None), Device::emulator_at(base + 1, None)];
+    let set = DeviceSet::new(&members).unwrap();
+    let ord0 = set.device(0).ordinal;
+    // The single worker pins onto member 0; its first launch kills it.
+    faults::install(FaultPlan::new().fail(FaultSite::Launch, ord0, 1));
+    let config = ServeConfig { max_batch: 4, max_delay_us: 1_000, workers: 1, ..serve_config() };
+    let svc = Service::on_set(set.clone(), &thetas(), config).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", svc, NetConfig::default()).unwrap();
+    let mut client = NetClient::connect(&server.addr().to_string(), "remote").unwrap();
+    let mut ids = Vec::new();
+    for img in &imgs {
+        ids.push(client.submit(img, DEADLINE_US).unwrap());
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let (got_id, outcome) = client.recv().unwrap();
+        assert_eq!(got_id, id);
+        // The loss, the re-admission and the worker re-pin all happen
+        // behind the admission queue: the client sees only correct
+        // features, bitwise identical to the fault-free direct run.
+        assert_eq!(outcome.unwrap(), want[i], "image {i} diverged under failover");
+    }
+    // The detour IS visible where it should be: the stats snapshot.
+    let snap = client.stats().unwrap();
+    let remote = snap.get("tenants").unwrap().get("remote").unwrap();
+    assert_eq!(remote.get("served").unwrap().as_usize(), Some(8));
+    assert!(remote.get("retried").unwrap().as_usize().unwrap() >= 1, "re-admission recorded");
+    assert!(remote.get("failed_over").unwrap().as_usize().unwrap() >= 1, "re-pin recorded");
+    let devices = snap.get("devices").unwrap().as_arr().unwrap();
+    let lost = devices
+        .iter()
+        .find(|d| d.get("ordinal").unwrap().as_usize() == Some(ord0))
+        .expect("the killed member is in the snapshot");
+    assert_eq!(lost.get("health").unwrap().as_str(), Some("lost"));
+    assert_eq!(set.health(0), Health::Lost);
+    assert_eq!(faults::injections(FaultSite::Launch, ord0), 1, "exactly one injection fired");
+    client.goodbye().unwrap();
+    server.shutdown();
+}
+
+// ------------------------------------------------------ typed errors --
+
+#[test]
+fn failure_frames_reconstruct_typed_errors_end_to_end() {
+    // Shed and expired admissions cross the wire as the same typed
+    // variants an in-process caller matches on.
+    let server = server_on(ServeConfig {
+        max_batch: 64,
+        max_delay_us: 1_000_000,
+        queue_capacity: 2,
+        workers: 1,
+        ..serve_config()
+    });
+    let mut client = NetClient::connect(&server.addr().to_string(), "typed").unwrap();
+    // Zero budget: refused at admission with the typed deadline error.
+    let id = client.submit(&random_phantom(10, 4900), 0).unwrap();
+    let (got_id, outcome) = client.recv().unwrap();
+    assert_eq!(got_id, id);
+    match outcome.unwrap_err() {
+        Error::DeadlineExceeded { waited_us: 0, budget_us: 0 } => {}
+        other => panic!("expected the typed deadline rejection, got {other:?}"),
+    }
+    // Fill the 2-slot queue, then overflow it: exactly one of the three
+    // pipelined submissions comes back Overloaded with the queue's
+    // numbers (the 1 s flush delay keeps the first two queued).
+    let mut ids = Vec::new();
+    for i in 0..3u64 {
+        ids.push(client.submit(&random_phantom(10, 4910 + i), DEADLINE_US).unwrap());
+    }
+    let mut outcomes = Vec::new();
+    for &id in &ids {
+        let (got_id, outcome) = client.recv().unwrap();
+        assert_eq!(got_id, id);
+        outcomes.push(outcome);
+    }
+    let shed: Vec<&Error> = outcomes.iter().filter_map(|o| o.as_ref().err()).collect();
+    assert_eq!(shed.len(), 1, "exactly one of three overflowed the 2-slot queue");
+    let is_overloaded = matches!(shed[0], Error::Overloaded { capacity: 2, .. });
+    assert!(is_overloaded, "got {:?}", shed[0]);
+    assert_eq!(outcomes.iter().filter(|o| o.is_ok()).count(), 2);
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_is_refused_with_a_typed_error() {
+    let server = server_on(serve_config());
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    let hello = Frame::Hello { version: VERSION + 1, tenant: "v2".to_string() };
+    wire::write_frame(&mut raw, &hello).unwrap();
+    raw.flush().unwrap();
+    match wire::read_frame(&mut raw, u32::MAX).unwrap() {
+        Some(Frame::Response { id: 0, outcome: Err(WireFailure { code: 63, msg, .. }) }) => {
+            assert!(msg.contains("version"), "{msg}");
+        }
+        other => panic!("expected a version refusal, got {other:?}"),
+    }
+    assert!(wire::read_frame(&mut raw, u32::MAX).unwrap().is_none());
+    // A matching-version client still connects.
+    let client = NetClient::connect(&server.addr().to_string(), "ok");
+    assert!(client.is_ok(), "{:?}", client.err());
+    server.shutdown();
+}

@@ -220,6 +220,74 @@ fn shutdown_drains_queued_work() {
 }
 
 #[test]
+fn drain_racing_submitters_strands_no_ticket() {
+    // Regression: `submit` used to check the shutdown flag *before*
+    // taking the queue lock, so a submission racing `drain` could
+    // enqueue after the workers had observed empty-queue + shutdown and
+    // exited — stranding that ticket unresolved. The flag is now raised
+    // and checked under the queue lock: every accepted ticket resolves,
+    // every refused submission gets the typed shutdown error.
+    use std::sync::Arc;
+    let svc = Arc::new(service(ServeConfig {
+        max_batch: 8,
+        max_delay_us: 100,
+        queue_capacity: 256,
+        workers: 2,
+        ..ServeConfig::default()
+    }));
+    let submitter = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            let img = random_phantom(10, 7);
+            let mut tickets = Vec::new();
+            for _ in 0..20_000 {
+                match svc.submit("race", img.clone()) {
+                    Ok(t) => tickets.push(t),
+                    Err(Error::Overloaded { .. }) => continue,
+                    // The drain landed: the refusal must be the typed
+                    // shutdown error, and no later submit may succeed.
+                    Err(e) => {
+                        assert!(e.to_string().contains("shut down"), "got {e}");
+                        break;
+                    }
+                }
+            }
+            tickets
+        })
+    };
+    // Let the submitter build up steam, then drain concurrently.
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    svc.drain();
+    let tickets = submitter.join().unwrap();
+    assert!(!tickets.is_empty(), "the submitter raced at least one ticket in");
+    let accepted = tickets.len() as u64;
+    let mut served = 0u64;
+    for (i, t) in tickets.into_iter().enumerate() {
+        // After drain() returns, every accepted ticket must already be
+        // resolved — a feature vector or a typed error (expiry and
+        // injected-fault outcomes are legitimate under CI chaos), never
+        // stranded. `try_wait` is non-blocking: a stranded ticket shows
+        // up as None, not as a hung test.
+        match t.try_wait() {
+            Some(Ok(feats)) => {
+                assert_eq!(feats.len(), FEATURE_COUNT);
+                served += 1;
+            }
+            Some(Err(_)) => {}
+            None => panic!("ticket {i} was stranded unresolved by the drain race"),
+        }
+    }
+    let st = svc.stats("race");
+    assert_eq!(st.admitted, accepted, "every accepted ticket is on the books");
+    assert_eq!(st.served, served, "ticket outcomes and stats agree");
+    assert_eq!(
+        st.served + st.expired + st.failed,
+        accepted,
+        "every admitted request reached a terminal outcome"
+    );
+}
+
+#[test]
 fn tenants_get_separate_stats() {
     let svc = service(ServeConfig { max_delay_us: 1_000, ..ServeConfig::default() });
     let mut tickets = Vec::new();
