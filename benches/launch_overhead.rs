@@ -9,10 +9,13 @@
 //!
 //! Part 2 (always runs, VTX emulator): the **execution tiers** — the
 //! warp-vectorized interpreter (basic-block lowering + superinstruction
-//! fusion, `HLGPU_EXEC=vector`) vs the scalar reference tier, on the
-//! straight-line sinogram workload. Reports instructions/s, the share
-//! of instructions retired in fused superinstructions, and vector lane
-//! utilization; target >= 3x instructions/s over scalar.
+//! fusion, `HLGPU_EXEC=vector`) and the closure-JIT compiled tier
+//! (`HLGPU_EXEC=compiled`, hot blocks compiled into straight-line
+//! closure chains) vs the scalar reference tier, on the straight-line
+//! sinogram workload. Reports instructions/s, fused and compiled
+//! instruction shares, vector lane utilization, tier-ups and deopts;
+//! targets: vector >= 3x instructions/s over scalar, compiled >=
+//! vector with a compiled share > 0.9 at steady state.
 //!
 //! Part 3 (always runs, VTX emulator): **launch API v2** — (a) a warm
 //! bound `KernelHandle` with all-device-resident arguments vs the v1
@@ -22,11 +25,14 @@
 //! wall clock both drop — the device-resident angle table uploads once),
 //! and (c) the host vs device P/F reduction stage (`HLGPU_REDUCE`):
 //! bytes downloaded per image collapse from `|T|·a·s` floats to the
-//! `FEATURE_COUNT`-float block, and (d) the single-device pipeline vs
+//! `FEATURE_COUNT`-float block, (d) the single-device pipeline vs
 //! the same batch **sharded across a 2-/4-member `DeviceSet`**
 //! (`HLGPU_SHARD=auto`): images/s, scaling efficiency, per-member
 //! placement and the shard imbalance ratio (results stay bitwise
-//! identical to the 1-device baseline).
+//! identical to the 1-device baseline), and (e) the **execution tiers
+//! on the warm `features_batch` path**: scalar vs vector vs compiled,
+//! with instructions/s, compiled share, tier-up count and the number
+//! of batches until the JIT's compile time pays for itself.
 //!
 //! Part 4 (needs `make artifacts`): the §6 claim that the automation
 //! layer adds **no run-time overhead** over manual driver calls once the
@@ -34,12 +40,14 @@
 //!
 //! Run: `cargo bench --bench launch_overhead`
 //! (env: LO_ITERS, LO_N, LO_SIZE, LO_ANGLES, LO_BATCH, HLGPU_WORKERS,
-//! HLGPU_EXEC, HLGPU_ARENAS).
+//! HLGPU_EXEC, HLGPU_TIER_UP, HLGPU_ARENAS).
 
 use hlgpu::bench_support::{fmt_speedup, fmt_summary, measure, Settings, Table};
 use hlgpu::coordinator::{arg, DeviceArray, Launcher};
 use hlgpu::driver::{Context, KernelArg, LaunchConfig};
-use hlgpu::emulator::{default_workers, set_default_exec, set_default_workers, ExecTier};
+use hlgpu::emulator::{
+    default_workers, set_default_exec, set_default_tier_up, set_default_workers, ExecTier,
+};
 use hlgpu::runtime::ArtifactLibrary;
 use hlgpu::tensor::{Dtype, Tensor};
 use hlgpu::tracetransform::{orientations, random_phantom, shepp_logan};
@@ -136,9 +144,11 @@ fn emulator_scheduler_section(settings: Settings) {
 }
 
 /// Execution-tier section: scalar reference interpreter vs the
-/// warp-vectorized tier on the straight-line sinogram workload, A/B'd
-/// through `set_default_exec` (mirroring the scheduler section's
-/// `set_default_workers` precedent). Both tiers produce bitwise-equal
+/// warp-vectorized tier vs the closure-JIT compiled tier (forced
+/// compilation, `HLGPU_TIER_UP=0` semantics — the steady-state shape)
+/// on the straight-line sinogram workload, A/B'd through
+/// `set_default_exec` (mirroring the scheduler section's
+/// `set_default_workers` precedent). All tiers produce bitwise-equal
 /// results; only dispatch amortization differs.
 fn exec_tier_section(settings: Settings) {
     let size = env_usize("LO_SIZE", 96);
@@ -157,14 +167,22 @@ fn exec_tier_section(settings: Settings) {
         "time/iter",
         "Minstr/s",
         "fused share",
+        "compiled share",
         "lane util",
         "speedup",
     ]);
     let iters = (settings.warmup_iters + settings.sample_iters) as f64;
     let mut scalar_mean = 0.0f64;
     let mut vector_mean = f64::INFINITY;
-    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+    let mut compiled_mean = f64::INFINITY;
+    let mut compiled_share = 0.0f64;
+    let mut tier_ups = 0u64;
+    let mut deopts = 0u64;
+    for tier in [ExecTier::Scalar, ExecTier::Vector, ExecTier::Compiled] {
         set_default_exec(Some(tier));
+        // steady-state shape for the compiled tier: every block
+        // compiles on first entry during the warm launch below
+        set_default_tier_up(if tier == ExecTier::Compiled { Some(0) } else { None });
         // warm the specialization cache under this tier
         launcher
             .launch(
@@ -186,9 +204,14 @@ fn exec_tier_section(settings: Settings) {
         let after = launcher.metrics();
         let instrs = (after.instrs_retired - before.instrs_retired) as f64 / iters;
         let mips = instrs / summary.mean / 1e6;
-        let fused = after.fused_instrs - before.fused_instrs;
-        let fused_share = if after.instrs_retired > before.instrs_retired {
-            fused as f64 / (after.instrs_retired - before.instrs_retired) as f64
+        let retired = after.instrs_retired - before.instrs_retired;
+        let fused_share = if retired > 0 {
+            (after.fused_instrs - before.fused_instrs) as f64 / retired as f64
+        } else {
+            0.0
+        };
+        let cshare = if retired > 0 {
+            (after.compiled_instrs - before.compiled_instrs) as f64 / retired as f64
         } else {
             0.0
         };
@@ -210,27 +233,48 @@ fn exec_tier_section(settings: Settings) {
                     fmt_speedup(scalar_mean, summary.mean),
                 )
             }
+            ExecTier::Compiled => {
+                compiled_mean = summary.mean;
+                compiled_share = cshare;
+                tier_ups = after.tier_ups;
+                deopts = after.deopts - before.deopts;
+                (
+                    "compiled (closure-JIT blocks)".to_string(),
+                    fmt_speedup(scalar_mean, summary.mean),
+                )
+            }
         };
         table.row(&[
             name,
             fmt_summary(&summary),
             format!("{mips:.1}"),
             format!("{:.0}%", fused_share * 100.0),
+            format!("{:.0}%", cshare * 100.0),
             format!("{:.0}%", lane_util * 100.0),
             speedup,
         ]);
     }
     set_default_exec(None);
+    set_default_tier_up(None);
 
     println!(
         "\nVTX execution tiers — sinogram_all {size}x{size}, {angles} blocks of {size} threads"
     );
-    println!("(HLGPU_EXEC=scalar|vector overrides the default tier)");
+    println!("(HLGPU_EXEC=scalar|vector|compiled and HLGPU_TIER_UP=N override the defaults)");
     println!("{}", table.render());
     if scalar_mean > 0.0 && vector_mean.is_finite() {
         println!(
             "vector tier: {} instructions/s over scalar (target: >= 3x on straight-line kernels)",
             fmt_speedup(scalar_mean, vector_mean)
+        );
+    }
+    if vector_mean.is_finite() && compiled_mean.is_finite() {
+        println!(
+            "compiled tier: {} over vector, compiled share {:.0}% (target: >= 1x with share > 90%), {} tier-ups, {} steady-state deopts",
+            fmt_speedup(vector_mean, compiled_mean),
+            compiled_share * 100.0,
+            tier_ups,
+            deopts,
         );
     }
 }
@@ -525,6 +569,119 @@ fn multi_device_section(settings: Settings) {
     println!("efficiency = speedup / devices; lanes share this machine's cores, so treat it as an upper-bound trend, not a hardware claim");
 }
 
+/// Launch API v2 section E: the execution tiers on the warm
+/// `features_batch` path — scalar vs vector vs compiled A/B with the
+/// default tier-up threshold, so the compiled run shows the real
+/// profile-driven lifecycle: the cold first batch pays hotness
+/// counting + JIT compilation, warm batches ride the cached closure
+/// chains. Reports instructions/s, compiled share, tier-up count,
+/// deopts, and how many batches it takes the JIT to pay for itself
+/// (cold-batch overhead vs per-batch saving over the vector tier).
+fn compiled_features_section(settings: Settings) {
+    use hlgpu::tracetransform::{DeviceChoice, GpuAuto, TraceImpl};
+    let size = env_usize("LO_SIZE", 96);
+    let angles = env_usize("LO_ANGLES", 64);
+    let batch = env_usize("LO_BATCH", 8);
+    let thetas = orientations(angles);
+    let imgs: Vec<_> = (0..batch).map(|i| random_phantom(size, 260 + i as u64)).collect();
+    let iters = (settings.warmup_iters + settings.sample_iters) as f64;
+
+    let mut table = Table::new(&[
+        "tier",
+        "cold batch",
+        "warm time/batch",
+        "Minstr/s",
+        "compiled share",
+        "tier-ups",
+        "deopts",
+        "speedup",
+    ]);
+    let mut scalar_mean = 0.0f64;
+    let mut vector_mean = f64::INFINITY;
+    let mut vector_cold = 0.0f64;
+    let mut compiled_mean = f64::INFINITY;
+    let mut compiled_cold = 0.0f64;
+    for tier in [ExecTier::Scalar, ExecTier::Vector, ExecTier::Compiled] {
+        set_default_exec(Some(tier));
+        let mut auto = GpuAuto::on_device(DeviceChoice::Emulator).unwrap();
+        // Cold first batch: specialization + pipe setup everywhere; on
+        // the compiled tier also hotness counting and JIT compilation
+        // (the default HLGPU_TIER_UP threshold, the real lifecycle).
+        let (cold, _) = hlgpu::bench_support::measure_once(|| {
+            auto.features_batch(&imgs, &thetas).unwrap();
+        });
+        let before = auto.launcher().metrics();
+        let summary = measure(settings, || {
+            auto.features_batch(&imgs, &thetas).unwrap();
+        });
+        let after = auto.launcher().metrics();
+        let retired = after.instrs_retired - before.instrs_retired;
+        let mips = retired as f64 / iters / summary.mean / 1e6;
+        let cshare = if retired > 0 {
+            (after.compiled_instrs - before.compiled_instrs) as f64 / retired as f64
+        } else {
+            0.0
+        };
+        let deopts = after.deopts - before.deopts;
+        let (name, speedup) = match tier {
+            ExecTier::Scalar => {
+                scalar_mean = summary.mean;
+                ("scalar".to_string(), "1.00x".to_string())
+            }
+            ExecTier::Vector => {
+                vector_mean = summary.mean;
+                vector_cold = cold;
+                ("vector".to_string(), fmt_speedup(scalar_mean, summary.mean))
+            }
+            ExecTier::Compiled => {
+                compiled_mean = summary.mean;
+                compiled_cold = cold;
+                ("compiled".to_string(), fmt_speedup(scalar_mean, summary.mean))
+            }
+        };
+        table.row(&[
+            name,
+            format!("{:.1} ms", cold * 1e3),
+            fmt_summary(&summary),
+            format!("{mips:.1}"),
+            format!("{:.0}%", cshare * 100.0),
+            after.tier_ups.to_string(),
+            deopts.to_string(),
+            speedup,
+        ]);
+    }
+    set_default_exec(None);
+
+    println!(
+        "\nLaunch API v2 — execution tiers on warm features_batch ({batch} images of {size}x{size}, {angles} angles)"
+    );
+    println!("(HLGPU_EXEC selects the tier; HLGPU_TIER_UP sets the block-hotness threshold)");
+    println!("{}", table.render());
+    if vector_mean.is_finite() && compiled_mean.is_finite() {
+        let overhead = compiled_cold - vector_cold;
+        let saving = vector_mean - compiled_mean;
+        if saving > 0.0 && overhead > 0.0 {
+            println!(
+                "JIT amortization: {:.1} ms compile-time overhead on the cold batch, {:.3} ms saved per warm batch -> pays for itself after ~{} batches",
+                overhead * 1e3,
+                saving * 1e3,
+                (overhead / saving).ceil() as u64
+            );
+        } else if saving > 0.0 {
+            println!(
+                "JIT amortization: no measurable cold-batch overhead, {:.3} ms saved per warm batch -> pays for itself immediately",
+                saving * 1e3
+            );
+        } else {
+            println!(
+                "JIT amortization: compiled tier saved no time over vector on this workload ({} vs {})",
+                hlgpu::bench_support::fmt_time(compiled_mean),
+                hlgpu::bench_support::fmt_time(vector_mean),
+            );
+        }
+    }
+}
+
 /// PJRT section: the original §6 manual-vs-automation comparison.
 fn pjrt_overhead_section(settings: Settings, lib: &ArtifactLibrary) {
     let n = env_usize("LO_N", 4096);
@@ -659,6 +816,7 @@ fn main() {
     two_stream_pipeline_section(settings);
     reduce_stage_section(settings);
     multi_device_section(settings);
+    compiled_features_section(settings);
 
     match ArtifactLibrary::load_default() {
         Ok(lib) => pjrt_overhead_section(settings, &lib),

@@ -136,6 +136,17 @@ pub struct LaunchMetrics {
     pub vector_lane_ops: u64,
     /// Σ block width over vector-tier dispatches.
     pub vector_lane_slots: u64,
+    /// Instructions retired inside JIT-compiled block bodies
+    /// (compiled tier only).
+    pub compiled_instrs: u64,
+    /// Compiled-block body executions on the compiled tier.
+    pub compiled_blocks: u64,
+    /// Basic blocks promoted to compiled form (at most once per block
+    /// per decoded kernel — warm launches add zero).
+    pub tier_ups: u64,
+    /// Compiled-body guard failures that deopted back to the vector
+    /// tier mid-block.
+    pub deopts: u64,
     /// Async d2h readbacks enqueued through [`KernelHandle::download_on`]
     /// (each resolves to a `Tensor` on `PendingDownload::wait`).
     pub d2h_deferred: u64,
@@ -162,6 +173,16 @@ impl LaunchMetrics {
             return 0.0;
         }
         self.fused_instrs as f64 / self.instrs_retired as f64
+    }
+
+    /// Fraction of retired instructions executed by JIT-compiled block
+    /// bodies, aggregated over every launch (0.0 unless the compiled
+    /// tier ran). Mirrors [`fused_share`](Self::fused_share).
+    pub fn compiled_share(&self) -> f64 {
+        if self.instrs_retired == 0 {
+            return 0.0;
+        }
+        self.compiled_instrs as f64 / self.instrs_retired as f64
     }
 
     /// Mean fraction of a block's lanes active per vector dispatch,
@@ -203,6 +224,10 @@ fn absorb_report(m: &mut LaunchMetrics, r: &LaunchReport) {
     m.dispatches += r.dispatches;
     m.vector_lane_ops += r.lane_ops;
     m.vector_lane_slots += r.lane_slots;
+    m.compiled_instrs += r.compiled_instrs;
+    m.compiled_blocks += r.compiled_blocks;
+    m.tier_ups += r.tier_ups;
+    m.deopts += r.deopts;
     if r.workers > 1 {
         m.parallel_launches += 1;
     }

@@ -106,6 +106,20 @@ pub struct LaunchReport {
     /// Σ block width over vector-tier dispatches — the lane capacity
     /// `lane_ops` is measured against.
     pub lane_slots: u64,
+    /// Instructions retired inside JIT-compiled block bodies (zero
+    /// unless the compiled tier ran).
+    pub compiled_instrs: u64,
+    /// Compiled-block body executions (each replaces the per-op vector
+    /// dispatch loop for one block entry).
+    pub compiled_blocks: u64,
+    /// Blocks promoted from the vector tier to compiled form during
+    /// this launch (each block tiers up at most once per decoded
+    /// kernel, so warm launches report zero).
+    pub tier_ups: u64,
+    /// Compiled-body guard failures that fell back to the vector tier
+    /// mid-block (the vector tier then replays from the exact failing
+    /// instruction, preserving trap coordinates bitwise).
+    pub deopts: u64,
 }
 
 impl LaunchReport {
@@ -125,6 +139,16 @@ impl LaunchReport {
             return 0.0;
         }
         self.fused_instrs as f64 / self.instrs as f64
+    }
+
+    /// Fraction of retired instructions executed by JIT-compiled block
+    /// bodies (0.0 unless the compiled tier ran). Mirrors
+    /// [`fused_share`](Self::fused_share).
+    pub fn compiled_share(&self) -> f64 {
+        if self.instrs == 0 {
+            return 0.0;
+        }
+        self.compiled_instrs as f64 / self.instrs as f64
     }
 
     /// Mean fraction of a block's lanes active per vector dispatch
@@ -207,6 +231,7 @@ mod tests {
         let r = LaunchReport::default();
         assert_eq!(r.utilization(), 0.0);
         assert_eq!(r.fused_share(), 0.0);
+        assert_eq!(r.compiled_share(), 0.0);
         assert_eq!(r.lane_utilization(), 0.0);
         let r = LaunchReport {
             instrs: 100,
@@ -214,9 +239,11 @@ mod tests {
             dispatches: 10,
             lane_ops: 80,
             lane_slots: 100,
+            compiled_instrs: 95,
             ..LaunchReport::default()
         };
         assert!((r.fused_share() - 0.25).abs() < 1e-12);
+        assert!((r.compiled_share() - 0.95).abs() < 1e-12);
         assert!((r.lane_utilization() - 0.8).abs() < 1e-12);
     }
 

@@ -1,0 +1,910 @@
+//! The **compiled execution tier**: a closure JIT (threaded code) over
+//! the lowered basic-block form of [`crate::emulator::lower`].
+//!
+//! Hot basic blocks compile into straight-line chains of pre-resolved
+//! `Box<dyn Fn>` closures — one per (possibly fused) operation, with
+//! operand register slots, opcode selection and bounds-check shapes
+//! resolved **at compile time** — so steady-state execution runs the
+//! chain without the per-op `match` dispatch of the vector tier, and
+//! charges the whole block's step weight in one entry guard instead of
+//! one `charge()` pass per op.
+//!
+//! # Tier-up
+//!
+//! Each [`crate::emulator::decode::DecodedKernel`] carries a [`JitState`]
+//! with a per-block execution counter and a per-block `OnceLock`
+//! compilation slot, so the compiled form rides the existing
+//! `DecodedKernel`/`Specialized` caches: warm launches inherit both the
+//! hotness profile and the compiled blocks for free. A block compiles
+//! once its execution count exceeds the tier-up threshold
+//! (`HLGPU_TIER_UP` / [`crate::emulator::sched::set_default_tier_up`];
+//! `0` = always-compile). Compilation is racy-but-idempotent: concurrent
+//! workers may both cross the threshold, the `OnceLock` keeps the first
+//! result, and only the winning run counts a `tier_up`.
+//!
+//! # Deopt: guard-then-execute, zero side effects
+//!
+//! Bitwise parity with the scalar reference comes from one invariant:
+//! **a compiled op either completes for every masked lane or executes
+//! nothing at all.** Every trap source is hoisted into a guard that runs
+//! before any side effect:
+//!
+//! * **budget** — the entry guard checks `steps + body_weight <= limit`
+//!   for every masked lane; any failure deopts at op 0 with nothing
+//!   charged and nothing executed. (Charging is monotone, so if the
+//!   whole-block charge fits, no per-op charge of the vector tier could
+//!   have trapped — including `RmwG`'s interleaved checks.)
+//! * **memory / division** — ops that can trap (`LdG`/`StG`/`LdS`/`StS`,
+//!   integer `Div`/`Rem`, `RmwG`) run a read-only guard pass over all
+//!   masked lanes first; a failure deopts at that op index after
+//!   un-charging the remaining suffix weight (`rest_w`), with zero side
+//!   effects from the failing op.
+//!
+//! On deopt the caller (the shared scheduler loop in
+//! [`crate::emulator::vector`]) replays the block's ops **from the deopt
+//! index** on the ordinary vector path, which re-charges op by op and
+//! reports the exact trap — same lane, same coordinates, same reason
+//! string — because the compiled prefix left precisely the state the
+//! vector tier would have had. Terminators (including barriers and the
+//! fused `LoopBack`) always run on the shared vector path, so
+//! reconvergence, barrier-divergence and trap bookkeeping are never
+//! duplicated.
+//!
+//! # Lane re-packing
+//!
+//! When the active mask is sparse (≤ half the block's lanes), the
+//! referenced registers of the block are gathered into dense
+//! lane-packed buffers (stride = mask length) before the chain runs and
+//! scattered back after — on success *and* on deopt — so divergent
+//! kernels execute contiguous lanes instead of striding across
+//! masked-out ones. The gather/scatter set is every register the block
+//! reads **or** writes, so scatter is always safe.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::emulator::interp::{binf_apply, cmpf, cmpi, BlockStats, GlobalMem};
+use crate::emulator::isa::{FOp, IOp, Instr, Special, UnFOp};
+use crate::emulator::lower::{Block, VOp};
+
+/// Execution context handed to compiled-op closures. Register files may
+/// be the block's full SoA buffers (stride = block lanes) or the packed
+/// gather buffers (stride = mask length); closures address registers as
+/// `reg * stride + row`, so the same chain serves both.
+pub(crate) struct OpCtx<'a> {
+    pub fr: &'a mut [f32],
+    pub ir: &'a mut [i64],
+    /// Lane stride of `fr`/`ir` (block lanes, or mask length when packed).
+    pub stride: usize,
+    /// Row of each active lane in `fr`/`ir` (the mask itself, or `0..m`
+    /// when packed).
+    pub rows: &'a [usize],
+    /// Original lane id of each active lane (thread-id computations).
+    pub lanes: &'a [usize],
+    pub shared: &'a mut [f32],
+    pub mem: &'a mut dyn GlobalMem,
+    /// Hoisted per-buffer lengths (launch-constant).
+    pub lens: &'a [usize],
+    pub bx: u32,
+    pub by: u32,
+    pub gx: u32,
+    pub gy: u32,
+    pub bx_i: u32,
+    pub by_i: u32,
+}
+
+/// Side-effecting body of a compiled op: runs every lane, cannot trap
+/// (all trap sources were proven absent by the guard / entry guard).
+type Exec = Box<dyn Fn(&mut OpCtx) + Send + Sync>;
+
+/// Read-only trap guard: `true` = safe to execute for every masked lane.
+type Guard = Box<dyn Fn(&OpCtx) -> bool + Send + Sync>;
+
+struct COp {
+    guard: Option<Guard>,
+    exec: Exec,
+    weight: u64,
+    fused: bool,
+}
+
+/// Outcome of running a compiled block body.
+pub(crate) enum CompiledRun {
+    /// All ops retired; the caller runs the terminator on the shared
+    /// vector path.
+    Done,
+    /// Guard failure before op *i* executed: the caller replays the ops
+    /// from index *i* on the vector path, which reports the exact trap.
+    Deopt(usize),
+}
+
+/// One basic block compiled to a closure chain.
+pub(crate) struct CompiledBlock {
+    ops: Vec<COp>,
+    /// Suffix weights: `rest_w[i]` = Σ weights of ops `i..` — the amount
+    /// to un-charge when deopting before op `i`.
+    rest_w: Vec<u64>,
+    /// Whole-body weight (== `rest_w[0]`), charged by the entry guard.
+    body_w: u64,
+    /// Registers the block reads or writes, per file — the lane
+    /// re-packing gather/scatter set.
+    fregs: Vec<usize>,
+    iregs: Vec<usize>,
+    /// Register-file sizes (packed-buffer allocation).
+    nf: usize,
+    ni: usize,
+}
+
+impl CompiledBlock {
+    /// Run the block body for the masked lanes. `fr`/`ir` are the
+    /// block's full SoA register files (stride `nl`); `steps` is
+    /// lane-indexed. Statistics are accounted per retired op exactly as
+    /// the vector tier would, plus the compiled-tier counters.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run(
+        &self,
+        fr: &mut [f32],
+        ir: &mut [i64],
+        nl: usize,
+        mask: &[usize],
+        shared: &mut [f32],
+        mem: &mut dyn GlobalMem,
+        lens: &[usize],
+        steps: &mut [u64],
+        limit: u64,
+        grid: (u32, u32),
+        block: (u32, u32),
+        block_id: (u32, u32),
+        stats: &mut BlockStats,
+    ) -> CompiledRun {
+        let m = mask.len();
+        // Entry guard: the whole body's weight must fit every lane's
+        // remaining budget, else deopt with nothing charged — the vector
+        // replay re-charges op by op and traps exactly where the scalar
+        // tier would.
+        for &l in mask {
+            if steps[l] + self.body_w > limit {
+                return CompiledRun::Deopt(0);
+            }
+        }
+        for &l in mask {
+            steps[l] += self.body_w;
+        }
+
+        stats.dispatches += 1;
+        stats.compiled_blocks += 1;
+
+        // Lane re-packing: gather the referenced registers of a sparse
+        // mask into dense buffers so the chain runs contiguous rows.
+        let packed = m * 2 <= nl && m < nl;
+        let mut pfr: Vec<f32> = Vec::new();
+        let mut pir: Vec<i64> = Vec::new();
+        let ident: Vec<usize> = if packed { (0..m).collect() } else { Vec::new() };
+        if packed {
+            pfr = vec![0f32; self.nf * m];
+            pir = vec![0i64; self.ni * m];
+            for &reg in &self.fregs {
+                let (src, dst) = (reg * nl, reg * m);
+                for (p, &l) in mask.iter().enumerate() {
+                    pfr[dst + p] = fr[src + l];
+                }
+            }
+            for &reg in &self.iregs {
+                let (src, dst) = (reg * nl, reg * m);
+                for (p, &l) in mask.iter().enumerate() {
+                    pir[dst + p] = ir[src + l];
+                }
+            }
+        }
+
+        let mut outcome = CompiledRun::Done;
+        {
+            let (frs, irs, stride): (&mut [f32], &mut [i64], usize) = if packed {
+                (pfr.as_mut_slice(), pir.as_mut_slice(), m)
+            } else {
+                (&mut *fr, &mut *ir, nl)
+            };
+            let rows: &[usize] = if packed { &ident } else { mask };
+            let mut ctx = OpCtx {
+                fr: frs,
+                ir: irs,
+                stride,
+                rows,
+                lanes: mask,
+                shared,
+                mem,
+                lens,
+                bx: block.0,
+                by: block.1,
+                gx: grid.0,
+                gy: grid.1,
+                bx_i: block_id.0,
+                by_i: block_id.1,
+            };
+            for (i, cop) in self.ops.iter().enumerate() {
+                if let Some(g) = &cop.guard {
+                    if !g(&ctx) {
+                        // Un-charge the unexecuted suffix so the vector
+                        // replay's per-op charging resumes at the exact
+                        // boundary.
+                        for &l in mask {
+                            steps[l] -= self.rest_w[i];
+                        }
+                        outcome = CompiledRun::Deopt(i);
+                        break;
+                    }
+                }
+                let wm = cop.weight * m as u64;
+                stats.instrs += wm;
+                stats.compiled_instrs += wm;
+                if cop.fused {
+                    stats.fused_instrs += wm;
+                }
+                stats.lane_ops += m as u64;
+                stats.lane_slots += nl as u64;
+                (cop.exec)(&mut ctx);
+            }
+        }
+
+        if packed {
+            // Scatter back — on success and on deopt alike: the vector
+            // replay (or the terminator) must see the compiled prefix's
+            // register state.
+            for &reg in &self.fregs {
+                let (src, dst) = (reg * m, reg * nl);
+                for (p, &l) in mask.iter().enumerate() {
+                    fr[dst + l] = pfr[src + p];
+                }
+            }
+            for &reg in &self.iregs {
+                let (src, dst) = (reg * m, reg * nl);
+                for (p, &l) in mask.iter().enumerate() {
+                    ir[dst + l] = pir[src + p];
+                }
+            }
+        }
+        outcome
+    }
+}
+
+/// Per-kernel JIT state: hotness counters and compiled blocks, cached on
+/// the [`crate::emulator::decode::DecodedKernel`] so warm launches share
+/// both across schedules, devices and repeated launches.
+pub(crate) struct JitState {
+    hot: Vec<AtomicU64>,
+    blocks: Vec<OnceLock<CompiledBlock>>,
+}
+
+impl JitState {
+    pub(crate) fn new(nblocks: usize) -> Self {
+        JitState {
+            hot: (0..nblocks).map(|_| AtomicU64::new(0)).collect(),
+            blocks: (0..nblocks).map(|_| OnceLock::new()).collect(),
+        }
+    }
+
+    /// The compiled form of block `bid`, counting this execution toward
+    /// tier-up and compiling (once, process-wide) when the count exceeds
+    /// `tier_up`. `tier_ups` increments only in the run that actually
+    /// won the compilation. Empty-bodied blocks (bare terminators) never
+    /// compile — there is nothing to chain.
+    pub(crate) fn compiled(
+        &self,
+        bid: usize,
+        blk: &Block,
+        fregs: u16,
+        iregs: u16,
+        tier_up: u64,
+        tier_ups: &mut u64,
+    ) -> Option<&CompiledBlock> {
+        if blk.ops.is_empty() {
+            return None;
+        }
+        let count = self.hot[bid].fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(cb) = self.blocks[bid].get() {
+            return Some(cb);
+        }
+        if count > tier_up {
+            let mut won = false;
+            let cb = self.blocks[bid].get_or_init(|| {
+                won = true;
+                compile_block(blk, fregs, iregs)
+            });
+            if won {
+                *tier_ups += 1;
+            }
+            return Some(cb);
+        }
+        None
+    }
+
+    /// Number of blocks currently holding a compiled form.
+    pub(crate) fn compiled_count(&self) -> usize {
+        self.blocks.iter().filter(|s| s.get().is_some()).count()
+    }
+}
+
+impl fmt::Debug for JitState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JitState")
+            .field("blocks", &self.blocks.len())
+            .field("compiled", &self.compiled_count())
+            .finish()
+    }
+}
+
+/// Compile one basic block into its closure chain.
+fn compile_block(blk: &Block, fregs: u16, iregs: u16) -> CompiledBlock {
+    let (nf, ni) = (fregs as usize, iregs as usize);
+    let mut fused_regs = vec![false; nf];
+    let mut iused_regs = vec![false; ni];
+    let mut ops = Vec::with_capacity(blk.ops.len());
+    for op in &blk.ops {
+        collect_regs(op, &mut fused_regs, &mut iused_regs);
+        ops.push(compile_op(op));
+    }
+    let mut rest_w = vec![0u64; ops.len()];
+    let mut acc = 0u64;
+    for i in (0..ops.len()).rev() {
+        acc += ops[i].weight;
+        rest_w[i] = acc;
+    }
+    CompiledBlock {
+        ops,
+        rest_w,
+        body_w: acc,
+        fregs: (0..nf).filter(|&r| fused_regs[r]).collect(),
+        iregs: (0..ni).filter(|&r| iused_regs[r]).collect(),
+        nf,
+        ni,
+    }
+}
+
+/// Mark every register the op reads or writes — the full set, so the
+/// packed gather/scatter round trip is lossless no matter which
+/// registers the op only writes.
+fn collect_regs(op: &VOp, f: &mut [bool], i: &mut [bool]) {
+    let mut fr = |r: u16| f[r as usize] = true;
+    let mut ir = |r: u16| i[r as usize] = true;
+    match *op {
+        VOp::Base(ins) => match ins {
+            Instr::ConstF(d, _) => fr(d),
+            Instr::ConstI(d, _) => ir(d),
+            Instr::MovF(d, s) => {
+                fr(d);
+                fr(s);
+            }
+            Instr::MovI(d, s) => {
+                ir(d);
+                ir(s);
+            }
+            Instr::BinF(_, d, a, b) => {
+                fr(d);
+                fr(a);
+                fr(b);
+            }
+            Instr::BinI(_, d, a, b) => {
+                ir(d);
+                ir(a);
+                ir(b);
+            }
+            Instr::UnF(_, d, a) => {
+                fr(d);
+                fr(a);
+            }
+            Instr::CmpF(_, d, a, b) => {
+                ir(d);
+                fr(a);
+                fr(b);
+            }
+            Instr::CmpI(_, d, a, b) => {
+                ir(d);
+                ir(a);
+                ir(b);
+            }
+            Instr::SelF(d, p, a, b) => {
+                fr(d);
+                ir(p);
+                fr(a);
+                fr(b);
+            }
+            Instr::CvtFI(d, s) => {
+                ir(d);
+                fr(s);
+            }
+            Instr::CvtIF(d, s) => {
+                fr(d);
+                ir(s);
+            }
+            Instr::Spec(d, _) => ir(d),
+            Instr::LdG { dst, idx, .. } => {
+                fr(dst);
+                ir(idx);
+            }
+            Instr::StG { idx, src, .. } => {
+                ir(idx);
+                fr(src);
+            }
+            Instr::LdS { dst, idx } => {
+                fr(dst);
+                ir(idx);
+            }
+            Instr::StS { idx, src } => {
+                ir(idx);
+                fr(src);
+            }
+            Instr::LdParamF(..) | Instr::LdParamI(..) => {
+                unreachable!("scalar params resolved by pre-decode")
+            }
+            Instr::Bar | Instr::Bra(_) | Instr::BraIf(..) | Instr::BraIfZ(..) | Instr::Ret => {
+                unreachable!("control flow is lowered to block terminators")
+            }
+        },
+        VOp::MulAddF { dm, ma, mb, dd, aa, ab } => {
+            for r in [dm, ma, mb, dd, aa, ab] {
+                fr(r);
+            }
+        }
+        VOp::MulAddI { dm, ma, mb, dd, aa, ab } => {
+            for r in [dm, ma, mb, dd, aa, ab] {
+                ir(r);
+            }
+        }
+        VOp::CvtMulAddF { df, si, dm, ma, mb, dd, aa, ab } => {
+            ir(si);
+            for r in [df, dm, ma, mb, dd, aa, ab] {
+                fr(r);
+            }
+        }
+        VOp::GlobalIdX { tid, bid, bdim, mul, add } => {
+            for r in [tid, bid, bdim, mul.0, mul.1, mul.2, add.0, add.1, add.2] {
+                ir(r);
+            }
+        }
+        VOp::RmwG { idx, ld, sa, sb, st, .. } => {
+            ir(idx);
+            for r in [ld, sa, sb, st] {
+                fr(r);
+            }
+        }
+    }
+}
+
+/// Compile one lowered op into its guard + pre-resolved exec closure.
+/// Opcode dispatch happens **here**, once per compilation — the returned
+/// closures contain only the selected arithmetic and fixed register
+/// slots.
+fn compile_op(op: &VOp) -> COp {
+    let weight = op.weight();
+    let fused = op.is_fused();
+
+    // Dense f32 binary: d = f(a, b), one specialized closure per opcode.
+    macro_rules! binf_exec {
+        ($d:expr, $a:expr, $b:expr, $f:expr) => {{
+            let (d, a, b) = ($d as usize, $a as usize, $b as usize);
+            Box::new(move |c: &mut OpCtx| {
+                let s = c.stride;
+                let rows = c.rows;
+                let (db, ab, bb) = (d * s, a * s, b * s);
+                for &r in rows {
+                    c.fr[db + r] = $f(c.fr[ab + r], c.fr[bb + r]);
+                }
+            }) as Exec
+        }};
+    }
+    // Dense i64 binary (non-trapping flavors).
+    macro_rules! bini_exec {
+        ($d:expr, $a:expr, $b:expr, $f:expr) => {{
+            let (d, a, b) = ($d as usize, $a as usize, $b as usize);
+            Box::new(move |c: &mut OpCtx| {
+                let s = c.stride;
+                let rows = c.rows;
+                let (db, ab, bb) = (d * s, a * s, b * s);
+                for &r in rows {
+                    c.ir[db + r] = $f(c.ir[ab + r], c.ir[bb + r]);
+                }
+            }) as Exec
+        }};
+    }
+    // Guard: no masked lane divides by zero.
+    macro_rules! nonzero_guard {
+        ($b:expr) => {{
+            let b = $b as usize;
+            Some(Box::new(move |c: &OpCtx| {
+                let bb = b * c.stride;
+                c.rows.iter().all(|&r| c.ir[bb + r] != 0)
+            }) as Guard)
+        }};
+    }
+    // Guard: every masked lane's index register is within `len` bounds.
+    macro_rules! global_bounds_guard {
+        ($slot:expr, $idx:expr) => {{
+            let (slot, idx) = ($slot as usize, $idx as usize);
+            Some(Box::new(move |c: &OpCtx| {
+                let len = c.lens[slot];
+                let ib = idx * c.stride;
+                c.rows.iter().all(|&r| {
+                    let i = c.ir[ib + r];
+                    i >= 0 && (i as usize) < len
+                })
+            }) as Guard)
+        }};
+    }
+    macro_rules! shared_bounds_guard {
+        ($idx:expr) => {{
+            let idx = $idx as usize;
+            Some(Box::new(move |c: &OpCtx| {
+                let len = c.shared.len();
+                let ib = idx * c.stride;
+                c.rows.iter().all(|&r| {
+                    let i = c.ir[ib + r];
+                    i >= 0 && (i as usize) < len
+                })
+            }) as Guard)
+        }};
+    }
+
+    let (guard, exec): (Option<Guard>, Exec) = match *op {
+        VOp::Base(ins) => match ins {
+            Instr::ConstF(d, v) => {
+                let d = d as usize;
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let db = d * c.stride;
+                        for &r in c.rows {
+                            c.fr[db + r] = v;
+                        }
+                    }),
+                )
+            }
+            Instr::ConstI(d, v) => {
+                let d = d as usize;
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let db = d * c.stride;
+                        for &r in c.rows {
+                            c.ir[db + r] = v;
+                        }
+                    }),
+                )
+            }
+            Instr::MovF(d, s) => {
+                let (d, s) = (d as usize, s as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let (db, sb) = (d * c.stride, s * c.stride);
+                        for &r in c.rows {
+                            c.fr[db + r] = c.fr[sb + r];
+                        }
+                    }),
+                )
+            }
+            Instr::MovI(d, s) => {
+                let (d, s) = (d as usize, s as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let (db, sb) = (d * c.stride, s * c.stride);
+                        for &r in c.rows {
+                            c.ir[db + r] = c.ir[sb + r];
+                        }
+                    }),
+                )
+            }
+            Instr::BinF(fop, d, a, b) => (
+                None,
+                match fop {
+                    FOp::Add => binf_exec!(d, a, b, |x: f32, y: f32| x + y),
+                    FOp::Sub => binf_exec!(d, a, b, |x: f32, y: f32| x - y),
+                    FOp::Mul => binf_exec!(d, a, b, |x: f32, y: f32| x * y),
+                    FOp::Div => binf_exec!(d, a, b, |x: f32, y: f32| x / y),
+                    FOp::Min => binf_exec!(d, a, b, |x: f32, y: f32| x.min(y)),
+                    FOp::Max => binf_exec!(d, a, b, |x: f32, y: f32| x.max(y)),
+                },
+            ),
+            Instr::BinI(iop, d, a, b) => match iop {
+                IOp::Add => (None, bini_exec!(d, a, b, |x: i64, y: i64| x.wrapping_add(y))),
+                IOp::Sub => (None, bini_exec!(d, a, b, |x: i64, y: i64| x.wrapping_sub(y))),
+                IOp::Mul => (None, bini_exec!(d, a, b, |x: i64, y: i64| x.wrapping_mul(y))),
+                // wrapping: i64::MIN / -1 must not panic (scalar parity)
+                IOp::Div => (
+                    nonzero_guard!(b),
+                    bini_exec!(d, a, b, |x: i64, y: i64| x.wrapping_div(y)),
+                ),
+                IOp::Rem => (
+                    nonzero_guard!(b),
+                    bini_exec!(d, a, b, |x: i64, y: i64| x.wrapping_rem(y)),
+                ),
+            },
+            Instr::UnF(uop, d, a) => {
+                let (d, a) = (d as usize, a as usize);
+                macro_rules! unf_exec {
+                    ($f:expr) => {
+                        Box::new(move |c: &mut OpCtx| {
+                            let (db, ab) = (d * c.stride, a * c.stride);
+                            for &r in c.rows {
+                                c.fr[db + r] = $f(c.fr[ab + r]);
+                            }
+                        }) as Exec
+                    };
+                }
+                (
+                    None,
+                    match uop {
+                        UnFOp::Neg => unf_exec!(|x: f32| -x),
+                        UnFOp::Abs => unf_exec!(|x: f32| x.abs()),
+                        UnFOp::Sqrt => unf_exec!(|x: f32| x.sqrt()),
+                        UnFOp::Sin => unf_exec!(|x: f32| x.sin()),
+                        UnFOp::Cos => unf_exec!(|x: f32| x.cos()),
+                        UnFOp::Floor => unf_exec!(|x: f32| x.floor()),
+                    },
+                )
+            }
+            Instr::CmpF(cop, d, a, b) => {
+                let (d, a, b) = (d as usize, a as usize, b as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let s = c.stride;
+                        let (db, ab, bb) = (d * s, a * s, b * s);
+                        for &r in c.rows {
+                            c.ir[db + r] = cmpf(cop, c.fr[ab + r], c.fr[bb + r]) as i64;
+                        }
+                    }),
+                )
+            }
+            Instr::CmpI(cop, d, a, b) => {
+                let (d, a, b) = (d as usize, a as usize, b as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let s = c.stride;
+                        let (db, ab, bb) = (d * s, a * s, b * s);
+                        for &r in c.rows {
+                            c.ir[db + r] = cmpi(cop, c.ir[ab + r], c.ir[bb + r]) as i64;
+                        }
+                    }),
+                )
+            }
+            Instr::SelF(d, p, a, b) => {
+                let (d, p, a, b) = (d as usize, p as usize, a as usize, b as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let s = c.stride;
+                        let (db, pb, ab, bb) = (d * s, p * s, a * s, b * s);
+                        for &r in c.rows {
+                            c.fr[db + r] =
+                                if c.ir[pb + r] != 0 { c.fr[ab + r] } else { c.fr[bb + r] };
+                        }
+                    }),
+                )
+            }
+            Instr::CvtFI(d, s) => {
+                let (d, s) = (d as usize, s as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let (db, sb) = (d * c.stride, s * c.stride);
+                        for &r in c.rows {
+                            c.ir[db + r] = c.fr[sb + r] as i64;
+                        }
+                    }),
+                )
+            }
+            Instr::CvtIF(d, s) => {
+                let (d, s) = (d as usize, s as usize);
+                (
+                    None,
+                    Box::new(move |c: &mut OpCtx| {
+                        let (db, sb) = (d * c.stride, s * c.stride);
+                        for &r in c.rows {
+                            c.fr[db + r] = c.ir[sb + r] as f32;
+                        }
+                    }),
+                )
+            }
+            Instr::Spec(d, sp) => {
+                let d = d as usize;
+                macro_rules! uniform_exec {
+                    ($v:expr) => {
+                        Box::new(move |c: &mut OpCtx| {
+                            let db = d * c.stride;
+                            let v = $v(c) as i64;
+                            for &r in c.rows {
+                                c.ir[db + r] = v;
+                            }
+                        }) as Exec
+                    };
+                }
+                (
+                    None,
+                    match sp {
+                        Special::ThreadIdX => Box::new(move |c: &mut OpCtx| {
+                            let db = d * c.stride;
+                            let bx = c.bx;
+                            let lanes = c.lanes;
+                            for (p, &r) in c.rows.iter().enumerate() {
+                                c.ir[db + r] = ((lanes[p] as u32) % bx) as i64;
+                            }
+                        }),
+                        Special::ThreadIdY => Box::new(move |c: &mut OpCtx| {
+                            let db = d * c.stride;
+                            let bx = c.bx;
+                            let lanes = c.lanes;
+                            for (p, &r) in c.rows.iter().enumerate() {
+                                c.ir[db + r] = ((lanes[p] as u32) / bx) as i64;
+                            }
+                        }),
+                        Special::BlockIdX => uniform_exec!(|c: &OpCtx| c.bx_i),
+                        Special::BlockIdY => uniform_exec!(|c: &OpCtx| c.by_i),
+                        Special::BlockDimX => uniform_exec!(|c: &OpCtx| c.bx),
+                        Special::BlockDimY => uniform_exec!(|c: &OpCtx| c.by),
+                        Special::GridDimX => uniform_exec!(|c: &OpCtx| c.gx),
+                        Special::GridDimY => uniform_exec!(|c: &OpCtx| c.gy),
+                    },
+                )
+            }
+            Instr::LdG { dst, param, idx } => {
+                let (d, slot, i) = (dst as usize, param as usize, idx as usize);
+                (
+                    global_bounds_guard!(slot, i),
+                    Box::new(move |c: &mut OpCtx| {
+                        let (db, ib) = (d * c.stride, i * c.stride);
+                        for &r in c.rows {
+                            c.fr[db + r] = c.mem.load(slot, c.ir[ib + r] as usize);
+                        }
+                    }),
+                )
+            }
+            Instr::StG { param, idx, src } => {
+                let (slot, i, s) = (param as usize, idx as usize, src as usize);
+                (
+                    global_bounds_guard!(slot, i),
+                    Box::new(move |c: &mut OpCtx| {
+                        let (ib, sb) = (i * c.stride, s * c.stride);
+                        for &r in c.rows {
+                            let v = c.fr[sb + r];
+                            c.mem.store(slot, c.ir[ib + r] as usize, v);
+                        }
+                    }),
+                )
+            }
+            Instr::LdS { dst, idx } => {
+                let (d, i) = (dst as usize, idx as usize);
+                (
+                    shared_bounds_guard!(i),
+                    Box::new(move |c: &mut OpCtx| {
+                        let (db, ib) = (d * c.stride, i * c.stride);
+                        for &r in c.rows {
+                            c.fr[db + r] = c.shared[c.ir[ib + r] as usize];
+                        }
+                    }),
+                )
+            }
+            Instr::StS { idx, src } => {
+                let (i, s) = (idx as usize, src as usize);
+                (
+                    shared_bounds_guard!(i),
+                    Box::new(move |c: &mut OpCtx| {
+                        let (ib, sb) = (i * c.stride, s * c.stride);
+                        for &r in c.rows {
+                            c.shared[c.ir[ib + r] as usize] = c.fr[sb + r];
+                        }
+                    }),
+                )
+            }
+            Instr::LdParamF(..) | Instr::LdParamI(..) => {
+                unreachable!("scalar params resolved by pre-decode")
+            }
+            Instr::Bar | Instr::Bra(_) | Instr::BraIf(..) | Instr::BraIfZ(..) | Instr::Ret => {
+                unreachable!("control flow is lowered to block terminators")
+            }
+        },
+        VOp::MulAddF { dm, ma, mb, dd, aa, ab } => {
+            let (dm, ma, mb) = (dm as usize, ma as usize, mb as usize);
+            let (dd, aa, ab) = (dd as usize, aa as usize, ab as usize);
+            (
+                None,
+                Box::new(move |c: &mut OpCtx| {
+                    let s = c.stride;
+                    let (dmb, mab, mbb) = (dm * s, ma * s, mb * s);
+                    let (ddb, aab, abb) = (dd * s, aa * s, ab * s);
+                    for &r in c.rows {
+                        c.fr[dmb + r] = c.fr[mab + r] * c.fr[mbb + r];
+                        c.fr[ddb + r] = c.fr[aab + r] + c.fr[abb + r];
+                    }
+                }),
+            )
+        }
+        VOp::MulAddI { dm, ma, mb, dd, aa, ab } => {
+            let (dm, ma, mb) = (dm as usize, ma as usize, mb as usize);
+            let (dd, aa, ab) = (dd as usize, aa as usize, ab as usize);
+            (
+                None,
+                Box::new(move |c: &mut OpCtx| {
+                    let s = c.stride;
+                    let (dmb, mab, mbb) = (dm * s, ma * s, mb * s);
+                    let (ddb, aab, abb) = (dd * s, aa * s, ab * s);
+                    for &r in c.rows {
+                        c.ir[dmb + r] = c.ir[mab + r].wrapping_mul(c.ir[mbb + r]);
+                        c.ir[ddb + r] = c.ir[aab + r].wrapping_add(c.ir[abb + r]);
+                    }
+                }),
+            )
+        }
+        VOp::CvtMulAddF { df, si, dm, ma, mb, dd, aa, ab } => {
+            let (df, si) = (df as usize, si as usize);
+            let (dm, ma, mb) = (dm as usize, ma as usize, mb as usize);
+            let (dd, aa, ab) = (dd as usize, aa as usize, ab as usize);
+            (
+                None,
+                Box::new(move |c: &mut OpCtx| {
+                    let s = c.stride;
+                    let (dfb, sib) = (df * s, si * s);
+                    let (dmb, mab, mbb) = (dm * s, ma * s, mb * s);
+                    let (ddb, aab, abb) = (dd * s, aa * s, ab * s);
+                    for &r in c.rows {
+                        c.fr[dfb + r] = c.ir[sib + r] as f32;
+                        c.fr[dmb + r] = c.fr[mab + r] * c.fr[mbb + r];
+                        c.fr[ddb + r] = c.fr[aab + r] + c.fr[abb + r];
+                    }
+                }),
+            )
+        }
+        VOp::GlobalIdX { tid, bid, bdim, mul, add } => {
+            let (tb, bb, db) = (tid as usize, bid as usize, bdim as usize);
+            let (md, ma, mb) = (mul.0 as usize, mul.1 as usize, mul.2 as usize);
+            let (ad, aa, ab) = (add.0 as usize, add.1 as usize, add.2 as usize);
+            (
+                None,
+                Box::new(move |c: &mut OpCtx| {
+                    let s = c.stride;
+                    let (tbb, bbb, dbb) = (tb * s, bb * s, db * s);
+                    let (mdb, mab, mbb) = (md * s, ma * s, mb * s);
+                    let (adb, aab, abb) = (ad * s, aa * s, ab * s);
+                    let bx = c.bx;
+                    let bidv = c.bx_i as i64;
+                    let bdimv = c.bx as i64;
+                    let lanes = c.lanes;
+                    for (p, &r) in c.rows.iter().enumerate() {
+                        c.ir[tbb + r] = ((lanes[p] as u32) % bx) as i64;
+                        c.ir[bbb + r] = bidv;
+                        c.ir[dbb + r] = bdimv;
+                        c.ir[mdb + r] = c.ir[mab + r].wrapping_mul(c.ir[mbb + r]);
+                        c.ir[adb + r] = c.ir[aab + r].wrapping_add(c.ir[abb + r]);
+                    }
+                }),
+            )
+        }
+        VOp::RmwG { slot, idx, ld, op: fop, sa, sb, st } => {
+            let (slot, i) = (slot as usize, idx as usize);
+            let (ldr, sar, sbr, str_) = (ld as usize, sa as usize, sb as usize, st as usize);
+            (
+                // Bounds only: the entry guard already proved the budget
+                // for the whole body, so the vector tier's interleaved
+                // per-sub-instruction checks could never fire here.
+                global_bounds_guard!(slot, i),
+                Box::new(move |c: &mut OpCtx| {
+                    let s = c.stride;
+                    let (ib, ldb) = (i * s, ldr * s);
+                    let (sab, sbb, stb) = (sar * s, sbr * s, str_ * s);
+                    // Per-lane load → combine → store, in lane order —
+                    // the exact side-effect order of the replayed
+                    // sequence on the vector and scalar tiers.
+                    for &r in c.rows {
+                        let iu = c.ir[ib + r] as usize;
+                        c.fr[ldb + r] = c.mem.load(slot, iu);
+                        c.fr[stb + r] = binf_apply(fop, c.fr[sab + r], c.fr[sbb + r]);
+                        c.mem.store(slot, iu, c.fr[stb + r]);
+                    }
+                }),
+            )
+        }
+    };
+
+    COp { guard, exec, weight, fused }
+}

@@ -23,6 +23,7 @@
 
 use std::sync::Arc;
 
+use crate::emulator::compile::JitState;
 use crate::emulator::interp::ScalarArg;
 use crate::emulator::isa::{Instr, Kernel, ParamKind};
 use crate::emulator::lower::{lower, LoweredKernel};
@@ -50,6 +51,11 @@ pub struct DecodedKernel {
     /// the vector execution tier's program, built once here and cached
     /// with the decoded form.
     pub lowered: Arc<LoweredKernel>,
+    /// Compiled-tier state: per-block hotness counters and lazily
+    /// JIT-compiled block bodies. Shared via `Arc` so clones of the
+    /// decoded kernel (and the `Specialized` cache that holds them)
+    /// keep riding the same warm compiled blocks.
+    pub(crate) jit: Arc<JitState>,
 }
 
 /// Resolve `kernel` against the launch's scalar arguments. The kernel must
@@ -124,6 +130,7 @@ pub fn decode(kernel: &Kernel, scalars: &[ScalarArg]) -> Result<DecodedKernel> {
         .collect();
 
     let lowered = Arc::new(lower(&code));
+    let jit = Arc::new(JitState::new(lowered.blocks.len()));
     Ok(DecodedKernel {
         name: kernel.name.clone(),
         fregs: kernel.fregs,
@@ -132,6 +139,7 @@ pub fn decode(kernel: &Kernel, scalars: &[ScalarArg]) -> Result<DecodedKernel> {
         nbufs,
         code,
         lowered,
+        jit,
     })
 }
 

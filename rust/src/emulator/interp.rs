@@ -59,7 +59,8 @@ use crate::driver::launch::LaunchReport;
 use crate::emulator::decode::{decode, DecodedKernel};
 use crate::emulator::isa::{CmpOp, FOp, IOp, Instr, Kernel, Special, UnFOp};
 use crate::emulator::sched::{
-    default_exec, default_workers, ArriveGuard, ExecTier, Latch, WorkerPool,
+    default_exec_checked, default_tier_up_checked, default_workers, ArriveGuard, ExecTier, Latch,
+    WorkerPool,
 };
 use crate::error::{Error, Result};
 
@@ -106,7 +107,7 @@ pub fn execute(launch: Launch<'_>) -> Result<()> {
 /// single-block grid) runs the sequential schedule; larger widths
 /// dispatch blocks across the global worker pool.
 pub fn execute_with(launch: Launch<'_>, workers: usize) -> Result<LaunchReport> {
-    execute_with_tier(launch, workers, default_exec())
+    execute_with_tier(launch, workers, default_exec_checked()?)
 }
 
 /// Execute a launch with an explicit schedule width and execution tier
@@ -139,7 +140,7 @@ pub fn execute_decoded(
     limits: &Limits,
     workers: usize,
 ) -> Result<LaunchReport> {
-    execute_decoded_tier(kernel, grid, block, buffers, limits, workers, default_exec())
+    execute_decoded_tier(kernel, grid, block, buffers, limits, workers, default_exec_checked()?)
 }
 
 /// Execute a pre-decoded kernel on an explicit worker pool — the
@@ -157,7 +158,16 @@ pub fn execute_decoded_on(
     workers: usize,
     pool: &'static WorkerPool,
 ) -> Result<LaunchReport> {
-    execute_decoded_pool_tier(kernel, grid, block, buffers, limits, workers, default_exec(), pool)
+    execute_decoded_pool_tier(
+        kernel,
+        grid,
+        block,
+        buffers,
+        limits,
+        workers,
+        default_exec_checked()?,
+        pool,
+    )
 }
 
 /// Execute a pre-decoded kernel on an explicit execution tier (the
@@ -203,11 +213,14 @@ fn execute_decoded_pool_tier(
             buffers.len()
         )));
     }
+    // Resolve the tier-up threshold once per launch — also where a
+    // malformed `HLGPU_TIER_UP` surfaces as a typed error at first use.
+    let tier_up = if tier == ExecTier::Compiled { default_tier_up_checked()? } else { 0 };
     let nblocks = grid.0 as u64 * grid.1 as u64;
     if workers > 1 && nblocks > 1 {
-        run_parallel(kernel, grid, block, buffers, limits, workers, tier, pool)
+        run_parallel(kernel, grid, block, buffers, limits, workers, tier, tier_up, pool)
     } else {
-        run_sequential(kernel, grid, block, buffers, limits, tier)
+        run_sequential(kernel, grid, block, buffers, limits, tier, tier_up)
     }
 }
 
@@ -288,6 +301,14 @@ pub(crate) struct BlockStats {
     pub lane_ops: u64,
     /// Σ block width over vector dispatches (lane capacity).
     pub lane_slots: u64,
+    /// Instructions retired inside compiled regions (closure-JIT tier).
+    pub compiled_instrs: u64,
+    /// Compiled-block executions (closure chain entered).
+    pub compiled_blocks: u64,
+    /// Blocks compiled during this run (tier-up events).
+    pub tier_ups: u64,
+    /// Guard failures that fell back to the vector op path.
+    pub deopts: u64,
 }
 
 impl BlockStats {
@@ -297,6 +318,10 @@ impl BlockStats {
         self.dispatches += o.dispatches;
         self.lane_ops += o.lane_ops;
         self.lane_slots += o.lane_slots;
+        self.compiled_instrs += o.compiled_instrs;
+        self.compiled_blocks += o.compiled_blocks;
+        self.tier_ups += o.tier_ups;
+        self.deopts += o.deopts;
     }
 }
 
@@ -350,6 +375,7 @@ pub(crate) fn trap_oob_shared(kind: &str, i: i64, len: usize) -> String {
 /// observationally identical for race-free kernels, so traps surface
 /// with identical coordinates and reasons under every (schedule, tier)
 /// combination.
+#[allow(clippy::too_many_arguments)]
 fn run_block_tier<M: GlobalMem>(
     k: &DecodedKernel,
     tier: ExecTier,
@@ -358,12 +384,22 @@ fn run_block_tier<M: GlobalMem>(
     block_id: (u32, u32),
     mem: &mut M,
     limits: &Limits,
+    tier_up: u64,
 ) -> Result<BlockStats> {
     match tier {
         ExecTier::Scalar => run_block(k, grid, block, block_id, mem, limits),
         ExecTier::Vector => {
-            crate::emulator::vector::run_block_vector(k, grid, block, block_id, mem, limits)
+            crate::emulator::vector::run_block_tiered(k, grid, block, block_id, mem, limits, None)
         }
+        ExecTier::Compiled => crate::emulator::vector::run_block_tiered(
+            k,
+            grid,
+            block,
+            block_id,
+            mem,
+            limits,
+            Some((&k.jit, tier_up)),
+        ),
     }
 }
 
@@ -616,6 +652,7 @@ fn run_sequential(
     buffers: Vec<&mut [f32]>,
     limits: &Limits,
     tier: ExecTier,
+    tier_up: u64,
 ) -> Result<LaunchReport> {
     let t0 = Instant::now();
     let (gx, gy) = grid;
@@ -623,7 +660,8 @@ fn run_sequential(
     let mut agg = BlockStats::default();
     for by_i in 0..gy {
         for bx_i in 0..gx {
-            let st = run_block_tier(k, tier, grid, block, (bx_i, by_i), &mut mem, limits)?;
+            let st =
+                run_block_tier(k, tier, grid, block, (bx_i, by_i), &mut mem, limits, tier_up)?;
             agg.merge(&st);
         }
     }
@@ -638,6 +676,10 @@ fn run_sequential(
         dispatches: agg.dispatches,
         lane_ops: agg.lane_ops,
         lane_slots: agg.lane_slots,
+        compiled_instrs: agg.compiled_instrs,
+        compiled_blocks: agg.compiled_blocks,
+        tier_ups: agg.tier_ups,
+        deopts: agg.deopts,
     })
 }
 
@@ -649,6 +691,7 @@ struct ParShared {
     block: (u32, u32),
     limits: Limits,
     tier: ExecTier,
+    tier_up: u64,
     /// Next unclaimed linear block index. Claimed strictly in order, so
     /// when a trap cancels the launch every block below the trapping one
     /// has already been claimed — guaranteeing the minimum-index trap is
@@ -662,6 +705,10 @@ struct ParShared {
     dispatches: AtomicU64,
     lane_ops: AtomicU64,
     lane_slots: AtomicU64,
+    compiled_instrs: AtomicU64,
+    compiled_blocks: AtomicU64,
+    tier_ups: AtomicU64,
+    deopts: AtomicU64,
     latch: Latch,
 }
 
@@ -690,6 +737,7 @@ impl ParShared {
                 block_id,
                 &mut mem,
                 &self.limits,
+                self.tier_up,
             ) {
                 Ok(st) => agg.merge(&st),
                 Err(e) => {
@@ -703,6 +751,12 @@ impl ParShared {
         self.dispatches.fetch_add(agg.dispatches, Ordering::Relaxed);
         self.lane_ops.fetch_add(agg.lane_ops, Ordering::Relaxed);
         self.lane_slots.fetch_add(agg.lane_slots, Ordering::Relaxed);
+        self.compiled_instrs
+            .fetch_add(agg.compiled_instrs, Ordering::Relaxed);
+        self.compiled_blocks
+            .fetch_add(agg.compiled_blocks, Ordering::Relaxed);
+        self.tier_ups.fetch_add(agg.tier_ups, Ordering::Relaxed);
+        self.deopts.fetch_add(agg.deopts, Ordering::Relaxed);
         self.busy_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
@@ -728,6 +782,7 @@ fn run_parallel(
     limits: &Limits,
     workers: usize,
     tier: ExecTier,
+    tier_up: u64,
     pool: &'static WorkerPool,
 ) -> Result<LaunchReport> {
     let nblocks = grid.0 as u64 * grid.1 as u64;
@@ -746,6 +801,7 @@ fn run_parallel(
         block,
         limits: *limits,
         tier,
+        tier_up,
         next: AtomicU64::new(0),
         cancel: AtomicBool::new(false),
         traps: Mutex::new(Vec::new()),
@@ -755,6 +811,10 @@ fn run_parallel(
         dispatches: AtomicU64::new(0),
         lane_ops: AtomicU64::new(0),
         lane_slots: AtomicU64::new(0),
+        compiled_instrs: AtomicU64::new(0),
+        compiled_blocks: AtomicU64::new(0),
+        tier_ups: AtomicU64::new(0),
+        deopts: AtomicU64::new(0),
         latch: Latch::new(njobs),
     });
 
@@ -795,6 +855,10 @@ fn run_parallel(
         dispatches: shared.dispatches.load(Ordering::Relaxed),
         lane_ops: shared.lane_ops.load(Ordering::Relaxed),
         lane_slots: shared.lane_slots.load(Ordering::Relaxed),
+        compiled_instrs: shared.compiled_instrs.load(Ordering::Relaxed),
+        compiled_blocks: shared.compiled_blocks.load(Ordering::Relaxed),
+        tier_ups: shared.tier_ups.load(Ordering::Relaxed),
+        deopts: shared.deopts.load(Ordering::Relaxed),
     })
 }
 

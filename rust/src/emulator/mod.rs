@@ -13,14 +13,18 @@
 //! selects the tier: `vector` (the default, [`vector`]) executes one
 //! operation across all threads of the block at a time over
 //! structure-of-arrays register files; `scalar` ([`interp`]) is the
-//! one-instruction-per-thread reference semantics. `HLGPU_WORKERS=1`
-//! (or a single-block grid) selects the sequential block schedule; for
-//! race-free kernels every (schedule, tier) combination produces
-//! identical results and identical trap coordinates. See
-//! `docs/emulator.md`.
+//! one-instruction-per-thread reference semantics; `compiled`
+//! ([`compile`]) JIT-compiles hot basic blocks into straight-line
+//! closure chains with profile-driven tier-up (`HLGPU_TIER_UP`) and
+//! bitwise-faithful deopt back to the vector tier on any guard
+//! failure. `HLGPU_WORKERS=1` (or a single-block grid) selects the
+//! sequential block schedule; for race-free kernels every (schedule,
+//! tier) combination produces identical results and identical trap
+//! coordinates. See `docs/emulator.md`.
 
 pub mod backend_impl;
 pub mod builder;
+pub(crate) mod compile;
 pub mod decode;
 pub mod interp;
 pub mod isa;
@@ -39,6 +43,7 @@ pub use interp::{
 pub use isa::{Instr, Kernel, ParamKind};
 pub use lower::LoweredKernel;
 pub use sched::{
-    default_exec, default_workers, device_pool, set_default_exec, set_default_workers, ExecTier,
-    WorkerPool,
+    default_exec, default_exec_checked, default_tier_up, default_tier_up_checked, default_workers,
+    device_pool, set_default_exec, set_default_tier_up, set_default_workers, ExecTier, WorkerPool,
+    DEFAULT_TIER_UP,
 };

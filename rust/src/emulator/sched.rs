@@ -17,19 +17,28 @@
 //!
 //! The same precedent applies to the **execution tier** inside a block:
 //! * `HLGPU_EXEC` — `scalar` (the reference interpreter, one dispatch
-//!   per instruction per thread) or `vector` (the warp-vectorized tier
-//!   over the lowered basic-block form; the default);
-//! * [`set_default_exec`] — process-wide programmatic override, used by
-//!   benches to A/B the tiers. Both tiers are observationally identical
-//!   for race-free kernels (see `docs/emulator.md`).
+//!   per instruction per thread), `vector` (the warp-vectorized tier
+//!   over the lowered basic-block form; the default) or `compiled`
+//!   (the closure-JIT tier: hot blocks compile to straight-line closure
+//!   chains and deopt to the vector tier on any guard failure);
+//! * `HLGPU_TIER_UP` — how many times a basic block must execute before
+//!   the compiled tier JITs it (`0` = always-compile);
+//! * [`set_default_exec`] / [`set_default_tier_up`] — process-wide
+//!   programmatic overrides, used by benches to A/B the tiers. All
+//!   tiers are observationally identical for race-free kernels (see
+//!   `docs/emulator.md`). Unknown `HLGPU_EXEC` / `HLGPU_TIER_UP` values
+//!   are a typed [`Error::BadArgument`] at the first launch that reads
+//!   them, never a silent fallback.
 //!
 //! The pool itself is provisioned with `max(width, 8)` threads so
 //! explicit widths up to 8 (the determinism property tests exercise 1, 2
 //! and 8) get real concurrency even when the default width is smaller.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
 
 /// A unit of work: one scheduler job (a slice of a launch's blocks).
 pub(crate) type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -234,6 +243,13 @@ pub enum ExecTier {
     /// fused superinstructions. Observationally identical to `Scalar`
     /// for race-free kernels.
     Vector,
+    /// Closure-JIT: basic blocks that execute more than the tier-up
+    /// threshold compile into straight-line chains of pre-resolved
+    /// closures (no per-op dispatch); any guard failure (bounds, budget,
+    /// division by zero) deopts back to the vector tier at the exact
+    /// instruction, so traps and results stay bitwise identical to
+    /// `Scalar`.
+    Compiled,
 }
 
 impl ExecTier {
@@ -242,13 +258,28 @@ impl ExecTier {
         match v.trim().to_ascii_lowercase().as_str() {
             "scalar" | "interp" | "reference" => Some(ExecTier::Scalar),
             "vector" | "warp" | "simd" => Some(ExecTier::Vector),
+            "compiled" | "jit" | "regions" => Some(ExecTier::Compiled),
             _ => None,
         }
     }
 }
 
-/// Programmatic tier override (0 = unset, 1 = scalar, 2 = vector). Takes
-/// precedence over the environment, like [`set_default_workers`].
+/// Parse an `HLGPU_EXEC` value into a tier, or a typed rejection that
+/// names the bad value and the accepted spellings.
+fn parse_exec_checked(v: &str) -> Result<ExecTier> {
+    ExecTier::parse(v).ok_or_else(|| Error::BadArgument {
+        kernel: "HLGPU_EXEC".into(),
+        index: 0,
+        reason: format!(
+            "unknown execution tier `{}` (expected `scalar`, `vector` or `compiled`)",
+            v.trim()
+        ),
+    })
+}
+
+/// Programmatic tier override (0 = unset, 1 = scalar, 2 = vector,
+/// 3 = compiled). Takes precedence over the environment, like
+/// [`set_default_workers`].
 static EXEC_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Override the execution tier for subsequent launches (process-wide).
@@ -259,6 +290,7 @@ pub fn set_default_exec(tier: Option<ExecTier>) {
             None => 0,
             Some(ExecTier::Scalar) => 1,
             Some(ExecTier::Vector) => 2,
+            Some(ExecTier::Compiled) => 3,
         },
         Ordering::Relaxed,
     );
@@ -266,19 +298,81 @@ pub fn set_default_exec(tier: Option<ExecTier>) {
 
 /// The tier used by launches that do not specify one: the
 /// [`set_default_exec`] override, else `HLGPU_EXEC`, else the vector
-/// tier (the fast path; `scalar` selects the reference interpreter).
-pub fn default_exec() -> ExecTier {
+/// tier (the fast path; `scalar` selects the reference interpreter and
+/// `compiled` the closure-JIT). An unrecognized `HLGPU_EXEC` value is a
+/// typed [`Error::BadArgument`]; launch entry points call this so the
+/// rejection surfaces at first use instead of silently running the
+/// default tier.
+pub fn default_exec_checked() -> Result<ExecTier> {
     match EXEC_OVERRIDE.load(Ordering::Relaxed) {
-        1 => return ExecTier::Scalar,
-        2 => return ExecTier::Vector,
+        1 => return Ok(ExecTier::Scalar),
+        2 => return Ok(ExecTier::Vector),
+        3 => return Ok(ExecTier::Compiled),
         _ => {}
     }
     if let Ok(v) = std::env::var("HLGPU_EXEC") {
-        if let Some(t) = ExecTier::parse(&v) {
-            return t;
-        }
+        return parse_exec_checked(&v);
     }
-    ExecTier::Vector
+    Ok(ExecTier::Vector)
+}
+
+/// Infallible flavor of [`default_exec_checked`] for display paths
+/// (benches, stats lines) that must not error: an invalid `HLGPU_EXEC`
+/// reads as the vector default here but still fails the actual launch.
+pub fn default_exec() -> ExecTier {
+    default_exec_checked().unwrap_or(ExecTier::Vector)
+}
+
+// ---- compiled-tier tier-up threshold -------------------------------------
+
+/// Blocks must execute this many times before the compiled tier JITs
+/// them, absent an `HLGPU_TIER_UP` / [`set_default_tier_up`] request.
+/// Small enough that steady-state loops tier up within the first launch,
+/// large enough that one-shot cold blocks never pay compilation.
+pub const DEFAULT_TIER_UP: u64 = 8;
+
+/// Programmatic tier-up override. `u64::MAX` = unset (a threshold of 0
+/// is meaningful: always-compile).
+static TIER_UP_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Override the compiled tier's tier-up threshold for subsequent
+/// launches (process-wide). Pass `None` to clear, `Some(0)` to force
+/// compilation on first execution.
+pub fn set_default_tier_up(threshold: Option<u64>) {
+    TIER_UP_OVERRIDE.store(threshold.unwrap_or(u64::MAX), Ordering::Relaxed);
+}
+
+/// Parse an `HLGPU_TIER_UP` value, or a typed rejection naming the bad
+/// value.
+fn parse_tier_up_checked(v: &str) -> Result<u64> {
+    v.trim().parse::<u64>().map_err(|_| Error::BadArgument {
+        kernel: "HLGPU_TIER_UP".into(),
+        index: 0,
+        reason: format!(
+            "invalid tier-up threshold `{}` (expected a non-negative integer; 0 = always-compile)",
+            v.trim()
+        ),
+    })
+}
+
+/// The tier-up threshold used by compiled-tier launches: the
+/// [`set_default_tier_up`] override, else `HLGPU_TIER_UP`, else
+/// [`DEFAULT_TIER_UP`]. Like [`default_exec_checked`], a malformed
+/// environment value is a typed [`Error::BadArgument`] at first use.
+pub fn default_tier_up_checked() -> Result<u64> {
+    let o = TIER_UP_OVERRIDE.load(Ordering::Relaxed);
+    if o != u64::MAX {
+        return Ok(o);
+    }
+    if let Ok(v) = std::env::var("HLGPU_TIER_UP") {
+        return parse_tier_up_checked(&v);
+    }
+    Ok(DEFAULT_TIER_UP)
+}
+
+/// Infallible flavor of [`default_tier_up_checked`] for display paths.
+pub fn default_tier_up() -> u64 {
+    default_tier_up_checked().unwrap_or(DEFAULT_TIER_UP)
 }
 
 /// Serializes tests that flip the process-wide tier override (flipping
@@ -377,7 +471,50 @@ mod tests {
         assert_eq!(ExecTier::parse("SCALAR"), Some(ExecTier::Scalar));
         assert_eq!(ExecTier::parse("vector"), Some(ExecTier::Vector));
         assert_eq!(ExecTier::parse("warp"), Some(ExecTier::Vector));
+        assert_eq!(ExecTier::parse("compiled"), Some(ExecTier::Compiled));
+        assert_eq!(ExecTier::parse("JIT"), Some(ExecTier::Compiled));
         assert_eq!(ExecTier::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn unknown_exec_tier_is_typed_and_names_the_value() {
+        let e = parse_exec_checked("turbo").unwrap_err();
+        match &e {
+            Error::BadArgument { kernel, reason, .. } => {
+                assert_eq!(kernel, "HLGPU_EXEC");
+                assert!(reason.contains("`turbo`"), "reason must name the bad value: {reason}");
+                assert!(reason.contains("compiled"), "reason lists accepted tiers: {reason}");
+            }
+            other => panic!("expected BadArgument, got {other:?}"),
+        }
+        // The Display form (what users see) also names the knob and value.
+        let msg = e.to_string();
+        assert!(msg.contains("HLGPU_EXEC") && msg.contains("turbo"), "{msg}");
+    }
+
+    #[test]
+    fn bad_tier_up_threshold_is_typed_and_names_the_value() {
+        assert_eq!(parse_tier_up_checked("0").unwrap(), 0);
+        assert_eq!(parse_tier_up_checked(" 12 ").unwrap(), 12);
+        let e = parse_tier_up_checked("-3").unwrap_err();
+        match &e {
+            Error::BadArgument { kernel, reason, .. } => {
+                assert_eq!(kernel, "HLGPU_TIER_UP");
+                assert!(reason.contains("`-3`"), "reason must name the bad value: {reason}");
+            }
+            other => panic!("expected BadArgument, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tier_up_override_beats_env_and_default() {
+        let _g = exec_override_test_lock();
+        set_default_tier_up(Some(0));
+        assert_eq!(default_tier_up_checked().unwrap(), 0);
+        set_default_tier_up(Some(100));
+        assert_eq!(default_tier_up_checked().unwrap(), 100);
+        set_default_tier_up(None);
+        let _ = default_tier_up(); // env- or default-driven either way
     }
 
     #[test]
@@ -390,6 +527,8 @@ mod tests {
         assert_eq!(default_exec(), ExecTier::Scalar);
         set_default_exec(Some(ExecTier::Vector));
         assert_eq!(default_exec(), ExecTier::Vector);
+        set_default_exec(Some(ExecTier::Compiled));
+        assert_eq!(default_exec(), ExecTier::Compiled);
         set_default_exec(None);
         let _ = default_exec(); // env- or default-driven either way
     }

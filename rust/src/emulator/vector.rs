@@ -45,6 +45,7 @@
 //! * barrier divergence reports the lowest-indexed waiting thread, as
 //!   the scalar tier does.
 
+use crate::emulator::compile::{CompiledRun, JitState};
 use crate::emulator::decode::DecodedKernel;
 use crate::emulator::interp::{
     binf_apply, cmpf, cmpi, trap_budget, trap_oob_global, trap_oob_shared, unf_apply,
@@ -134,14 +135,22 @@ fn charge(
     }
 }
 
-/// Interpret one thread block on the vector tier.
-pub(crate) fn run_block_vector<M: GlobalMem>(
+/// Interpret one thread block on the vector tier, or — when `jit` is
+/// `Some((state, tier_up))` — on the **compiled tier**: blocks whose
+/// hotness crossed the threshold execute their pre-compiled closure
+/// chain ([`crate::emulator::compile`]) and fall back (deopt) onto this
+/// loop's op path at the exact op index on any guard failure. The
+/// scheduler (reconvergence, barriers, trap bookkeeping) and every
+/// terminator are shared between the two tiers, so trap parity with the
+/// vector tier is by construction.
+pub(crate) fn run_block_tiered<M: GlobalMem>(
     k: &DecodedKernel,
     grid: (u32, u32),
     block: (u32, u32),
     block_id: (u32, u32),
     mem: &mut M,
     limits: &Limits,
+    jit: Option<(&JitState, u64)>,
 ) -> Result<BlockStats> {
     let lowered: &LoweredKernel = &k.lowered;
     let (gx, gy) = grid;
@@ -223,7 +232,46 @@ pub(crate) fn run_block_vector<M: GlobalMem>(
 
         let blk = &lowered.blocks[bid as usize];
 
-        for op in &blk.ops {
+        // Compiled tier: count this block execution toward tier-up and,
+        // once compiled, run the closure chain. `Done` skips the op loop
+        // entirely; `Deopt(i)` resumes the vector op path at op `i` with
+        // exactly the register/step state the vector tier would have had
+        // there (compiled ops are all-or-nothing), so the replay reports
+        // the precise trap.
+        let mut start_op = 0usize;
+        let mut body_compiled = false;
+        if let Some((state, tier_up)) = jit {
+            if let Some(cb) =
+                state.compiled(bid as usize, blk, k.fregs, k.iregs, tier_up, &mut stats.tier_ups)
+            {
+                match cb.run(
+                    &mut fr,
+                    &mut ir,
+                    nl,
+                    &mask,
+                    &mut shared,
+                    &mut *mem,
+                    &lens,
+                    &mut steps,
+                    limit,
+                    grid,
+                    block,
+                    block_id,
+                    &mut stats,
+                ) {
+                    CompiledRun::Done => {
+                        start_op = blk.ops.len();
+                        body_compiled = true;
+                    }
+                    CompiledRun::Deopt(i) => {
+                        start_op = i;
+                        stats.deopts += 1;
+                    }
+                }
+            }
+        }
+
+        for op in &blk.ops[start_op..] {
             let w = op.weight();
             // RmwG is the only superinstruction with an internal trap
             // (the bounds check), so its budget checks must interleave
@@ -591,6 +639,12 @@ pub(crate) fn run_block_vector<M: GlobalMem>(
             stats.instrs += w * mask.len() as u64;
             if matches!(blk.term, Term::LoopBack { .. }) {
                 stats.fused_instrs += w * mask.len() as u64;
+            }
+            if body_compiled {
+                // The terminator retires as part of the compiled region
+                // (its registers were produced by the chain); instrs
+                // retired under compiled execution include it.
+                stats.compiled_instrs += w * mask.len() as u64;
             }
             stats.lane_ops += mask.len() as u64;
             stats.lane_slots += nl as u64;

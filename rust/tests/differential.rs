@@ -14,19 +14,56 @@
 //!    every trap class (OOB access, barrier divergence, step-budget
 //!    exhaustion).
 //! 3. **Tier equivalence**: the warp-vectorized tier (basic-block
-//!    lowering + superinstruction fusion) is observationally identical
-//!    to the scalar reference tier — bitwise-equal results and
-//!    identical trap coordinates/reasons across every (tier, schedule
-//!    width) combination.
+//!    lowering + superinstruction fusion) and the compiled tier
+//!    (closure-JIT block bodies with tier-up and deopt) are
+//!    observationally identical to the scalar reference tier —
+//!    bitwise-equal results and identical trap coordinates/reasons
+//!    across every (tier, schedule width, tier-up threshold)
+//!    combination, and a deopt leaves exactly the state the vector
+//!    tier would have produced, bitwise.
 
 use hlgpu::emulator::{
-    execute_with, execute_with_tier, ExecTier, KernelBuilder, Launch, Limits, ScalarArg,
+    execute_with, execute_with_tier, set_default_tier_up, ExecTier, KernelBuilder, Launch, Limits,
+    ScalarArg,
 };
+use std::sync::{Mutex, MutexGuard};
 use hlgpu::error::Error;
 use hlgpu::tracetransform::{
     orientations, random_phantom, shepp_logan, CpuNative, DeviceChoice, GpuAuto, GpuDynamic,
     GpuManual, TraceImpl, FEATURE_COUNT,
 };
+
+/// The tier-up override is process-global, so every compiled-tier run
+/// in this binary scopes it through this lock (restored on drop, even
+/// across a failing assertion).
+static TIER_UP_LOCK: Mutex<()> = Mutex::new(());
+
+struct TierUpGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for TierUpGuard {
+    fn drop(&mut self) {
+        set_default_tier_up(None);
+    }
+}
+
+/// Pin the tier-up threshold for the duration of the returned guard:
+/// `0` = compile every block on first entry, `n` = tier up mid-run
+/// after `n` vector executions.
+fn force_tier_up(threshold: u64) -> TierUpGuard {
+    let g = TIER_UP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    set_default_tier_up(Some(threshold));
+    TierUpGuard(g)
+}
+
+/// The tier flavors every cross-tier test runs: the scalar reference,
+/// the vector tier, the compiled tier with every block force-compiled
+/// on first entry, and the compiled tier tiering up mid-run.
+const TIER_FLAVORS: [(ExecTier, Option<u64>); 4] = [
+    (ExecTier::Scalar, None),
+    (ExecTier::Vector, None),
+    (ExecTier::Compiled, Some(0)),
+    (ExecTier::Compiled, Some(2)),
+];
 
 fn assert_close(name: &str, got: &[f32], want: &[f32], rel: f32) {
     assert_eq!(got.len(), want.len(), "{name}: length");
@@ -214,16 +251,19 @@ fn step_budget_trap_identical_under_parallel_schedule() {
 
 // ---------------------------------------------------------------- part 3 --
 
-/// Run the same launch under both tiers and return both errors.
-fn trap_under_both_tiers(
+/// Run the same launch under every tier flavor (scalar, vector,
+/// force-compiled, mid-run tier-up), assert every trap is identical to
+/// the scalar reference's, and return that trap for field assertions.
+fn trap_under_all_tiers(
     k: &hlgpu::emulator::Kernel,
     grid: (u32, u32),
     block: (u32, u32),
     buf_len: usize,
     nbufs: usize,
     limits: Limits,
-) -> (Error, Error) {
-    let mut run = |tier: ExecTier| -> Error {
+) -> Error {
+    let mut run = |tier: ExecTier, threshold: Option<u64>| -> Error {
+        let _g = threshold.map(force_tier_up);
         let mut bufs: Vec<Vec<f32>> = (0..nbufs).map(|_| vec![1.0f32; buf_len]).collect();
         let views: Vec<&mut [f32]> = bufs.iter_mut().map(|v| v.as_mut_slice()).collect();
         execute_with_tier(
@@ -233,19 +273,23 @@ fn trap_under_both_tiers(
         )
         .unwrap_err()
     };
-    (run(ExecTier::Scalar), run(ExecTier::Vector))
+    let scalar = run(ExecTier::Scalar, None);
+    for (tier, threshold) in TIER_FLAVORS.into_iter().skip(1) {
+        let got = run(tier, threshold);
+        assert_same_trap(&scalar, &got);
+    }
+    scalar
 }
 
 #[test]
 fn oob_trap_identical_across_tiers() {
     let k = unguarded_vadd();
     // Same geometry as the schedule test: the first OOB thread the
-    // scalar tier meets is block 2, thread 8 — the vector tier must
-    // report exactly that lane even though it discovers the trap in
-    // lockstep.
-    let (scalar, vector) =
-        trap_under_both_tiers(&k, (8, 1), (16, 1), 40, 3, Limits::default());
-    assert_same_trap(&scalar, &vector);
+    // scalar tier meets is block 2, thread 8 — the vector and compiled
+    // tiers must report exactly that lane even though they discover
+    // the trap in lockstep (the compiled tier via a bounds-guard deopt
+    // onto the vector op path).
+    let scalar = trap_under_all_tiers(&k, (8, 1), (16, 1), 40, 3, Limits::default());
     if let Error::VtxTrap { block, thread, reason, .. } = &scalar {
         assert_eq!(*block, (2, 0, 0));
         assert_eq!(*thread, (8, 0, 0));
@@ -260,7 +304,7 @@ fn step_budget_trap_identical_across_tiers() {
     b.bind(top);
     b.bra(top);
     let k = b.build().unwrap();
-    let (scalar, vector) = trap_under_both_tiers(
+    let scalar = trap_under_all_tiers(
         &k,
         (2, 1),
         (4, 1),
@@ -268,7 +312,6 @@ fn step_budget_trap_identical_across_tiers() {
         0,
         Limits { steps_per_thread: 333 },
     );
-    assert_same_trap(&scalar, &vector);
     if let Error::VtxTrap { block, thread, reason, .. } = &scalar {
         assert_eq!(*block, (0, 0, 0));
         assert_eq!(*thread, (0, 0, 0));
@@ -292,8 +335,7 @@ fn divergence_trap_reports_waiting_thread_coordinates_on_both_tiers() {
     b.bind(out);
     b.ret();
     let k = b.build().unwrap();
-    let (scalar, vector) = trap_under_both_tiers(&k, (1, 1), (4, 1), 0, 0, Limits::default());
-    assert_same_trap(&scalar, &vector);
+    let scalar = trap_under_all_tiers(&k, (1, 1), (4, 1), 0, 0, Limits::default());
     if let Error::VtxTrap { thread, reason, .. } = &scalar {
         assert_eq!(*thread, (1, 0, 0), "must report an actual waiting thread");
         assert!(reason.contains("barrier divergence: 3 threads waiting, 1 exited"), "{reason}");
@@ -313,8 +355,7 @@ fn division_by_zero_trap_identical_across_tiers() {
     b.stg(pout, tid, qf);
     b.ret();
     let k = b.build().unwrap();
-    let (scalar, vector) = trap_under_both_tiers(&k, (1, 1), (4, 1), 4, 1, Limits::default());
-    assert_same_trap(&scalar, &vector);
+    let scalar = trap_under_all_tiers(&k, (1, 1), (4, 1), 4, 1, Limits::default());
     if let Error::VtxTrap { thread, reason, .. } = &scalar {
         assert_eq!(*thread, (1, 0, 0));
         assert!(reason.contains("division by zero"), "{reason}");
@@ -341,7 +382,8 @@ fn int_min_division_wraps_identically_across_tiers() {
     b.ret();
     let k = b.build().unwrap();
     let mut outs = Vec::new();
-    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+    for (tier, threshold) in TIER_FLAVORS {
+        let _g = threshold.map(force_tier_up);
         let mut out = vec![0.0f32; 2];
         execute_with_tier(
             Launch {
@@ -358,7 +400,9 @@ fn int_min_division_wraps_identically_across_tiers() {
         .unwrap();
         outs.push(out);
     }
-    assert_eq!(outs[0], outs[1]);
+    for (i, o) in outs.iter().enumerate().skip(1) {
+        assert_eq!(&outs[0], o, "tier flavor {i}");
+    }
     assert_eq!(outs[0][0], i64::MIN as f32);
     assert_eq!(outs[0][1], 0.0);
 }
@@ -385,26 +429,25 @@ fn fused_rmw_budget_and_oob_traps_interleave_like_scalar() {
     // runs to completion).
 
     // Budget 3, empty buffer: the scalar tier passes the budget check
-    // before the LdG (2 < 3) and traps OOB — so must the vector tier,
+    // before the LdG (2 < 3) and traps OOB — so must the other tiers,
     // not "step budget exhausted" from a coarse whole-weight charge.
-    let (scalar, vector) =
-        trap_under_both_tiers(&scale, (1, 1), (1, 1), 0, 1, Limits { steps_per_thread: 3 });
-    assert_same_trap(&scalar, &vector);
+    let scalar =
+        trap_under_all_tiers(&scale, (1, 1), (1, 1), 0, 1, Limits { steps_per_thread: 3 });
     if let Error::VtxTrap { reason, .. } = &scalar {
         assert!(reason.contains("global load OOB"), "{reason}");
     }
 
     // Budget 4, in-bounds buffer: load and multiply retire (steps 3,
-    // 4), then the budget expires before the StG on both tiers.
-    let (scalar, vector) =
-        trap_under_both_tiers(&scale, (1, 1), (1, 1), 1, 1, Limits { steps_per_thread: 4 });
-    assert_same_trap(&scalar, &vector);
+    // 4), then the budget expires before the StG on every tier.
+    let scalar =
+        trap_under_all_tiers(&scale, (1, 1), (1, 1), 1, 1, Limits { steps_per_thread: 4 });
     if let Error::VtxTrap { reason, .. } = &scalar {
         assert!(reason.contains("step budget exhausted (4"), "{reason}");
     }
 
-    // Budget 6: exactly enough — both tiers complete.
-    let mut ok = |tier: ExecTier| {
+    // Budget 6: exactly enough — every tier completes.
+    let mut ok = |tier: ExecTier, threshold: Option<u64>| {
+        let _g = threshold.map(force_tier_up);
         let mut buf = vec![2.0f32];
         execute_with_tier(
             Launch {
@@ -421,8 +464,9 @@ fn fused_rmw_budget_and_oob_traps_interleave_like_scalar() {
         .unwrap();
         buf[0]
     };
-    assert_eq!(ok(ExecTier::Scalar), 6.0);
-    assert_eq!(ok(ExecTier::Vector), 6.0);
+    for (tier, threshold) in TIER_FLAVORS {
+        assert_eq!(ok(tier, threshold), 6.0, "{tier:?} threshold {threshold:?}");
+    }
 }
 
 #[test]
@@ -437,8 +481,9 @@ fn results_bitwise_identical_across_tiers_and_widths() {
 
     let sino = hlgpu::emulator::kernels::sinogram_all().unwrap();
     let mut sino_outs: Vec<Vec<f32>> = Vec::new();
-    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+    for (tier, threshold) in TIER_FLAVORS {
         for workers in [1usize, 2, 8] {
+            let _g = threshold.map(force_tier_up);
             let mut img_b = img.clone();
             let mut ang_b = thetas.clone();
             let mut out = vec![0.0f32; 4 * angles * size];
@@ -467,8 +512,9 @@ fn results_bitwise_identical_across_tiers_and_widths() {
     let red = hlgpu::emulator::kernels::tfunc_column("radon", block_h).unwrap();
     let rimg: Vec<f32> = (0..h * w).map(|i| ((i * 7) % 23) as f32 * 0.5).collect();
     let mut red_outs: Vec<Vec<f32>> = Vec::new();
-    for tier in [ExecTier::Scalar, ExecTier::Vector] {
+    for (tier, threshold) in TIER_FLAVORS {
         for workers in [1usize, 8] {
+            let _g = threshold.map(force_tier_up);
             let mut img_b = rimg.clone();
             let mut out = vec![0.0f32; w];
             execute_with_tier(
@@ -524,6 +570,118 @@ fn vector_tier_reports_fusion_and_lane_occupancy() {
     assert!(vector.fused_instrs > 0, "vadd's index prologue fuses");
     assert!(vector.dispatches < scalar.dispatches, "dispatch amortization");
     assert!(vector.lane_utilization() > 0.9, "straight-line kernel, near-full masks");
+}
+
+#[test]
+fn compiled_tier_reports_tier_ups_and_high_compiled_share() {
+    // The loop-heavy workload kernel under forced compilation: same
+    // retired-instruction count as the scalar reference, with almost
+    // every instruction executed by compiled block bodies (>0.9 is the
+    // steady-state bar), at least one tier-up, and no deopts on the
+    // clean path. A mid-run threshold must also tier up: early block
+    // entries run vectorized, later ones compiled.
+    let size = 16usize;
+    let angles = 8usize;
+    let img: Vec<f32> = shepp_logan(size).pixels().to_vec();
+    let thetas = orientations(angles);
+    let k = hlgpu::emulator::kernels::sinogram_all().unwrap();
+    let mut report = |tier: ExecTier, threshold: Option<u64>| {
+        let _g = threshold.map(force_tier_up);
+        let mut img_b = img.clone();
+        let mut ang_b = thetas.clone();
+        let mut out = vec![0.0f32; 4 * angles * size];
+        execute_with_tier(
+            Launch {
+                kernel: &k,
+                grid: (angles as u32, 1),
+                block: (size as u32, 1),
+                buffers: vec![&mut img_b, &mut ang_b, &mut out],
+                scalars: vec![ScalarArg::I32(size as i32)],
+                limits: Limits::default(),
+            },
+            1,
+            tier,
+        )
+        .unwrap()
+    };
+    let scalar = report(ExecTier::Scalar, None);
+    assert_eq!(scalar.compiled_instrs, 0);
+    assert_eq!(scalar.compiled_share(), 0.0);
+
+    let forced = report(ExecTier::Compiled, Some(0));
+    assert_eq!(forced.instrs, scalar.instrs, "tiers retire the same instructions");
+    assert!(forced.tier_ups > 0, "forced compile must promote blocks");
+    assert!(forced.compiled_blocks > 0);
+    assert_eq!(forced.deopts, 0, "clean run must not deopt");
+    assert!(
+        forced.compiled_share() > 0.9,
+        "compiled share {} too low",
+        forced.compiled_share()
+    );
+
+    let mid = report(ExecTier::Compiled, Some(4));
+    assert_eq!(mid.instrs, scalar.instrs);
+    assert!(mid.tier_ups > 0, "hot loop blocks must cross a threshold of 4");
+    assert!(
+        mid.compiled_instrs > 0 && mid.compiled_instrs < mid.instrs,
+        "mid-run tier-up mixes vector and compiled execution"
+    );
+}
+
+#[test]
+fn deopt_restores_vector_tier_state_bitwise() {
+    // A kernel that stores to a large buffer, then loads OOB from a
+    // small one for high thread ids. Under forced compilation the
+    // block body runs compiled until the load's bounds guard fails,
+    // deopts, and the vector op path replays from that exact op. The
+    // trap must match the vector tier's AND the partially-written
+    // output buffer must be bitwise identical to the vector tier's —
+    // i.e. the deopt left exactly the state vector execution would
+    // have produced (all-or-nothing compiled ops, no partial side
+    // effects from the faulting op).
+    let mut b = KernelBuilder::new("deopt_state");
+    let pout = b.ptr_param();
+    let pin = b.ptr_param();
+    let tid = b.tid_x();
+    let tf = b.cvt_i2f(tid);
+    b.stg(pout, tid, tf); // in-bounds for all 8 threads
+    let v = b.ldg(pin, tid); // OOB for tid >= 5
+    b.stg(pout, tid, v);
+    b.ret();
+    let k = b.build().unwrap();
+
+    let mut run = |tier: ExecTier, threshold: Option<u64>| -> (Error, Vec<f32>) {
+        let _g = threshold.map(force_tier_up);
+        let mut out = vec![-1.0f32; 8];
+        let mut small = vec![7.0f32; 5];
+        let err = execute_with_tier(
+            Launch {
+                kernel: &k,
+                grid: (1, 1),
+                block: (8, 1),
+                buffers: vec![&mut out, &mut small],
+                scalars: vec![],
+                limits: Limits::default(),
+            },
+            1,
+            tier,
+        )
+        .unwrap_err();
+        (err, out)
+    };
+    let (verr, vout) = run(ExecTier::Vector, None);
+    let (cerr, cout) = run(ExecTier::Compiled, Some(0));
+    assert_same_trap(&verr, &cerr);
+    if let Error::VtxTrap { thread, reason, .. } = &verr {
+        assert_eq!(*thread, (5, 0, 0), "first OOB lane");
+        assert!(reason.contains("global load OOB"), "{reason}");
+    }
+    // The first store retired for every lane (compiled), the faulting
+    // load had no side effects, and the replayed vector path let the
+    // surviving lanes 0..5 run to quiescence (second store): state
+    // must equal the vector tier's bit for bit.
+    assert_eq!(vout, cout, "deopt must restore vector-tier state bitwise");
+    assert_eq!(vout, vec![7.0, 7.0, 7.0, 7.0, 7.0, 5.0, 6.0, 7.0]);
 }
 
 #[test]

@@ -23,8 +23,38 @@ use hlgpu::driver::{KernelArg, LaunchConfig, MemoryPool};
 use hlgpu::emulator::kernels;
 use hlgpu::tensor::Tensor;
 use hlgpu::util::{Json, Prng};
+use std::sync::{Mutex, MutexGuard};
 
 const CASES: usize = 40;
+
+/// The tier-up override is process-global, so every compiled-tier run
+/// in this binary scopes it through this lock (restored on drop, even
+/// across a failing assertion).
+static TIER_UP_LOCK: Mutex<()> = Mutex::new(());
+
+struct TierUpGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for TierUpGuard {
+    fn drop(&mut self) {
+        hlgpu::emulator::set_default_tier_up(None);
+    }
+}
+
+fn force_tier_up(threshold: u64) -> TierUpGuard {
+    let g = TIER_UP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    hlgpu::emulator::set_default_tier_up(Some(threshold));
+    TierUpGuard(g)
+}
+
+/// Tier flavors for the cross-tier property tests: scalar reference,
+/// vector, compiled with every block force-compiled on first entry
+/// (`HLGPU_TIER_UP=0` semantics), and compiled tiering up mid-run.
+const TIER_FLAVORS: [(hlgpu::emulator::ExecTier, Option<u64>); 4] = [
+    (hlgpu::emulator::ExecTier::Scalar, None),
+    (hlgpu::emulator::ExecTier::Vector, None),
+    (hlgpu::emulator::ExecTier::Compiled, Some(0)),
+    (hlgpu::emulator::ExecTier::Compiled, Some(2)),
+];
 
 // --------------------------------------------------------------- memory --
 
@@ -354,11 +384,12 @@ fn divergent_branch_kernel() -> hlgpu::emulator::Kernel {
 
 #[test]
 fn prop_exec_tiers_observationally_identical() {
-    // The warp-vectorized tier vs the scalar reference tier, across
-    // random launch geometries, pool widths 1/2/8, on straight-line
-    // (vadd), divergent-branch and shared-memory (tree reduction)
-    // kernels: bitwise-equal outputs everywhere.
-    use hlgpu::emulator::{execute_with_tier, ExecTier};
+    // The warp-vectorized and compiled tiers vs the scalar reference
+    // tier, across random launch geometries, pool widths 1/2/8, on
+    // straight-line (vadd), divergent-branch and shared-memory (tree
+    // reduction) kernels: bitwise-equal outputs everywhere, for both
+    // the force-compiled and mid-run tier-up flavors.
+    use hlgpu::emulator::execute_with_tier;
     let vadd = kernels::vadd().unwrap();
     let div = divergent_branch_kernel();
     for seed in 0..12u64 {
@@ -372,8 +403,9 @@ fn prop_exec_tiers_observationally_identical() {
         let b = rng.f32_vec(n, -10.0, 10.0);
         let mut vadd_outs: Vec<Vec<f32>> = Vec::new();
         let mut div_outs: Vec<Vec<f32>> = Vec::new();
-        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        for (tier, threshold) in TIER_FLAVORS {
             for workers in [1usize, 2, 8] {
+                let _g = threshold.map(force_tier_up);
                 let mut aa = a.clone();
                 let mut bb = b.clone();
                 let mut c = vec![0.0f32; n];
@@ -433,8 +465,9 @@ fn prop_exec_tiers_observationally_identical() {
         let red = kernels::tfunc_column("radon", block_h).unwrap();
         let img = rng.f32_vec(h * w, -5.0, 5.0);
         let mut red_outs: Vec<Vec<f32>> = Vec::new();
-        for tier in [ExecTier::Scalar, ExecTier::Vector] {
+        for (tier, threshold) in TIER_FLAVORS {
             for workers in [1usize, 8] {
+                let _g = threshold.map(force_tier_up);
                 let mut img_b = img.clone();
                 let mut out = vec![0.0f32; w];
                 execute_with_tier(
@@ -464,8 +497,10 @@ fn prop_exec_tiers_observationally_identical() {
 
 #[test]
 fn prop_trap_parity_across_tiers_on_random_undersized_buffers() {
-    // Unguarded vadd with randomly undersized buffers: both tiers must
-    // report the same trap coordinates and reason (or both succeed).
+    // Unguarded vadd with randomly undersized buffers: every tier
+    // (including the compiled tier, whose bounds guards deopt onto the
+    // vector op path) must report the same trap coordinates and reason
+    // as the scalar reference — or all succeed.
     use hlgpu::emulator::{execute_with_tier, ExecTier, KernelBuilder};
     let k = {
         let mut b = KernelBuilder::new("vadd_unguarded_prop");
@@ -490,7 +525,8 @@ fn prop_trap_parity_across_tiers_on_random_undersized_buffers() {
         let block = rng.usize_in(1, 32) as u32;
         let total = (grid * block) as usize;
         let buf_len = rng.usize_in(0, total + 4);
-        let mut run = |tier: ExecTier| {
+        let mut run = |tier: ExecTier, threshold: Option<u64>| {
+            let _g = threshold.map(force_tier_up);
             let mut a = vec![1.0f32; buf_len];
             let mut b = vec![1.0f32; buf_len];
             let mut c = vec![0.0f32; buf_len];
@@ -507,12 +543,15 @@ fn prop_trap_parity_across_tiers_on_random_undersized_buffers() {
                 tier,
             )
         };
-        match (run(ExecTier::Scalar), run(ExecTier::Vector)) {
-            (Ok(_), Ok(_)) => assert!(buf_len >= total, "seed {seed}: both passed"),
-            (Err(se), Err(ve)) => {
-                assert_eq!(se.to_string(), ve.to_string(), "seed {seed}");
+        let scalar = run(ExecTier::Scalar, None);
+        for (tier, threshold) in TIER_FLAVORS.into_iter().skip(1) {
+            match (&scalar, run(tier, threshold)) {
+                (Ok(_), Ok(_)) => assert!(buf_len >= total, "seed {seed}: both passed"),
+                (Err(se), Err(te)) => {
+                    assert_eq!(se.to_string(), te.to_string(), "seed {seed} {tier:?}");
+                }
+                (s, t) => panic!("seed {seed} {tier:?}: tier disagreement: {s:?} vs {t:?}"),
             }
-            (s, v) => panic!("seed {seed}: tier disagreement: {s:?} vs {v:?}"),
         }
     }
 }
